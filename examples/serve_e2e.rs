@@ -1,0 +1,169 @@
+//! End-to-end serving driver (DESIGN.md deliverable): boots the full
+//! MUSE stack — real AOT-compiled models on PJRT containers, intent
+//! router, transformations, HTTP front end with warm-up gating — then
+//! drives a batched multi-tenant workload over HTTP and in-process,
+//! reporting throughput and latency against the paper's SLOs
+//! (30ms p99, 150ms p99.9).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+
+use anyhow::Result;
+use muse::config::{Intent, MuseConfig};
+use muse::coordinator::{Engine, ScoreRequest};
+use muse::metrics::LatencyHistogram;
+use muse::runtime::{Manifest, ModelPool};
+use muse::server::http::http_request;
+use muse::simulator::{TenantProfile, Workload};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1: full 3-expert ensemble"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "trio"
+  - description: "bank2: single specialist"
+    condition:
+      tenants: ["bank2"]
+    targetPredictorName: "solo"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "trio"
+  shadowRules:
+  - description: "shadow the 8-expert ensemble for bank1"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorNames: ["wide"]
+predictors:
+- name: trio
+  experts: [m1, m2, m3]
+  quantile: identity
+- name: solo
+  experts: [m4]
+  quantile: identity
+- name: wide
+  experts: [m1, m2, m3, m4, m5, m6, m7, m8]
+  quantile: identity
+server:
+  workers: 8
+"#;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_root())?;
+    let pool = Arc::new(ModelPool::new(manifest));
+    let engine = Arc::new(Engine::build(&MuseConfig::from_yaml(CONFIG)?, pool)?);
+    let stats = engine.registry.stats();
+    println!(
+        "== MUSE end-to-end driver ==\npredictors={} containers={} (dedup: wide reuses trio+solo experts)",
+        stats.predictors, stats.pool.live_containers
+    );
+
+    // --- Phase 1: HTTP path (includes warm-up before readiness) -----
+    let t0 = Instant::now();
+    let (addr, _ready, _handle) =
+        muse::server::spawn_server(Arc::clone(&engine), "127.0.0.1:0", 8, 300)?;
+    println!("server ready on {addr} after {:.2}s (incl. warm-up)", t0.elapsed().as_secs_f64());
+
+    let http_lat = Arc::new(LatencyHistogram::new());
+    let n_http = 2_000usize;
+    let clients = 8usize;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let lat = Arc::clone(&http_lat);
+            scope.spawn(move || {
+                let tenant = ["bank1", "bank2", "other"][c % 3];
+                let mut wl = Workload::new(TenantProfile::new(tenant, c as u64, 0.4, 0.1), 55);
+                for i in 0..n_http / clients {
+                    let e = wl.next_event();
+                    let feats: Vec<String> = e.features.iter().map(|f| format!("{f}")).collect();
+                    let payload = format!(
+                        r#"{{"tenant":"{tenant}","entity":"e{c}-{i}","features":[{}]}}"#,
+                        feats.join(",")
+                    );
+                    let s = Instant::now();
+                    let (status, _body) =
+                        http_request(&addr, "POST", "/score", &payload).expect("http");
+                    assert_eq!(status, 200);
+                    lat.record(s.elapsed().as_nanos() as u64);
+                }
+            });
+        }
+    });
+    let http_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nHTTP path: {} requests in {:.2}s = {:.0} req/s\n  {}",
+        n_http,
+        http_wall,
+        n_http as f64 / http_wall,
+        http_lat.summary()
+    );
+
+    // --- Phase 2: in-process hot path at full pressure --------------
+    let done = Arc::new(AtomicU64::new(0));
+    let lat = Arc::new(LatencyHistogram::new());
+    let n_inproc = 20_000usize;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let engine = Arc::clone(&engine);
+            let done = Arc::clone(&done);
+            let lat = Arc::clone(&lat);
+            scope.spawn(move || {
+                let tenant = ["bank1", "bank2", "other"][c % 3];
+                let mut wl = Workload::new(TenantProfile::new(tenant, 10 + c as u64, 0.4, 0.1), 77);
+                for i in 0..n_inproc / clients {
+                    let e = wl.next_event();
+                    let req = ScoreRequest {
+                        intent: Intent {
+                            tenant: tenant.into(),
+                            ..Intent::default()
+                        },
+                        entity: format!("p{c}-{i}"),
+                        features: e.features,
+                    };
+                    let s = Instant::now();
+                    engine.score(&req).expect("score");
+                    lat.record(s.elapsed().as_nanos() as u64);
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let eps = done.load(Ordering::Relaxed) as f64 / wall;
+    println!(
+        "\nin-process hot path: {} events in {:.2}s = {:.0} events/s\n  {}",
+        done.load(Ordering::Relaxed),
+        wall,
+        eps,
+        lat.summary()
+    );
+
+    engine.drain_shadows();
+    let shadow_records = engine
+        .lake
+        .counts()
+        .iter()
+        .filter(|((_, _, shadow), _)| *shadow)
+        .map(|(_, n)| n)
+        .sum::<usize>();
+    println!("\nshadow records mirrored to the data lake: {shadow_records}");
+
+    let p99 = lat.percentile_ns(99.0) as f64 / 1e6;
+    let p999 = lat.percentile_ns(99.9) as f64 / 1e6;
+    println!("\n== SLO verdict (paper: p99<30ms, p99.9<150ms, >1000 eps) ==");
+    println!("  (stress profile: bank1 traffic is 100% shadow-mirrored onto an");
+    println!("   8-expert ensemble — 11 model inferences per event; the SLO");
+    println!("   exhibit without shadow amplification is `muse repro headline`)");
+    println!("  p99    = {p99:.2} ms   -> {}", if p99 < 30.0 { "PASS" } else { "MISS" });
+    println!("  p99.9  = {p999:.2} ms  -> {}", if p999 < 150.0 { "PASS" } else { "MISS" });
+    println!("  eps    = {eps:.0}      -> {}", if eps > 1000.0 { "PASS" } else { "MISS" });
+    Ok(())
+}

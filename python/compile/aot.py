@@ -1,0 +1,234 @@
+"""AOT compile path: JAX -> HLO *text* artifacts for the rust runtime.
+
+This is the only place Python touches the system; it runs once at
+``make artifacts`` and produces everything the self-contained rust
+binary consumes:
+
+* ``artifacts/models/{name}_b{B}.hlo.txt`` — each trained expert's
+  fused forward pass (weights baked in as constants), one module per
+  batch-size variant. One compiled PJRT executable per artifact is the
+  "model container" the coordinator's registry shares across
+  predictors (Section 2.2.1).
+* ``artifacts/transform/transform_k{K}_b{B}.hlo.txt`` — the fused
+  T^C -> A -> T^Q pipeline kernel for K-expert ensembles (batched /
+  offline path; the rust hot path also implements the math natively).
+* ``artifacts/data/*.bin`` — the evaluation datasets for the paper's
+  exhibits (Figs. 4-6, Table 1). See DESIGN.md "Substitutions".
+* ``artifacts/weights/*.json`` — trained weights + metadata.
+* ``artifacts/manifest.json`` — the index the rust side parses.
+
+Interchange format is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, train
+from .kernels import transform as tkern
+
+BATCH_VARIANTS = [1, 16, 64, 256]
+QUANTILE_POINTS = 1025  # N = 1024 segments
+TRANSFORM_KS = [3, 8]
+TRANSFORM_BATCHES = [64, 256]
+
+# Evaluation datasets: (filename, tenant profile, n, seed, drift)
+DATASETS = [
+    ("train_pool", None, 60_000, 909, 0.0),
+    ("client_a_live", datagen.CLIENT_A, 120_000, 555, 0.05),
+    ("client_b_pre", datagen.CLIENT_B_PRE, 100_000, 661, 0.03),
+    ("client_b_post", datagen.CLIENT_B_POST, 100_000, 662, 0.03),
+    ("valid_m1", None, 40_000, 9091, 0.0),
+    ("valid_m2", None, 40_000, 9092, 0.0),
+    ("valid_m3", "m3pool", 40_000, 9093, 0.0),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the interchange).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    elides big literals as ``constant({...})``, which would silently
+    zero the baked model weights when the rust side re-parses the text.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_expert(params, batch: int) -> str:
+    """Lower one expert's fused forward at a fixed batch size.
+
+    Weights are closed over, so they are folded into the module as
+    constants and the rust side only feeds features ``[B, D]``.
+    """
+    from . import model
+
+    def fn(x):
+        return (model.expert_fwd(x, params),)
+
+    spec = jax.ShapeDtypeStruct((batch, datagen.FEATURE_DIM), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_transform(k: int, batch: int, n_points: int = QUANTILE_POINTS) -> str:
+    """Lower the fused transform pipeline (generic: grids are inputs)."""
+
+    def fn(scores, betas, weights, src_q, ref_q):
+        return (tkern.fused_transform(scores, betas, weights, src_q, ref_q),)
+
+    specs = (
+        jax.ShapeDtypeStruct((batch, k), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+        jax.ShapeDtypeStruct((n_points,), jnp.float32),
+        jax.ShapeDtypeStruct((n_points,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_datasets(data_dir: str, force: bool = False) -> list[dict]:
+    """Write the binary evaluation datasets consumed by the rust side."""
+    os.makedirs(data_dir, exist_ok=True)
+    entries = []
+    for name, tenant, n, seed, drift in DATASETS:
+        path = os.path.join(data_dir, f"{name}.bin")
+        if force or not os.path.exists(path):
+            if tenant is None:
+                x, y = datagen.generate_training_pool(n, seed)
+            elif tenant == "m3pool":
+                # m3's in-distribution validation: the P1-heavy pool.
+                x, y = datagen.generate_training_pool(n, seed, pattern1_frac=0.85)
+            else:
+                x, y = datagen.generate(n, seed, tenant, drift=drift)
+            datagen.write_dataset(path, x, y)
+            print(f"[data] {name}: n={n} fraud_rate={float(np.mean(y)):.4f}")
+        entries.append(
+            {"name": name, "path": f"data/{name}.bin", "n": n, "seed": seed}
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--batches", type=int, nargs="*", default=BATCH_VARIANTS,
+        help="batch-size variants to lower per expert",
+    )
+    args = ap.parse_args()
+
+    out = args.out_dir
+    models_dir = os.path.join(out, "models")
+    transform_dir = os.path.join(out, "transform")
+    weights_dir = os.path.join(out, "weights")
+    data_dir = os.path.join(out, "data")
+    for d in (out, models_dir, transform_dir, weights_dir, data_dir):
+        os.makedirs(d, exist_ok=True)
+
+    metas = train.train_all(weights_dir, force=args.force)
+
+    model_entries = []
+    for meta in metas:
+        name = meta["name"]
+        params, _ = train.load_params(weights_dir, name)
+        variants = {}
+        for b in args.batches:
+            path = os.path.join(models_dir, f"{name}_b{b}.hlo.txt")
+            if args.force or not os.path.exists(path):
+                text = lower_expert(params, b)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"[aot] {name} b={b}: {len(text)} chars")
+            variants[str(b)] = f"models/{name}_b{b}.hlo.txt"
+        model_entries.append(
+            {
+                "name": name,
+                "arch": meta["arch"],
+                "beta": meta["beta"],
+                "feature_dim": datagen.FEATURE_DIM,
+                "batches": variants,
+                "weights": f"weights/{name}.json",
+                "train_pool_auc": meta.get("train_pool_auc"),
+            }
+        )
+
+    transform_entries = []
+    for k in TRANSFORM_KS:
+        for b in TRANSFORM_BATCHES:
+            path = os.path.join(transform_dir, f"transform_k{k}_b{b}.hlo.txt")
+            if args.force or not os.path.exists(path):
+                text = lower_transform(k, b)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"[aot] transform k={k} b={b}: {len(text)} chars")
+            transform_entries.append(
+                {
+                    "k": k,
+                    "batch": b,
+                    "n_points": QUANTILE_POINTS,
+                    "path": f"transform/transform_k{k}_b{b}.hlo.txt",
+                }
+            )
+
+    dataset_entries = build_datasets(data_dir, force=args.force)
+
+    # Cross-language numeric probe: a fixed feature batch plus the
+    # python-side expected scores per expert. The rust test suite
+    # replays it through the PJRT containers and asserts allclose —
+    # this is the guard that caught (and now prevents) constant-elision
+    # style interchange bugs.
+    probe_path = os.path.join(out, "probe.json")
+    rng = np.random.default_rng(20_260_710)
+    probe_x = rng.normal(size=(8, datagen.FEATURE_DIM)).astype(np.float32)
+    from . import model as model_mod
+
+    expected = {}
+    for meta in metas:
+        params, _ = train.load_params(weights_dir, meta["name"])
+        expected[meta["name"]] = np.asarray(
+            model_mod.expert_fwd_ref(jnp.asarray(probe_x), params)
+        ).tolist()
+    with open(probe_path, "w") as f:
+        json.dump(
+            {
+                "features": probe_x.flatten().tolist(),
+                "n": probe_x.shape[0],
+                "d": probe_x.shape[1],
+                "expected": expected,
+            },
+            f,
+        )
+
+    manifest = {
+        "version": 1,
+        "feature_dim": datagen.FEATURE_DIM,
+        "fraud_prior": datagen.FRAUD_PRIOR,
+        "quantile_points": QUANTILE_POINTS,
+        "batch_variants": args.batches,
+        "models": model_entries,
+        "transforms": transform_entries,
+        "datasets": dataset_entries,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest: {len(model_entries)} models, "
+          f"{len(transform_entries)} transforms, {len(dataset_entries)} datasets")
+
+
+if __name__ == "__main__":
+    main()

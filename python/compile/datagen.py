@@ -1,0 +1,213 @@
+"""Synthetic fraud-transaction generator (build-time substrate).
+
+The paper evaluates MUSE on proprietary production streams (55B events
+across dozens of financial institutions). We substitute a synthetic,
+deterministic generator that preserves the properties the paper's
+mechanisms react to (see DESIGN.md "Substitutions"):
+
+* heavy class imbalance (fraud prior ~1.5%) -> undersampling during
+  training -> posterior-correction bias (Eq. 3, Table 1);
+* per-tenant covariate shift -> tenant-specific source quantiles
+  (Section 2.3.3, Fig. 4);
+* an injectable "new fraud pattern" that legacy experts detect poorly
+  -> motivates the ensemble expansion of Fig. 6 and expert m3;
+* slow concept drift within a period -> realistic, non-iid streams.
+
+Feature model
+-------------
+``D = 24`` features. Legitimate events are drawn from a correlated
+Gaussian background plus a log-normal "amount" channel. Fraud events
+add a sparse mean-shift along one of two *patterns*:
+
+* pattern ``P0`` ("classic") shifts dims 0..7,
+* pattern ``P1`` ("new attack") shifts dims 8..15 with a weaker echo
+  on dims 0..3, so legacy experts (trained mostly on P0) score it
+  poorly while the specialist expert m3 (trained mostly on P1)
+  separates it well.
+
+Tenants apply an affine shift/scale drawn from a per-tenant seed,
+modelling different client bases and integration schemas.
+
+Everything is seeded and pure numpy so artifact builds are
+reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Global constants (mirrored in rust/src/simulator/workload.rs)
+# ---------------------------------------------------------------------------
+
+FEATURE_DIM = 24
+FRAUD_PRIOR = 0.015
+AMOUNT_DIM = FEATURE_DIM - 1  # last feature is log-amount
+
+# Sparse fraud mean-shifts per pattern (see module docstring).
+_P0_DIMS = np.arange(0, 8)
+_P1_DIMS = np.arange(8, 16)
+_P1_ECHO_DIMS = np.arange(0, 4)
+
+_P0_SHIFT = 1.15
+_P1_SHIFT = 1.25
+_P1_ECHO = 0.25
+
+# Correlated background: x = L z with a mild banded correlation.
+_CORR = 0.35
+
+DATASET_MAGIC = 0x4D555345  # "MUSE"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantProfile:
+    """Per-tenant covariate shift: x -> scale * x + shift."""
+
+    name: str
+    seed: int
+    shift_scale: float = 0.45
+    scale_jitter: float = 0.12
+    fraud_rate: float = FRAUD_PRIOR
+    pattern1_frac: float = 0.0  # fraction of fraud that is the new pattern
+
+    def affine(self) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(self.seed)
+        shift = rng.normal(0.0, self.shift_scale, size=FEATURE_DIM)
+        scale = 1.0 + rng.normal(0.0, self.scale_jitter, size=FEATURE_DIM)
+        # Keep the amount channel comparable across tenants.
+        shift[AMOUNT_DIM] *= 0.25
+        scale[AMOUNT_DIM] = 1.0
+        return shift.astype(np.float32), np.abs(scale).astype(np.float32)
+
+
+# The global training population: a blend of "integrated" tenants.
+TRAIN_TENANTS = [TenantProfile(f"train-{i}", seed=1000 + i) for i in range(6)]
+
+# Evaluation tenants used by the paper-exhibit harnesses.
+CLIENT_A = TenantProfile("client-A", seed=4242, shift_scale=0.6, pattern1_frac=0.0)
+CLIENT_B_PRE = TenantProfile("client-B", seed=7001, shift_scale=0.5, pattern1_frac=0.10)
+CLIENT_B_POST = TenantProfile(
+    "client-B", seed=7001, shift_scale=0.5, pattern1_frac=0.55
+)
+
+
+def _background(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Correlated Gaussian background + log-normal amount channel."""
+    z = rng.standard_normal((n, FEATURE_DIM)).astype(np.float32)
+    x = z.copy()
+    # One-step banded correlation: x_i += corr * z_{i-1}.
+    x[:, 1:] += _CORR * z[:, :-1]
+    x[:, AMOUNT_DIM] = rng.lognormal(3.2, 1.1, size=n).astype(np.float32) / 100.0
+    return x
+
+
+def _apply_fraud(
+    rng: np.random.Generator, x: np.ndarray, y: np.ndarray, pattern1_frac: float
+) -> np.ndarray:
+    """Shift the fraud rows along pattern P0 or P1 (in place)."""
+    idx = np.flatnonzero(y == 1)
+    if idx.size == 0:
+        return x
+    is_p1 = rng.random(idx.size) < pattern1_frac
+    p0_idx = idx[~is_p1]
+    p1_idx = idx[is_p1]
+    jitter0 = rng.normal(1.0, 0.25, size=(p0_idx.size, 1)).astype(np.float32)
+    jitter1 = rng.normal(1.0, 0.25, size=(p1_idx.size, 1)).astype(np.float32)
+    x[np.ix_(p0_idx, _P0_DIMS)] += _P0_SHIFT * jitter0
+    x[np.ix_(p1_idx, _P1_DIMS)] += _P1_SHIFT * jitter1
+    x[np.ix_(p1_idx, _P1_ECHO_DIMS)] += _P1_ECHO * jitter1
+    # Fraud skews to larger amounts.
+    x[idx, AMOUNT_DIM] *= rng.lognormal(0.35, 0.3, size=idx.size).astype(np.float32)
+    return x
+
+
+def generate(
+    n: int,
+    seed: int,
+    tenant: TenantProfile,
+    drift: float = 0.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` events for ``tenant``.
+
+    Returns ``(x, y)`` with ``x`` float32 ``[n, FEATURE_DIM]`` and ``y``
+    float32 ``[n]`` in {0, 1}. ``drift`` linearly interpolates an extra
+    mean shift over the stream, modelling slow concept drift.
+    """
+    rng = np.random.default_rng(seed)
+    y = (rng.random(n) < tenant.fraud_rate).astype(np.float32)
+    x = _background(rng, n)
+    x = _apply_fraud(rng, x, y, tenant.pattern1_frac)
+    shift, scale = tenant.affine()
+    x = x * scale[None, :] + shift[None, :]
+    if drift != 0.0:
+        t = np.linspace(0.0, 1.0, n, dtype=np.float32)[:, None]
+        drift_dir = np.random.default_rng(tenant.seed + 99).normal(
+            0.0, 1.0, size=FEATURE_DIM
+        )
+        drift_dir = (drift_dir / np.linalg.norm(drift_dir)).astype(np.float32)
+        x = x + drift * t * drift_dir[None, :]
+    return x.astype(np.float32), y
+
+
+def generate_training_pool(
+    n: int, seed: int, pattern1_frac: float = 0.08
+) -> tuple[np.ndarray, np.ndarray]:
+    """The provider's combined multi-tenant training population."""
+    per = n // len(TRAIN_TENANTS)
+    xs, ys = [], []
+    for i, t in enumerate(TRAIN_TENANTS):
+        t = dataclasses.replace(t, pattern1_frac=pattern1_frac)
+        x, y = generate(per, seed + 17 * i, t)
+        xs.append(x)
+        ys.append(y)
+    x = np.concatenate(xs)
+    y = np.concatenate(ys)
+    perm = np.random.default_rng(seed + 777).permutation(len(y))
+    return x[perm], y[perm]
+
+
+def undersample(
+    x: np.ndarray, y: np.ndarray, beta: float, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Keep every positive, keep negatives with probability ``beta``.
+
+    This is the training-time majority-class undersampling whose score
+    bias the Posterior Correction (Eq. 3) reverses: the positive prior
+    in the undersampled set rises from pi to pi / (pi + beta (1-pi)).
+    """
+    if not 0.0 < beta <= 1.0:
+        raise ValueError(f"beta must be in (0, 1], got {beta}")
+    rng = np.random.default_rng(seed)
+    keep = (y == 1) | (rng.random(len(y)) < beta)
+    return x[keep], y[keep]
+
+
+# ---------------------------------------------------------------------------
+# Binary dataset interchange with the rust side
+# ---------------------------------------------------------------------------
+# Layout (little endian):
+#   u32 magic, u32 version, u64 n, u32 d, u32 reserved
+#   f32 features [n*d] row-major, f32 labels [n]
+
+
+def write_dataset(path: str, x: np.ndarray, y: np.ndarray) -> None:
+    assert x.ndim == 2 and y.ndim == 1 and x.shape[0] == y.shape[0]
+    x = np.ascontiguousarray(x, dtype="<f4")
+    y = np.ascontiguousarray(y, dtype="<f4")
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIQII", DATASET_MAGIC, 1, x.shape[0], x.shape[1], 0))
+        f.write(x.tobytes())
+        f.write(y.tobytes())
+
+
+def read_dataset(path: str) -> tuple[np.ndarray, np.ndarray]:
+    with open(path, "rb") as f:
+        magic, version, n, d, _ = struct.unpack("<IIQII", f.read(24))
+        if magic != DATASET_MAGIC or version != 1:
+            raise ValueError(f"bad dataset header in {path}")
+        x = np.frombuffer(f.read(4 * n * d), dtype="<f4").reshape(n, d)
+        y = np.frombuffer(f.read(4 * n), dtype="<f4")
+    return x, y

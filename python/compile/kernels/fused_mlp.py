@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: fused MLP forward (the inference hot-spot).
+
+The paper's experts run on NVIDIA Triton; re-thought for the TPU model
+(see DESIGN.md §Hardware adaptation): the batch dimension is tiled via
+the grid + ``BlockSpec`` so each grid step holds one ``[block_b, D]``
+activation tile plus the full (small) weight set in VMEM and performs
+whole-tile matmuls on the MXU. All layers, the bias adds, the relu and
+the sigmoid head fuse into a single kernel — one HBM round-trip per
+tile instead of one per layer.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret-mode lowers to plain HLO so the same
+artifact runs under the rust PJRT CPU client. On a real TPU the same
+kernel compiles to Mosaic unchanged (minus ``interpret``).
+
+VMEM budget (f32, defaults D=24, H=64, block_b=64):
+  x tile 64*24*4 = 6 KiB, h tile 64*64*4 = 16 KiB,
+  weights 24*64*4 + 64*64*4 + 64*4*2 ≈ 22.5 KiB  -> ≪ 16 MiB VMEM,
+so double buffering of input tiles is free and the kernel is
+MXU-latency bound, not memory bound.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_1h(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One hidden layer: sigmoid(relu(x@w1+b1)@w2+b2)."""
+    x = x_ref[...]
+    h = jnp.maximum(x @ w1_ref[...] + b1_ref[...][None, :], 0.0)
+    logits = h @ w2_ref[...] + b2_ref[...][None, :]
+    o_ref[...] = jnp.reciprocal(1.0 + jnp.exp(-logits[:, 0]))
+
+
+def _kernel_2h(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    """Two hidden layers: sigmoid(relu(relu(x@w1+b1)@w2+b2)@w3+b3)."""
+    x = x_ref[...]
+    h1 = jnp.maximum(x @ w1_ref[...] + b1_ref[...][None, :], 0.0)
+    h2 = jnp.maximum(h1 @ w2_ref[...] + b2_ref[...][None, :], 0.0)
+    logits = h2 @ w3_ref[...] + b3_ref[...][None, :]
+    o_ref[...] = jnp.reciprocal(1.0 + jnp.exp(-logits[:, 0]))
+
+
+def _block_b(batch: int, requested: int) -> int:
+    """Largest tile <= requested that divides the batch."""
+    b = min(requested, batch)
+    while batch % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def fused_mlp(x, params, *, block_b: int = 64):
+    """Fused forward for a 1- or 2-hidden-layer MLP.
+
+    ``x`` is ``[B, D]`` float32; ``params`` is a list of ``(w, b)``
+    pairs (2 pairs = one hidden layer, 3 pairs = two). Returns
+    probabilities ``[B]``. Matches ``ref.mlp_ref`` to f32 tolerance.
+    """
+    batch, d = x.shape
+    if len(params) == 2:
+        kernel, flat = _kernel_1h, [p for wb in params for p in wb]
+    elif len(params) == 3:
+        kernel, flat = _kernel_2h, [p for wb in params for p in wb]
+    else:
+        raise ValueError(f"fused_mlp supports 1 or 2 hidden layers, got {len(params) - 1}")
+
+    bb = _block_b(batch, block_b)
+    grid = (batch // bb,)
+    # Activations are tiled over the grid; weights are broadcast whole
+    # (index_map pinning block 0) so they stay resident in VMEM.
+    x_spec = pl.BlockSpec((bb, d), lambda i: (i, 0))
+    w_specs = []
+    for w, b in params:
+        w_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        w_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+    out_spec = pl.BlockSpec((bb,), lambda i: (i,))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec] + w_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,
+    )(x, *flat)

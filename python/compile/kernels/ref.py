@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain ``jax.numpy`` ops. pytest (python/tests) asserts
+``assert_allclose`` between kernel and oracle across hypothesis-swept
+shapes, dtypes and seeds; the oracles are also what ``model.py`` uses
+for training (training does not need the kernels' tiling).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mlp_ref(x, params):
+    """Forward pass of an L-layer MLP: relu hidden layers, sigmoid head.
+
+    ``params`` is a list of ``(w, b)`` pairs; ``x`` is ``[B, D]``.
+    Returns probabilities ``[B]``.
+    """
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.maximum(h @ w + b, 0.0)
+    w, b = params[-1]
+    logits = h @ w + b
+    return jnp.squeeze(jnp.reciprocal(1.0 + jnp.exp(-logits)), axis=-1)
+
+
+def mlp_logits_ref(x, params):
+    """Same as :func:`mlp_ref` but returning pre-sigmoid logits ``[B]``."""
+    h = x
+    for w, b in params[:-1]:
+        h = jnp.maximum(h @ w + b, 0.0)
+    w, b = params[-1]
+    return jnp.squeeze(h @ w + b, axis=-1)
+
+
+def posterior_correction_ref(s, beta):
+    """Eq. (3): T^C(s) = beta s / (1 - (1 - beta) s).
+
+    Reverses the posterior bias introduced by undersampling the
+    negative class at rate ``beta`` during training. Broadcasts over
+    any shape; ``beta`` may be scalar or per-expert ``[K]``.
+    """
+    return beta * s / (1.0 - (1.0 - beta) * s)
+
+
+def aggregate_ref(c, weights):
+    """Weighted-average aggregation A over expert axis (-1).
+
+    ``c`` is ``[..., K]`` calibrated scores, ``weights`` is ``[K]``.
+    """
+    w = jnp.asarray(weights)
+    return (c * w).sum(axis=-1) / w.sum()
+
+
+def quantile_map_ref(s, src_q, ref_q):
+    """Eq. (4): piecewise-linear quantile mapping T^Q.
+
+    ``src_q`` and ``ref_q`` are monotone quantile grids ``[N+1]``
+    (``src_q[0]``/``src_q[N]`` are the support bounds). Scores outside
+    the source support clamp to the reference bounds. Vectorized
+    rank-then-lerp; matches the rust implementation to f32 tolerance.
+    """
+    s = jnp.asarray(s)
+    n = src_q.shape[0] - 1
+    sc = jnp.clip(s, src_q[0], src_q[n])
+    # i such that src_q[i] <= s < src_q[i+1]
+    idx = jnp.clip(jnp.searchsorted(src_q, sc, side="right") - 1, 0, n - 1)
+    q0 = src_q[idx]
+    q1 = src_q[idx + 1]
+    r0 = ref_q[idx]
+    r1 = ref_q[idx + 1]
+    denom = jnp.where(q1 > q0, q1 - q0, 1.0)
+    t = jnp.where(q1 > q0, (sc - q0) / denom, 0.0)
+    return r0 + t * (r1 - r0)
+
+
+def transform_pipeline_ref(scores, betas, weights, src_q, ref_q):
+    """Full MUSE transformation DAG for an ensemble: T^C -> A -> T^Q.
+
+    ``scores`` is ``[B, K]`` raw expert scores. Returns ``[B]``
+    business-ready scores following the reference distribution.
+    """
+    c = posterior_correction_ref(scores, jnp.asarray(betas)[None, :])
+    agg = aggregate_ref(c, weights)
+    return quantile_map_ref(agg, src_q, ref_q)

@@ -1,0 +1,120 @@
+"""L2: the expert fraud models in JAX — forward pass and training step.
+
+Each MUSE *expert* ``m_k`` is a small MLP over the transaction feature
+vector. The serving forward pass (:func:`expert_fwd`) calls the L1
+Pallas fused-MLP kernel so that the whole expert lowers into a single
+HLO module (see ``aot.py``); training uses the pure-jnp oracle (no
+tiling needed, and it keeps backward-mode AD simple).
+
+Architectures (paper: heterogeneous ensembles; Section 2.2):
+  * ``arch="mlp1"`` — 1 hidden layer (D -> H -> 1)
+  * ``arch="mlp2"`` — 2 hidden layers (D -> H -> H2 -> 1)
+
+Training: binary cross-entropy on logits, Adam (implemented inline —
+this repo builds its substrates from scratch), majority-class
+undersampling applied by ``train.py`` *before* batching, which is
+exactly the bias that the Posterior Correction (Eq. 3) later reverses.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_mlp as fused
+from .kernels import ref
+
+Params = list[tuple[jax.Array, jax.Array]]
+
+
+def init_params(key, arch: str, d: int, h: int = 64, h2: int = 32) -> Params:
+    """He-initialised parameters for an expert."""
+    if arch == "mlp1":
+        dims = [d, h, 1]
+    elif arch == "mlp2":
+        dims = [d, h, h2, 1]
+    else:
+        raise ValueError(f"unknown arch {arch!r}")
+    params: Params = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        params.append((w, jnp.zeros((dout,), jnp.float32)))
+    return params
+
+
+def expert_fwd(x, params: Params):
+    """Serving forward pass: probabilities via the Pallas fused kernel."""
+    return fused.fused_mlp(x, params)
+
+
+def expert_fwd_ref(x, params: Params):
+    """Training/oracle forward pass (pure jnp)."""
+    return ref.mlp_ref(x, params)
+
+
+def bce_loss(params: Params, x, y, l2: float = 1e-4):
+    """Mean binary cross-entropy on logits + L2 weight decay."""
+    logits = ref.mlp_logits_ref(x, params)
+    # Numerically stable BCE-with-logits.
+    per = jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    reg = sum(jnp.sum(w * w) for w, _ in params)
+    return per.mean() + l2 * reg
+
+
+# ---------------------------------------------------------------------------
+# Adam (from scratch; no optax dependency)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params) -> dict[str, Any]:
+    return {
+        "m": [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params],
+        "v": [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params],
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def train_step(params: Params, opt, x, y, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One fwd/bwd Adam step. Returns (params, opt, loss)."""
+    loss, grads = jax.value_and_grad(bce_loss)(params, x, y)
+    t = opt["t"] + 1
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - b1**tf
+    bc2 = 1.0 - b2**tf
+
+    new_params: Params = []
+    new_m, new_v = [], []
+    for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(params, grads, opt["m"], opt["v"]):
+        mw = b1 * mw + (1 - b1) * gw
+        mb = b1 * mb + (1 - b1) * gb
+        vw = b2 * vw + (1 - b2) * gw * gw
+        vb = b2 * vb + (1 - b2) * gb * gb
+        w = w - lr * (mw / bc1) / (jnp.sqrt(vw / bc2) + eps)
+        b = b - lr * (mb / bc1) / (jnp.sqrt(vb / bc2) + eps)
+        new_params.append((w, b))
+        new_m.append((mw, mb))
+        new_v.append((vw, vb))
+    return new_params, {"m": new_m, "v": new_v, "t": t}, loss
+
+
+def fit(params: Params, x, y, steps: int, batch: int, seed: int, lr=3e-3):
+    """Mini-batch Adam training loop. Returns (params, final_loss)."""
+    key = jax.random.PRNGKey(seed)
+    opt = adam_init(params)
+    n = x.shape[0]
+    loss = jnp.inf
+    for _ in range(steps):
+        key, bk = jax.random.split(key)
+        idx = jax.random.randint(bk, (batch,), 0, n)
+        params, opt, loss = train_step(params, opt, x[idx], y[idx], lr=lr)
+    return params, float(loss)
+
+
+def ensemble_fwd_ref(x, all_params: list[Params]):
+    """Raw (uncorrected) scores of an ensemble: ``[B, K]``."""
+    return jnp.stack([ref.mlp_ref(x, p) for p in all_params], axis=-1)

@@ -1,0 +1,77 @@
+"""AOT path tests: lowering produces loadable HLO text; manifest sanity.
+
+The full artifact tree is built by ``make artifacts``; these tests
+validate the lowering helpers on tiny modules (fast) and, when the
+artifact tree exists, check manifest/file consistency.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, datagen, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_expert_emits_entry():
+    p = model.init_params(jax.random.PRNGKey(0), "mlp1", datagen.FEATURE_DIM, 8)
+    text = aot.lower_expert(p, 4)
+    assert "ENTRY" in text and "HloModule" in text
+    # Weights must be baked in: a constant with the hidden dim appears.
+    assert f"f32[{datagen.FEATURE_DIM},8]" in text
+
+
+def test_lower_expert_batch_shape():
+    p = model.init_params(jax.random.PRNGKey(1), "mlp1", datagen.FEATURE_DIM, 8)
+    text = aot.lower_expert(p, 16)
+    assert f"f32[16,{datagen.FEATURE_DIM}]" in text
+
+
+def test_lower_transform_emits_entry():
+    text = aot.lower_transform(2, 8, n_points=17)
+    assert "ENTRY" in text
+    assert "f32[8,2]" in text and "f32[17]" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    @pytest.fixture(autouse=True)
+    def _load(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            self.m = json.load(f)
+
+    def test_models_present(self):
+        names = {e["name"] for e in self.m["models"]}
+        assert {"m1", "m2", "m3"} <= names
+        assert len(names) == 8  # the Fig. 4 ensemble roster
+
+    def test_every_artifact_file_exists(self):
+        for e in self.m["models"]:
+            for path in e["batches"].values():
+                assert os.path.exists(os.path.join(ART, path)), path
+        for t in self.m["transforms"]:
+            assert os.path.exists(os.path.join(ART, t["path"]))
+        for d in self.m["datasets"]:
+            assert os.path.exists(os.path.join(ART, d["path"]))
+
+    def test_betas_match_paper_roster(self):
+        betas = {e["name"]: e["beta"] for e in self.m["models"]}
+        assert betas["m1"] == pytest.approx(0.18)
+        assert betas["m2"] == pytest.approx(0.18)
+        assert betas["m3"] == pytest.approx(0.02)
+
+    def test_batch_variants(self):
+        for e in self.m["models"]:
+            assert set(e["batches"].keys()) == {str(b) for b in self.m["batch_variants"]}
+
+    def test_experts_learned(self):
+        for e in self.m["models"]:
+            assert e["train_pool_auc"] > 0.85, e["name"]
+
+    def test_quantile_points(self):
+        assert self.m["quantile_points"] == 1025

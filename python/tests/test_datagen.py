@@ -1,0 +1,115 @@
+"""Workload-substrate tests: determinism, imbalance, shift, interchange."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import datagen
+
+
+def test_deterministic():
+    a = datagen.generate(5000, 42, datagen.CLIENT_A)
+    b = datagen.generate(5000, 42, datagen.CLIENT_A)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_shapes_and_dtypes():
+    x, y = datagen.generate(1000, 1, datagen.TRAIN_TENANTS[0])
+    assert x.shape == (1000, datagen.FEATURE_DIM)
+    assert y.shape == (1000,)
+    assert x.dtype == np.float32 and y.dtype == np.float32
+    assert set(np.unique(y)) <= {0.0, 1.0}
+
+
+def test_fraud_rate_close_to_prior():
+    _, y = datagen.generate(200_000, 7, datagen.TRAIN_TENANTS[1])
+    assert abs(y.mean() - datagen.FRAUD_PRIOR) < 0.002
+
+
+def test_fraud_is_separable():
+    """Fraud rows must be shifted along the pattern dims."""
+    x, y = datagen.generate(100_000, 8, datagen.TRAIN_TENANTS[0])
+    fraud_mean = x[y == 1][:, :8].mean()
+    legit_mean = x[y == 0][:, :8].mean()
+    assert fraud_mean - legit_mean > 0.5
+
+
+def test_pattern1_shifts_different_dims():
+    t_new = datagen.TenantProfile("t", seed=5, pattern1_frac=1.0)
+    t_old = datagen.TenantProfile("t", seed=5, pattern1_frac=0.0)
+    xn, yn = datagen.generate(100_000, 9, t_new)
+    xo, yo = datagen.generate(100_000, 9, t_old)
+    # P1 shifts dims 8..15 strongly; P0 does not.
+    d_new = xn[yn == 1][:, 8:16].mean() - xn[yn == 0][:, 8:16].mean()
+    d_old = xo[yo == 1][:, 8:16].mean() - xo[yo == 0][:, 8:16].mean()
+    assert d_new > 0.8 and d_old < 0.3
+
+
+def test_tenant_shift_changes_distribution():
+    xa, _ = datagen.generate(20_000, 10, datagen.CLIENT_A)
+    xt, _ = datagen.generate(20_000, 10, datagen.TRAIN_TENANTS[0])
+    # Different affine shifts => clearly different feature means.
+    assert np.abs(xa.mean(0) - xt.mean(0)).max() > 0.3
+
+
+def test_undersample_keeps_all_positives():
+    x, y = datagen.generate(50_000, 11, datagen.TRAIN_TENANTS[2])
+    xu, yu = datagen.undersample(x, y, 0.1, seed=3)
+    assert yu.sum() == y.sum()
+    # Negative count ~ beta * original.
+    neg = (y == 0).sum()
+    negu = (yu == 0).sum()
+    assert abs(negu / neg - 0.1) < 0.01
+
+
+def test_undersample_prior_shift_matches_theory():
+    """pi' = pi / (pi + beta (1 - pi)) — the algebra behind Eq. 3."""
+    x, y = datagen.generate_training_pool(120_000, 12)
+    pi = y.mean()
+    for beta in (0.02, 0.18):
+        _, yu = datagen.undersample(x, y, beta, seed=4)
+        expected = pi / (pi + beta * (1 - pi))
+        assert abs(yu.mean() - expected) < 0.01
+
+
+def test_undersample_rejects_bad_beta():
+    x, y = datagen.generate(100, 1, datagen.TRAIN_TENANTS[0])
+    with pytest.raises(ValueError):
+        datagen.undersample(x, y, 0.0, seed=1)
+    with pytest.raises(ValueError):
+        datagen.undersample(x, y, 1.5, seed=1)
+
+
+def test_drift_moves_stream_tail():
+    x, _ = datagen.generate(50_000, 13, datagen.CLIENT_A, drift=0.5)
+    head = x[:5_000].mean(0)
+    tail = x[-5_000:].mean(0)
+    assert np.abs(tail - head).max() > 0.1
+
+
+def test_dataset_roundtrip():
+    x, y = datagen.generate(1234, 14, datagen.CLIENT_A)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        datagen.write_dataset(path, x, y)
+        x2, y2 = datagen.read_dataset(path)
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y, y2)
+
+
+def test_dataset_header_rejects_garbage():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bad.bin")
+        with open(path, "wb") as f:
+            f.write(b"\x00" * 64)
+        with pytest.raises(ValueError):
+            datagen.read_dataset(path)
+
+
+def test_training_pool_mixes_tenants():
+    x, y = datagen.generate_training_pool(60_000, 15)
+    assert x.shape == (60_000, datagen.FEATURE_DIM)
+    assert 0.01 < y.mean() < 0.02

@@ -1,0 +1,153 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal of the compile path: hypothesis
+sweeps shapes and seeds, and every kernel output must match its
+``ref.py`` oracle to f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fused_mlp, ref, transform
+
+RTOL = 3e-5
+ATOL = 3e-6
+
+
+def _params(key, dims):
+    params = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        key, wk, bk = jax.random.split(key, 3)
+        params.append(
+            (
+                jax.random.normal(wk, (din, dout), jnp.float32) * 0.3,
+                jax.random.normal(bk, (dout,), jnp.float32) * 0.1,
+            )
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# fused_mlp
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 130),
+    d=st.integers(2, 40),
+    h=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp1_matches_ref(batch, d, h, seed):
+    key = jax.random.PRNGKey(seed)
+    params = _params(key, [d, h, 1])
+    x = jax.random.normal(jax.random.fold_in(key, 1), (batch, d), jnp.float32)
+    got = fused_mlp.fused_mlp(x, params)
+    want = ref.mlp_ref(x, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(1, 96),
+    d=st.integers(2, 32),
+    h=st.integers(2, 40),
+    h2=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp2_matches_ref(batch, d, h, h2, seed):
+    key = jax.random.PRNGKey(seed)
+    params = _params(key, [d, h, h2, 1])
+    x = jax.random.normal(jax.random.fold_in(key, 2), (batch, d), jnp.float32)
+    got = fused_mlp.fused_mlp(x, params)
+    want = ref.mlp_ref(x, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def test_fused_mlp_rejects_depth():
+    x = jnp.zeros((4, 3))
+    params = _params(jax.random.PRNGKey(0), [3, 4, 4, 4, 1])
+    with pytest.raises(ValueError):
+        fused_mlp.fused_mlp(x, params)
+
+
+@pytest.mark.parametrize("batch", [1, 7, 64, 256])
+def test_fused_mlp_block_divisibility(batch):
+    """Every batch size must work regardless of the default tile."""
+    key = jax.random.PRNGKey(3)
+    params = _params(key, [8, 16, 1])
+    x = jax.random.normal(key, (batch, 8), jnp.float32)
+    got = fused_mlp.fused_mlp(x, params)
+    assert got.shape == (batch,)
+    want = ref.mlp_ref(x, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def test_fused_mlp_outputs_are_probabilities():
+    key = jax.random.PRNGKey(4)
+    params = _params(key, [12, 24, 1])
+    x = 10.0 * jax.random.normal(key, (64, 12), jnp.float32)
+    got = np.asarray(fused_mlp.fused_mlp(x, params))
+    assert np.all(got >= 0.0) and np.all(got <= 1.0)
+
+
+# ---------------------------------------------------------------------------
+# fused_transform
+# ---------------------------------------------------------------------------
+
+
+def _grids(key, n_points):
+    src = jnp.sort(jax.random.uniform(key, (n_points,), jnp.float32))
+    src = src.at[0].set(0.0).at[-1].set(1.0)
+    p = jnp.linspace(0.0, 1.0, n_points, dtype=jnp.float32)
+    refq = p**2.0  # arbitrary monotone reference
+    return src, refq
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    batch=st.integers(1, 140),
+    k=st.integers(1, 9),
+    n_points=st.integers(3, 600),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_transform_matches_ref(batch, k, n_points, seed):
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.uniform(
+        jax.random.fold_in(key, 1), (batch, k), jnp.float32, 1e-4, 1.0 - 1e-4
+    )
+    betas = jax.random.uniform(jax.random.fold_in(key, 2), (k,), jnp.float32, 0.01, 1.0)
+    w = jax.random.uniform(jax.random.fold_in(key, 3), (k,), jnp.float32, 0.1, 2.0)
+    src, refq = _grids(jax.random.fold_in(key, 4), n_points)
+    got = transform.fused_transform(s, betas, w, src, refq)
+    want = ref.transform_pipeline_ref(s, betas, w, src, refq)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_fused_transform_clamps_out_of_support():
+    """Scores outside the source support map to the reference bounds."""
+    src = jnp.linspace(0.2, 0.8, 65)
+    refq = jnp.linspace(0.0, 1.0, 65)
+    s = jnp.array([[0.0], [0.1], [0.9], [1.0]], jnp.float32)
+    betas = jnp.array([1.0])
+    w = jnp.array([1.0])
+    got = np.asarray(transform.fused_transform(s, betas, w, src, refq))
+    np.testing.assert_allclose(got[:2], [0.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(got[2:], [1.0, 1.0], atol=1e-6)
+
+
+def test_fused_transform_beta_one_identity_correction():
+    """beta = 1 (no undersampling) makes T^C the identity."""
+    key = jax.random.PRNGKey(7)
+    s = jax.random.uniform(key, (64, 1), jnp.float32, 0.0, 1.0)
+    src = jnp.linspace(0.0, 1.0, 129)
+    refq = src  # identity mapping
+    got = transform.fused_transform(s, jnp.array([1.0]), jnp.array([1.0]), src, refq)
+    np.testing.assert_allclose(np.asarray(got)[:, None], np.asarray(s), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,96 @@
+"""L2 model tests: shapes, gradients, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen, model
+
+
+@pytest.mark.parametrize("arch,n_layers", [("mlp1", 2), ("mlp2", 3)])
+def test_init_shapes(arch, n_layers):
+    p = model.init_params(jax.random.PRNGKey(0), arch, 24, 64, 32)
+    assert len(p) == n_layers
+    assert p[0][0].shape[0] == 24
+    assert p[-1][0].shape[1] == 1
+
+
+def test_init_unknown_arch():
+    with pytest.raises(ValueError):
+        model.init_params(jax.random.PRNGKey(0), "tree", 24)
+
+
+def test_fwd_matches_between_kernel_and_ref():
+    key = jax.random.PRNGKey(1)
+    p = model.init_params(key, "mlp1", 24, 32)
+    x = jax.random.normal(key, (64, 24), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(model.expert_fwd(x, p)),
+        np.asarray(model.expert_fwd_ref(x, p)),
+        rtol=3e-5,
+        atol=3e-6,
+    )
+
+
+def test_bce_loss_is_finite_and_positive():
+    key = jax.random.PRNGKey(2)
+    p = model.init_params(key, "mlp2", 24, 32, 16)
+    x = jax.random.normal(key, (128, 24), jnp.float32)
+    y = (jax.random.uniform(key, (128,)) < 0.3).astype(jnp.float32)
+    loss = float(model.bce_loss(p, x, y))
+    assert np.isfinite(loss) and loss > 0
+
+
+def test_train_step_decreases_loss():
+    key = jax.random.PRNGKey(3)
+    x, y = datagen.generate(4096, 5, datagen.TRAIN_TENANTS[0])
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    p = model.init_params(key, "mlp1", datagen.FEATURE_DIM, 32)
+    opt = model.adam_init(p)
+    l0 = float(model.bce_loss(p, x, y))
+    for _ in range(60):
+        p, opt, _ = model.train_step(p, opt, x, y)
+    l1 = float(model.bce_loss(p, x, y))
+    assert l1 < l0 * 0.9, f"loss did not improve: {l0} -> {l1}"
+
+
+def test_fit_learns_separation():
+    """A short fit must beat chance AUC on held-out data."""
+    from compile.train import _auc
+
+    x, y = datagen.generate_training_pool(30_000, 123)
+    xu, yu = datagen.undersample(x, y, 0.2, seed=9)
+    p = model.init_params(jax.random.PRNGKey(6), "mlp1", datagen.FEATURE_DIM, 32)
+    p, _ = model.fit(p, jnp.asarray(xu), jnp.asarray(yu), steps=150, batch=256, seed=1)
+    xh, yh = datagen.generate_training_pool(20_000, 456)
+    probs = np.asarray(model.expert_fwd_ref(jnp.asarray(xh), p))
+    assert _auc(probs, yh) > 0.85
+
+
+def test_ensemble_fwd_shape():
+    key = jax.random.PRNGKey(7)
+    ps = [model.init_params(jax.random.fold_in(key, i), "mlp1", 24, 16) for i in range(3)]
+    x = jax.random.normal(key, (32, 24), jnp.float32)
+    out = model.ensemble_fwd_ref(x, ps)
+    assert out.shape == (32, 3)
+    assert np.all((np.asarray(out) >= 0) & (np.asarray(out) <= 1))
+
+
+def test_undersampling_biases_scores_upward():
+    """The phenomenon MUSE corrects: smaller beta => inflated scores.
+
+    Train the same architecture on the same pool at beta = 1.0 and
+    beta = 0.05; the undersampled model's mean score on legit traffic
+    must be clearly higher (Section 2.3.1).
+    """
+    x, y = datagen.generate_training_pool(40_000, 99)
+    p_full = model.init_params(jax.random.PRNGKey(10), "mlp1", datagen.FEATURE_DIM, 32)
+    p_us = model.init_params(jax.random.PRNGKey(10), "mlp1", datagen.FEATURE_DIM, 32)
+    p_full, _ = model.fit(p_full, jnp.asarray(x), jnp.asarray(y), 200, 256, seed=2)
+    xu, yu = datagen.undersample(x, y, 0.05, seed=3)
+    p_us, _ = model.fit(p_us, jnp.asarray(xu), jnp.asarray(yu), 200, 256, seed=2)
+    legit = jnp.asarray(x[y == 0][:10_000])
+    mean_full = float(model.expert_fwd_ref(legit, p_full).mean())
+    mean_us = float(model.expert_fwd_ref(legit, p_us).mean())
+    assert mean_us > 2.0 * mean_full, (mean_full, mean_us)

@@ -1,0 +1,157 @@
+"""Properties of the transformation oracles (Eqs. 3-4 of the paper)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# Posterior Correction (Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    s=st.floats(0.0, 1.0, allow_nan=False),
+    beta=st.floats(0.01, 1.0, allow_nan=False),
+)
+def test_posterior_correction_range(s, beta):
+    # f32 arithmetic (jax x64 disabled) can overshoot 1.0 by ~1 ULP.
+    c = float(ref.posterior_correction_ref(jnp.float32(s), beta))
+    assert -1e-6 <= c <= 1.0 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(beta=st.floats(0.01, 1.0, allow_nan=False))
+def test_posterior_correction_fixed_points(beta):
+    # jax defaults to f32 (x64 disabled), so allow f32 rounding slack.
+    assert abs(float(ref.posterior_correction_ref(jnp.float32(0.0), beta))) < 1e-7
+    assert abs(float(ref.posterior_correction_ref(jnp.float32(1.0), beta)) - 1.0) < 1e-5
+
+
+def test_posterior_correction_identity_at_beta_one():
+    s = jnp.linspace(0.0, 1.0, 101)
+    np.testing.assert_allclose(
+        np.asarray(ref.posterior_correction_ref(s, 1.0)), np.asarray(s), atol=1e-7
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(beta=st.floats(0.01, 0.99, allow_nan=False), seed=st.integers(0, 10_000))
+def test_posterior_correction_strictly_monotone(beta, seed):
+    s = np.sort(np.random.default_rng(seed).uniform(0, 1, 64))
+    c = np.asarray(ref.posterior_correction_ref(jnp.asarray(s, jnp.float64), beta))
+    assert np.all(np.diff(c) >= 0)
+
+
+def test_posterior_correction_shrinks_scores_for_small_beta():
+    """Undersampling inflates scores; the correction deflates them."""
+    s = jnp.asarray(np.linspace(0.05, 0.95, 19), jnp.float64)
+    c = np.asarray(ref.posterior_correction_ref(s, 0.02))
+    assert np.all(c < np.asarray(s))
+
+
+def test_posterior_correction_matches_prior_algebra():
+    """Eq. 3 is the exact inverse of the prior-shift under undersampling.
+
+    If the true posterior is p, training on data where negatives are
+    kept with probability beta yields the biased posterior
+    p' = p / (p + beta (1 - p)). T^C must recover p from p'.
+    """
+    p = np.linspace(0.001, 0.999, 201)
+    for beta in (0.02, 0.18, 0.5):
+        biased = p / (p + beta * (1 - p))
+        rec = np.asarray(ref.posterior_correction_ref(jnp.asarray(biased), beta))
+        np.testing.assert_allclose(rec, p, rtol=5e-4)  # f32 arithmetic
+
+
+# ---------------------------------------------------------------------------
+# Quantile Mapping (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def _monotone_grid(seed, n_points, lo=0.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    g = np.sort(rng.uniform(lo, hi, n_points))
+    g[0], g[-1] = lo, hi
+    # Deduplicate to strictly increasing by nudging.
+    for i in range(1, n_points):
+        if g[i] <= g[i - 1]:
+            g[i] = np.nextafter(g[i - 1], hi)
+    return jnp.asarray(g, jnp.float64)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n_points=st.integers(3, 300))
+def test_quantile_map_is_monotone(seed, n_points):
+    src = _monotone_grid(seed, n_points)
+    refq = _monotone_grid(seed + 1, n_points)
+    s = jnp.asarray(np.sort(np.random.default_rng(seed).uniform(0, 1, 256)))
+    out = np.asarray(ref.quantile_map_ref(s, src, refq))
+    assert np.all(np.diff(out) >= -1e-12), "ranking must be preserved (Sec 2.3.3)"
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_quantile_map_hits_knots(seed):
+    """Each source quantile must map exactly to its reference quantile."""
+    src = _monotone_grid(seed, 65)
+    refq = _monotone_grid(seed + 1, 65)
+    out = np.asarray(ref.quantile_map_ref(src, src, refq))
+    np.testing.assert_allclose(out, np.asarray(refq), rtol=1e-9, atol=1e-12)
+
+
+def test_quantile_map_identity():
+    src = _monotone_grid(3, 33)
+    s = jnp.asarray(np.random.default_rng(4).uniform(0, 1, 512))
+    out = np.asarray(ref.quantile_map_ref(s, src, src))
+    np.testing.assert_allclose(out, np.asarray(s), rtol=1e-9, atol=1e-12)
+
+
+def test_quantile_map_distribution_alignment():
+    """The defining property: mapped samples follow the reference CDF.
+
+    Draw from Beta(2,5), map through quantiles fitted on a large
+    sample towards a uniform reference; the result must be ~U(0,1)
+    (Kolmogorov-Smirnov distance small).
+    """
+    rng = np.random.default_rng(11)
+    sample = rng.beta(2, 5, 200_000)
+    probs = np.linspace(0, 1, 1025)
+    src = np.quantile(sample, probs)
+    src[0], src[-1] = 0.0, 1.0
+    refq = probs  # uniform reference
+    fresh = rng.beta(2, 5, 50_000)
+    mapped = np.asarray(ref.quantile_map_ref(jnp.asarray(fresh), jnp.asarray(src), jnp.asarray(refq)))
+    # empirical CDF vs uniform
+    xs = np.sort(mapped)
+    ks = np.max(np.abs(xs - np.linspace(0, 1, len(xs))))
+    assert ks < 0.01, f"KS distance too large: {ks}"
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline (Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_single_model_reduces_to_tq_of_tc():
+    """For |M| = 1 with weight 1, Eq. 2 collapses correctly."""
+    key = jax.random.PRNGKey(0)
+    s = jax.random.uniform(key, (64, 1), jnp.float32, 0.0, 1.0)
+    src = _monotone_grid(5, 129).astype(jnp.float32)
+    refq = _monotone_grid(6, 129).astype(jnp.float32)
+    full = ref.transform_pipeline_ref(s, jnp.array([0.18]), jnp.array([1.0]), src, refq)
+    manual = ref.quantile_map_ref(
+        ref.posterior_correction_ref(s[:, 0], 0.18), src, refq
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(manual), rtol=1e-6)
+
+
+def test_aggregation_weighted_mean():
+    c = jnp.asarray([[0.2, 0.4, 0.9]])
+    w = jnp.asarray([1.0, 1.0, 2.0])
+    got = float(ref.aggregate_ref(c, w)[0])
+    assert abs(got - (0.2 + 0.4 + 1.8) / 4.0) < 1e-7

@@ -1,0 +1,34 @@
+//! `cargo bench` target: regenerate every paper exhibit end-to-end and
+//! time it. This is the "one bench per table/figure" entry point — the
+//! printed rows/series are the same ones `muse repro all` emits.
+
+use std::time::Instant;
+
+fn main() {
+    let exhibits: Vec<(&str, fn() -> anyhow::Result<String>)> = vec![
+        ("Figure 4 (quantile transformation update)", muse::repro::fig4::run),
+        ("Figure 5 (rolling update + warm-up)", muse::repro::fig5::run),
+        ("Figure 6 (live model update)", muse::repro::fig6::run),
+        ("Table 1 (posterior correction calibration)", muse::repro::table1::run),
+        ("Appendix A (Eq. 5 sample-size bound)", muse::repro::appendix_a::run),
+        ("Headline (throughput/latency SLOs)", muse::repro::headline::run),
+        ("Section 2.2.1 (infrastructure dedup)", muse::repro::dedup::run),
+        ("Section 4 (baseline comparison)", muse::repro::baselines_cmp::run),
+    ];
+    let needs_artifacts = ["Figure 4", "Figure 6", "Table 1", "Headline"];
+    let have_artifacts = muse::runtime::Manifest::load(muse::runtime::Manifest::default_root()).is_ok();
+    for (name, f) in exhibits {
+        if !have_artifacts && needs_artifacts.iter().any(|p| name.starts_with(p)) {
+            println!("-- {name}: skipped (artifacts not built)");
+            continue;
+        }
+        let t0 = Instant::now();
+        match f() {
+            Ok(out) => {
+                println!("{out}");
+                println!("-- {name}: regenerated in {:.2}s\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("-- {name}: ERROR {e:#}\n"),
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! `cargo bench` target: intent-routing overhead (Section 2.5.1's
+//! "negligible overhead" claim) — rule matching at realistic and
+//! adversarial rule-table sizes, plus config hot-swap cost.
+
+use muse::config::{Condition, Intent, RoutingConfig, ScoringRule, ShadowRule};
+use muse::coordinator::Router;
+use muse::util::bench::{bench, section};
+
+fn rules(n: usize) -> RoutingConfig {
+    let mut scoring: Vec<ScoringRule> = (0..n)
+        .map(|i| ScoringRule {
+            description: format!("tenant {i}"),
+            condition: Condition {
+                tenants: vec![format!("tenant-{i}")],
+                ..Condition::default()
+            },
+            target_predictor: format!("p{}", i % 7),
+        })
+        .collect();
+    scoring.push(ScoringRule {
+        description: "catch-all".into(),
+        condition: Condition::default(),
+        target_predictor: "global".into(),
+    });
+    RoutingConfig {
+        scoring_rules: scoring,
+        shadow_rules: vec![ShadowRule {
+            description: "shadow".into(),
+            condition: Condition {
+                tenants: vec!["tenant-0".into()],
+                ..Condition::default()
+            },
+            target_predictors: vec!["shadow-p".into()],
+        }],
+    }
+}
+
+fn main() {
+    section("intent routing: sequential scoring rules + parallel shadows");
+    for n in [4usize, 32, 128, 512] {
+        let router = Router::new(rules(n));
+        // Best case: first rule hits.
+        let first = Intent {
+            tenant: "tenant-0".into(),
+            ..Intent::default()
+        };
+        // Worst case: falls through every rule to the catch-all.
+        let miss = Intent {
+            tenant: "nobody".into(),
+            ..Intent::default()
+        };
+        println!(
+            "{}",
+            bench(&format!("resolve first-match ({n} rules)"), 1_000, 1_000_000, || {
+                std::hint::black_box(router.resolve(&first).unwrap());
+            })
+            .report()
+        );
+        println!(
+            "{}",
+            bench(&format!("resolve catch-all    ({n} rules)"), 1_000, 1_000_000, || {
+                std::hint::black_box(router.resolve(&miss).unwrap());
+            })
+            .report()
+        );
+    }
+
+    section("routing config hot swap (rolling update step)");
+    let router = Router::new(rules(128));
+    println!(
+        "{}",
+        bench("snapshot + swap 128-rule config", 100, 200_000, || {
+            let cfg = router.snapshot().as_ref().clone();
+            router.swap(cfg);
+        })
+        .report()
+    );
+}

@@ -1,0 +1,104 @@
+//! `cargo bench` target: the transformation hot path — Posterior
+//! Correction (Eq. 3), aggregation, Quantile Mapping lookups (Eq. 4)
+//! at paper-scale grid sizes, the full per-event pipeline, and the
+//! offline fitting costs (empirical quantile fit + Beta-mixture DE).
+//!
+//! Backs the paper's "negligible latency overhead" claim for T^C/A and
+//! the O(log N) lookup cost of T^Q.
+
+use muse::coldstart::{fit_mixture, FitConfig};
+use muse::transforms::{
+    quantile_fit, Aggregation, PosteriorCorrection, QuantileMap, ReferenceDistribution,
+};
+use muse::util::bench::{bench, section};
+use muse::util::rng::Rng;
+
+fn main() {
+    section("posterior correction (Eq. 3)");
+    let pc = PosteriorCorrection::new(0.18).unwrap();
+    let mut i = 0u64;
+    println!(
+        "{}",
+        bench("T^C scalar apply", 1_000, 5_000_000, || {
+            i = i.wrapping_add(1);
+            std::hint::black_box(pc.apply((i % 1000) as f64 / 1000.0));
+        })
+        .report()
+    );
+
+    section("aggregation A (weighted mean, K=8)");
+    let agg = Aggregation::weighted(vec![1.0; 8]).unwrap();
+    let scores = [0.1, 0.2, 0.05, 0.4, 0.3, 0.02, 0.15, 0.25];
+    println!(
+        "{}",
+        bench("A apply_unchecked K=8", 1_000, 5_000_000, || {
+            std::hint::black_box(agg.apply_unchecked(&scores));
+        })
+        .report()
+    );
+
+    section("quantile mapping T^Q (Eq. 4), binary search + lerp");
+    for n_points in [65usize, 257, 1025, 4097] {
+        let src: Vec<f64> = (0..n_points)
+            .map(|i| (i as f64 / (n_points - 1) as f64).powi(2))
+            .collect();
+        let mut src = src;
+        quantile_fit::dedup_monotone(&mut src);
+        let refq: Vec<f64> = (0..n_points)
+            .map(|i| i as f64 / (n_points - 1) as f64)
+            .collect();
+        let q = QuantileMap::new(src, refq).unwrap();
+        let mut k = 0u64;
+        println!(
+            "{}",
+            bench(&format!("T^Q apply N={}", n_points - 1), 1_000, 2_000_000, || {
+                k = k.wrapping_add(1);
+                std::hint::black_box(q.apply((k % 1000) as f64 / 1000.0));
+            })
+            .report()
+        );
+    }
+
+    section("full per-event pipeline: 8x T^C -> A -> T^Q(N=1024)");
+    let reference = ReferenceDistribution::fraud_default();
+    let refq = reference.quantile_grid(1025);
+    let mut rng = Rng::new(1);
+    let sample: Vec<f64> = (0..100_000).map(|_| rng.beta(1.3, 14.0)).collect();
+    let q = quantile_fit::fit_from_scores(&sample, &refq).unwrap();
+    let mut k = 0u64;
+    println!(
+        "{}",
+        bench("pipeline per event", 1_000, 2_000_000, || {
+            k = k.wrapping_add(1);
+            let s = (k % 1000) as f64 / 1000.0;
+            let mut cal = [0.0f64; 8];
+            for (j, c) in cal.iter_mut().enumerate() {
+                *c = pc.apply(s * (1.0 + j as f64 * 0.01));
+            }
+            std::hint::black_box(q.apply(agg.apply_unchecked(&cal)));
+        })
+        .report()
+    );
+
+    section("offline fitting");
+    println!(
+        "{}",
+        bench("empirical quantile fit (100k scores, N=1024)", 1, 8, || {
+            std::hint::black_box(quantile_fit::fit_from_scores(&sample, &refq).unwrap());
+        })
+        .report()
+    );
+    let small: Vec<f64> = sample.iter().take(20_000).cloned().collect();
+    let cfg = FitConfig {
+        n_trials: 2,
+        generations: 60,
+        ..FitConfig::default()
+    };
+    println!(
+        "{}",
+        bench("Beta-mixture DE fit (20k scores, 2 trials)", 0, 3, || {
+            std::hint::black_box(fit_mixture(&small, 0.015, &cfg).unwrap());
+        })
+        .report()
+    );
+}

@@ -1,0 +1,202 @@
+//! Stripe-Radar/Kount-style global-probability scoring (Section 4):
+//! scores are anchored to a *global* probability of fraud ("a score of
+//! 90 implies 90% fraud likelihood"), with the provider periodically
+//! recalibrating against the global stream.
+//!
+//! Failure mode the paper highlights: the tenant's decision volume is
+//! coupled to the global threat landscape — an attack on *other*
+//! tenants shifts the global calibration and therefore every tenant's
+//! alert volume, even if their own traffic is unchanged. MUSE's
+//! per-tenant quantile mapping against a fixed reference decouples
+//! this.
+
+use crate::transforms::QuantileMap;
+use crate::util::stats;
+use anyhow::Result;
+
+/// A provider-side global calibrator: maps raw model scores to global
+/// fraud probabilities via isotonic-ish binning over the pooled
+/// multi-tenant stream, refreshed on `recalibrate`.
+pub struct GlobalProbabilityScorer {
+    /// Piecewise map raw score -> global P(fraud), refit on the pooled
+    /// stream (we reuse QuantileMap machinery with probability knots).
+    map: QuantileMap,
+}
+
+impl GlobalProbabilityScorer {
+    /// Fit from pooled (raw score, label) pairs: equal-mass bins of
+    /// the raw score, each mapped to its empirical fraud rate.
+    pub fn fit(raw: &[f64], labels: &[f64], bins: usize) -> Result<GlobalProbabilityScorer> {
+        assert_eq!(raw.len(), labels.len());
+        let mut pairs: Vec<(f64, f64)> =
+            raw.iter().cloned().zip(labels.iter().cloned()).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let n = pairs.len();
+        let mut knots_x = Vec::with_capacity(bins + 1);
+        let mut knots_y = Vec::with_capacity(bins + 1);
+        knots_x.push(0.0);
+        knots_y.push(0.0);
+        let mut running_max = 0.0f64;
+        for b in 0..bins {
+            let lo = b * n / bins;
+            let hi = ((b + 1) * n / bins).max(lo + 1).min(n);
+            let chunk = &pairs[lo..hi];
+            let x = chunk.last().unwrap().0;
+            let prob = chunk.iter().map(|(_, y)| y).sum::<f64>() / chunk.len() as f64;
+            // Enforce monotone (isotonic) probabilities.
+            running_max = running_max.max(prob);
+            knots_x.push(x);
+            knots_y.push(running_max);
+        }
+        knots_x.push(1.0);
+        knots_y.push(1.0);
+        crate::transforms::quantile_fit::dedup_monotone(&mut knots_x);
+        Ok(GlobalProbabilityScorer {
+            map: QuantileMap::new(knots_x, knots_y)?,
+        })
+    }
+
+    /// Score: the globally-calibrated fraud probability.
+    pub fn score(&self, raw: f64) -> f64 {
+        self.map.apply(raw)
+    }
+
+    /// Alert volume (share of events above the probability threshold)
+    /// a tenant sees under this calibration.
+    pub fn alert_rate(&self, raws: &[f64], prob_threshold: f64) -> f64 {
+        if raws.is_empty() {
+            return 0.0;
+        }
+        raws.iter()
+            .filter(|&&r| self.score(r) >= prob_threshold)
+            .count() as f64
+            / raws.len() as f64
+    }
+}
+
+/// Measure the paper's coupling effect: tenant A's alert-rate change
+/// when an attack hits only tenant B and the provider recalibrates
+/// globally. Returns (rate_before, rate_after) for tenant A at a fixed
+/// probability threshold.
+pub fn tenant_coupling_experiment(
+    tenant_a_raw: &[f64],
+    tenant_b_raw_before: &[f64],
+    tenant_b_raw_attack: &[f64],
+    labels_a: &[f64],
+    labels_b_before: &[f64],
+    labels_b_attack: &[f64],
+    prob_threshold: f64,
+) -> Result<(f64, f64)> {
+    let pool =
+        |a: &[f64], b: &[f64]| -> Vec<f64> { a.iter().chain(b.iter()).cloned().collect() };
+    let before = GlobalProbabilityScorer::fit(
+        &pool(tenant_a_raw, tenant_b_raw_before),
+        &pool(labels_a, labels_b_before),
+        50,
+    )?;
+    let after = GlobalProbabilityScorer::fit(
+        &pool(tenant_a_raw, tenant_b_raw_attack),
+        &pool(labels_a, labels_b_attack),
+        50,
+    )?;
+    Ok((
+        before.alert_rate(tenant_a_raw, prob_threshold),
+        after.alert_rate(tenant_a_raw, prob_threshold),
+    ))
+}
+
+/// The MUSE counterfactual: tenant A's alert rate under its own fixed
+/// quantile transformation is independent of tenant B entirely.
+pub fn muse_alert_rate(tenant_a_raw: &[f64], map: &QuantileMap, threshold: f64) -> f64 {
+    if tenant_a_raw.is_empty() {
+        return 0.0;
+    }
+    tenant_a_raw
+        .iter()
+        .filter(|&&r| map.apply(r) >= threshold)
+        .count() as f64
+        / tenant_a_raw.len() as f64
+}
+
+/// Helper: synthesize a raw-score population with the given fraud
+/// rate; scores ~ Beta(1.2, 12) for legit, Beta(6, 2) for fraud.
+pub fn synth_scores(n: usize, fraud_rate: f64, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut raw = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let fraud = rng.bernoulli(fraud_rate);
+        labels.push(if fraud { 1.0 } else { 0.0 });
+        raw.push(if fraud {
+            rng.beta(6.0, 2.0)
+        } else {
+            rng.beta(1.2, 12.0)
+        });
+    }
+    let _ = stats::mean(&raw);
+    (raw, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::ReferenceDistribution;
+    use crate::util::stats::prob_grid;
+
+    #[test]
+    fn calibrated_probabilities_are_monotone_and_bounded() {
+        let (raw, labels) = synth_scores(50_000, 0.02, 1);
+        let g = GlobalProbabilityScorer::fit(&raw, &labels, 40).unwrap();
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let s = g.score(i as f64 / 100.0);
+            assert!((0.0..=1.0).contains(&s));
+            assert!(s >= prev - 1e-12);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn calibration_tracks_empirical_rate() {
+        let (raw, labels) = synth_scores(200_000, 0.05, 2);
+        let g = GlobalProbabilityScorer::fit(&raw, &labels, 50).unwrap();
+        // In the upper region the probability must be far above prior.
+        assert!(g.score(0.9) > 0.3);
+        assert!(g.score(0.05) < 0.05);
+    }
+
+    #[test]
+    fn attack_on_tenant_b_shifts_tenant_a_alerts() {
+        // Tenant A: stable 1.5% fraud. Tenant B: 1.5% -> 15% (attack).
+        let (raw_a, lab_a) = synth_scores(60_000, 0.015, 3);
+        let (raw_b0, lab_b0) = synth_scores(60_000, 0.015, 4);
+        let (raw_b1, lab_b1) = synth_scores(60_000, 0.15, 5);
+        let (before, after) = tenant_coupling_experiment(
+            &raw_a, &raw_b0, &raw_b1, &lab_a, &lab_b0, &lab_b1, 0.5,
+        )
+        .unwrap();
+        // Global recalibration moves A's alert volume even though A's
+        // traffic didn't change (the paper's coupling failure).
+        let change = (after - before).abs() / before.max(1e-9);
+        assert!(
+            change > 0.2,
+            "expected >20% coupling shift, got {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn muse_alert_rate_is_invariant_to_other_tenants() {
+        let (raw_a, _) = synth_scores(60_000, 0.015, 6);
+        // Tenant A's own fixed map (fit on its own pre-period stream).
+        let refq = ReferenceDistribution::fraud_default().quantile_grid(513);
+        let map = crate::transforms::quantile_fit::fit_from_scores(&raw_a, &refq).unwrap();
+        let r1 = muse_alert_rate(&raw_a, &map, 0.9);
+        // ... nothing about tenant B enters this computation at all;
+        // re-evaluating after "the attack" yields bitwise-identical
+        // rates:
+        let r2 = muse_alert_rate(&raw_a, &map, 0.9);
+        assert_eq!(r1, r2);
+        assert!(r1 > 0.0, "threshold 0.9 should alert on the ref tail");
+        let _ = prob_grid(3);
+    }
+}

@@ -1,0 +1,139 @@
+//! KServe-style deployment accounting (paper Section 4): a 1:1
+//! mapping between models+transformers and InferenceServices means
+//! "serving the same ensemble to multiple clients with unique
+//! calibrations requires deploying a separate Inference Service per
+//! tenant" — 1:N duplication that can exhaust cluster limits (IPs).
+//!
+//! This module models that cost analytically (containers, memory, IPs)
+//! so the `repro dedup` harness can sweep tenant counts far beyond
+//! what we'd want to physically spawn, and contrasts it with MUSE's
+//! shared-pool accounting (which *is* physically exercised in
+//! `runtime::pool` tests).
+
+use std::collections::BTreeSet;
+
+/// Resource cost of a deployment strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentCost {
+    pub containers: usize,
+    /// One service IP per InferenceService (KServe) or per container
+    /// pool entry (MUSE).
+    pub service_ips: usize,
+    /// Memory estimate in MB (container fixed cost x count).
+    pub memory_mb: f64,
+}
+
+/// Per-container memory footprint estimate (model weights are tiny
+/// here; production containers carry the runtime: ~500MB for a Triton
+/// pod is conservative).
+pub const CONTAINER_MEMORY_MB: f64 = 500.0;
+
+/// A predictor definition for accounting purposes: its expert models.
+pub type PredictorModels = Vec<String>;
+
+/// KServe-style: every predictor (tenant-specific transformation
+/// included) becomes its own InferenceService replicating all its
+/// models.
+pub struct KServeStyleDeployment;
+
+impl KServeStyleDeployment {
+    pub fn cost(predictors: &[PredictorModels]) -> DeploymentCost {
+        let containers: usize = predictors.iter().map(|p| p.len()).sum();
+        DeploymentCost {
+            containers,
+            service_ips: predictors.len(),
+            memory_mb: containers as f64 * CONTAINER_MEMORY_MB,
+        }
+    }
+}
+
+/// MUSE accounting: containers = |union of referenced models|.
+pub struct MuseDeployment;
+
+impl MuseDeployment {
+    pub fn cost(predictors: &[PredictorModels]) -> DeploymentCost {
+        let unique: BTreeSet<&String> = predictors.iter().flatten().collect();
+        DeploymentCost {
+            containers: unique.len(),
+            service_ips: unique.len(),
+            memory_mb: unique.len() as f64 * CONTAINER_MEMORY_MB,
+        }
+    }
+}
+
+/// The paper's incremental-update claim (Section 2.2.1): marginal cost
+/// of deploying `new` after `existing` = net-new models only.
+pub fn marginal_models(existing: &[PredictorModels], new: &PredictorModels) -> usize {
+    let have: BTreeSet<&String> = existing.iter().flatten().collect();
+    new.iter().filter(|m| !have.contains(m)).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(models: &[&str]) -> PredictorModels {
+        models.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn fig1_example_costs() {
+        // p1 = {m1, m2}, p2 = {m1, m2, m3}.
+        let predictors = vec![p(&["m1", "m2"]), p(&["m1", "m2", "m3"])];
+        let kserve = KServeStyleDeployment::cost(&predictors);
+        let muse = MuseDeployment::cost(&predictors);
+        assert_eq!(kserve.containers, 5);
+        assert_eq!(muse.containers, 3);
+        assert_eq!(marginal_models(&predictors[..1], &predictors[1]), 1);
+    }
+
+    #[test]
+    fn multi_tenant_gap_grows_linearly() {
+        // 100 tenants, each a tenant-specific calibration of the same
+        // 8-model ensemble: KServe duplicates everything, MUSE shares.
+        let ensemble = p(&["m1", "m2", "m3", "m4", "m5", "m6", "m7", "m8"]);
+        let predictors: Vec<PredictorModels> = (0..100).map(|_| ensemble.clone()).collect();
+        let kserve = KServeStyleDeployment::cost(&predictors);
+        let muse = MuseDeployment::cost(&predictors);
+        assert_eq!(kserve.containers, 800);
+        assert_eq!(muse.containers, 8);
+        assert_eq!(kserve.service_ips, 100);
+        assert!(kserve.memory_mb / muse.memory_mb >= 99.0);
+    }
+
+    #[test]
+    fn disjoint_predictors_have_no_savings() {
+        let predictors = vec![p(&["a"]), p(&["b"]), p(&["c"])];
+        let kserve = KServeStyleDeployment::cost(&predictors);
+        let muse = MuseDeployment::cost(&predictors);
+        assert_eq!(kserve.containers, muse.containers);
+    }
+
+    #[test]
+    fn marginal_cost_of_duplicate_is_zero() {
+        let existing = vec![p(&["m1", "m2"])];
+        assert_eq!(marginal_models(&existing, &p(&["m1", "m2"])), 0);
+        assert_eq!(marginal_models(&[], &p(&["m1"])), 1);
+    }
+
+    #[test]
+    fn accounting_matches_live_pool() {
+        // Cross-check the analytical model against the real pool.
+        use crate::runtime::{Manifest, ModelPool};
+        use std::path::PathBuf;
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let pool = ModelPool::new(Manifest::load(root).unwrap());
+        let predictors = vec![p(&["m1", "m2"]), p(&["m1", "m2", "m3"])];
+        for pred in &predictors {
+            for m in pred {
+                pool.acquire(m).unwrap();
+            }
+        }
+        let expected = MuseDeployment::cost(&predictors);
+        assert_eq!(pool.stats().live_containers, expected.containers);
+    }
+}

@@ -1,0 +1,16 @@
+//! Comparison baselines from the paper's Related Work (Section 4):
+//!
+//! * `kserve_style` — the 1:1 predictor-to-InferenceService deployment
+//!   model whose duplication MUSE's shared containers avoid.
+//! * `global_prob` — Stripe-Radar/Kount-style globally-calibrated
+//!   probability scores, coupling every tenant to the global threat
+//!   landscape.
+//! * `rolling_pct` — Sift-style rolling-window percentile scores.
+
+pub mod global_prob;
+pub mod kserve_style;
+pub mod rolling_pct;
+
+pub use global_prob::GlobalProbabilityScorer;
+pub use kserve_style::{DeploymentCost, KServeStyleDeployment};
+pub use rolling_pct::RollingPercentile;

@@ -1,0 +1,151 @@
+//! Sift-style rolling-percentile scoring (Section 4): alongside the
+//! raw model output, the provider delivers a secondary score — the
+//! event's percentile within a rolling window of recent traffic.
+//!
+//! Trade-offs the paper calls out: the provider must maintain a
+//! rolling window of scores per tenant (state! — MUSE's transformation
+//! is a fixed table), and the percentile is *relative*: during an
+//! attack the window itself fills with high scores, so the percentile
+//! of a given raw score sags — the score semantics drift exactly when
+//! stability matters.
+
+use std::collections::VecDeque;
+
+/// A rolling-window percentile scorer (per tenant, stateful).
+pub struct RollingPercentile {
+    window: VecDeque<f64>,
+    capacity: usize,
+}
+
+impl RollingPercentile {
+    pub fn new(capacity: usize) -> RollingPercentile {
+        assert!(capacity >= 1);
+        RollingPercentile {
+            window: VecDeque::with_capacity(capacity),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    /// Score = share of the window strictly below `raw` (0.5 for an
+    /// empty window), then push `raw` into the window. O(window) —
+    /// part of the complexity cost the paper notes.
+    pub fn score_and_update(&mut self, raw: f64) -> f64 {
+        let pct = if self.window.is_empty() {
+            0.5
+        } else {
+            self.window.iter().filter(|&&w| w < raw).count() as f64 / self.window.len() as f64
+        };
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(raw);
+        pct
+    }
+
+    /// Memory footprint in bytes (the provider pays this per tenant).
+    pub fn state_bytes(&self) -> usize {
+        self.capacity * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::quantile_fit;
+    use crate::transforms::ReferenceDistribution;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn percentiles_are_uniform_under_stationary_traffic() {
+        let mut rp = RollingPercentile::new(5_000);
+        let mut rng = Rng::new(1);
+        // Fill the window first.
+        for _ in 0..5_000 {
+            rp.score_and_update(rng.beta(1.2, 12.0));
+        }
+        let scores: Vec<f64> = (0..20_000)
+            .map(|_| rp.score_and_update(rng.beta(1.2, 12.0)))
+            .collect();
+        let ks = crate::util::stats::ks_distance(&scores, |x| x.clamp(0.0, 1.0));
+        assert!(ks < 0.03, "KS = {ks}");
+    }
+
+    #[test]
+    fn attack_deflates_percentile_of_fixed_raw_score() {
+        // The instability the paper contrasts against: the same raw
+        // score's percentile sags once the window fills with attack
+        // traffic.
+        let mut rp = RollingPercentile::new(2_000);
+        let mut rng = Rng::new(2);
+        for _ in 0..2_000 {
+            rp.score_and_update(rng.beta(1.2, 12.0));
+        }
+        let probe = 0.5;
+        let before = rp.window.iter().filter(|&&w| w < probe).count() as f64 / 2_000.0;
+        // Attack: 30% of traffic is fraud-shaped (high scores).
+        for _ in 0..2_000 {
+            let s = if rng.bernoulli(0.30) {
+                rng.beta(6.0, 2.0)
+            } else {
+                rng.beta(1.2, 12.0)
+            };
+            rp.score_and_update(s);
+        }
+        let after = rp.window.iter().filter(|&&w| w < probe).count() as f64 / 2_000.0;
+        assert!(
+            before - after > 0.05,
+            "attack should deflate the percentile: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn muse_fixed_map_is_stable_under_the_same_attack() {
+        // Counterpart: a fixed quantile transformation's output for
+        // the same raw score is *identical* regardless of traffic.
+        let mut rng = Rng::new(3);
+        let pre: Vec<f64> = (0..50_000).map(|_| rng.beta(1.2, 12.0)).collect();
+        let refq = ReferenceDistribution::fraud_default().quantile_grid(513);
+        let map = quantile_fit::fit_from_scores(&pre, &refq).unwrap();
+        let before = map.apply(0.5);
+        // ... attack traffic does not touch the map at all:
+        let after = map.apply(0.5);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn empty_window_gives_half() {
+        let mut rp = RollingPercentile::new(10);
+        assert_eq!(rp.score_and_update(0.7), 0.5);
+        assert_eq!(rp.len(), 1);
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let mut rp = RollingPercentile::new(100);
+        for i in 0..1_000 {
+            rp.score_and_update(i as f64 / 1000.0);
+        }
+        assert_eq!(rp.len(), 100);
+        assert_eq!(rp.state_bytes(), 800);
+    }
+
+    #[test]
+    fn monotone_in_raw_score_given_fixed_window() {
+        let mut rp = RollingPercentile::new(1_000);
+        let mut rng = Rng::new(4);
+        for _ in 0..1_000 {
+            rp.score_and_update(rng.f64());
+        }
+        let w = rp.window.clone();
+        let pct = |raw: f64| w.iter().filter(|&&x| x < raw).count() as f64 / w.len() as f64;
+        assert!(pct(0.2) <= pct(0.5) && pct(0.5) <= pct(0.9));
+    }
+}

@@ -1,0 +1,13 @@
+//! Calibration & evaluation metrics used by the paper's exhibits:
+//! ECE_SWEEP^EM [33] and Brier [7] (Table 1), Wilson intervals [43]
+//! (Figs. 4/6 error bars), Recall@FPR and AUC (Section 3.2).
+
+pub mod brier;
+pub mod ece;
+pub mod recall;
+pub mod wilson;
+
+pub use brier::brier;
+pub use ece::ece_sweep_em;
+pub use recall::{alert_rate, auc, recall_at_fpr};
+pub use wilson::wilson_interval;

@@ -1,0 +1,189 @@
+//! Threshold metrics: Recall@FPR (the paper's Section 3.2 headline:
+//! "+1.1 pp Recall at 1% FPR"), alert rates, and AUC.
+
+/// Recall at a fixed false-positive rate: choose the score threshold
+/// whose FPR is closest to (but not above) `target_fpr`, then report
+/// the recall (TPR) at that threshold. Ties in score are handled by
+/// treating equal scores atomically.
+pub fn recall_at_fpr(scores: &[f64], labels: &[f64], target_fpr: f64) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos: f64 = labels.iter().sum();
+    let n_neg = labels.len() as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return 0.0;
+    }
+    // Sort descending by score; sweep thresholds.
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).expect("NaN score"));
+
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut best_recall = 0.0;
+    let mut i = 0;
+    while i < idx.len() {
+        // Consume the whole tie-group atomically.
+        let s = scores[idx[i]];
+        while i < idx.len() && scores[idx[i]] == s {
+            if labels[idx[i]] > 0.5 {
+                tp += 1.0;
+            } else {
+                fp += 1.0;
+            }
+            i += 1;
+        }
+        let fpr = fp / n_neg;
+        if fpr <= target_fpr {
+            best_recall = tp / n_pos;
+        } else {
+            break;
+        }
+    }
+    best_recall
+}
+
+/// Alert rate at a fixed score threshold: share of events with
+/// score >= threshold (what client-side decision rules compute).
+pub fn alert_rate(scores: &[f64], threshold: f64) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    scores.iter().filter(|&&s| s >= threshold).count() as f64 / scores.len() as f64
+}
+
+/// Rank-based AUC (Mann-Whitney), tie-aware via average ranks.
+pub fn auc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let n_pos: f64 = labels.iter().sum();
+    let n_neg = n as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return f64::NAN;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).expect("NaN score"));
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j < n && scores[idx[j]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j + 1) as f64 / 2.0; // 1-based average
+        for k in i..j {
+            ranks[idx[k]] = avg_rank;
+        }
+        i = j;
+    }
+    let pos_rank_sum: f64 = labels
+        .iter()
+        .zip(&ranks)
+        .filter(|(y, _)| **y > 0.5)
+        .map(|(_, r)| r)
+        .sum();
+    (pos_rank_sum - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn perfect_separation() {
+        let s = vec![0.1, 0.2, 0.8, 0.9];
+        let y = vec![0.0, 0.0, 1.0, 1.0];
+        assert_eq!(recall_at_fpr(&s, &y, 0.0), 1.0);
+        assert!((auc(&s, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_scores_auc_half() {
+        let mut rng = Rng::new(1);
+        let s: Vec<f64> = (0..50_000).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..50_000)
+            .map(|_| if rng.bernoulli(0.1) { 1.0 } else { 0.0 })
+            .collect();
+        assert!((auc(&s, &y) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn recall_zero_fpr_with_overlap() {
+        // Highest score is a negative: recall at FPR=0 must be 0.
+        let s = vec![0.95, 0.8, 0.7];
+        let y = vec![0.0, 1.0, 1.0];
+        assert_eq!(recall_at_fpr(&s, &y, 0.0), 0.0);
+    }
+
+    #[test]
+    fn recall_increases_with_fpr_budget() {
+        let mut rng = Rng::new(2);
+        let mut s = vec![];
+        let mut y = vec![];
+        for _ in 0..20_000 {
+            let fraud = rng.bernoulli(0.05);
+            y.push(if fraud { 1.0 } else { 0.0 });
+            s.push(if fraud { rng.beta(5.0, 2.0) } else { rng.beta(2.0, 5.0) });
+        }
+        let r1 = recall_at_fpr(&s, &y, 0.01);
+        let r5 = recall_at_fpr(&s, &y, 0.05);
+        let r20 = recall_at_fpr(&s, &y, 0.2);
+        assert!(r1 < r5 && r5 < r20, "{r1} {r5} {r20}");
+    }
+
+    #[test]
+    fn degenerate_labels() {
+        assert_eq!(recall_at_fpr(&[0.5, 0.6], &[0.0, 0.0], 0.1), 0.0);
+        assert_eq!(recall_at_fpr(&[0.5, 0.6], &[1.0, 1.0], 0.1), 0.0);
+        assert!(auc(&[0.5], &[1.0]).is_nan());
+    }
+
+    #[test]
+    fn alert_rate_basics() {
+        let s = vec![0.1, 0.5, 0.9, 0.95];
+        assert_eq!(alert_rate(&s, 0.9), 0.5);
+        assert_eq!(alert_rate(&s, 0.0), 1.0);
+        assert_eq!(alert_rate(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn prop_monotone_transform_preserves_recall_and_auc() {
+        // The paper's key invariant (Section 3.2): quantile mapping is
+        // monotone, so Recall@FPR and AUC are unchanged.
+        prop::check(60, |g| {
+            let n = g.usize(50..500);
+            let mut s = Vec::with_capacity(n);
+            let mut y = Vec::with_capacity(n);
+            for _ in 0..n {
+                let fraud = g.bool(0.2);
+                y.push(if fraud { 1.0 } else { 0.0 });
+                s.push(if fraud {
+                    g.f64(0.0..1.0).powf(0.5)
+                } else {
+                    g.f64(0.0..1.0).powf(2.0)
+                });
+            }
+            // Strictly monotone map: x -> x^3 * 0.5 + 0.2 (order preserved)
+            let t: Vec<f64> = s.iter().map(|&x| 0.5 * x.powi(3) + 0.2).collect();
+            let (r_a, r_b) = (recall_at_fpr(&s, &y, 0.05), recall_at_fpr(&t, &y, 0.05));
+            prop_assert!((r_a - r_b).abs() < 1e-12, "recall changed: {r_a} vs {r_b}");
+            let (a_a, a_b) = (auc(&s, &y), auc(&t, &y));
+            if a_a.is_nan() {
+                prop_assert!(a_b.is_nan(), "auc NaN mismatch");
+            } else {
+                prop_assert!((a_a - a_b).abs() < 1e-12, "auc changed: {a_a} vs {a_b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tie_groups_handled_atomically() {
+        // All scores identical: FPR budget below 100% yields recall 0.
+        let s = vec![0.5; 10];
+        let y = vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        assert_eq!(recall_at_fpr(&s, &y, 0.5), 0.0);
+        assert_eq!(recall_at_fpr(&s, &y, 1.0), 1.0);
+        assert!((auc(&s, &y) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,137 @@
+//! Wilson score interval (Wilson 1927 [43]) — the error bars on the
+//! paper's Fig. 4/6 relative-error-per-bin plots.
+
+/// Two-sided Wilson score interval for a binomial proportion.
+/// `successes` out of `trials` at z-score `z` (1.96 = 95%).
+/// Returns (lo, hi) in [0, 1]. `trials == 0` yields (0, 1).
+pub fn wilson_interval(successes: u64, trials: u64, z: f64) -> (f64, f64) {
+    if trials == 0 {
+        return (0.0, 1.0);
+    }
+    let n = trials as f64;
+    let p = successes as f64 / n;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let center = (p + z2 / (2.0 * n)) / denom;
+    let half = z * (p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt() / denom;
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Wilson interval translated to the relative-error-vs-target scale
+/// used by Figs. 4 and 6: given an observed bin count out of `total`
+/// and the target share, returns (err_lo_pct, err_pct, err_hi_pct)
+/// where err = 100 * (observed_share - target) / target.
+pub fn relative_error_with_interval(
+    bin_count: u64,
+    total: u64,
+    target_share: f64,
+    z: f64,
+) -> (f64, f64, f64) {
+    let to_err = |share: f64| {
+        if target_share <= 0.0 {
+            if share > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        } else {
+            100.0 * (share - target_share) / target_share
+        }
+    };
+    let (lo, hi) = wilson_interval(bin_count, total, z);
+    let point = if total == 0 {
+        0.0
+    } else {
+        bin_count as f64 / total as f64
+    };
+    (to_err(lo), to_err(point), to_err(hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn zero_trials_is_vacuous() {
+        assert_eq!(wilson_interval(0, 0, 1.96), (0.0, 1.0));
+    }
+
+    #[test]
+    fn contains_point_estimate() {
+        let (lo, hi) = wilson_interval(30, 100, 1.96);
+        assert!(lo < 0.3 && 0.3 < hi);
+    }
+
+    #[test]
+    fn known_value() {
+        // Classic check: 0 successes of 10 at 95% -> hi ~ 0.278.
+        let (lo, hi) = wilson_interval(0, 10, 1.96);
+        assert_eq!(lo, 0.0);
+        assert!((hi - 0.2775).abs() < 0.01, "hi = {hi}");
+    }
+
+    #[test]
+    fn narrows_with_n() {
+        let (lo1, hi1) = wilson_interval(10, 100, 1.96);
+        let (lo2, hi2) = wilson_interval(1000, 10_000, 1.96);
+        assert!(hi2 - lo2 < hi1 - lo1);
+    }
+
+    #[test]
+    fn prop_interval_ordered_and_bounded() {
+        prop::check(300, |g| {
+            let n = g.usize(1..100_000) as u64;
+            let k = g.usize(0..(n as usize + 1)) as u64;
+            let (lo, hi) = wilson_interval(k, n, 1.96);
+            prop_assert!((0.0..=1.0).contains(&lo), "lo {lo}");
+            prop_assert!((0.0..=1.0).contains(&hi), "hi {hi}");
+            prop_assert!(lo <= hi, "lo {lo} > hi {hi}");
+            let p = k as f64 / n as f64;
+            prop_assert!(lo <= p + 1e-12 && p <= hi + 1e-12, "p {p} outside [{lo},{hi}]");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn coverage_close_to_nominal() {
+        // Monte-Carlo: 95% interval must cover the true p ~95% of runs.
+        let mut rng = Rng::new(17);
+        let p_true = 0.07;
+        let n = 500;
+        let trials = 2000;
+        let mut covered = 0;
+        for _ in 0..trials {
+            let k = (0..n).filter(|_| rng.bernoulli(p_true)).count() as u64;
+            let (lo, hi) = wilson_interval(k, n as u64, 1.96);
+            if lo <= p_true && p_true <= hi {
+                covered += 1;
+            }
+        }
+        let cov = covered as f64 / trials as f64;
+        assert!(cov > 0.92 && cov < 0.98, "coverage {cov}");
+    }
+
+    #[test]
+    fn relative_error_scale() {
+        // Observed exactly the target share: error 0, interval straddles 0.
+        let (lo, mid, hi) = relative_error_with_interval(700, 1000, 0.7, 1.96);
+        assert!(mid.abs() < 1e-9);
+        assert!(lo < 0.0 && hi > 0.0);
+        // All mass in bin when target is 70%: the paper's +43%.
+        let (_, err, _) = relative_error_with_interval(1000, 1000, 0.7, 1.96);
+        assert!((err - 42.857).abs() < 0.01);
+        // Empty bin: -100%.
+        let (_, err, _) = relative_error_with_interval(0, 1000, 0.1, 1.96);
+        assert_eq!(err, -100.0);
+    }
+
+    #[test]
+    fn relative_error_zero_target() {
+        let (_, err, _) = relative_error_with_interval(5, 100, 0.0, 1.96);
+        assert!(err.is_infinite());
+        let (_, err, _) = relative_error_with_interval(0, 100, 0.0, 1.96);
+        assert_eq!(err, 0.0);
+    }
+}

@@ -1,0 +1,291 @@
+//! The bimodal Beta mixture prior (paper Eq. 6).
+//!
+//! `f_S(y) = (1-w) Beta(y; a0, b0) + w Beta(y; a1, b1)`
+//!
+//! with `w = P(y = 1)` the fraud prior: component 0 approximates the
+//! legitimate-class score density, component 1 the fraud-class
+//! density. Used to define the cold-start default quantile
+//! transformation `T^Q_{v0}` when no tenant data exists, and as the
+//! shape family for the configurable reference distribution R.
+
+use super::beta::Beta;
+use anyhow::{ensure, Result};
+
+/// A two-component Beta mixture on [0, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BetaMixture {
+    pub w: f64, // weight of component 1 (the positive/fraud mode)
+    pub c0: Beta,
+    pub c1: Beta,
+}
+
+impl BetaMixture {
+    pub fn new(w: f64, c0: Beta, c1: Beta) -> Result<Self> {
+        ensure!(
+            (0.0..=1.0).contains(&w) && w.is_finite(),
+            "mixture weight must be in [0,1], got {w}"
+        );
+        Ok(BetaMixture { w, c0, c1 })
+    }
+
+    /// Construct from raw parameters (Eq. 6's tuple).
+    pub fn from_params(w: f64, a0: f64, b0: f64, a1: f64, b1: f64) -> Result<Self> {
+        BetaMixture::new(w, Beta::new(a0, b0)?, Beta::new(a1, b1)?)
+    }
+
+    pub fn pdf(&self, x: f64) -> f64 {
+        (1.0 - self.w) * self.c0.pdf(x) + self.w * self.c1.pdf(x)
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        (1.0 - self.w) * self.c0.cdf(x) + self.w * self.c1.cdf(x)
+    }
+
+    /// r-th raw moment (mixtures are linear in moments) — the
+    /// `mu_r(alpha_0, beta_0, alpha_1, beta_1)` of Eq. 7.
+    pub fn raw_moment(&self, r: u32) -> f64 {
+        (1.0 - self.w) * self.c0.raw_moment(r) + self.w * self.c1.raw_moment(r)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.raw_moment(1)
+    }
+
+    /// Inverse CDF by monotone bisection + Newton (the mixture CDF is
+    /// strictly increasing wherever the pdf is positive).
+    pub fn quantile(&self, p: f64) -> f64 {
+        let p = p.clamp(0.0, 1.0);
+        if p == 0.0 {
+            return 0.0;
+        }
+        if p == 1.0 {
+            return 1.0;
+        }
+        let (mut lo, mut hi) = (0.0_f64, 1.0_f64);
+        let mut x = self.mean().clamp(1e-9, 1.0 - 1e-9);
+        for _ in 0..200 {
+            let f = self.cdf(x) - p;
+            if f.abs() < 1e-14 {
+                break;
+            }
+            if f > 0.0 {
+                hi = x;
+            } else {
+                lo = x;
+            }
+            let d = self.pdf(x);
+            let newton = if d > 1e-300 { x - f / d } else { f64::NAN };
+            x = if newton.is_finite() && newton > lo && newton < hi {
+                newton
+            } else {
+                0.5 * (lo + hi)
+            };
+            if hi - lo < 1e-14 {
+                break;
+            }
+        }
+        x
+    }
+
+    /// Quantile grid at `n_points` uniform probabilities (the
+    /// `q^R_i` / default `q^S_i` used by `QuantileMap`). Endpoints are
+    /// pinned to the distribution support [0, 1].
+    pub fn quantile_grid(&self, n_points: usize) -> Vec<f64> {
+        assert!(n_points >= 2);
+        let mut grid: Vec<f64> = (0..n_points)
+            .map(|i| self.quantile(i as f64 / (n_points - 1) as f64))
+            .collect();
+        grid[0] = 0.0;
+        grid[n_points - 1] = 1.0;
+        crate::transforms::quantile_fit::dedup_monotone(&mut grid);
+        grid
+    }
+
+    /// Probability mass per uniform score bin (for the paper's
+    /// relative-error-vs-target figures).
+    pub fn bin_shares(&self, n_bins: usize) -> Vec<f64> {
+        (0..n_bins)
+            .map(|b| {
+                let lo = b as f64 / n_bins as f64;
+                let hi = (b + 1) as f64 / n_bins as f64;
+                self.cdf(hi) - self.cdf(lo)
+            })
+            .collect()
+    }
+
+    /// Jensen-Shannon divergence against a histogram density estimate
+    /// (Eq. 8's model-selection criterion). `hist` contains counts per
+    /// uniform bin over [0, 1]; base-2 logs so JSD is in [0, 1].
+    pub fn jsd_vs_histogram(&self, hist: &[u64]) -> f64 {
+        let n_bins = hist.len();
+        let total: u64 = hist.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mut jsd = 0.0;
+        for (b, &count) in hist.iter().enumerate() {
+            let p = count as f64 / total as f64; // empirical mass
+            let lo = b as f64 / n_bins as f64;
+            let hi = (b + 1) as f64 / n_bins as f64;
+            let q = (self.cdf(hi) - self.cdf(lo)).max(0.0); // model mass
+            let m = 0.5 * (p + q);
+            if p > 0.0 && m > 0.0 {
+                jsd += 0.5 * p * (p / m).log2();
+            }
+            if q > 0.0 && m > 0.0 {
+                jsd += 0.5 * q * (q / m).log2();
+            }
+        }
+        jsd.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn fraudish() -> BetaMixture {
+        // High density near 0, long tail to 1 — the paper's suggested
+        // reference shape for imbalanced fraud settings.
+        BetaMixture::from_params(0.015, 1.2, 30.0, 8.0, 1.5).unwrap()
+    }
+
+    #[test]
+    fn validates_weight() {
+        assert!(BetaMixture::from_params(-0.1, 1.0, 1.0, 1.0, 1.0).is_err());
+        assert!(BetaMixture::from_params(1.1, 1.0, 1.0, 1.0, 1.0).is_err());
+        assert!(BetaMixture::from_params(0.5, 0.0, 1.0, 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn pdf_cdf_consistency() {
+        let m = fraudish();
+        // CDF(1) = 1, CDF(0) = 0, CDF is the integral of the PDF.
+        assert!((m.cdf(1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(m.cdf(0.0), 0.0);
+        let n = 100_000;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let x0 = (i as f64 + 0.5) / n as f64;
+            acc += m.pdf(x0) / n as f64;
+        }
+        assert!((acc - 1.0).abs() < 1e-3, "integral = {acc}");
+    }
+
+    #[test]
+    fn moments_are_mixture_linear() {
+        let m = fraudish();
+        for r in 1..=4 {
+            let direct = m.raw_moment(r);
+            let manual = (1.0 - m.w) * m.c0.raw_moment(r) + m.w * m.c1.raw_moment(r);
+            assert_eq!(direct, manual);
+        }
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let m = fraudish();
+        for i in 1..100 {
+            let p = i as f64 / 100.0;
+            let x = m.quantile(p);
+            assert!((m.cdf(x) - p).abs() < 1e-8, "p={p} x={x}");
+        }
+    }
+
+    #[test]
+    fn quantile_grid_is_strictly_increasing() {
+        let g = fraudish().quantile_grid(1025);
+        assert_eq!(g.len(), 1025);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[1024], 1.0);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn fraudish_shape_matches_paper_intent() {
+        // "high density near 0 and a longer tail towards 1": ~most mass
+        // below 0.1, but non-trivial mass above 0.9 relative to mid.
+        let m = fraudish();
+        let shares = m.bin_shares(10);
+        assert!(shares[0] > 0.6, "bin0 share {}", shares[0]);
+        assert!(shares[9] > 0.001, "top bin share {}", shares[9]);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsd_zero_for_own_histogram() {
+        let m = fraudish();
+        // Build the model's own expected histogram at high resolution.
+        let n_bins = 50;
+        let total = 10_000_000u64;
+        let hist: Vec<u64> = m
+            .bin_shares(n_bins)
+            .iter()
+            .map(|s| (s * total as f64).round() as u64)
+            .collect();
+        let jsd = m.jsd_vs_histogram(&hist);
+        assert!(jsd < 1e-6, "JSD = {jsd}");
+    }
+
+    #[test]
+    fn jsd_discriminates() {
+        let m = fraudish();
+        let other = BetaMixture::from_params(0.5, 2.0, 2.0, 2.0, 2.0).unwrap();
+        let n_bins = 50;
+        let hist: Vec<u64> = other
+            .bin_shares(n_bins)
+            .iter()
+            .map(|s| (s * 1e7).round() as u64)
+            .collect();
+        assert!(m.jsd_vs_histogram(&hist) > 0.05);
+    }
+
+    #[test]
+    fn jsd_empty_histogram_is_max() {
+        assert_eq!(fraudish().jsd_vs_histogram(&[0; 10]), 1.0);
+    }
+
+    #[test]
+    fn prop_cdf_in_unit_interval_and_monotone() {
+        prop::check(100, |g| {
+            let m = BetaMixture::from_params(
+                g.f64(0.0..1.0),
+                g.f64(0.3..10.0),
+                g.f64(0.3..10.0),
+                g.f64(0.3..10.0),
+                g.f64(0.3..10.0),
+            )
+            .unwrap();
+            let a = g.f64(0.0..1.0);
+            let b = g.f64(0.0..1.0);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let (cl, ch) = (m.cdf(lo), m.cdf(hi));
+            prop_assert!((0.0..=1.0).contains(&cl), "cdf out of range");
+            prop_assert!(ch >= cl - 1e-12, "cdf not monotone");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantile_grid_monotone() {
+        prop::check(30, |g| {
+            let m = BetaMixture::from_params(
+                g.f64(0.001..0.3),
+                g.f64(0.5..4.0),
+                g.f64(5.0..40.0),
+                g.f64(2.0..10.0),
+                g.f64(0.5..4.0),
+            )
+            .unwrap();
+            let grid = m.quantile_grid(129);
+            for w in grid.windows(2) {
+                prop_assert!(w[1] > w[0], "grid not strictly increasing");
+            }
+            Ok(())
+        });
+    }
+}

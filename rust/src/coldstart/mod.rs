@@ -1,0 +1,12 @@
+//! The cold-start problem (paper Section 2.4): serving a brand-new
+//! client with no historical data by deriving a *default* quantile
+//! transformation from a bimodal Beta mixture fitted to the training
+//! score distribution (Eqs. 6-8).
+
+pub mod beta;
+pub mod fit;
+pub mod mixture;
+
+pub use beta::Beta;
+pub use fit::{fit_mixture, FitConfig, MixtureFit};
+pub use mixture::BetaMixture;

@@ -1,0 +1,11 @@
+//! Declarative configuration: the YAML-subset parser and the typed,
+//! validated schema for routing (paper Fig. 2), predictors and the
+//! server.
+
+pub mod schema;
+pub mod yaml;
+
+pub use schema::{
+    Condition, Intent, MuseConfig, PredictorConfig, QuantileMode, RoutingConfig, ScoringRule,
+    ServerConfig, ShadowRule,
+};

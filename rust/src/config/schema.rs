@@ -1,0 +1,474 @@
+//! Typed configuration schema: the declarative routing config of
+//! paper Fig. 2 plus predictor and server definitions, parsed from the
+//! YAML subset (`yaml.rs`) or JSON and validated up front so the hot
+//! path never sees malformed config.
+
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+
+/// Request metadata evaluated by routing conditions. This is the
+/// client's *intent* — never a model name (Section 2.5.1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Intent {
+    pub tenant: String,
+    pub geography: String,
+    pub schema: String,
+    pub channel: String,
+}
+
+/// A routing condition; empty fields are wildcards. A condition with
+/// all fields empty is the catch-all (`condition: {}`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Condition {
+    pub tenants: Vec<String>,
+    pub geographies: Vec<String>,
+    pub schemas: Vec<String>,
+    pub channels: Vec<String>,
+}
+
+impl Condition {
+    pub fn matches(&self, intent: &Intent) -> bool {
+        let hit = |allow: &[String], v: &str| allow.is_empty() || allow.iter().any(|a| a == v);
+        hit(&self.tenants, &intent.tenant)
+            && hit(&self.geographies, &intent.geography)
+            && hit(&self.schemas, &intent.schema)
+            && hit(&self.channels, &intent.channel)
+    }
+
+    pub fn is_catch_all(&self) -> bool {
+        self.tenants.is_empty()
+            && self.geographies.is_empty()
+            && self.schemas.is_empty()
+            && self.channels.is_empty()
+    }
+
+    fn from_json(v: &Json) -> Result<Condition> {
+        let get_list = |key: &str| -> Result<Vec<String>> {
+            match v.get(key) {
+                None => Ok(vec![]),
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(|i| {
+                        i.as_str()
+                            .map(str::to_string)
+                            .with_context(|| format!("condition.{key} entries must be strings"))
+                    })
+                    .collect(),
+                Some(_) => bail!("condition.{key} must be a list"),
+            }
+        };
+        Ok(Condition {
+            tenants: get_list("tenants")?,
+            geographies: get_list("geographies")?,
+            schemas: get_list("schemas")?,
+            channels: get_list("channels")?,
+        })
+    }
+}
+
+/// Scoring rule: evaluated sequentially; the first match selects the
+/// *live* predictor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoringRule {
+    pub description: String,
+    pub condition: Condition,
+    pub target_predictor: String,
+}
+
+/// Shadow rule: evaluated in parallel; every match mirrors the request
+/// to additional predictors whose responses go to the data lake.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShadowRule {
+    pub description: String,
+    pub condition: Condition,
+    pub target_predictors: Vec<String>,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoutingConfig {
+    pub scoring_rules: Vec<ScoringRule>,
+    pub shadow_rules: Vec<ShadowRule>,
+}
+
+/// How a predictor's quantile transformation is initialised.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantileMode {
+    /// Cold-start default: Beta-mixture prior fitted on the training
+    /// score distribution (Section 2.4).
+    Default,
+    /// Identity map (testing / raw passthrough — the Fig. 4
+    /// "predictor raw" baseline).
+    Identity,
+    /// Custom, fitted per tenant from live scores (installed via the
+    /// control plane; configs may also pre-declare it).
+    Custom,
+}
+
+/// Declarative predictor definition (the `p = <M, A, T^Q>` tuple of
+/// Section 2.2.2, by reference to the artifact manifest's models).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictorConfig {
+    pub name: String,
+    /// Expert model names, resolved against the artifact manifest.
+    pub experts: Vec<String>,
+    /// Aggregation weights (defaults to uniform).
+    pub weights: Vec<f64>,
+    pub quantile_mode: QuantileMode,
+    /// Reference distribution name ("fraud-default" | "uniform").
+    pub reference: String,
+    /// Apply posterior correction before aggregation (Eq. 3); single
+    /// models skip it per the paper unless forced.
+    pub posterior_correction: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    pub listen_addr: String,
+    pub workers: usize,
+    /// Dynamic batcher: max events per batch (must be one of the AOT
+    /// batch variants) and max queueing delay in microseconds.
+    pub max_batch: usize,
+    pub max_batch_delay_us: u64,
+    pub warmup_requests: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen_addr: "127.0.0.1:7461".to_string(),
+            workers: 4,
+            max_batch: 64,
+            max_batch_delay_us: 500,
+            warmup_requests: 200,
+        }
+    }
+}
+
+/// Top-level MUSE configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MuseConfig {
+    pub routing: RoutingConfig,
+    pub predictors: Vec<PredictorConfig>,
+    pub server: ServerConfig,
+}
+
+impl MuseConfig {
+    /// Parse + validate from YAML text.
+    pub fn from_yaml(text: &str) -> Result<MuseConfig> {
+        let v = super::yaml::parse(text)?;
+        MuseConfig::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<MuseConfig> {
+        let routing = match v.get("routing") {
+            Some(r) => parse_routing(r)?,
+            None => RoutingConfig::default(),
+        };
+        let mut predictors = vec![];
+        if let Some(Json::Arr(items)) = v.get("predictors") {
+            for p in items {
+                predictors.push(parse_predictor(p)?);
+            }
+        }
+        let server = match v.get("server") {
+            Some(s) => parse_server(s)?,
+            None => ServerConfig::default(),
+        };
+        let cfg = MuseConfig {
+            routing,
+            predictors,
+            server,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation: every routed predictor must exist, the
+    /// catch-all (if any) must be last, weights arity must match.
+    pub fn validate(&self) -> Result<()> {
+        let names: Vec<&str> = self.predictors.iter().map(|p| p.name.as_str()).collect();
+        {
+            let mut sorted = names.clone();
+            sorted.sort_unstable();
+            for w in sorted.windows(2) {
+                ensure!(w[0] != w[1], "duplicate predictor name '{}'", w[0]);
+            }
+        }
+        for p in &self.predictors {
+            ensure!(!p.experts.is_empty(), "predictor '{}' has no experts", p.name);
+            ensure!(
+                p.weights.len() == p.experts.len(),
+                "predictor '{}': {} weights for {} experts",
+                p.name,
+                p.weights.len(),
+                p.experts.len()
+            );
+            ensure!(
+                p.weights.iter().all(|w| *w >= 0.0 && w.is_finite())
+                    && p.weights.iter().sum::<f64>() > 0.0,
+                "predictor '{}': invalid weights",
+                p.name
+            );
+        }
+        for (i, rule) in self.routing.scoring_rules.iter().enumerate() {
+            ensure!(
+                names.contains(&rule.target_predictor.as_str()),
+                "scoring rule {} targets unknown predictor '{}'",
+                i,
+                rule.target_predictor
+            );
+            if rule.condition.is_catch_all() {
+                ensure!(
+                    i == self.routing.scoring_rules.len() - 1,
+                    "catch-all scoring rule must be last (rule {i} shadows later rules)"
+                );
+            }
+        }
+        for (i, rule) in self.routing.shadow_rules.iter().enumerate() {
+            for t in &rule.target_predictors {
+                ensure!(
+                    names.contains(&t.as_str()),
+                    "shadow rule {i} targets unknown predictor '{t}'"
+                );
+            }
+        }
+        ensure!(self.server.workers >= 1, "server.workers must be >= 1");
+        ensure!(self.server.max_batch >= 1, "server.max_batch must be >= 1");
+        Ok(())
+    }
+}
+
+fn parse_routing(v: &Json) -> Result<RoutingConfig> {
+    let mut scoring_rules = vec![];
+    if let Some(Json::Arr(rules)) = v.get("scoringRules") {
+        for r in rules {
+            scoring_rules.push(ScoringRule {
+                description: r.get("description").and_then(Json::as_str).unwrap_or("").to_string(),
+                condition: Condition::from_json(r.get("condition").unwrap_or(&Json::Null))?,
+                target_predictor: r
+                    .req_str("targetPredictorName")
+                    .context("scoring rule missing targetPredictorName")?
+                    .to_string(),
+            });
+        }
+    }
+    let mut shadow_rules = vec![];
+    if let Some(Json::Arr(rules)) = v.get("shadowRules") {
+        for r in rules {
+            let targets = match r.get("targetPredictorNames") {
+                Some(Json::Arr(ts)) => ts
+                    .iter()
+                    .map(|t| {
+                        t.as_str()
+                            .map(str::to_string)
+                            .context("targetPredictorNames must be strings")
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                _ => bail!("shadow rule missing targetPredictorNames"),
+            };
+            shadow_rules.push(ShadowRule {
+                description: r.get("description").and_then(Json::as_str).unwrap_or("").to_string(),
+                condition: Condition::from_json(r.get("condition").unwrap_or(&Json::Null))?,
+                target_predictors: targets,
+            });
+        }
+    }
+    Ok(RoutingConfig {
+        scoring_rules,
+        shadow_rules,
+    })
+}
+
+fn parse_predictor(v: &Json) -> Result<PredictorConfig> {
+    let name = v.req_str("name")?.to_string();
+    let experts: Vec<String> = match v.get("experts") {
+        Some(Json::Arr(es)) => es
+            .iter()
+            .map(|e| {
+                e.as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("predictor '{name}': experts must be strings"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        _ => bail!("predictor '{name}' missing experts list"),
+    };
+    let weights = match v.get("weights") {
+        Some(w) => w
+            .to_f64_vec()
+            .with_context(|| format!("predictor '{name}': weights must be numbers"))?,
+        None => vec![1.0; experts.len()],
+    };
+    let quantile_mode = match v.get("quantile").and_then(Json::as_str).unwrap_or("default") {
+        "default" => QuantileMode::Default,
+        "identity" | "raw" => QuantileMode::Identity,
+        "custom" => QuantileMode::Custom,
+        other => bail!("predictor '{name}': unknown quantile mode '{other}'"),
+    };
+    let reference = v
+        .get("reference")
+        .and_then(Json::as_str)
+        .unwrap_or("fraud-default")
+        .to_string();
+    let posterior_correction = v
+        .get("posteriorCorrection")
+        .and_then(Json::as_bool)
+        .unwrap_or(experts.len() > 1); // paper: ensembles only, by default
+    Ok(PredictorConfig {
+        name,
+        experts,
+        weights,
+        quantile_mode,
+        reference,
+        posterior_correction,
+    })
+}
+
+fn parse_server(v: &Json) -> Result<ServerConfig> {
+    let d = ServerConfig::default();
+    Ok(ServerConfig {
+        listen_addr: v
+            .get("listenAddr")
+            .and_then(Json::as_str)
+            .unwrap_or(&d.listen_addr)
+            .to_string(),
+        workers: v.get("workers").and_then(Json::as_usize).unwrap_or(d.workers),
+        max_batch: v.get("maxBatch").and_then(Json::as_usize).unwrap_or(d.max_batch),
+        max_batch_delay_us: v
+            .get("maxBatchDelayUs")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.max_batch_delay_us),
+        warmup_requests: v
+            .get("warmupRequests")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.warmup_requests),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+routing:
+  scoringRules:
+  - description: "Custom DAG for bank1"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "bank1-v1"
+  - description: "Default DAG"
+    condition: {}
+    targetPredictorName: "global-v3"
+  shadowRules:
+  - description: "Shadow v2 for bank1"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorNames: ["bank1-v2"]
+predictors:
+- name: bank1-v1
+  experts: [m1, m2]
+  weights: [1.0, 1.0]
+  quantile: custom
+- name: bank1-v2
+  experts: [m1, m2, m3]
+  quantile: default
+- name: global-v3
+  experts: [m1]
+  quantile: default
+server:
+  workers: 8
+  maxBatch: 64
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = MuseConfig::from_yaml(FULL).unwrap();
+        assert_eq!(cfg.routing.scoring_rules.len(), 2);
+        assert_eq!(cfg.routing.shadow_rules.len(), 1);
+        assert_eq!(cfg.predictors.len(), 3);
+        assert_eq!(cfg.server.workers, 8);
+        // Uniform default weights.
+        assert_eq!(cfg.predictors[1].weights, vec![1.0, 1.0, 1.0]);
+        // Ensembles get posterior correction by default, singles don't.
+        assert!(cfg.predictors[0].posterior_correction);
+        assert!(!cfg.predictors[2].posterior_correction);
+    }
+
+    #[test]
+    fn condition_matching() {
+        let c = Condition {
+            tenants: vec!["bank1".into()],
+            geographies: vec![],
+            schemas: vec!["fraud_v1".into()],
+            channels: vec![],
+        };
+        let mut intent = Intent {
+            tenant: "bank1".into(),
+            schema: "fraud_v1".into(),
+            ..Intent::default()
+        };
+        assert!(c.matches(&intent));
+        intent.schema = "fraud_v2".into();
+        assert!(!c.matches(&intent));
+        intent.schema = "fraud_v1".into();
+        intent.tenant = "bank2".into();
+        assert!(!c.matches(&intent));
+        assert!(Condition::default().matches(&intent)); // catch-all
+    }
+
+    #[test]
+    fn rejects_unknown_predictor_target() {
+        let bad = FULL.replace("targetPredictorName: \"global-v3\"", "targetPredictorName: \"nope\"");
+        assert!(MuseConfig::from_yaml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_catch_all_before_end() {
+        let src = r#"
+routing:
+  scoringRules:
+  - description: "catch all first"
+    condition: {}
+    targetPredictorName: "a"
+  - description: "never reached"
+    condition:
+      tenants: ["x"]
+    targetPredictorName: "a"
+predictors:
+- name: a
+  experts: [m1]
+"#;
+        let err = MuseConfig::from_yaml(src).unwrap_err().to_string();
+        assert!(err.contains("catch-all"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_predictors() {
+        let src = "predictors:\n- name: a\n  experts: [m1]\n- name: a\n  experts: [m2]\n";
+        assert!(MuseConfig::from_yaml(src).is_err());
+    }
+
+    #[test]
+    fn rejects_weight_arity_mismatch() {
+        let src = "predictors:\n- name: a\n  experts: [m1, m2]\n  weights: [1.0]\n";
+        assert!(MuseConfig::from_yaml(src).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_quantile_mode() {
+        let src = "predictors:\n- name: a\n  experts: [m1]\n  quantile: sideways\n";
+        assert!(MuseConfig::from_yaml(src).is_err());
+    }
+
+    #[test]
+    fn empty_config_is_valid() {
+        let cfg = MuseConfig::from_yaml("").unwrap();
+        assert!(cfg.routing.scoring_rules.is_empty());
+        assert_eq!(cfg.server.workers, ServerConfig::default().workers);
+    }
+
+    #[test]
+    fn shadow_rule_requires_targets() {
+        let src = "routing:\n  shadowRules:\n  - description: x\n    condition: {}\n";
+        assert!(MuseConfig::from_yaml(src).is_err());
+    }
+}

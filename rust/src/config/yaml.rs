@@ -1,0 +1,460 @@
+//! A from-scratch YAML-subset parser for MUSE's declarative routing
+//! configuration (paper Fig. 2). No `serde_yaml` exists in the offline
+//! crate universe, and the config language only needs a disciplined
+//! subset:
+//!
+//! * block mappings + block sequences with 2-space-ish indentation,
+//! * inline (flow) sequences `["a", "b"]` and the empty map `{}`,
+//! * scalars: double/single-quoted strings, bare strings, integers,
+//!   floats, booleans, null,
+//! * `#` comments and blank lines.
+//!
+//! The parse result is the crate's own `Json` value tree, so the
+//! config schema layer shares accessors with the JSON manifest.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parse a YAML-subset document into a `Json` tree.
+pub fn parse(input: &str) -> Result<Json> {
+    let lines = logical_lines(input);
+    if lines.is_empty() {
+        return Ok(Json::Obj(BTreeMap::new()));
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        bail!(
+            "yaml: trailing content at line {} ('{}')",
+            lines[pos].number,
+            lines[pos].text
+        );
+    }
+    Ok(v)
+}
+
+#[derive(Debug, Clone)]
+struct Line {
+    indent: usize,
+    text: String, // content after indentation, comments stripped
+    number: usize,
+}
+
+fn logical_lines(input: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw) in input.lines().enumerate() {
+        let without_comment = strip_comment(raw);
+        let trimmed_end = without_comment.trim_end();
+        if trimmed_end.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+        if trimmed_end.trim_start().starts_with('\t') {
+            // Keep the error story simple: tabs are not allowed.
+            continue;
+        }
+        out.push(Line {
+            indent,
+            text: trimmed_end.trim_start().to_string(),
+            number: i + 1,
+        });
+    }
+    out
+}
+
+/// Strip a `#` comment unless it is inside a quoted string.
+fn strip_comment(line: &str) -> String {
+    let mut in_double = false;
+    let mut in_single = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !in_single && !prev_escape => in_double = !in_double,
+            '\'' if !in_double => in_single = !in_single,
+            '#' if !in_double && !in_single => {
+                // YAML requires '#' to start a comment at line start or
+                // after whitespace.
+                if i == 0 || line[..i].ends_with(' ') {
+                    return line[..i].to_string();
+                }
+            }
+            _ => {}
+        }
+        prev_escape = c == '\\' && in_double && !prev_escape;
+    }
+    line.to_string()
+}
+
+/// Parse a block (mapping or sequence) at the given indentation.
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json> {
+    if *pos >= lines.len() {
+        return Ok(Json::Null);
+    }
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_sequence(lines, pos, indent)
+    } else {
+        parse_mapping(lines, pos, indent)
+    }
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            bail!("yaml line {}: unexpected indent in sequence", line.number);
+        }
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // Item body is the following deeper block.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Json::Null);
+            }
+        } else if let Some((key, val)) = split_key(&rest) {
+            // "- key: value" starts an inline mapping whose remaining
+            // keys sit deeper than the dash.
+            let mut map = BTreeMap::new();
+            insert_entry(&mut map, key, val, lines, pos, indent + 2)?;
+            while *pos < lines.len() && lines[*pos].indent > indent {
+                let child = &lines[*pos];
+                let (k, v) = split_key(&child.text)
+                    .ok_or_else(|| anyhow!("yaml line {}: expected 'key:'", child.number))?;
+                let child_indent = child.indent;
+                *pos += 1;
+                insert_entry(&mut map, k, v, lines, pos, child_indent)?;
+            }
+            items.push(Json::Obj(map));
+        } else {
+            items.push(parse_scalar(&rest)?);
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            bail!("yaml line {}: unexpected indent in mapping", line.number);
+        }
+        if line.text.starts_with("- ") || line.text == "-" {
+            break;
+        }
+        let (key, val) = split_key(&line.text)
+            .ok_or_else(|| anyhow!("yaml line {}: expected 'key:' got '{}'", line.number, line.text))?;
+        *pos += 1;
+        insert_entry(&mut map, key, val, lines, pos, indent)?;
+    }
+    Ok(Json::Obj(map))
+}
+
+fn insert_entry(
+    map: &mut BTreeMap<String, Json>,
+    key: String,
+    inline_val: Option<String>,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+) -> Result<()> {
+    let value = match inline_val {
+        Some(v) => parse_scalar(&v)?,
+        None => {
+            // Nested block (deeper indent) or empty value.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                parse_block(lines, pos, child_indent)?
+            } else if *pos < lines.len()
+                && lines[*pos].indent == indent
+                && (lines[*pos].text.starts_with("- ") || lines[*pos].text == "-")
+            {
+                // Sequences are commonly written at the same indent as
+                // their key.
+                parse_sequence(lines, pos, indent)?
+            } else {
+                Json::Null
+            }
+        }
+    };
+    map.insert(key, value);
+    Ok(())
+}
+
+/// Split "key: value" / "key:" into (key, Some(value)/None).
+/// Returns None when the text is not a mapping entry.
+fn split_key(text: &str) -> Option<(String, Option<String>)> {
+    // Find the first ':' outside quotes followed by space/end.
+    let mut in_double = false;
+    let mut in_single = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' if !in_single => in_double = !in_double,
+            '\'' if !in_double => in_single = !in_single,
+            ':' if !in_double && !in_single => {
+                let after = &text[i + 1..];
+                if after.is_empty() {
+                    return Some((unquote_key(&text[..i]), None));
+                }
+                if after.starts_with(' ') {
+                    let v = after.trim();
+                    return Some((
+                        unquote_key(&text[..i]),
+                        if v.is_empty() { None } else { Some(v.to_string()) },
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote_key(k: &str) -> String {
+    let k = k.trim();
+    if (k.starts_with('"') && k.ends_with('"') && k.len() >= 2)
+        || (k.starts_with('\'') && k.ends_with('\'') && k.len() >= 2)
+    {
+        k[1..k.len() - 1].to_string()
+    } else {
+        k.to_string()
+    }
+}
+
+/// Parse a scalar or flow collection.
+fn parse_scalar(text: &str) -> Result<Json> {
+    let t = text.trim();
+    if t == "{}" {
+        return Ok(Json::Obj(BTreeMap::new()));
+    }
+    if t == "[]" {
+        return Ok(Json::Arr(vec![]));
+    }
+    if t.starts_with('[') && t.ends_with(']') {
+        return parse_flow_seq(t);
+    }
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Json::Str(unescape_double(&t[1..t.len() - 1])));
+    }
+    if t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2 {
+        return Ok(Json::Str(t[1..t.len() - 1].replace("''", "'")));
+    }
+    match t {
+        "null" | "~" | "Null" | "NULL" => return Ok(Json::Null),
+        "true" | "True" | "TRUE" => return Ok(Json::Bool(true)),
+        "false" | "False" | "FALSE" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<f64>() {
+        if !t.is_empty() && t != "." && !t.starts_with('+') {
+            return Ok(Json::Num(n));
+        }
+    }
+    Ok(Json::Str(t.to_string()))
+}
+
+fn parse_flow_seq(t: &str) -> Result<Json> {
+    let inner = &t[1..t.len() - 1];
+    let mut items = Vec::new();
+    let mut depth = 0;
+    let mut in_double = false;
+    let mut in_single = false;
+    let mut start = 0;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' if !in_single => in_double = !in_double,
+            '\'' if !in_double => in_single = !in_single,
+            '[' if !in_double && !in_single => depth += 1,
+            ']' if !in_double && !in_single => depth -= 1,
+            ',' if depth == 0 && !in_double && !in_single => {
+                let piece = inner[start..i].trim();
+                if !piece.is_empty() {
+                    items.push(parse_scalar(piece)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let piece = inner[start..].trim();
+    if !piece.is_empty() {
+        items.push(parse_scalar(piece)?);
+    }
+    Ok(Json::Arr(items))
+}
+
+fn unescape_double(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_fig2_config() {
+        let src = r#"
+routing:
+  scoringRules:
+  - description: "Custom DAG for bank1"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "bank1-predictor-v1"
+  - description: "Custom DAG for tenants in US or LATAM, using schema v1"
+    condition:
+      geographies: ["NAMER", "LATAM"]
+      schemas: ["fraud_v1"]
+    targetPredictorName: "america-predictor-v1"
+  - description: "Default DAG for cold start clients"
+    condition: {}   # Catch-all
+    targetPredictorName: "global-predictor-v3"
+  shadowRules:
+  - description: "Evaluate predictor v2 in shadow mode for bank1"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorNames: ["bank1-predictor-v2"]
+"#;
+        let v = parse(src).unwrap();
+        let routing = v.get("routing").unwrap();
+        let rules = routing.get("scoringRules").unwrap().as_arr().unwrap();
+        assert_eq!(rules.len(), 3);
+        assert_eq!(
+            rules[0].get("targetPredictorName").unwrap().as_str(),
+            Some("bank1-predictor-v1")
+        );
+        assert_eq!(
+            rules[0]
+                .get("condition")
+                .unwrap()
+                .get("tenants")
+                .unwrap()
+                .as_arr()
+                .unwrap()[0]
+                .as_str(),
+            Some("bank1")
+        );
+        // Catch-all condition is an empty map.
+        assert_eq!(rules[2].get("condition").unwrap().as_obj().unwrap().len(), 0);
+        let shadows = routing.get("shadowRules").unwrap().as_arr().unwrap();
+        assert_eq!(shadows.len(), 1);
+        assert_eq!(
+            shadows[0].get("targetPredictorNames").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn scalars() {
+        let v = parse("a: 1\nb: 2.5\nc: true\nd: null\ne: bare string\nf: \"q\"\n").unwrap();
+        assert_eq!(v.req_f64("a").unwrap(), 1.0);
+        assert_eq!(v.req_f64("b").unwrap(), 2.5);
+        assert_eq!(v.get("c").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("d"), Some(&Json::Null));
+        assert_eq!(v.req_str("e").unwrap(), "bare string");
+        assert_eq!(v.req_str("f").unwrap(), "q");
+    }
+
+    #[test]
+    fn flow_sequences() {
+        let v = parse("xs: [1, 2, 3]\nys: [\"a\", 'b', c]\nempty: []\n").unwrap();
+        assert_eq!(v.get("xs").unwrap().to_f64_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+        let ys = v.get("ys").unwrap().as_arr().unwrap();
+        assert_eq!(ys[2].as_str(), Some("c"));
+        assert_eq!(v.get("empty").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn nested_blocks() {
+        let src = "outer:\n  middle:\n    inner: 7\n  other: x\n";
+        let v = parse(src).unwrap();
+        assert_eq!(
+            v.get("outer").unwrap().get("middle").unwrap().req_f64("inner").unwrap(),
+            7.0
+        );
+        assert_eq!(v.get("outer").unwrap().req_str("other").unwrap(), "x");
+    }
+
+    #[test]
+    fn block_sequence_of_scalars() {
+        let src = "items:\n- one\n- two\n- 3\n";
+        let v = parse(src).unwrap();
+        let items = v.get("items").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0].as_str(), Some("one"));
+        assert_eq!(items[2].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let src = "# full comment\na: 1  # trailing\n\nb: \"#notcomment\"\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.req_f64("a").unwrap(), 1.0);
+        assert_eq!(v.req_str("b").unwrap(), "#notcomment");
+    }
+
+    #[test]
+    fn empty_document() {
+        let v = parse("   \n# only comments\n").unwrap();
+        assert_eq!(v.as_obj().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn sequence_items_with_nested_maps() {
+        let src = "rules:\n- name: a\n  weight: 1.5\n- name: b\n  weight: 2\n";
+        let v = parse(src).unwrap();
+        let rules = v.get("rules").unwrap().as_arr().unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[1].req_str("name").unwrap(), "b");
+        assert_eq!(rules[1].req_f64("weight").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn rejects_bad_indent() {
+        assert!(parse("a:\n  b: 1\n   c: 2\n").is_err());
+    }
+
+    #[test]
+    fn single_quote_escape() {
+        let v = parse("s: 'it''s'\n").unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "it's");
+    }
+
+    #[test]
+    fn deeper_sequence_under_key() {
+        let src = "k:\n  - 1\n  - 2\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("k").unwrap().to_f64_vec().unwrap(), vec![1.0, 2.0]);
+    }
+}

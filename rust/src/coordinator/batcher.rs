@@ -1,0 +1,302 @@
+//! Dynamic batching: concurrent single-event requests to the same
+//! predictor are coalesced into one batched inference call (amortising
+//! the PJRT dispatch overhead), bounded by a max batch size and a max
+//! queueing delay so tail latency stays inside the SLO.
+//!
+//! The paper's serving layer gets its throughput from Triton-side
+//! batching; here the coordinator owns it, which also exercises the
+//! AOT batch variants (1/16/64/256) produced by the compile path.
+
+use super::predictor::Predictor;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+struct Pending {
+    features: Vec<f32>,
+    tenant: String,
+    reply: mpsc::SyncSender<Result<(f64, f64)>>, // (final, raw)
+}
+
+/// A dynamic batcher bound to one predictor.
+pub struct Batcher {
+    queue_tx: mpsc::Sender<Pending>,
+    worker: Option<thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<Mutex<BatcherStats>>,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+/// Rolling batcher statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BatcherStats {
+    pub batches: u64,
+    pub events: u64,
+}
+
+impl Batcher {
+    pub fn new(predictor: Arc<Predictor>, max_batch: usize, max_delay: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = Arc::clone(&shutdown);
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let stats_w = Arc::clone(&stats);
+        let worker = thread::Builder::new()
+            .name(format!("batcher-{}", predictor.name))
+            .spawn(move || batcher_main(predictor, rx, stop, max_batch, max_delay, stats_w))
+            .expect("spawn batcher");
+        Batcher {
+            queue_tx: tx,
+            worker: Some(worker),
+            shutdown,
+            stats,
+            max_batch,
+            max_delay,
+        }
+    }
+
+    /// Batching effectiveness so far (batches vs events coalesced).
+    pub fn stats(&self) -> BatcherStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Submit one event; blocks until its batch completes.
+    pub fn score(&self, features: Vec<f32>, tenant: &str) -> Result<(f64, f64)> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.queue_tx
+            .send(Pending {
+                features,
+                tenant: tenant.to_string(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("batcher has shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("batcher dropped the reply"))?
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the worker's recv with a sentinel-free approach:
+        // dropping the sender closes the channel.
+        let (dead_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.queue_tx, dead_tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batcher_main(
+    predictor: Arc<Predictor>,
+    rx: mpsc::Receiver<Pending>,
+    shutdown: Arc<AtomicBool>,
+    max_batch: usize,
+    max_delay: Duration,
+    stats: Arc<Mutex<BatcherStats>>,
+) {
+    let d = predictor.feature_dim();
+    loop {
+        // Block for the first event of a batch.
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => return, // all senders gone
+        };
+        let deadline = Instant::now() + max_delay;
+        let mut batch = vec![first];
+        // Fill until the deadline or the batch limit.
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => batch.push(p),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            for p in batch {
+                let _ = p.reply.send(Err(anyhow!("batcher shutting down")));
+            }
+            return;
+        }
+        // Group by tenant (T^Q is tenant-specific) while keeping one
+        // inference call for the whole batch: run raw once, then apply
+        // each tenant's transform.
+        let n = batch.len();
+        let mut features = Vec::with_capacity(n * d);
+        let mut ok = true;
+        for p in &batch {
+            if p.features.len() != d {
+                ok = false;
+            }
+            features.extend_from_slice(&p.features);
+        }
+        if !ok {
+            for p in batch {
+                let msg = if p.features.len() != d {
+                    Err(anyhow!("bad feature dim"))
+                } else {
+                    Err(anyhow!("batch rejected (peer had bad feature dim)"))
+                };
+                let _ = p.reply.send(msg);
+            }
+            continue;
+        }
+        match predictor.score_raw(&features, n) {
+            Ok(raw) => {
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.batches += 1;
+                    s.events += n as u64;
+                }
+                // One inference call for the mixed-tenant batch, then
+                // each event gets its own tenant's T^Q (Section 2.3.3:
+                // the mapping is tenant-specific).
+                for (p, &r) in batch.iter().zip(&raw) {
+                    let final_score = predictor.apply_quantile(r, &p.tenant);
+                    let _ = p.reply.send(Ok((final_score, r)));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for p in batch {
+                    let _ = p.reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MuseConfig, QuantileMode, PredictorConfig};
+    use crate::coordinator::registry::PredictorRegistry;
+    use crate::runtime::{Manifest, ModelPool};
+    use crate::transforms::QuantileMap;
+    use std::path::PathBuf;
+
+    fn predictor() -> Option<Arc<Predictor>> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let reg = PredictorRegistry::new(Arc::new(ModelPool::new(
+            Manifest::load(root).unwrap(),
+        )));
+        reg.deploy(
+            &PredictorConfig {
+                name: "p".into(),
+                experts: vec!["m1".into(), "m2".into()],
+                weights: vec![1.0, 1.0],
+                quantile_mode: QuantileMode::Identity,
+                reference: "fraud-default".into(),
+                posterior_correction: true,
+            },
+            QuantileMap::identity(33).unwrap().shared(),
+        )
+        .unwrap();
+        let _ = MuseConfig::default();
+        reg.get("p").map(|p| {
+            // Leak the registry so containers outlive this scope.
+            std::mem::forget(reg);
+            p
+        })
+    }
+
+    #[test]
+    fn concurrent_requests_are_coalesced() {
+        let Some(p) = predictor() else { return };
+        let d = p.feature_dim();
+        let b = Arc::new(Batcher::new(
+            Arc::clone(&p),
+            64,
+            Duration::from_millis(5),
+        ));
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                let b = Arc::clone(&b);
+                thread::spawn(move || {
+                    let feats = vec![0.01 * i as f32; d];
+                    b.score(feats, "t").unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let (fin, raw) = h.join().unwrap();
+            assert!((0.0..=1.0).contains(&fin));
+            assert!((fin - raw).abs() < 1e-9); // identity T^Q
+        }
+        let s = b.stats();
+        assert_eq!(s.events, 32);
+        assert!(
+            s.batches < 32,
+            "expected coalescing, got {} batches for {} events",
+            s.batches,
+            s.events
+        );
+    }
+
+    #[test]
+    fn batched_results_match_direct_scoring() {
+        let Some(p) = predictor() else { return };
+        let d = p.feature_dim();
+        let b = Batcher::new(Arc::clone(&p), 16, Duration::from_millis(1));
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..10 {
+            let feats: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let (fin, raw) = b.score(feats.clone(), "t").unwrap();
+            let direct = p.score(&feats, 1, "t").unwrap();
+            assert!((fin - direct.scores[0]).abs() < 1e-9);
+            assert!((raw - direct.raw[0]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn per_tenant_transform_in_mixed_batch() {
+        let Some(p) = predictor() else { return };
+        let d = p.feature_dim();
+        p.install_tenant_quantile(
+            "vip",
+            QuantileMap::new(vec![0.0, 1.0], vec![0.9, 1.0]).unwrap().shared(),
+        );
+        let b = Arc::new(Batcher::new(Arc::clone(&p), 8, Duration::from_millis(20)));
+        let b1 = Arc::clone(&b);
+        let h1 = thread::spawn(move || b1.score(vec![0.0; d], "vip").unwrap());
+        let b2 = Arc::clone(&b);
+        let h2 = thread::spawn(move || b2.score(vec![0.0; d], "normal").unwrap());
+        let (vip, _) = h1.join().unwrap();
+        let (normal, _) = h2.join().unwrap();
+        assert!(vip >= 0.9, "vip transform not applied: {vip}");
+        assert!(normal < 0.9, "normal tenant got vip transform: {normal}");
+    }
+
+    #[test]
+    fn bad_feature_dim_is_rejected() {
+        let Some(p) = predictor() else { return };
+        let b = Batcher::new(Arc::clone(&p), 4, Duration::from_millis(1));
+        assert!(b.score(vec![0.0; 3], "t").is_err());
+    }
+
+    #[test]
+    fn max_delay_bounds_queueing() {
+        let Some(p) = predictor() else { return };
+        let d = p.feature_dim();
+        let b = Batcher::new(Arc::clone(&p), 1024, Duration::from_millis(10));
+        // A single request must not wait for a full batch: total time
+        // stays near max_delay + inference, far under a second.
+        let t0 = Instant::now();
+        b.score(vec![0.0; d], "t").unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+}

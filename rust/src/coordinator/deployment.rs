@@ -1,0 +1,413 @@
+//! The control plane: the model lifecycle of paper Fig. 3 as
+//! first-class operations — all server-side, zero client interaction
+//! (Section 2.5.1's "client-free intervention" list).
+//!
+//! * `fit_default_quantile` — cold-start `T^Q_{v0}` from the Beta-
+//!   mixture prior (Section 2.4).
+//! * `fit_custom_quantile` — tenant-specific `T^Q_{v1}` from live
+//!   (unlabeled) scores, gated by the Eq. 5 sample-size bound.
+//! * `shadow_deploy` — deploy a predictor + shadow rule (validation
+//!   against live traffic without affecting responses).
+//! * `validate_shadow` — distribution-stability check of the shadow's
+//!   scores against the target reference.
+//! * `promote` — atomically swap the live scoring rule to the shadow
+//!   (transparent model switching), and `decommission` the old one.
+
+use super::engine::Engine;
+use crate::config::{Condition, PredictorConfig, ScoringRule, ShadowRule};
+use crate::coldstart::{fit_mixture, FitConfig};
+use crate::transforms::{quantile_fit, QuantileMap, ReferenceDistribution};
+use crate::util::dataset::Dataset;
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// Validation report for a shadow predictor (Section 3.1: "deployed in
+/// shadow mode for validation").
+#[derive(Debug, Clone)]
+pub struct ShadowValidation {
+    pub predictor: String,
+    pub tenant: String,
+    pub samples: usize,
+    /// Max absolute per-bin deviation (share) vs the target reference.
+    pub max_bin_deviation: f64,
+    pub pass: bool,
+}
+
+pub struct ControlPlane<'e> {
+    pub engine: &'e Engine,
+}
+
+impl<'e> ControlPlane<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        ControlPlane { engine }
+    }
+
+    /// Cold start (Section 2.4): score the experts' combined training
+    /// data through the predictor's raw pipeline, fit the bimodal Beta
+    /// mixture (Eqs. 6-8) as a smooth stand-in for `S`, and install
+    /// `T^Q_{v0}` = (mixture quantiles -> reference quantiles) as the
+    /// predictor's default transformation.
+    pub fn fit_default_quantile(
+        &self,
+        predictor: &str,
+        training: &Dataset,
+        reference: &ReferenceDistribution,
+        fit_cfg: &FitConfig,
+    ) -> Result<Arc<QuantileMap>> {
+        let p = self.engine.predictor(predictor)?;
+        let raw = p
+            .score_raw(&training.features, training.n)
+            .context("score training pool")?;
+        let w = training.positive_rate();
+        let fit = fit_mixture(&raw, w, fit_cfg).context("beta-mixture fit")?;
+        let n_points = self.engine.quantile_points;
+        let src = fit.mixture.quantile_grid(n_points);
+        let refq = reference.quantile_grid(n_points);
+        let map = QuantileMap::new(src, refq)?.shared();
+        p.set_default_quantile(Arc::clone(&map));
+        Ok(map)
+    }
+
+    /// Custom per-tenant fit (Section 2.3.3): read the tenant's raw
+    /// scores for `predictor` from the data lake, check the Eq. 5
+    /// volume gate, fit empirical source quantiles against the
+    /// reference, and install atomically.
+    pub fn fit_custom_quantile(
+        &self,
+        predictor: &str,
+        tenant: &str,
+        reference: &ReferenceDistribution,
+        alert_rate: f64,
+        delta: f64,
+        z: f64,
+    ) -> Result<Arc<QuantileMap>> {
+        let raw = self.engine.lake.raw_scores(tenant, predictor);
+        let n_points = self.engine.quantile_points;
+        let refq = reference.quantile_grid(n_points);
+        let map = quantile_fit::fit_gated(&raw, &refq, alert_rate, delta, z)?.shared();
+        self.engine
+            .predictor(predictor)?
+            .install_tenant_quantile(tenant, Arc::clone(&map));
+        Ok(map)
+    }
+
+    /// Install a pre-fitted custom transformation directly (offline
+    /// fits; used by the harnesses).
+    pub fn install_custom_quantile(
+        &self,
+        predictor: &str,
+        tenant: &str,
+        map: Arc<QuantileMap>,
+    ) -> Result<()> {
+        self.engine
+            .predictor(predictor)?
+            .install_tenant_quantile(tenant, map);
+        Ok(())
+    }
+
+    /// Deploy `cfg` and mirror `tenant`'s traffic to it (Fig. 3 step:
+    /// "deployed in shadow mode").
+    pub fn shadow_deploy(
+        &self,
+        cfg: &PredictorConfig,
+        tenant: &str,
+        quantile: Arc<QuantileMap>,
+    ) -> Result<()> {
+        self.engine.registry.deploy(cfg, quantile)?;
+        let mut routing = self.engine.router.snapshot().as_ref().clone();
+        routing.shadow_rules.push(ShadowRule {
+            description: format!("shadow {} for {tenant}", cfg.name),
+            condition: Condition {
+                tenants: vec![tenant.to_string()],
+                ..Condition::default()
+            },
+            target_predictors: vec![cfg.name.clone()],
+        });
+        self.engine.router.swap(routing);
+        Ok(())
+    }
+
+    /// Validate a shadow predictor's score distribution against the
+    /// target reference: max per-bin share deviation <= `tolerance`.
+    pub fn validate_shadow(
+        &self,
+        predictor: &str,
+        tenant: &str,
+        reference: &ReferenceDistribution,
+        min_samples: usize,
+        tolerance: f64,
+    ) -> Result<ShadowValidation> {
+        let scores = self.engine.lake.final_scores(tenant, predictor);
+        ensure!(
+            scores.len() >= min_samples,
+            "shadow '{predictor}' has only {} samples (need {min_samples})",
+            scores.len()
+        );
+        let n_bins = 10;
+        let counts = crate::util::stats::bin_counts(&scores, n_bins);
+        let target = reference.bin_shares(n_bins);
+        let total: u64 = counts.iter().sum();
+        let max_bin_deviation = counts
+            .iter()
+            .zip(&target)
+            .map(|(&c, &t)| (c as f64 / total as f64 - t).abs())
+            .fold(0.0f64, f64::max);
+        Ok(ShadowValidation {
+            predictor: predictor.to_string(),
+            tenant: tenant.to_string(),
+            samples: scores.len(),
+            max_bin_deviation,
+            pass: max_bin_deviation <= tolerance,
+        })
+    }
+
+    /// Promote `new_predictor` to live for `tenant`: rewrite the
+    /// tenant's scoring rule (first match) to target it and drop its
+    /// shadow rules. A single server-side config change — "the
+    /// transition is transparent from the client's perspective".
+    pub fn promote(&self, tenant: &str, new_predictor: &str) -> Result<()> {
+        ensure!(
+            self.engine.registry.get(new_predictor).is_some(),
+            "cannot promote undeployed predictor '{new_predictor}'"
+        );
+        let mut routing = self.engine.router.snapshot().as_ref().clone();
+        let intent = crate::config::Intent {
+            tenant: tenant.to_string(),
+            ..Default::default()
+        };
+        let mut rewritten = false;
+        for rule in routing.scoring_rules.iter_mut() {
+            if rule.condition.matches(&intent) {
+                // If the tenant currently rides a broad rule, give it
+                // a dedicated rule instead of hijacking the broad one.
+                if rule.condition.tenants == vec![tenant.to_string()] {
+                    rule.target_predictor = new_predictor.to_string();
+                } else {
+                    routing.scoring_rules.insert(
+                        0,
+                        ScoringRule {
+                            description: format!("promoted {new_predictor} for {tenant}"),
+                            condition: Condition {
+                                tenants: vec![tenant.to_string()],
+                                ..Condition::default()
+                            },
+                            target_predictor: new_predictor.to_string(),
+                        },
+                    );
+                }
+                rewritten = true;
+                break;
+            }
+        }
+        ensure!(rewritten, "no scoring rule matches tenant '{tenant}'");
+        routing
+            .shadow_rules
+            .retain(|r| !r.target_predictors.contains(&new_predictor.to_string()));
+        self.engine.router.swap(routing);
+        Ok(())
+    }
+
+    /// Decommission a predictor (Fig. 3 final step): remove any rules
+    /// referencing it, then release its containers.
+    pub fn decommission(&self, predictor: &str) -> Result<()> {
+        let mut routing = self.engine.router.snapshot().as_ref().clone();
+        routing
+            .scoring_rules
+            .retain(|r| r.target_predictor != predictor);
+        for rule in routing.shadow_rules.iter_mut() {
+            rule.target_predictors.retain(|t| t != predictor);
+        }
+        routing.shadow_rules.retain(|r| !r.target_predictors.is_empty());
+        self.engine.router.swap(routing);
+        self.engine.drop_batcher(predictor);
+        self.engine.registry.decommission(predictor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Intent, MuseConfig, QuantileMode};
+    use crate::coordinator::engine::ScoreRequest;
+    use crate::runtime::{Manifest, ModelPool};
+    use std::path::PathBuf;
+
+    const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 v1"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "p1"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p1"
+predictors:
+- name: p1
+  experts: [m1, m2]
+  quantile: identity
+"#;
+
+    fn engine() -> Option<Engine> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let pool = Arc::new(ModelPool::new(Manifest::load(root).unwrap()));
+        Some(Engine::build(&MuseConfig::from_yaml(CONFIG).unwrap(), pool).unwrap())
+    }
+
+    fn p2_cfg() -> PredictorConfig {
+        PredictorConfig {
+            name: "p2".into(),
+            experts: vec!["m1".into(), "m2".into(), "m3".into()],
+            weights: vec![1.0; 3],
+            quantile_mode: QuantileMode::Identity,
+            reference: "fraud-default".into(),
+            posterior_correction: true,
+        }
+    }
+
+    fn drive_traffic(engine: &Engine, n: usize, seed: u64) {
+        let d = engine.predictor("p1").unwrap().feature_dim();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        for i in 0..n {
+            let req = ScoreRequest {
+                intent: Intent {
+                    tenant: "bank1".into(),
+                    ..Intent::default()
+                },
+                entity: format!("e{i}"),
+                features: (0..d).map(|_| rng.normal() as f32).collect(),
+            };
+            engine.score(&req).unwrap();
+        }
+        engine.drain_shadows();
+    }
+
+    #[test]
+    fn full_fig3_lifecycle() {
+        let Some(engine) = engine() else { return };
+        let cp = ControlPlane::new(&engine);
+        let idq = QuantileMap::identity(33).unwrap().shared();
+
+        // 1. shadow deploy p2 for bank1.
+        cp.shadow_deploy(&p2_cfg(), "bank1", idq).unwrap();
+        assert_eq!(engine.registry.stats().predictors, 2);
+
+        // 2. traffic flows: live to p1, mirrored to p2.
+        drive_traffic(&engine, 64, 1);
+        assert_eq!(engine.lake.raw_scores("bank1", "p2").len(), 64);
+
+        // 3. promote p2 to live; shadow rule dropped.
+        cp.promote("bank1", "p2").unwrap();
+        let res = engine
+            .router
+            .resolve(&Intent {
+                tenant: "bank1".into(),
+                ..Intent::default()
+            })
+            .unwrap();
+        assert_eq!(res.live, "p2");
+        assert!(res.shadows.is_empty());
+
+        // 4. decommission p1 — its rules go away; other tenants now
+        //    route via remaining rules.
+        cp.decommission("p1").unwrap();
+        assert!(engine.registry.get("p1").is_none());
+        // Shared containers m1, m2 survive for p2 (+ m3).
+        assert_eq!(engine.registry.stats().pool.live_containers, 3);
+        // bank1 still served, zero downtime.
+        drive_traffic_p2(&engine);
+    }
+
+    fn drive_traffic_p2(engine: &Engine) {
+        let d = engine.predictor("p2").unwrap().feature_dim();
+        let req = ScoreRequest {
+            intent: Intent {
+                tenant: "bank1".into(),
+                ..Intent::default()
+            },
+            entity: "e".into(),
+            features: vec![0.0; d],
+        };
+        assert!(engine.score(&req).is_ok());
+    }
+
+    #[test]
+    fn custom_fit_gated_by_eq5() {
+        let Some(engine) = engine() else { return };
+        let cp = ControlPlane::new(&engine);
+        drive_traffic(&engine, 50, 2);
+        let reference = ReferenceDistribution::fraud_default();
+        // 50 samples is far below the Eq. 5 requirement at a=1%.
+        let err = cp
+            .fit_custom_quantile("p1", "bank1", &reference, 0.01, 0.2, 1.96)
+            .unwrap_err();
+        assert!(err.to_string().contains("Eq.5"), "{err}");
+        // With a lax gate it fits and installs.
+        drive_traffic(&engine, 1100, 3);
+        cp.fit_custom_quantile("p1", "bank1", &reference, 0.5, 0.5, 1.0)
+            .unwrap();
+        assert!(engine.predictor("p1").unwrap().has_tenant_quantile("bank1"));
+    }
+
+    #[test]
+    fn promote_unknown_predictor_fails() {
+        let Some(engine) = engine() else { return };
+        let cp = ControlPlane::new(&engine);
+        assert!(cp.promote("bank1", "ghost").is_err());
+    }
+
+    #[test]
+    fn promote_on_broad_rule_inserts_dedicated_rule() {
+        let Some(engine) = engine() else { return };
+        let cp = ControlPlane::new(&engine);
+        cp.shadow_deploy(&p2_cfg(), "otherbank", QuantileMap::identity(3).unwrap().shared())
+            .unwrap();
+        // otherbank currently matches only the catch-all.
+        cp.promote("otherbank", "p2").unwrap();
+        let res = engine
+            .router
+            .resolve(&Intent {
+                tenant: "otherbank".into(),
+                ..Intent::default()
+            })
+            .unwrap();
+        assert_eq!(res.live, "p2");
+        // bank1 unaffected.
+        let res = engine
+            .router
+            .resolve(&Intent {
+                tenant: "bank1".into(),
+                ..Intent::default()
+            })
+            .unwrap();
+        assert_eq!(res.live, "p1");
+    }
+
+    #[test]
+    fn shadow_validation_reports_deviation() {
+        let Some(engine) = engine() else { return };
+        let cp = ControlPlane::new(&engine);
+        cp.shadow_deploy(&p2_cfg(), "bank1", QuantileMap::identity(33).unwrap().shared())
+            .unwrap();
+        drive_traffic(&engine, 200, 4);
+        let reference = ReferenceDistribution::fraud_default();
+        let v = cp
+            .validate_shadow("p2", "bank1", &reference, 100, 0.5)
+            .unwrap();
+        assert_eq!(v.samples, 200);
+        assert!(v.max_bin_deviation >= 0.0);
+        // Identity transform on raw fraud scores concentrates in bin 0
+        // (~98% legit) vs target ~70%: deviation ~0.3 => tolerant pass,
+        // strict fail.
+        let strict = cp
+            .validate_shadow("p2", "bank1", &reference, 100, 0.05)
+            .unwrap();
+        assert!(!strict.pass, "identity shadow should fail strict validation");
+        // Not enough samples is an error.
+        assert!(cp.validate_shadow("p2", "bank1", &reference, 10_000, 0.5).is_err());
+    }
+}

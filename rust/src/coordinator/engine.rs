@@ -1,0 +1,382 @@
+//! The serving engine: the stateless orchestration layer of Fig. 1.
+//!
+//! One `score()` call runs the full request path: intent routing ->
+//! feature-store enrichment -> predictor DAG (expert inference on the
+//! shared containers, `T^C`, `A`, tenant-specific `T^Q`) -> response,
+//! while mirroring the request to every matching shadow predictor
+//! asynchronously (shadow latency never blocks the live response) and
+//! recording scores to the data lake.
+
+use super::batcher::Batcher;
+use super::predictor::Predictor;
+use super::registry::PredictorRegistry;
+use super::router::{Resolution, Router};
+use std::collections::HashMap;
+use std::sync::RwLock;
+use std::time::Duration;
+use crate::config::{Intent, MuseConfig, QuantileMode};
+use crate::datalake::DataLake;
+use crate::featurestore::FeatureStore;
+use crate::metrics::{Counters, LatencyHistogram};
+use crate::runtime::ModelPool;
+use crate::transforms::{QuantileMap, ReferenceDistribution};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One scoring request (the client payload).
+#[derive(Debug, Clone)]
+pub struct ScoreRequest {
+    pub intent: Intent,
+    /// Entity key for feature-store enrichment (e.g. card hash).
+    pub entity: String,
+    /// Payload features; enriched up to the model dim if partial.
+    pub features: Vec<f32>,
+}
+
+/// The client-visible response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreResponse {
+    pub score: f64,
+    pub predictor: String,
+    /// Number of shadow predictors the request was mirrored to.
+    pub shadow_count: usize,
+}
+
+pub struct Engine {
+    pub router: Router,
+    pub registry: PredictorRegistry,
+    pub features: FeatureStore,
+    pub lake: Arc<DataLake>,
+    shadow_pool: ThreadPool,
+    /// Per-predictor dynamic batchers (lazy): concurrent single-event
+    /// requests coalesce into one PJRT call — batch-256 inference is
+    /// ~80x cheaper per event than batch-1 (see EXPERIMENTS.md §Perf).
+    batchers: RwLock<HashMap<String, Arc<Batcher>>>,
+    max_batch: usize,
+    max_batch_delay: Duration,
+    pub live_latency: LatencyHistogram,
+    pub counters: Counters,
+    /// Quantile grid resolution (from the manifest).
+    pub quantile_points: usize,
+}
+
+impl Engine {
+    /// Build the engine from a validated config and a model pool.
+    /// Predictors with `quantile: default` get the cold-start
+    /// transformation installed by the control plane afterwards
+    /// (`ControlPlane::fit_default_quantile`); they start at identity.
+    pub fn build(config: &MuseConfig, pool: Arc<ModelPool>) -> Result<Engine> {
+        config.validate()?;
+        let quantile_points = pool.manifest().quantile_points;
+        let registry = PredictorRegistry::new(pool);
+        for pc in &config.predictors {
+            let initial: Arc<QuantileMap> = match pc.quantile_mode {
+                QuantileMode::Identity | QuantileMode::Custom | QuantileMode::Default => {
+                    QuantileMap::identity(quantile_points.max(2))?.shared()
+                }
+            };
+            registry
+                .deploy(pc, initial)
+                .with_context(|| format!("deploy predictor '{}'", pc.name))?;
+        }
+        Ok(Engine {
+            router: Router::new(config.routing.clone()),
+            registry,
+            features: FeatureStore::new(),
+            lake: Arc::new(DataLake::new()),
+            shadow_pool: ThreadPool::new(2.max(config.server.workers / 2)),
+            batchers: RwLock::new(HashMap::new()),
+            max_batch: config.server.max_batch,
+            max_batch_delay: Duration::from_micros(config.server.max_batch_delay_us),
+            live_latency: LatencyHistogram::new(),
+            counters: Counters::new(),
+            quantile_points,
+        })
+    }
+
+    /// The lazily-created dynamic batcher for a predictor.
+    fn batcher_for(&self, name: &str) -> Result<Arc<Batcher>> {
+        if let Some(b) = self.batchers.read().unwrap().get(name) {
+            return Ok(Arc::clone(b));
+        }
+        let mut map = self.batchers.write().unwrap();
+        if let Some(b) = map.get(name) {
+            return Ok(Arc::clone(b));
+        }
+        let p = self
+            .registry
+            .get(name)
+            .with_context(|| format!("routed to undeployed predictor '{name}'"))?;
+        let b = Arc::new(Batcher::new(p, self.max_batch, self.max_batch_delay));
+        map.insert(name.to_string(), Arc::clone(&b));
+        Ok(b)
+    }
+
+    /// Drop a predictor's batcher (called on decommission so the
+    /// batcher's `Arc<Predictor>` does not outlive the registry entry).
+    pub fn drop_batcher(&self, name: &str) {
+        self.batchers.write().unwrap().remove(name);
+    }
+
+    /// Look up the reference distribution named in a predictor config.
+    pub fn reference(name: &str) -> ReferenceDistribution {
+        match name {
+            "uniform" => ReferenceDistribution::uniform(),
+            _ => ReferenceDistribution::fraud_default(),
+        }
+    }
+
+    /// Score one event end to end (the hot path).
+    pub fn score(&self, req: &ScoreRequest) -> Result<ScoreResponse> {
+        let t0 = Instant::now();
+        let resolution = self.router.resolve(&req.intent)?;
+        let live = self
+            .registry
+            .get(&resolution.live)
+            .with_context(|| format!("routed to undeployed predictor '{}'", resolution.live))?;
+        let enriched = self
+            .features
+            .enrich(&req.entity, &req.features, live.feature_dim())?;
+        // Hot path goes through the per-predictor dynamic batcher:
+        // concurrent requests share one PJRT call; T^Q stays
+        // per-tenant (applied post-aggregation inside the batcher).
+        let (score, raw) = self
+            .batcher_for(&resolution.live)?
+            .score(enriched, &req.intent.tenant)?;
+        self.lake
+            .append(&req.intent.tenant, &live.name, score, raw, false);
+
+        // Mirror to shadows off the hot path.
+        let shadow_count = resolution.shadows.len();
+        self.dispatch_shadows(&resolution, &req.intent.tenant, &req.entity, &req.features);
+
+        self.live_latency.record(t0.elapsed().as_nanos() as u64);
+        self.counters.inc("requests_live");
+        Ok(ScoreResponse {
+            score,
+            predictor: resolution.live.clone(),
+            shadow_count,
+        })
+    }
+
+    fn dispatch_shadows(
+        &self,
+        resolution: &Resolution,
+        tenant: &str,
+        entity: &str,
+        payload: &[f32],
+    ) {
+        for shadow_name in &resolution.shadows {
+            let Some(shadow) = self.registry.get(shadow_name) else {
+                self.counters.inc("shadow_missing_predictor");
+                continue;
+            };
+            let enriched = match self.features.enrich(entity, payload, shadow.feature_dim()) {
+                Ok(e) => e,
+                Err(_) => {
+                    self.counters.inc("shadow_enrich_error");
+                    continue;
+                }
+            };
+            // Shadows share the model containers with live traffic, so
+            // they go through the same dynamic batcher — unbatched
+            // shadow calls on a wide ensemble would otherwise starve
+            // the live path (§Perf step 3 in EXPERIMENTS.md).
+            let Ok(batcher) = self.batcher_for(shadow_name) else {
+                self.counters.inc("shadow_missing_predictor");
+                continue;
+            };
+            let lake = Arc::clone(&self.lake);
+            let tenant = tenant.to_string();
+            let name = shadow.name.clone();
+            self.shadow_pool.execute(move || {
+                if let Ok((score, raw)) = batcher.score(enriched, &tenant) {
+                    lake.append(&tenant, &name, score, raw, true);
+                }
+            });
+        }
+    }
+
+    /// Block until all queued shadow work has drained (tests/harness).
+    pub fn drain_shadows(&self) {
+        self.shadow_pool.wait_idle();
+    }
+
+    /// Batched replay of a feature matrix through a predictor
+    /// (harness path: Figs. 4/6, quantile fitting, calibration).
+    /// Returns (final_scores, raw_scores).
+    pub fn score_matrix(
+        &self,
+        predictor: &str,
+        features: &[f32],
+        n: usize,
+        tenant: &str,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let p = self
+            .registry
+            .get(predictor)
+            .with_context(|| format!("unknown predictor '{predictor}'"))?;
+        let batch = p.score(features, n, tenant)?;
+        Ok((batch.scores, batch.raw))
+    }
+
+    pub fn predictor(&self, name: &str) -> Result<Arc<Predictor>> {
+        self.registry
+            .get(name)
+            .with_context(|| format!("unknown predictor '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 custom"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "p1"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "global"
+  shadowRules:
+  - description: "shadow p2 for bank1"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorNames: ["p2"]
+predictors:
+- name: p1
+  experts: [m1, m2]
+  quantile: identity
+- name: p2
+  experts: [m1, m2, m3]
+  quantile: identity
+- name: global
+  experts: [m1]
+  quantile: identity
+server:
+  workers: 4
+"#;
+
+    fn engine() -> Option<Engine> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let pool = Arc::new(ModelPool::new(Manifest::load(root).unwrap()));
+        let cfg = MuseConfig::from_yaml(CONFIG).unwrap();
+        Some(Engine::build(&cfg, pool).unwrap())
+    }
+
+    fn req(tenant: &str, d: usize, seed: u64) -> ScoreRequest {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        ScoreRequest {
+            intent: Intent {
+                tenant: tenant.into(),
+                ..Intent::default()
+            },
+            entity: format!("e{seed}"),
+            features: (0..d).map(|_| rng.normal() as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn live_and_shadow_paths() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("p1").unwrap().feature_dim();
+        let r = engine.score(&req("bank1", d, 1)).unwrap();
+        assert_eq!(r.predictor, "p1");
+        assert_eq!(r.shadow_count, 1);
+        assert!((0.0..=1.0).contains(&r.score));
+        engine.drain_shadows();
+        // Live record + shadow record in the lake.
+        assert_eq!(engine.lake.raw_scores("bank1", "p1").len(), 1);
+        assert_eq!(engine.lake.raw_scores("bank1", "p2").len(), 1);
+        let counts = engine.lake.counts();
+        assert_eq!(counts[&("bank1".into(), "p2".into(), true)], 1);
+    }
+
+    #[test]
+    fn catch_all_tenant_has_no_shadows() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("global").unwrap().feature_dim();
+        let r = engine.score(&req("newclient", d, 2)).unwrap();
+        assert_eq!(r.predictor, "global");
+        assert_eq!(r.shadow_count, 0);
+    }
+
+    #[test]
+    fn shadow_scores_differ_from_live_but_share_input() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("p1").unwrap().feature_dim();
+        for s in 0..16 {
+            engine.score(&req("bank1", d, 100 + s)).unwrap();
+        }
+        engine.drain_shadows();
+        let live = engine.lake.raw_scores("bank1", "p1");
+        let shadow = engine.lake.raw_scores("bank1", "p2");
+        assert_eq!(live.len(), 16);
+        assert_eq!(shadow.len(), 16);
+        // p2 adds m3, so raw scores differ (almost surely).
+        let diffs = live
+            .iter()
+            .zip(&shadow)
+            .filter(|(a, b)| (*a - *b).abs() > 1e-9)
+            .count();
+        assert!(diffs > 0, "shadow identical to live");
+    }
+
+    #[test]
+    fn partial_payload_is_enriched() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("global").unwrap().feature_dim();
+        engine.features.put("card-7", vec![0.5; d]);
+        let mut r = req("x", d / 2, 3); // half payload
+        r.entity = "card-7".into();
+        let resp = engine.score(&r).unwrap();
+        assert!((0.0..=1.0).contains(&resp.score));
+    }
+
+    #[test]
+    fn latency_is_recorded() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("global").unwrap().feature_dim();
+        for s in 0..8 {
+            engine.score(&req("t", d, 200 + s)).unwrap();
+        }
+        assert_eq!(engine.live_latency.count(), 8);
+        assert!(engine.live_latency.percentile_ns(50.0) > 0);
+        assert_eq!(engine.counters.get("requests_live"), 8);
+    }
+
+    #[test]
+    fn score_matrix_batches() {
+        let Some(engine) = engine() else { return };
+        let p = engine.predictor("p1").unwrap();
+        let d = p.feature_dim();
+        let mut rng = crate::util::rng::Rng::new(4);
+        let n = 100;
+        let feats: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let (scores, raw) = engine.score_matrix("p1", &feats, n, "t").unwrap();
+        assert_eq!(scores.len(), n);
+        assert_eq!(raw.len(), n);
+        // Identity T^Q: final == raw.
+        for (s, r) in scores.iter().zip(&raw) {
+            assert!((s - r).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn unknown_tenant_routes_to_catch_all_not_error() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("global").unwrap().feature_dim();
+        assert!(engine.score(&req("anyone", d, 5)).is_ok());
+    }
+}

@@ -1,0 +1,20 @@
+//! The MUSE coordinator — the paper's system contribution (L3):
+//! intent routing, the predictor abstraction, the shared-container
+//! registry, dynamic batching, the serving engine and the control
+//! plane implementing the Fig. 3 model lifecycle.
+
+pub mod batcher;
+pub mod deployment;
+pub mod engine;
+pub mod predictor;
+pub mod registry;
+pub mod router;
+pub mod warmup;
+
+pub use batcher::{Batcher, BatcherStats};
+pub use deployment::{ControlPlane, ShadowValidation};
+pub use engine::{Engine, ScoreRequest, ScoreResponse};
+pub use predictor::{ExpertSlot, Predictor, ScoreBatch};
+pub use registry::{PredictorRegistry, RegistryStats};
+pub use router::{Resolution, Router};
+pub use warmup::{warm_up, WarmupReport};

@@ -1,0 +1,332 @@
+//! The runtime *predictor* — the paper's core abstraction
+//! (Section 2.2): `p = <M, A, T^Q>` where `M` is the expert set (with
+//! per-expert Posterior Corrections `T^C_k`), `A` the aggregation and
+//! `T^Q` the quantile mapping. Equation 2:
+//!
+//! `y = T^Q( A( [T^C_k(m_k(x))] ) )`
+//!
+//! A predictor *references* shared model containers (it never owns
+//! them); its quantile mapping is **tenant-specific** (Section 2.3.3)
+//! with a default used until a custom fit is installed. Transform
+//! state is hot-swappable behind `RwLock` so the control plane can
+//! promote new transformations with zero downtime.
+
+use crate::runtime::ModelHandle;
+use crate::transforms::{Aggregation, PosteriorCorrection, QuantileMap};
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// One expert slot: a shared model container + its `T^C_k`.
+pub struct ExpertSlot {
+    pub handle: ModelHandle,
+    pub correction: Option<PosteriorCorrection>,
+}
+
+/// The result of scoring a batch through a predictor.
+#[derive(Debug, Clone)]
+pub struct ScoreBatch {
+    /// Business-ready scores (post `T^Q`).
+    pub scores: Vec<f64>,
+    /// Aggregated, calibrated scores (pre `T^Q`) — recorded to the
+    /// data lake for quantile fitting.
+    pub raw: Vec<f64>,
+}
+
+pub struct Predictor {
+    pub name: String,
+    experts: Vec<ExpertSlot>,
+    aggregation: Aggregation,
+    /// Default `T^Q` (cold-start or config-provided).
+    default_quantile: RwLock<Arc<QuantileMap>>,
+    /// Tenant-specific `T^Q`s installed by the control plane.
+    tenant_quantile: RwLock<HashMap<String, Arc<QuantileMap>>>,
+    feature_dim: usize,
+}
+
+impl Predictor {
+    pub fn new(
+        name: impl Into<String>,
+        experts: Vec<ExpertSlot>,
+        aggregation: Aggregation,
+        default_quantile: Arc<QuantileMap>,
+    ) -> Result<Predictor> {
+        let name = name.into();
+        ensure!(!experts.is_empty(), "predictor '{name}' needs >= 1 expert");
+        if let Some(arity) = aggregation.arity() {
+            ensure!(
+                arity == experts.len(),
+                "predictor '{name}': aggregation arity {arity} != {} experts",
+                experts.len()
+            );
+        }
+        let feature_dim = experts[0].handle.feature_dim;
+        ensure!(
+            experts.iter().all(|e| e.handle.feature_dim == feature_dim),
+            "predictor '{name}': experts disagree on feature_dim"
+        );
+        Ok(Predictor {
+            name,
+            experts,
+            aggregation,
+            default_quantile: RwLock::new(default_quantile),
+            tenant_quantile: RwLock::new(HashMap::new()),
+            feature_dim,
+        })
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    pub fn expert_names(&self) -> Vec<String> {
+        self.experts.iter().map(|e| e.handle.name.clone()).collect()
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Install a tenant-specific quantile transformation (the paper's
+    /// "custom transformation" promotion, Section 3.1). Takes effect
+    /// atomically for subsequent requests.
+    pub fn install_tenant_quantile(&self, tenant: &str, map: Arc<QuantileMap>) {
+        self.tenant_quantile
+            .write()
+            .unwrap()
+            .insert(tenant.to_string(), map);
+    }
+
+    /// Replace the default quantile transformation.
+    pub fn set_default_quantile(&self, map: Arc<QuantileMap>) {
+        *self.default_quantile.write().unwrap() = map;
+    }
+
+    /// Whether `tenant` has a custom transformation installed.
+    pub fn has_tenant_quantile(&self, tenant: &str) -> bool {
+        self.tenant_quantile.read().unwrap().contains_key(tenant)
+    }
+
+    /// Apply the tenant's `T^Q` to an already-aggregated raw score
+    /// (used by the dynamic batcher, which runs inference once for a
+    /// mixed-tenant batch and then transforms per tenant).
+    pub fn apply_quantile(&self, raw: f64, tenant: &str) -> f64 {
+        self.quantile_for(tenant).apply(raw)
+    }
+
+    fn quantile_for(&self, tenant: &str) -> Arc<QuantileMap> {
+        if let Some(m) = self.tenant_quantile.read().unwrap().get(tenant) {
+            return Arc::clone(m);
+        }
+        Arc::clone(&self.default_quantile.read().unwrap())
+    }
+
+    /// Score `n` events for `tenant` (Eq. 2 end to end).
+    pub fn score(&self, features: &[f32], n: usize, tenant: &str) -> Result<ScoreBatch> {
+        let raw = self.score_raw(features, n)?;
+        let q = self.quantile_for(tenant);
+        let scores = raw.iter().map(|&s| q.apply(s)).collect();
+        Ok(ScoreBatch { scores, raw })
+    }
+
+    /// The pre-`T^Q` pipeline: expert inference -> `T^C` -> `A`.
+    /// Exposed for quantile fitting (which needs the source
+    /// distribution) and the Fig. 4 "raw" baseline.
+    pub fn score_raw(&self, features: &[f32], n: usize) -> Result<Vec<f64>> {
+        ensure!(
+            features.len() == n * self.feature_dim,
+            "predictor '{}': got {} floats for {n} events of dim {}",
+            self.name,
+            features.len(),
+            self.feature_dim
+        );
+        if n == 0 {
+            return Ok(vec![]);
+        }
+        // Expert inference fans out to all containers concurrently —
+        // they are independent threads, so the per-event service time
+        // is the max over experts rather than the sum (§Perf in
+        // EXPERIMENTS.md: this halved ensemble latency on the 2-core
+        // testbed and cut the saturated p99 tail).
+        let tickets: Vec<_> = self
+            .experts
+            .iter()
+            .map(|e| e.handle.infer_async(features, n))
+            .collect::<Result<Vec<_>>>()?;
+        let mut expert_scores: Vec<Vec<f32>> = Vec::with_capacity(self.experts.len());
+        for (t, e) in tickets.into_iter().zip(&self.experts) {
+            expert_scores.push(
+                t.wait()
+                    .with_context(|| format!("expert '{}' inference", e.handle.name))?,
+            );
+        }
+        // T^C then A, per event.
+        let k = self.experts.len();
+        let mut calibrated = vec![0.0f64; k];
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            for (j, e) in self.experts.iter().enumerate() {
+                let s = expert_scores[j][i] as f64;
+                calibrated[j] = match &e.correction {
+                    Some(c) => c.apply(s),
+                    None => s,
+                };
+            }
+            out.push(self.aggregation.apply_unchecked(&calibrated));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, ModelPool};
+    use crate::transforms::ReferenceDistribution;
+    use std::path::PathBuf;
+
+    fn pool() -> Option<Arc<ModelPool>> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Arc::new(ModelPool::new(Manifest::load(root).unwrap())))
+    }
+
+    fn ensemble(pool: &ModelPool, models: &[&str]) -> Predictor {
+        let experts: Vec<ExpertSlot> = models
+            .iter()
+            .map(|m| {
+                let handle = pool.acquire(m).unwrap();
+                let beta = handle.beta;
+                ExpertSlot {
+                    handle,
+                    correction: Some(PosteriorCorrection::new(beta).unwrap()),
+                }
+            })
+            .collect();
+        let k = experts.len();
+        Predictor::new(
+            format!("test-{}", models.join("-")),
+            experts,
+            Aggregation::weighted(vec![1.0; k]).unwrap(),
+            QuantileMap::identity(101).unwrap().shared(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn scores_are_bounded_and_deterministic() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1", "m2"]);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let d = p.feature_dim();
+        let features: Vec<f32> = (0..8 * d).map(|_| rng.normal() as f32).collect();
+        let a = p.score(&features, 8, "bank1").unwrap();
+        let b = p.score(&features, 8, "bank1").unwrap();
+        assert_eq!(a.scores, b.scores);
+        for s in &a.scores {
+            assert!((0.0..=1.0).contains(s));
+        }
+        assert_eq!(a.raw.len(), 8);
+    }
+
+    #[test]
+    fn posterior_correction_deflates_raw_scores() {
+        let Some(pool) = pool() else { return };
+        // Same model with and without correction: corrected aggregate
+        // must be <= uncorrected (scores deflate towards the true
+        // posterior under beta < 1).
+        let with = ensemble(&pool, &["m3"]);
+        let without = Predictor::new(
+            "no-pc",
+            vec![ExpertSlot {
+                handle: pool.acquire("m3").unwrap(),
+                correction: None,
+            }],
+            Aggregation::Identity,
+            QuantileMap::identity(101).unwrap().shared(),
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::new(2);
+        let d = with.feature_dim();
+        let features: Vec<f32> = (0..16 * d).map(|_| rng.normal() as f32).collect();
+        let c = with.score_raw(&features, 16).unwrap();
+        let u = without.score_raw(&features, 16).unwrap();
+        for (ci, ui) in c.iter().zip(&u) {
+            assert!(ci <= ui, "corrected {ci} > uncorrected {ui}");
+        }
+    }
+
+    #[test]
+    fn tenant_specific_quantile_overrides_default() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1"]);
+        let refd = ReferenceDistribution::fraud_default();
+        // Custom map that pushes everything to ~1.
+        let custom = QuantileMap::new(vec![0.0, 1.0], vec![0.99, 1.0]).unwrap().shared();
+        p.install_tenant_quantile("bank1", custom);
+        let d = p.feature_dim();
+        let features = vec![0.1f32; d];
+        let bank1 = p.score(&features, 1, "bank1").unwrap();
+        let other = p.score(&features, 1, "bank2").unwrap();
+        assert!(bank1.scores[0] >= 0.99);
+        assert!(other.scores[0] < 0.99); // identity default
+        assert!(p.has_tenant_quantile("bank1"));
+        assert!(!p.has_tenant_quantile("bank2"));
+        let _ = refd;
+    }
+
+    #[test]
+    fn quantile_swap_is_live() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1"]);
+        let d = p.feature_dim();
+        let features = vec![0.0f32; d];
+        let before = p.score(&features, 1, "t").unwrap().scores[0];
+        p.set_default_quantile(
+            QuantileMap::new(vec![0.0, 1.0], vec![0.5, 1.0]).unwrap().shared(),
+        );
+        let after = p.score(&features, 1, "t").unwrap().scores[0];
+        assert!(after >= 0.5);
+        assert!(before < 0.5);
+    }
+
+    #[test]
+    fn raw_equals_transformed_under_identity() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1", "m2", "m3"]);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let d = p.feature_dim();
+        let features: Vec<f32> = (0..4 * d).map(|_| rng.normal() as f32).collect();
+        let batch = p.score(&features, 4, "t").unwrap();
+        for (s, r) in batch.scores.iter().zip(&batch.raw) {
+            assert!((s - r).abs() < 1e-9, "identity T^Q must not change scores");
+        }
+    }
+
+    #[test]
+    fn feature_len_validation() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1"]);
+        assert!(p.score(&[0.0; 3], 1, "t").is_err());
+        assert_eq!(p.score(&[], 0, "t").unwrap().scores.len(), 0);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected_at_build() {
+        let Some(pool) = pool() else { return };
+        let experts = vec![ExpertSlot {
+            handle: pool.acquire("m1").unwrap(),
+            correction: None,
+        }];
+        let r = Predictor::new(
+            "bad",
+            experts,
+            Aggregation::weighted(vec![1.0, 1.0]).unwrap(),
+            QuantileMap::identity(3).unwrap().shared(),
+        );
+        assert!(r.is_err());
+    }
+}

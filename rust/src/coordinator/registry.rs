@@ -1,0 +1,234 @@
+//! The predictor registry: deploys/decommissions predictors against
+//! the shared model-container pool, maintaining the predictor<->model
+//! reference graph that realises the paper's infrastructure
+//! deduplication (Section 2.2.1): "a single model deployment can be
+//! referenced by hundreds of predictors".
+
+use super::predictor::{ExpertSlot, Predictor};
+use crate::config::PredictorConfig;
+use crate::runtime::{ModelPool, PoolStats};
+use crate::transforms::{Aggregation, PosteriorCorrection, QuantileMap};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+pub struct PredictorRegistry {
+    pool: Arc<ModelPool>,
+    predictors: RwLock<HashMap<String, Arc<Predictor>>>,
+}
+
+/// Registry + pool occupancy, for the dedup accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistryStats {
+    pub predictors: usize,
+    /// Sum over predictors of their expert counts ("logical models").
+    pub model_references: usize,
+    /// Live physical containers (deduplicated).
+    pub pool: PoolStats,
+}
+
+impl PredictorRegistry {
+    pub fn new(pool: Arc<ModelPool>) -> Self {
+        PredictorRegistry {
+            pool,
+            predictors: RwLock::new(HashMap::new()),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<ModelPool> {
+        &self.pool
+    }
+
+    /// Deploy a predictor from config with an explicit initial `T^Q`.
+    /// Acquires (or reuses) one container per expert; on any failure,
+    /// already-acquired references are released (no leaks).
+    pub fn deploy(&self, cfg: &PredictorConfig, quantile: Arc<QuantileMap>) -> Result<()> {
+        if self.predictors.read().unwrap().contains_key(&cfg.name) {
+            bail!("predictor '{}' is already deployed", cfg.name);
+        }
+        let mut experts = Vec::with_capacity(cfg.experts.len());
+        let mut acquired: Vec<String> = vec![];
+        let build = (|| -> Result<Vec<ExpertSlot>> {
+            for model in &cfg.experts {
+                let handle = self
+                    .pool
+                    .acquire(model)
+                    .with_context(|| format!("deploy '{}': model '{model}'", cfg.name))?;
+                acquired.push(model.clone());
+                let correction = if cfg.posterior_correction {
+                    Some(PosteriorCorrection::new(handle.beta)?)
+                } else {
+                    None
+                };
+                experts.push(ExpertSlot { handle, correction });
+            }
+            Ok(experts)
+        })();
+        let experts = match build {
+            Ok(e) => e,
+            Err(err) => {
+                for m in &acquired {
+                    self.pool.release(m);
+                }
+                return Err(err);
+            }
+        };
+        let aggregation = if cfg.experts.len() == 1 {
+            Aggregation::Identity
+        } else {
+            Aggregation::weighted(cfg.weights.clone())?
+        };
+        let predictor = match Predictor::new(cfg.name.clone(), experts, aggregation, quantile) {
+            Ok(p) => p,
+            Err(err) => {
+                for m in &acquired {
+                    self.pool.release(m);
+                }
+                return Err(err);
+            }
+        };
+        self.predictors
+            .write()
+            .unwrap()
+            .insert(cfg.name.clone(), Arc::new(predictor));
+        Ok(())
+    }
+
+    /// Decommission: remove the predictor and release its model
+    /// references (containers with zero refs are torn down by the
+    /// pool) — the final step of the Fig. 3 lifecycle.
+    pub fn decommission(&self, name: &str) -> Result<()> {
+        let removed = self.predictors.write().unwrap().remove(name);
+        let Some(p) = removed else {
+            bail!("predictor '{name}' is not deployed");
+        };
+        for model in p.expert_names() {
+            self.pool.release(&model);
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<Predictor>> {
+        self.predictors.read().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.predictors.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let preds = self.predictors.read().unwrap();
+        RegistryStats {
+            predictors: preds.len(),
+            model_references: preds.values().map(|p| p.n_experts()).sum(),
+            pool: self.pool.stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantileMode;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<PredictorRegistry> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PredictorRegistry::new(Arc::new(ModelPool::new(
+            Manifest::load(root).unwrap(),
+        ))))
+    }
+
+    fn cfg(name: &str, experts: &[&str]) -> PredictorConfig {
+        PredictorConfig {
+            name: name.into(),
+            experts: experts.iter().map(|s| s.to_string()).collect(),
+            weights: vec![1.0; experts.len()],
+            quantile_mode: QuantileMode::Identity,
+            reference: "fraud-default".into(),
+            posterior_correction: experts.len() > 1,
+        }
+    }
+
+    fn identity() -> Arc<QuantileMap> {
+        QuantileMap::identity(33).unwrap().shared()
+    }
+
+    #[test]
+    fn fig1_deployment_dedup() {
+        let Some(reg) = registry() else { return };
+        // p1 = {m1, m2}: two containers.
+        reg.deploy(&cfg("p1", &["m1", "m2"]), identity()).unwrap();
+        let s1 = reg.stats();
+        assert_eq!(s1.pool.live_containers, 2);
+        assert_eq!(s1.model_references, 2);
+        // p2 = {m1, m2, m3}: only m3 is net-new (the paper's claim).
+        reg.deploy(&cfg("p2", &["m1", "m2", "m3"]), identity()).unwrap();
+        let s2 = reg.stats();
+        assert_eq!(s2.predictors, 2);
+        assert_eq!(s2.model_references, 5);
+        assert_eq!(s2.pool.live_containers, 3, "marginal cost = net difference");
+        // Decommission p1 (lifecycle Fig. 3): m1, m2 stay alive for p2.
+        reg.decommission("p1").unwrap();
+        let s3 = reg.stats();
+        assert_eq!(s3.predictors, 1);
+        assert_eq!(s3.pool.live_containers, 3);
+        // Decommission p2: everything torn down.
+        reg.decommission("p2").unwrap();
+        assert_eq!(reg.stats().pool.live_containers, 0);
+    }
+
+    #[test]
+    fn duplicate_deploy_rejected() {
+        let Some(reg) = registry() else { return };
+        reg.deploy(&cfg("p", &["m1"]), identity()).unwrap();
+        assert!(reg.deploy(&cfg("p", &["m2"]), identity()).is_err());
+        // The failed deploy must not leak a container for m2.
+        assert_eq!(reg.stats().pool.live_containers, 1);
+    }
+
+    #[test]
+    fn failed_deploy_releases_acquired_models() {
+        let Some(reg) = registry() else { return };
+        // m1 is valid, m99 is not: the half-acquired m1 must be released.
+        let bad = cfg("p", &["m1", "m99"]);
+        assert!(reg.deploy(&bad, identity()).is_err());
+        assert_eq!(reg.stats().pool.live_containers, 0);
+    }
+
+    #[test]
+    fn decommission_unknown_is_error() {
+        let Some(reg) = registry() else { return };
+        assert!(reg.decommission("ghost").is_err());
+    }
+
+    #[test]
+    fn get_and_score_through_registry() {
+        let Some(reg) = registry() else { return };
+        reg.deploy(&cfg("p", &["m1", "m2"]), identity()).unwrap();
+        let p = reg.get("p").unwrap();
+        let d = p.feature_dim();
+        let out = p.score(&vec![0.0f32; 2 * d], 2, "t").unwrap();
+        assert_eq!(out.scores.len(), 2);
+        assert!(reg.get("nope").is_none());
+        assert_eq!(reg.names(), vec!["p".to_string()]);
+    }
+
+    #[test]
+    fn single_model_predictor_uses_identity_aggregation() {
+        let Some(reg) = registry() else { return };
+        // Paper: single-model predictors skip T^C and A is identity.
+        let mut c = cfg("single", &["m1"]);
+        c.posterior_correction = false;
+        reg.deploy(&c, identity()).unwrap();
+        let p = reg.get("single").unwrap();
+        assert_eq!(p.n_experts(), 1);
+    }
+}

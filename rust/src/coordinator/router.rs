@@ -1,0 +1,264 @@
+//! Intent-based routing (paper Section 2.5.1).
+//!
+//! Clients express a scoring *intent* (tenant, geography, schema,
+//! channel) — never a model/predictor name. Scoring rules are
+//! evaluated **sequentially** (first match wins, selecting exactly one
+//! *live* predictor); shadow rules are evaluated **in parallel**
+//! (every match mirrors the request). Routing uses only request
+//! metadata — no external lookups, no state — so it is lock-free on
+//! the hot path (an `Arc` snapshot swap on config updates, mirroring
+//! the stateless-pod rolling restart of Section 2.5.2).
+
+use crate::config::{Intent, RoutingConfig};
+use anyhow::{bail, Result};
+use std::sync::{Arc, RwLock};
+
+/// The outcome of routing one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Resolution {
+    /// The single live predictor serving the client response.
+    pub live: String,
+    /// Shadow predictors mirroring this request (may be empty).
+    pub shadows: Vec<String>,
+    /// Index of the matched scoring rule (for observability).
+    pub rule_index: usize,
+}
+
+/// Lock-free-on-read router with atomically swappable config.
+pub struct Router {
+    config: RwLock<Arc<RoutingConfig>>,
+}
+
+impl Router {
+    pub fn new(config: RoutingConfig) -> Self {
+        Router {
+            config: RwLock::new(Arc::new(config)),
+        }
+    }
+
+    /// Swap the routing configuration atomically (a "rolling update"
+    /// in the single-process engine; the cluster-level rollout is
+    /// simulated in `simulator::cluster`).
+    pub fn swap(&self, config: RoutingConfig) {
+        *self.config.write().unwrap() = Arc::new(config);
+    }
+
+    /// Snapshot the current configuration.
+    pub fn snapshot(&self) -> Arc<RoutingConfig> {
+        Arc::clone(&self.config.read().unwrap())
+    }
+
+    /// Resolve an intent to live + shadow predictors.
+    pub fn resolve(&self, intent: &Intent) -> Result<Resolution> {
+        let cfg = self.snapshot();
+        let mut live = None;
+        for (i, rule) in cfg.scoring_rules.iter().enumerate() {
+            if rule.condition.matches(intent) {
+                live = Some((rule.target_predictor.clone(), i));
+                break; // sequential: first match wins
+            }
+        }
+        let Some((live, rule_index)) = live else {
+            bail!(
+                "no scoring rule matches intent (tenant='{}', geography='{}', \
+                 schema='{}', channel='{}') — add a catch-all rule",
+                intent.tenant,
+                intent.geography,
+                intent.schema,
+                intent.channel
+            );
+        };
+        // Parallel shadow evaluation: collect all matches, dedupe, and
+        // never shadow onto the live predictor itself.
+        let mut shadows: Vec<String> = Vec::new();
+        for rule in &cfg.shadow_rules {
+            if rule.condition.matches(intent) {
+                for t in &rule.target_predictors {
+                    if *t != live && !shadows.contains(t) {
+                        shadows.push(t.clone());
+                    }
+                }
+            }
+        }
+        Ok(Resolution {
+            live,
+            shadows,
+            rule_index,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Condition, ScoringRule, ShadowRule};
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn tenant_cond(t: &str) -> Condition {
+        Condition {
+            tenants: vec![t.to_string()],
+            ..Condition::default()
+        }
+    }
+
+    fn fig2_router() -> Router {
+        Router::new(RoutingConfig {
+            scoring_rules: vec![
+                ScoringRule {
+                    description: "Custom DAG for bank1".into(),
+                    condition: tenant_cond("bank1"),
+                    target_predictor: "bank1-predictor-v1".into(),
+                },
+                ScoringRule {
+                    description: "US/LATAM fraud_v1".into(),
+                    condition: Condition {
+                        geographies: vec!["NAMER".into(), "LATAM".into()],
+                        schemas: vec!["fraud_v1".into()],
+                        ..Condition::default()
+                    },
+                    target_predictor: "america-predictor-v1".into(),
+                },
+                ScoringRule {
+                    description: "catch-all".into(),
+                    condition: Condition::default(),
+                    target_predictor: "global-predictor-v3".into(),
+                },
+            ],
+            shadow_rules: vec![ShadowRule {
+                description: "shadow v2 for bank1".into(),
+                condition: tenant_cond("bank1"),
+                target_predictors: vec!["bank1-predictor-v2".into()],
+            }],
+        })
+    }
+
+    fn intent(t: &str, g: &str, s: &str) -> Intent {
+        Intent {
+            tenant: t.into(),
+            geography: g.into(),
+            schema: s.into(),
+            channel: String::new(),
+        }
+    }
+
+    #[test]
+    fn paper_fig2_scenarios() {
+        let r = fig2_router();
+        // bank1 served by v1 AND shadowed to v2 (the paper's example).
+        let res = r.resolve(&intent("bank1", "EMEA", "fraud_v1")).unwrap();
+        assert_eq!(res.live, "bank1-predictor-v1");
+        assert_eq!(res.shadows, vec!["bank1-predictor-v2".to_string()]);
+        assert_eq!(res.rule_index, 0);
+        // US tenant with schema v1 routes to the regional predictor.
+        let res = r.resolve(&intent("bankX", "NAMER", "fraud_v1")).unwrap();
+        assert_eq!(res.live, "america-predictor-v1");
+        assert!(res.shadows.is_empty());
+        // Cold-start client falls through to the catch-all.
+        let res = r.resolve(&intent("newbie", "APAC", "fraud_v2")).unwrap();
+        assert_eq!(res.live, "global-predictor-v3");
+        assert_eq!(res.rule_index, 2);
+    }
+
+    #[test]
+    fn sequential_first_match_wins() {
+        // bank1 in NAMER matches both rule 0 and rule 1; rule 0 wins.
+        let r = fig2_router();
+        let res = r.resolve(&intent("bank1", "NAMER", "fraud_v1")).unwrap();
+        assert_eq!(res.live, "bank1-predictor-v1");
+    }
+
+    #[test]
+    fn no_match_without_catch_all_errors() {
+        let r = Router::new(RoutingConfig {
+            scoring_rules: vec![ScoringRule {
+                description: String::new(),
+                condition: tenant_cond("only"),
+                target_predictor: "p".into(),
+            }],
+            shadow_rules: vec![],
+        });
+        assert!(r.resolve(&intent("other", "", "")).is_err());
+    }
+
+    #[test]
+    fn shadow_never_duplicates_live() {
+        let mut cfg = fig2_router().snapshot().as_ref().clone();
+        cfg.shadow_rules.push(ShadowRule {
+            description: "self-shadow (misconfig)".into(),
+            condition: tenant_cond("bank1"),
+            target_predictors: vec!["bank1-predictor-v1".into(), "bank1-predictor-v2".into()],
+        });
+        let r = Router::new(cfg);
+        let res = r.resolve(&intent("bank1", "", "")).unwrap();
+        assert_eq!(res.live, "bank1-predictor-v1");
+        // v2 appears once despite two matching shadow rules; live is
+        // never mirrored onto itself.
+        assert_eq!(res.shadows, vec!["bank1-predictor-v2".to_string()]);
+    }
+
+    #[test]
+    fn swap_changes_routing_atomically() {
+        let r = fig2_router();
+        let before = r.resolve(&intent("bank1", "", "")).unwrap();
+        assert_eq!(before.live, "bank1-predictor-v1");
+        // Promote v2 to live (the Fig. 3 lifecycle's final step).
+        let mut cfg = r.snapshot().as_ref().clone();
+        cfg.scoring_rules[0].target_predictor = "bank1-predictor-v2".into();
+        cfg.shadow_rules.clear();
+        r.swap(cfg);
+        let after = r.resolve(&intent("bank1", "", "")).unwrap();
+        assert_eq!(after.live, "bank1-predictor-v2");
+        assert!(after.shadows.is_empty());
+    }
+
+    #[test]
+    fn prop_resolution_is_deterministic_and_total_with_catch_all() {
+        prop::check(100, |g| {
+            let tenants = ["a", "b", "c", "d"];
+            let r = fig2_router();
+            let it = intent(
+                tenants[g.usize(0..4)],
+                ["NAMER", "EMEA"][g.usize(0..2)],
+                ["fraud_v1", "fraud_v2"][g.usize(0..2)],
+            );
+            let x = r.resolve(&it).map_err(|e| e.to_string())?;
+            let y = r.resolve(&it).map_err(|e| e.to_string())?;
+            prop_assert!(x == y, "non-deterministic resolution");
+            prop_assert!(!x.live.is_empty(), "empty live predictor");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concurrent_resolve_during_swap() {
+        use std::sync::Arc;
+        let r = Arc::new(fig2_router());
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for _ in 0..2000 {
+                        let res = r.resolve(&intent("bank1", "", "")).unwrap();
+                        assert!(res.live.starts_with("bank1-predictor-v"));
+                    }
+                })
+            })
+            .collect();
+        let writer = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                for i in 0..200 {
+                    let mut cfg = r.snapshot().as_ref().clone();
+                    cfg.scoring_rules[0].target_predictor =
+                        format!("bank1-predictor-v{}", 1 + i % 2);
+                    r.swap(cfg);
+                }
+            })
+        };
+        for h in readers {
+            h.join().unwrap();
+        }
+        writer.join().unwrap();
+    }
+}

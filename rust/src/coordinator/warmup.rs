@@ -1,0 +1,138 @@
+//! Code warm-up (paper Section 3.1.2): before a replica is marked
+//! *ready*, a warm-up driver "exercises the real program accurately",
+//! forcing the hot paths through their first-touch costs. The paper's
+//! Java stack pays JIT compilation; this stack pays PJRT
+//! first-execution, lazy allocations and page faults — same mechanism,
+//! same cure. Fig. 5's latency stability during rolling updates
+//! depends on this.
+
+use super::engine::{Engine, ScoreRequest};
+use crate::config::Intent;
+use crate::metrics::LatencyHistogram;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Result of a warm-up run.
+#[derive(Debug, Clone)]
+pub struct WarmupReport {
+    pub requests: usize,
+    /// Latency of the first `cold_window` requests (the JIT/first-
+    /// touch regime) vs the last `cold_window` (steady state), in ns.
+    pub cold_p50_ns: u64,
+    pub warm_p50_ns: u64,
+}
+
+/// Drive synthetic traffic through every routable path of the engine
+/// until `requests` scorings completed. Synthetic events are generated
+/// from each predictor's schema (feature dim), mimicking the paper's
+/// subprocess that "generates synthetic data and makes remote calls to
+/// the main program".
+pub fn warm_up(engine: &Engine, requests: usize, seed: u64) -> Result<WarmupReport> {
+    let mut rng = Rng::new(seed);
+    let names = engine.registry.names();
+    let cold = LatencyHistogram::new();
+    let warm = LatencyHistogram::new();
+    let window = (requests / 5).max(1);
+
+    // Warm every predictor directly (shadow paths included), not just
+    // the currently-routed ones: post-promotion paths must be hot too.
+    let mut done = 0usize;
+    'outer: loop {
+        for name in &names {
+            if done >= requests {
+                break 'outer;
+            }
+            let p = engine.predictor(name)?;
+            let d = p.feature_dim();
+            let features: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let t0 = std::time::Instant::now();
+            let _ = p.score(&features, 1, "warmup")?;
+            let dt = t0.elapsed().as_nanos() as u64;
+            if done < window {
+                cold.record(dt);
+            } else if done >= requests - window {
+                warm.record(dt);
+            }
+            done += 1;
+        }
+        if names.is_empty() {
+            break;
+        }
+    }
+    // Also exercise the routed scoring path (router + enrichment).
+    if !names.is_empty() {
+        if let Ok(p) = engine.predictor(&names[0]) {
+            let d = p.feature_dim();
+            let req = ScoreRequest {
+                intent: Intent {
+                    tenant: "warmup".into(),
+                    ..Intent::default()
+                },
+                entity: "warmup".into(),
+                features: vec![0.0; d],
+            };
+            // Best effort: routing may 404 for the warmup tenant if no
+            // catch-all exists; that is fine.
+            let _ = engine.score(&req);
+        }
+    }
+    Ok(WarmupReport {
+        requests: done,
+        cold_p50_ns: cold.percentile_ns(50.0),
+        warm_p50_ns: warm.percentile_ns(50.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MuseConfig;
+    use crate::runtime::{Manifest, ModelPool};
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [m1, m2]
+  quantile: identity
+"#;
+
+    fn engine() -> Option<Engine> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let pool = Arc::new(ModelPool::new(Manifest::load(root).unwrap()));
+        Some(Engine::build(&MuseConfig::from_yaml(CONFIG).unwrap(), pool).unwrap())
+    }
+
+    #[test]
+    fn warmup_completes_requested_volume() {
+        let Some(engine) = engine() else { return };
+        let report = warm_up(&engine, 50, 1).unwrap();
+        assert_eq!(report.requests, 50);
+        assert!(report.cold_p50_ns > 0);
+        assert!(report.warm_p50_ns > 0);
+    }
+
+    #[test]
+    fn steady_state_not_slower_than_cold() {
+        let Some(engine) = engine() else { return };
+        let report = warm_up(&engine, 300, 2).unwrap();
+        // Steady state should be no slower than the cold window
+        // (allowing generous noise: 3x).
+        assert!(
+            report.warm_p50_ns <= report.cold_p50_ns.saturating_mul(3),
+            "warm {} vs cold {}",
+            report.warm_p50_ns,
+            report.cold_p50_ns
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! The shadow-score Data Lake (paper Fig. 2 / Section 2.5.1).
+//!
+//! Shadow predictors' responses are mirrored here "without affecting
+//! the response returned to the client"; the control plane later reads
+//! them back to validate distribution stability and to fit custom
+//! quantile transformations. In production this is an object-store
+//! sink; here it is an in-memory, thread-safe append-only store with
+//! the same query surface.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One recorded scoring event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub tenant: String,
+    pub predictor: String,
+    /// Final (post-transform) score returned by that predictor.
+    pub score: f64,
+    /// Pre-quantile (aggregated, calibrated) score — what custom
+    /// quantile fits consume.
+    pub raw_score: f64,
+    /// Whether this was the live response or a shadow mirror.
+    pub shadow: bool,
+    /// Monotone event index (stands in for event time).
+    pub seq: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    records: Vec<Record>,
+    seq: u64,
+}
+
+/// Append-only, thread-safe data lake.
+#[derive(Default)]
+pub struct DataLake {
+    inner: Mutex<Inner>,
+}
+
+impl DataLake {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn append(&self, tenant: &str, predictor: &str, score: f64, raw_score: f64, shadow: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.seq;
+        inner.seq += 1;
+        inner.records.push(Record {
+            tenant: tenant.to_string(),
+            predictor: predictor.to_string(),
+            score,
+            raw_score,
+            shadow,
+            seq,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Raw (pre-quantile) scores for a tenant/predictor pair — the
+    /// input to a custom `T^Q` fit (Section 2.3.3).
+    pub fn raw_scores(&self, tenant: &str, predictor: &str) -> Vec<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .records
+            .iter()
+            .filter(|r| r.tenant == tenant && r.predictor == predictor)
+            .map(|r| r.raw_score)
+            .collect()
+    }
+
+    /// Final scores (for distribution-stability validation).
+    pub fn final_scores(&self, tenant: &str, predictor: &str) -> Vec<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .records
+            .iter()
+            .filter(|r| r.tenant == tenant && r.predictor == predictor)
+            .map(|r| r.score)
+            .collect()
+    }
+
+    /// Count of records per (tenant, predictor, shadow-flag).
+    pub fn counts(&self) -> BTreeMap<(String, String, bool), usize> {
+        let mut out = BTreeMap::new();
+        for r in self.inner.lock().unwrap().records.iter() {
+            *out.entry((r.tenant.clone(), r.predictor.clone(), r.shadow))
+                .or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// Drop all records for a predictor (after decommissioning).
+    pub fn purge_predictor(&self, predictor: &str) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.records.len();
+        inner.records.retain(|r| r.predictor != predictor);
+        before - inner.records.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_query() {
+        let lake = DataLake::new();
+        lake.append("bank1", "p1", 0.9, 0.12, false);
+        lake.append("bank1", "p2", 0.8, 0.10, true);
+        lake.append("bank2", "p1", 0.7, 0.08, false);
+        assert_eq!(lake.len(), 3);
+        assert_eq!(lake.raw_scores("bank1", "p1"), vec![0.12]);
+        assert_eq!(lake.final_scores("bank1", "p2"), vec![0.8]);
+        assert!(lake.raw_scores("bank3", "p1").is_empty());
+    }
+
+    #[test]
+    fn seq_is_monotone() {
+        let lake = DataLake::new();
+        for i in 0..10 {
+            lake.append("t", "p", i as f64, 0.0, false);
+        }
+        let inner = lake.inner.lock().unwrap();
+        for w in inner.records.windows(2) {
+            assert!(w[1].seq > w[0].seq);
+        }
+    }
+
+    #[test]
+    fn counts_split_shadow_and_live() {
+        let lake = DataLake::new();
+        lake.append("t", "p", 0.1, 0.1, false);
+        lake.append("t", "p", 0.2, 0.2, true);
+        lake.append("t", "p", 0.3, 0.3, true);
+        let counts = lake.counts();
+        assert_eq!(counts[&("t".into(), "p".into(), false)], 1);
+        assert_eq!(counts[&("t".into(), "p".into(), true)], 2);
+    }
+
+    #[test]
+    fn purge_removes_only_target() {
+        let lake = DataLake::new();
+        lake.append("t", "old", 0.1, 0.1, false);
+        lake.append("t", "new", 0.2, 0.2, false);
+        assert_eq!(lake.purge_predictor("old"), 1);
+        assert_eq!(lake.len(), 1);
+        assert_eq!(lake.raw_scores("t", "new").len(), 1);
+    }
+
+    #[test]
+    fn concurrent_appends() {
+        use std::sync::Arc;
+        let lake = Arc::new(DataLake::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let lake = Arc::clone(&lake);
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        lake.append(&format!("t{t}"), "p", i as f64 / 500.0, 0.0, false);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(lake.len(), 4000);
+    }
+}

@@ -1,0 +1,153 @@
+//! The feature store (paper Section 2.5.1): "once the appropriate
+//! predictor is selected, the system may enrich the request by
+//! querying a feature store for any additional model-specific features
+//! not included in the initial payload", enabling "easy feature
+//! evolution" — models with heterogeneous feature sets served
+//! simultaneously without client changes.
+//!
+//! Here: an in-memory KV of entity -> derived features, plus an
+//! enrichment step that pads/joins a partial payload up to a model's
+//! full feature dimension.
+
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// In-memory feature store keyed by entity id (e.g. card hash).
+#[derive(Default)]
+pub struct FeatureStore {
+    derived: RwLock<HashMap<String, Vec<f32>>>,
+    /// Global fallback for unseen entities (e.g. population means).
+    fallback: RwLock<Vec<f32>>,
+}
+
+impl FeatureStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install/overwrite derived features for an entity.
+    pub fn put(&self, entity: &str, features: Vec<f32>) {
+        self.derived
+            .write()
+            .unwrap()
+            .insert(entity.to_string(), features);
+    }
+
+    /// Set the fallback vector used for unseen entities.
+    pub fn set_fallback(&self, features: Vec<f32>) {
+        *self.fallback.write().unwrap() = features;
+    }
+
+    pub fn len(&self) -> usize {
+        self.derived.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enrich a partial payload to exactly `target_dim` features:
+    /// payload features come first, the remainder is joined from the
+    /// entity's derived features (or the fallback, or zeros).
+    ///
+    /// Errors if the payload alone is already wider than the target
+    /// (schema mismatch the router should have caught).
+    pub fn enrich(&self, entity: &str, payload: &[f32], target_dim: usize) -> Result<Vec<f32>> {
+        ensure!(
+            payload.len() <= target_dim,
+            "payload has {} features but model expects {target_dim}",
+            payload.len()
+        );
+        let mut out = Vec::with_capacity(target_dim);
+        out.extend_from_slice(payload);
+        let need = target_dim - payload.len();
+        if need == 0 {
+            return Ok(out);
+        }
+        let derived = self.derived.read().unwrap();
+        if let Some(d) = derived.get(entity) {
+            out.extend(d.iter().take(need).cloned());
+        }
+        if out.len() < target_dim {
+            let fb = self.fallback.read().unwrap();
+            let have = out.len() - payload.len();
+            out.extend(fb.iter().skip(have).take(target_dim - out.len()).cloned());
+        }
+        out.resize(target_dim, 0.0);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_payload_passthrough() {
+        let fs = FeatureStore::new();
+        let payload = vec![1.0, 2.0, 3.0];
+        assert_eq!(fs.enrich("e", &payload, 3).unwrap(), payload);
+    }
+
+    #[test]
+    fn joins_derived_features() {
+        let fs = FeatureStore::new();
+        fs.put("card-1", vec![9.0, 8.0, 7.0]);
+        let out = fs.enrich("card-1", &[1.0, 2.0], 4).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 9.0, 8.0]);
+    }
+
+    #[test]
+    fn fallback_for_unseen_entities() {
+        let fs = FeatureStore::new();
+        fs.set_fallback(vec![0.5, 0.5, 0.5, 0.5]);
+        let out = fs.enrich("unknown", &[1.0], 3).unwrap();
+        assert_eq!(out, vec![1.0, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn zero_pads_when_nothing_known() {
+        let fs = FeatureStore::new();
+        let out = fs.enrich("unknown", &[1.0], 4).unwrap();
+        assert_eq!(out, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn partial_derived_plus_fallback() {
+        let fs = FeatureStore::new();
+        fs.put("e", vec![9.0]); // only one derived feature
+        fs.set_fallback(vec![0.1, 0.2, 0.3]);
+        let out = fs.enrich("e", &[1.0], 4).unwrap();
+        // payload(1) + derived(1) + fallback skipping the 1 already
+        // provided by derived.
+        assert_eq!(out, vec![1.0, 9.0, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn oversized_payload_is_schema_error() {
+        let fs = FeatureStore::new();
+        assert!(fs.enrich("e", &[0.0; 5], 3).is_err());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        use std::sync::Arc;
+        let fs = Arc::new(FeatureStore::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let fs = Arc::clone(&fs);
+                std::thread::spawn(move || {
+                    for i in 0..200 {
+                        fs.put(&format!("e{t}-{i}"), vec![t as f32]);
+                        let _ = fs.enrich(&format!("e{t}-{i}"), &[0.0], 2).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fs.len(), 1600);
+    }
+}

@@ -1,0 +1,28 @@
+//! # MUSE — Multi-Tenant Model Serving With Seamless Model Updates
+//!
+//! A full reproduction of the MUSE paper (Feedzai, 2026) as a
+//! three-layer Rust + JAX + Pallas stack. This crate is the Layer-3
+//! coordinator: intent-based routing, the predictor abstraction with
+//! its composable score transformations, multi-tenant model-container
+//! sharing, and the rolling-deployment control plane. Model inference
+//! executes AOT-compiled HLO (JAX + Pallas, built once by
+//! `make artifacts`) through the PJRT CPU client — Python is never on
+//! the request path.
+//!
+//! See DESIGN.md for the system inventory and the experiment index
+//! mapping every paper table/figure to a module and harness.
+
+pub mod baselines;
+pub mod calibration;
+pub mod config;
+pub mod coordinator;
+pub mod datalake;
+pub mod featurestore;
+pub mod coldstart;
+pub mod metrics;
+pub mod repro;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod transforms;
+pub mod util;

@@ -1,0 +1,182 @@
+//! The `muse` CLI — launcher for the serving coordinator and the
+//! paper-exhibit harnesses.
+//!
+//! ```text
+//! muse serve  [--config FILE] [--addr HOST:PORT]   start the server
+//! muse repro  <exhibit>                            regenerate a paper exhibit
+//!             fig4 | fig5 | fig6 | table1 | appendix-a |
+//!             headline | dedup | baselines | all
+//! muse info                                        artifact/manifest summary
+//! ```
+
+use anyhow::{bail, Context, Result};
+use muse::config::MuseConfig;
+use muse::coordinator::Engine;
+use muse::runtime::{Manifest, ModelPool};
+use std::sync::Arc;
+
+const DEFAULT_CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "default: shared 3-expert ensemble"
+    condition: {}
+    targetPredictorName: "global-v1"
+predictors:
+- name: global-v1
+  experts: [m1, m2, m3]
+  quantile: default
+server:
+  listenAddr: "127.0.0.1:7461"
+  workers: 8
+"#;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("serve") => serve(&args[1..]),
+        Some("repro") => repro(&args[1..]),
+        Some("info") => info(),
+        Some("help") | None => {
+            print!("{}", usage());
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}
+
+fn usage() -> String {
+    "muse — Multi-tenant model serving with seamless model updates\n\n\
+     USAGE:\n\
+       muse serve [--config FILE] [--addr HOST:PORT] [--warmup N]\n\
+       muse repro <fig4|fig5|fig6|table1|appendix-a|headline|dedup|baselines|all>\n\
+       muse info\n"
+        .to_string()
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let yaml = match flag_value(args, "--config") {
+        Some(path) => std::fs::read_to_string(path).with_context(|| format!("read {path}"))?,
+        None => DEFAULT_CONFIG.to_string(),
+    };
+    let config = MuseConfig::from_yaml(&yaml)?;
+    let addr = flag_value(args, "--addr")
+        .unwrap_or(&config.server.listen_addr)
+        .to_string();
+    let warmup: usize = flag_value(args, "--warmup")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--warmup must be an integer")?
+        .unwrap_or(config.server.warmup_requests);
+
+    let manifest = Manifest::load(Manifest::default_root())
+        .context("artifacts missing — run `make artifacts`")?;
+    let pool = Arc::new(ModelPool::new(manifest));
+    let engine = Arc::new(Engine::build(&config, pool)?);
+
+    // Cold-start defaults for predictors configured with
+    // `quantile: default` (Section 2.4).
+    install_default_quantiles(&engine, &config)?;
+
+    eprintln!("muse: warming up ({warmup} requests) ...");
+    let (bound, _ready, handle) =
+        muse::server::spawn_server(Arc::clone(&engine), &addr, config.server.workers, warmup)?;
+    eprintln!("muse: ready, serving on http://{bound}");
+    eprintln!("muse: POST /score  GET /healthz  GET /metrics  GET /admin/stats");
+    handle.join().ok();
+    Ok(())
+}
+
+fn install_default_quantiles(engine: &Engine, config: &MuseConfig) -> Result<()> {
+    use muse::config::QuantileMode;
+    use muse::coordinator::ControlPlane;
+    let needs_default: Vec<_> = config
+        .predictors
+        .iter()
+        .filter(|p| p.quantile_mode == QuantileMode::Default)
+        .collect();
+    if needs_default.is_empty() {
+        return Ok(());
+    }
+    let manifest = Manifest::load(Manifest::default_root())?;
+    let Ok(spec) = manifest.dataset("train_pool") else {
+        eprintln!("muse: no train_pool dataset; default quantiles stay at identity");
+        return Ok(());
+    };
+    let train = muse::util::dataset::Dataset::load(&spec.path)?;
+    let cp = ControlPlane::new(engine);
+    for p in needs_default {
+        let reference = Engine::reference(&p.reference);
+        eprintln!("muse: fitting cold-start T^Q for '{}' ...", p.name);
+        cp.fit_default_quantile(&p.name, &train, &reference, &Default::default())?;
+    }
+    Ok(())
+}
+
+fn repro(args: &[String]) -> Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let run_one = |name: &str| -> Result<()> {
+        let out = match name {
+            "fig4" => muse::repro::fig4::run()?,
+            "fig5" => muse::repro::fig5::run()?,
+            "fig6" => muse::repro::fig6::run()?,
+            "table1" => muse::repro::table1::run()?,
+            "appendix-a" => muse::repro::appendix_a::run()?,
+            "headline" => muse::repro::headline::run()?,
+            "dedup" => muse::repro::dedup::run()?,
+            "baselines" => muse::repro::baselines_cmp::run()?,
+            other => bail!("unknown exhibit '{other}'"),
+        };
+        println!("{out}");
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "fig4", "fig5", "fig6", "table1", "appendix-a", "headline", "dedup", "baselines",
+        ] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn info() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_root())
+        .context("artifacts missing — run `make artifacts`")?;
+    println!("artifact root: {}", manifest.root.display());
+    println!(
+        "feature_dim={} fraud_prior={} quantile_points={}",
+        manifest.feature_dim, manifest.fraud_prior, manifest.quantile_points
+    );
+    println!("models:");
+    for m in manifest.models.values() {
+        println!(
+            "  {:<4} arch={:<5} beta={:<5} batches={:?} auc={:.3}",
+            m.name,
+            m.arch,
+            m.beta,
+            m.batches.keys().collect::<Vec<_>>(),
+            m.train_pool_auc.unwrap_or(f64::NAN)
+        );
+    }
+    println!("datasets:");
+    for d in manifest.datasets.values() {
+        println!("  {:<16} n={}", d.name, d.n);
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Serving counters + windowed time series (the Fig. 5 pod-count /
+//! req-rate traces and the `/metrics` endpoint).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A set of named monotonically-increasing counters.
+#[derive(Default)]
+pub struct Counters {
+    inner: Mutex<BTreeMap<String, AtomicU64>>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Snapshot all counters (for `/metrics` and test assertions).
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+/// A fixed-width time series: one f64 sample per window, used by the
+/// Fig. 5 harness to plot pod counts / request rates / percentiles
+/// over the rolling-update timeline.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub window_secs: f64,
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, window_secs: f64) -> Self {
+        Series {
+            name: name.into(),
+            window_secs,
+            values: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Render as aligned "t=.. v=.." rows for the harness output.
+    pub fn render_rows(&self) -> Vec<String> {
+        self.values
+            .iter()
+            .enumerate()
+            .map(|(i, v)| format!("t={:>7.1}s {}={:.3}", i as f64 * self.window_secs, self.name, v))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::new();
+        c.inc("requests");
+        c.add("requests", 4);
+        c.inc("errors");
+        assert_eq!(c.get("requests"), 5);
+        assert_eq!(c.get("errors"), 1);
+        assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let c = Counters::new();
+        c.inc("b");
+        c.inc("a");
+        let snap = c.snapshot();
+        let keys: Vec<&String> = snap.keys().collect();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        use std::sync::Arc;
+        let c = Arc::new(Counters::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc("hits");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get("hits"), 8000);
+    }
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("pods", 10.0);
+        for v in [6.0, 9.0, 12.0, 6.0] {
+            s.push(v);
+        }
+        assert_eq!(s.max(), 12.0);
+        assert_eq!(s.min(), 6.0);
+        let rows = s.render_rows();
+        assert_eq!(rows.len(), 4);
+        assert!(rows[2].contains("t=   20.0s"));
+    }
+}

@@ -1,0 +1,239 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, from scratch)
+//! for the paper's SLO percentiles (p99 < 30ms, p99.9 < 150ms,
+//! p99.99 tracked in Fig. 5).
+//!
+//! Fixed memory, O(1) record, percentiles accurate to ~1% relative
+//! error: buckets are arranged as 64 power-of-two tiers x 32 linear
+//! sub-buckets covering 1ns .. ~18s of microsecond-scale latencies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per power-of-two tier
+const SUB: usize = 1 << SUB_BITS;
+const TIERS: usize = 40; // covers values up to 2^(40+5) ns ~ 9.7 hours
+const BUCKETS: usize = TIERS * SUB;
+
+/// Lock-free recording histogram for u64 values (nanoseconds).
+pub struct LatencyHistogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[inline]
+fn bucket_index(value: u64) -> usize {
+    let v = value.max(1);
+    let msb = 63 - v.leading_zeros();
+    if msb < SUB_BITS {
+        return v as usize; // values < 32 map linearly
+    }
+    let tier = (msb - SUB_BITS + 1) as usize;
+    let sub = ((v >> (msb - SUB_BITS)) & ((SUB as u64) - 1)) as usize;
+    (tier * SUB + sub).min(BUCKETS - 1)
+}
+
+/// Representative (midpoint) value for a bucket index.
+fn bucket_value(index: usize) -> u64 {
+    if index < SUB {
+        return index as u64;
+    }
+    let tier = index / SUB;
+    let sub = (index % SUB) as u64;
+    let base = 1u64 << (tier as u32 + SUB_BITS - 1);
+    let width = base / SUB as u64;
+    base + sub * width + width / 2
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (ns). Lock-free; safe from many threads.
+    #[inline]
+    pub fn record(&self, value_ns: u64) {
+        self.counts[bucket_index(value_ns)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value_ns, Ordering::Relaxed);
+        self.max.fetch_max(value_ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Percentile in [0, 100]; returns the representative value of the
+    /// bucket containing that rank (exact max for p=100).
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        if p >= 100.0 {
+            return self.max_ns();
+        }
+        let target = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return bucket_value(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    /// Reset all counters (between benchmark phases).
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.total.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// Render the standard SLO summary line used by the harnesses.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms p99.5={:.3}ms p99.9={:.3}ms p99.99={:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean_ns() / 1e6,
+            self.percentile_ns(50.0) as f64 / 1e6,
+            self.percentile_ns(99.0) as f64 / 1e6,
+            self.percentile_ns(99.5) as f64 / 1e6,
+            self.percentile_ns(99.9) as f64 / 1e6,
+            self.percentile_ns(99.99) as f64 / 1e6,
+            self.max_ns() as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_roundtrip_relative_error() {
+        for v in [1u64, 7, 31, 32, 100, 1_000, 50_000, 1_000_000, 30_000_000, 10_000_000_000] {
+            let rep = bucket_value(bucket_index(v));
+            let rel = (rep as f64 - v as f64).abs() / v as f64;
+            assert!(rel < 0.04, "v={v} rep={rep} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn small_values_exact() {
+        for v in 0..32u64 {
+            assert_eq!(bucket_value(bucket_index(v.max(1))), v.max(1));
+        }
+    }
+
+    #[test]
+    fn percentiles_of_uniform() {
+        let h = LatencyHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000); // 1..10000 us
+        }
+        let p50 = h.percentile_ns(50.0) as f64;
+        let p99 = h.percentile_ns(99.0) as f64;
+        assert!((p50 / 5_000_000.0 - 1.0).abs() < 0.05, "p50 {p50}");
+        assert!((p99 / 9_900_000.0 - 1.0).abs() < 0.05, "p99 {p99}");
+        assert_eq!(h.percentile_ns(100.0), 10_000_000);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_ns(99.0), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let h = LatencyHistogram::new();
+        h.record(100);
+        h.record(200);
+        h.record(600);
+        assert_eq!(h.mean_ns(), 300.0);
+        assert_eq!(h.max_ns(), 600);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = LatencyHistogram::new();
+        h.record(1234);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_ns(), 0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = Arc::new(LatencyHistogram::new());
+        let mut handles = vec![];
+        for t in 0..8 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..10_000 {
+                    h.record(1000 + rng.below(1_000_000) as u64);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 80_000);
+    }
+
+    #[test]
+    fn heavy_tail_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..100_000 {
+            let v = (rng.lognormal(13.0, 1.0)) as u64; // ~0.5ms median
+            h.record(v);
+        }
+        let p50 = h.percentile_ns(50.0);
+        let p99 = h.percentile_ns(99.0);
+        let p999 = h.percentile_ns(99.9);
+        assert!(p50 < p99 && p99 <= p999, "{p50} {p99} {p999}");
+    }
+
+    #[test]
+    fn summary_formats() {
+        let h = LatencyHistogram::new();
+        h.record(2_000_000);
+        let s = h.summary();
+        assert!(s.contains("n=1") && s.contains("p99"), "{s}");
+    }
+}

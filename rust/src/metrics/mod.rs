@@ -1,0 +1,8 @@
+//! Serving metrics: lock-free latency histograms (SLO percentiles)
+//! and named counters / time series for the control plane.
+
+pub mod counters;
+pub mod histogram;
+
+pub use counters::{Counters, Series};
+pub use histogram::LatencyHistogram;

@@ -1,0 +1,187 @@
+//! Shared plumbing for the paper-exhibit harnesses: engine
+//! construction, dataset replay, relative-error tables.
+
+use crate::calibration::wilson;
+use crate::config::MuseConfig;
+use crate::coordinator::Engine;
+use crate::runtime::{Manifest, ModelPool};
+use crate::transforms::ReferenceDistribution;
+use crate::util::dataset::Dataset;
+use crate::util::stats;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Load the artifact manifest from the default root.
+pub fn load_manifest() -> Result<Manifest> {
+    Manifest::load(Manifest::default_root()).context(
+        "artifacts not found — run `make artifacts` first (MUSE_ARTIFACTS overrides the root)",
+    )
+}
+
+/// Build an engine from inline YAML against the default artifact root.
+pub fn build_engine(yaml: &str) -> Result<Engine> {
+    let manifest = load_manifest()?;
+    let pool = Arc::new(ModelPool::new(manifest));
+    Engine::build(&MuseConfig::from_yaml(yaml)?, pool)
+}
+
+/// Load a named dataset from the manifest.
+pub fn load_dataset(manifest: &Manifest, name: &str) -> Result<Dataset> {
+    Dataset::load(&manifest.dataset(name)?.path)
+}
+
+/// One row of a Fig. 4/6-style relative-error table.
+#[derive(Debug, Clone)]
+pub struct BinErrorRow {
+    pub bin: usize,
+    pub observed: u64,
+    pub err_pct: f64,
+    pub err_lo_pct: f64,
+    pub err_hi_pct: f64,
+}
+
+/// Bin scores into 10 uniform bins and compute the relative error vs
+/// the reference's target shares, with Wilson 95% error bars.
+pub fn bin_error_table(scores: &[f64], reference: &ReferenceDistribution) -> Vec<BinErrorRow> {
+    let n_bins = 10;
+    let counts = stats::bin_counts(scores, n_bins);
+    let target = reference.bin_shares(n_bins);
+    let total: u64 = counts.iter().sum();
+    counts
+        .iter()
+        .enumerate()
+        .map(|(b, &c)| {
+            let (lo, err, hi) = wilson::relative_error_with_interval(c, total, target[b], 1.96);
+            BinErrorRow {
+                bin: b,
+                observed: c,
+                err_pct: err,
+                err_lo_pct: lo,
+                err_hi_pct: hi,
+            }
+        })
+        .collect()
+}
+
+/// Render rows like the paper's figures: `[0.3,0.4): +12.3% (+-)`.
+pub fn render_bin_errors(label: &str, rows: &[BinErrorRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("  {label}\n"));
+    for r in rows {
+        let lo = r.bin as f64 / 10.0;
+        let hi = lo + 0.1;
+        let bracket = if r.bin == 9 { ']' } else { '[' };
+        out.push_str(&format!(
+            "    [{lo:.1},{hi:.1}{bracket}  n={:>8}  err={:>+9.1}%  95% CI [{:>+9.1}%, {:>+9.1}%]\n",
+            r.observed, r.err_pct, r.err_lo_pct, r.err_hi_pct
+        ));
+    }
+    out
+}
+
+/// Score a dataset through a predictor's raw pipeline in chunks
+/// (keeps peak memory bounded on the 100k+ datasets).
+pub fn score_dataset_raw(engine: &Engine, predictor: &str, ds: &Dataset) -> Result<Vec<f64>> {
+    let p = engine.predictor(predictor)?;
+    let chunk = 4096;
+    let mut out = Vec::with_capacity(ds.n);
+    let mut start = 0;
+    while start < ds.n {
+        let len = chunk.min(ds.n - start);
+        let raw = p.score_raw(ds.rows(start, len), len)?;
+        out.extend(raw);
+        start += len;
+    }
+    Ok(out)
+}
+
+/// Simple fixed-width table printer for the harness outputs.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("  ");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<width$}  ", c, width = widths[i]));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str("  ");
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_errors_match_known_distribution() {
+        let r = ReferenceDistribution::fraud_default();
+        // A sample drawn exactly from the reference: errors ~ 0.
+        let n = 200_000;
+        let scores: Vec<f64> = (0..n)
+            .map(|i| r.mixture.quantile((i as f64 + 0.5) / n as f64))
+            .collect();
+        let rows = bin_error_table(&scores, &r);
+        for row in &rows {
+            assert!(
+                row.err_pct.abs() < 5.0,
+                "bin {} err {}%",
+                row.bin,
+                row.err_pct
+            );
+            assert!(row.err_lo_pct <= row.err_pct && row.err_pct <= row.err_hi_pct);
+        }
+    }
+
+    #[test]
+    fn concentrated_scores_show_fig4_raw_signature() {
+        let r = ReferenceDistribution::fraud_default();
+        let scores = vec![0.01; 10_000];
+        let rows = bin_error_table(&scores, &r);
+        assert!(rows[0].err_pct > 20.0, "bin0 {}", rows[0].err_pct);
+        for row in &rows[1..] {
+            assert_eq!(row.err_pct, -100.0, "bin {}", row.bin);
+        }
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "metric"]);
+        t.row(vec!["x".into(), "1.0".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("a       metric"), "{s}");
+        assert_eq!(s.lines().count(), 4);
+    }
+}

@@ -1,0 +1,194 @@
+//! The headline serving claims (Sections 1-3): thousands of events per
+//! second under 30ms p99 / 150ms p99.9 SLOs, with "negligible
+//! overhead from the transformation pipeline".
+//!
+//! Drives real multi-tenant traffic through the full engine (router ->
+//! enrichment -> PJRT inference on shared containers -> T^C -> A ->
+//! tenant T^Q -> data lake) from concurrent client threads, then
+//! measures the transformation pipeline in isolation.
+
+use super::common;
+use crate::config::Intent;
+use crate::coordinator::{warm_up, Engine, ScoreRequest};
+use crate::metrics::LatencyHistogram;
+use crate::simulator::{TenantProfile, Workload};
+use crate::transforms::{PosteriorCorrection, QuantileMap, ReferenceDistribution};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 rides the 3-expert ensemble"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "trio"
+  - description: "bank2 rides a single model"
+    condition:
+      tenants: ["bank2"]
+    targetPredictorName: "solo"
+  - description: "everyone else on the shared trio"
+    condition: {}
+    targetPredictorName: "trio"
+predictors:
+- name: trio
+  experts: [m1, m2, m3]
+  quantile: identity
+- name: solo
+  experts: [m4]
+  quantile: identity
+"#;
+
+pub struct HeadlineResult {
+    pub throughput_eps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub transform_ns_per_event: f64,
+}
+
+pub fn measure(engine: &Engine, clients: usize, events_per_client: usize) -> Result<HeadlineResult> {
+    let latency = Arc::new(LatencyHistogram::new());
+    let done = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let latency = Arc::clone(&latency);
+            let done = Arc::clone(&done);
+            let engine_ref = &*engine;
+            scope.spawn(move || {
+                let tenants = ["bank1", "bank2", "bank3"];
+                let tenant = tenants[c % tenants.len()];
+                let mut wl = Workload::new(
+                    TenantProfile::new(tenant, 100 + c as u64, 0.4, 0.1),
+                    999 + c as u64,
+                );
+                for i in 0..events_per_client {
+                    let e = wl.next_event();
+                    let req = ScoreRequest {
+                        intent: Intent {
+                            tenant: tenant.into(),
+                            ..Intent::default()
+                        },
+                        entity: format!("c{c}-{i}"),
+                        features: e.features,
+                    };
+                    let s = Instant::now();
+                    if engine_ref.score(&req).is_ok() {
+                        latency.record(s.elapsed().as_nanos() as u64);
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let n = done.load(Ordering::Relaxed);
+
+    // Transformation pipeline in isolation (the "negligible overhead"
+    // claim): T^C x3 + weighted mean + T^Q lookup per event.
+    let pc = PosteriorCorrection::new(0.18)?;
+    let reference = ReferenceDistribution::fraud_default();
+    let refq = reference.quantile_grid(1025);
+    let src: Vec<f64> = (0..1025).map(|i| (i as f64 / 1024.0).powi(2)).collect();
+    let mut src = src;
+    crate::transforms::quantile_fit::dedup_monotone(&mut src);
+    let q = QuantileMap::new(src, refq)?;
+    let iters = 2_000_000u64;
+    let tt0 = Instant::now();
+    let mut acc = 0.0f64;
+    for i in 0..iters {
+        let s = (i % 1000) as f64 / 1000.0;
+        let c = (pc.apply(s) + pc.apply(s * 0.7) + pc.apply(s * 0.3)) / 3.0;
+        acc += q.apply(c);
+    }
+    let transform_ns = tt0.elapsed().as_nanos() as f64 / iters as f64;
+    std::hint::black_box(acc);
+
+    Ok(HeadlineResult {
+        throughput_eps: n as f64 / wall,
+        p50_ms: latency.percentile_ns(50.0) as f64 / 1e6,
+        p99_ms: latency.percentile_ns(99.0) as f64 / 1e6,
+        p999_ms: latency.percentile_ns(99.9) as f64 / 1e6,
+        transform_ns_per_event: transform_ns,
+    })
+}
+
+pub fn run() -> Result<String> {
+    // Enough client concurrency to exercise the dynamic batcher
+    // (concurrent events coalesce into shared PJRT calls — §Perf in
+    // EXPERIMENTS.md: batching took this host from 2.5k eps with a
+    // 56ms p99 tail to ~10k eps with p99 < 10ms).
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    run_scaled((4 * cores).clamp(8, 16), 3000)
+}
+
+pub fn run_scaled(clients: usize, events_per_client: usize) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("== Headline: throughput & latency SLOs (Sections 1/3) ==\n\n");
+    let engine = common::build_engine(CONFIG)?;
+    let report = warm_up(&engine, 500, 7)?;
+    out.push_str(&format!(
+        "  warm-up: {} requests (cold p50 {:.2}ms -> warm p50 {:.2}ms)\n",
+        report.requests,
+        report.cold_p50_ns as f64 / 1e6,
+        report.warm_p50_ns as f64 / 1e6
+    ));
+    let r = measure(&engine, clients, events_per_client)?;
+    out.push_str(&format!(
+        "  {} client threads x {} events, multi-tenant mix\n\n",
+        clients, events_per_client
+    ));
+    out.push_str(&format!("  throughput: {:>10.0} events/s (paper cluster avg: 4500 eps)\n", r.throughput_eps));
+    out.push_str(&format!("  latency:    p50 {:.3}ms  p99 {:.3}ms  p99.9 {:.3}ms\n", r.p50_ms, r.p99_ms, r.p999_ms));
+    out.push_str(&format!(
+        "  transformation pipeline alone: {:.0} ns/event ({:.4}% of a 30ms budget)\n",
+        r.transform_ns_per_event,
+        100.0 * r.transform_ns_per_event / 30e6
+    ));
+
+    let mut pass = true;
+    let mut report_s = String::from("\n  SLO checks:\n");
+    let mut check = |name: &str, ok: bool| {
+        report_s.push_str(&format!("    [{}] {name}\n", if ok { "ok" } else { "FAIL" }));
+        pass &= ok;
+    };
+    check("p99 < 30ms", r.p99_ms < 30.0);
+    check("p99.9 < 150ms", r.p999_ms < 150.0);
+    check(">= 1000 events/s single node (paper: >1000 eps)", r.throughput_eps >= 1000.0);
+    check(
+        "transformation overhead negligible (< 0.1% of latency budget)",
+        r.transform_ns_per_event < 30_000.0,
+    );
+    out.push_str(&report_s);
+    if !pass {
+        out.push_str("  WARNING: SLO not met on this host\n");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn headline_slos_hold() {
+        if !crate::runtime::Manifest::default_root().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // Reduced volume for CI speed; the full run is `muse repro headline`.
+        let out = super::run_scaled(4, 500).unwrap();
+        // The SLO numbers are only meaningful with optimizations on;
+        // `cargo test` builds debug, where we only require the harness
+        // to complete. `cargo bench` / `muse repro headline` (release)
+        // enforce the SLOs.
+        if cfg!(debug_assertions) {
+            assert!(out.contains("throughput"), "{out}");
+        } else {
+            assert!(!out.contains("[FAIL]"), "{out}");
+        }
+    }
+}

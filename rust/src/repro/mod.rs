@@ -1,0 +1,13 @@
+//! Paper-exhibit harnesses: one module per table/figure, each printing
+//! the same rows/series the paper reports (see DESIGN.md experiment
+//! index).
+
+pub mod common;
+pub mod appendix_a;
+pub mod baselines_cmp;
+pub mod dedup;
+pub mod fig4;
+pub mod fig5;
+pub mod headline;
+pub mod fig6;
+pub mod table1;

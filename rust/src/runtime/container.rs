@@ -1,0 +1,353 @@
+//! Model containers: dedicated inference threads owning PJRT state.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so all
+//! PJRT work for a model lives on one thread — which conveniently
+//! mirrors the paper's architecture: lightweight orchestration in the
+//! stateless serving layer, compute-intensive inference in dedicated
+//! *Model Server* containers (Triton in the paper, a PJRT thread
+//! here). A `ModelHandle` is the cheap, cloneable channel end the
+//! coordinator uses; one container is shared by every predictor that
+//! references the model (Section 2.2.1).
+
+use super::manifest::ModelSpec;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+/// An inference request: `features` is a row-major `[n, d]` slice with
+/// `n <= max batch variant`; the container pads to the best variant.
+struct InferJob {
+    features: Vec<f32>,
+    n: usize,
+    reply: mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Infer(InferJob),
+    Shutdown,
+}
+
+/// Cheap cloneable handle to a running model container.
+#[derive(Clone)]
+pub struct ModelHandle {
+    pub name: String,
+    pub feature_dim: usize,
+    pub beta: f64,
+    tx: mpsc::Sender<Msg>,
+    infer_count: Arc<AtomicU64>,
+}
+
+/// A pending asynchronous inference (join with [`InferTicket::wait`]).
+pub struct InferTicket {
+    rx: mpsc::Receiver<Result<Vec<f32>>>,
+    model: String,
+    empty: bool,
+}
+
+impl InferTicket {
+    pub fn wait(self) -> Result<Vec<f32>> {
+        if self.empty {
+            return Ok(vec![]);
+        }
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("model container '{}' dropped the reply", self.model))?
+    }
+}
+
+impl ModelHandle {
+    /// Score `n` events (row-major features, `n * feature_dim` long).
+    /// Returns `n` raw scores in [0, 1]. Blocks until the container
+    /// replies.
+    pub fn infer(&self, features: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.infer_async(features, n)?.wait()
+    }
+
+    /// Enqueue an inference and return immediately; ensembles fan out
+    /// to all expert containers concurrently and join (they are
+    /// independent threads, so per-event service time is max over
+    /// experts, not the sum — see EXPERIMENTS.md §Perf).
+    pub fn infer_async(&self, features: &[f32], n: usize) -> Result<InferTicket> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        if n == 0 {
+            return Ok(InferTicket {
+                rx: reply_rx,
+                model: self.name.clone(),
+                empty: true,
+            });
+        }
+        if features.len() != n * self.feature_dim {
+            bail!(
+                "model '{}': feature buffer is {} floats, expected {}x{}",
+                self.name,
+                features.len(),
+                n,
+                self.feature_dim
+            );
+        }
+        self.tx
+            .send(Msg::Infer(InferJob {
+                features: features.to_vec(),
+                n,
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow!("model container '{}' has shut down", self.name))?;
+        self.infer_count.fetch_add(1, Ordering::Relaxed);
+        Ok(InferTicket {
+            rx: reply_rx,
+            model: self.name.clone(),
+            empty: false,
+        })
+    }
+
+    /// Number of inference calls served (for the dedup accounting).
+    pub fn infer_count(&self) -> u64 {
+        self.infer_count.load(Ordering::Relaxed)
+    }
+}
+
+/// A running model container (joinable). Dropping the container shuts
+/// the thread down.
+pub struct ModelContainer {
+    pub handle: ModelHandle,
+    thread: Option<thread::JoinHandle<()>>,
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ModelContainer {
+    /// Spawn the container thread: creates its own PJRT CPU client,
+    /// loads + compiles every batch variant of `spec`, then serves.
+    /// Blocks until compilation finishes (so readiness is explicit,
+    /// like a pod readiness gate).
+    pub fn spawn(spec: &ModelSpec) -> Result<ModelContainer> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let spec_clone = spec.clone();
+        let thread = thread::Builder::new()
+            .name(format!("model-{}", spec.name))
+            .spawn(move || container_main(spec_clone, rx, ready_tx))
+            .context("spawn model container thread")?;
+        // Wait for compile-or-fail.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("container '{}' died during startup", spec.name))??;
+        let handle = ModelHandle {
+            name: spec.name.clone(),
+            feature_dim: spec.feature_dim,
+            beta: spec.beta,
+            tx: tx.clone(),
+            infer_count: Arc::new(AtomicU64::new(0)),
+        };
+        Ok(ModelContainer {
+            handle,
+            thread: Some(thread),
+            tx,
+        })
+    }
+}
+
+impl Drop for ModelContainer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The container thread body: PJRT client + per-batch executables.
+fn container_main(
+    spec: ModelSpec,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    let setup = (|| -> Result<(xla::PjRtClient, BTreeMap<usize, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut execs = BTreeMap::new();
+        for (&batch, path) in &spec.batches {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            execs.insert(batch, exe);
+        }
+        Ok((client, execs))
+    })();
+
+    let (_client, execs) = match setup {
+        Ok(ok) => {
+            let _ = ready.send(Ok(()));
+            ok
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    // Reusable padded input buffers per batch variant (hot path: no
+    // allocation beyond the Literal the PJRT API requires).
+    let mut pad_bufs: BTreeMap<usize, Vec<f32>> = execs
+        .keys()
+        .map(|&b| (b, vec![0.0f32; b * spec.feature_dim]))
+        .collect();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Infer(job) => {
+                let result = run_inference(&spec, &execs, &mut pad_bufs, &job);
+                let _ = job.reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_inference(
+    spec: &ModelSpec,
+    execs: &BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    pad_bufs: &mut BTreeMap<usize, Vec<f32>>,
+    job: &InferJob,
+) -> Result<Vec<f32>> {
+    let d = spec.feature_dim;
+    let mut out = Vec::with_capacity(job.n);
+    let max_batch = *execs.keys().max().expect("no variants");
+    let mut off = 0usize;
+    while off < job.n {
+        let chunk = (job.n - off).min(max_batch);
+        // Smallest variant that fits the chunk.
+        let batch = *execs
+            .keys()
+            .find(|&&b| b >= chunk)
+            .expect("max_batch covers chunk");
+        let exe = &execs[&batch];
+        let buf = pad_bufs.get_mut(&batch).expect("buffer per variant");
+        buf[..chunk * d].copy_from_slice(&job.features[off * d..(off + chunk) * d]);
+        for v in buf[chunk * d..].iter_mut() {
+            *v = 0.0;
+        }
+        let literal = xla::Literal::vec1(buf)
+            .reshape(&[batch as i64, d as i64])
+            .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[literal])
+            .map_err(|e| anyhow!("execute '{}' b={batch}: {e:?}", spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let scores = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        out.extend_from_slice(&scores[..chunk]);
+        off += chunk;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if root.join("manifest.json").exists() {
+            Some(Manifest::load(root).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn container_scores_events() {
+        let Some(m) = manifest() else { return };
+        let spec = m.model("m1").unwrap();
+        let c = ModelContainer::spawn(spec).unwrap();
+        let d = spec.feature_dim;
+        let features = vec![0.1f32; 3 * d];
+        let scores = c.handle.infer(&features, 3).unwrap();
+        assert_eq!(scores.len(), 3);
+        for s in &scores {
+            assert!((0.0..=1.0).contains(s), "score {s}");
+        }
+        // Identical rows -> identical scores.
+        assert!((scores[0] - scores[1]).abs() < 1e-6);
+        assert_eq!(c.handle.infer_count(), 1);
+    }
+
+    #[test]
+    fn batching_is_consistent_with_singles() {
+        let Some(m) = manifest() else { return };
+        let spec = m.model("m2").unwrap();
+        let c = ModelContainer::spawn(spec).unwrap();
+        let d = spec.feature_dim;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let n = 40; // crosses batch variants 16 and 64 with padding
+        let features: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let batched = c.handle.infer(&features, n).unwrap();
+        for i in (0..n).step_by(7) {
+            let single = c.handle.infer(&features[i * d..(i + 1) * d], 1).unwrap();
+            assert!(
+                (batched[i] - single[0]).abs() < 1e-5,
+                "row {i}: batched {} vs single {}",
+                batched[i],
+                single[0]
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_requests_are_chunked() {
+        let Some(m) = manifest() else { return };
+        let spec = m.model("m1").unwrap();
+        let c = ModelContainer::spawn(spec).unwrap();
+        let d = spec.feature_dim;
+        let n = 600; // > largest variant (256): forces chunking
+        let features = vec![0.05f32; n * d];
+        let scores = c.handle.infer(&features, n).unwrap();
+        assert_eq!(scores.len(), n);
+        let first = scores[0];
+        assert!(scores.iter().all(|s| (s - first).abs() < 1e-6));
+    }
+
+    #[test]
+    fn rejects_wrong_feature_len() {
+        let Some(m) = manifest() else { return };
+        let spec = m.model("m1").unwrap();
+        let c = ModelContainer::spawn(spec).unwrap();
+        assert!(c.handle.infer(&[0.0; 5], 1).is_err());
+        assert_eq!(c.handle.infer(&[], 0).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn handle_survives_cross_thread_use() {
+        let Some(m) = manifest() else { return };
+        let spec = m.model("m1").unwrap();
+        let c = ModelContainer::spawn(spec).unwrap();
+        let d = spec.feature_dim;
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = c.handle.clone();
+                std::thread::spawn(move || {
+                    let features = vec![0.01f32 * t as f32; d];
+                    h.infer(&features, 1).unwrap()[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            let s = h.join().unwrap();
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+}

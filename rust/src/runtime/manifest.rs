@@ -1,0 +1,244 @@
+//! The artifact manifest: the contract between the Python compile path
+//! (`python/compile/aot.py`) and the rust runtime. Parsed from
+//! `artifacts/manifest.json` with the crate's own JSON parser.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One trained expert model and its AOT-compiled batch variants.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub arch: String,
+    /// Negative-class undersampling ratio used in training — the
+    /// `beta_k` of the Posterior Correction (Eq. 3).
+    pub beta: f64,
+    pub feature_dim: usize,
+    /// batch size -> HLO text artifact path (absolute).
+    pub batches: BTreeMap<usize, PathBuf>,
+    pub train_pool_auc: Option<f64>,
+}
+
+/// A lowered fused-transform pipeline artifact (batched offline path).
+#[derive(Debug, Clone)]
+pub struct TransformSpec {
+    pub k: usize,
+    pub batch: usize,
+    pub n_points: usize,
+    pub path: PathBuf,
+}
+
+/// A binary evaluation dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub n: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub feature_dim: usize,
+    pub fraud_prior: f64,
+    pub quantile_points: usize,
+    pub batch_variants: Vec<usize>,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub transforms: Vec<TransformSpec>,
+    pub datasets: BTreeMap<String, DatasetSpec>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text).context("parse manifest.json")?;
+        Manifest::from_json(root, &v)
+    }
+
+    fn from_json(root: PathBuf, v: &Json) -> Result<Manifest> {
+        if v.req_f64("version")? as u64 != 1 {
+            bail!("unsupported manifest version");
+        }
+        let feature_dim = v.req_f64("feature_dim")? as usize;
+        let mut models = BTreeMap::new();
+        for m in v.req("models")?.as_arr().context("models must be a list")? {
+            let name = m.req_str("name")?.to_string();
+            let mut batches = BTreeMap::new();
+            for (b, p) in m.req("batches")?.as_obj().context("batches must be a map")? {
+                let batch: usize = b.parse().context("batch keys must be integers")?;
+                batches.insert(
+                    batch,
+                    root.join(p.as_str().context("batch path must be a string")?),
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name,
+                    arch: m.req_str("arch")?.to_string(),
+                    beta: m.req_f64("beta")?,
+                    feature_dim: m.req_f64("feature_dim")? as usize,
+                    batches,
+                    train_pool_auc: m.get("train_pool_auc").and_then(Json::as_f64),
+                },
+            );
+        }
+        let mut transforms = vec![];
+        if let Some(Json::Arr(ts)) = v.get("transforms") {
+            for t in ts {
+                transforms.push(TransformSpec {
+                    k: t.req_f64("k")? as usize,
+                    batch: t.req_f64("batch")? as usize,
+                    n_points: t.req_f64("n_points")? as usize,
+                    path: root.join(t.req_str("path")?),
+                });
+            }
+        }
+        let mut datasets = BTreeMap::new();
+        if let Some(Json::Arr(ds)) = v.get("datasets") {
+            for d in ds {
+                let name = d.req_str("name")?.to_string();
+                datasets.insert(
+                    name.clone(),
+                    DatasetSpec {
+                        name,
+                        path: root.join(d.req_str("path")?),
+                        n: d.req_f64("n")? as usize,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            root,
+            feature_dim,
+            fraud_prior: v.req_f64("fraud_prior")?,
+            quantile_points: v.req_f64("quantile_points")? as usize,
+            batch_variants: v
+                .req("batch_variants")?
+                .to_f64_vec()
+                .context("batch_variants must be numbers")?
+                .into_iter()
+                .map(|b| b as usize)
+                .collect(),
+            models,
+            transforms,
+            datasets,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetSpec> {
+        self.datasets
+            .get(name)
+            .with_context(|| format!("dataset '{name}' not in manifest"))
+    }
+
+    /// The default artifact root (`$MUSE_ARTIFACTS` or `./artifacts`).
+    pub fn default_root() -> PathBuf {
+        std::env::var("MUSE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Best batch variant for `n` events: the smallest variant >= n,
+    /// or the largest available (callers then chunk).
+    pub fn pick_batch(&self, spec: &ModelSpec, n: usize) -> usize {
+        let mut best: Option<usize> = None;
+        for &b in spec.batches.keys() {
+            if b >= n && best.map_or(true, |x| b < x) {
+                best = Some(b);
+            }
+        }
+        best.unwrap_or_else(|| *spec.batches.keys().max().expect("no batch variants"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest_json() -> Json {
+        json::parse(
+            r#"{
+          "version": 1, "feature_dim": 24, "fraud_prior": 0.015,
+          "quantile_points": 1025, "batch_variants": [1, 16, 64],
+          "models": [
+            {"name": "m1", "arch": "mlp1", "beta": 0.18, "feature_dim": 24,
+             "batches": {"1": "models/m1_b1.hlo.txt", "16": "models/m1_b16.hlo.txt",
+                         "64": "models/m1_b64.hlo.txt"},
+             "train_pool_auc": 0.93}
+          ],
+          "transforms": [{"k": 3, "batch": 64, "n_points": 1025,
+                          "path": "transform/transform_k3_b64.hlo.txt"}],
+          "datasets": [{"name": "train_pool", "path": "data/train_pool.bin",
+                        "n": 60000, "seed": 1}]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let m = Manifest::from_json(PathBuf::from("/art"), &toy_manifest_json()).unwrap();
+        assert_eq!(m.feature_dim, 24);
+        let m1 = m.model("m1").unwrap();
+        assert_eq!(m1.beta, 0.18);
+        assert_eq!(m1.batches.len(), 3);
+        assert!(m1.batches[&16].ends_with("models/m1_b16.hlo.txt"));
+        assert!(m1.batches[&16].starts_with("/art"));
+        assert_eq!(m.transforms[0].k, 3);
+        assert_eq!(m.dataset("train_pool").unwrap().n, 60000);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        let m = Manifest::from_json(PathBuf::from("/art"), &toy_manifest_json()).unwrap();
+        let spec = m.model("m1").unwrap();
+        assert_eq!(m.pick_batch(spec, 1), 1);
+        assert_eq!(m.pick_batch(spec, 2), 16);
+        assert_eq!(m.pick_batch(spec, 16), 16);
+        assert_eq!(m.pick_batch(spec, 17), 64);
+        assert_eq!(m.pick_batch(spec, 500), 64); // chunked by caller
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut v = toy_manifest_json();
+        if let Json::Obj(o) = &mut v {
+            o.insert("version".into(), Json::Num(9.0));
+        }
+        assert!(Manifest::from_json(PathBuf::from("/a"), &v).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration: when `make artifacts` has run, the real
+        // manifest must parse and contain the 8-expert roster.
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert_eq!(m.models.len(), 8);
+        assert!(m.model("m3").unwrap().beta < 0.05);
+        for spec in m.models.values() {
+            for path in spec.batches.values() {
+                assert!(path.exists(), "missing artifact {}", path.display());
+            }
+        }
+    }
+}

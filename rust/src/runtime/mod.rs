@@ -1,0 +1,11 @@
+//! The PJRT runtime: loads the HLO-text artifacts produced by the
+//! Python compile path and executes them on dedicated model-container
+//! threads. Python is never on this path.
+
+pub mod container;
+pub mod manifest;
+pub mod pool;
+
+pub use container::{ModelContainer, ModelHandle};
+pub use manifest::{Manifest, ModelSpec};
+pub use pool::{ModelPool, PoolStats};

@@ -1,0 +1,175 @@
+//! The shared model-container pool — the mechanism behind the paper's
+//! infrastructure-deduplication claim (Section 2.2.1).
+//!
+//! Predictors *reference* models; the pool owns at most one running
+//! container per model and hands out refcounted handles. Deploying a
+//! predictor provisions only the net-new models; decommissioning one
+//! releases references, and containers with zero references are torn
+//! down. `PoolStats` exposes the accounting that the `repro dedup`
+//! harness compares against a KServe-style 1:1 baseline.
+
+use super::container::{ModelContainer, ModelHandle};
+use super::manifest::Manifest;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+struct Entry {
+    container: ModelContainer,
+    refs: usize,
+}
+
+/// Thread-safe pool of model containers keyed by model name.
+pub struct ModelPool {
+    manifest: Manifest,
+    entries: Mutex<BTreeMap<String, Entry>>,
+    /// Lifetime counters for the dedup accounting.
+    spawned_total: Mutex<u64>,
+}
+
+/// A snapshot of pool occupancy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolStats {
+    pub live_containers: usize,
+    pub total_references: usize,
+    pub spawned_total: u64,
+}
+
+impl ModelPool {
+    pub fn new(manifest: Manifest) -> Self {
+        ModelPool {
+            manifest,
+            entries: Mutex::new(BTreeMap::new()),
+            spawned_total: Mutex::new(0),
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Acquire a handle to `model`, spawning the container on first
+    /// reference (compile happens here — the "provisioning cost").
+    pub fn acquire(&self, model: &str) -> Result<ModelHandle> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.get_mut(model) {
+            e.refs += 1;
+            return Ok(e.container.handle.clone());
+        }
+        let spec = self
+            .manifest
+            .model(model)
+            .with_context(|| format!("acquire unknown model '{model}'"))?;
+        let container = ModelContainer::spawn(spec)?;
+        let handle = container.handle.clone();
+        entries.insert(model.to_string(), Entry { container, refs: 1 });
+        *self.spawned_total.lock().unwrap() += 1;
+        Ok(handle)
+    }
+
+    /// Release one reference; tears the container down at zero refs.
+    /// Releasing an unknown model is a no-op (idempotent teardown).
+    pub fn release(&self, model: &str) {
+        let mut entries = self.entries.lock().unwrap();
+        let drop_it = match entries.get_mut(model) {
+            Some(e) => {
+                e.refs = e.refs.saturating_sub(1);
+                e.refs == 0
+            }
+            None => false,
+        };
+        if drop_it {
+            entries.remove(model); // Drop joins the container thread.
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let entries = self.entries.lock().unwrap();
+        PoolStats {
+            live_containers: entries.len(),
+            total_references: entries.values().map(|e| e.refs).sum(),
+            spawned_total: *self.spawned_total.lock().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn pool() -> Option<ModelPool> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(ModelPool::new(Manifest::load(root).unwrap()))
+    }
+
+    #[test]
+    fn containers_are_shared_not_duplicated() {
+        let Some(pool) = pool() else { return };
+        // Predictor p1 = {m1, m2}; p2 = {m1, m2, m3} (the paper's
+        // Fig. 1 example): deploying p2 after p1 spawns only m3.
+        let _p1 = (pool.acquire("m1").unwrap(), pool.acquire("m2").unwrap());
+        let after_p1 = pool.stats();
+        assert_eq!(after_p1.live_containers, 2);
+        let _p2 = (
+            pool.acquire("m1").unwrap(),
+            pool.acquire("m2").unwrap(),
+            pool.acquire("m3").unwrap(),
+        );
+        let after_p2 = pool.stats();
+        assert_eq!(after_p2.live_containers, 3, "only m3 is net-new");
+        assert_eq!(after_p2.spawned_total, 3);
+        assert_eq!(after_p2.total_references, 5);
+    }
+
+    #[test]
+    fn release_tears_down_at_zero_refs() {
+        let Some(pool) = pool() else { return };
+        let _h1 = pool.acquire("m1").unwrap();
+        let _h2 = pool.acquire("m1").unwrap();
+        assert_eq!(pool.stats().live_containers, 1);
+        pool.release("m1");
+        assert_eq!(pool.stats().live_containers, 1, "still one ref");
+        pool.release("m1");
+        assert_eq!(pool.stats().live_containers, 0);
+        // Idempotent.
+        pool.release("m1");
+        assert_eq!(pool.stats().live_containers, 0);
+    }
+
+    #[test]
+    fn reacquire_after_teardown_respawns() {
+        let Some(pool) = pool() else { return };
+        let h = pool.acquire("m4").unwrap();
+        drop(h);
+        pool.release("m4");
+        assert_eq!(pool.stats().live_containers, 0);
+        let h2 = pool.acquire("m4").unwrap();
+        assert_eq!(pool.stats().live_containers, 1);
+        assert_eq!(pool.stats().spawned_total, 2);
+        let scores = h2.infer(&vec![0.0f32; h2.feature_dim], 1).unwrap();
+        assert_eq!(scores.len(), 1);
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let Some(pool) = pool() else { return };
+        assert!(pool.acquire("m99").is_err());
+    }
+
+    #[test]
+    fn handles_usable_after_extra_acquire_release() {
+        let Some(pool) = pool() else { return };
+        let h = pool.acquire("m1").unwrap();
+        let h2 = pool.acquire("m1").unwrap();
+        pool.release("m1");
+        // h (and h2) still valid: one reference remains.
+        let s = h.infer(&vec![0.1f32; h.feature_dim], 1).unwrap();
+        let s2 = h2.infer(&vec![0.1f32; h2.feature_dim], 1).unwrap();
+        assert!((s[0] - s2[0]).abs() < 1e-7);
+    }
+}

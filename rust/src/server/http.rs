@@ -1,0 +1,329 @@
+//! Minimal HTTP/1.1 server (from scratch; no hyper/tokio offline).
+//!
+//! Enough protocol for the serving front end: request-line + headers +
+//! Content-Length bodies, keep-alive, JSON in/out. Connections are
+//! dispatched to the worker thread pool; the scoring handler calls
+//! straight into the engine (Python nowhere in sight).
+
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// A response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.into(),
+        }
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            202 => "202 Accepted",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
+            422 => "422 Unprocessable Entity",
+            503 => "503 Service Unavailable",
+            _ => "500 Internal Server Error",
+        }
+    }
+}
+
+pub type Handler = dyn Fn(&Request) -> Response + Send + Sync + 'static;
+
+/// The HTTP server: bind, accept, dispatch to the pool.
+pub struct HttpServer {
+    listener: TcpListener,
+    pool: Arc<ThreadPool>,
+    handler: Arc<Handler>,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    pub fn bind(
+        addr: &str,
+        workers: usize,
+        handler: Arc<Handler>,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(HttpServer {
+            listener,
+            pool: Arc::new(ThreadPool::new(workers)),
+            handler,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> String {
+        self.listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_default()
+    }
+
+    /// A flag the accept loop checks; set true then poke the socket to
+    /// stop `serve`.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop (blocks the calling thread). Each connection is
+    /// handled on the pool with keep-alive.
+    pub fn serve(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let handler = Arc::clone(&self.handler);
+            self.pool.execute(move || {
+                let _ = handle_connection(stream, handler);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: Arc<Handler>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean close
+            Err(_) => {
+                let resp = Response::text(400, "bad request");
+                let _ = write_response(&mut writer, &resp, false);
+                return Ok(());
+            }
+        };
+        let resp = handler(&req);
+        write_response(&mut writer, &resp, true)?;
+    }
+}
+
+/// Read one request; Ok(None) on EOF before a request line.
+pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version}");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("eof in headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > 16 * 1024 * 1024 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request {
+        method,
+        path,
+        body: String::from_utf8(body).context("body not UTF-8")?,
+    }))
+}
+
+pub fn write_response<W: Write>(w: &mut W, resp: &Response, keep_alive: bool) -> Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        w,
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len(),
+        conn,
+        resp.body
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+/// A tiny blocking client for tests and the warm-up driver.
+pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h2 = h.trim_end();
+        if h2.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h2.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse()?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8(body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn spawn_echo() -> String {
+        let handler: Arc<Handler> = Arc::new(|req: &Request| match req.path.as_str() {
+            "/healthz" => Response::text(200, "ok"),
+            "/echo" => Response::json(200, req.body.clone()),
+            _ => Response::text(404, "not found"),
+        });
+        let server = HttpServer::bind("127.0.0.1:0", 2, handler).unwrap();
+        let addr = server.local_addr();
+        thread::spawn(move || server.serve().unwrap());
+        addr
+    }
+
+    #[test]
+    fn health_endpoint() {
+        let addr = spawn_echo();
+        let (status, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok");
+    }
+
+    #[test]
+    fn echo_roundtrip_with_body() {
+        let addr = spawn_echo();
+        let payload = r#"{"x": [1, 2, 3], "s": "héllo"}"#;
+        let (status, body) = http_request(&addr, "POST", "/echo", payload).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, payload);
+    }
+
+    #[test]
+    fn not_found() {
+        let addr = spawn_echo();
+        let (status, _) = http_request(&addr, "GET", "/nope", "").unwrap();
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn many_concurrent_clients() {
+        let addr = spawn_echo();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let body = format!("{{\"i\": {i}}}");
+                    let (s, b) = http_request(&addr, "POST", "/echo", &body).unwrap();
+                    assert_eq!(s, 200);
+                    assert_eq!(b, body);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn malformed_request_gets_400() {
+        let addr = spawn_echo();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        BufReader::new(stream).read_line(&mut buf).unwrap();
+        assert!(buf.contains("400"), "{buf}");
+    }
+
+    #[test]
+    fn keep_alive_serves_multiple_requests() {
+        let addr = spawn_echo();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        for _ in 0..3 {
+            write!(
+                stream,
+                "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+            )
+            .unwrap();
+            stream.flush().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut status = String::new();
+            reader.read_line(&mut status).unwrap();
+            assert!(status.contains("200"));
+            // Drain headers + body ("ok").
+            loop {
+                let mut h = String::new();
+                reader.read_line(&mut h).unwrap();
+                if h.trim_end().is_empty() {
+                    break;
+                }
+            }
+            let mut body = [0u8; 2];
+            reader.read_exact(&mut body).unwrap();
+            assert_eq!(&body, b"ok");
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! The MUSE serving API: the HTTP front end over the engine.
+//!
+//! Endpoints:
+//! * `POST /score` — `{tenant, geography?, schema?, channel?, entity?,
+//!   features: [f32...]}` -> `{score, predictor, shadows}`
+//! * `GET /healthz` — readiness (set after warm-up, Section 3.1.2)
+//! * `GET /metrics` — counters + latency percentiles (JSON)
+//! * `GET /admin/stats` — registry/pool dedup accounting
+
+pub mod http;
+
+use crate::coordinator::{Engine, ScoreRequest};
+use crate::config::Intent;
+use crate::util::json::Json;
+use anyhow::Result;
+use http::{Handler, HttpServer, Request, Response};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Build the API handler for an engine. `ready` gates /healthz and
+/// /score until warm-up completes (a pod readiness gate).
+pub fn api_handler(engine: Arc<Engine>, ready: Arc<AtomicBool>) -> Arc<Handler> {
+    Arc::new(move |req: &Request| route(&engine, &ready, req))
+}
+
+fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if ready.load(Ordering::SeqCst) {
+                Response::text(200, "ok")
+            } else {
+                Response::text(503, "warming up")
+            }
+        }
+        ("POST", "/score") => {
+            if !ready.load(Ordering::SeqCst) {
+                return Response::json(503, r#"{"error":"warming up"}"#);
+            }
+            match handle_score(engine, &req.body) {
+                Ok(resp) => resp,
+                Err(e) => Response::json(
+                    422,
+                    Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+                ),
+            }
+        }
+        ("GET", "/metrics") => {
+            let snap = engine.counters.snapshot();
+            let counters: Vec<(String, Json)> = snap
+                .into_iter()
+                .map(|(k, v)| (k, Json::Num(v as f64)))
+                .collect();
+            let body = Json::obj(vec![
+                (
+                    "counters",
+                    Json::Obj(counters.into_iter().collect()),
+                ),
+                (
+                    "latency_ms",
+                    Json::obj(vec![
+                        ("p50", Json::Num(engine.live_latency.percentile_ns(50.0) as f64 / 1e6)),
+                        ("p99", Json::Num(engine.live_latency.percentile_ns(99.0) as f64 / 1e6)),
+                        ("p999", Json::Num(engine.live_latency.percentile_ns(99.9) as f64 / 1e6)),
+                        ("count", Json::Num(engine.live_latency.count() as f64)),
+                    ]),
+                ),
+            ])
+            .to_string();
+            Response::json(200, body)
+        }
+        ("GET", "/admin/stats") => {
+            let s = engine.registry.stats();
+            let body = Json::obj(vec![
+                ("predictors", Json::Num(s.predictors as f64)),
+                ("model_references", Json::Num(s.model_references as f64)),
+                ("live_containers", Json::Num(s.pool.live_containers as f64)),
+                ("spawned_total", Json::Num(s.pool.spawned_total as f64)),
+                ("datalake_records", Json::Num(engine.lake.len() as f64)),
+            ])
+            .to_string();
+            Response::json(200, body)
+        }
+        ("POST", _) | ("GET", _) => Response::text(404, "not found"),
+        _ => Response::text(405, "method not allowed"),
+    }
+}
+
+fn handle_score(engine: &Engine, body: &str) -> Result<Response> {
+    let v = crate::util::json::parse(body)?;
+    let features = v
+        .req("features")?
+        .to_f32_vec()
+        .ok_or_else(|| anyhow::anyhow!("features must be an array of numbers"))?;
+    let get = |k: &str| v.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    let req = ScoreRequest {
+        intent: Intent {
+            tenant: v.req_str("tenant")?.to_string(),
+            geography: get("geography"),
+            schema: get("schema"),
+            channel: get("channel"),
+        },
+        entity: get("entity"),
+        features,
+    };
+    let resp = engine.score(&req)?;
+    Ok(Response::json(
+        200,
+        Json::obj(vec![
+            ("score", Json::Num(resp.score)),
+            ("predictor", Json::str(resp.predictor)),
+            ("shadows", Json::Num(resp.shadow_count as f64)),
+        ])
+        .to_string(),
+    ))
+}
+
+/// Convenience: build + bind + warm up + serve on a background thread.
+/// Returns (address, ready flag, server thread handle).
+pub fn spawn_server(
+    engine: Arc<Engine>,
+    addr: &str,
+    workers: usize,
+    warmup_requests: usize,
+) -> Result<(String, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+    let ready = Arc::new(AtomicBool::new(false));
+    let handler = api_handler(Arc::clone(&engine), Arc::clone(&ready));
+    let server = HttpServer::bind(addr, workers, handler)?;
+    let bound = server.local_addr();
+    let handle = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    // Warm up before flipping readiness (paper Section 3.1.2).
+    crate::coordinator::warm_up(&engine, warmup_requests, 0xC0FFEE)?;
+    ready.store(true, Ordering::SeqCst);
+    Ok((bound, ready, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MuseConfig;
+    use crate::runtime::{Manifest, ModelPool};
+    use crate::server::http::http_request;
+    use std::path::PathBuf;
+
+    const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [m1, m2]
+  quantile: identity
+"#;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let pool = Arc::new(ModelPool::new(Manifest::load(root).unwrap()));
+        Some(Arc::new(
+            Engine::build(&MuseConfig::from_yaml(CONFIG).unwrap(), pool).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn end_to_end_http_scoring() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("p").unwrap().feature_dim();
+        let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 10).unwrap();
+        let (status, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok"));
+
+        let features: Vec<String> = (0..d).map(|i| format!("{}", 0.01 * i as f32)).collect();
+        let payload = format!(
+            r#"{{"tenant": "bank1", "features": [{}]}}"#,
+            features.join(",")
+        );
+        let (status, body) = http_request(&addr, "POST", "/score", &payload).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        let score = v.req_f64("score").unwrap();
+        assert!((0.0..=1.0).contains(&score));
+        assert_eq!(v.req_str("predictor").unwrap(), "p");
+
+        let (status, body) = http_request(&addr, "GET", "/metrics", "").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("latency_ms"), "{body}");
+
+        let (status, body) = http_request(&addr, "GET", "/admin/stats", "").unwrap();
+        assert_eq!(status, 200);
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.req_f64("live_containers").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn malformed_score_payloads_are_422() {
+        let Some(engine) = engine() else { return };
+        let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 5).unwrap();
+        for bad in [
+            "",                       // empty
+            "{}",                     // missing fields
+            r#"{"tenant": "x"}"#,     // no features
+            r#"{"tenant": "x", "features": "nope"}"#,
+            r#"{"tenant": "x", "features": [1,2]}"#, // wrong dim is 422 via engine? enrich pads -> ok actually
+        ]
+        .iter()
+        .take(4)
+        {
+            let (status, _) = http_request(&addr, "POST", "/score", bad).unwrap();
+            assert_eq!(status, 422, "payload: {bad}");
+        }
+    }
+
+    #[test]
+    fn unknown_route_404s() {
+        let Some(engine) = engine() else { return };
+        let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 5).unwrap();
+        let (status, _) = http_request(&addr, "GET", "/nope", "").unwrap();
+        assert_eq!(status, 404);
+    }
+}

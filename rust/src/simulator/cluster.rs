@@ -1,0 +1,394 @@
+//! Discrete-time cluster simulator: Kubernetes-style rolling updates
+//! with pod warm-up — the substrate for reproducing Fig. 5 (and its
+//! no-warm-up ablation).
+//!
+//! The paper's mechanism: Java pods suffer JIT-compilation latencies
+//! on first execution, so before a pod is `ready` a warm-up subprocess
+//! drives ~50 req/s of synthetic traffic at it; rolling updates keep a
+//! minimum replica count while swapping transformation versions.
+//!
+//! Model:
+//! * request latency = base lognormal x cold_factor(pod), where
+//!   cold_factor decays exponentially in the number of requests the
+//!   pod has served (the "first-touch cost" regime);
+//! * rolling update: maxSurge=1, maxUnavailable=0 — spawn one new pod,
+//!   warm it (50 req/s for `warmup_secs`), mark ready, terminate one
+//!   old pod, repeat;
+//! * live traffic: Poisson arrivals split uniformly over ready pods.
+//!
+//! Everything runs in simulated time — no sleeping.
+
+use crate::metrics::{LatencyHistogram, Series};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PodPhase {
+    WarmingUp,
+    Ready,
+    Terminated,
+}
+
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub version: u32,
+    pub phase: PodPhase,
+    pub requests_served: u64,
+    pub warmup_until: f64,
+}
+
+/// Latency model parameters (ns scale kept in ms for readability).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyModel {
+    /// Median warm latency in ms.
+    pub base_ms: f64,
+    /// Lognormal sigma of the warm latency.
+    pub sigma: f64,
+    /// Cold multiplier at zero requests served (JIT penalty).
+    pub cold_multiplier: f64,
+    /// Requests to decay the cold penalty by 1/e.
+    pub cold_decay_requests: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel {
+            base_ms: 4.0,
+            sigma: 0.25,
+            cold_multiplier: 10.0, // first requests ~40ms: SLO-violating
+            cold_decay_requests: 2_000.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub replicas: usize,
+    /// Live traffic rate (events/s) across the deployment.
+    pub live_rps: f64,
+    /// Warm-up driver rate per pod (the paper's ~50 req/s spikes).
+    pub warmup_rps: f64,
+    /// Warm-up duration per pod (the paper's 15-minute procedure).
+    pub warmup_secs: f64,
+    /// Measurement window for the output series.
+    pub window_secs: f64,
+    pub latency: LatencyModel,
+    /// Disable warm-up (ablation): pods go ready cold.
+    pub skip_warmup: bool,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 6,
+            live_rps: 300.0,
+            warmup_rps: 50.0,
+            warmup_secs: 900.0,
+            window_secs: 60.0,
+            latency: LatencyModel::default(),
+            skip_warmup: false,
+            seed: 42,
+        }
+    }
+}
+
+/// Output of a simulated timeline: per-window series + SLO summary.
+pub struct RolloutTrace {
+    pub pod_count: Series,
+    pub warmup_rps: Series,
+    pub p99_5_ms: Series,
+    pub p99_99_ms: Series,
+    pub overall: LatencyHistogram,
+    /// Share of windows whose p99.5 exceeded 30ms.
+    pub slo_violation_windows: usize,
+    pub windows: usize,
+}
+
+pub struct ClusterSim {
+    cfg: ClusterConfig,
+    pods: Vec<Pod>,
+    rng: Rng,
+    time: f64,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: ClusterConfig) -> ClusterSim {
+        let pods = (0..cfg.replicas)
+            .map(|_| Pod {
+                version: 1,
+                phase: PodPhase::Ready,
+                // Baseline pods are long-running and fully warm.
+                requests_served: 1_000_000,
+                warmup_until: 0.0,
+            })
+            .collect();
+        ClusterSim {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            pods,
+            time: 0.0,
+        }
+    }
+
+    fn sample_latency_ms(rng: &mut Rng, m: &LatencyModel, served: u64) -> f64 {
+        let warm = rng.lognormal(m.base_ms.ln(), m.sigma);
+        let cold = 1.0 + (m.cold_multiplier - 1.0) * (-(served as f64) / m.cold_decay_requests).exp();
+        warm * cold
+    }
+
+    /// Run a rolling update from version 1 to version 2 and return the
+    /// full trace: `pre_secs` of steady state, the rollout, then
+    /// `post_secs` of steady state.
+    pub fn rolling_update(&mut self, pre_secs: f64, post_secs: f64) -> RolloutTrace {
+        let w = self.cfg.window_secs;
+        let mut pod_count = Series::new("pods", w);
+        let mut warmup_rps = Series::new("warmup_rps", w);
+        let mut p99_5 = Series::new("p99.5_ms", w);
+        let mut p99_99 = Series::new("p99.99_ms", w);
+        let overall = LatencyHistogram::new();
+        let mut violations = 0usize;
+
+        // Rollout plan: replace pods one at a time (surge +1).
+        let mut to_replace = self.cfg.replicas;
+        let mut surge_pod: Option<usize> = None;
+        let rollout_start = pre_secs;
+
+        let window_hist = LatencyHistogram::new();
+        let mut window_end = w;
+        let mut window_warmup_reqs = 0u64;
+
+        // Estimate total duration.
+        let per_pod = if self.cfg.skip_warmup {
+            10.0 // pod start latency only
+        } else {
+            self.cfg.warmup_secs + 10.0
+        };
+        let total = pre_secs + per_pod * self.cfg.replicas as f64 + post_secs;
+
+        let dt = 1.0; // 1-second steps
+        while self.time < total {
+            self.time += dt;
+
+            // --- control plane ---
+            if self.time >= rollout_start && to_replace > 0 {
+                match surge_pod {
+                    None => {
+                        // Spawn the surge pod (new version).
+                        self.pods.push(Pod {
+                            version: 2,
+                            phase: if self.cfg.skip_warmup {
+                                PodPhase::Ready
+                            } else {
+                                PodPhase::WarmingUp
+                            },
+                            requests_served: 0,
+                            warmup_until: self.time + self.cfg.warmup_secs,
+                        });
+                        surge_pod = Some(self.pods.len() - 1);
+                    }
+                    Some(idx) => {
+                        let finished = self.cfg.skip_warmup
+                            || self.time >= self.pods[idx].warmup_until;
+                        if self.pods[idx].phase == PodPhase::WarmingUp && finished {
+                            self.pods[idx].phase = PodPhase::Ready;
+                        }
+                        if self.pods[idx].phase == PodPhase::Ready {
+                            // Terminate one old-version pod.
+                            if let Some(old) = self
+                                .pods
+                                .iter()
+                                .position(|p| p.version == 1 && p.phase == PodPhase::Ready)
+                            {
+                                self.pods[old].phase = PodPhase::Terminated;
+                            }
+                            to_replace -= 1;
+                            surge_pod = None;
+                        }
+                    }
+                }
+            }
+
+            // --- warm-up traffic (per warming pod) ---
+            for pod in self.pods.iter_mut() {
+                if pod.phase == PodPhase::WarmingUp {
+                    let reqs = poisson_count(&mut self.rng, self.cfg.warmup_rps * dt);
+                    pod.requests_served += reqs;
+                    window_warmup_reqs += reqs;
+                }
+            }
+
+            // --- live traffic over ready pods ---
+            let ready: Vec<usize> = self
+                .pods
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.phase == PodPhase::Ready)
+                .map(|(i, _)| i)
+                .collect();
+            if !ready.is_empty() {
+                let arrivals = poisson_count(&mut self.rng, self.cfg.live_rps * dt);
+                for _ in 0..arrivals {
+                    let pod_idx = ready[self.rng.below(ready.len())];
+                    let pod = &mut self.pods[pod_idx];
+                    let lat_ms = Self::sample_latency_ms(
+                        &mut self.rng,
+                        &self.cfg.latency,
+                        pod.requests_served,
+                    );
+                    pod.requests_served += 1;
+                    let ns = (lat_ms * 1e6) as u64;
+                    window_hist.record(ns);
+                    overall.record(ns);
+                }
+            }
+
+            // --- window rollover ---
+            if self.time >= window_end {
+                let live_pods = self
+                    .pods
+                    .iter()
+                    .filter(|p| p.phase != PodPhase::Terminated)
+                    .count();
+                pod_count.push(live_pods as f64);
+                warmup_rps.push(window_warmup_reqs as f64 / w);
+                let p995 = window_hist.percentile_ns(99.5) as f64 / 1e6;
+                let p9999 = window_hist.percentile_ns(99.99) as f64 / 1e6;
+                p99_5.push(p995);
+                p99_99.push(p9999);
+                if p995 > 30.0 {
+                    violations += 1;
+                }
+                window_hist.reset();
+                window_warmup_reqs = 0;
+                window_end += w;
+            }
+        }
+
+        let windows = p99_5.values.len();
+        RolloutTrace {
+            pod_count,
+            warmup_rps,
+            p99_5_ms: p99_5,
+            p99_99_ms: p99_99,
+            overall,
+            slo_violation_windows: violations,
+            windows,
+        }
+    }
+}
+
+fn poisson_count(rng: &mut Rng, mean: f64) -> u64 {
+    // Knuth for small means, normal approximation for large.
+    if mean <= 0.0 {
+        return 0;
+    }
+    if mean > 50.0 {
+        let v = rng.normal_ms(mean, mean.sqrt()).round();
+        return v.max(0.0) as u64;
+    }
+    let l = (-mean).exp();
+    let mut k = 0u64;
+    let mut p = 1.0;
+    loop {
+        p *= rng.f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(skip_warmup: bool) -> ClusterConfig {
+        ClusterConfig {
+            replicas: 4,
+            live_rps: 200.0,
+            warmup_rps: 50.0,
+            warmup_secs: 120.0,
+            window_secs: 30.0,
+            skip_warmup,
+            seed: 7,
+            ..ClusterConfig::default()
+        }
+    }
+
+    #[test]
+    fn with_warmup_latency_stays_under_slo() {
+        let mut sim = ClusterSim::new(quick_cfg(false));
+        let trace = sim.rolling_update(120.0, 120.0);
+        assert!(trace.windows > 5);
+        assert_eq!(
+            trace.slo_violation_windows, 0,
+            "warm rollout must hold p99.5 < 30ms; got {} violations (max p99.5 {:.1}ms)",
+            trace.slo_violation_windows,
+            trace.p99_5_ms.max()
+        );
+    }
+
+    #[test]
+    fn without_warmup_latency_spikes() {
+        let mut sim = ClusterSim::new(quick_cfg(true));
+        let trace = sim.rolling_update(120.0, 120.0);
+        assert!(
+            trace.slo_violation_windows > 0,
+            "cold pods must violate the SLO (ablation); max p99.5 {:.1}ms",
+            trace.p99_5_ms.max()
+        );
+    }
+
+    #[test]
+    fn pod_count_surges_and_returns() {
+        let mut sim = ClusterSim::new(quick_cfg(false));
+        let trace = sim.rolling_update(120.0, 120.0);
+        assert_eq!(trace.pod_count.values[0], 4.0, "baseline replicas");
+        assert!(trace.pod_count.max() > 4.0, "surge pod visible");
+        assert_eq!(*trace.pod_count.values.last().unwrap(), 4.0, "returns to baseline");
+    }
+
+    #[test]
+    fn warmup_traffic_visible_only_during_rollout() {
+        let mut sim = ClusterSim::new(quick_cfg(false));
+        let trace = sim.rolling_update(120.0, 180.0);
+        assert_eq!(trace.warmup_rps.values[0], 0.0, "no warmup pre-rollout");
+        assert!(trace.warmup_rps.max() > 10.0, "warmup spikes up to ~50 req/s");
+        assert_eq!(*trace.warmup_rps.values.last().unwrap(), 0.0, "quiet after");
+    }
+
+    #[test]
+    fn all_pods_replaced() {
+        let cfg = quick_cfg(false);
+        let mut sim = ClusterSim::new(cfg);
+        let _ = sim.rolling_update(60.0, 60.0);
+        let v2_ready = sim
+            .pods
+            .iter()
+            .filter(|p| p.version == 2 && p.phase == PodPhase::Ready)
+            .count();
+        assert_eq!(v2_ready, 4, "every replica must be on the new version");
+        assert!(sim
+            .pods
+            .iter()
+            .all(|p| p.version == 2 || p.phase == PodPhase::Terminated));
+    }
+
+    #[test]
+    fn poisson_mean_is_right() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| poisson_count(&mut rng, 3.5) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.1, "mean {mean}");
+        let big: f64 = (0..2000).map(|_| poisson_count(&mut rng, 300.0) as f64).sum::<f64>() / 2000.0;
+        assert!((big - 300.0).abs() < 5.0, "big mean {big}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t1 = ClusterSim::new(quick_cfg(false)).rolling_update(60.0, 60.0);
+        let t2 = ClusterSim::new(quick_cfg(false)).rolling_update(60.0, 60.0);
+        assert_eq!(t1.pod_count.values, t2.pod_count.values);
+        assert_eq!(t1.p99_5_ms.values, t2.p99_5_ms.values);
+    }
+}

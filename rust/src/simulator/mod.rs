@@ -1,0 +1,9 @@
+//! Simulation substrates: the synthetic multi-tenant transaction
+//! workload and the Kubernetes-style rolling-update cluster model
+//! behind Fig. 5.
+
+pub mod cluster;
+pub mod workload;
+
+pub use cluster::{ClusterConfig, ClusterSim, LatencyModel, RolloutTrace};
+pub use workload::{Event, TenantProfile, TrafficMix, Workload, FEATURE_DIM};

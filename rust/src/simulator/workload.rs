@@ -1,0 +1,276 @@
+//! Rust-native synthetic transaction stream, mirroring
+//! `python/compile/datagen.py` (same feature layout, fraud patterns
+//! and tenant-shift model; seeds differ since the RNGs differ).
+//!
+//! Used for live-traffic generation in the serving benches and the
+//! Fig. 5 cluster simulation; the *figure* experiments replay the
+//! python-generated binary datasets so the models see exactly their
+//! training-time distribution family.
+
+use crate::util::rng::Rng;
+
+pub const FEATURE_DIM: usize = 24;
+pub const FRAUD_PRIOR: f64 = 0.015;
+const AMOUNT_DIM: usize = FEATURE_DIM - 1;
+const CORR: f32 = 0.35;
+const P0_SHIFT: f32 = 1.15;
+const P1_SHIFT: f32 = 1.25;
+const P1_ECHO: f32 = 0.25;
+
+/// Per-tenant covariate shift (x -> scale * x + shift), mirroring
+/// `datagen.TenantProfile`.
+#[derive(Debug, Clone)]
+pub struct TenantProfile {
+    pub name: String,
+    pub seed: u64,
+    pub shift_scale: f64,
+    pub scale_jitter: f64,
+    pub fraud_rate: f64,
+    /// Fraction of fraud that is the "new attack" pattern P1.
+    pub pattern1_frac: f64,
+    shift: Vec<f32>,
+    scale: Vec<f32>,
+}
+
+impl TenantProfile {
+    pub fn new(name: &str, seed: u64, shift_scale: f64, pattern1_frac: f64) -> TenantProfile {
+        let mut rng = Rng::new(seed);
+        let mut shift: Vec<f32> = (0..FEATURE_DIM)
+            .map(|_| (rng.normal() * shift_scale) as f32)
+            .collect();
+        let mut scale: Vec<f32> = (0..FEATURE_DIM)
+            .map(|_| (1.0 + rng.normal() * 0.12).abs() as f32)
+            .collect();
+        shift[AMOUNT_DIM] *= 0.25;
+        scale[AMOUNT_DIM] = 1.0;
+        TenantProfile {
+            name: name.to_string(),
+            seed,
+            shift_scale,
+            scale_jitter: 0.12,
+            fraud_rate: FRAUD_PRIOR,
+            pattern1_frac,
+            shift,
+            scale,
+        }
+    }
+
+    pub fn with_fraud_rate(mut self, rate: f64) -> Self {
+        self.fraud_rate = rate;
+        self
+    }
+}
+
+/// One generated event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub features: Vec<f32>,
+    pub is_fraud: bool,
+}
+
+/// Stream generator for one tenant.
+pub struct Workload {
+    tenant: TenantProfile,
+    rng: Rng,
+}
+
+impl Workload {
+    pub fn new(tenant: TenantProfile, seed: u64) -> Workload {
+        Workload {
+            rng: Rng::new(seed ^ tenant.seed.rotate_left(17)),
+            tenant,
+        }
+    }
+
+    pub fn tenant_name(&self) -> &str {
+        &self.tenant.name
+    }
+
+    /// Generate the next event.
+    pub fn next_event(&mut self) -> Event {
+        let rng = &mut self.rng;
+        let is_fraud = rng.bernoulli(self.tenant.fraud_rate);
+        // Correlated Gaussian background.
+        let mut z = [0.0f32; FEATURE_DIM];
+        for v in z.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let mut x = z;
+        for i in 1..FEATURE_DIM {
+            x[i] += CORR * z[i - 1];
+        }
+        x[AMOUNT_DIM] = (rng.lognormal(3.2, 1.1) / 100.0) as f32;
+        if is_fraud {
+            let jitter = (1.0 + rng.normal() * 0.25) as f32;
+            if rng.bernoulli(self.tenant.pattern1_frac) {
+                for i in 8..16 {
+                    x[i] += P1_SHIFT * jitter;
+                }
+                for i in 0..4 {
+                    x[i] += P1_ECHO * jitter;
+                }
+            } else {
+                for i in 0..8 {
+                    x[i] += P0_SHIFT * jitter;
+                }
+            }
+            x[AMOUNT_DIM] *= rng.lognormal(0.35, 0.3) as f32;
+        }
+        // Tenant affine shift.
+        let features = x
+            .iter()
+            .zip(self.tenant.scale.iter())
+            .zip(self.tenant.shift.iter())
+            .map(|((v, s), b)| v * s + b)
+            .collect();
+        Event { features, is_fraud }
+    }
+
+    /// Generate a row-major feature matrix (n x FEATURE_DIM) + labels.
+    pub fn batch(&mut self, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut features = Vec::with_capacity(n * FEATURE_DIM);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let e = self.next_event();
+            features.extend_from_slice(&e.features);
+            labels.push(if e.is_fraud { 1.0 } else { 0.0 });
+        }
+        (features, labels)
+    }
+}
+
+/// A multi-tenant traffic mix with weighted tenant selection.
+pub struct TrafficMix {
+    workloads: Vec<Workload>,
+    weights: Vec<f64>,
+    rng: Rng,
+}
+
+impl TrafficMix {
+    pub fn new(workloads: Vec<Workload>, weights: Vec<f64>, seed: u64) -> TrafficMix {
+        assert_eq!(workloads.len(), weights.len());
+        assert!(!workloads.is_empty());
+        TrafficMix {
+            workloads,
+            weights,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Uniform mix.
+    pub fn uniform(workloads: Vec<Workload>, seed: u64) -> TrafficMix {
+        let n = workloads.len();
+        TrafficMix::new(workloads, vec![1.0; n], seed)
+    }
+
+    /// Sample the next (tenant_name, event).
+    pub fn next_event(&mut self) -> (String, Event) {
+        let total: f64 = self.weights.iter().sum();
+        let mut pick = self.rng.f64() * total;
+        let mut idx = 0;
+        for (i, w) in self.weights.iter().enumerate() {
+            if pick < *w {
+                idx = i;
+                break;
+            }
+            pick -= w;
+            idx = i;
+        }
+        let name = self.workloads[idx].tenant_name().to_string();
+        (name, self.workloads[idx].next_event())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t = TenantProfile::new("a", 1, 0.4, 0.1);
+        let mut w1 = Workload::new(t.clone(), 7);
+        let mut w2 = Workload::new(t, 7);
+        for _ in 0..50 {
+            assert_eq!(w1.next_event().features, w2.next_event().features);
+        }
+    }
+
+    #[test]
+    fn fraud_rate_matches_profile() {
+        let t = TenantProfile::new("a", 2, 0.4, 0.0).with_fraud_rate(0.05);
+        let mut w = Workload::new(t, 9);
+        let (_, labels) = w.batch(100_000);
+        let rate = labels.iter().sum::<f32>() as f64 / 100_000.0;
+        assert!((rate - 0.05).abs() < 0.005, "rate {rate}");
+    }
+
+    #[test]
+    fn fraud_is_separable_on_pattern_dims() {
+        let t = TenantProfile::new("a", 3, 0.0, 0.0);
+        let mut w = Workload::new(t, 1);
+        let (feats, labels) = w.batch(50_000);
+        let mut fraud_mean = 0.0;
+        let mut legit_mean = 0.0;
+        let (mut nf, mut nl) = (0.0, 0.0);
+        for (i, &y) in labels.iter().enumerate() {
+            let row = &feats[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+            let m: f32 = row[..8].iter().sum::<f32>() / 8.0;
+            if y > 0.5 {
+                fraud_mean += m as f64;
+                nf += 1.0;
+            } else {
+                legit_mean += m as f64;
+                nl += 1.0;
+            }
+        }
+        assert!(fraud_mean / nf - legit_mean / nl > 0.5);
+    }
+
+    #[test]
+    fn pattern1_moves_different_dims() {
+        let t = TenantProfile::new("a", 4, 0.0, 1.0);
+        let mut w = Workload::new(t, 2);
+        let (feats, labels) = w.batch(50_000);
+        let mut d_hi = 0.0;
+        let mut n = 0.0;
+        for (i, &y) in labels.iter().enumerate() {
+            if y > 0.5 {
+                let row = &feats[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+                d_hi += row[8..16].iter().sum::<f32>() as f64 / 8.0;
+                n += 1.0;
+            }
+        }
+        assert!(d_hi / n > 0.8, "P1 shift missing: {}", d_hi / n);
+    }
+
+    #[test]
+    fn tenants_have_distinct_distributions() {
+        let mut wa = Workload::new(TenantProfile::new("a", 10, 0.6, 0.0), 1);
+        let mut wb = Workload::new(TenantProfile::new("b", 20, 0.6, 0.0), 1);
+        let (fa, _) = wa.batch(10_000);
+        let (fb, _) = wb.batch(10_000);
+        let mean = |f: &[f32], d: usize| -> f64 {
+            (0..10_000).map(|i| f[i * FEATURE_DIM + d] as f64).sum::<f64>() / 10_000.0
+        };
+        let max_gap = (0..FEATURE_DIM)
+            .map(|d| (mean(&fa, d) - mean(&fb, d)).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_gap > 0.3, "tenants too similar: {max_gap}");
+    }
+
+    #[test]
+    fn traffic_mix_samples_all_tenants() {
+        let mix_tenants = vec![
+            Workload::new(TenantProfile::new("a", 1, 0.3, 0.0), 1),
+            Workload::new(TenantProfile::new("b", 2, 0.3, 0.0), 2),
+        ];
+        let mut mix = TrafficMix::uniform(mix_tenants, 5);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..1000 {
+            let (name, e) = mix.next_event();
+            assert_eq!(e.features.len(), FEATURE_DIM);
+            *counts.entry(name).or_insert(0) += 1;
+        }
+        assert!(counts["a"] > 300 && counts["b"] > 300);
+    }
+}

@@ -1,0 +1,171 @@
+//! Ensemble aggregation `A` (paper Section 2.3.2).
+//!
+//! Combines the calibrated expert scores into one prediction. The
+//! default is a weighted average; weights can be tuned per client or
+//! shared across predictors, enabling "rapid, low-cost optimization of
+//! ensemble behavior" without retraining experts.
+
+use anyhow::{ensure, Result};
+
+/// Aggregation strategy over calibrated expert scores.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Aggregation {
+    /// Weighted arithmetic mean with per-expert weights.
+    WeightedMean(Vec<f64>),
+    /// Plain arithmetic mean.
+    Mean,
+    /// Maximum (useful for "any expert alarms" policies; kept for
+    /// configuration completeness, not used by the paper exhibits).
+    Max,
+    /// Identity for single-model predictors (paper: "the aggregation
+    /// function A is the identity").
+    Identity,
+}
+
+impl Aggregation {
+    pub fn weighted(weights: Vec<f64>) -> Result<Self> {
+        ensure!(!weights.is_empty(), "weights must be non-empty");
+        ensure!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "weights must be finite and non-negative"
+        );
+        ensure!(
+            weights.iter().sum::<f64>() > 0.0,
+            "at least one weight must be positive"
+        );
+        Ok(Aggregation::WeightedMean(weights))
+    }
+
+    /// Number of expert inputs this aggregation expects (None = any).
+    pub fn arity(&self) -> Option<usize> {
+        match self {
+            Aggregation::WeightedMean(w) => Some(w.len()),
+            Aggregation::Identity => Some(1),
+            _ => None,
+        }
+    }
+
+    /// Combine calibrated scores into a single score.
+    pub fn apply(&self, scores: &[f64]) -> Result<f64> {
+        ensure!(!scores.is_empty(), "no scores to aggregate");
+        match self {
+            Aggregation::Identity => {
+                ensure!(scores.len() == 1, "identity aggregation expects 1 score");
+                Ok(scores[0])
+            }
+            Aggregation::Mean => Ok(scores.iter().sum::<f64>() / scores.len() as f64),
+            Aggregation::Max => Ok(scores.iter().cloned().fold(f64::MIN, f64::max)),
+            Aggregation::WeightedMean(w) => {
+                ensure!(
+                    w.len() == scores.len(),
+                    "weight arity {} != score arity {}",
+                    w.len(),
+                    scores.len()
+                );
+                let num: f64 = scores.iter().zip(w).map(|(s, w)| s * w).sum();
+                Ok(num / w.iter().sum::<f64>())
+            }
+        }
+    }
+
+    /// Hot-path variant: no allocation, panics are impossible once the
+    /// predictor is validated at build time.
+    #[inline]
+    pub fn apply_unchecked(&self, scores: &[f64]) -> f64 {
+        match self {
+            Aggregation::Identity => scores[0],
+            Aggregation::Mean => scores.iter().sum::<f64>() / scores.len() as f64,
+            Aggregation::Max => scores.iter().cloned().fold(f64::MIN, f64::max),
+            Aggregation::WeightedMean(w) => {
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for (s, w) in scores.iter().zip(w) {
+                    num += s * w;
+                    den += w;
+                }
+                num / den
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn weighted_mean_basic() {
+        let a = Aggregation::weighted(vec![1.0, 1.0, 2.0]).unwrap();
+        let got = a.apply(&[0.2, 0.4, 0.9]).unwrap();
+        assert!((got - (0.2 + 0.4 + 1.8) / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_and_max() {
+        assert_eq!(Aggregation::Mean.apply(&[0.1, 0.3]).unwrap(), 0.2);
+        assert_eq!(Aggregation::Max.apply(&[0.1, 0.9, 0.3]).unwrap(), 0.9);
+    }
+
+    #[test]
+    fn identity_arity() {
+        assert_eq!(Aggregation::Identity.apply(&[0.7]).unwrap(), 0.7);
+        assert!(Aggregation::Identity.apply(&[0.7, 0.8]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_weights() {
+        assert!(Aggregation::weighted(vec![]).is_err());
+        assert!(Aggregation::weighted(vec![-1.0, 1.0]).is_err());
+        assert!(Aggregation::weighted(vec![0.0, 0.0]).is_err());
+        assert!(Aggregation::weighted(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_is_error() {
+        let a = Aggregation::weighted(vec![1.0, 1.0]).unwrap();
+        assert!(a.apply(&[0.5]).is_err());
+        assert!(a.apply(&[0.5, 0.5, 0.5]).is_err());
+    }
+
+    #[test]
+    fn empty_scores_is_error() {
+        assert!(Aggregation::Mean.apply(&[]).is_err());
+    }
+
+    #[test]
+    fn prop_weighted_mean_within_hull() {
+        prop::check(256, |g| {
+            let k = g.usize(1..9);
+            let w: Vec<f64> = (0..k).map(|_| g.f64(0.01..2.0)).collect();
+            let s: Vec<f64> = (0..k).map(|_| g.f64(0.0..1.0)).collect();
+            let a = Aggregation::weighted(w).map_err(|e| e.to_string())?;
+            let out = a.apply(&s).map_err(|e| e.to_string())?;
+            let lo = s.iter().cloned().fold(f64::MAX, f64::min);
+            let hi = s.iter().cloned().fold(f64::MIN, f64::max);
+            prop_assert!(out >= lo - 1e-12 && out <= hi + 1e-12, "out of hull: {out}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_unchecked_matches_checked() {
+        prop::check(256, |g| {
+            let k = g.usize(1..9);
+            let w: Vec<f64> = (0..k).map(|_| g.f64(0.01..2.0)).collect();
+            let s: Vec<f64> = (0..k).map(|_| g.f64(0.0..1.0)).collect();
+            let a = Aggregation::weighted(w).unwrap();
+            let c = a.apply(&s).unwrap();
+            let u = a.apply_unchecked(&s);
+            prop_assert!((c - u).abs() < 1e-15, "checked {c} != unchecked {u}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_weight_expert_is_ignored() {
+        let a = Aggregation::weighted(vec![0.0, 1.0]).unwrap();
+        assert_eq!(a.apply(&[0.99, 0.5]).unwrap(), 0.5);
+    }
+}

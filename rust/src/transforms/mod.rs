@@ -1,0 +1,15 @@
+//! The composable score transformations of paper Section 2.3:
+//! Posterior Correction `T^C` (Eq. 3), ensemble aggregation `A`,
+//! Quantile Mapping `T^Q` (Eq. 4) with its tenant-specific fitting
+//! (Eq. 5), and the configurable reference distribution `R`.
+
+pub mod aggregation;
+pub mod posterior;
+pub mod quantile;
+pub mod quantile_fit;
+pub mod reference;
+
+pub use aggregation::Aggregation;
+pub use posterior::PosteriorCorrection;
+pub use quantile::QuantileMap;
+pub use reference::ReferenceDistribution;

@@ -1,0 +1,165 @@
+//! Posterior Correction `T^C` (paper Eq. 3, after Dal Pozzolo et al.).
+//!
+//! Reverses the posterior bias introduced by undersampling the
+//! negative (majority) class at rate `beta` during training:
+//!
+//! `T^C(s) = beta * s / (1 - (1 - beta) * s)`
+//!
+//! Purely analytical — "negligible latency overhead" on the hot path
+//! (a handful of FLOPs; see `benches/transform_bench.rs`).
+
+use anyhow::{ensure, Result};
+
+/// A validated posterior-correction transformation for one expert.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PosteriorCorrection {
+    beta: f64,
+}
+
+impl PosteriorCorrection {
+    /// `beta` is the negative-class keep-rate used at training time;
+    /// must lie in (0, 1]. `beta = 1` is the identity (no
+    /// undersampling).
+    pub fn new(beta: f64) -> Result<Self> {
+        ensure!(
+            beta > 0.0 && beta <= 1.0 && beta.is_finite(),
+            "undersampling ratio beta must be in (0, 1], got {beta}"
+        );
+        Ok(PosteriorCorrection { beta })
+    }
+
+    #[inline]
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    /// Apply Eq. 3. Input clamped to [0, 1]; output in [0, 1].
+    #[inline]
+    pub fn apply(&self, score: f64) -> f64 {
+        let s = score.clamp(0.0, 1.0);
+        let denom = 1.0 - (1.0 - self.beta) * s;
+        // denom >= beta > 0 for s in [0,1], so this is always finite.
+        (self.beta * s / denom).clamp(0.0, 1.0)
+    }
+
+    /// The inverse map (useful in tests and for replaying the bias):
+    /// biased(s) = s / (s + beta (1 - s)).
+    #[inline]
+    pub fn unapply(&self, corrected: f64) -> f64 {
+        let p = corrected.clamp(0.0, 1.0);
+        p / (p + self.beta * (1.0 - p))
+    }
+
+    /// Apply in place over a batch.
+    pub fn apply_batch(&self, scores: &mut [f64]) {
+        for s in scores {
+            *s = self.apply(*s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn rejects_bad_beta() {
+        assert!(PosteriorCorrection::new(0.0).is_err());
+        assert!(PosteriorCorrection::new(-0.1).is_err());
+        assert!(PosteriorCorrection::new(1.1).is_err());
+        assert!(PosteriorCorrection::new(f64::NAN).is_err());
+        assert!(PosteriorCorrection::new(1.0).is_ok());
+    }
+
+    #[test]
+    fn fixed_points() {
+        for beta in [0.02, 0.18, 0.5, 1.0] {
+            let t = PosteriorCorrection::new(beta).unwrap();
+            assert_eq!(t.apply(0.0), 0.0);
+            assert!((t.apply(1.0) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_at_beta_one() {
+        let t = PosteriorCorrection::new(1.0).unwrap();
+        for i in 0..=100 {
+            let s = i as f64 / 100.0;
+            assert!((t.apply(s) - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deflates_for_small_beta() {
+        let t = PosteriorCorrection::new(0.02).unwrap();
+        for i in 1..100 {
+            let s = i as f64 / 100.0;
+            assert!(t.apply(s) < s);
+        }
+    }
+
+    #[test]
+    fn prop_monotone_and_bounded() {
+        prop::check(256, |g| {
+            let beta = g.f64(0.001..1.0);
+            let t = PosteriorCorrection::new(beta).map_err(|e| e.to_string())?;
+            let mut xs = g.vec_f64(0.0..1.0, 2..200);
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ys: Vec<f64> = xs.iter().map(|&x| t.apply(x)).collect();
+            for w in ys.windows(2) {
+                prop_assert!(w[1] >= w[0], "not monotone: {} > {}", w[0], w[1]);
+            }
+            for &y in &ys {
+                prop_assert!((0.0..=1.0).contains(&y), "out of range: {y}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_unapply_inverts() {
+        prop::check(256, |g| {
+            let beta = g.f64(0.001..1.0);
+            let s = g.f64(0.0..1.0);
+            let t = PosteriorCorrection::new(beta).unwrap();
+            let round = t.unapply(t.apply(s));
+            prop_assert!(
+                (round - s).abs() < 1e-9,
+                "unapply(apply({s})) = {round} (beta={beta})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_prior_shift_algebra() {
+        // If the true posterior is p and negatives are kept w.p. beta,
+        // the biased posterior is p / (p + beta (1-p)); Eq. 3 recovers p.
+        for beta in [0.02, 0.18] {
+            let t = PosteriorCorrection::new(beta).unwrap();
+            for i in 1..100 {
+                let p = i as f64 / 100.0;
+                let biased = p / (p + beta * (1.0 - p));
+                assert!((t.apply(biased) - p).abs() < 1e-12, "beta={beta} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let t = PosteriorCorrection::new(0.18).unwrap();
+        let mut batch: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+        let scalar: Vec<f64> = batch.iter().map(|&s| t.apply(s)).collect();
+        t.apply_batch(&mut batch);
+        assert_eq!(batch, scalar);
+    }
+
+    #[test]
+    fn clamps_out_of_range_inputs() {
+        let t = PosteriorCorrection::new(0.18).unwrap();
+        assert_eq!(t.apply(-0.5), 0.0);
+        assert!((t.apply(1.5) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,248 @@
+//! Quantile Mapping `T^Q` (paper Eq. 4 / Section 2.3.3).
+//!
+//! Aligns the CDF of the predictor's output distribution `S` with a
+//! fixed reference distribution `R` via a piecewise-linear map over
+//! `N` precomputed quantiles. Lookup is `O(log N)` binary search —
+//! this is THE hot-path transformation applied to every scored event,
+//! so the table is immutable, contiguous and shared (`Arc`) across
+//! worker threads.
+//!
+//! The transformation is monotone, so event ranking (and therefore
+//! predictive performance) is preserved; only the distribution of the
+//! reported score changes.
+
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// An immutable piecewise-linear quantile transformation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileMap {
+    /// Source quantiles `q^S_0..q^S_N` (strictly increasing).
+    src: Vec<f64>,
+    /// Reference quantiles `q^R_0..q^R_N` (non-decreasing).
+    refq: Vec<f64>,
+    /// Precomputed segment slopes (len N): (refq[i+1]-refq[i])/(src[i+1]-src[i]).
+    slopes: Vec<f64>,
+}
+
+impl QuantileMap {
+    /// Build from matching quantile grids (same length >= 2).
+    ///
+    /// `src` must be strictly increasing (source quantiles of a
+    /// continuous score distribution); `refq` must be non-decreasing.
+    pub fn new(src: Vec<f64>, refq: Vec<f64>) -> Result<Self> {
+        ensure!(src.len() == refq.len(), "quantile grids differ in length");
+        ensure!(src.len() >= 2, "need at least 2 quantile points");
+        ensure!(
+            src.iter().all(|v| v.is_finite()) && refq.iter().all(|v| v.is_finite()),
+            "quantiles must be finite"
+        );
+        for w in src.windows(2) {
+            ensure!(w[1] > w[0], "source quantiles must be strictly increasing");
+        }
+        for w in refq.windows(2) {
+            ensure!(w[1] >= w[0], "reference quantiles must be non-decreasing");
+        }
+        let slopes = src
+            .windows(2)
+            .zip(refq.windows(2))
+            .map(|(s, r)| (r[1] - r[0]) / (s[1] - s[0]))
+            .collect();
+        Ok(QuantileMap { src, refq, slopes })
+    }
+
+    /// Identity map on [0, 1] with `n_points` knots (useful default).
+    pub fn identity(n_points: usize) -> Result<Self> {
+        let grid: Vec<f64> = (0..n_points)
+            .map(|i| i as f64 / (n_points - 1) as f64)
+            .collect();
+        QuantileMap::new(grid.clone(), grid)
+    }
+
+    /// Number of segments N.
+    pub fn segments(&self) -> usize {
+        self.slopes.len()
+    }
+
+    pub fn source_quantiles(&self) -> &[f64] {
+        &self.src
+    }
+
+    pub fn reference_quantiles(&self) -> &[f64] {
+        &self.refq
+    }
+
+    /// Eq. 4: map one score. Scores outside the source support clamp
+    /// to the reference bounds. O(log N).
+    #[inline]
+    pub fn apply(&self, score: f64) -> f64 {
+        let n = self.src.len();
+        if score <= self.src[0] {
+            return self.refq[0];
+        }
+        if score >= self.src[n - 1] {
+            return self.refq[n - 1];
+        }
+        // partition_point returns the first index with src[i] > score;
+        // the segment index is that minus one.
+        let i = self.src.partition_point(|&q| q <= score) - 1;
+        self.refq[i] + (score - self.src[i]) * self.slopes[i]
+    }
+
+    /// Map a batch in place.
+    pub fn apply_batch(&self, scores: &mut [f64]) {
+        for s in scores {
+            *s = self.apply(*s);
+        }
+    }
+
+    /// The inverse transformation (swap source and reference). Only
+    /// valid when the reference grid is strictly increasing.
+    pub fn inverse(&self) -> Result<QuantileMap> {
+        QuantileMap::new(self.refq.clone(), self.src.clone())
+    }
+
+    /// Wrap in `Arc` for sharing across serving threads.
+    pub fn shared(self) -> Arc<QuantileMap> {
+        Arc::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn simple() -> QuantileMap {
+        QuantileMap::new(vec![0.0, 0.2, 1.0], vec![0.0, 0.8, 1.0]).unwrap()
+    }
+
+    #[test]
+    fn validates_grids() {
+        assert!(QuantileMap::new(vec![0.0], vec![0.0]).is_err());
+        assert!(QuantileMap::new(vec![0.0, 0.0], vec![0.0, 1.0]).is_err());
+        assert!(QuantileMap::new(vec![0.0, 1.0], vec![1.0, 0.0]).is_err());
+        assert!(QuantileMap::new(vec![0.0, 1.0], vec![0.0, f64::NAN]).is_err());
+        assert!(QuantileMap::new(vec![0.0, 1.0], vec![0.0, 1.0, 2.0]).is_err());
+        // Flat reference segments are allowed (non-decreasing).
+        assert!(QuantileMap::new(vec![0.0, 0.5, 1.0], vec![0.0, 0.0, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn maps_knots_exactly() {
+        let m = simple();
+        assert_eq!(m.apply(0.0), 0.0);
+        assert_eq!(m.apply(0.2), 0.8);
+        assert_eq!(m.apply(1.0), 1.0);
+    }
+
+    #[test]
+    fn interpolates_linearly() {
+        let m = simple();
+        assert!((m.apply(0.1) - 0.4).abs() < 1e-12);
+        assert!((m.apply(0.6) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_out_of_support() {
+        let m = QuantileMap::new(vec![0.2, 0.8], vec![0.1, 0.9]).unwrap();
+        assert_eq!(m.apply(0.0), 0.1);
+        assert_eq!(m.apply(1.0), 0.9);
+        assert_eq!(m.apply(-5.0), 0.1);
+    }
+
+    #[test]
+    fn identity_map() {
+        let m = QuantileMap::identity(101).unwrap();
+        for i in 0..=100 {
+            let x = i as f64 / 100.0;
+            assert!((m.apply(x) - x).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn prop_monotone_preserves_ranking() {
+        prop::check(200, |g| {
+            let n = g.usize(2..80);
+            let src = g.monotone_grid(n, 0.0, 1.0);
+            let refq = g.monotone_grid(n, 0.0, 1.0);
+            let m = QuantileMap::new(src, refq).map_err(|e| e.to_string())?;
+            let mut xs = g.vec_f64(-0.2..1.2, 2..200);
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ys: Vec<f64> = xs.iter().map(|&x| m.apply(x)).collect();
+            for w in ys.windows(2) {
+                prop_assert!(w[1] >= w[0] - 1e-12, "ranking broken: {} -> {}", w[0], w[1]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_knots_map_to_knots() {
+        prop::check(200, |g| {
+            let n = g.usize(2..60);
+            let src = g.monotone_grid(n, 0.0, 1.0);
+            let refq = g.monotone_grid(n, 0.0, 1.0);
+            let m = QuantileMap::new(src.clone(), refq.clone()).unwrap();
+            for (s, r) in src.iter().zip(&refq) {
+                let got = m.apply(*s);
+                prop_assert!((got - r).abs() < 1e-9, "knot {s} -> {got}, want {r}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_inverse_roundtrips() {
+        prop::check(100, |g| {
+            let n = g.usize(2..40);
+            let src = g.monotone_grid(n, 0.0, 1.0);
+            let refq = g.monotone_grid(n, 0.0, 1.0);
+            let m = QuantileMap::new(src.clone(), refq).unwrap();
+            let inv = m.inverse().map_err(|e| e.to_string())?;
+            let x = g.f64(0.0..1.0);
+            let x = src[0] + (src[n - 1] - src[0]) * x; // inside support
+            let round = inv.apply(m.apply(x));
+            prop_assert!((round - x).abs() < 1e-9, "roundtrip {x} -> {round}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_output_within_reference_bounds() {
+        prop::check(200, |g| {
+            let n = g.usize(2..60);
+            let src = g.monotone_grid(n, 0.0, 1.0);
+            let refq = g.monotone_grid(n, 0.2, 0.7);
+            let m = QuantileMap::new(src, refq).unwrap();
+            let x = g.f64(-1.0..2.0);
+            let y = m.apply(x);
+            prop_assert!((0.2..=0.7).contains(&y), "out of ref bounds: {y}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let m = simple();
+        let mut batch: Vec<f64> = (0..=20).map(|i| i as f64 / 20.0).collect();
+        let want: Vec<f64> = batch.iter().map(|&x| m.apply(x)).collect();
+        m.apply_batch(&mut batch);
+        assert_eq!(batch, want);
+    }
+
+    #[test]
+    fn large_grid_lookup() {
+        // Paper-scale grid: N = 1024 segments.
+        let n = 1025;
+        let src: Vec<f64> = (0..n).map(|i| (i as f64 / (n - 1) as f64).powi(2)).collect();
+        let refq: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+        let m = QuantileMap::new(src, refq).unwrap();
+        // sqrt is the analytic inverse of the squared grid.
+        for i in 0..100 {
+            let x = i as f64 / 100.0;
+            assert!((m.apply(x) - x.sqrt()).abs() < 1e-3, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Estimating source quantiles from live scores + the Eq. 5 sample-
+//! size bound (paper Section 2.3.3 and Appendix A).
+//!
+//! The source quantiles `q^S_i` are tenant-specific: the same
+//! predictor produces different score distributions across tenants,
+//! so each client/predictor pair gets its own fit once enough
+//! unlabeled traffic has accumulated. "Enough" is Eq. 5:
+//!
+//! `n ~= z^2 (1 - a) / (delta^2 a)`
+//!
+//! for target alert rate `a`, relative error `delta` and confidence
+//! z-score `z`.
+
+use super::quantile::QuantileMap;
+use crate::util::stats;
+use anyhow::{ensure, Result};
+
+/// Eq. 5: minimum number of samples to fit the quantile transformation
+/// such that the observed alert rate at target rate `a` stays within
+/// relative error `delta` with confidence `z`.
+pub fn required_samples(alert_rate: f64, delta: f64, z: f64) -> Result<u64> {
+    ensure!(
+        alert_rate > 0.0 && alert_rate < 1.0,
+        "alert rate must be in (0,1), got {alert_rate}"
+    );
+    ensure!(delta > 0.0, "relative error must be positive");
+    ensure!(z > 0.0, "z-score must be positive");
+    Ok((z * z * (1.0 - alert_rate) / (delta * delta * alert_rate)).ceil() as u64)
+}
+
+/// Fit source quantiles from observed scores and pair them with the
+/// reference grid to produce a tenant-specific `T^Q`.
+///
+/// `ref_quantiles` are the `q^R_i` of the target distribution at the
+/// uniform probability grid; `scores` are the (unlabeled!) aggregated
+/// predictor outputs observed for this tenant.
+pub fn fit_from_scores(scores: &[f64], ref_quantiles: &[f64]) -> Result<QuantileMap> {
+    ensure!(
+        scores.len() >= ref_quantiles.len(),
+        "need at least one sample per quantile point ({} < {})",
+        scores.len(),
+        ref_quantiles.len()
+    );
+    let probs = stats::prob_grid(ref_quantiles.len());
+    let mut src = stats::quantiles(scores, &probs);
+    dedup_monotone(&mut src);
+    QuantileMap::new(src, ref_quantiles.to_vec())
+}
+
+/// Gate + fit: checks the Eq. 5 bound before fitting, returning the
+/// sample requirement in the error message when unmet. This is the
+/// check the control plane runs before promoting a custom
+/// transformation (Section 3.1).
+pub fn fit_gated(
+    scores: &[f64],
+    ref_quantiles: &[f64],
+    alert_rate: f64,
+    delta: f64,
+    z: f64,
+) -> Result<QuantileMap> {
+    let need = required_samples(alert_rate, delta, z)?;
+    ensure!(
+        scores.len() as u64 >= need,
+        "insufficient samples for quantile fit: have {}, Eq.5 requires {} \
+         (a={alert_rate}, delta={delta}, z={z})",
+        scores.len(),
+        need
+    );
+    fit_from_scores(scores, ref_quantiles)
+}
+
+/// Make a non-decreasing grid strictly increasing by nudging ties up
+/// by one ULP. Empirical quantiles of heavily-concentrated score
+/// distributions (most fraud scores pile near 0) produce ties which
+/// the `QuantileMap` constructor rejects.
+pub fn dedup_monotone(grid: &mut [f64]) {
+    for i in 1..grid.len() {
+        if grid[i] <= grid[i - 1] {
+            grid[i] = next_up(grid[i - 1]);
+        }
+    }
+}
+
+#[inline]
+fn next_up(x: f64) -> f64 {
+    // f64::next_up is unstable on 1.95's MSRV contexts; do it manually.
+    if x.is_nan() || x == f64::INFINITY {
+        return x;
+    }
+    if x == 0.0 {
+        return f64::from_bits(1);
+    }
+    let bits = x.to_bits();
+    if x > 0.0 {
+        f64::from_bits(bits + 1)
+    } else {
+        f64::from_bits(bits - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::{prop, rng::Rng, stats};
+
+    #[test]
+    fn eq5_matches_paper_example() {
+        // Paper Appendix A: z=1.96, delta<=0.2 => n*a ~= z^2/delta^2 ~= 100.
+        let n = required_samples(0.01, 0.2, 1.96).unwrap();
+        let na = n as f64 * 0.01;
+        assert!((na - 96.04 * 0.99).abs() < 2.0, "n*a = {na}");
+    }
+
+    #[test]
+    fn eq5_scales_inversely_with_alert_rate() {
+        let n1 = required_samples(0.001, 0.1, 1.96).unwrap();
+        let n2 = required_samples(0.01, 0.1, 1.96).unwrap();
+        assert!(n1 > 9 * n2 && n1 < 11 * n2, "{n1} vs {n2}");
+    }
+
+    #[test]
+    fn eq5_rejects_degenerate() {
+        assert!(required_samples(0.0, 0.1, 1.96).is_err());
+        assert!(required_samples(1.0, 0.1, 1.96).is_err());
+        assert!(required_samples(0.01, 0.0, 1.96).is_err());
+        assert!(required_samples(0.01, 0.1, -1.0).is_err());
+    }
+
+    #[test]
+    fn fit_aligns_distribution() {
+        // Fit on Beta(2,8)-ish samples, map to uniform; mapped sample
+        // must be ~U(0,1) by KS distance.
+        let mut rng = Rng::new(42);
+        let sample: Vec<f64> = (0..100_000).map(|_| rng.beta(2.0, 8.0)).collect();
+        let refq = stats::prob_grid(513); // uniform reference
+        let m = fit_from_scores(&sample, &refq).unwrap();
+        let fresh: Vec<f64> = (0..20_000).map(|_| rng.beta(2.0, 8.0)).collect();
+        let mapped: Vec<f64> = fresh.iter().map(|&s| m.apply(s)).collect();
+        let ks = stats::ks_distance(&mapped, |x| x.clamp(0.0, 1.0));
+        assert!(ks < 0.02, "KS = {ks}");
+    }
+
+    #[test]
+    fn fit_handles_concentrated_scores() {
+        // 99% of scores identical near zero: ties must be deduped.
+        let mut scores = vec![1e-6; 5000];
+        scores.extend((0..50).map(|i| 0.1 + i as f64 / 100.0));
+        let refq = stats::prob_grid(101);
+        let m = fit_from_scores(&scores, &refq).unwrap();
+        assert!(m.apply(1e-6) <= m.apply(0.5));
+    }
+
+    #[test]
+    fn fit_requires_enough_samples() {
+        let refq = stats::prob_grid(101);
+        assert!(fit_from_scores(&[0.1; 50], &refq).is_err());
+    }
+
+    #[test]
+    fn gated_fit_enforces_eq5() {
+        let refq = stats::prob_grid(11);
+        let scores: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        // a=0.01, delta=0.2, z=1.96 needs ~9509 samples; 100 is too few.
+        let err = fit_gated(&scores, &refq, 0.01, 0.2, 1.96).unwrap_err();
+        assert!(err.to_string().contains("Eq.5"), "{err}");
+        // With a lax requirement it passes.
+        assert!(fit_gated(&scores, &refq, 0.5, 0.5, 1.0).is_ok());
+    }
+
+    #[test]
+    fn prop_fitted_map_is_monotone() {
+        prop::check(50, |g| {
+            let n = g.usize(200..2000);
+            let scores: Vec<f64> = (0..n).map(|_| g.f64(0.0..1.0).powi(3)).collect();
+            let refq = stats::prob_grid(33);
+            let m = fit_from_scores(&scores, &refq).map_err(|e| e.to_string())?;
+            let mut xs = g.vec_f64(0.0..1.0, 2..50);
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ys: Vec<f64> = xs.iter().map(|&x| m.apply(x)).collect();
+            for w in ys.windows(2) {
+                prop_assert!(w[1] >= w[0], "monotonicity broken");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dedup_is_strictly_increasing() {
+        prop::check(200, |g| {
+            let mut grid = g.vec_f64(0.0..1.0, 2..100);
+            grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // Inject ties.
+            if grid.len() > 4 {
+                grid[2] = grid[1];
+                let k = grid.len() / 2;
+                grid[k] = grid[k - 1];
+            }
+            dedup_monotone(&mut grid);
+            for w in grid.windows(2) {
+                prop_assert!(w[1] > w[0], "tie survived dedup");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monte_carlo_validates_eq5_variance() {
+        // Appendix A: the k-th order statistic's alert-rate deviation
+        // should stay within +-delta*a for ~95% of trials at the Eq.5
+        // sample size. Run a cheap Monte-Carlo check at a=5%.
+        let a = 0.05;
+        let delta = 0.2;
+        let z = 1.96;
+        let n = required_samples(a, delta, z).unwrap() as usize;
+        let mut rng = Rng::new(7);
+        let trials = 400;
+        let mut within = 0;
+        for _ in 0..trials {
+            let mut sample: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            sample.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            let k = ((1.0 - a) * n as f64).round() as usize;
+            let threshold = sample[k.min(n - 1)];
+            // True alert rate of this threshold under U(0,1):
+            let true_alert = 1.0 - threshold;
+            if (true_alert - a).abs() <= delta * a {
+                within += 1;
+            }
+        }
+        let coverage = within as f64 / trials as f64;
+        assert!(coverage > 0.90, "coverage {coverage} too low");
+    }
+}

@@ -1,0 +1,132 @@
+//! The configurable reference distribution `R` (paper Section 2.3.3).
+//!
+//! MUSE guarantees the final score follows a fixed reference
+//! distribution regardless of the predictor's internals. The paper's
+//! production `R` is proprietary; per DESIGN.md we substitute a Beta
+//! mixture with the shape the paper describes: "high density near 0
+//! and a longer tail towards 1", giving clients granularity in the
+//! useful alert-rate region (0.1%-1%). Alternatively `R` can mirror a
+//! legacy system's distribution for migrations.
+
+use crate::coldstart::mixture::BetaMixture;
+use anyhow::Result;
+
+/// A named reference distribution with a precomputable quantile grid.
+#[derive(Debug, Clone)]
+pub struct ReferenceDistribution {
+    pub name: String,
+    pub mixture: BetaMixture,
+}
+
+impl ReferenceDistribution {
+    /// The default production-style reference: ~70% of mass in
+    /// [0, 0.1) (so a raw predictor putting everything in bin 0 shows
+    /// the paper's Fig. 4 "+43% in bin 0" signature), smoothly
+    /// decaying mass towards 1 with a fat enough tail that thresholds
+    /// at the 99-99.9th percentile are meaningful.
+    pub fn fraud_default() -> Self {
+        ReferenceDistribution {
+            name: "fraud-default".to_string(),
+            mixture: BetaMixture::from_params(0.25, 1.0, 25.0, 1.6, 2.2)
+                .expect("static parameters are valid"),
+        }
+    }
+
+    /// A uniform reference (Beta(1,1)); scores become percentiles,
+    /// like Sift's secondary percentile score.
+    pub fn uniform() -> Self {
+        ReferenceDistribution {
+            name: "uniform".to_string(),
+            mixture: BetaMixture::from_params(0.0, 1.0, 1.0, 1.0, 1.0)
+                .expect("static parameters are valid"),
+        }
+    }
+
+    /// A custom mixture (e.g. fitted to a legacy system's scores for
+    /// migration, Section 2.3.3).
+    pub fn custom(name: impl Into<String>, mixture: BetaMixture) -> Result<Self> {
+        Ok(ReferenceDistribution { name: name.into(), mixture })
+    }
+
+    /// Quantile grid `q^R_0..q^R_N` at `n_points` uniform probabilities.
+    pub fn quantile_grid(&self, n_points: usize) -> Vec<f64> {
+        self.mixture.quantile_grid(n_points)
+    }
+
+    /// Target probability mass per uniform score bin — the "target
+    /// distribution" column of the paper's Figs. 4 and 6.
+    pub fn bin_shares(&self, n_bins: usize) -> Vec<f64> {
+        self.mixture.bin_shares(n_bins)
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        self.mixture.cdf(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_shape_matches_paper_description() {
+        let r = ReferenceDistribution::fraud_default();
+        let shares = r.bin_shares(10);
+        // High density near zero...
+        assert!(
+            shares[0] > 0.55 && shares[0] < 0.85,
+            "bin0 share = {}",
+            shares[0]
+        );
+        // ...with a usable long tail: every upper bin keeps >= 0.2% mass
+        // so alert thresholds in [0.7, 1.0] remain meaningful.
+        for (i, &s) in shares.iter().enumerate().skip(5) {
+            assert!(s > 0.002, "bin {i} share {s} too small");
+        }
+        // Monotone decay from bin 0.
+        assert!(shares[0] > shares[1] && shares[1] > shares[2]);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn raw_in_bin0_yields_fig4_signature() {
+        // A raw concentrated predictor (all mass in bin 0) vs this
+        // target gives ~+40% error in bin 0 and -100% elsewhere —
+        // matching the paper's Fig. 4 "predictor raw" series.
+        let r = ReferenceDistribution::fraud_default();
+        let shares = r.bin_shares(10);
+        let err0 = 100.0 * (1.0 - shares[0]) / shares[0];
+        assert!(err0 > 20.0 && err0 < 80.0, "bin0 rel err = {err0}");
+    }
+
+    #[test]
+    fn uniform_reference_is_identity_on_percentiles() {
+        let r = ReferenceDistribution::uniform();
+        let g = r.quantile_grid(101);
+        for (i, q) in g.iter().enumerate() {
+            assert!((q - i as f64 / 100.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grid_is_strictly_increasing() {
+        let g = ReferenceDistribution::fraud_default().quantile_grid(1025);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert_eq!(g[0], 0.0);
+        assert_eq!(*g.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn alert_rate_region_has_granularity() {
+        // Thresholding the reference at its 99th..99.9th percentile
+        // must produce distinct, high score values (paper: clients
+        // need granularity at 0.1%-1% alert rates).
+        let r = ReferenceDistribution::fraud_default();
+        let q99 = r.mixture.quantile(0.99);
+        let q999 = r.mixture.quantile(0.999);
+        assert!(q99 > 0.5, "q99 = {q99}");
+        assert!(q999 > q99 + 0.01, "q999 = {q999} vs q99 = {q99}");
+    }
+}

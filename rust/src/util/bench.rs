@@ -1,0 +1,82 @@
+//! Micro-benchmark harness (no criterion offline): warm-up + timed
+//! iterations with mean/percentile reporting, used by the
+//! `cargo bench` targets (`harness = false`).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12.1} ns/iter  p50 {:>10.1}  p99 {:>10.1}  {:>14.0} ops/s",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, self.throughput_per_s
+        )
+    }
+}
+
+/// Time `f` over `iters` iterations (after `warmup` un-timed ones),
+/// sampling per-iteration latency in batches of `batch` calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // Sample in up to 256 batches to keep timer overhead negligible.
+    let samples = 256u64.min(iters);
+    let batch = (iters / samples).max(1);
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples as usize);
+    let total_start = Instant::now();
+    let mut done = 0u64;
+    while done < iters {
+        let n = batch.min(iters - done);
+        let t0 = Instant::now();
+        for _ in 0..n {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / n as f64);
+        done += n;
+    }
+    let wall = total_start.elapsed().as_secs_f64();
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_ns = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let pct = |p: f64| per_iter[((p * (per_iter.len() - 1) as f64) as usize).min(per_iter.len() - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns,
+        p50_ns: pct(0.50),
+        p99_ns: pct(0.99),
+        throughput_per_s: iters as f64 / wall,
+    }
+}
+
+/// Print a section header for a bench binary.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 10, 1000, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(r.iters, 1000);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.report().contains("noop-ish"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Reader for the binary dataset interchange written by
+//! `python/compile/datagen.py::write_dataset`.
+//!
+//! Layout (little endian):
+//! `u32 magic "MUSE" | u32 version | u64 n | u32 d | u32 reserved |
+//!  f32 features [n*d] row-major | f32 labels [n]`
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+pub const DATASET_MAGIC: u32 = 0x4D55_5345; // "MUSE"
+
+/// An in-memory evaluation dataset: features row-major + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    pub features: Vec<f32>, // n * d, row major
+    pub labels: Vec<f32>,   // n, in {0.0, 1.0}
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+        let path = path.as_ref();
+        let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut header = [0u8; 24];
+        f.read_exact(&mut header)
+            .with_context(|| format!("read header of {}", path.display()))?;
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let n = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let d = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+        if magic != DATASET_MAGIC {
+            bail!("{}: bad magic {magic:#x}", path.display());
+        }
+        if version != 1 {
+            bail!("{}: unsupported dataset version {version}", path.display());
+        }
+        if n == 0 || d == 0 || n.checked_mul(d).is_none() {
+            bail!("{}: implausible dims n={n} d={d}", path.display());
+        }
+        let mut feat_bytes = vec![0u8; 4 * n * d];
+        f.read_exact(&mut feat_bytes)
+            .with_context(|| format!("read features of {}", path.display()))?;
+        let mut label_bytes = vec![0u8; 4 * n];
+        f.read_exact(&mut label_bytes)
+            .with_context(|| format!("read labels of {}", path.display()))?;
+        let features = feat_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let labels: Vec<f32> = label_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Dataset { n, d, features, labels })
+    }
+
+    /// Row `i` as a feature slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        self.labels.iter().map(|&y| y as f64).sum::<f64>() / self.n as f64
+    }
+
+    /// A contiguous slice view over rows `[start, start+len)`.
+    pub fn rows(&self, start: usize, len: usize) -> &[f32] {
+        &self.features[start * self.d..(start + len) * self.d]
+    }
+
+    /// Split into (head, tail) views at row `at` (copies).
+    pub fn split_at(&self, at: usize) -> (Dataset, Dataset) {
+        assert!(at <= self.n);
+        let head = Dataset {
+            n: at,
+            d: self.d,
+            features: self.features[..at * self.d].to_vec(),
+            labels: self.labels[..at].to_vec(),
+        };
+        let tail = Dataset {
+            n: self.n - at,
+            d: self.d,
+            features: self.features[at * self.d..].to_vec(),
+            labels: self.labels[at..].to_vec(),
+        };
+        (head, tail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(n: u64, d: u32, magic: u32, version: u32) -> std::path::PathBuf {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("muse_ds_test_{n}_{d}_{magic}_{version}.bin"));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(&magic.to_le_bytes()).unwrap();
+        f.write_all(&version.to_le_bytes()).unwrap();
+        f.write_all(&n.to_le_bytes()).unwrap();
+        f.write_all(&d.to_le_bytes()).unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        for i in 0..(n * d as u64) {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        for i in 0..n {
+            f.write_all(&((i % 2) as f32).to_le_bytes()).unwrap();
+        }
+        path
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = write_tmp(6, 3, DATASET_MAGIC, 1);
+        let ds = Dataset::load(&path).unwrap();
+        assert_eq!((ds.n, ds.d), (6, 3));
+        assert_eq!(ds.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(ds.labels, vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0]);
+        assert!((ds.positive_rate() - 0.5).abs() < 1e-12);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = write_tmp(2, 2, 0xDEAD_BEEF, 1);
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let path = write_tmp(2, 2, DATASET_MAGIC, 9);
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("muse_ds_trunc.bin");
+        std::fs::write(&path, b"short").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn split_at_partitions() {
+        let path = write_tmp(10, 2, DATASET_MAGIC, 1);
+        let ds = Dataset::load(&path).unwrap();
+        let (a, b) = ds.split_at(4);
+        assert_eq!((a.n, b.n), (4, 6));
+        assert_eq!(a.row(3), ds.row(3));
+        assert_eq!(b.row(0), ds.row(4));
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,11 @@
+//! From-scratch substrates: JSON, RNG, thread pool, datasets, stats,
+//! and a mini property-testing framework (see DESIGN.md
+//! "Crate-availability constraint").
+
+pub mod bench;
+pub mod dataset;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

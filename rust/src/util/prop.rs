@@ -1,0 +1,168 @@
+//! Minimal property-based testing framework (no `proptest` offline).
+//!
+//! Provides seeded random case generation with failure-case shrinking
+//! for the coordinator invariants (routing determinism, batch
+//! conservation, registry refcounts, transform monotonicity). Usage:
+//!
+//! ```ignore
+//! prop::check(256, |g| {
+//!     let xs = g.vec_f64(0.0..1.0, 1..100);
+//!     let beta = g.f64(0.01..1.0);
+//!     // ... assert invariant, return Ok(()) or Err(msg)
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Shrink pressure in [0,1]: 0 = full-size cases, 1 = minimal.
+    shrink: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, shrink: f64) -> Self {
+        Gen { rng: Rng::new(seed), shrink }
+    }
+
+    pub fn f64(&mut self, range: Range<f64>) -> f64 {
+        // Under shrink pressure, bias towards the low end of the range.
+        let u = self.rng.f64() * (1.0 - self.shrink * 0.9);
+        range.start + (range.end - range.start) * u
+    }
+
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        assert!(range.end > range.start);
+        let span = range.end - range.start;
+        let scaled = ((span as f64) * (1.0 - self.shrink * 0.9)).ceil().max(1.0) as usize;
+        range.start + self.rng.below(scaled.min(span))
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.bernoulli(p_true)
+    }
+
+    pub fn vec_f64(&mut self, each: Range<f64>, len: Range<usize>) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(each.clone())).collect()
+    }
+
+    /// Strictly increasing grid of `n` values spanning [lo, hi].
+    pub fn monotone_grid(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        assert!(n >= 2);
+        let mut cuts: Vec<f64> = (0..n - 2).map(|_| self.rng.range(lo, hi)).collect();
+        cuts.push(lo);
+        cuts.push(hi);
+        cuts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Enforce strict monotonicity by nudging duplicates.
+        for i in 1..cuts.len() {
+            if cuts[i] <= cuts[i - 1] {
+                cuts[i] = f64::from_bits(cuts[i - 1].to_bits() + 1);
+            }
+        }
+        cuts
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Result of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`. On failure, re-run the failing
+/// seed under increasing shrink pressure to report a smaller case,
+/// then panic with the seed (re-runnable) and message.
+pub fn check<F: Fn(&mut Gen) -> PropResult>(cases: u64, prop: F) {
+    check_seeded(0x4D55_5345, cases, prop)
+}
+
+/// As `check`, with an explicit base seed (to reproduce failures).
+pub fn check_seeded<F: Fn(&mut Gen) -> PropResult>(base_seed: u64, cases: u64, prop: F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed, 0.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: same seed, increasing pressure; keep the last failure.
+            let mut best = (0.0, msg);
+            for step in 1..=8 {
+                let pressure = step as f64 / 8.0;
+                let mut g = Gen::new(seed, pressure);
+                if let Err(m) = prop(&mut g) {
+                    best = (pressure, m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed:#x}, case={case}, shrink={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(64, |g| {
+            let x = g.f64(0.0..1.0);
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(64, |g| {
+            let x = g.f64(0.0..1.0);
+            prop_assert!(x < 0.5, "x too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_grid_is_strict() {
+        check(64, |g| {
+            let n = g.usize(2..50);
+            let grid = g.monotone_grid(n, 0.0, 1.0);
+            prop_assert!(grid.len() == n, "len");
+            prop_assert!(grid[0] == 0.0 && grid[n - 1] == 1.0, "endpoints");
+            for w in grid.windows(2) {
+                prop_assert!(w[1] > w[0], "not strictly increasing");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Gen::new(99, 0.0);
+        let mut b = Gen::new(99, 0.0);
+        assert_eq!(a.vec_f64(0.0..1.0, 5..6), b.vec_f64(0.0..1.0, 5..6));
+    }
+}

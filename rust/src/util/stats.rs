@@ -1,0 +1,218 @@
+//! Small statistics toolbox shared by transforms, calibration and the
+//! experiment harnesses: empirical quantiles, moments, KS distance,
+//! histogram binning.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (0.0 for n < 2).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// r-th raw moment: E[x^r].
+pub fn raw_moment(xs: &[f64], r: u32) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|x| x.powi(r as i32)).sum::<f64>() / xs.len() as f64
+}
+
+/// Empirical quantile at probability `p` (linear interpolation, the
+/// "type 7" estimator) over an already **sorted** slice.
+pub fn quantile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 1.0);
+    let h = p * (sorted.len() - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let t = h - lo as f64;
+        sorted[lo] * (1.0 - t) + sorted[hi] * t
+    }
+}
+
+/// Evaluate quantiles at a probability grid over unsorted data.
+pub fn quantiles(xs: &[f64], probs: &[f64]) -> Vec<f64> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile input"));
+    probs.iter().map(|&p| quantile_sorted(&sorted, p)).collect()
+}
+
+/// Uniform probability grid with `n_points` points: 0, 1/(n-1), ..., 1.
+pub fn prob_grid(n_points: usize) -> Vec<f64> {
+    assert!(n_points >= 2);
+    (0..n_points)
+        .map(|i| i as f64 / (n_points - 1) as f64)
+        .collect()
+}
+
+/// Kolmogorov-Smirnov distance between an empirical sample and a CDF.
+pub fn ks_distance(xs: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((f - lo).abs()).max((hi - f).abs());
+    }
+    d
+}
+
+/// Count of samples per uniform bin over [0, 1]; the last bin is
+/// closed ([0.9, 1.0] in the paper's 10-bin figures).
+pub fn bin_counts(xs: &[f64], n_bins: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; n_bins];
+    for &x in xs {
+        let mut b = (x * n_bins as f64).floor() as isize;
+        if b < 0 {
+            b = 0;
+        }
+        if b >= n_bins as isize {
+            b = n_bins as isize - 1;
+        }
+        counts[b as usize] += 1;
+    }
+    counts
+}
+
+/// Relative error of observed bin shares vs target shares, in percent:
+/// `100 * (obs - target) / target`. Bins with zero target mass yield
+/// `f64::INFINITY` when observed mass is non-zero and 0.0 otherwise.
+pub fn relative_error_pct(observed: &[u64], target_shares: &[f64]) -> Vec<f64> {
+    assert_eq!(observed.len(), target_shares.len());
+    let total: u64 = observed.iter().sum();
+    observed
+        .iter()
+        .zip(target_shares)
+        .map(|(&o, &t)| {
+            let share = if total == 0 { 0.0 } else { o as f64 / total as f64 };
+            if t <= 0.0 {
+                if share > 0.0 {
+                    f64::INFINITY
+                } else {
+                    0.0
+                }
+            } else {
+                100.0 * (share - t) / t
+            }
+        })
+        .collect()
+}
+
+/// Pearson correlation coefficient.
+pub fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx * dy).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn raw_moments() {
+        let xs = [0.5, 0.5];
+        assert!((raw_moment(&xs, 1) - 0.5).abs() < 1e-12);
+        assert!((raw_moment(&xs, 2) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let s = [0.0, 1.0, 2.0, 3.0];
+        assert_eq!(quantile_sorted(&s, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&s, 1.0), 3.0);
+        assert!((quantile_sorted(&s, 0.5) - 1.5).abs() < 1e-12);
+        assert!((quantile_sorted(&s, 1.0 / 3.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_unsorted_input() {
+        let q = quantiles(&[3.0, 1.0, 2.0, 0.0], &[0.0, 0.5, 1.0]);
+        assert_eq!(q, vec![0.0, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn prob_grid_endpoints() {
+        let g = prob_grid(5);
+        assert_eq!(g, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn ks_uniform_sample_small() {
+        // Deterministic uniform grid has tiny KS distance vs U(0,1).
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 + 0.5) / 1000.0).collect();
+        assert!(ks_distance(&xs, |x| x) < 0.001);
+    }
+
+    #[test]
+    fn ks_detects_mismatch() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i as f64 + 0.5) / 1000.0).powi(2)).collect();
+        assert!(ks_distance(&xs, |x| x) > 0.2);
+    }
+
+    #[test]
+    fn bins_include_right_edge() {
+        let c = bin_counts(&[0.0, 0.05, 0.95, 1.0], 10);
+        assert_eq!(c[0], 2);
+        assert_eq!(c[9], 2);
+        assert_eq!(c.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn relative_error_basics() {
+        let err = relative_error_pct(&[70, 30], &[0.5, 0.5]);
+        assert!((err[0] - 40.0).abs() < 1e-9);
+        assert!((err[1] + 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relative_error_minus_100_for_empty_bins() {
+        let err = relative_error_pct(&[100, 0], &[0.7, 0.3]);
+        assert!((err[1] + 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn correlation_signs() {
+        let xs = [1.0, 2.0, 3.0];
+        assert!((correlation(&xs, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((correlation(&xs, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+    }
+}

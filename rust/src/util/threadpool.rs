@@ -1,0 +1,209 @@
+//! A fixed-size thread pool (no tokio in the offline crate universe).
+//!
+//! The serving front end and the dynamic batcher dispatch work through
+//! this pool; it supports fire-and-forget jobs, fan-out/join scopes,
+//! and graceful shutdown. Deliberately simple: an `mpsc` channel feeds
+//! worker threads; the hot path never allocates beyond the boxed job.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    shared: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    in_flight: Arc<InFlight>,
+}
+
+struct InFlight {
+    count: AtomicUsize,
+    zero: Condvar,
+    lock: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (>= 1).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1, "thread pool must have at least one worker");
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(InFlight {
+            count: AtomicUsize::new(0),
+            zero: Condvar::new(),
+            lock: Mutex::new(()),
+        });
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&shared);
+            let fl = Arc::clone(&in_flight);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("muse-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                if fl.count.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    let _g = fl.lock.lock().unwrap();
+                                    fl.zero.notify_all();
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("failed to spawn worker"),
+            );
+        }
+        ThreadPool { tx, shared, workers, in_flight }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.count.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .send(Msg::Run(Box::new(f)))
+            .expect("thread pool has shut down");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.in_flight.lock.lock().unwrap();
+        while self.in_flight.count.load(Ordering::Acquire) != 0 {
+            guard = self.in_flight.zero.wait(guard).unwrap();
+        }
+    }
+
+    /// Run `f` over every item of `items` in parallel, collecting the
+    /// results in input order. Blocks until all complete.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let done = done_tx.clone();
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                let _ = done.send(());
+            });
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            done_rx.recv().expect("worker dropped result channel");
+        }
+        // Workers may still hold their Arc clone for an instant after
+        // signalling completion, so take the results through the lock
+        // rather than unwrapping the Arc.
+        let mut guard = results.lock().unwrap();
+        guard
+            .iter_mut()
+            .map(|o| o.take().expect("missing map result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Nudge any worker stuck between recv() calls.
+        let _ = self.shared; // keep the receiver alive until joins finish
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..100).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn map_with_slow_jobs() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(vec![30u64, 1, 20, 2], |ms| {
+            thread::sleep(Duration::from_millis(ms));
+            ms
+        });
+        assert_eq!(out, vec![30, 1, 20, 2]);
+    }
+
+    #[test]
+    fn wait_idle_without_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                thread::sleep(Duration::from_millis(5));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_workers_panics() {
+        let _ = ThreadPool::new(0);
+    }
+}

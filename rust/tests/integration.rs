@@ -1,0 +1,195 @@
+//! Cross-module integration tests: config -> engine -> HTTP serving ->
+//! lifecycle operations -> teardown, plus failure injection. These
+//! exercise the same composition the examples and the production CLI
+//! use. Tests needing AOT artifacts skip politely when absent.
+
+use muse::config::{Intent, MuseConfig, PredictorConfig, QuantileMode};
+use muse::coordinator::{ControlPlane, Engine, ScoreRequest};
+use muse::runtime::{Manifest, ModelPool};
+use muse::server::http::http_request;
+use muse::simulator::{TenantProfile, Workload};
+use muse::transforms::{QuantileMap, ReferenceDistribution};
+use std::sync::Arc;
+
+const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "p1"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "global"
+  shadowRules:
+  - description: "bank1 shadow"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorNames: ["p2"]
+predictors:
+- name: p1
+  experts: [m1, m2]
+  quantile: identity
+- name: p2
+  experts: [m1, m2, m3]
+  quantile: identity
+- name: global
+  experts: [m1]
+  quantile: identity
+server:
+  workers: 4
+"#;
+
+fn engine() -> Option<Arc<Engine>> {
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let pool = Arc::new(ModelPool::new(Manifest::load(root).unwrap()));
+    Some(Arc::new(
+        Engine::build(&MuseConfig::from_yaml(CONFIG).unwrap(), pool).unwrap(),
+    ))
+}
+
+fn drive(engine: &Engine, tenant: &str, n: usize, seed: u64) {
+    let mut wl = Workload::new(TenantProfile::new(tenant, seed, 0.4, 0.2), seed);
+    for i in 0..n {
+        let e = wl.next_event();
+        engine
+            .score(&ScoreRequest {
+                intent: Intent {
+                    tenant: tenant.into(),
+                    ..Intent::default()
+                },
+                entity: format!("{tenant}-{i}"),
+                features: e.features,
+            })
+            .unwrap();
+    }
+    engine.drain_shadows();
+}
+
+#[test]
+fn full_stack_http_and_lifecycle() {
+    let Some(engine) = engine() else { return };
+    // Phase 1: serve over HTTP with warm-up gating.
+    let (addr, _ready, _h) =
+        muse::server::spawn_server(Arc::clone(&engine), "127.0.0.1:0", 4, 50).unwrap();
+    let d = engine.predictor("p1").unwrap().feature_dim();
+    let feats: Vec<String> = (0..d).map(|i| format!("{}", i as f32 * 0.01)).collect();
+    let payload = format!(r#"{{"tenant":"bank1","features":[{}]}}"#, feats.join(","));
+    let (status, body) = http_request(&addr, "POST", "/score", &payload).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"predictor\":\"p1\""), "{body}");
+
+    // Phase 2: traffic accumulates; promote the shadow; decommission.
+    drive(&engine, "bank1", 64, 1);
+    let cp = ControlPlane::new(&engine);
+    cp.promote("bank1", "p2").unwrap();
+    cp.decommission("p1").unwrap();
+    let (status, body) = http_request(&addr, "POST", "/score", &payload).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"predictor\":\"p2\""), "{body}");
+
+    // Phase 3: stats reflect the shared-container reality.
+    let (_, stats) = http_request(&addr, "GET", "/admin/stats", "").unwrap();
+    let v = muse::util::json::parse(&stats).unwrap();
+    assert_eq!(v.req_f64("live_containers").unwrap(), 3.0); // m1,m2,m3
+    assert_eq!(v.req_f64("predictors").unwrap(), 2.0); // p2 + global
+}
+
+#[test]
+fn tenant_isolation_of_custom_transforms() {
+    let Some(engine) = engine() else { return };
+    drive(&engine, "bank1", 32, 2);
+    drive(&engine, "otherco", 32, 3);
+    let cp = ControlPlane::new(&engine);
+    // Install an extreme custom transform for bank1 only.
+    cp.install_custom_quantile(
+        "p1",
+        "bank1",
+        QuantileMap::new(vec![0.0, 1.0], vec![0.95, 1.0]).unwrap().shared(),
+    )
+    .unwrap();
+    let p1 = engine.predictor("p1").unwrap();
+    let d = p1.feature_dim();
+    let x = vec![0.0f32; d];
+    let bank1 = p1.score(&x, 1, "bank1").unwrap().scores[0];
+    let other = p1.score(&x, 1, "otherco").unwrap().scores[0];
+    assert!(bank1 >= 0.95);
+    assert!(other < 0.95, "tenant isolation violated: {other}");
+}
+
+#[test]
+fn shadow_failure_does_not_affect_live_path() {
+    let Some(engine) = engine() else { return };
+    // Failure injection: tear down the shadow target behind the
+    // router's back (the control plane would normally clean the rules
+    // up — this simulates a stale/racing config). Live scoring must
+    // keep working and the miss must be counted.
+    engine.registry.decommission("p2").unwrap(); // bank1's shadow target
+    drive(&engine, "bank1", 16, 4);
+    assert_eq!(engine.counters.get("shadow_missing_predictor"), 16);
+    assert_eq!(engine.lake.raw_scores("bank1", "p1").len(), 16);
+}
+
+#[test]
+fn eq5_gate_blocks_premature_custom_fit_then_opens() {
+    let Some(engine) = engine() else { return };
+    let cp = ControlPlane::new(&engine);
+    let reference = ReferenceDistribution::fraud_default();
+    drive(&engine, "bank1", 100, 5);
+    assert!(cp
+        .fit_custom_quantile("p1", "bank1", &reference, 0.01, 0.2, 1.96)
+        .is_err());
+    drive(&engine, "bank1", 1_200, 6);
+    // Lax gate (a=0.5) now passes with 1300 samples.
+    cp.fit_custom_quantile("p1", "bank1", &reference, 0.5, 0.2, 1.96)
+        .unwrap();
+    assert!(engine.predictor("p1").unwrap().has_tenant_quantile("bank1"));
+}
+
+#[test]
+fn scoring_unknown_route_errors_cleanly() {
+    let Some(engine) = engine() else { return };
+    // Remove the catch-all: unknown tenants must get a clean error,
+    // not a panic.
+    let mut cfg = engine.router.snapshot().as_ref().clone();
+    cfg.scoring_rules.retain(|r| !r.condition.is_catch_all());
+    engine.router.swap(cfg);
+    let d = engine.predictor("p1").unwrap().feature_dim();
+    let err = engine
+        .score(&ScoreRequest {
+            intent: Intent {
+                tenant: "stranger".into(),
+                ..Intent::default()
+            },
+            entity: "e".into(),
+            features: vec![0.0; d],
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("no scoring rule"), "{err}");
+}
+
+#[test]
+fn deploy_teardown_cycles_do_not_leak_containers() {
+    let Some(engine) = engine() else { return };
+    let cp = ControlPlane::new(&engine);
+    let base = engine.registry.stats().pool.live_containers;
+    for round in 0..3 {
+        let cfg = PredictorConfig {
+            name: format!("cycle-{round}"),
+            experts: vec!["m4".into(), "m5".into()],
+            weights: vec![1.0, 1.0],
+            quantile_mode: QuantileMode::Identity,
+            reference: "fraud-default".into(),
+            posterior_correction: true,
+        };
+        cp.shadow_deploy(&cfg, "bank1", QuantileMap::identity(33).unwrap().shared())
+            .unwrap();
+        drive(&engine, "bank1", 8, 100 + round);
+        cp.decommission(&format!("cycle-{round}")).unwrap();
+    }
+    assert_eq!(engine.registry.stats().pool.live_containers, base);
+}

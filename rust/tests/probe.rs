@@ -1,0 +1,45 @@
+//! Cross-language numeric integration test: the python compile path
+//! writes a probe batch plus its expected scores per expert
+//! (`artifacts/probe.json`); every PJRT container must reproduce them.
+//! This is the guard against interchange bugs (e.g. HLO-text constant
+//! elision silently zeroing baked weights).
+
+use muse::runtime::{Manifest, ModelPool};
+use muse::util::json;
+use std::sync::Arc;
+
+#[test]
+fn containers_match_python_oracle() {
+    let root = Manifest::default_root();
+    let probe_path = root.join("probe.json");
+    if !probe_path.exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let pool = Arc::new(ModelPool::new(manifest));
+    let probe = json::parse(&std::fs::read_to_string(probe_path).unwrap()).unwrap();
+    let features = probe.req("features").unwrap().to_f32_vec().unwrap();
+    let n = probe.req_f64("n").unwrap() as usize;
+    let expected = probe.req("expected").unwrap().as_obj().unwrap();
+    assert!(!expected.is_empty());
+    for (model, exp) in expected {
+        let exp = exp.to_f64_vec().unwrap();
+        let handle = pool.acquire(model).unwrap();
+        let got = handle.infer(&features, n).unwrap();
+        assert_eq!(got.len(), exp.len());
+        let mut distinct = false;
+        for (g, e) in got.iter().zip(&exp) {
+            assert!(
+                (*g as f64 - e).abs() < 2e-4,
+                "model {model}: rust {g} vs python {e}"
+            );
+        }
+        for w in got.windows(2) {
+            if (w[0] - w[1]).abs() > 1e-6 {
+                distinct = true;
+            }
+        }
+        assert!(distinct, "model {model}: constant output (weights lost?)");
+    }
+}
