@@ -1,4 +1,4 @@
-//! End-to-end serving driver (DESIGN.md deliverable): boots the full
+//! End-to-end serving driver (docs/ARCHITECTURE.md deliverable): boots the full
 //! MUSE stack — real AOT-compiled models on PJRT containers, intent
 //! router, transformations, HTTP front end with warm-up gating — then
 //! drives a batched multi-tenant workload over HTTP and in-process,

@@ -1,10 +1,18 @@
 //! `cargo bench` target: intent-routing overhead (Section 2.5.1's
 //! "negligible overhead" claim) — rule matching at realistic and
-//! adversarial rule-table sizes, plus config hot-swap cost.
+//! adversarial rule-table sizes, config hot-swap cost, and
+//! multi-threaded contention: the lock-free `SnapCell` router vs a
+//! seed-replica `RwLock` router, 1/4/8 threads, quiescent vs under a
+//! continuous swap storm. Numbers are recorded in EXPERIMENTS.md
+//! ("Contention").
 
 use muse::config::{Condition, Intent, RoutingConfig, ScoringRule, ShadowRule};
-use muse::coordinator::Router;
-use muse::util::bench::{bench, section};
+use muse::coordinator::{Resolution, Router};
+use muse::simulator::{swap_storm, SwapStormConfig};
+use muse::util::bench::{bench, section, CountdownGuard};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 fn rules(n: usize) -> RoutingConfig {
     let mut scoring: Vec<ScoringRule> = (0..n)
@@ -14,7 +22,7 @@ fn rules(n: usize) -> RoutingConfig {
                 tenants: vec![format!("tenant-{i}")],
                 ..Condition::default()
             },
-            target_predictor: format!("p{}", i % 7),
+            target_predictor: format!("p{}", i % 7).into(),
         })
         .collect();
     scoring.push(ScoringRule {
@@ -33,6 +41,106 @@ fn rules(n: usize) -> RoutingConfig {
             target_predictors: vec!["shadow-p".into()],
         }],
     }
+}
+
+/// The seed's router, preserved as the contention baseline: an
+/// `RwLock<Arc<RoutingConfig>>` snapshot plus per-request `String`
+/// clones of every target name.
+struct RwLockRouter {
+    config: RwLock<Arc<RoutingConfig>>,
+}
+
+impl RwLockRouter {
+    fn new(config: RoutingConfig) -> Self {
+        RwLockRouter {
+            config: RwLock::new(Arc::new(config)),
+        }
+    }
+
+    fn swap(&self, config: RoutingConfig) {
+        *self.config.write().unwrap() = Arc::new(config);
+    }
+
+    fn resolve(&self, intent: &Intent) -> Option<(String, Vec<String>, usize)> {
+        let cfg = Arc::clone(&self.config.read().unwrap());
+        let mut live = None;
+        for (i, rule) in cfg.scoring_rules.iter().enumerate() {
+            if rule.condition.matches(intent) {
+                live = Some((rule.target_predictor.to_string(), i));
+                break;
+            }
+        }
+        let (live, rule_index) = live?;
+        let mut shadows: Vec<String> = Vec::new();
+        for rule in &cfg.shadow_rules {
+            if rule.condition.matches(intent) {
+                for t in &rule.target_predictors {
+                    if &**t != live.as_str() && !shadows.iter().any(|s| s.as_str() == &**t) {
+                        shadows.push(t.to_string());
+                    }
+                }
+            }
+        }
+        Some((live, shadows, rule_index))
+    }
+}
+
+/// Multi-threaded resolve throughput: `threads` workers resolving for
+/// ~`per_thread` iterations each, optionally under a swap storm.
+/// Returns (total events/s, swaps performed).
+fn contention_run(
+    threads: usize,
+    per_thread: usize,
+    storm: bool,
+    resolve: impl Fn(&Intent) -> usize + Sync,
+    swap: impl Fn() + Sync,
+) -> (f64, u64) {
+    let live_workers = AtomicU64::new(threads as u64);
+    let swaps = AtomicU64::new(0);
+    let total = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let resolve = &resolve;
+            let live_workers = &live_workers;
+            let total = &total;
+            s.spawn(move || {
+                // Panic-safe: releases the storm loop on unwind.
+                let _live = CountdownGuard(live_workers);
+                let first = Intent {
+                    tenant: "tenant-0".into(),
+                    ..Intent::default()
+                };
+                let miss = Intent {
+                    tenant: "nobody".into(),
+                    ..Intent::default()
+                };
+                let mut acc = 0usize;
+                for i in 0..per_thread {
+                    let intent = if (i + t) % 2 == 0 { &first } else { &miss };
+                    acc = acc.wrapping_add(resolve(intent));
+                }
+                std::hint::black_box(acc);
+                total.fetch_add(per_thread as u64, Ordering::Relaxed);
+            });
+        }
+        if storm {
+            let swap = &swap;
+            let live_workers = &live_workers;
+            let swaps = &swaps;
+            s.spawn(move || {
+                while live_workers.load(Ordering::Relaxed) > 0 {
+                    swap();
+                    swaps.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    (
+        total.load(Ordering::Relaxed) as f64 / wall.max(1e-9),
+        swaps.load(Ordering::Relaxed),
+    )
 }
 
 fn main() {
@@ -75,4 +183,56 @@ fn main() {
         })
         .report()
     );
+
+    section("contention: SnapCell router vs seed RwLock router (128 rules)");
+    let per_thread = 400_000usize;
+    for &threads in &[1usize, 4, 8] {
+        for &storm in &[false, true] {
+            let label = if storm { "swap storm" } else { "quiescent " };
+
+            let snap_router = Router::new(rules(128));
+            let (eps, swaps) = contention_run(
+                threads,
+                per_thread,
+                storm,
+                |intent| {
+                    let r: Resolution = snap_router.resolve(intent).unwrap();
+                    r.rule_index
+                },
+                || snap_router.swap(rules(128)),
+            );
+            println!(
+                "  snapcell {threads}T {label}: {eps:>12.0} resolves/s   ({swaps} swaps)"
+            );
+
+            let lock_router = RwLockRouter::new(rules(128));
+            let (eps, swaps) = contention_run(
+                threads,
+                per_thread,
+                storm,
+                |intent| lock_router.resolve(intent).unwrap().2,
+                || lock_router.swap(rules(128)),
+            );
+            println!(
+                "  rwlock   {threads}T {label}: {eps:>12.0} resolves/s   ({swaps} swaps)"
+            );
+        }
+    }
+
+    section("swap-under-load scenario (simulator::swap_storm)");
+    let report = swap_storm(&SwapStormConfig {
+        workers: 8,
+        requests_per_worker: 200_000,
+        min_swaps: 2_000,
+        rules: 32,
+    });
+    println!(
+        "  8 workers under storm: {:.0} resolves/s, {} swaps, {} errors, {} torn, max resolve {:.1}us",
+        report.throughput_per_s(),
+        report.swaps,
+        report.errors,
+        report.torn,
+        report.max_resolve_ns as f64 / 1e3
+    );
+    assert!(report.seamless(1_000_000_000), "storm was not seamless");
 }

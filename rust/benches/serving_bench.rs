@@ -1,14 +1,15 @@
 //! `cargo bench` target: the serving stack on real PJRT models —
 //! per-batch inference cost across the AOT variants, single-event
-//! end-to-end engine latency, engine throughput under concurrency, and
-//! the infra-dedup registry ops. Skips (with a message) when artifacts
-//! are missing.
+//! end-to-end engine latency, engine throughput under concurrency
+//! (quiescent and under a control-plane promotion storm), and the
+//! infra-dedup registry ops. Skips (with a message) when artifacts
+//! are missing. Numbers are recorded in EXPERIMENTS.md.
 
 use muse::config::{Intent, MuseConfig};
-use muse::coordinator::{Engine, ScoreRequest};
+use muse::coordinator::{ControlPlane, Engine, ScoreRequest};
 use muse::runtime::{Manifest, ModelPool};
 use muse::simulator::{TenantProfile, Workload};
-use muse::util::bench::{bench, section};
+use muse::util::bench::{bench, section, CountdownGuard};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -110,6 +111,69 @@ fn main() {
         done.load(Ordering::Relaxed) as f64 / wall,
         engine.live_latency.summary()
     );
+
+    section("engine throughput under a promotion storm (8 clients, seamless-update check)");
+    // Deploy a second live candidate and ping-pong bank1 between the
+    // two predictors as fast as the control plane can publish
+    // snapshots, while 8 client threads keep scoring. The contract:
+    // zero failed requests, throughput within noise of the quiescent
+    // run above (EXPERIMENTS.md "Contention").
+    {
+        let cp = ControlPlane::new(&engine);
+        let done = Arc::new(AtomicU64::new(0));
+        let live_clients = AtomicU64::new(8);
+        let swaps = AtomicU64::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..8 {
+                let engine = Arc::clone(&engine);
+                let done = Arc::clone(&done);
+                let live_clients = &live_clients;
+                scope.spawn(move || {
+                    // Panic-safe: a dropped request must stop the
+                    // promotion loop, not hang the scope join.
+                    let _live = CountdownGuard(live_clients);
+                    let mut wl =
+                        Workload::new(TenantProfile::new("bank1", 40 + c as u64, 0.4, 0.1), 6);
+                    for i in 0..4_000 {
+                        let e = wl.next_event();
+                        let req = ScoreRequest {
+                            intent: Intent {
+                                tenant: "bank1".into(),
+                                ..Intent::default()
+                            },
+                            entity: format!("s{c}-{i}"),
+                            features: e.features,
+                        };
+                        engine.score(&req).expect("request dropped during promotion");
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            let cp = &cp;
+            let live_clients = &live_clients;
+            let swaps = &swaps;
+            scope.spawn(move || {
+                let mut k = 0u64;
+                while live_clients.load(Ordering::Relaxed) > 0 {
+                    let target = if k % 2 == 0 { "solo" } else { "trio" };
+                    cp.promote("bank1", target).unwrap();
+                    k += 1;
+                }
+                swaps.store(k, Ordering::Relaxed);
+            });
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  {} events in {:.2}s = {:.0} events/s under {} promotions ({:.0} swaps/s), zero drops",
+            done.load(Ordering::Relaxed),
+            wall,
+            done.load(Ordering::Relaxed) as f64 / wall,
+            swaps.load(Ordering::Relaxed),
+            swaps.load(Ordering::Relaxed) as f64 / wall
+        );
+        engine.drain_shadows();
+    }
 
     section("registry ops (dedup bookkeeping)");
     let pool2 = engine.registry.pool();

@@ -5,6 +5,7 @@
 
 use crate::util::json::Json;
 use anyhow::{bail, ensure, Context, Result};
+use std::sync::Arc;
 
 /// Request metadata evaluated by routing conditions. This is the
 /// client's *intent* — never a model name (Section 2.5.1).
@@ -67,12 +68,13 @@ impl Condition {
 }
 
 /// Scoring rule: evaluated sequentially; the first match selects the
-/// *live* predictor.
+/// *live* predictor. Targets are `Arc<str>` so resolving a request
+/// shares the name instead of allocating a fresh `String` per event.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScoringRule {
     pub description: String,
     pub condition: Condition,
-    pub target_predictor: String,
+    pub target_predictor: Arc<str>,
 }
 
 /// Shadow rule: evaluated in parallel; every match mirrors the request
@@ -81,7 +83,7 @@ pub struct ScoringRule {
 pub struct ShadowRule {
     pub description: String,
     pub condition: Condition,
-    pub target_predictors: Vec<String>,
+    pub target_predictors: Vec<Arc<str>>,
 }
 
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -212,7 +214,7 @@ impl MuseConfig {
         }
         for (i, rule) in self.routing.scoring_rules.iter().enumerate() {
             ensure!(
-                names.contains(&rule.target_predictor.as_str()),
+                names.contains(&&*rule.target_predictor),
                 "scoring rule {} targets unknown predictor '{}'",
                 i,
                 rule.target_predictor
@@ -227,7 +229,7 @@ impl MuseConfig {
         for (i, rule) in self.routing.shadow_rules.iter().enumerate() {
             for t in &rule.target_predictors {
                 ensure!(
-                    names.contains(&t.as_str()),
+                    names.contains(&&**t),
                     "shadow rule {i} targets unknown predictor '{t}'"
                 );
             }
@@ -248,7 +250,7 @@ fn parse_routing(v: &Json) -> Result<RoutingConfig> {
                 target_predictor: r
                     .req_str("targetPredictorName")
                     .context("scoring rule missing targetPredictorName")?
-                    .to_string(),
+                    .into(),
             });
         }
     }
@@ -260,7 +262,7 @@ fn parse_routing(v: &Json) -> Result<RoutingConfig> {
                     .iter()
                     .map(|t| {
                         t.as_str()
-                            .map(str::to_string)
+                            .map(Arc::<str>::from)
                             .context("targetPredictorNames must be strings")
                     })
                     .collect::<Result<Vec<_>>>()?,

@@ -78,6 +78,22 @@ impl Batcher {
             .recv()
             .map_err(|_| anyhow!("batcher dropped the reply"))?
     }
+
+    /// Stop the worker without consuming the batcher (decommission
+    /// path): late submitters — e.g. requests still holding a stale
+    /// engine snapshot — get a clean "shut down" error instead of
+    /// keeping a worker thread alive behind a retired snapshot.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the worker if it is blocked waiting for a first event:
+        // a sentinel whose reply channel is already closed.
+        let (reply_tx, _) = mpsc::sync_channel(1);
+        let _ = self.queue_tx.send(Pending {
+            features: vec![],
+            tenant: String::new(),
+            reply: reply_tx,
+        });
+    }
 }
 
 impl Drop for Batcher {
@@ -160,9 +176,11 @@ fn batcher_main(
                 }
                 // One inference call for the mixed-tenant batch, then
                 // each event gets its own tenant's T^Q (Section 2.3.3:
-                // the mapping is tenant-specific).
+                // the mapping is tenant-specific). The quantile table
+                // is one snapshot load per batch, not per event.
+                let quantiles = predictor.quantile_table();
                 for (p, &r) in batch.iter().zip(&raw) {
-                    let final_score = predictor.apply_quantile(r, &p.tenant);
+                    let final_score = quantiles.apply(r, &p.tenant);
                     let _ = p.reply.send(Ok((final_score, r)));
                 }
             }
@@ -286,6 +304,20 @@ mod tests {
         let Some(p) = predictor() else { return };
         let b = Batcher::new(Arc::clone(&p), 4, Duration::from_millis(1));
         assert!(b.score(vec![0.0; 3], "t").is_err());
+    }
+
+    #[test]
+    fn shutdown_rejects_late_submitters() {
+        let Some(p) = predictor() else { return };
+        let d = p.feature_dim();
+        let b = Batcher::new(Arc::clone(&p), 4, Duration::from_millis(1));
+        b.score(vec![0.0; d], "t").unwrap();
+        b.shutdown();
+        // The worker exits; a stale-snapshot caller gets an error,
+        // never a hang. (Exact message depends on where the race
+        // lands: rejected at send, at batch time, or reply dropped.)
+        let err = b.score(vec![0.0; d], "t").unwrap_err();
+        assert!(err.to_string().contains("batcher"), "{err}");
     }
 
     #[test]

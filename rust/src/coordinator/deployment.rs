@@ -121,9 +121,10 @@ impl<'e> ControlPlane<'e> {
                 tenants: vec![tenant.to_string()],
                 ..Condition::default()
             },
-            target_predictors: vec![cfg.name.clone()],
+            target_predictors: vec![cfg.name.as_str().into()],
         });
         self.engine.router.swap(routing);
+        self.engine.republish();
         Ok(())
     }
 
@@ -163,8 +164,9 @@ impl<'e> ControlPlane<'e> {
 
     /// Promote `new_predictor` to live for `tenant`: rewrite the
     /// tenant's scoring rule (first match) to target it and drop its
-    /// shadow rules. A single server-side config change — "the
-    /// transition is transparent from the client's perspective".
+    /// shadow rules. A single server-side snapshot publication — "the
+    /// transition is transparent from the client's perspective", and
+    /// requests in flight finish on the snapshot they started with.
     pub fn promote(&self, tenant: &str, new_predictor: &str) -> Result<()> {
         ensure!(
             self.engine.registry.get(new_predictor).is_some(),
@@ -181,7 +183,7 @@ impl<'e> ControlPlane<'e> {
                 // If the tenant currently rides a broad rule, give it
                 // a dedicated rule instead of hijacking the broad one.
                 if rule.condition.tenants == vec![tenant.to_string()] {
-                    rule.target_predictor = new_predictor.to_string();
+                    rule.target_predictor = new_predictor.into();
                 } else {
                     routing.scoring_rules.insert(
                         0,
@@ -191,7 +193,7 @@ impl<'e> ControlPlane<'e> {
                                 tenants: vec![tenant.to_string()],
                                 ..Condition::default()
                             },
-                            target_predictor: new_predictor.to_string(),
+                            target_predictor: new_predictor.into(),
                         },
                     );
                 }
@@ -202,25 +204,28 @@ impl<'e> ControlPlane<'e> {
         ensure!(rewritten, "no scoring rule matches tenant '{tenant}'");
         routing
             .shadow_rules
-            .retain(|r| !r.target_predictors.contains(&new_predictor.to_string()));
+            .retain(|r| !r.target_predictors.iter().any(|t| &**t == new_predictor));
         self.engine.router.swap(routing);
+        self.engine.republish();
         Ok(())
     }
 
     /// Decommission a predictor (Fig. 3 final step): remove any rules
-    /// referencing it, then release its containers.
+    /// referencing it, publish the shrunken snapshot (which also shuts
+    /// down the predictor's batcher), then release its containers.
     pub fn decommission(&self, predictor: &str) -> Result<()> {
         let mut routing = self.engine.router.snapshot().as_ref().clone();
         routing
             .scoring_rules
-            .retain(|r| r.target_predictor != predictor);
+            .retain(|r| &*r.target_predictor != predictor);
         for rule in routing.shadow_rules.iter_mut() {
-            rule.target_predictors.retain(|t| t != predictor);
+            rule.target_predictors.retain(|t| &**t != predictor);
         }
         routing.shadow_rules.retain(|r| !r.target_predictors.is_empty());
         self.engine.router.swap(routing);
-        self.engine.drop_batcher(predictor);
-        self.engine.registry.decommission(predictor)
+        let out = self.engine.registry.decommission(predictor);
+        self.engine.republish();
+        out
     }
 }
 
@@ -309,7 +314,7 @@ predictors:
                 ..Intent::default()
             })
             .unwrap();
-        assert_eq!(res.live, "p2");
+        assert_eq!(&*res.live, "p2");
         assert!(res.shadows.is_empty());
 
         // 4. decommission p1 — its rules go away; other tenants now
@@ -375,7 +380,7 @@ predictors:
                 ..Intent::default()
             })
             .unwrap();
-        assert_eq!(res.live, "p2");
+        assert_eq!(&*res.live, "p2");
         // bank1 unaffected.
         let res = engine
             .router
@@ -384,7 +389,7 @@ predictors:
                 ..Intent::default()
             })
             .unwrap();
-        assert_eq!(res.live, "p1");
+        assert_eq!(&*res.live, "p1");
     }
 
     #[test]

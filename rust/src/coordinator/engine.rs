@@ -6,24 +6,29 @@
 //! while mirroring the request to every matching shadow predictor
 //! asynchronously (shadow latency never blocks the live response) and
 //! recording scores to the data lake.
+//!
+//! The live path is lock-free: one wait-free [`EngineSnapshot`] load
+//! per request, then an index-based hop to the resolved predictor +
+//! batcher (see `coordinator::snapshot` for the publication
+//! protocol, and EXPERIMENTS.md "Contention" for the measured win
+//! over the seed's two-`RwLock` path).
 
 use super::batcher::Batcher;
 use super::predictor::Predictor;
 use super::registry::PredictorRegistry;
 use super::router::{Resolution, Router};
-use std::collections::HashMap;
-use std::sync::RwLock;
-use std::time::Duration;
+use super::snapshot::EngineSnapshot;
 use crate::config::{Intent, MuseConfig, QuantileMode};
 use crate::datalake::DataLake;
 use crate::featurestore::FeatureStore;
 use crate::metrics::{Counters, LatencyHistogram};
 use crate::runtime::ModelPool;
 use crate::transforms::{QuantileMap, ReferenceDistribution};
+use crate::util::swap::SnapCell;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One scoring request (the client payload).
 #[derive(Debug, Clone)]
@@ -50,10 +55,13 @@ pub struct Engine {
     pub features: FeatureStore,
     pub lake: Arc<DataLake>,
     shadow_pool: ThreadPool,
-    /// Per-predictor dynamic batchers (lazy): concurrent single-event
-    /// requests coalesce into one PJRT call — batch-256 inference is
-    /// ~80x cheaper per event than batch-1 (see EXPERIMENTS.md §Perf).
-    batchers: RwLock<HashMap<String, Arc<Batcher>>>,
+    /// The compiled data-plane snapshot: routing + resolved predictor
+    /// handles + per-predictor dynamic batchers, swapped atomically by
+    /// the control plane. Batchers matter because concurrent
+    /// single-event requests coalesce into one PJRT call — batch-256
+    /// inference is ~80x cheaper per event than batch-1
+    /// (EXPERIMENTS.md "Perf log", step 1).
+    snapshot: SnapCell<EngineSnapshot>,
     max_batch: usize,
     max_batch_delay: Duration,
     pub live_latency: LatencyHistogram,
@@ -81,43 +89,81 @@ impl Engine {
                 .deploy(pc, initial)
                 .with_context(|| format!("deploy predictor '{}'", pc.name))?;
         }
+        let router = Router::new(config.routing.clone());
+        let max_batch = config.server.max_batch;
+        let max_batch_delay = Duration::from_micros(config.server.max_batch_delay_us);
+        let snapshot = SnapCell::new(Arc::new(EngineSnapshot::build(
+            router.snapshot(),
+            &registry,
+            None,
+            max_batch,
+            max_batch_delay,
+        )));
         Ok(Engine {
-            router: Router::new(config.routing.clone()),
+            router,
             registry,
             features: FeatureStore::new(),
             lake: Arc::new(DataLake::new()),
             shadow_pool: ThreadPool::new(2.max(config.server.workers / 2)),
-            batchers: RwLock::new(HashMap::new()),
-            max_batch: config.server.max_batch,
-            max_batch_delay: Duration::from_micros(config.server.max_batch_delay_us),
+            snapshot,
+            max_batch,
+            max_batch_delay,
             live_latency: LatencyHistogram::new(),
             counters: Counters::new(),
             quantile_points,
         })
     }
 
-    /// The lazily-created dynamic batcher for a predictor.
-    fn batcher_for(&self, name: &str) -> Result<Arc<Batcher>> {
-        if let Some(b) = self.batchers.read().unwrap().get(name) {
-            return Ok(Arc::clone(b));
-        }
-        let mut map = self.batchers.write().unwrap();
-        if let Some(b) = map.get(name) {
-            return Ok(Arc::clone(b));
-        }
-        let p = self
-            .registry
-            .get(name)
-            .with_context(|| format!("routed to undeployed predictor '{name}'"))?;
-        let b = Arc::new(Batcher::new(p, self.max_batch, self.max_batch_delay));
-        map.insert(name.to_string(), Arc::clone(&b));
-        Ok(b)
+    /// Whether `snap` was compiled from the current routing config
+    /// and registry deployment set (pointer identity + generation —
+    /// two wait-free loads, no locks).
+    fn snapshot_is_fresh(&self, snap: &EngineSnapshot) -> bool {
+        std::ptr::eq(Arc::as_ptr(&snap.routing), self.router.config_ptr())
+            && snap.registry_generation == self.registry.generation()
     }
 
-    /// Drop a predictor's batcher (called on decommission so the
-    /// batcher's `Arc<Predictor>` does not outlive the registry entry).
-    pub fn drop_batcher(&self, name: &str) {
-        self.batchers.write().unwrap().remove(name);
+    /// The current data-plane snapshot, republished first if the
+    /// routing config or the registry changed behind the engine's
+    /// back (direct `router.swap` / `registry` callers: tests,
+    /// harnesses). The fast path is one wait-free load plus two
+    /// staleness comparisons.
+    pub fn load_snapshot(&self) -> Arc<EngineSnapshot> {
+        let snap = self.snapshot.load();
+        if self.snapshot_is_fresh(&snap) {
+            return snap;
+        }
+        self.republish()
+    }
+
+    /// Rebuild the data-plane snapshot from the current routing config
+    /// and registry, publish it, and shut down batchers whose
+    /// predictor was decommissioned. Control-plane rate only; the
+    /// request path never calls this unless routing or registry were
+    /// mutated directly. Concurrent callers serialize on the snapshot
+    /// writer lock, and all but the first discover freshness under
+    /// the lock and no-op instead of republishing identical worlds.
+    pub fn republish(&self) -> Arc<EngineSnapshot> {
+        let mut next_out: Option<Arc<EngineSnapshot>> = None;
+        let removed = self.snapshot.rcu(|old| {
+            if self.snapshot_is_fresh(old) {
+                next_out = Some(Arc::clone(old));
+                return (Arc::clone(old), Vec::new());
+            }
+            let next = Arc::new(EngineSnapshot::build(
+                self.router.snapshot(),
+                &self.registry,
+                Some(old.as_ref()),
+                self.max_batch,
+                self.max_batch_delay,
+            ));
+            let removed = old.removed_entries(&next);
+            next_out = Some(Arc::clone(&next));
+            (next, removed)
+        });
+        for entry in removed {
+            entry.batcher.shutdown();
+        }
+        next_out.expect("rcu always publishes")
     }
 
     /// Look up the reference distribution named in a predictor config.
@@ -128,52 +174,63 @@ impl Engine {
         }
     }
 
-    /// Score one event end to end (the hot path).
+    /// Score one event end to end (the hot path). Exactly one
+    /// wait-free snapshot load; no `RwLock`, no `Mutex`, no `HashMap`
+    /// probe between request and batcher.
     pub fn score(&self, req: &ScoreRequest) -> Result<ScoreResponse> {
         let t0 = Instant::now();
-        let resolution = self.router.resolve(&req.intent)?;
-        let live = self
-            .registry
-            .get(&resolution.live)
-            .with_context(|| format!("routed to undeployed predictor '{}'", resolution.live))?;
-        let enriched = self
-            .features
-            .enrich(&req.entity, &req.features, live.feature_dim())?;
+        let snap = self.load_snapshot();
+        let resolution = Router::resolve_in(&snap.routing, &req.intent)?;
+        let entry = snap.live_entry(resolution.rule_index).ok_or_else(|| {
+            anyhow!("routed to undeployed predictor '{}'", resolution.live)
+        })?;
+        let enriched =
+            self.features
+                .enrich(&req.entity, &req.features, entry.predictor.feature_dim())?;
         // Hot path goes through the per-predictor dynamic batcher:
         // concurrent requests share one PJRT call; T^Q stays
         // per-tenant (applied post-aggregation inside the batcher).
-        let (score, raw) = self
-            .batcher_for(&resolution.live)?
-            .score(enriched, &req.intent.tenant)?;
+        let (score, raw) = entry.batcher.score(enriched, &req.intent.tenant)?;
         self.lake
-            .append(&req.intent.tenant, &live.name, score, raw, false);
+            .append(&req.intent.tenant, &entry.predictor.name, score, raw, false);
 
         // Mirror to shadows off the hot path.
         let shadow_count = resolution.shadows.len();
-        self.dispatch_shadows(&resolution, &req.intent.tenant, &req.entity, &req.features);
+        if shadow_count > 0 {
+            self.dispatch_shadows(&snap, &resolution, &req.intent.tenant, &req.entity, &req.features);
+        }
 
         self.live_latency.record(t0.elapsed().as_nanos() as u64);
         self.counters.inc("requests_live");
         Ok(ScoreResponse {
             score,
-            predictor: resolution.live.clone(),
+            predictor: resolution.live.to_string(),
             shadow_count,
         })
     }
 
     fn dispatch_shadows(
         &self,
+        snap: &EngineSnapshot,
         resolution: &Resolution,
         tenant: &str,
         entity: &str,
         payload: &[f32],
     ) {
         for shadow_name in &resolution.shadows {
-            let Some(shadow) = self.registry.get(shadow_name) else {
+            // Missing entry = the predictor is not in this snapshot's
+            // deployment set (undeployed target, or torn down behind
+            // the router's back — the registry-generation staleness
+            // gate guarantees the snapshot tracks direct registry
+            // mutations by the next request). Counted, never scored.
+            let Some(entry) = snap.entry(shadow_name) else {
                 self.counters.inc("shadow_missing_predictor");
                 continue;
             };
-            let enriched = match self.features.enrich(entity, payload, shadow.feature_dim()) {
+            let enriched = match self
+                .features
+                .enrich(entity, payload, entry.predictor.feature_dim())
+            {
                 Ok(e) => e,
                 Err(_) => {
                     self.counters.inc("shadow_enrich_error");
@@ -183,14 +240,11 @@ impl Engine {
             // Shadows share the model containers with live traffic, so
             // they go through the same dynamic batcher — unbatched
             // shadow calls on a wide ensemble would otherwise starve
-            // the live path (§Perf step 3 in EXPERIMENTS.md).
-            let Ok(batcher) = self.batcher_for(shadow_name) else {
-                self.counters.inc("shadow_missing_predictor");
-                continue;
-            };
+            // the live path (EXPERIMENTS.md "Perf log", step 3).
+            let batcher: Arc<Batcher> = Arc::clone(&entry.batcher);
             let lake = Arc::clone(&self.lake);
             let tenant = tenant.to_string();
-            let name = shadow.name.clone();
+            let name = entry.predictor.name.clone();
             self.shadow_pool.execute(move || {
                 if let Ok((score, raw)) = batcher.score(enriched, &tenant) {
                     lake.append(&tenant, &name, score, raw, true);
@@ -378,5 +432,33 @@ server:
         let Some(engine) = engine() else { return };
         let d = engine.predictor("global").unwrap().feature_dim();
         assert!(engine.score(&req("anyone", d, 5)).is_ok());
+    }
+
+    #[test]
+    fn direct_router_swap_is_picked_up_lazily() {
+        // Harnesses swap the router without going through the control
+        // plane; the engine's staleness check must republish and serve
+        // the new routing on the very next request.
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("global").unwrap().feature_dim();
+        assert_eq!(engine.score(&req("bank1", d, 6)).unwrap().predictor, "p1");
+        let mut cfg = engine.router.snapshot().as_ref().clone();
+        cfg.scoring_rules[0].target_predictor = "p2".into();
+        engine.router.swap(cfg);
+        assert_eq!(engine.score(&req("bank1", d, 7)).unwrap().predictor, "p2");
+    }
+
+    #[test]
+    fn snapshot_reuses_batchers_across_republish() {
+        let Some(engine) = engine() else { return };
+        let before = engine.load_snapshot();
+        let b_before = Arc::as_ptr(&before.entry("p1").unwrap().batcher);
+        engine.router.swap(engine.router.snapshot().as_ref().clone());
+        let after = engine.load_snapshot();
+        assert_eq!(
+            b_before,
+            Arc::as_ptr(&after.entry("p1").unwrap().batcher),
+            "republish must not restart live batchers"
+        );
     }
 }

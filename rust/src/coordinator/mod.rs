@@ -9,12 +9,14 @@ pub mod engine;
 pub mod predictor;
 pub mod registry;
 pub mod router;
+pub mod snapshot;
 pub mod warmup;
 
 pub use batcher::{Batcher, BatcherStats};
 pub use deployment::{ControlPlane, ShadowValidation};
 pub use engine::{Engine, ScoreRequest, ScoreResponse};
-pub use predictor::{ExpertSlot, Predictor, ScoreBatch};
+pub use predictor::{ExpertSlot, Predictor, QuantileTable, ScoreBatch};
 pub use registry::{PredictorRegistry, RegistryStats};
 pub use router::{Resolution, Router};
+pub use snapshot::{EngineSnapshot, PredictorEntry};
 pub use warmup::{warm_up, WarmupReport};

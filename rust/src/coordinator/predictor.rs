@@ -8,14 +8,17 @@
 //! A predictor *references* shared model containers (it never owns
 //! them); its quantile mapping is **tenant-specific** (Section 2.3.3)
 //! with a default used until a custom fit is installed. Transform
-//! state is hot-swappable behind `RwLock` so the control plane can
-//! promote new transformations with zero downtime.
+//! state lives in an immutable [`QuantileTable`] snapshot behind a
+//! [`SnapCell`], so the scoring path reads it with one wait-free load
+//! (no locks per event or per batch) while the control plane promotes
+//! new transformations copy-on-write with zero downtime.
 
 use crate::runtime::ModelHandle;
 use crate::transforms::{Aggregation, PosteriorCorrection, QuantileMap};
+use crate::util::swap::SnapCell;
 use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 /// One expert slot: a shared model container + its `T^C_k`.
 pub struct ExpertSlot {
@@ -33,14 +36,33 @@ pub struct ScoreBatch {
     pub raw: Vec<f64>,
 }
 
+/// Immutable snapshot of a predictor's quantile state: the default
+/// `T^Q` plus every tenant-specific override. Published atomically as
+/// one unit, so a mixed-tenant batch applies one coherent table.
+pub struct QuantileTable {
+    default: Arc<QuantileMap>,
+    tenants: HashMap<String, Arc<QuantileMap>>,
+}
+
+impl QuantileTable {
+    /// The transformation in effect for `tenant`.
+    pub fn for_tenant(&self, tenant: &str) -> &QuantileMap {
+        self.tenants.get(tenant).unwrap_or(&self.default)
+    }
+
+    /// Apply the tenant's `T^Q` to an aggregated raw score.
+    pub fn apply(&self, raw: f64, tenant: &str) -> f64 {
+        self.for_tenant(tenant).apply(raw)
+    }
+}
+
 pub struct Predictor {
     pub name: String,
     experts: Vec<ExpertSlot>,
     aggregation: Aggregation,
-    /// Default `T^Q` (cold-start or config-provided).
-    default_quantile: RwLock<Arc<QuantileMap>>,
-    /// Tenant-specific `T^Q`s installed by the control plane.
-    tenant_quantile: RwLock<HashMap<String, Arc<QuantileMap>>>,
+    /// Default + tenant-specific `T^Q`s, swapped copy-on-write by the
+    /// control plane; read wait-free by the scoring path.
+    quantiles: SnapCell<QuantileTable>,
     feature_dim: usize,
 }
 
@@ -69,8 +91,10 @@ impl Predictor {
             name,
             experts,
             aggregation,
-            default_quantile: RwLock::new(default_quantile),
-            tenant_quantile: RwLock::new(HashMap::new()),
+            quantiles: SnapCell::new(Arc::new(QuantileTable {
+                default: default_quantile,
+                tenants: HashMap::new(),
+            })),
             feature_dim,
         })
     }
@@ -87,44 +111,60 @@ impl Predictor {
         self.experts.len()
     }
 
+    /// The current quantile snapshot. Callers scoring a batch load it
+    /// once and apply it per event (see `coordinator::batcher`).
+    pub fn quantile_table(&self) -> Arc<QuantileTable> {
+        self.quantiles.load()
+    }
+
     /// Install a tenant-specific quantile transformation (the paper's
-    /// "custom transformation" promotion, Section 3.1). Takes effect
-    /// atomically for subsequent requests.
+    /// "custom transformation" promotion, Section 3.1). Publishes a
+    /// new table copy-on-write; takes effect atomically for
+    /// subsequent requests.
     pub fn install_tenant_quantile(&self, tenant: &str, map: Arc<QuantileMap>) {
-        self.tenant_quantile
-            .write()
-            .unwrap()
-            .insert(tenant.to_string(), map);
+        self.quantiles.rcu(|old| {
+            let mut tenants = old.tenants.clone();
+            tenants.insert(tenant.to_string(), map);
+            (
+                Arc::new(QuantileTable {
+                    default: Arc::clone(&old.default),
+                    tenants,
+                }),
+                (),
+            )
+        });
     }
 
     /// Replace the default quantile transformation.
     pub fn set_default_quantile(&self, map: Arc<QuantileMap>) {
-        *self.default_quantile.write().unwrap() = map;
+        self.quantiles.rcu(|old| {
+            (
+                Arc::new(QuantileTable {
+                    default: map,
+                    tenants: old.tenants.clone(),
+                }),
+                (),
+            )
+        });
     }
 
     /// Whether `tenant` has a custom transformation installed.
     pub fn has_tenant_quantile(&self, tenant: &str) -> bool {
-        self.tenant_quantile.read().unwrap().contains_key(tenant)
+        self.quantiles.load().tenants.contains_key(tenant)
     }
 
-    /// Apply the tenant's `T^Q` to an already-aggregated raw score
-    /// (used by the dynamic batcher, which runs inference once for a
-    /// mixed-tenant batch and then transforms per tenant).
+    /// Apply the tenant's `T^Q` to an already-aggregated raw score.
+    /// One-off convenience; batch paths should hold a
+    /// [`Predictor::quantile_table`] snapshot instead.
     pub fn apply_quantile(&self, raw: f64, tenant: &str) -> f64 {
-        self.quantile_for(tenant).apply(raw)
-    }
-
-    fn quantile_for(&self, tenant: &str) -> Arc<QuantileMap> {
-        if let Some(m) = self.tenant_quantile.read().unwrap().get(tenant) {
-            return Arc::clone(m);
-        }
-        Arc::clone(&self.default_quantile.read().unwrap())
+        self.quantiles.load().apply(raw, tenant)
     }
 
     /// Score `n` events for `tenant` (Eq. 2 end to end).
     pub fn score(&self, features: &[f32], n: usize, tenant: &str) -> Result<ScoreBatch> {
         let raw = self.score_raw(features, n)?;
-        let q = self.quantile_for(tenant);
+        let table = self.quantiles.load();
+        let q = table.for_tenant(tenant);
         let scores = raw.iter().map(|&s| q.apply(s)).collect();
         Ok(ScoreBatch { scores, raw })
     }
@@ -145,9 +185,9 @@ impl Predictor {
         }
         // Expert inference fans out to all containers concurrently —
         // they are independent threads, so the per-event service time
-        // is the max over experts rather than the sum (§Perf in
-        // EXPERIMENTS.md: this halved ensemble latency on the 2-core
-        // testbed and cut the saturated p99 tail).
+        // is the max over experts rather than the sum (EXPERIMENTS.md
+        // "Perf log", step 2: this halved ensemble latency on the
+        // 2-core testbed and cut the saturated p99 tail).
         let tickets: Vec<_> = self
             .experts
             .iter()
@@ -291,6 +331,24 @@ mod tests {
         let after = p.score(&features, 1, "t").unwrap().scores[0];
         assert!(after >= 0.5);
         assert!(before < 0.5);
+    }
+
+    #[test]
+    fn default_swap_preserves_tenant_overrides() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1"]);
+        p.install_tenant_quantile(
+            "vip",
+            QuantileMap::new(vec![0.0, 1.0], vec![0.9, 1.0]).unwrap().shared(),
+        );
+        p.set_default_quantile(
+            QuantileMap::new(vec![0.0, 1.0], vec![0.5, 1.0]).unwrap().shared(),
+        );
+        // Copy-on-write table swap must carry the vip override along.
+        assert!(p.has_tenant_quantile("vip"));
+        let t = p.quantile_table();
+        assert!(t.apply(0.0, "vip") >= 0.9);
+        assert!(t.apply(0.0, "other") >= 0.5);
     }
 
     #[test]

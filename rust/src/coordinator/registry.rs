@@ -10,11 +10,16 @@ use crate::runtime::{ModelPool, PoolStats};
 use crate::transforms::{Aggregation, PosteriorCorrection, QuantileMap};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 pub struct PredictorRegistry {
     pool: Arc<ModelPool>,
     predictors: RwLock<HashMap<String, Arc<Predictor>>>,
+    /// Bumped on every successful deploy/decommission; the engine's
+    /// snapshot staleness gate compares it so registry mutations made
+    /// without a routing swap still trigger a republish.
+    generation: AtomicU64,
 }
 
 /// Registry + pool occupancy, for the dedup accounting.
@@ -32,11 +37,17 @@ impl PredictorRegistry {
         PredictorRegistry {
             pool,
             predictors: RwLock::new(HashMap::new()),
+            generation: AtomicU64::new(0),
         }
     }
 
     pub fn pool(&self) -> &Arc<ModelPool> {
         &self.pool
+    }
+
+    /// Monotonic deployment-set version (see field docs).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
     }
 
     /// Deploy a predictor from config with an explicit initial `T^Q`.
@@ -91,6 +102,7 @@ impl PredictorRegistry {
             .write()
             .unwrap()
             .insert(cfg.name.clone(), Arc::new(predictor));
+        self.generation.fetch_add(1, Ordering::SeqCst);
         Ok(())
     }
 
@@ -102,6 +114,7 @@ impl PredictorRegistry {
         let Some(p) = removed else {
             bail!("predictor '{name}' is not deployed");
         };
+        self.generation.fetch_add(1, Ordering::SeqCst);
         for model in p.expert_names() {
             self.pool.release(&model);
         }

@@ -5,56 +5,81 @@
 //! evaluated **sequentially** (first match wins, selecting exactly one
 //! *live* predictor); shadow rules are evaluated **in parallel**
 //! (every match mirrors the request). Routing uses only request
-//! metadata — no external lookups, no state — so it is lock-free on
-//! the hot path (an `Arc` snapshot swap on config updates, mirroring
-//! the stateless-pod rolling restart of Section 2.5.2).
+//! metadata — no external lookups, no state — and the hot path is
+//! genuinely lock-free: the active [`RoutingConfig`] lives in a
+//! [`SnapCell`] (an `AtomicPtr`-based snapshot cell with writer-side
+//! keep-alive reclamation), so [`Router::resolve`] performs one
+//! wait-free snapshot load and zero mutex/rwlock acquisitions. Config
+//! updates (`swap`) publish a complete new snapshot copy-on-write,
+//! mirroring the stateless-pod rolling restart of Section 2.5.2:
+//! every resolution sees either the old config or the new one in its
+//! entirety, never a torn mixture. Targets are shared `Arc<str>`s, so
+//! resolving allocates nothing beyond the (usually empty) shadow list.
 
 use crate::config::{Intent, RoutingConfig};
+use crate::util::swap::SnapCell;
 use anyhow::{bail, Result};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
-/// The outcome of routing one request.
+/// The outcome of routing one request. Predictor names are `Arc<str>`
+/// clones of the config's own strings — refcount bumps, not `String`
+/// allocations.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Resolution {
     /// The single live predictor serving the client response.
-    pub live: String,
+    pub live: Arc<str>,
     /// Shadow predictors mirroring this request (may be empty).
-    pub shadows: Vec<String>,
-    /// Index of the matched scoring rule (for observability).
+    pub shadows: Vec<Arc<str>>,
+    /// Index of the matched scoring rule (for observability, and for
+    /// index-based target lookup in the engine snapshot).
     pub rule_index: usize,
 }
 
-/// Lock-free-on-read router with atomically swappable config.
+/// Lock-free-on-read router with an atomically swappable config.
 pub struct Router {
-    config: RwLock<Arc<RoutingConfig>>,
+    config: SnapCell<RoutingConfig>,
 }
 
 impl Router {
     pub fn new(config: RoutingConfig) -> Self {
         Router {
-            config: RwLock::new(Arc::new(config)),
+            config: SnapCell::new(Arc::new(config)),
         }
     }
 
     /// Swap the routing configuration atomically (a "rolling update"
     /// in the single-process engine; the cluster-level rollout is
-    /// simulated in `simulator::cluster`).
+    /// simulated in `simulator::cluster`). In-flight resolutions keep
+    /// the snapshot they already loaded; new ones see the new config.
     pub fn swap(&self, config: RoutingConfig) {
-        *self.config.write().unwrap() = Arc::new(config);
+        self.config.store(Arc::new(config));
     }
 
-    /// Snapshot the current configuration.
+    /// Snapshot the current configuration (wait-free).
     pub fn snapshot(&self) -> Arc<RoutingConfig> {
-        Arc::clone(&self.config.read().unwrap())
+        self.config.load()
     }
 
-    /// Resolve an intent to live + shadow predictors.
+    /// Identity of the current config snapshot, for cheap staleness
+    /// checks by layers that compile routing into richer snapshots
+    /// (see `coordinator::snapshot`). Never dereferenced.
+    pub(crate) fn config_ptr(&self) -> *const RoutingConfig {
+        self.config.peek()
+    }
+
+    /// Resolve an intent to live + shadow predictors against the
+    /// current config. One snapshot load; no locks.
     pub fn resolve(&self, intent: &Intent) -> Result<Resolution> {
-        let cfg = self.snapshot();
+        Self::resolve_in(&self.config.load(), intent)
+    }
+
+    /// Resolve against an explicit config snapshot (used by the engine
+    /// so routing and target lookup share one coherent snapshot).
+    pub fn resolve_in(cfg: &RoutingConfig, intent: &Intent) -> Result<Resolution> {
         let mut live = None;
         for (i, rule) in cfg.scoring_rules.iter().enumerate() {
             if rule.condition.matches(intent) {
-                live = Some((rule.target_predictor.clone(), i));
+                live = Some((Arc::clone(&rule.target_predictor), i));
                 break; // sequential: first match wins
             }
         }
@@ -70,12 +95,12 @@ impl Router {
         };
         // Parallel shadow evaluation: collect all matches, dedupe, and
         // never shadow onto the live predictor itself.
-        let mut shadows: Vec<String> = Vec::new();
+        let mut shadows: Vec<Arc<str>> = Vec::new();
         for rule in &cfg.shadow_rules {
             if rule.condition.matches(intent) {
                 for t in &rule.target_predictors {
                     if *t != live && !shadows.contains(t) {
-                        shadows.push(t.clone());
+                        shadows.push(Arc::clone(t));
                     }
                 }
             }
@@ -142,21 +167,25 @@ mod tests {
         }
     }
 
+    fn shadow_names(res: &Resolution) -> Vec<&str> {
+        res.shadows.iter().map(|s| &**s).collect()
+    }
+
     #[test]
     fn paper_fig2_scenarios() {
         let r = fig2_router();
         // bank1 served by v1 AND shadowed to v2 (the paper's example).
         let res = r.resolve(&intent("bank1", "EMEA", "fraud_v1")).unwrap();
-        assert_eq!(res.live, "bank1-predictor-v1");
-        assert_eq!(res.shadows, vec!["bank1-predictor-v2".to_string()]);
+        assert_eq!(&*res.live, "bank1-predictor-v1");
+        assert_eq!(shadow_names(&res), vec!["bank1-predictor-v2"]);
         assert_eq!(res.rule_index, 0);
         // US tenant with schema v1 routes to the regional predictor.
         let res = r.resolve(&intent("bankX", "NAMER", "fraud_v1")).unwrap();
-        assert_eq!(res.live, "america-predictor-v1");
+        assert_eq!(&*res.live, "america-predictor-v1");
         assert!(res.shadows.is_empty());
         // Cold-start client falls through to the catch-all.
         let res = r.resolve(&intent("newbie", "APAC", "fraud_v2")).unwrap();
-        assert_eq!(res.live, "global-predictor-v3");
+        assert_eq!(&*res.live, "global-predictor-v3");
         assert_eq!(res.rule_index, 2);
     }
 
@@ -165,7 +194,15 @@ mod tests {
         // bank1 in NAMER matches both rule 0 and rule 1; rule 0 wins.
         let r = fig2_router();
         let res = r.resolve(&intent("bank1", "NAMER", "fraud_v1")).unwrap();
-        assert_eq!(res.live, "bank1-predictor-v1");
+        assert_eq!(&*res.live, "bank1-predictor-v1");
+        assert_eq!(res.rule_index, 0);
+        // Swapping rule order flips the winner: ordering is semantic.
+        let mut cfg = r.snapshot().as_ref().clone();
+        cfg.scoring_rules.swap(0, 1);
+        let r2 = Router::new(cfg);
+        let res = r2.resolve(&intent("bank1", "NAMER", "fraud_v1")).unwrap();
+        assert_eq!(&*res.live, "america-predictor-v1");
+        assert_eq!(res.rule_index, 0);
     }
 
     #[test]
@@ -191,24 +228,49 @@ mod tests {
         });
         let r = Router::new(cfg);
         let res = r.resolve(&intent("bank1", "", "")).unwrap();
-        assert_eq!(res.live, "bank1-predictor-v1");
+        assert_eq!(&*res.live, "bank1-predictor-v1");
         // v2 appears once despite two matching shadow rules; live is
         // never mirrored onto itself.
-        assert_eq!(res.shadows, vec!["bank1-predictor-v2".to_string()]);
+        assert_eq!(shadow_names(&res), vec!["bank1-predictor-v2"]);
+    }
+
+    #[test]
+    fn shadow_rules_fan_out_across_all_matches() {
+        // Multiple matching shadow rules union their targets: one
+        // request can mirror to several candidate predictors at once
+        // (parallel evaluation, paper Fig. 2).
+        let mut cfg = fig2_router().snapshot().as_ref().clone();
+        cfg.shadow_rules.push(ShadowRule {
+            description: "also trial v3".into(),
+            condition: tenant_cond("bank1"),
+            target_predictors: vec!["bank1-predictor-v3".into(), "bank1-predictor-v2".into()],
+        });
+        cfg.shadow_rules.push(ShadowRule {
+            description: "other tenant only".into(),
+            condition: tenant_cond("bank9"),
+            target_predictors: vec!["never-matched".into()],
+        });
+        let r = Router::new(cfg);
+        let res = r.resolve(&intent("bank1", "", "")).unwrap();
+        assert_eq!(
+            shadow_names(&res),
+            vec!["bank1-predictor-v2", "bank1-predictor-v3"],
+            "all matching shadow rules contribute, deduped, non-matching excluded"
+        );
     }
 
     #[test]
     fn swap_changes_routing_atomically() {
         let r = fig2_router();
         let before = r.resolve(&intent("bank1", "", "")).unwrap();
-        assert_eq!(before.live, "bank1-predictor-v1");
+        assert_eq!(&*before.live, "bank1-predictor-v1");
         // Promote v2 to live (the Fig. 3 lifecycle's final step).
         let mut cfg = r.snapshot().as_ref().clone();
         cfg.scoring_rules[0].target_predictor = "bank1-predictor-v2".into();
         cfg.shadow_rules.clear();
         r.swap(cfg);
         let after = r.resolve(&intent("bank1", "", "")).unwrap();
-        assert_eq!(after.live, "bank1-predictor-v2");
+        assert_eq!(&*after.live, "bank1-predictor-v2");
         assert!(after.shadows.is_empty());
     }
 
@@ -232,7 +294,6 @@ mod tests {
 
     #[test]
     fn concurrent_resolve_during_swap() {
-        use std::sync::Arc;
         let r = Arc::new(fig2_router());
         let readers: Vec<_> = (0..4)
             .map(|_| {
@@ -251,7 +312,7 @@ mod tests {
                 for i in 0..200 {
                     let mut cfg = r.snapshot().as_ref().clone();
                     cfg.scoring_rules[0].target_predictor =
-                        format!("bank1-predictor-v{}", 1 + i % 2);
+                        format!("bank1-predictor-v{}", 1 + i % 2).into();
                     r.swap(cfg);
                 }
             })
@@ -260,5 +321,58 @@ mod tests {
             h.join().unwrap();
         }
         writer.join().unwrap();
+    }
+
+    #[test]
+    fn swap_is_never_torn_under_contention() {
+        // N resolver threads race M swapper iterations. Every config
+        // version k keeps an invariant across its rules: the live
+        // target and the shadow target carry the same version suffix.
+        // A resolution mixing suffixes would prove a torn snapshot.
+        fn versioned(k: u64) -> RoutingConfig {
+            RoutingConfig {
+                scoring_rules: vec![
+                    ScoringRule {
+                        description: "hot tenant".into(),
+                        condition: tenant_cond("hot"),
+                        target_predictor: format!("live-v{k}").into(),
+                    },
+                    ScoringRule {
+                        description: "catch-all".into(),
+                        condition: Condition::default(),
+                        target_predictor: format!("global-v{k}").into(),
+                    },
+                ],
+                shadow_rules: vec![ShadowRule {
+                    description: "hot shadow".into(),
+                    condition: tenant_cond("hot"),
+                    target_predictors: vec![format!("shadow-v{k}").into()],
+                }],
+            }
+        }
+        let r = Arc::new(Router::new(versioned(0)));
+        let hot = intent("hot", "", "");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = Arc::clone(&r);
+                let hot = hot.clone();
+                s.spawn(move || {
+                    for _ in 0..5_000 {
+                        let res = r.resolve(&hot).unwrap();
+                        let lv = res.live.rsplit('v').next().unwrap().to_string();
+                        let sv = res.shadows[0].rsplit('v').next().unwrap().to_string();
+                        assert_eq!(lv, sv, "torn snapshot: live {} vs shadow {}", res.live, res.shadows[0]);
+                    }
+                });
+            }
+            for _ in 0..2 {
+                let r = Arc::clone(&r);
+                s.spawn(move || {
+                    for k in 1..=1_000u64 {
+                        r.swap(versioned(k));
+                    }
+                });
+            }
+        });
     }
 }

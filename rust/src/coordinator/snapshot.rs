@@ -1,0 +1,142 @@
+//! The engine's data-plane snapshot: everything one request needs,
+//! resolved ahead of time and published as a single immutable object.
+//!
+//! The seed implementation took two `RwLock`s per request (the
+//! router's config lock plus the engine's lazy batcher map) and paid a
+//! `HashMap` lookup per batcher acquisition. [`EngineSnapshot`]
+//! removes all of it from the request path: the control plane
+//! (`coordinator::deployment`) compiles the routing config, the
+//! resolved predictor handles and the per-predictor dynamic batchers
+//! into one snapshot and publishes it through a `SnapCell` (see
+//! `util::swap`). `Engine::score` loads one snapshot per request —
+//! wait-free — then routes by rule index straight to an
+//! already-resolved [`PredictorEntry`]: no locks, no map probes, no
+//! name cloning.
+//!
+//! Publication protocol (documented for operators in
+//! docs/ARCHITECTURE.md):
+//!
+//! 1. the control plane mutates the registry and/or swaps the routing
+//!    config (both copy-on-write);
+//! 2. it rebuilds the snapshot from the *current* registry + routing,
+//!    reusing live batchers by predictor name so in-flight batches
+//!    keep coalescing across the swap;
+//! 3. it publishes the snapshot atomically; requests that already
+//!    loaded the old snapshot finish on it (valid by construction),
+//!    new requests see the new world;
+//! 4. batchers whose predictor left the registry are shut down after
+//!    publication — stale-snapshot stragglers get a clean error, the
+//!    same contract the seed had for decommissioned predictors.
+//!
+//! Direct `Router::swap` callers (tests, harnesses) are covered by a
+//! staleness check in `Engine::score`: the snapshot records the
+//! identity of the routing config it was compiled from, and a pointer
+//! mismatch triggers a lazy republish before resolving.
+
+use super::batcher::Batcher;
+use super::predictor::Predictor;
+use super::registry::PredictorRegistry;
+use crate::config::RoutingConfig;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A predictor resolved for serving: the handle plus its dynamic
+/// batcher. Shared (`Arc`) between consecutive snapshots, so a config
+/// swap neither drains nor restarts batching.
+pub struct PredictorEntry {
+    pub predictor: Arc<Predictor>,
+    pub batcher: Arc<Batcher>,
+}
+
+/// One immutable world for the scoring data plane.
+pub struct EngineSnapshot {
+    /// The routing config this snapshot was compiled from. `Arc`
+    /// identity doubles as the staleness token against the router.
+    pub routing: Arc<RoutingConfig>,
+    /// The registry generation this snapshot was compiled from (read
+    /// *before* compiling, so a concurrent mutation makes the
+    /// snapshot look stale rather than current). Lets the engine
+    /// notice deploy/decommission calls made without a routing swap.
+    pub registry_generation: u64,
+    /// Scoring-rule index -> resolved live target (`None` when the
+    /// rule names a predictor that is not deployed — surfaced as a
+    /// routing error at request time, matching the seed's behavior).
+    live: Vec<Option<Arc<PredictorEntry>>>,
+    /// Every deployed predictor by name (shadow dispatch, admin).
+    entries: HashMap<Arc<str>, Arc<PredictorEntry>>,
+}
+
+impl EngineSnapshot {
+    /// Compile a snapshot from the current registry + routing config.
+    /// Batchers are reused from `prev` by name when the predictor
+    /// handle is unchanged; new predictors get fresh batchers.
+    pub fn build(
+        routing: Arc<RoutingConfig>,
+        registry: &PredictorRegistry,
+        prev: Option<&EngineSnapshot>,
+        max_batch: usize,
+        max_batch_delay: Duration,
+    ) -> EngineSnapshot {
+        let registry_generation = registry.generation();
+        let mut entries: HashMap<Arc<str>, Arc<PredictorEntry>> = HashMap::new();
+        for name in registry.names() {
+            let Some(predictor) = registry.get(&name) else {
+                continue; // raced a decommission; the next publish catches up
+            };
+            let reused = prev.and_then(|p| p.entries.get(name.as_str())).filter(|e| {
+                Arc::ptr_eq(&e.predictor, &predictor)
+            });
+            let entry = match reused {
+                Some(e) => Arc::clone(e),
+                None => Arc::new(PredictorEntry {
+                    batcher: Arc::new(Batcher::new(
+                        Arc::clone(&predictor),
+                        max_batch,
+                        max_batch_delay,
+                    )),
+                    predictor,
+                }),
+            };
+            entries.insert(Arc::from(name.as_str()), entry);
+        }
+        let live = routing
+            .scoring_rules
+            .iter()
+            .map(|r| entries.get(&*r.target_predictor).cloned())
+            .collect();
+        EngineSnapshot {
+            routing,
+            registry_generation,
+            live,
+            entries,
+        }
+    }
+
+    /// The resolved live target of scoring rule `rule_index` — a plain
+    /// vector index, no hashing, no locks.
+    pub fn live_entry(&self, rule_index: usize) -> Option<&Arc<PredictorEntry>> {
+        self.live.get(rule_index).and_then(|e| e.as_ref())
+    }
+
+    /// Look up a deployed predictor's entry by name (shadow path).
+    pub fn entry(&self, name: &str) -> Option<&Arc<PredictorEntry>> {
+        self.entries.get(name)
+    }
+
+    /// Entries of `self` whose predictor is absent from `next` —
+    /// decommissioned between the two snapshots; their batchers are
+    /// shut down after `next` is published.
+    pub fn removed_entries(&self, next: &EngineSnapshot) -> Vec<Arc<PredictorEntry>> {
+        self.entries
+            .iter()
+            .filter(|(name, _)| !next.entries.contains_key(&**name))
+            .map(|(_, e)| Arc::clone(e))
+            .collect()
+    }
+
+    /// Number of deployed predictors this snapshot serves.
+    pub fn predictor_count(&self) -> usize {
+        self.entries.len()
+    }
+}

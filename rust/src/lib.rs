@@ -9,16 +9,28 @@
 //! `make artifacts`) through the PJRT CPU client — Python is never on
 //! the request path.
 //!
-//! See DESIGN.md for the system inventory and the experiment index
-//! mapping every paper table/figure to a module and harness.
+//! The serving split follows the paper's Section 2.5: a **data
+//! plane** whose hot path ([`coordinator::Engine::score`]) performs
+//! exactly one wait-free snapshot load — no locks, no map probes, no
+//! per-request name allocation — and a **control plane**
+//! ([`coordinator::ControlPlane`]) that publishes new
+//! [`coordinator::EngineSnapshot`]s copy-on-write for every
+//! deployment, promotion, decommission and quantile refit. The
+//! snapshot primitive itself is [`util::swap::SnapCell`].
+//!
+//! See `docs/ARCHITECTURE.md` for the system inventory, trust
+//! boundaries, request lifecycle and the snapshot-publication
+//! protocol, and `EXPERIMENTS.md` for the measurement methodology
+//! behind every performance claim in the doc comments.
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod baselines;
 pub mod calibration;
+pub mod coldstart;
 pub mod config;
 pub mod coordinator;
 pub mod datalake;
 pub mod featurestore;
-pub mod coldstart;
 pub mod metrics;
 pub mod repro;
 pub mod runtime;

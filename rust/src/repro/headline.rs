@@ -118,8 +118,8 @@ pub fn measure(engine: &Engine, clients: usize, events_per_client: usize) -> Res
 
 pub fn run() -> Result<String> {
     // Enough client concurrency to exercise the dynamic batcher
-    // (concurrent events coalesce into shared PJRT calls — §Perf in
-    // EXPERIMENTS.md: batching took this host from 2.5k eps with a
+    // (concurrent events coalesce into shared PJRT calls — "Perf log"
+    // in EXPERIMENTS.md: batching took this host from 2.5k eps with a
     // 56ms p99 tail to ~10k eps with p99 < 10ms).
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())

@@ -1,5 +1,5 @@
 //! Paper-exhibit harnesses: one module per table/figure, each printing
-//! the same rows/series the paper reports (see DESIGN.md experiment
+//! the same rows/series the paper reports (see docs/ARCHITECTURE.md experiment
 //! index).
 
 pub mod common;

@@ -68,7 +68,7 @@ impl ModelHandle {
     /// Enqueue an inference and return immediately; ensembles fan out
     /// to all expert containers concurrently and join (they are
     /// independent threads, so per-event service time is max over
-    /// experts, not the sum — see EXPERIMENTS.md §Perf).
+    /// experts, not the sum — see EXPERIMENTS.md "Perf log").
     pub fn infer_async(&self, features: &[f32], n: usize) -> Result<InferTicket> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         if n == 0 {

@@ -3,7 +3,12 @@
 //! Enough protocol for the serving front end: request-line + headers +
 //! Content-Length bodies, keep-alive, JSON in/out. Connections are
 //! dispatched to the worker thread pool; the scoring handler calls
-//! straight into the engine (Python nowhere in sight).
+//! straight into the engine (Python nowhere in sight), which serves
+//! each request off one wait-free `EngineSnapshot` load — workers
+//! never block on routing or batcher state (they share only the
+//! snapshot cell's reader counter, a few uncontended-in-practice
+//! atomic ops), so adding workers scales until PJRT saturates
+//! (EXPERIMENTS.md "Contention").
 
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Context, Result};

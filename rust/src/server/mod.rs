@@ -70,12 +70,20 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
         }
         ("GET", "/admin/stats") => {
             let s = engine.registry.stats();
+            // One wait-free snapshot load: the same world the data
+            // plane is routing on right now.
+            let snap = engine.load_snapshot();
             let body = Json::obj(vec![
                 ("predictors", Json::Num(s.predictors as f64)),
                 ("model_references", Json::Num(s.model_references as f64)),
                 ("live_containers", Json::Num(s.pool.live_containers as f64)),
                 ("spawned_total", Json::Num(s.pool.spawned_total as f64)),
                 ("datalake_records", Json::Num(engine.lake.len() as f64)),
+                ("snapshot_predictors", Json::Num(snap.predictor_count() as f64)),
+                (
+                    "snapshot_scoring_rules",
+                    Json::Num(snap.routing.scoring_rules.len() as f64),
+                ),
             ])
             .to_string();
             Response::json(200, body)

@@ -1,9 +1,13 @@
 //! Simulation substrates: the synthetic multi-tenant transaction
-//! workload and the Kubernetes-style rolling-update cluster model
-//! behind Fig. 5.
+//! workload, the Kubernetes-style rolling-update cluster model behind
+//! Fig. 5, and the real-thread swap-under-load harness proving that
+//! routing-config promotions never stall the data plane.
 
 pub mod cluster;
 pub mod workload;
 
-pub use cluster::{ClusterConfig, ClusterSim, LatencyModel, RolloutTrace};
+pub use cluster::{
+    swap_storm, ClusterConfig, ClusterSim, LatencyModel, RolloutTrace, SwapStormConfig,
+    SwapStormReport,
+};
 pub use workload::{Event, TenantProfile, TrafficMix, Workload, FEATURE_DIM};

@@ -21,7 +21,8 @@ pub struct QuantileMap {
     src: Vec<f64>,
     /// Reference quantiles `q^R_0..q^R_N` (non-decreasing).
     refq: Vec<f64>,
-    /// Precomputed segment slopes (len N): (refq[i+1]-refq[i])/(src[i+1]-src[i]).
+    /// Precomputed segment slopes (len N):
+    /// `(refq[i+1]-refq[i])/(src[i+1]-src[i])`.
     slopes: Vec<f64>,
 }
 

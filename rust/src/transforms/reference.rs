@@ -2,7 +2,7 @@
 //!
 //! MUSE guarantees the final score follows a fixed reference
 //! distribution regardless of the predictor's internals. The paper's
-//! production `R` is proprietary; per DESIGN.md we substitute a Beta
+//! production `R` is proprietary; per docs/ARCHITECTURE.md we substitute a Beta
 //! mixture with the shape the paper describes: "high density near 0
 //! and a longer tail towards 1", giving clients granularity in the
 //! useful alert-rate region (0.1%-1%). Alternatively `R` can mirror a

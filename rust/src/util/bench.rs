@@ -1,8 +1,22 @@
 //! Micro-benchmark harness (no criterion offline): warm-up + timed
 //! iterations with mean/percentile reporting, used by the
-//! `cargo bench` targets (`harness = false`).
+//! `cargo bench` targets (`harness = false`), plus panic-safe
+//! liveness counting for multi-threaded storm drivers.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Decrements the counter on drop. Storm drivers (a control-plane
+/// thread looping "while workers are live") count workers with this
+/// so a panicking worker still releases the loop instead of
+/// deadlocking the scope join behind a spinning peer.
+pub struct CountdownGuard<'a>(pub &'a AtomicU64);
+
+impl Drop for CountdownGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]

@@ -2,7 +2,7 @@
 //! f64 numbers, no surrogate-pair escapes beyond the BMP requirement).
 //!
 //! Built because the offline crate universe has no `serde_json` (see
-//! DESIGN.md "Crate-availability constraint"). Used for the artifact
+//! docs/ARCHITECTURE.md "Crate-availability constraint"). Used for the artifact
 //! manifest, expert weight files, the HTTP API payloads and the
 //! experiment-harness outputs.
 

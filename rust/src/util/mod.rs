@@ -1,6 +1,6 @@
 //! From-scratch substrates: JSON, RNG, thread pool, datasets, stats,
-//! and a mini property-testing framework (see DESIGN.md
-//! "Crate-availability constraint").
+//! the lock-free snapshot cell, and a mini property-testing framework
+//! (see docs/ARCHITECTURE.md "Crate-availability constraint").
 
 pub mod bench;
 pub mod dataset;
@@ -8,4 +8,5 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod swap;
 pub mod threadpool;

@@ -1,0 +1,267 @@
+//! `SnapCell<T>`: an atomically swappable, lock-free-on-read snapshot
+//! holder (an `ArcSwap`-style epoch pointer built on `AtomicPtr` +
+//! `Arc` — no external crates).
+//!
+//! Readers (`load`) never block and never touch a mutex: one counter
+//! increment, one pointer load, one refcount increment, one counter
+//! decrement — wait-free on every path. (Readers do share the
+//! `inflight` counter's cache line, so a load is not *contention*-
+//! free; what it can never do is wait on a writer, which is the
+//! failure mode that makes `RwLock` readers collapse under a swap
+//! storm — see EXPERIMENTS.md "Contention".) Writers (`store` /
+//! `rcu`) serialize on an internal mutex, which is exactly the MUSE
+//! split: the data plane reads snapshots at request rate, the
+//! control plane publishes new ones at deployment rate (paper
+//! Section 2.5).
+//!
+//! # Memory reclamation
+//!
+//! The classic hazard of `AtomicPtr<ArcInner>` schemes is a reader
+//! incrementing the strong count of an allocation a concurrent writer
+//! just freed. `SnapCell` closes that window with a keep-alive list
+//! plus a quiescence gate:
+//!
+//! * every `Arc` ever published is retained in a writer-side
+//!   keep-alive list, so any pointer a reader can observe refers to a
+//!   live allocation (strong count >= 1) for as long as it is
+//!   reachable;
+//! * reclamation runs only on the write path, and only after the
+//!   writer observes `inflight == 0` — i.e. no reader is inside the
+//!   load()-to-refcount-increment window. Readers entering after that
+//!   observation can only see the freshly published pointer
+//!   (everything is `SeqCst`, so the publish store precedes the
+//!   quiescence check in the total order), never a retired one.
+//!
+//! Retired snapshots therefore persist at most until the next write
+//! that observes a quiescent moment; the load window is a handful of
+//! instructions, so in practice the keep-alive list stays at O(1).
+//! Worst case it is bounded by the number of control-plane swaps —
+//! O(deployments), never O(requests).
+
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A lock-free-on-read cell holding an immutable snapshot `Arc<T>`.
+pub struct SnapCell<T> {
+    /// Raw view of the currently published snapshot. Does **not** own
+    /// a strong count: validity is guaranteed by `keepalive`.
+    current: AtomicPtr<T>,
+    /// Number of readers inside the load()-to-increment window.
+    inflight: AtomicUsize,
+    /// Every published `Arc` not yet proven unreachable. Doubles as
+    /// the writer lock: all publications serialize on it.
+    keepalive: Mutex<Vec<Arc<T>>>,
+}
+
+impl<T> SnapCell<T> {
+    pub fn new(value: Arc<T>) -> SnapCell<T> {
+        let ptr = Arc::as_ptr(&value) as *mut T;
+        SnapCell {
+            current: AtomicPtr::new(ptr),
+            inflight: AtomicUsize::new(0),
+            keepalive: Mutex::new(vec![value]),
+        }
+    }
+
+    /// Read the current snapshot. Wait-free: no mutex, no spinning,
+    /// no allocation — four atomic operations.
+    pub fn load(&self) -> Arc<T> {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let ptr = self.current.load(Ordering::SeqCst);
+        // SAFETY: `ptr` was published by `store`/`rcu`, which retains
+        // a keep-alive `Arc` for it before publishing. Reclamation
+        // (`collect`) frees a retired snapshot only after observing
+        // `inflight == 0`; we raised `inflight` before loading `ptr`,
+        // so either the collector saw us (and skipped reclaiming) or
+        // we loaded the pointer it just published (which is never
+        // reclaimed). Hence the allocation is live for the whole
+        // window and the increment is sound; `from_raw` adopts the
+        // count we just added.
+        let arc = unsafe {
+            Arc::increment_strong_count(ptr);
+            Arc::from_raw(ptr)
+        };
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        arc
+    }
+
+    /// The raw identity of the current snapshot, for cheap staleness
+    /// checks (`ptr == cell.peek()`). Never dereference it.
+    pub fn peek(&self) -> *const T {
+        self.current.load(Ordering::SeqCst)
+    }
+
+    /// Publish a new snapshot (copy-on-write is the caller's job).
+    pub fn store(&self, value: Arc<T>) {
+        let mut held = self.keepalive.lock().unwrap();
+        held.push(Arc::clone(&value));
+        self.current.store(Arc::as_ptr(&value) as *mut T, Ordering::SeqCst);
+        self.collect(&mut held);
+    }
+
+    /// Read-copy-update: compute the next snapshot from the current
+    /// one and publish it, all under the writer lock so concurrent
+    /// updaters compose instead of clobbering each other. Returning
+    /// a clone of the current `Arc` makes the call a no-op publish
+    /// (no keep-alive growth) — updaters that discover nothing
+    /// changed under the lock use this to avoid republishing
+    /// identical snapshots back-to-back. Returns the closure's
+    /// side-channel value.
+    pub fn rcu<R>(&self, f: impl FnOnce(&Arc<T>) -> (Arc<T>, R)) -> R {
+        let mut held = self.keepalive.lock().unwrap();
+        let cur_ptr = self.current.load(Ordering::SeqCst) as *const T;
+        let cur = held
+            .iter()
+            .find(|a| Arc::as_ptr(a) == cur_ptr)
+            .expect("current snapshot must be in the keep-alive list")
+            .clone();
+        let (next, out) = f(&cur);
+        // Drop the working clone before collecting, or the snapshot
+        // we are retiring stays pinned (strong count >= 2) until the
+        // *next* write — indefinitely on a quiescent control plane.
+        drop(cur);
+        if Arc::as_ptr(&next) != cur_ptr {
+            held.push(Arc::clone(&next));
+            self.current.store(Arc::as_ptr(&next) as *mut T, Ordering::SeqCst);
+        }
+        self.collect(&mut held);
+        out
+    }
+
+    /// Drop retired snapshots once no reader can reach them. Runs
+    /// under the writer lock. Bounded: gives up if readers keep
+    /// streaming through the (nanoseconds-wide) load window; the next
+    /// write retries.
+    fn collect(&self, held: &mut Vec<Arc<T>>) {
+        for _ in 0..16 {
+            if self.inflight.load(Ordering::SeqCst) == 0 {
+                let cur = self.current.load(Ordering::SeqCst) as *const T;
+                // Keep the published snapshot and anything still held
+                // by outstanding reader clones; everything else is
+                // unreachable (proof in the module docs).
+                held.retain(|a| Arc::as_ptr(a) == cur || Arc::strong_count(a) > 1);
+                return;
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Number of retired-but-not-yet-reclaimed snapshots (tests and
+    /// observability; 0 in a quiescent steady state).
+    pub fn retired(&self) -> usize {
+        self.keepalive.lock().unwrap().len().saturating_sub(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+
+    #[test]
+    fn load_returns_latest_store() {
+        let cell = SnapCell::new(Arc::new(1u64));
+        assert_eq!(*cell.load(), 1);
+        cell.store(Arc::new(2));
+        assert_eq!(*cell.load(), 2);
+        cell.store(Arc::new(3));
+        assert_eq!(*cell.load(), 3);
+    }
+
+    #[test]
+    fn rcu_composes_updates() {
+        let cell = SnapCell::new(Arc::new(vec![1u32]));
+        let len = cell.rcu(|old| {
+            let mut next = old.as_ref().clone();
+            next.push(2);
+            let n = next.len();
+            (Arc::new(next), n)
+        });
+        assert_eq!(len, 2);
+        assert_eq!(*cell.load(), vec![1, 2]);
+        // The replaced snapshot must be reclaimed by the same rcu
+        // call, not pinned until the next write (decommissioned
+        // predictors in a retired EngineSnapshot ride on this).
+        assert_eq!(cell.retired(), 0, "rcu must not pin the snapshot it retired");
+    }
+
+    #[test]
+    fn rcu_same_arc_is_a_no_op_publish() {
+        let cell = SnapCell::new(Arc::new(5u64));
+        for _ in 0..50 {
+            cell.rcu(|old| (Arc::clone(old), ()));
+        }
+        assert_eq!(*cell.load(), 5);
+        assert_eq!(cell.retired(), 0, "no-op rcu must not grow the keep-alive list");
+    }
+
+    #[test]
+    fn retired_snapshots_are_reclaimed() {
+        let cell = SnapCell::new(Arc::new(0u64));
+        for i in 1..=100 {
+            cell.store(Arc::new(i));
+        }
+        // Quiescent writer: every retired snapshot must have been
+        // collected on some store.
+        assert_eq!(cell.retired(), 0, "keep-alive list must not grow");
+        // A clone held by a "reader" pins exactly that snapshot.
+        let pinned = cell.load();
+        cell.store(Arc::new(101));
+        assert_eq!(cell.retired(), 1);
+        drop(pinned);
+        cell.store(Arc::new(102));
+        assert_eq!(cell.retired(), 0);
+    }
+
+    #[test]
+    fn concurrent_readers_see_only_published_values() {
+        // Readers hammer load() while a writer publishes a strictly
+        // increasing sequence; every observed value must be one that
+        // was published, and per-reader observations must be monotone
+        // (snapshots can be stale but never torn or reordered).
+        let cell = Arc::new(SnapCell::new(Arc::new(0u64)));
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let cell = Arc::clone(&cell);
+                let stop = Arc::clone(&stop);
+                thread::spawn(move || {
+                    let mut last = 0u64;
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = *cell.load();
+                        assert!(v >= last, "went backwards: {v} < {last}");
+                        last = v;
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        for i in 1..=10_000u64 {
+            cell.store(Arc::new(i));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            assert!(r.join().unwrap() > 0);
+        }
+        assert_eq!(*cell.load(), 10_000);
+    }
+
+    #[test]
+    fn concurrent_rcu_writers_never_lose_updates() {
+        let cell = Arc::new(SnapCell::new(Arc::new(0u64)));
+        thread::scope(|s| {
+            for _ in 0..4 {
+                let cell = &cell;
+                s.spawn(move || {
+                    for _ in 0..1_000 {
+                        cell.rcu(|old| (Arc::new(**old + 1), ()));
+                    }
+                });
+            }
+        });
+        assert_eq!(*cell.load(), 4_000, "rcu must serialize increments");
+    }
+}

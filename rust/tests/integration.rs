@@ -173,6 +173,75 @@ fn scoring_unknown_route_errors_cleanly() {
 }
 
 #[test]
+fn promotions_under_load_never_drop_requests() {
+    // The engine-level swap-under-load proof (paper Sections
+    // 2.5.1-2.5.2): worker threads score continuously while the
+    // control plane ping-pongs bank1 between p1 and p2. Every request
+    // must succeed and land on one of the two predictors — a dropped
+    // or stalled request fails the run, a torn snapshot would route
+    // to a predictor/batcher mismatch and error.
+    let Some(engine) = engine() else { return };
+    let d = engine.predictor("p1").unwrap().feature_dim();
+    let swaps = std::sync::atomic::AtomicU64::new(0);
+    let done = std::sync::atomic::AtomicU64::new(0);
+    let workers_live = std::sync::atomic::AtomicU64::new(3);
+    std::thread::scope(|s| {
+        for w in 0..3u64 {
+            let engine = &engine;
+            let done = &done;
+            let workers_live = &workers_live;
+            s.spawn(move || {
+                // Panic-safe: a dropped request (the failure this test
+                // exists to catch) must release the promotion loop,
+                // not hang the scope join until the harness timeout.
+                let _live = muse::util::bench::CountdownGuard(workers_live);
+                for i in 0..300u64 {
+                    let resp = engine
+                        .score(&ScoreRequest {
+                            intent: Intent {
+                                tenant: "bank1".into(),
+                                ..Intent::default()
+                            },
+                            entity: format!("w{w}-{i}"),
+                            features: vec![0.01 * (i as f32), 0.2]
+                                .into_iter()
+                                .cycle()
+                                .take(d)
+                                .collect(),
+                        })
+                        .expect("request dropped during promotion storm");
+                    assert!(
+                        resp.predictor == "p1" || resp.predictor == "p2",
+                        "routed to unexpected predictor {}",
+                        resp.predictor
+                    );
+                    done.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+        let engine = &engine;
+        let swaps = &swaps;
+        let workers_live = &workers_live;
+        s.spawn(move || {
+            let cp = ControlPlane::new(engine);
+            let mut k = 0u64;
+            while workers_live.load(std::sync::atomic::Ordering::Relaxed) > 0 {
+                let target = if k % 2 == 0 { "p2" } else { "p1" };
+                cp.promote("bank1", target).unwrap();
+                k += 1;
+            }
+            swaps.fetch_add(k, std::sync::atomic::Ordering::Relaxed);
+        });
+    });
+    assert_eq!(done.load(std::sync::atomic::Ordering::Relaxed), 900);
+    assert!(
+        swaps.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "promotion storm never ran"
+    );
+    engine.drain_shadows();
+}
+
+#[test]
 fn deploy_teardown_cycles_do_not_leak_containers() {
     let Some(engine) = engine() else { return };
     let cp = ControlPlane::new(&engine);
