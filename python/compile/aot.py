@@ -9,6 +9,10 @@ binary consumes:
   batch-size variant. One compiled PJRT executable per artifact is the
   "model container" the coordinator's registry shares across
   predictors (Section 2.2.1).
+* ``artifacts/models/{name}_b{B}.sim.txt`` — the same expert in the
+  ``muse-sim-hlo v1`` dialect for the vendored offline ``xla`` shim
+  (``rust/vendor/xla``); this is what the manifest references, since
+  the offline crate universe has no real PJRT bindings.
 * ``artifacts/transform/transform_k{K}_b{B}.hlo.txt`` — the fused
   T^C -> A -> T^Q pipeline kernel for K-expert ensembles (batched /
   offline path; the rust hot path also implements the math natively).
@@ -84,6 +88,36 @@ def lower_expert(params, batch: int) -> str:
     return to_hlo_text(jax.jit(fn).lower(spec))
 
 
+def to_sim_text(params, batch: int, d: int) -> str:
+    """Emit one expert in the ``muse-sim-hlo v1`` dialect.
+
+    The offline build environment vendors an API-compatible ``xla``
+    shim (``rust/vendor/xla``) instead of real PJRT bindings, and the
+    shim interprets this tiny feed-forward dialect rather than true
+    HLO text (grammar documented in the shim's module docs). The
+    experts are exactly dense/relu/.../sigmoid stacks, so the dialect
+    is lossless for them; the manifest points the rust runtime at
+    these files, while the true HLO text is still written alongside
+    for environments with real bindings.
+    """
+    lines = ["muse-sim-hlo v1", f"input {batch} {d}"]
+    width = d
+    for li, (w, b) in enumerate(params):
+        w = np.asarray(w, dtype=np.float32)
+        b = np.asarray(b, dtype=np.float32)
+        din, dout = w.shape
+        lines.append(f"dense {din} {dout}")
+        for o in range(dout):
+            # Shim layout: one output unit per row (weights row-major
+            # [out][in]); jax params are [in, out], hence the column.
+            lines.append(" ".join(repr(float(v)) for v in w[:, o]))
+        lines.append(" ".join(repr(float(v)) for v in b))
+        lines.append("relu" if li < len(params) - 1 else "sigmoid")
+        width = dout
+    lines.append(f"output {width}")
+    return "\n".join(lines) + "\n"
+
+
 def lower_transform(k: int, batch: int, n_points: int = QUANTILE_POINTS) -> str:
     """Lower the fused transform pipeline (generic: grids are inputs)."""
 
@@ -154,7 +188,16 @@ def main() -> None:
                 with open(path, "w") as f:
                     f.write(text)
                 print(f"[aot] {name} b={b}: {len(text)} chars")
-            variants[str(b)] = f"models/{name}_b{b}.hlo.txt"
+            # The manifest points the runtime at the sim-dialect file
+            # (the vendored offline xla shim rejects true HLO text);
+            # the .hlo.txt above is kept for real-bindings setups.
+            sim_path = os.path.join(models_dir, f"{name}_b{b}.sim.txt")
+            if args.force or not os.path.exists(sim_path):
+                sim = to_sim_text(params, b, datagen.FEATURE_DIM)
+                with open(sim_path, "w") as f:
+                    f.write(sim)
+                print(f"[aot] {name} b={b}: sim dialect ({len(sim)} chars)")
+            variants[str(b)] = f"models/{name}_b{b}.sim.txt"
         model_entries.append(
             {
                 "name": name,

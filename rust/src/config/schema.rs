@@ -131,6 +131,10 @@ pub struct ServerConfig {
     /// batch variants) and max queueing delay in microseconds.
     pub max_batch: usize,
     pub max_batch_delay_us: u64,
+    /// Admission cap for `POST /v1/score/batch`: max events per batch
+    /// request (oversized payloads are rejected with 422, protecting
+    /// the engine from unbounded single-request work).
+    pub max_batch_events: usize,
     pub warmup_requests: usize,
 }
 
@@ -141,6 +145,7 @@ impl Default for ServerConfig {
             workers: 4,
             max_batch: 64,
             max_batch_delay_us: 500,
+            max_batch_events: 1024,
             warmup_requests: 200,
         }
     }
@@ -236,6 +241,10 @@ impl MuseConfig {
         }
         ensure!(self.server.workers >= 1, "server.workers must be >= 1");
         ensure!(self.server.max_batch >= 1, "server.max_batch must be >= 1");
+        ensure!(
+            self.server.max_batch_events >= 1,
+            "server.max_batch_events must be >= 1"
+        );
         Ok(())
     }
 }
@@ -339,6 +348,10 @@ fn parse_server(v: &Json) -> Result<ServerConfig> {
             .get("maxBatchDelayUs")
             .and_then(Json::as_u64)
             .unwrap_or(d.max_batch_delay_us),
+        max_batch_events: v
+            .get("maxBatchEvents")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.max_batch_events),
         warmup_requests: v
             .get("warmupRequests")
             .and_then(Json::as_usize)
@@ -379,6 +392,7 @@ predictors:
 server:
   workers: 8
   maxBatch: 64
+  maxBatchEvents: 512
 "#;
 
     #[test]
@@ -388,6 +402,7 @@ server:
         assert_eq!(cfg.routing.shadow_rules.len(), 1);
         assert_eq!(cfg.predictors.len(), 3);
         assert_eq!(cfg.server.workers, 8);
+        assert_eq!(cfg.server.max_batch_events, 512);
         // Uniform default weights.
         assert_eq!(cfg.predictors[1].weights, vec![1.0, 1.0, 1.0]);
         // Ensembles get posterior correction by default, singles don't.
@@ -466,6 +481,12 @@ predictors:
         let cfg = MuseConfig::from_yaml("").unwrap();
         assert!(cfg.routing.scoring_rules.is_empty());
         assert_eq!(cfg.server.workers, ServerConfig::default().workers);
+        assert_eq!(cfg.server.max_batch_events, 1024);
+    }
+
+    #[test]
+    fn rejects_zero_max_batch_events() {
+        assert!(MuseConfig::from_yaml("server:\n  maxBatchEvents: 0\n").is_err());
     }
 
     #[test]

@@ -6,8 +6,16 @@
 //! The paper's serving layer gets its throughput from Triton-side
 //! batching; here the coordinator owns it, which also exercises the
 //! AOT batch variants (1/16/64/256) produced by the compile path.
+//!
+//! Transform execution inside the worker is the **compiled pipeline**
+//! (`transforms::pipeline`): expert scores land in a reusable SoA
+//! scratch, the branch-free kernel aggregates them, and each tenant's
+//! `T^Q` tail is resolved once per (batch, tenant) group — the staged
+//! per-event path survives only as the reference oracle
+//! (`Predictor::score_raw`).
 
 use super::predictor::Predictor;
+use crate::transforms::{CompiledPipeline, PipelineScratch};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -118,6 +126,12 @@ fn batcher_main(
     stats: Arc<Mutex<BatcherStats>>,
 ) {
     let d = predictor.feature_dim();
+    // Reusable per-worker buffers: the feature matrix, the SoA expert
+    // lanes and the raw-score vector persist across batches, so the
+    // steady-state loop allocates nothing per batch.
+    let mut features: Vec<f32> = Vec::new();
+    let mut scratch = PipelineScratch::default();
+    let mut raw: Vec<f64> = Vec::new();
     loop {
         // Block for the first event of a batch.
         let first = match rx.recv() {
@@ -146,9 +160,10 @@ fn batcher_main(
         }
         // Group by tenant (T^Q is tenant-specific) while keeping one
         // inference call for the whole batch: run raw once, then apply
-        // each tenant's transform.
+        // each tenant's compiled pipeline tail.
         let n = batch.len();
-        let mut features = Vec::with_capacity(n * d);
+        features.clear();
+        features.reserve(n * d);
         let mut ok = true;
         for p in &batch {
             if p.features.len() != d {
@@ -167,8 +182,8 @@ fn batcher_main(
             }
             continue;
         }
-        match predictor.score_raw(&features, n) {
-            Ok(raw) => {
+        match predictor.score_batch_raw_compiled(&features, n, &mut scratch, &mut raw) {
+            Ok(()) => {
                 {
                     let mut s = stats.lock().unwrap();
                     s.batches += 1;
@@ -176,12 +191,24 @@ fn batcher_main(
                 }
                 // One inference call for the mixed-tenant batch, then
                 // each event gets its own tenant's T^Q (Section 2.3.3:
-                // the mapping is tenant-specific). The quantile table
-                // is one snapshot load per batch, not per event.
+                // the mapping is tenant-specific). The compiled
+                // quantile table is one snapshot load per batch, and
+                // the tenant pipelines are resolved once per distinct
+                // tenant in the batch (linear scan over the handful of
+                // live groups) — zero per-event hashmap probes.
                 let quantiles = predictor.quantile_table();
+                let mut tenants: Vec<&str> = Vec::new();
+                let mut pipes: Vec<&Arc<CompiledPipeline>> = Vec::new();
                 for (p, &r) in batch.iter().zip(&raw) {
-                    let final_score = quantiles.apply(r, &p.tenant);
-                    let _ = p.reply.send(Ok((final_score, r)));
+                    let g = match tenants.iter().position(|t| *t == p.tenant) {
+                        Some(g) => g,
+                        None => {
+                            tenants.push(&p.tenant);
+                            pipes.push(quantiles.pipeline_for(&p.tenant));
+                            tenants.len() - 1
+                        }
+                    };
+                    let _ = p.reply.send(Ok((pipes[g].finalize_one(r), r)));
                 }
             }
             Err(e) => {

@@ -12,6 +12,14 @@
 //!   scores against the target reference.
 //! * `promote` — atomically swap the live scoring rule to the shadow
 //!   (transparent model switching), and `decommission` the old one.
+//!
+//! Every operation that deploys a predictor or installs a quantile
+//! map also **compiles** the affected per-tenant transform pipelines
+//! (`transforms::pipeline`) at this control-plane rate — deploy and
+//! `shadow_deploy` compile the predictor's stage kernel, the
+//! quantile-fit/install paths recompile the tenant's `T^Q` tail — so
+//! the data plane only ever replays pre-resolved, branch-free
+//! pipelines (docs/ARCHITECTURE.md "Pipeline compilation").
 
 use super::engine::Engine;
 use crate::config::{Condition, PredictorConfig, ScoringRule, ShadowRule};

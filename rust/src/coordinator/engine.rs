@@ -23,10 +23,10 @@ use crate::datalake::DataLake;
 use crate::featurestore::FeatureStore;
 use crate::metrics::{Counters, LatencyHistogram};
 use crate::runtime::ModelPool;
-use crate::transforms::{QuantileMap, ReferenceDistribution};
+use crate::transforms::{PipelineScratch, QuantileMap, ReferenceDistribution};
 use crate::util::swap::SnapCell;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -64,8 +64,20 @@ pub struct Engine {
     snapshot: SnapCell<EngineSnapshot>,
     max_batch: usize,
     max_batch_delay: Duration,
+    /// Admission cap for one `score_batch` call (config
+    /// `server.maxBatchEvents`). Enforced here, in the engine; the
+    /// HTTP layer only surfaces the resulting error as a 422.
+    pub max_batch_events: usize,
     pub live_latency: LatencyHistogram,
+    /// Whole-batch wall time per `score_batch` call — kept separate
+    /// from `live_latency` so batch totals never pollute the
+    /// single-request percentiles `/metrics` reports.
+    pub batch_latency: LatencyHistogram,
     pub counters: Counters,
+    /// Batch-path scored events per tenant (bare tenant keys; surfaced
+    /// as the `scored_events` object in `/metrics`). Updated once per
+    /// (batch, tenant) group — the single-event hot path is untouched.
+    pub tenant_events: Counters,
     /// Quantile grid resolution (from the manifest).
     pub quantile_points: usize,
 }
@@ -108,8 +120,11 @@ impl Engine {
             snapshot,
             max_batch,
             max_batch_delay,
+            max_batch_events: config.server.max_batch_events,
             live_latency: LatencyHistogram::new(),
+            batch_latency: LatencyHistogram::new(),
             counters: Counters::new(),
+            tenant_events: Counters::new(),
             quantile_points,
         })
     }
@@ -197,7 +212,13 @@ impl Engine {
         // Mirror to shadows off the hot path.
         let shadow_count = resolution.shadows.len();
         if shadow_count > 0 {
-            self.dispatch_shadows(&snap, &resolution, &req.intent.tenant, &req.entity, &req.features);
+            self.dispatch_shadows(
+                &snap,
+                &resolution,
+                &req.intent.tenant,
+                &req.entity,
+                &req.features,
+            );
         }
 
         self.live_latency.record(t0.elapsed().as_nanos() as u64);
@@ -207,6 +228,142 @@ impl Engine {
             predictor: resolution.live.to_string(),
             shadow_count,
         })
+    }
+
+    /// Score a whole batch end to end off **one** wait-free snapshot
+    /// load. Requests are grouped by intent; each group is routed
+    /// once, enriched, and scored through the predictor's **compiled
+    /// pipeline** (`transforms::pipeline`) — expert inference is one
+    /// batched fan-out per group and the tenant's `T^Q` is resolved
+    /// with a single probe per group, so the live path performs zero
+    /// per-event tenant hashmap lookups. Shadows are mirrored once per
+    /// group (the whole sub-batch, off the hot path). Responses come
+    /// back in input order; any per-event failure fails the call (the
+    /// batch is one unit of work, mirroring HTTP semantics), and side
+    /// effects — data-lake records, per-tenant counters, shadow
+    /// mirrors — are committed only after **every** group has scored,
+    /// so a failed batch leaves no partial state behind.
+    pub fn score_batch(&self, reqs: &[ScoreRequest]) -> Result<Vec<ScoreResponse>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        ensure!(
+            reqs.len() <= self.max_batch_events,
+            "batch of {} events exceeds maxBatchEvents = {}",
+            reqs.len(),
+            self.max_batch_events
+        );
+        let t0 = Instant::now();
+        let snap = self.load_snapshot();
+
+        // Route once per distinct intent (linear scan: batches carry a
+        // handful of intents, typically one per tenant).
+        struct Group {
+            first: usize,
+            indices: Vec<usize>,
+            resolution: Resolution,
+        }
+        let mut groups: Vec<Group> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            match groups
+                .iter()
+                .position(|g| reqs[g.first].intent == req.intent)
+            {
+                Some(gi) => groups[gi].indices.push(i),
+                None => groups.push(Group {
+                    first: i,
+                    indices: vec![i],
+                    resolution: Router::resolve_in(&snap.routing, &req.intent)?,
+                }),
+            }
+        }
+
+        // Phase 1 — score every group, no side effects. A failure in
+        // any group (enrichment, inference) aborts the whole call
+        // *before* anything is recorded, so a client retry of a failed
+        // batch never double-records events in the data lake or the
+        // per-tenant counters. The enriched matrix is kept per group
+        // so shadow mirroring can reuse it instead of re-enriching.
+        struct Scored {
+            scores: Vec<f64>,
+            raw: Vec<f64>,
+            matrix: Vec<f32>,
+            dim: usize,
+        }
+        let mut scratch = PipelineScratch::default();
+        let mut results: Vec<Scored> = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let entry = snap.live_entry(g.resolution.rule_index).ok_or_else(|| {
+                anyhow!("routed to undeployed predictor '{}'", g.resolution.live)
+            })?;
+            let d = entry.predictor.feature_dim();
+            let n = g.indices.len();
+            let tenant = &reqs[g.first].intent.tenant;
+            let mut matrix: Vec<f32> = Vec::with_capacity(n * d);
+            for &i in &g.indices {
+                let enriched = self
+                    .features
+                    .enrich(&reqs[i].entity, &reqs[i].features, d)?;
+                matrix.extend_from_slice(&enriched);
+            }
+            let (mut raw, mut scores) = (Vec::new(), Vec::new());
+            entry.predictor.score_batch_for_tenant(
+                &matrix,
+                n,
+                tenant,
+                &mut scratch,
+                &mut raw,
+                &mut scores,
+            )?;
+            results.push(Scored {
+                scores,
+                raw,
+                matrix,
+                dim: d,
+            });
+        }
+
+        // Phase 2 — every group scored: commit side effects and build
+        // the responses.
+        let mut out: Vec<Option<ScoreResponse>> = (0..reqs.len()).map(|_| None).collect();
+        for (g, scored) in groups.iter().zip(&results) {
+            let entry = snap
+                .live_entry(g.resolution.rule_index)
+                .expect("resolved in phase 1 against the same snapshot");
+            let n = g.indices.len();
+            let tenant = &reqs[g.first].intent.tenant;
+            self.lake
+                .append_batch(tenant, &entry.predictor.name, &scored.scores, &scored.raw, false);
+            self.tenant_events.add(tenant, n as u64);
+
+            let shadow_count = g.resolution.shadows.len();
+            if shadow_count > 0 {
+                self.dispatch_shadow_batch(
+                    &snap,
+                    &g.resolution,
+                    &g.indices,
+                    reqs,
+                    tenant,
+                    &scored.matrix,
+                    scored.dim,
+                );
+            }
+            let predictor_name = g.resolution.live.to_string();
+            for (slot, &i) in g.indices.iter().enumerate() {
+                out[i] = Some(ScoreResponse {
+                    score: scored.scores[slot],
+                    predictor: predictor_name.clone(),
+                    shadow_count,
+                });
+            }
+        }
+        self.batch_latency.record(t0.elapsed().as_nanos() as u64);
+        self.counters.inc("requests_batch");
+        self.counters.add("events_batch", reqs.len() as u64);
+        Ok(out
+            .into_iter()
+            .map(|r| r.expect("every request belongs to exactly one group"))
+            .collect())
     }
 
     fn dispatch_shadows(
@@ -248,6 +405,77 @@ impl Engine {
             self.shadow_pool.execute(move || {
                 if let Ok((score, raw)) = batcher.score(enriched, &tenant) {
                     lake.append(&tenant, &name, score, raw, true);
+                }
+            });
+        }
+    }
+
+    /// Mirror one routed batch group to every matching shadow
+    /// predictor. Inference + transforms run on the shadow pool
+    /// through the shadow predictor's compiled pipeline; only
+    /// enrichment can touch the caller thread (the feature store is
+    /// not shareable into the pool), and when the shadow's feature
+    /// dim matches the live predictor's — the common case — the
+    /// already-enriched live matrix is copied instead of re-enriching
+    /// every event. Unlike the single-event path, batch shadows bypass
+    /// the dynamic batcher: the group already *is* a batch, so
+    /// re-queueing it event-by-event would only add latency.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_shadow_batch(
+        &self,
+        snap: &EngineSnapshot,
+        resolution: &Resolution,
+        indices: &[usize],
+        reqs: &[ScoreRequest],
+        tenant: &str,
+        live_matrix: &[f32],
+        live_dim: usize,
+    ) {
+        let n = indices.len();
+        for shadow_name in &resolution.shadows {
+            let Some(entry) = snap.entry(shadow_name) else {
+                self.counters.inc("shadow_missing_predictor");
+                continue;
+            };
+            let d = entry.predictor.feature_dim();
+            let matrix: Vec<f32> = if d == live_dim {
+                live_matrix.to_vec()
+            } else {
+                let mut m: Vec<f32> = Vec::with_capacity(n * d);
+                let mut ok = true;
+                for &i in indices {
+                    match self.features.enrich(&reqs[i].entity, &reqs[i].features, d) {
+                        Ok(e) => m.extend_from_slice(&e),
+                        Err(_) => {
+                            self.counters.inc("shadow_enrich_error");
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                m
+            };
+            let predictor = Arc::clone(&entry.predictor);
+            let lake = Arc::clone(&self.lake);
+            let tenant = tenant.to_string();
+            self.shadow_pool.execute(move || {
+                let mut scratch = PipelineScratch::default();
+                let (mut raw, mut scores) = (Vec::new(), Vec::new());
+                let ok = predictor
+                    .score_batch_for_tenant(
+                        &matrix,
+                        n,
+                        &tenant,
+                        &mut scratch,
+                        &mut raw,
+                        &mut scores,
+                    )
+                    .is_ok();
+                if ok {
+                    lake.append_batch(&tenant, &predictor.name, &scores, &raw, true);
                 }
             });
         }
@@ -316,6 +544,7 @@ predictors:
   quantile: identity
 server:
   workers: 4
+  maxBatchEvents: 64
 "#;
 
     fn engine() -> Option<Engine> {
@@ -425,6 +654,60 @@ server:
         for (s, r) in scores.iter().zip(&raw) {
             assert!((s - r).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn batch_scoring_matches_sequential_scoring() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("p1").unwrap().feature_dim();
+        // Mixed-intent batch: bank1 (dedicated rule + shadow) and an
+        // unknown tenant (catch-all, no shadows).
+        let reqs: Vec<ScoreRequest> = (0..12)
+            .map(|s| {
+                let tenant = if s % 3 == 0 { "bank1" } else { "other" };
+                req(tenant, d, 300 + s as u64)
+            })
+            .collect();
+        let batch = engine.score_batch(&reqs).unwrap();
+        engine.drain_shadows();
+        assert_eq!(batch.len(), 12);
+        for (r, resp) in reqs.iter().zip(&batch) {
+            let single = engine.score(r).unwrap();
+            assert_eq!(single.predictor, resp.predictor);
+            assert_eq!(single.shadow_count, resp.shadow_count);
+            // Tolerance matches the container-level cross-batch-variant
+            // bound (runtime/container.rs): the transform pipeline is
+            // equivalent to 1e-12, but PJRT may execute the group under
+            // a different AOT batch variant than the singles.
+            assert!(
+                (single.score - resp.score).abs() < 2e-5,
+                "batch {} vs sequential {} ({})",
+                resp.score,
+                single.score,
+                r.intent.tenant
+            );
+        }
+        engine.drain_shadows();
+        assert_eq!(engine.counters.get("requests_batch"), 1);
+        assert_eq!(engine.counters.get("events_batch"), 12);
+        // Per-tenant accounting covers the batch path (bare tenant
+        // keys; the single-event hot path is deliberately untouched).
+        assert_eq!(engine.tenant_events.get("bank1"), 4);
+        assert_eq!(engine.tenant_events.get("other"), 8);
+        // Batch latency is recorded separately from request latency.
+        assert_eq!(engine.batch_latency.count(), 1);
+        // bank1's shadow (p2) mirrored the whole sub-batch once per path.
+        assert_eq!(engine.lake.raw_scores("bank1", "p2").len(), 8);
+    }
+
+    #[test]
+    fn batch_respects_admission_cap_and_empty_batches() {
+        let Some(engine) = engine() else { return };
+        assert!(engine.score_batch(&[]).unwrap().is_empty());
+        let d = engine.predictor("global").unwrap().feature_dim();
+        let reqs: Vec<ScoreRequest> = (0..65).map(|s| req("t", d, 900 + s)).collect();
+        let err = engine.score_batch(&reqs).unwrap_err();
+        assert!(err.to_string().contains("maxBatchEvents"), "{err}");
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! new transformations copy-on-write with zero downtime.
 
 use crate::runtime::ModelHandle;
-use crate::transforms::{Aggregation, PosteriorCorrection, QuantileMap};
+use crate::transforms::{
+    Aggregation, CompiledPipeline, CompiledStages, PipelineScratch, PosteriorCorrection,
+    QuantileMap,
+};
 use crate::util::swap::SnapCell;
 use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
@@ -37,17 +40,56 @@ pub struct ScoreBatch {
 }
 
 /// Immutable snapshot of a predictor's quantile state: the default
-/// `T^Q` plus every tenant-specific override. Published atomically as
-/// one unit, so a mixed-tenant batch applies one coherent table.
+/// `T^Q` plus every tenant-specific override, **and** the compiled
+/// per-tenant pipelines resolved from them at publication time (see
+/// `transforms::pipeline`). Published atomically as one unit, so a
+/// mixed-tenant batch applies one coherent table and the hot path
+/// resolves a tenant's compiled pipeline with a single probe per
+/// (batch, tenant) group — never per event.
 pub struct QuantileTable {
     default: Arc<QuantileMap>,
     tenants: HashMap<String, Arc<QuantileMap>>,
+    default_pipeline: Arc<CompiledPipeline>,
+    tenant_pipelines: HashMap<String, Arc<CompiledPipeline>>,
 }
 
 impl QuantileTable {
+    fn build(
+        stages: &Arc<CompiledStages>,
+        default: Arc<QuantileMap>,
+        tenants: HashMap<String, Arc<QuantileMap>>,
+    ) -> QuantileTable {
+        let tenant_pipelines = tenants
+            .iter()
+            .map(|(t, m)| {
+                (
+                    t.clone(),
+                    Arc::new(CompiledPipeline::new(Arc::clone(stages), Arc::clone(m))),
+                )
+            })
+            .collect();
+        QuantileTable {
+            default_pipeline: Arc::new(CompiledPipeline::new(
+                Arc::clone(stages),
+                Arc::clone(&default),
+            )),
+            default,
+            tenants,
+            tenant_pipelines,
+        }
+    }
+
     /// The transformation in effect for `tenant`.
     pub fn for_tenant(&self, tenant: &str) -> &QuantileMap {
         self.tenants.get(tenant).unwrap_or(&self.default)
+    }
+
+    /// The compiled pipeline in effect for `tenant` (one probe; hot
+    /// paths do this once per batch group, not per event).
+    pub fn pipeline_for(&self, tenant: &str) -> &Arc<CompiledPipeline> {
+        self.tenant_pipelines
+            .get(tenant)
+            .unwrap_or(&self.default_pipeline)
     }
 
     /// Apply the tenant's `T^Q` to an aggregated raw score.
@@ -60,8 +102,13 @@ pub struct Predictor {
     pub name: String,
     experts: Vec<ExpertSlot>,
     aggregation: Aggregation,
-    /// Default + tenant-specific `T^Q`s, swapped copy-on-write by the
-    /// control plane; read wait-free by the scoring path.
+    /// Stage 1+2 (`T^C` + `A`) compiled once at deploy time and shared
+    /// by every tenant's pipeline (the corrections and aggregation are
+    /// predictor-level; only `T^Q` varies per tenant).
+    stages: Arc<CompiledStages>,
+    /// Default + tenant-specific `T^Q`s plus their compiled pipelines,
+    /// swapped copy-on-write by the control plane; read wait-free by
+    /// the scoring path.
     quantiles: SnapCell<QuantileTable>,
     feature_dim: usize,
 }
@@ -87,14 +134,22 @@ impl Predictor {
             experts.iter().all(|e| e.handle.feature_dim == feature_dim),
             "predictor '{name}': experts disagree on feature_dim"
         );
+        let corrections: Vec<Option<PosteriorCorrection>> =
+            experts.iter().map(|e| e.correction).collect();
+        let stages = Arc::new(
+            CompiledStages::compile(&corrections, &aggregation)
+                .with_context(|| format!("compile pipeline stages for '{name}'"))?,
+        );
         Ok(Predictor {
             name,
             experts,
             aggregation,
-            quantiles: SnapCell::new(Arc::new(QuantileTable {
-                default: default_quantile,
-                tenants: HashMap::new(),
-            })),
+            quantiles: SnapCell::new(Arc::new(QuantileTable::build(
+                &stages,
+                default_quantile,
+                HashMap::new(),
+            ))),
+            stages,
             feature_dim,
         })
     }
@@ -118,31 +173,35 @@ impl Predictor {
     }
 
     /// Install a tenant-specific quantile transformation (the paper's
-    /// "custom transformation" promotion, Section 3.1). Publishes a
-    /// new table copy-on-write; takes effect atomically for
-    /// subsequent requests.
+    /// "custom transformation" promotion, Section 3.1). The tenant's
+    /// pipeline is **compiled here**, at control-plane rate, and
+    /// published copy-on-write with the raw map as one atomic table;
+    /// takes effect atomically for subsequent requests.
     pub fn install_tenant_quantile(&self, tenant: &str, map: Arc<QuantileMap>) {
         self.quantiles.rcu(|old| {
             let mut tenants = old.tenants.clone();
             tenants.insert(tenant.to_string(), map);
             (
-                Arc::new(QuantileTable {
-                    default: Arc::clone(&old.default),
+                Arc::new(QuantileTable::build(
+                    &self.stages,
+                    Arc::clone(&old.default),
                     tenants,
-                }),
+                )),
                 (),
             )
         });
     }
 
-    /// Replace the default quantile transformation.
+    /// Replace the default quantile transformation (recompiles the
+    /// default pipeline; tenant overrides are carried along).
     pub fn set_default_quantile(&self, map: Arc<QuantileMap>) {
         self.quantiles.rcu(|old| {
             (
-                Arc::new(QuantileTable {
-                    default: map,
-                    tenants: old.tenants.clone(),
-                }),
+                Arc::new(QuantileTable::build(
+                    &self.stages,
+                    map,
+                    old.tenants.clone(),
+                )),
                 (),
             )
         });
@@ -215,6 +274,79 @@ impl Predictor {
             out.push(self.aggregation.apply_unchecked(&calibrated));
         }
         Ok(out)
+    }
+
+    /// The compiled stage-1+2 kernel shared by this predictor's
+    /// tenant pipelines.
+    pub fn stages(&self) -> &Arc<CompiledStages> {
+        &self.stages
+    }
+
+    /// Compiled batch scoring, stages 1+2: expert inference fans out
+    /// asynchronously, results land in `scratch`'s flat SoA lanes (no
+    /// per-batch `Vec<Vec<f32>>` staging), then the branch-free kernel
+    /// writes the raw (pre-`T^Q`) scores into `raw_out` (cleared
+    /// first). This is the hot batch path; [`Predictor::score_raw`]
+    /// stays as the staged reference oracle.
+    pub fn score_batch_raw_compiled(
+        &self,
+        features: &[f32],
+        n: usize,
+        scratch: &mut PipelineScratch,
+        raw_out: &mut Vec<f64>,
+    ) -> Result<()> {
+        ensure!(
+            features.len() == n * self.feature_dim,
+            "predictor '{}': got {} floats for {n} events of dim {}",
+            self.name,
+            features.len(),
+            self.feature_dim
+        );
+        raw_out.clear();
+        let k = self.experts.len();
+        scratch.begin(k, n);
+        if n == 0 {
+            return Ok(());
+        }
+        let tickets: Vec<_> = self
+            .experts
+            .iter()
+            .map(|e| e.handle.infer_async(features, n))
+            .collect::<Result<Vec<_>>>()?;
+        for (j, (t, e)) in tickets.into_iter().zip(&self.experts).enumerate() {
+            let scores = t
+                .wait()
+                .with_context(|| format!("expert '{}' inference", e.handle.name))?;
+            ensure!(
+                scores.len() == n,
+                "expert '{}' returned {} scores for {n} events",
+                e.handle.name,
+                scores.len()
+            );
+            scratch.lane_mut(j).copy_from_slice(&scores);
+        }
+        self.stages.raw_into(scratch, raw_out);
+        Ok(())
+    }
+
+    /// Compiled end-to-end batch scoring for one tenant: raw and final
+    /// scores with exactly **one** quantile-table snapshot load and
+    /// **one** tenant-pipeline probe for the whole batch — the
+    /// zero-per-event-lookup contract of `Engine::score_batch`.
+    pub fn score_batch_for_tenant(
+        &self,
+        features: &[f32],
+        n: usize,
+        tenant: &str,
+        scratch: &mut PipelineScratch,
+        raw_out: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        self.score_batch_raw_compiled(features, n, scratch, raw_out)?;
+        out.clear();
+        let table = self.quantiles.load();
+        table.pipeline_for(tenant).finalize_into(raw_out, out);
+        Ok(())
     }
 }
 
@@ -370,6 +502,68 @@ mod tests {
         let p = ensemble(&pool, &["m1"]);
         assert!(p.score(&[0.0; 3], 1, "t").is_err());
         assert_eq!(p.score(&[], 0, "t").unwrap().scores.len(), 0);
+    }
+
+    #[test]
+    fn compiled_batch_path_matches_staged_path() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1", "m2", "m3"]);
+        p.install_tenant_quantile(
+            "vip",
+            QuantileMap::new(vec![0.0, 1.0], vec![0.5, 1.0]).unwrap().shared(),
+        );
+        let d = p.feature_dim();
+        let mut rng = crate::util::rng::Rng::new(11);
+        let n = 40;
+        let feats: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut scratch = crate::transforms::PipelineScratch::default();
+        let (mut raw, mut out) = (Vec::new(), Vec::new());
+        for tenant in ["vip", "other"] {
+            p.score_batch_for_tenant(&feats, n, tenant, &mut scratch, &mut raw, &mut out)
+                .unwrap();
+            let staged = p.score(&feats, n, tenant).unwrap();
+            assert_eq!(out.len(), n);
+            for i in 0..n {
+                assert!(
+                    (raw[i] - staged.raw[i]).abs() <= 1e-12,
+                    "raw[{i}]: compiled {} vs staged {}",
+                    raw[i],
+                    staged.raw[i]
+                );
+                assert!(
+                    (out[i] - staged.scores[i]).abs() <= 1e-12,
+                    "final[{i}]: compiled {} vs staged {} ({tenant})",
+                    out[i],
+                    staged.scores[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_probe_tracks_tenant_installs() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1"]);
+        p.install_tenant_quantile(
+            "vip",
+            QuantileMap::new(vec![0.0, 1.0], vec![0.9, 1.0]).unwrap().shared(),
+        );
+        let t = p.quantile_table();
+        // One probe resolves the compiled pipeline; its table is the
+        // same object the raw map lookup returns.
+        assert!(std::ptr::eq(
+            t.pipeline_for("vip").table().as_ref(),
+            t.for_tenant("vip")
+        ));
+        assert!((t.pipeline_for("vip").finalize_one(0.0) - 0.9).abs() < 1e-12);
+        assert!(t.pipeline_for("other").finalize_one(0.0) < 0.9);
+        // Default-swap recompiles the default pipeline, keeps vip.
+        p.set_default_quantile(
+            QuantileMap::new(vec![0.0, 1.0], vec![0.5, 1.0]).unwrap().shared(),
+        );
+        let t = p.quantile_table();
+        assert!((t.pipeline_for("other").finalize_one(0.0) - 0.5).abs() < 1e-12);
+        assert!((t.pipeline_for("vip").finalize_one(0.0) - 0.9).abs() < 1e-12);
     }
 
     #[test]

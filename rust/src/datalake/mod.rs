@@ -57,6 +57,33 @@ impl DataLake {
         });
     }
 
+    /// Append a whole scored batch (one lock acquisition, contiguous
+    /// sequence numbers) — the batch scoring path's sink.
+    pub fn append_batch(
+        &self,
+        tenant: &str,
+        predictor: &str,
+        scores: &[f64],
+        raw_scores: &[f64],
+        shadow: bool,
+    ) {
+        debug_assert_eq!(scores.len(), raw_scores.len());
+        let mut inner = self.inner.lock().unwrap();
+        inner.records.reserve(scores.len());
+        for (&score, &raw_score) in scores.iter().zip(raw_scores) {
+            let seq = inner.seq;
+            inner.seq += 1;
+            inner.records.push(Record {
+                tenant: tenant.to_string(),
+                predictor: predictor.to_string(),
+                score,
+                raw_score,
+                shadow,
+                seq,
+            });
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().records.len()
     }
@@ -123,6 +150,25 @@ mod tests {
         assert_eq!(lake.raw_scores("bank1", "p1"), vec![0.12]);
         assert_eq!(lake.final_scores("bank1", "p2"), vec![0.8]);
         assert!(lake.raw_scores("bank3", "p1").is_empty());
+    }
+
+    #[test]
+    fn append_batch_matches_sequential_appends() {
+        let a = DataLake::new();
+        let b = DataLake::new();
+        let finals = [0.9, 0.8, 0.7];
+        let raws = [0.12, 0.10, 0.08];
+        a.append_batch("t", "p", &finals, &raws, true);
+        for (f, r) in finals.iter().zip(&raws) {
+            b.append("t", "p", *f, *r, true);
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.final_scores("t", "p"), b.final_scores("t", "p"));
+        assert_eq!(a.raw_scores("t", "p"), b.raw_scores("t", "p"));
+        let inner = a.inner.lock().unwrap();
+        for w in inner.records.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1, "batch seq must stay contiguous");
+        }
     }
 
     #[test]

@@ -22,6 +22,11 @@ impl Counters {
 
     pub fn add(&self, name: &str, delta: u64) {
         let mut map = self.inner.lock().unwrap();
+        // Hot counters already exist: bump without allocating a key.
+        if let Some(c) = map.get(name) {
+            c.fetch_add(delta, Ordering::Relaxed);
+            return;
+        }
         map.entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
             .fetch_add(delta, Ordering::Relaxed);

@@ -133,8 +133,20 @@ fn handle_connection(stream: TcpStream, handler: Arc<Handler>) -> Result<()> {
                 return Ok(());
             }
         };
-        let resp = handler(&req);
-        write_response(&mut writer, &resp, true)?;
+        // A panicking handler must not silently drop a keep-alive
+        // connection (the client would see an unexplained EOF) or kill
+        // the pool worker: catch the unwind, answer with a 500 JSON
+        // body, and close this connection — handler state after a
+        // panic is unknown, so keep-alive ends here.
+        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)));
+        match resp {
+            Ok(resp) => write_response(&mut writer, &resp, true)?,
+            Err(_) => {
+                let resp = Response::json(500, r#"{"error":"internal server error"}"#);
+                let _ = write_response(&mut writer, &resp, false);
+                return Ok(());
+            }
+        }
     }
 }
 
@@ -242,6 +254,7 @@ mod tests {
         let handler: Arc<Handler> = Arc::new(|req: &Request| match req.path.as_str() {
             "/healthz" => Response::text(200, "ok"),
             "/echo" => Response::json(200, req.body.clone()),
+            "/panic" => panic!("handler exploded"),
             _ => Response::text(404, "not found"),
         });
         let server = HttpServer::bind("127.0.0.1:0", 2, handler).unwrap();
@@ -301,6 +314,56 @@ mod tests {
         let mut buf = String::new();
         BufReader::new(stream).read_line(&mut buf).unwrap();
         assert!(buf.contains("400"), "{buf}");
+    }
+
+    #[test]
+    fn panicking_handler_returns_500_and_keeps_server_alive() {
+        let addr = spawn_echo();
+        // Mid-keep-alive: a healthy request, then the panicking one on
+        // the same connection.
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut status = String::new();
+        reader.read_line(&mut status).unwrap();
+        assert!(status.contains("200"), "{status}");
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            if h.trim_end().is_empty() {
+                break;
+            }
+        }
+        let mut body = [0u8; 2];
+        reader.read_exact(&mut body).unwrap();
+        write!(
+            stream,
+            "GET /panic HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut status = String::new();
+        reader.read_line(&mut status).unwrap();
+        assert!(status.contains("500"), "got: {status}");
+        let mut rest = String::new();
+        let mut tmp = String::new();
+        while reader.read_line(&mut tmp).unwrap() > 0 {
+            rest.push_str(&tmp);
+            tmp.clear();
+        }
+        assert!(rest.contains("internal server error"), "{rest}");
+        assert!(
+            rest.to_ascii_lowercase().contains("connection: close"),
+            "panicked connection must not stay keep-alive: {rest}"
+        );
+        // The pool worker survived: fresh connections still served.
+        let (status, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok"));
     }
 
     #[test]

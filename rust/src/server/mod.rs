@@ -3,8 +3,13 @@
 //! Endpoints:
 //! * `POST /score` — `{tenant, geography?, schema?, channel?, entity?,
 //!   features: [f32...]}` -> `{score, predictor, shadows}`
+//! * `POST /v1/score/batch` — `{events: [<score payload>...]}` ->
+//!   `{count, results: [{score, predictor, shadows}...]}` (input
+//!   order preserved; one engine snapshot load for the whole batch,
+//!   capped by `server.maxBatchEvents`)
 //! * `GET /healthz` — readiness (set after warm-up, Section 3.1.2)
-//! * `GET /metrics` — counters + latency percentiles (JSON)
+//! * `GET /metrics` — counters, per-tenant batch `scored_events`
+//!   object, and request/batch latency percentiles (JSON)
 //! * `GET /admin/stats` — registry/pool dedup accounting
 
 pub mod http;
@@ -44,9 +49,28 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
                 ),
             }
         }
+        ("POST", "/v1/score/batch") => {
+            if !ready.load(Ordering::SeqCst) {
+                return Response::json(503, r#"{"error":"warming up"}"#);
+            }
+            match handle_score_batch(engine, &req.body) {
+                Ok(resp) => resp,
+                Err(e) => Response::json(
+                    422,
+                    Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+                ),
+            }
+        }
         ("GET", "/metrics") => {
             let snap = engine.counters.snapshot();
             let counters: Vec<(String, Json)> = snap
+                .into_iter()
+                .map(|(k, v)| (k, Json::Num(v as f64)))
+                .collect();
+            // Batch-path scored events per tenant (bare tenant keys).
+            let tenants: Vec<(String, Json)> = engine
+                .tenant_events
+                .snapshot()
                 .into_iter()
                 .map(|(k, v)| (k, Json::Num(v as f64)))
                 .collect();
@@ -56,12 +80,24 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
                     Json::Obj(counters.into_iter().collect()),
                 ),
                 (
+                    "scored_events",
+                    Json::Obj(tenants.into_iter().collect()),
+                ),
+                (
                     "latency_ms",
                     Json::obj(vec![
                         ("p50", Json::Num(engine.live_latency.percentile_ns(50.0) as f64 / 1e6)),
                         ("p99", Json::Num(engine.live_latency.percentile_ns(99.0) as f64 / 1e6)),
                         ("p999", Json::Num(engine.live_latency.percentile_ns(99.9) as f64 / 1e6)),
                         ("count", Json::Num(engine.live_latency.count() as f64)),
+                    ]),
+                ),
+                (
+                    "batch_latency_ms",
+                    Json::obj(vec![
+                        ("p50", Json::Num(engine.batch_latency.percentile_ns(50.0) as f64 / 1e6)),
+                        ("p99", Json::Num(engine.batch_latency.percentile_ns(99.0) as f64 / 1e6)),
+                        ("count", Json::Num(engine.batch_latency.count() as f64)),
                     ]),
                 ),
             ])
@@ -93,14 +129,15 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
     }
 }
 
-fn handle_score(engine: &Engine, body: &str) -> Result<Response> {
-    let v = crate::util::json::parse(body)?;
+/// Parse one score payload object into a [`ScoreRequest`] (shared by
+/// the single and the batch endpoint, so both accept the same shape).
+fn parse_score_request(v: &Json) -> Result<ScoreRequest> {
     let features = v
         .req("features")?
         .to_f32_vec()
         .ok_or_else(|| anyhow::anyhow!("features must be an array of numbers"))?;
     let get = |k: &str| v.get(k).and_then(Json::as_str).unwrap_or("").to_string();
-    let req = ScoreRequest {
+    Ok(ScoreRequest {
         intent: Intent {
             tenant: v.req_str("tenant")?.to_string(),
             geography: get("geography"),
@@ -109,14 +146,45 @@ fn handle_score(engine: &Engine, body: &str) -> Result<Response> {
         },
         entity: get("entity"),
         features,
-    };
+    })
+}
+
+fn score_response_json(resp: &crate::coordinator::ScoreResponse) -> Json {
+    Json::obj(vec![
+        ("score", Json::Num(resp.score)),
+        ("predictor", Json::str(resp.predictor.clone())),
+        ("shadows", Json::Num(resp.shadow_count as f64)),
+    ])
+}
+
+fn handle_score(engine: &Engine, body: &str) -> Result<Response> {
+    let v = crate::util::json::parse(body)?;
+    let req = parse_score_request(&v)?;
     let resp = engine.score(&req)?;
+    Ok(Response::json(200, score_response_json(&resp).to_string()))
+}
+
+/// `POST /v1/score/batch`: the whole batch is scored off one engine
+/// snapshot load (`Engine::score_batch`); results preserve input
+/// order. Oversized batches (> `server.maxBatchEvents`) are rejected
+/// by the engine's admission cap and surface as 422.
+fn handle_score_batch(engine: &Engine, body: &str) -> Result<Response> {
+    let v = crate::util::json::parse(body)?;
+    let events = v
+        .req("events")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("events must be a list of score payloads"))?;
+    let reqs = events
+        .iter()
+        .map(parse_score_request)
+        .collect::<Result<Vec<_>>>()?;
+    let resps = engine.score_batch(&reqs)?;
+    let results: Vec<Json> = resps.iter().map(score_response_json).collect();
     Ok(Response::json(
         200,
         Json::obj(vec![
-            ("score", Json::Num(resp.score)),
-            ("predictor", Json::str(resp.predictor)),
-            ("shadows", Json::Num(resp.shadow_count as f64)),
+            ("count", Json::Num(results.len() as f64)),
+            ("results", Json::Arr(results)),
         ])
         .to_string(),
     ))
@@ -203,6 +271,80 @@ predictors:
         assert_eq!(status, 200);
         let v = crate::util::json::parse(&body).unwrap();
         assert_eq!(v.req_f64("live_containers").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn batch_endpoint_agrees_with_sequential_scores() {
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("p").unwrap().feature_dim();
+        let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 10).unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let payloads: Vec<String> = (0..6)
+            .map(|i| {
+                let feats: Vec<String> =
+                    (0..d).map(|_| format!("{:.6}", rng.normal())).collect();
+                format!(
+                    r#"{{"tenant": "bank{}", "features": [{}]}}"#,
+                    i % 2,
+                    feats.join(",")
+                )
+            })
+            .collect();
+        // N sequential /score calls...
+        let mut sequential = Vec::new();
+        for p in &payloads {
+            let (status, body) = http_request(&addr, "POST", "/score", p).unwrap();
+            assert_eq!(status, 200, "{body}");
+            let v = crate::util::json::parse(&body).unwrap();
+            sequential.push(v.req_f64("score").unwrap());
+        }
+        // ...must agree with one batch call, in order.
+        let batch_payload = format!(r#"{{"events": [{}]}}"#, payloads.join(","));
+        let (status, body) =
+            http_request(&addr, "POST", "/v1/score/batch", &batch_payload).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.req_f64("count").unwrap(), 6.0);
+        let results = v.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 6);
+        for (r, want) in results.iter().zip(&sequential) {
+            let got = r.req_f64("score").unwrap();
+            // Cross-batch-variant PJRT tolerance (see engine tests).
+            assert!((got - want).abs() < 2e-5, "batch {got} vs sequential {want}");
+            assert_eq!(r.req_str("predictor").unwrap(), "p");
+        }
+    }
+
+    #[test]
+    fn batch_endpoint_rejects_malformed_and_oversized() {
+        let Some(engine) = engine() else { return };
+        let cap = engine.max_batch_events;
+        let d = engine.predictor("p").unwrap().feature_dim();
+        let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 5).unwrap();
+        for bad in [
+            "",
+            "{}",
+            r#"{"events": "nope"}"#,
+            r#"{"events": [{"tenant": "x"}]}"#, // event missing features
+        ] {
+            let (status, _) = http_request(&addr, "POST", "/v1/score/batch", bad).unwrap();
+            assert_eq!(status, 422, "payload: {bad}");
+        }
+        // One event over the admission cap -> 422 with the cap named.
+        let ev = format!(
+            r#"{{"tenant": "t", "features": [{}]}}"#,
+            vec!["0.0"; d].join(",")
+        );
+        let evs = vec![ev; cap + 1];
+        let (status, body) = http_request(
+            &addr,
+            "POST",
+            "/v1/score/batch",
+            &format!(r#"{{"events": [{}]}}"#, evs.join(",")),
+        )
+        .unwrap();
+        assert_eq!(status, 422, "{body}");
+        assert!(body.contains("maxBatchEvents"), "{body}");
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Simulation substrates: the synthetic multi-tenant transaction
 //! workload, the Kubernetes-style rolling-update cluster model behind
-//! Fig. 5, and the real-thread swap-under-load harness proving that
-//! routing-config promotions never stall the data plane.
+//! Fig. 5, the real-thread swap-under-load harness proving that
+//! routing-config promotions never stall the data plane, and the
+//! multi-tenant batch-scoring throughput scenario exercising
+//! `Engine::score_batch` end to end.
 
 pub mod cluster;
+pub mod multitenant;
 pub mod workload;
 
 pub use cluster::{
     swap_storm, ClusterConfig, ClusterSim, LatencyModel, RolloutTrace, SwapStormConfig,
     SwapStormReport,
 };
+pub use multitenant::{run_batch_mix, BatchMixConfig, BatchMixReport};
 pub use workload::{Event, TenantProfile, TrafficMix, Workload, FEATURE_DIM};

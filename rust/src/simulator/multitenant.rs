@@ -1,0 +1,161 @@
+//! Multi-tenant batch-scoring throughput scenario.
+//!
+//! Drives a weighted [`TrafficMix`] of tenants through
+//! `Engine::score_batch` in fixed-size batches — the workload shape of
+//! an upstream stream-processor flushing windows into the scoring
+//! tier — and reports end-to-end events/s plus the observed per-tenant
+//! split, cross-checked against the engine's batch-aware per-tenant
+//! `tenant_events` counters (the `scored_events` object in `/metrics`)
+//! so the metrics surface is exercised by the same run. Used by the
+//! artifact-gated test below and by `benches/serving_bench.rs`
+//! ("batch scoring" section).
+
+use crate::config::Intent;
+use crate::coordinator::{Engine, ScoreRequest};
+use crate::simulator::workload::{TenantProfile, TrafficMix, Workload};
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Scenario parameters.
+#[derive(Debug, Clone)]
+pub struct BatchMixConfig {
+    /// (tenant profile, traffic weight) pairs.
+    pub tenants: Vec<(TenantProfile, f64)>,
+    /// Events per `score_batch` call.
+    pub batch_size: usize,
+    /// Number of batches to drive.
+    pub batches: usize,
+    pub seed: u64,
+}
+
+/// Scenario outcome.
+#[derive(Debug, Clone)]
+pub struct BatchMixReport {
+    pub events: u64,
+    pub batches: u64,
+    /// Events scored per tenant (from the scenario's own accounting).
+    pub per_tenant: BTreeMap<String, u64>,
+    pub wall_secs: f64,
+    pub events_per_sec: f64,
+}
+
+/// Run the scenario against a live engine. Every batch mixes tenants
+/// according to the weights; the engine groups each batch by intent
+/// internally, so this also stresses the route-once-per-group path.
+pub fn run_batch_mix(engine: &Engine, cfg: &BatchMixConfig) -> Result<BatchMixReport> {
+    ensure!(!cfg.tenants.is_empty(), "need >= 1 tenant");
+    ensure!(cfg.batch_size >= 1, "batch_size must be >= 1");
+    let workloads: Vec<Workload> = cfg
+        .tenants
+        .iter()
+        .map(|(t, _)| Workload::new(t.clone(), cfg.seed))
+        .collect();
+    let weights: Vec<f64> = cfg.tenants.iter().map(|(_, w)| *w).collect();
+    let mut mix = TrafficMix::new(workloads, weights, cfg.seed);
+
+    let mut per_tenant: BTreeMap<String, u64> = BTreeMap::new();
+    let mut events = 0u64;
+    let counters_before: BTreeMap<String, u64> = engine.tenant_events.snapshot();
+    let t0 = Instant::now();
+    let mut reqs: Vec<ScoreRequest> = Vec::with_capacity(cfg.batch_size);
+    for b in 0..cfg.batches {
+        reqs.clear();
+        for i in 0..cfg.batch_size {
+            let (tenant, event) = mix.next_event();
+            *per_tenant.entry(tenant.clone()).or_insert(0) += 1;
+            reqs.push(ScoreRequest {
+                intent: Intent {
+                    tenant,
+                    ..Intent::default()
+                },
+                entity: format!("b{b}-{i}"),
+                features: event.features,
+            });
+        }
+        let resps = engine.score_batch(&reqs)?;
+        ensure!(resps.len() == reqs.len(), "response count mismatch");
+        events += resps.len() as u64;
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    // The `/metrics` contract: the per-tenant batch counters must have
+    // moved by exactly what this run scored (batch-aware accounting).
+    for (tenant, n) in &per_tenant {
+        let before = counters_before.get(tenant).copied().unwrap_or(0);
+        let after = engine.tenant_events.get(tenant);
+        ensure!(
+            after - before == *n,
+            "scored_events[{tenant}] moved by {} for {n} scored events",
+            after - before
+        );
+    }
+
+    Ok(BatchMixReport {
+        events,
+        batches: cfg.batches as u64,
+        per_tenant,
+        wall_secs,
+        events_per_sec: events as f64 / wall_secs.max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MuseConfig;
+    use crate::runtime::{Manifest, ModelPool};
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "duo"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "solo"
+predictors:
+- name: duo
+  experts: [m1, m2]
+  quantile: identity
+- name: solo
+  experts: [m1]
+  quantile: identity
+server:
+  workers: 2
+  maxBatchEvents: 256
+"#;
+
+    #[test]
+    fn batch_mix_splits_traffic_and_counts_it() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let pool = Arc::new(ModelPool::new(Manifest::load(root).unwrap()));
+        let engine = Engine::build(&MuseConfig::from_yaml(CONFIG).unwrap(), pool).unwrap();
+        let cfg = BatchMixConfig {
+            tenants: vec![
+                (TenantProfile::new("bank1", 1, 0.3, 0.1), 3.0),
+                (TenantProfile::new("bank2", 2, 0.3, 0.1), 1.0),
+            ],
+            batch_size: 32,
+            batches: 8,
+            seed: 42,
+        };
+        let report = run_batch_mix(&engine, &cfg).unwrap();
+        assert_eq!(report.events, 256);
+        assert_eq!(report.batches, 8);
+        let total: u64 = report.per_tenant.values().sum();
+        assert_eq!(total, 256);
+        // 3:1 weighting: bank1 must dominate (loose bound, seeded RNG).
+        assert!(report.per_tenant["bank1"] > report.per_tenant["bank2"]);
+        assert!(report.events_per_sec > 0.0);
+        engine.drain_shadows();
+    }
+}

@@ -1,15 +1,19 @@
 //! The composable score transformations of paper Section 2.3:
 //! Posterior Correction `T^C` (Eq. 3), ensemble aggregation `A`,
 //! Quantile Mapping `T^Q` (Eq. 4) with its tenant-specific fitting
-//! (Eq. 5), and the configurable reference distribution `R`.
+//! (Eq. 5), and the configurable reference distribution `R` — plus
+//! the compiled per-tenant pipeline (`pipeline`) that fuses the
+//! `T^Q ∘ A ∘ T^C` chain into a branch-free kernel for the data plane.
 
 pub mod aggregation;
+pub mod pipeline;
 pub mod posterior;
 pub mod quantile;
 pub mod quantile_fit;
 pub mod reference;
 
 pub use aggregation::Aggregation;
+pub use pipeline::{CompiledPipeline, CompiledStages, PipelineScratch, PipelineSpec};
 pub use posterior::PosteriorCorrection;
 pub use quantile::QuantileMap;
 pub use reference::ReferenceDistribution;

@@ -1,0 +1,657 @@
+//! Compiled per-tenant transform pipelines.
+//!
+//! The paper's two-level transformation `T^Q ∘ A ∘ T^C` (Sections
+//! 2.2-2.3) was executed by the seed data plane as three *interpreted*
+//! stages per event: an `Option<PosteriorCorrection>` branch per
+//! expert, a heap-allocated `calibrated` vector per event, and a
+//! tenant `HashMap` probe per event for `T^Q`. This module compiles
+//! the chain **offline** — at deploy / promote / quantile-install time
+//! — into a branch-free kernel the hot path replays:
+//!
+//! * [`PipelineSpec`] — the declarative per-tenant pipeline: one
+//!   `T^C_k` per expert, the aggregation `A`, the tenant's `T^Q`. Its
+//!   [`PipelineSpec::score_staged_one`] is the reference oracle (the
+//!   exact arithmetic of the seed's staged path), kept forever as the
+//!   equivalence baseline for property tests.
+//! * [`CompiledStages`] — stages 1+2 (`T^C` + `A`) compiled per
+//!   *predictor*: every correction becomes a [`CorrectionSlot`]
+//!   whose neutral case is a slot-constant flag test (perfectly
+//!   predicted; no `Option` discriminant load per event, and bitwise
+//!   equal to the staged `None => s` branch for every input,
+//!   non-finite included), and the aggregation becomes a dot product
+//!   with a precomputed weight sum (same accumulation order as the
+//!   staged `apply_unchecked`, so results are bitwise equal, not
+//!   just close).
+//! * [`CompiledPipeline`] — stages shared per predictor + the tenant's
+//!   resolved `T^Q` table. Where legal (single expert, no correction)
+//!   the whole chain **fuses to a single piecewise-linear lookup**;
+//!   fusing a non-identity `T^C` into the table is *not* legal because
+//!   `T^Q ∘ T^C` is piecewise-rational, not piecewise-linear, and the
+//!   equivalence bar (<= 1e-12 vs the oracle) forbids approximating it.
+//! * [`PipelineScratch`] — reusable flat SoA staging for expert score
+//!   lanes, killing the per-batch `Vec<Vec<f32>>` allocation of the
+//!   seed's `score_raw`.
+//!
+//! Who compiles what: `coordinator::Predictor` builds one
+//! [`CompiledStages`] at deploy time and one [`CompiledPipeline`] per
+//! tenant inside its copy-on-write quantile table, so the batcher and
+//! the batch scoring path resolve a tenant's pipeline with **one probe
+//! per (batch, tenant) group** and zero per-event lookups — see
+//! docs/ARCHITECTURE.md "Pipeline compilation".
+
+use super::{Aggregation, PosteriorCorrection, QuantileMap};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// One expert's compiled `T^C`: the Eq. 3 rational map, or the
+/// **neutral slot** for an absent correction. The neutral case is a
+/// test of a slot-local constant flag — always perfectly predicted,
+/// unlike the seed's per-event `Option` discriminant match — rather
+/// than an arithmetic identity, because `1 - 0*s` is NaN (not 1) for
+/// `s = ±∞` and the slot must reproduce the staged `None => s` branch
+/// bitwise for *every* input, non-finite included.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CorrectionSlot {
+    beta: f64,
+    one_minus_beta: f64,
+    neutral: bool,
+}
+
+impl CorrectionSlot {
+    fn from_correction(c: &Option<PosteriorCorrection>) -> CorrectionSlot {
+        match c {
+            Some(c) => CorrectionSlot {
+                beta: c.beta(),
+                one_minus_beta: 1.0 - c.beta(),
+                neutral: false,
+            },
+            None => CorrectionSlot {
+                beta: 1.0,
+                one_minus_beta: 0.0,
+                neutral: true,
+            },
+        }
+    }
+
+    /// Apply the slot. Non-neutral slots run the exact operation
+    /// sequence of [`PosteriorCorrection::apply`] (clamp,
+    /// `1 - (1-beta)*s`, multiply, divide, clamp), so results are
+    /// bitwise equal to the staged oracle; neutral slots return the
+    /// input verbatim (including ±∞/NaN, matching `None => s`).
+    #[inline]
+    pub fn apply(&self, score: f64) -> f64 {
+        if self.neutral {
+            return score;
+        }
+        let s = score.clamp(0.0, 1.0);
+        let denom = 1.0 - self.one_minus_beta * s;
+        (self.beta * s / denom).clamp(0.0, 1.0)
+    }
+
+    pub fn is_neutral(&self) -> bool {
+        self.neutral
+    }
+}
+
+/// Compiled aggregation: the branch at the `Aggregation` enum is paid
+/// once per batch, never per event.
+#[derive(Debug, Clone, PartialEq)]
+enum CompiledAgg {
+    /// WeightedMean / Mean / Identity, normalised to one dot product.
+    /// `weight_sum` is accumulated in the same order as the staged
+    /// path recomputes it, so the division is bitwise identical.
+    Dot { weights: Vec<f64>, weight_sum: f64 },
+    Max,
+}
+
+/// Stages 1+2 of the chain (`T^C` per expert, then `A`), compiled once
+/// per predictor and shared (`Arc`) by every tenant's pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledStages {
+    slots: Vec<CorrectionSlot>,
+    agg: CompiledAgg,
+    /// `true` when the whole stage pair is the identity on expert
+    /// lane 0 (single expert, no correction, identity/unit-weight
+    /// aggregation): the kernel then skips straight to `T^Q`.
+    passthrough: bool,
+}
+
+impl CompiledStages {
+    pub fn compile(
+        corrections: &[Option<PosteriorCorrection>],
+        aggregation: &Aggregation,
+    ) -> Result<CompiledStages> {
+        ensure!(!corrections.is_empty(), "pipeline needs >= 1 expert");
+        if let Some(arity) = aggregation.arity() {
+            ensure!(
+                arity == corrections.len(),
+                "aggregation arity {arity} != {} experts",
+                corrections.len()
+            );
+        }
+        let slots: Vec<CorrectionSlot> = corrections
+            .iter()
+            .map(CorrectionSlot::from_correction)
+            .collect();
+        let agg = match aggregation {
+            Aggregation::Max => CompiledAgg::Max,
+            Aggregation::Identity => CompiledAgg::Dot {
+                weights: vec![1.0],
+                weight_sum: 1.0,
+            },
+            Aggregation::Mean => {
+                let weights = vec![1.0; corrections.len()];
+                CompiledAgg::Dot {
+                    weight_sum: weights.iter().sum(),
+                    weights,
+                }
+            }
+            Aggregation::WeightedMean(w) => {
+                // Same accumulation order as `apply_unchecked`'s
+                // per-event `den += w` loop.
+                let mut weight_sum = 0.0;
+                for wi in w {
+                    weight_sum += wi;
+                }
+                CompiledAgg::Dot {
+                    weights: w.clone(),
+                    weight_sum,
+                }
+            }
+        };
+        let passthrough = slots.len() == 1
+            && slots[0].neutral
+            && matches!(&agg, CompiledAgg::Dot { weights, .. } if weights == &[1.0]);
+        Ok(CompiledStages {
+            slots,
+            agg,
+            passthrough,
+        })
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_passthrough(&self) -> bool {
+        self.passthrough
+    }
+
+    /// Stage-1+2 kernel over SoA expert lanes: `raw[i] = A([T^C_k(s_ki)])`
+    /// for every event, appended to `out`. Branch-free per event — no
+    /// `Option` match, no per-event `calibrated` buffer, no per-event
+    /// allocation.
+    pub fn raw_into(&self, scratch: &PipelineScratch, out: &mut Vec<f64>) {
+        let (lanes, k, n) = scratch.lanes();
+        debug_assert_eq!(k, self.slots.len(), "scratch lane count mismatch");
+        out.reserve(n);
+        if self.passthrough {
+            // Identity chain: raw is expert lane 0 verbatim.
+            out.extend(lanes[..n].iter().map(|&s| s as f64));
+            return;
+        }
+        match &self.agg {
+            CompiledAgg::Dot {
+                weights,
+                weight_sum,
+            } => {
+                for i in 0..n {
+                    let mut num = 0.0;
+                    for (j, (slot, w)) in self.slots.iter().zip(weights).enumerate() {
+                        let s = lanes[j * n + i] as f64;
+                        num += slot.apply(s) * w;
+                    }
+                    out.push(num / weight_sum);
+                }
+            }
+            CompiledAgg::Max => {
+                for i in 0..n {
+                    let mut m = f64::MIN;
+                    for (j, slot) in self.slots.iter().enumerate() {
+                        m = m.max(slot.apply(lanes[j * n + i] as f64));
+                    }
+                    out.push(m);
+                }
+            }
+        }
+    }
+
+    /// Scalar stage-1+2 (one event, expert scores in order).
+    pub fn raw_one(&self, expert_scores: &[f32]) -> f64 {
+        debug_assert_eq!(expert_scores.len(), self.slots.len());
+        if self.passthrough {
+            return expert_scores[0] as f64;
+        }
+        match &self.agg {
+            CompiledAgg::Dot {
+                weights,
+                weight_sum,
+            } => {
+                let mut num = 0.0;
+                for ((slot, w), &s) in self.slots.iter().zip(weights).zip(expert_scores) {
+                    num += slot.apply(s as f64) * w;
+                }
+                num / weight_sum
+            }
+            CompiledAgg::Max => {
+                let mut m = f64::MIN;
+                for (slot, &s) in self.slots.iter().zip(expert_scores) {
+                    m = m.max(slot.apply(s as f64));
+                }
+                m
+            }
+        }
+    }
+}
+
+/// Reusable SoA staging for expert score lanes: one flat `k * n`
+/// buffer, lane `j` contiguous at `[j*n, (j+1)*n)`. Owned by each
+/// batch-scoring call site (batcher worker, engine batch path) and
+/// reused across batches — the seed's per-batch `Vec<Vec<f32>>`
+/// allocation is gone.
+#[derive(Default)]
+pub struct PipelineScratch {
+    lanes: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PipelineScratch {
+    /// Size the buffer for `k` experts × `n` events. Keeps capacity
+    /// across calls; only grows.
+    pub fn begin(&mut self, k: usize, n: usize) {
+        self.k = k;
+        self.n = n;
+        self.lanes.clear();
+        self.lanes.resize(k * n, 0.0);
+    }
+
+    /// Expert `j`'s lane, to be filled with its `n` scores.
+    pub fn lane_mut(&mut self, j: usize) -> &mut [f32] {
+        let n = self.n;
+        &mut self.lanes[j * n..(j + 1) * n]
+    }
+
+    /// (flat lanes, k, n).
+    pub fn lanes(&self) -> (&[f32], usize, usize) {
+        (&self.lanes, self.k, self.n)
+    }
+}
+
+/// A fully compiled per-tenant pipeline: the predictor's shared
+/// stage-1+2 kernel plus this tenant's resolved `T^Q` table. Published
+/// copy-on-write inside the predictor's quantile table, so the data
+/// plane never probes a tenant map per event.
+#[derive(Debug, Clone)]
+pub struct CompiledPipeline {
+    stages: Arc<CompiledStages>,
+    table: Arc<QuantileMap>,
+    /// The whole chain is a single piecewise-linear lookup
+    /// (`stages.is_passthrough()`): legal fusion per the module docs.
+    fused: bool,
+}
+
+impl CompiledPipeline {
+    pub fn new(stages: Arc<CompiledStages>, table: Arc<QuantileMap>) -> CompiledPipeline {
+        let fused = stages.is_passthrough();
+        CompiledPipeline {
+            stages,
+            table,
+            fused,
+        }
+    }
+
+    pub fn stages(&self) -> &Arc<CompiledStages> {
+        &self.stages
+    }
+
+    pub fn table(&self) -> &Arc<QuantileMap> {
+        &self.table
+    }
+
+    /// Whether the chain collapsed to one PWL lookup.
+    pub fn is_fused(&self) -> bool {
+        self.fused
+    }
+
+    /// Stage 3: the tenant's `T^Q` on an aggregated raw score.
+    #[inline]
+    pub fn finalize_one(&self, raw: f64) -> f64 {
+        self.table.apply(raw)
+    }
+
+    /// Stage 3 over a raw slice, appended to `out`.
+    pub fn finalize_into(&self, raw: &[f64], out: &mut Vec<f64>) {
+        out.reserve(raw.len());
+        out.extend(raw.iter().map(|&r| self.table.apply(r)));
+    }
+
+    /// Whole chain for one event: `(raw, final)`.
+    #[inline]
+    pub fn score_one(&self, expert_scores: &[f32]) -> (f64, f64) {
+        if self.fused {
+            let raw = expert_scores[0] as f64;
+            return (raw, self.table.apply(raw));
+        }
+        let raw = self.stages.raw_one(expert_scores);
+        (raw, self.table.apply(raw))
+    }
+
+    /// Whole chain over a staged batch: raw scores into `raw_out`,
+    /// final scores into `out` (both appended).
+    pub fn score_into(
+        &self,
+        scratch: &PipelineScratch,
+        raw_out: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+    ) {
+        let start = raw_out.len();
+        self.stages.raw_into(scratch, raw_out);
+        self.finalize_into(&raw_out[start..], out);
+    }
+}
+
+/// The declarative pipeline: what the control plane knows about one
+/// `(predictor, tenant)` pair before compilation.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub corrections: Vec<Option<PosteriorCorrection>>,
+    pub aggregation: Aggregation,
+    pub tenant_map: Arc<QuantileMap>,
+}
+
+impl PipelineSpec {
+    pub fn new(
+        corrections: Vec<Option<PosteriorCorrection>>,
+        aggregation: Aggregation,
+        tenant_map: Arc<QuantileMap>,
+    ) -> Result<PipelineSpec> {
+        ensure!(!corrections.is_empty(), "pipeline needs >= 1 expert");
+        if let Some(arity) = aggregation.arity() {
+            ensure!(
+                arity == corrections.len(),
+                "aggregation arity {arity} != {} experts",
+                corrections.len()
+            );
+        }
+        Ok(PipelineSpec {
+            corrections,
+            aggregation,
+            tenant_map,
+        })
+    }
+
+    /// Compile to the branch-free kernel.
+    pub fn compile(&self) -> Result<CompiledPipeline> {
+        let stages = Arc::new(CompiledStages::compile(
+            &self.corrections,
+            &self.aggregation,
+        )?);
+        Ok(CompiledPipeline::new(stages, Arc::clone(&self.tenant_map)))
+    }
+
+    /// The staged reference oracle: byte-for-byte the arithmetic of the
+    /// seed's interpreted path (`Predictor::score_raw`'s per-event loop
+    /// followed by the tenant's `T^Q`). Property tests assert the
+    /// compiled kernel against this; it must never be "optimised".
+    pub fn score_staged_one(&self, expert_scores: &[f32]) -> (f64, f64) {
+        let mut calibrated = vec![0.0f64; self.corrections.len()];
+        for (j, c) in self.corrections.iter().enumerate() {
+            let s = expert_scores[j] as f64;
+            calibrated[j] = match c {
+                Some(c) => c.apply(s),
+                None => s,
+            };
+        }
+        let raw = self.aggregation.apply_unchecked(&calibrated);
+        (raw, self.tenant_map.apply(raw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn spec(
+        betas: &[Option<f64>],
+        aggregation: Aggregation,
+        map: QuantileMap,
+    ) -> PipelineSpec {
+        let corrections = betas
+            .iter()
+            .map(|b| b.map(|b| PosteriorCorrection::new(b).unwrap()))
+            .collect();
+        PipelineSpec::new(corrections, aggregation, map.shared()).unwrap()
+    }
+
+    fn random_map(g: &mut prop::Gen) -> QuantileMap {
+        let n = g.usize(2..40);
+        let src = g.monotone_grid(n, 0.0, 1.0);
+        let refq = g.monotone_grid(n, 0.0, 1.0);
+        QuantileMap::new(src, refq).unwrap()
+    }
+
+    /// The acceptance-criteria property: compiled ≡ staged within
+    /// 1e-12 across tenants (random maps), aggregations, correction
+    /// mixes, and edge scores 0.0 / 1.0 / out-of-grid.
+    #[test]
+    fn prop_compiled_matches_staged_oracle() {
+        prop::check(512, |g| {
+            let k = g.usize(1..6);
+            let betas: Vec<Option<f64>> = (0..k)
+                .map(|_| {
+                    if g.bool(0.3) {
+                        None
+                    } else {
+                        Some(g.f64(0.001..1.0))
+                    }
+                })
+                .collect();
+            let aggregation = match g.usize(0..4) {
+                0 => Aggregation::Mean,
+                1 => Aggregation::Max,
+                2 => Aggregation::weighted((0..k).map(|_| g.f64(0.01..3.0)).collect())
+                    .unwrap(),
+                _ if k == 1 => Aggregation::Identity,
+                _ => Aggregation::Mean,
+            };
+            let s = spec(&betas, aggregation, random_map(g));
+            let compiled = s.compile().map_err(|e| e.to_string())?;
+            for _ in 0..16 {
+                // Mostly in-range scores, with deliberate edge,
+                // out-of-grid, and non-finite cases mixed in.
+                // +inf exercises the neutral slot's non-finite
+                // passthrough; -inf is excluded because opposite
+                // infinities aggregate to NaN, which QuantileMap::apply
+                // rejects by panicking on both paths alike.
+                let scores: Vec<f32> = (0..k)
+                    .map(|_| match g.usize(0..10) {
+                        0 => 0.0,
+                        1 => 1.0,
+                        2 => g.f64(-0.5..0.0) as f32,
+                        3 => g.f64(1.0..1.5) as f32,
+                        4 => f32::INFINITY,
+                        _ => g.f64(0.0..1.0) as f32,
+                    })
+                    .collect();
+                let (raw_s, fin_s) = s.score_staged_one(&scores);
+                let (raw_c, fin_c) = compiled.score_one(&scores);
+                // `a == b` catches the ±inf (and exact) cases where
+                // `a - b` would be NaN; NaN results must agree in kind.
+                let agree = |a: f64, b: f64| {
+                    a == b || (a - b).abs() <= 1e-12 || (a.is_nan() && b.is_nan())
+                };
+                prop_assert!(
+                    agree(raw_s, raw_c),
+                    "raw diverged: staged {raw_s} vs compiled {raw_c} (scores {scores:?})"
+                );
+                prop_assert!(
+                    agree(fin_s, fin_c),
+                    "final diverged: staged {fin_s} vs compiled {fin_c} (scores {scores:?})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Batch kernel == scalar kernel == staged oracle.
+    #[test]
+    fn prop_batch_kernel_matches_scalar() {
+        prop::check(128, |g| {
+            let k = g.usize(1..5);
+            let betas: Vec<Option<f64>> =
+                (0..k).map(|_| Some(g.f64(0.01..1.0))).collect();
+            let s = spec(
+                &betas,
+                Aggregation::weighted(vec![1.0; k]).unwrap(),
+                random_map(g),
+            );
+            let compiled = s.compile().unwrap();
+            let n = g.usize(1..64);
+            // Event-major random scores, transposed into lanes.
+            let events: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..k).map(|_| g.f64(0.0..1.0) as f32).collect())
+                .collect();
+            let mut scratch = PipelineScratch::default();
+            scratch.begin(k, n);
+            for j in 0..k {
+                let lane = scratch.lane_mut(j);
+                for (i, e) in events.iter().enumerate() {
+                    lane[i] = e[j];
+                }
+            }
+            let mut raw = Vec::new();
+            let mut fin = Vec::new();
+            compiled.score_into(&scratch, &mut raw, &mut fin);
+            prop_assert!(raw.len() == n && fin.len() == n, "length mismatch");
+            for (i, e) in events.iter().enumerate() {
+                let (r1, f1) = compiled.score_one(e);
+                let (r2, f2) = s.score_staged_one(e);
+                prop_assert!(
+                    raw[i] == r1 && (raw[i] - r2).abs() <= 1e-12,
+                    "raw[{i}] {} vs scalar {r1} vs staged {r2}",
+                    raw[i]
+                );
+                prop_assert!(
+                    fin[i] == f1 && (fin[i] - f2).abs() <= 1e-12,
+                    "fin[{i}] {} vs scalar {f1} vs staged {f2}",
+                    fin[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn neutral_slot_is_bitwise_identity() {
+        let slot = CorrectionSlot::from_correction(&None);
+        for s in [
+            -1.5,
+            -0.0,
+            0.0,
+            1e-300,
+            0.5,
+            1.0,
+            7.25,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ] {
+            assert_eq!(slot.apply(s).to_bits(), s.to_bits(), "s = {s}");
+        }
+        assert!(slot.is_neutral());
+    }
+
+    #[test]
+    fn non_neutral_slot_matches_posterior_correction() {
+        let c = PosteriorCorrection::new(0.18).unwrap();
+        let slot = CorrectionSlot::from_correction(&Some(c));
+        for i in -5..=25 {
+            let s = i as f64 / 20.0; // includes out-of-range
+            assert_eq!(slot.apply(s).to_bits(), c.apply(s).to_bits(), "s = {s}");
+        }
+    }
+
+    #[test]
+    fn single_expert_uncorrected_chain_fuses_to_pwl() {
+        let s = spec(
+            &[None],
+            Aggregation::Identity,
+            QuantileMap::new(vec![0.0, 0.2, 1.0], vec![0.0, 0.8, 1.0]).unwrap(),
+        );
+        let compiled = s.compile().unwrap();
+        assert!(compiled.is_fused());
+        assert!(compiled.stages().is_passthrough());
+        // Fused result is exactly the table lookup.
+        let (raw, fin) = compiled.score_one(&[0.1]);
+        assert_eq!(raw, 0.1f32 as f64);
+        assert!((fin - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corrected_single_expert_does_not_fuse() {
+        let s = spec(
+            &[Some(0.5)],
+            Aggregation::Identity,
+            QuantileMap::identity(11).unwrap(),
+        );
+        assert!(!s.compile().unwrap().is_fused());
+        // beta = 1 still carries the staged clamp, so it must not
+        // collapse either (the oracle clamps, the identity would not).
+        let s = spec(
+            &[Some(1.0)],
+            Aggregation::Identity,
+            QuantileMap::identity(11).unwrap(),
+        );
+        let compiled = s.compile().unwrap();
+        assert!(!compiled.is_fused());
+        let (raw, _) = compiled.score_one(&[1.5]);
+        assert_eq!(raw, 1.0, "beta=1 slot must keep the [0,1] clamp");
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        assert!(PipelineSpec::new(
+            vec![None],
+            Aggregation::weighted(vec![1.0, 1.0]).unwrap(),
+            QuantileMap::identity(3).unwrap().shared(),
+        )
+        .is_err());
+        assert!(CompiledStages::compile(&[], &Aggregation::Mean).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches() {
+        let mut scratch = PipelineScratch::default();
+        scratch.begin(2, 3);
+        scratch.lane_mut(0).copy_from_slice(&[0.1, 0.2, 0.3]);
+        scratch.lane_mut(1).copy_from_slice(&[0.4, 0.5, 0.6]);
+        let (lanes, k, n) = scratch.lanes();
+        assert_eq!((k, n), (2, 3));
+        assert_eq!(lanes, &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        // Shrink, then grow: contents are re-zeroed each begin().
+        scratch.begin(1, 2);
+        assert_eq!(scratch.lanes().0, &[0.0, 0.0]);
+        scratch.begin(2, 4);
+        assert_eq!(scratch.lanes().0.len(), 8);
+        assert!(scratch.lanes().0.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn max_aggregation_compiles() {
+        let s = spec(
+            &[Some(0.2), None, Some(0.9)],
+            Aggregation::Max,
+            QuantileMap::identity(5).unwrap(),
+        );
+        let compiled = s.compile().unwrap();
+        for scores in [[0.1f32, 0.9, 0.3], [0.0, 0.0, 0.0], [1.0, 0.5, 0.2]] {
+            let (r1, f1) = compiled.score_one(&scores);
+            let (r2, f2) = s.score_staged_one(&scores);
+            assert_eq!(r1.to_bits(), r2.to_bits());
+            assert_eq!(f1.to_bits(), f2.to_bits());
+        }
+    }
+}

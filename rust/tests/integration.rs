@@ -151,6 +151,45 @@ fn eq5_gate_blocks_premature_custom_fit_then_opens() {
 }
 
 #[test]
+fn batch_scoring_follows_promotions_and_mirrors_shadows() {
+    let Some(engine) = engine() else { return };
+    let mut wl = Workload::new(TenantProfile::new("bank1", 8, 0.4, 0.2), 8);
+    let reqs: Vec<ScoreRequest> = (0..10)
+        .map(|i| ScoreRequest {
+            intent: Intent {
+                tenant: "bank1".into(),
+                ..Intent::default()
+            },
+            entity: format!("b{i}"),
+            features: wl.next_event().features,
+        })
+        .collect();
+    // Before promotion: live p1, whole batch mirrored to the shadow p2.
+    let before = engine.score_batch(&reqs).unwrap();
+    assert!(before
+        .iter()
+        .all(|r| r.predictor == "p1" && r.shadow_count == 1));
+    engine.drain_shadows();
+    assert_eq!(
+        engine.lake.counts()[&("bank1".to_string(), "p2".to_string(), true)],
+        10,
+        "batch shadows must mirror the whole group"
+    );
+    // Promote the shadow; the next batch lands on p2, shadow rule gone.
+    let cp = ControlPlane::new(&engine);
+    cp.promote("bank1", "p2").unwrap();
+    let after = engine.score_batch(&reqs).unwrap();
+    assert!(after
+        .iter()
+        .all(|r| r.predictor == "p2" && r.shadow_count == 0));
+    engine.drain_shadows();
+    // Per-tenant accounting is batch-aware across the whole lifecycle.
+    assert_eq!(engine.tenant_events.get("bank1"), 20);
+    assert_eq!(engine.counters.get("events_batch"), 20);
+    assert_eq!(engine.counters.get("requests_batch"), 2);
+}
+
+#[test]
 fn scoring_unknown_route_errors_cleanly() {
     let Some(engine) = engine() else { return };
     // Remove the catch-all: unknown tenants must get a clean error,

@@ -1,0 +1,562 @@
+//! Offline, API-compatible subset of the `xla` crate (the PJRT
+//! bindings) — the build environment has no crates.io access and no
+//! libxla, so this shim supplies exactly the surface
+//! `rust/src/runtime/container.rs` uses:
+//!
+//! * [`PjRtClient::cpu`] — client construction (`!Send`, like the real
+//!   `Rc`-based client, so the one-thread-per-container discipline is
+//!   enforced by the compiler here too).
+//! * [`HloModuleProto::from_text_file`] / [`XlaComputation::from_proto`]
+//!   / [`PjRtClient::compile`] — artifact loading and compilation.
+//! * [`Literal`] (`vec1`, `reshape`, `to_tuple1`, `to_vec`) and
+//!   [`PjRtLoadedExecutable::execute`] returning [`PjRtBuffer`]s with
+//!   `to_literal_sync`.
+//!
+//! Execution semantics: the real crate runs AOT-lowered HLO. Offline
+//! we cannot, so `from_text_file` accepts the **`muse-sim-hlo v1`**
+//! dialect — a tiny feed-forward program format the compile path can
+//! emit alongside (or instead of) true HLO text when targeting this
+//! shim — and `compile` produces an interpreter for it. Real HLO text
+//! is detected and rejected with a clear error at load time, so a
+//! mismatch between artifacts and runtime fails loudly at container
+//! startup (the same place the real bindings would fail), never at
+//! scoring time.
+//!
+//! `muse-sim-hlo v1` grammar (whitespace-separated tokens, `#`
+//! comments to end of line):
+//!
+//! ```text
+//! muse-sim-hlo v1
+//! input <batch> <dim>
+//! dense <in> <out>          # then out*in weights (row-major, one
+//!                           # output unit after another), then <out>
+//!                           # biases
+//! relu | tanh | sigmoid     # element-wise activations, any order
+//! output 1                  # final width must be 1 score per row
+//! ```
+//!
+//! The interpreter evaluates rows independently, in f32 like the PJRT
+//! CPU backend, and returns a 1-tuple of a `[batch]` literal — the
+//! same shape contract `aot.py` lowers with (`return_tuple=True`).
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Error type for the shim; `Debug` matches how the runtime formats
+/// real `xla` errors (`{e:?}`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------
+
+/// A host literal: an f32 buffer with a shape, or a tuple of literals.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    shape: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            shape: vec![data.len() as i64],
+            data: data.to_vec(),
+            tuple: None,
+        }
+    }
+
+    fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            data: vec![],
+            shape: vec![],
+            tuple: Some(parts),
+        }
+    }
+
+    /// Reinterpret the buffer under a new shape (element count must
+    /// match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        if self.tuple.is_some() {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({} elements)",
+                self.shape,
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data,
+            shape: dims.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Unwrap a 1-tuple literal (the `return_tuple=True` contract).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        match self.tuple {
+            Some(mut parts) if parts.len() == 1 => Ok(parts.remove(0)),
+            Some(parts) => Err(Error::new(format!(
+                "expected a 1-tuple, got a {}-tuple",
+                parts.len()
+            ))),
+            None => Err(Error::new("expected a tuple literal")),
+        }
+    }
+
+    /// Copy out the host buffer.
+    pub fn to_vec<T: FromLiteral>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error::new("cannot to_vec a tuple literal"));
+        }
+        T::from_f32(&self.data)
+    }
+
+    fn rows_cols(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] if *r >= 0 && *c >= 0 => Ok((*r as usize, *c as usize)),
+            other => Err(Error::new(format!("expected rank-2 input, got {other:?}"))),
+        }
+    }
+}
+
+/// Element types extractable from a [`Literal`] (f32 only offline).
+pub trait FromLiteral: Sized {
+    fn from_f32(data: &[f32]) -> Result<Vec<Self>>;
+}
+
+impl FromLiteral for f32 {
+    fn from_f32(data: &[f32]) -> Result<Vec<f32>> {
+        Ok(data.to_vec())
+    }
+}
+
+// ---------------------------------------------------------------
+// Program loading
+// ---------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Layer {
+    /// `weights` is row-major `[out][in]`; `bias` is `[out]`.
+    Dense {
+        input: usize,
+        output: usize,
+        weights: Vec<f32>,
+        bias: Vec<f32>,
+    },
+    Relu,
+    Tanh,
+    Sigmoid,
+}
+
+/// Token cursor over the artifact text (comments stripped).
+struct Cursor<'a> {
+    tokens: Vec<&'a str>,
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(text: &'a str) -> Cursor<'a> {
+        Cursor {
+            tokens: text
+                .lines()
+                .map(|l| l.split('#').next().unwrap_or(""))
+                .flat_map(str::split_whitespace)
+                .collect(),
+            pos: 0,
+        }
+    }
+
+    fn next(&mut self) -> Option<&'a str> {
+        let t = self.tokens.get(self.pos).copied();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn usize(&mut self, what: &str) -> Result<usize> {
+        let t = self
+            .next()
+            .ok_or_else(|| Error::new(format!("unexpected end of program: expected {what}")))?;
+        t.parse::<usize>()
+            .map_err(|e| Error::new(format!("bad {what} '{t}': {e}")))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        let t = self
+            .next()
+            .ok_or_else(|| Error::new(format!("unexpected end of program: expected {what}")))?;
+        t.parse::<f32>()
+            .map_err(|e| Error::new(format!("bad {what} '{t}': {e}")))
+    }
+}
+
+/// A parsed `muse-sim-hlo v1` program (stands in for the HLO proto).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    batch: usize,
+    dim: usize,
+    layers: Vec<Layer>,
+}
+
+impl HloModuleProto {
+    /// Load and parse an artifact text file. Real HLO text is rejected
+    /// with a descriptive error (this shim interprets only the
+    /// `muse-sim-hlo v1` dialect; see the module docs).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("read {path}: {e}")))?;
+        Self::parse(&text).map_err(|e| Error::new(format!("{path}: {}", e.msg)))
+    }
+
+    /// Parse program text (exposed for tests).
+    pub fn parse(text: &str) -> Result<HloModuleProto> {
+        let mut c = Cursor::new(text);
+        if c.next() != Some("muse-sim-hlo") {
+            return Err(Error::new(
+                "not a muse-sim-hlo artifact (the offline xla shim cannot execute \
+                 true HLO text; re-emit artifacts in the muse-sim-hlo v1 dialect)",
+            ));
+        }
+        let version = c.next();
+        if version != Some("v1") {
+            return Err(Error::new(format!(
+                "unsupported muse-sim-hlo version {version:?}"
+            )));
+        }
+        let mut batch = None;
+        let mut dim = None;
+        let mut width: Option<usize> = None; // per-row width so far
+        let mut layers = Vec::new();
+        while let Some(op) = c.next() {
+            match op {
+                "input" => {
+                    let b = c.usize("input batch")?;
+                    let d = c.usize("input dim")?;
+                    if b == 0 || d == 0 {
+                        return Err(Error::new("input batch/dim must be positive"));
+                    }
+                    batch = Some(b);
+                    dim = Some(d);
+                    width = Some(d);
+                }
+                "dense" => {
+                    let input = c.usize("dense in-width")?;
+                    let output = c.usize("dense out-width")?;
+                    let w = width.ok_or_else(|| Error::new("dense before input declaration"))?;
+                    if input != w {
+                        return Err(Error::new(format!(
+                            "dense expects in-width {input} but current width is {w}"
+                        )));
+                    }
+                    if output == 0 {
+                        return Err(Error::new("dense out-width must be positive"));
+                    }
+                    let mut weights = Vec::with_capacity(input * output);
+                    for _ in 0..input * output {
+                        weights.push(c.f32("dense weight")?);
+                    }
+                    let mut bias = Vec::with_capacity(output);
+                    for _ in 0..output {
+                        bias.push(c.f32("dense bias")?);
+                    }
+                    width = Some(output);
+                    layers.push(Layer::Dense {
+                        input,
+                        output,
+                        weights,
+                        bias,
+                    });
+                }
+                "relu" => layers.push(Layer::Relu),
+                "tanh" => layers.push(Layer::Tanh),
+                "sigmoid" => layers.push(Layer::Sigmoid),
+                "output" => {
+                    let n = c.usize("output width")?;
+                    if Some(n) != width {
+                        return Err(Error::new(format!(
+                            "declared output width {n} but program width is {width:?}"
+                        )));
+                    }
+                }
+                other => return Err(Error::new(format!("unknown op '{other}'"))),
+            }
+        }
+        let (Some(batch), Some(dim)) = (batch, dim) else {
+            return Err(Error::new("missing input declaration"));
+        };
+        if width != Some(1) {
+            return Err(Error::new(format!(
+                "program must end at width 1 (one score per row), got {width:?}"
+            )));
+        }
+        Ok(HloModuleProto { batch, dim, layers })
+    }
+}
+
+/// The computation wrapper (a pass-through offline).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    program: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            program: proto.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Client / executable / buffers
+// ---------------------------------------------------------------
+
+/// The PJRT CPU client. `!Send` on purpose (mirrors the `Rc`-based
+/// real client): all use stays on the spawning container thread.
+pub struct PjRtClient {
+    _not_send: PhantomData<*const ()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {
+            _not_send: PhantomData,
+        })
+    }
+
+    /// "Compile": validate once more and wrap an interpreter.
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            program: computation.program.clone(),
+            _not_send: PhantomData,
+        })
+    }
+}
+
+/// A device buffer holding an execution result.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled (interpretable) program bound to the client.
+pub struct PjRtLoadedExecutable {
+    program: HloModuleProto,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on one input literal of shape `[batch, dim]`; returns
+    /// the per-device, per-output buffer grid (1x1 here), each buffer
+    /// a 1-tuple of the `[batch]` score vector.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if args.len() != 1 {
+            return Err(Error::new(format!(
+                "expected exactly 1 argument, got {}",
+                args.len()
+            )));
+        }
+        let input = args[0].borrow();
+        let (rows, cols) = input.rows_cols()?;
+        if rows != self.program.batch || cols != self.program.dim {
+            return Err(Error::new(format!(
+                "input shape [{rows}, {cols}] does not match program input [{}, {}]",
+                self.program.batch, self.program.dim
+            )));
+        }
+        let mut scores = Vec::with_capacity(rows);
+        let mut cur: Vec<f32> = Vec::new();
+        let mut nxt: Vec<f32> = Vec::new();
+        for r in 0..rows {
+            cur.clear();
+            cur.extend_from_slice(&input.data[r * cols..(r + 1) * cols]);
+            for layer in &self.program.layers {
+                match layer {
+                    Layer::Dense {
+                        input,
+                        output,
+                        weights,
+                        bias,
+                    } => {
+                        nxt.clear();
+                        for o in 0..*output {
+                            let row = &weights[o * input..(o + 1) * input];
+                            let mut acc = bias[o];
+                            for (w, x) in row.iter().zip(cur.iter()) {
+                                acc += w * x;
+                            }
+                            nxt.push(acc);
+                        }
+                        std::mem::swap(&mut cur, &mut nxt);
+                    }
+                    Layer::Relu => {
+                        for v in cur.iter_mut() {
+                            *v = v.max(0.0);
+                        }
+                    }
+                    Layer::Tanh => {
+                        for v in cur.iter_mut() {
+                            *v = v.tanh();
+                        }
+                    }
+                    Layer::Sigmoid => {
+                        for v in cur.iter_mut() {
+                            *v = 1.0 / (1.0 + (-*v).exp());
+                        }
+                    }
+                }
+            }
+            scores.push(cur[0]);
+        }
+        let out = Literal {
+            shape: vec![rows as i64],
+            data: scores,
+            tuple: None,
+        };
+        Ok(vec![vec![PjRtBuffer {
+            literal: Literal::tuple(vec![out]),
+        }]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LOGISTIC: &str = "\
+muse-sim-hlo v1
+# 2-feature logistic model
+input 4 2
+dense 2 1
+  1.0 -1.0
+  0.5
+sigmoid
+output 1
+";
+
+    fn run(program: &str, data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let proto = HloModuleProto::parse(program).unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let lit = Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .unwrap();
+        let out = exe.execute::<Literal>(&[lit]).unwrap();
+        out[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap()
+    }
+
+    #[test]
+    fn logistic_program_matches_closed_form() {
+        let data = [0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 2.0, -1.0];
+        let got = run(LOGISTIC, &data, 4, 2);
+        let sigmoid = |z: f32| 1.0 / (1.0 + (-z).exp());
+        let want = [
+            sigmoid(0.5),
+            sigmoid(1.5),
+            sigmoid(-0.5),
+            sigmoid(3.5),
+        ];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn mlp_layers_compose() {
+        let program = "\
+muse-sim-hlo v1
+input 2 2
+dense 2 2
+  1.0 0.0
+  0.0 1.0
+  0.0 0.0
+relu
+dense 2 1
+  1.0 1.0
+  0.0
+sigmoid
+output 1
+";
+        let got = run(program, &[1.0, -2.0, -1.0, -1.0], 2, 2);
+        let sigmoid = |z: f32| 1.0 / (1.0 + (-z).exp());
+        assert!((got[0] - sigmoid(1.0)).abs() < 1e-6);
+        assert!((got[1] - sigmoid(0.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_real_hlo_text() {
+        let err = HloModuleProto::parse("HloModule jit_forward ...").unwrap_err();
+        assert!(format!("{err:?}").contains("muse-sim-hlo"));
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let proto = HloModuleProto::parse(LOGISTIC).unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let lit = Literal::vec1(&[0.0; 6]).reshape(&[3, 2]).unwrap();
+        assert!(exe.execute::<Literal>(&[lit]).is_err());
+    }
+
+    #[test]
+    fn rejects_width_and_arity_errors() {
+        assert!(HloModuleProto::parse("muse-sim-hlo v1\ninput 1 2\n").is_err()); // width 2 != 1
+        assert!(HloModuleProto::parse("muse-sim-hlo v2\n").is_err());
+        assert!(
+            HloModuleProto::parse("muse-sim-hlo v1\ninput 1 2\ndense 3 1\n0 0 0 0\n").is_err()
+        );
+    }
+
+    #[test]
+    fn reshape_validates_element_count() {
+        assert!(Literal::vec1(&[0.0; 4]).reshape(&[2, 2]).is_ok());
+        assert!(Literal::vec1(&[0.0; 4]).reshape(&[3, 2]).is_err());
+    }
+}
