@@ -1,0 +1,88 @@
+//! Drift-storm smoke run: the lifecycle autopilot end to end, on the
+//! synthetic sim-dialect artifacts (no `make artifacts` needed — this
+//! is the CI smoke test for the subsystem).
+//!
+//! ```text
+//! cargo run --release --example drift_storm
+//! ```
+//!
+//! Builds an engine with the autopilot enabled for tenant `acme`,
+//! calibrates, injects a fraud-wave distribution shift, and verifies
+//! the controller detects → refits from sketches → shadow-validates →
+//! promotes with zero manual control-plane calls, restoring the
+//! tenant's alert rate to within 10% relative error of target.
+//! Exits non-zero if any of that fails, so CI actually gates on it.
+
+use anyhow::{ensure, Result};
+use muse::config::MuseConfig;
+use muse::coordinator::Engine;
+use muse::runtime::{ModelPool, SimArtifacts};
+use muse::simulator::{run_drift_storm, DriftStormConfig};
+use std::sync::Arc;
+
+const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "acme dedicated"
+    condition:
+      tenants: ["acme"]
+    targetPredictorName: "duo"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "solo"
+predictors:
+- name: duo
+  experts: [s1, s2]
+  quantile: custom
+- name: solo
+  experts: [s3]
+  quantile: identity
+server:
+  workers: 2
+  maxBatchEvents: 1024
+  lakeMaxRecords: 200000
+lifecycle:
+  enabled: true
+  tenants: ["acme"]
+  autoDiscover: false
+  sketchK: 4096
+  alertRate: 0.1
+  delta: 0.05
+  minDriftSamples: 512
+  minValidationSamples: 512
+  validationTolerance: 0.08
+  cooldownTicks: 4
+"#;
+
+fn main() -> Result<()> {
+    let fix = SimArtifacts::in_temp()?;
+    eprintln!(
+        "drift_storm: synthetic sim-dialect artifacts at {}",
+        fix.root().display()
+    );
+    let pool = Arc::new(ModelPool::new(fix.manifest()?));
+    let engine = Engine::build(&MuseConfig::from_yaml(CONFIG)?, pool)?;
+
+    let report = run_drift_storm(&engine, &DriftStormConfig::default())?;
+    println!("{}", report.render());
+
+    ensure!(report.promotions >= 1, "no autonomous promotion");
+    ensure!(
+        report.rel_err_before <= 0.10,
+        "pre-storm alert error {:.1}% > 10%",
+        100.0 * report.rel_err_before
+    );
+    ensure!(
+        report.rel_err_during >= 0.5,
+        "storm too weak ({:.1}%)",
+        100.0 * report.rel_err_during
+    );
+    ensure!(
+        report.rel_err_after <= 0.10,
+        "post-recovery alert error {:.1}% > 10%",
+        100.0 * report.rel_err_after
+    );
+    engine.drain_shadows();
+    println!("drift_storm: OK — autopilot restored the alert rate autonomously");
+    Ok(())
+}

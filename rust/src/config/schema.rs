@@ -136,6 +136,12 @@ pub struct ServerConfig {
     /// the engine from unbounded single-request work).
     pub max_batch_events: usize,
     pub warmup_requests: usize,
+    /// Data-lake retention cap: oldest records are evicted once the
+    /// lake holds this many (0 = unbounded). Quantile refits no longer
+    /// replay full history (they consume lifecycle sketches), so the
+    /// lake only needs enough depth for shadow validation and the
+    /// repro harnesses.
+    pub lake_max_records: usize,
 }
 
 impl Default for ServerConfig {
@@ -147,6 +153,81 @@ impl Default for ServerConfig {
             max_batch_delay_us: 500,
             max_batch_events: 1024,
             warmup_requests: 200,
+            lake_max_records: 1_000_000,
+        }
+    }
+}
+
+/// Lifecycle-autopilot configuration (`lifecycle:` block): the
+/// streaming-sketch feed, drift thresholds, Eq. 5 fit gate and the
+/// shadow→promote control loop (`lifecycle` module). Disabled by
+/// default — enabling it costs the data plane one wait-free feed-table
+/// load plus one atomic ring append per scored event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleConfig {
+    pub enabled: bool,
+    /// Tenants the autopilot manages explicitly.
+    pub tenants: Vec<String>,
+    /// Also manage every tenant named in a scoring rule's condition.
+    pub auto_discover: bool,
+    /// Sketch compaction capacity `k` (memory/accuracy knob: rank
+    /// error bound (2·(levels−1) + 2)/k, memory ≤ k·levels items per
+    /// pair — see `lifecycle::sketch`).
+    pub sketch_k: usize,
+    /// Per-worker feed: number of ring stripes and cells per stripe.
+    pub feed_stripes: usize,
+    pub feed_capacity: usize,
+    /// Drift thresholds (PSI > 0.25 = significant shift, by the
+    /// standard interpretation bands; KS = max CDF gap).
+    pub psi_threshold: f64,
+    pub ks_threshold: f64,
+    pub drift_bins: usize,
+    /// Minimum detection-window samples before a drift evaluation.
+    pub min_drift_samples: u64,
+    /// Eq. 5 fit gate: target alert rate, relative error, z-score.
+    pub alert_rate: f64,
+    pub delta: f64,
+    pub z: f64,
+    /// Shadow validation: minimum mirrored samples and max per-bin
+    /// share deviation vs the reference (`validate_shadow`).
+    pub min_validation_samples: usize,
+    pub validation_tolerance: f64,
+    /// Ticks a candidate may sit in ShadowDeployed waiting for enough
+    /// mirrored traffic before it is torn down (starvation guard: the
+    /// shared lake ring may never retain `minValidationSamples` for a
+    /// low-traffic tenant).
+    pub shadow_timeout_ticks: u32,
+    /// Ticks to hold off after a failed validation before re-arming.
+    pub cooldown_ticks: u32,
+    /// Background controller cadence (`lifecycle::spawn_controller`).
+    pub check_interval_ms: u64,
+    /// Decommission the replaced predictor after a promotion when no
+    /// routing rule references it anymore.
+    pub decommission_old: bool,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            enabled: false,
+            tenants: vec![],
+            auto_discover: true,
+            sketch_k: 1024,
+            feed_stripes: 8,
+            feed_capacity: 8192,
+            psi_threshold: 0.25,
+            ks_threshold: 0.15,
+            drift_bins: 10,
+            min_drift_samples: 512,
+            alert_rate: 0.01,
+            delta: 0.2,
+            z: 1.96,
+            min_validation_samples: 512,
+            validation_tolerance: 0.1,
+            shadow_timeout_ticks: 240,
+            cooldown_ticks: 8,
+            check_interval_ms: 1000,
+            decommission_old: true,
         }
     }
 }
@@ -157,6 +238,7 @@ pub struct MuseConfig {
     pub routing: RoutingConfig,
     pub predictors: Vec<PredictorConfig>,
     pub server: ServerConfig,
+    pub lifecycle: LifecycleConfig,
 }
 
 impl MuseConfig {
@@ -181,10 +263,15 @@ impl MuseConfig {
             Some(s) => parse_server(s)?,
             None => ServerConfig::default(),
         };
+        let lifecycle = match v.get("lifecycle") {
+            Some(l) => parse_lifecycle(l)?,
+            None => LifecycleConfig::default(),
+        };
         let cfg = MuseConfig {
             routing,
             predictors,
             server,
+            lifecycle,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -245,6 +332,44 @@ impl MuseConfig {
             self.server.max_batch_events >= 1,
             "server.max_batch_events must be >= 1"
         );
+        let lc = &self.lifecycle;
+        ensure!(
+            lc.alert_rate > 0.0 && lc.alert_rate < 1.0,
+            "lifecycle.alertRate must be in (0,1)"
+        );
+        ensure!(lc.delta > 0.0, "lifecycle.delta must be positive");
+        ensure!(lc.z > 0.0, "lifecycle.z must be positive");
+        ensure!(lc.sketch_k >= 8, "lifecycle.sketchK must be >= 8");
+        ensure!(lc.drift_bins >= 2, "lifecycle.driftBins must be >= 2");
+        ensure!(
+            lc.psi_threshold > 0.0 && lc.ks_threshold > 0.0,
+            "lifecycle drift thresholds must be positive"
+        );
+        ensure!(
+            lc.validation_tolerance > 0.0,
+            "lifecycle.validationTolerance must be positive"
+        );
+        ensure!(
+            lc.feed_stripes >= 1 && lc.feed_capacity >= 64,
+            "lifecycle feed needs >= 1 stripe of >= 64 cells"
+        );
+        ensure!(
+            lc.shadow_timeout_ticks >= 1,
+            "lifecycle.shadowTimeoutTicks must be >= 1"
+        );
+        // Starvation guard: the lake ring is shared by every (tenant,
+        // predictor, live/shadow) stream, so a candidate's retained
+        // mirrors plateau at its share of the ring. A cap close to
+        // minValidationSamples could keep validation gated forever.
+        if lc.enabled && self.server.lake_max_records > 0 {
+            ensure!(
+                self.server.lake_max_records >= 8 * lc.min_validation_samples,
+                "server.lakeMaxRecords ({}) must be >= 8x lifecycle.minValidationSamples ({}) \
+                 or 0 (unbounded), or shadow validation can starve",
+                self.server.lake_max_records,
+                lc.min_validation_samples
+            );
+        }
         Ok(())
     }
 }
@@ -334,6 +459,58 @@ fn parse_predictor(v: &Json) -> Result<PredictorConfig> {
     })
 }
 
+fn parse_lifecycle(v: &Json) -> Result<LifecycleConfig> {
+    let d = LifecycleConfig::default();
+    let tenants = match v.get("tenants") {
+        None => vec![],
+        Some(Json::Arr(ts)) => ts
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .map(str::to_string)
+                    .context("lifecycle.tenants entries must be strings")
+            })
+            .collect::<Result<Vec<_>>>()?,
+        Some(_) => bail!("lifecycle.tenants must be a list"),
+    };
+    let get_f64 = |k: &str, dv: f64| v.get(k).and_then(Json::as_f64).unwrap_or(dv);
+    let get_usize = |k: &str, dv: usize| v.get(k).and_then(Json::as_usize).unwrap_or(dv);
+    let get_bool = |k: &str, dv: bool| v.get(k).and_then(Json::as_bool).unwrap_or(dv);
+    Ok(LifecycleConfig {
+        enabled: get_bool("enabled", d.enabled),
+        tenants,
+        auto_discover: get_bool("autoDiscover", d.auto_discover),
+        sketch_k: get_usize("sketchK", d.sketch_k),
+        feed_stripes: get_usize("feedStripes", d.feed_stripes),
+        feed_capacity: get_usize("feedCapacity", d.feed_capacity),
+        psi_threshold: get_f64("psiThreshold", d.psi_threshold),
+        ks_threshold: get_f64("ksThreshold", d.ks_threshold),
+        drift_bins: get_usize("driftBins", d.drift_bins),
+        min_drift_samples: v
+            .get("minDriftSamples")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.min_drift_samples),
+        alert_rate: get_f64("alertRate", d.alert_rate),
+        delta: get_f64("delta", d.delta),
+        z: get_f64("z", d.z),
+        min_validation_samples: get_usize("minValidationSamples", d.min_validation_samples),
+        validation_tolerance: get_f64("validationTolerance", d.validation_tolerance),
+        shadow_timeout_ticks: v
+            .get("shadowTimeoutTicks")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.shadow_timeout_ticks as u64) as u32,
+        cooldown_ticks: v
+            .get("cooldownTicks")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.cooldown_ticks as u64) as u32,
+        check_interval_ms: v
+            .get("checkIntervalMs")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.check_interval_ms),
+        decommission_old: get_bool("decommissionOld", d.decommission_old),
+    })
+}
+
 fn parse_server(v: &Json) -> Result<ServerConfig> {
     let d = ServerConfig::default();
     Ok(ServerConfig {
@@ -356,6 +533,10 @@ fn parse_server(v: &Json) -> Result<ServerConfig> {
             .get("warmupRequests")
             .and_then(Json::as_usize)
             .unwrap_or(d.warmup_requests),
+        lake_max_records: v
+            .get("lakeMaxRecords")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.lake_max_records),
     })
 }
 
@@ -493,5 +674,77 @@ predictors:
     fn shadow_rule_requires_targets() {
         let src = "routing:\n  shadowRules:\n  - description: x\n    condition: {}\n";
         assert!(MuseConfig::from_yaml(src).is_err());
+    }
+
+    #[test]
+    fn lifecycle_defaults_are_off_but_valid() {
+        let cfg = MuseConfig::from_yaml("").unwrap();
+        assert!(!cfg.lifecycle.enabled);
+        assert!(cfg.lifecycle.auto_discover);
+        assert_eq!(cfg.lifecycle.sketch_k, 1024);
+        assert_eq!(cfg.lifecycle, LifecycleConfig::default());
+    }
+
+    #[test]
+    fn lifecycle_block_parses() {
+        let src = r#"
+lifecycle:
+  enabled: true
+  tenants: ["bank1", "bank2"]
+  autoDiscover: false
+  sketchK: 2048
+  psiThreshold: 0.3
+  ksThreshold: 0.2
+  alertRate: 0.05
+  minDriftSamples: 1024
+  validationTolerance: 0.08
+  checkIntervalMs: 250
+  decommissionOld: false
+"#;
+        let cfg = MuseConfig::from_yaml(src).unwrap();
+        let lc = &cfg.lifecycle;
+        assert!(lc.enabled);
+        assert_eq!(lc.tenants, vec!["bank1", "bank2"]);
+        assert!(!lc.auto_discover);
+        assert_eq!(lc.sketch_k, 2048);
+        assert_eq!(lc.psi_threshold, 0.3);
+        assert_eq!(lc.ks_threshold, 0.2);
+        assert_eq!(lc.alert_rate, 0.05);
+        assert_eq!(lc.min_drift_samples, 1024);
+        assert_eq!(lc.validation_tolerance, 0.08);
+        assert_eq!(lc.check_interval_ms, 250);
+        assert!(!lc.decommission_old);
+        // Unspecified knobs keep their defaults.
+        assert_eq!(lc.delta, 0.2);
+        assert_eq!(lc.cooldown_ticks, 8);
+    }
+
+    #[test]
+    fn lifecycle_rejects_degenerate_knobs() {
+        for bad in [
+            "lifecycle:\n  alertRate: 0.0\n",
+            "lifecycle:\n  alertRate: 1.5\n",
+            "lifecycle:\n  sketchK: 2\n",
+            "lifecycle:\n  driftBins: 1\n",
+            "lifecycle:\n  validationTolerance: 0.0\n",
+            "lifecycle:\n  feedCapacity: 2\n",
+            "lifecycle:\n  shadowTimeoutTicks: 0\n",
+        ] {
+            assert!(MuseConfig::from_yaml(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn lifecycle_rejects_starvable_lake_cap() {
+        // A lake ring barely larger than the validation window can
+        // keep a shadow's retained mirrors below the gate forever.
+        let bad = "server:\n  lakeMaxRecords: 1000\nlifecycle:\n  enabled: true\n";
+        let err = MuseConfig::from_yaml(bad).unwrap_err().to_string();
+        assert!(err.contains("lakeMaxRecords"), "{err}");
+        // Unbounded (0) is fine, as is a comfortably larger cap, as is
+        // the same cap with the autopilot disabled.
+        assert!(MuseConfig::from_yaml("server:\n  lakeMaxRecords: 0\nlifecycle:\n  enabled: true\n").is_ok());
+        assert!(MuseConfig::from_yaml("server:\n  lakeMaxRecords: 5000\nlifecycle:\n  enabled: true\n").is_ok());
+        assert!(MuseConfig::from_yaml("server:\n  lakeMaxRecords: 1000\n").is_ok());
     }
 }

@@ -76,10 +76,19 @@ impl<'e> ControlPlane<'e> {
         Ok(map)
     }
 
-    /// Custom per-tenant fit (Section 2.3.3): read the tenant's raw
-    /// scores for `predictor` from the data lake, check the Eq. 5
-    /// volume gate, fit empirical source quantiles against the
-    /// reference, and install atomically.
+    /// Custom per-tenant fit (Section 2.3.3): estimate the tenant's
+    /// source quantiles for `predictor`, check the Eq. 5 volume gate,
+    /// fit against the reference, and install atomically.
+    ///
+    /// When the lifecycle autopilot is tracking the pair **and** its
+    /// merged streaming sketch already satisfies the Eq. 5 bound, the
+    /// source quantiles come from the sketch — O(sketch items)
+    /// regardless of traffic volume. Otherwise (no autopilot, pair not
+    /// tracked, or the sketch was recently reset by a fit/window
+    /// rotation and holds fewer samples than Eq. 5 demands) the fit
+    /// falls back to replaying the tenant's raw scores from the data
+    /// lake — the original path, which may still hold the deeper
+    /// history the sketch no longer does.
     pub fn fit_custom_quantile(
         &self,
         predictor: &str,
@@ -89,10 +98,23 @@ impl<'e> ControlPlane<'e> {
         delta: f64,
         z: f64,
     ) -> Result<Arc<QuantileMap>> {
-        let raw = self.engine.lake.raw_scores(tenant, predictor);
         let n_points = self.engine.quantile_points;
         let refq = reference.quantile_grid(n_points);
-        let map = quantile_fit::fit_gated(&raw, &refq, alert_rate, delta, z)?.shared();
+        let need = quantile_fit::required_samples(alert_rate, delta, z)?;
+        let sketched = self
+            .engine
+            .lifecycle
+            .as_ref()
+            .and_then(|hub| hub.sketch_summary(predictor, tenant))
+            .filter(|s| s.total_weight() >= need);
+        let map = match sketched {
+            Some(summary) => summary.fit_quantile_map_gated(&refq, alert_rate, delta, z)?,
+            None => {
+                let raw = self.engine.lake.raw_scores(tenant, predictor);
+                quantile_fit::fit_gated(&raw, &refq, alert_rate, delta, z)?
+            }
+        }
+        .shared();
         self.engine
             .predictor(predictor)?
             .install_tenant_quantile(tenant, Arc::clone(&map));
@@ -364,6 +386,77 @@ predictors:
         cp.fit_custom_quantile("p1", "bank1", &reference, 0.5, 0.5, 1.0)
             .unwrap();
         assert!(engine.predictor("p1").unwrap().has_tenant_quantile("bank1"));
+    }
+
+    #[test]
+    fn custom_fit_consumes_sketch_not_lake_replay() {
+        // The autopilot's sketch is the fit source when it tracks the
+        // pair: cap the lake far below the fit's sample needs — a lake
+        // replay could not possibly fit, so success proves the sketch
+        // path. Runs on synthetic sim-dialect artifacts (no `make
+        // artifacts` needed).
+        use crate::coordinator::engine::ScoreRequest;
+        use crate::runtime::SimArtifacts;
+        let fix = SimArtifacts::in_temp().unwrap();
+        let yaml = r#"
+routing:
+  scoringRules:
+  - description: "acme dedicated"
+    condition:
+      tenants: ["acme"]
+    targetPredictorName: "duo"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "duo"
+predictors:
+- name: duo
+  experts: [s1, s2]
+  quantile: custom
+server:
+  workers: 2
+  lakeMaxRecords: 64
+lifecycle:
+  enabled: true
+  tenants: ["acme"]
+  autoDiscover: false
+  alertRate: 0.1
+  delta: 0.05
+  minValidationSamples: 8
+"#;
+        let pool = Arc::new(crate::runtime::ModelPool::new(fix.manifest().unwrap()));
+        let engine =
+            Engine::build(&MuseConfig::from_yaml(yaml).unwrap(), pool).unwrap();
+        let hub = engine.lifecycle.as_ref().unwrap();
+        hub.tick(&engine).unwrap(); // register the pair's feed
+        let mut wl = crate::simulator::Workload::new(
+            crate::simulator::TenantProfile::new("acme", 3, 0.3, 0.1),
+            9,
+        );
+        for b in 0..6 {
+            let reqs: Vec<ScoreRequest> = (0..256)
+                .map(|i| ScoreRequest {
+                    intent: Intent {
+                        tenant: "acme".into(),
+                        ..Intent::default()
+                    },
+                    entity: format!("s{b}-{i}"),
+                    features: wl.next_event().features,
+                })
+                .collect();
+            engine.score_batch(&reqs).unwrap();
+            hub.tick(&engine).unwrap();
+        }
+        // The capped lake kept only 64 records — not even one sample
+        // per quantile point — while the sketch observed ~1.5k.
+        assert_eq!(engine.lake.len(), 64);
+        let summary = hub.sketch_summary("duo", "acme").unwrap();
+        assert!(summary.total_weight() > 1000, "{}", summary.total_weight());
+        let cp = ControlPlane::new(&engine);
+        let reference = ReferenceDistribution::fraud_default();
+        cp.fit_custom_quantile("duo", "acme", &reference, 0.5, 0.5, 1.0)
+            .unwrap();
+        assert!(engine.predictor("duo").unwrap().has_tenant_quantile("acme"));
+        engine.drain_shadows();
     }
 
     #[test]

@@ -21,6 +21,7 @@ use super::snapshot::EngineSnapshot;
 use crate::config::{Intent, MuseConfig, QuantileMode};
 use crate::datalake::DataLake;
 use crate::featurestore::FeatureStore;
+use crate::lifecycle::LifecycleHub;
 use crate::metrics::{Counters, LatencyHistogram};
 use crate::runtime::ModelPool;
 use crate::transforms::{PipelineScratch, QuantileMap, ReferenceDistribution};
@@ -80,6 +81,12 @@ pub struct Engine {
     pub tenant_events: Counters,
     /// Quantile grid resolution (from the manifest).
     pub quantile_points: usize,
+    /// Lifecycle autopilot hub (`lifecycle.enabled`): the hot paths
+    /// feed raw scores into its lock-free per-worker rings (one
+    /// wait-free table load + one atomic append per event); draining,
+    /// drift scoring and the shadow→promote loop run off-path in
+    /// [`LifecycleHub::tick`].
+    pub lifecycle: Option<Arc<LifecycleHub>>,
 }
 
 impl Engine {
@@ -111,11 +118,15 @@ impl Engine {
             max_batch,
             max_batch_delay,
         )));
+        let lifecycle = config
+            .lifecycle
+            .enabled
+            .then(|| Arc::new(LifecycleHub::new(config.lifecycle.clone())));
         Ok(Engine {
             router,
             registry,
             features: FeatureStore::new(),
-            lake: Arc::new(DataLake::new()),
+            lake: Arc::new(DataLake::with_capacity(config.server.lake_max_records)),
             shadow_pool: ThreadPool::new(2.max(config.server.workers / 2)),
             snapshot,
             max_batch,
@@ -126,6 +137,7 @@ impl Engine {
             counters: Counters::new(),
             tenant_events: Counters::new(),
             quantile_points,
+            lifecycle,
         })
     }
 
@@ -208,6 +220,11 @@ impl Engine {
         let (score, raw) = entry.batcher.score(enriched, &req.intent.tenant)?;
         self.lake
             .append(&req.intent.tenant, &entry.predictor.name, score, raw, false);
+        // Feed the lifecycle sketches: wait-free table load + one
+        // atomic ring append — no lock joins the hot path here.
+        if let Some(hub) = &self.lifecycle {
+            hub.record(&entry.predictor.name, &req.intent.tenant, raw);
+        }
 
         // Mirror to shadows off the hot path.
         let shadow_count = resolution.shadows.len();
@@ -335,6 +352,9 @@ impl Engine {
             self.lake
                 .append_batch(tenant, &entry.predictor.name, &scored.scores, &scored.raw, false);
             self.tenant_events.add(tenant, n as u64);
+            if let Some(hub) = &self.lifecycle {
+                hub.record_batch(&entry.predictor.name, tenant, &scored.raw);
+            }
 
             let shadow_count = g.resolution.shadows.len();
             if shadow_count > 0 {

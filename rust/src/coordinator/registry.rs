@@ -16,6 +16,10 @@ use std::sync::{Arc, RwLock};
 pub struct PredictorRegistry {
     pool: Arc<ModelPool>,
     predictors: RwLock<HashMap<String, Arc<Predictor>>>,
+    /// Deploy-time configs, kept so control loops (the lifecycle
+    /// autopilot's shadow-candidate derivation) can re-deploy a
+    /// predictor's expert/weight/reference tuple under a new name.
+    configs: RwLock<HashMap<String, PredictorConfig>>,
     /// Bumped on every successful deploy/decommission; the engine's
     /// snapshot staleness gate compares it so registry mutations made
     /// without a routing swap still trigger a republish.
@@ -37,6 +41,7 @@ impl PredictorRegistry {
         PredictorRegistry {
             pool,
             predictors: RwLock::new(HashMap::new()),
+            configs: RwLock::new(HashMap::new()),
             generation: AtomicU64::new(0),
         }
     }
@@ -102,6 +107,10 @@ impl PredictorRegistry {
             .write()
             .unwrap()
             .insert(cfg.name.clone(), Arc::new(predictor));
+        self.configs
+            .write()
+            .unwrap()
+            .insert(cfg.name.clone(), cfg.clone());
         self.generation.fetch_add(1, Ordering::SeqCst);
         Ok(())
     }
@@ -114,6 +123,7 @@ impl PredictorRegistry {
         let Some(p) = removed else {
             bail!("predictor '{name}' is not deployed");
         };
+        self.configs.write().unwrap().remove(name);
         self.generation.fetch_add(1, Ordering::SeqCst);
         for model in p.expert_names() {
             self.pool.release(&model);
@@ -123,6 +133,11 @@ impl PredictorRegistry {
 
     pub fn get(&self, name: &str) -> Option<Arc<Predictor>> {
         self.predictors.read().unwrap().get(name).cloned()
+    }
+
+    /// The config a predictor was deployed with (cloned).
+    pub fn config(&self, name: &str) -> Option<PredictorConfig> {
+        self.configs.read().unwrap().get(name).cloned()
     }
 
     pub fn names(&self) -> Vec<String> {

@@ -4,10 +4,17 @@
 //! the response returned to the client"; the control plane later reads
 //! them back to validate distribution stability and to fit custom
 //! quantile transformations. In production this is an object-store
-//! sink; here it is an in-memory, thread-safe append-only store with
-//! the same query surface.
+//! sink; here it is an in-memory, thread-safe store with the same
+//! query surface.
+//!
+//! Retention: the lake is a bounded ring
+//! ([`DataLake::with_capacity`]) — once `cap` records are held, each
+//! append evicts the oldest. Long simulator runs used to grow the
+//! lake without bound; now that `T^Q` refits consume lifecycle
+//! sketches instead of replaying full history, the lake only needs
+//! enough depth for shadow validation and the repro harnesses.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::Mutex;
 
 /// One recorded scoring event.
@@ -28,33 +35,93 @@ pub struct Record {
 
 #[derive(Default)]
 struct Inner {
-    records: Vec<Record>,
+    records: VecDeque<Record>,
     seq: u64,
+    /// Retained records per tenant → predictor, maintained
+    /// incrementally so `count_for` is O(1) — the lifecycle
+    /// controller polls it every tick while a shadow accumulates
+    /// mirrors, and an O(records) scan here would hold the same mutex
+    /// the scoring hot path's `append` needs.
+    counts: HashMap<String, HashMap<String, usize>>,
 }
 
-/// Append-only, thread-safe data lake.
+impl Inner {
+    #[inline]
+    fn push(&mut self, record: Record, cap: usize) {
+        if cap > 0 && self.records.len() >= cap {
+            if let Some(old) = self.records.pop_front() {
+                self.dec(&old.tenant, &old.predictor);
+            }
+        }
+        // Probe with &str (no allocation on the established path);
+        // clone only the first time a pair appears.
+        match self.counts.get_mut(&record.tenant) {
+            Some(m) => match m.get_mut(&record.predictor) {
+                Some(c) => *c += 1,
+                None => {
+                    m.insert(record.predictor.clone(), 1);
+                }
+            },
+            None => {
+                let mut m = HashMap::new();
+                m.insert(record.predictor.clone(), 1);
+                self.counts.insert(record.tenant.clone(), m);
+            }
+        }
+        self.records.push_back(record);
+    }
+
+    #[inline]
+    fn dec(&mut self, tenant: &str, predictor: &str) {
+        if let Some(m) = self.counts.get_mut(tenant) {
+            if let Some(c) = m.get_mut(predictor) {
+                *c = c.saturating_sub(1);
+            }
+        }
+    }
+}
+
+/// Thread-safe data lake: append-mostly ring with a retention cap.
 #[derive(Default)]
 pub struct DataLake {
     inner: Mutex<Inner>,
+    /// Max records retained; 0 = unbounded.
+    cap: usize,
 }
 
 impl DataLake {
+    /// Unbounded lake (tests, short harnesses).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Bounded lake: once `cap` records are held, each append evicts
+    /// the oldest record (0 = unbounded).
+    pub fn with_capacity(cap: usize) -> Self {
+        DataLake {
+            inner: Mutex::new(Inner::default()),
+            cap,
+        }
+    }
+
+    /// The configured retention cap (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     pub fn append(&self, tenant: &str, predictor: &str, score: f64, raw_score: f64, shadow: bool) {
         let mut inner = self.inner.lock().unwrap();
         let seq = inner.seq;
         inner.seq += 1;
-        inner.records.push(Record {
+        let record = Record {
             tenant: tenant.to_string(),
             predictor: predictor.to_string(),
             score,
             raw_score,
             shadow,
             seq,
-        });
+        };
+        inner.push(record, self.cap);
     }
 
     /// Append a whole scored batch (one lock acquisition, contiguous
@@ -69,18 +136,18 @@ impl DataLake {
     ) {
         debug_assert_eq!(scores.len(), raw_scores.len());
         let mut inner = self.inner.lock().unwrap();
-        inner.records.reserve(scores.len());
         for (&score, &raw_score) in scores.iter().zip(raw_scores) {
             let seq = inner.seq;
             inner.seq += 1;
-            inner.records.push(Record {
+            let record = Record {
                 tenant: tenant.to_string(),
                 predictor: predictor.to_string(),
                 score,
                 raw_score,
                 shadow,
                 seq,
-            });
+            };
+            inner.push(record, self.cap);
         }
     }
 
@@ -117,6 +184,22 @@ impl DataLake {
             .collect()
     }
 
+    /// Number of retained records for a tenant/predictor pair — O(1)
+    /// from the incrementally maintained per-pair counts (the
+    /// lifecycle controller polls this every tick while a shadow
+    /// accumulates mirrors; scanning the ring here would stall
+    /// hot-path appends behind the same mutex).
+    pub fn count_for(&self, tenant: &str, predictor: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .counts
+            .get(tenant)
+            .and_then(|m| m.get(predictor))
+            .copied()
+            .unwrap_or(0)
+    }
+
     /// Count of records per (tenant, predictor, shadow-flag).
     pub fn counts(&self) -> BTreeMap<(String, String, bool), usize> {
         let mut out = BTreeMap::new();
@@ -132,6 +215,9 @@ impl DataLake {
         let mut inner = self.inner.lock().unwrap();
         let before = inner.records.len();
         inner.records.retain(|r| r.predictor != predictor);
+        for m in inner.counts.values_mut() {
+            m.remove(predictor);
+        }
         before - inner.records.len()
     }
 }
@@ -166,8 +252,8 @@ mod tests {
         assert_eq!(a.final_scores("t", "p"), b.final_scores("t", "p"));
         assert_eq!(a.raw_scores("t", "p"), b.raw_scores("t", "p"));
         let inner = a.inner.lock().unwrap();
-        for w in inner.records.windows(2) {
-            assert_eq!(w[1].seq, w[0].seq + 1, "batch seq must stay contiguous");
+        for (prev, next) in inner.records.iter().zip(inner.records.iter().skip(1)) {
+            assert_eq!(next.seq, prev.seq + 1, "batch seq must stay contiguous");
         }
     }
 
@@ -178,9 +264,62 @@ mod tests {
             lake.append("t", "p", i as f64, 0.0, false);
         }
         let inner = lake.inner.lock().unwrap();
-        for w in inner.records.windows(2) {
-            assert!(w[1].seq > w[0].seq);
+        for (prev, next) in inner.records.iter().zip(inner.records.iter().skip(1)) {
+            assert!(next.seq > prev.seq);
         }
+    }
+
+    #[test]
+    fn retention_cap_evicts_oldest() {
+        let lake = DataLake::with_capacity(100);
+        assert_eq!(lake.capacity(), 100);
+        for i in 0..350 {
+            lake.append("t", "p", i as f64 / 350.0, i as f64, false);
+        }
+        assert_eq!(lake.len(), 100, "cap must bound the lake");
+        // Survivors are the newest 100, in order, seq intact.
+        let raws = lake.raw_scores("t", "p");
+        assert_eq!(raws[0], 250.0);
+        assert_eq!(raws[99], 349.0);
+        let inner = lake.inner.lock().unwrap();
+        assert_eq!(inner.records.front().unwrap().seq, 250);
+        assert_eq!(inner.records.back().unwrap().seq, 349);
+    }
+
+    #[test]
+    fn retention_cap_applies_to_batches() {
+        let lake = DataLake::with_capacity(64);
+        let scores: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        lake.append_batch("t", "p", &scores, &scores, false);
+        lake.append_batch("t", "p", &scores, &scores, true);
+        assert_eq!(lake.len(), 64);
+        // Oldest live records evicted first; all 50 shadow records
+        // (newest) retained plus the last 14 live ones.
+        let counts = lake.counts();
+        assert_eq!(counts[&("t".into(), "p".into(), true)], 50);
+        assert_eq!(counts[&("t".into(), "p".into(), false)], 14);
+        assert_eq!(lake.count_for("t", "p"), 64);
+    }
+
+    #[test]
+    fn zero_capacity_means_unbounded() {
+        let lake = DataLake::with_capacity(0);
+        for i in 0..5000 {
+            lake.append("t", "p", 0.0, i as f64, false);
+        }
+        assert_eq!(lake.len(), 5000);
+    }
+
+    #[test]
+    fn count_for_filters_pairs() {
+        let lake = DataLake::new();
+        lake.append("a", "p", 0.1, 0.1, false);
+        lake.append("a", "q", 0.2, 0.2, false);
+        lake.append("b", "p", 0.3, 0.3, true);
+        assert_eq!(lake.count_for("a", "p"), 1);
+        assert_eq!(lake.count_for("a", "q"), 1);
+        assert_eq!(lake.count_for("b", "p"), 1);
+        assert_eq!(lake.count_for("c", "p"), 0);
     }
 
     #[test]
@@ -202,6 +341,26 @@ mod tests {
         assert_eq!(lake.purge_predictor("old"), 1);
         assert_eq!(lake.len(), 1);
         assert_eq!(lake.raw_scores("t", "new").len(), 1);
+        // The O(1) pair counts track the purge.
+        assert_eq!(lake.count_for("t", "old"), 0);
+        assert_eq!(lake.count_for("t", "new"), 1);
+    }
+
+    #[test]
+    fn count_for_stays_consistent_under_eviction() {
+        // The incrementally maintained counts must agree with a full
+        // scan after interleaved appends from two pairs roll through
+        // the retention cap.
+        let lake = DataLake::with_capacity(50);
+        for i in 0..200 {
+            let pred = if i % 3 == 0 { "a" } else { "b" };
+            lake.append("t", pred, 0.0, i as f64, false);
+        }
+        let scan_a = lake.raw_scores("t", "a").len();
+        let scan_b = lake.raw_scores("t", "b").len();
+        assert_eq!(lake.count_for("t", "a"), scan_a);
+        assert_eq!(lake.count_for("t", "b"), scan_b);
+        assert_eq!(scan_a + scan_b, 50);
     }
 
     #[test]

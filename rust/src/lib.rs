@@ -31,6 +31,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datalake;
 pub mod featurestore;
+pub mod lifecycle;
 pub mod metrics;
 pub mod repro;
 pub mod runtime;

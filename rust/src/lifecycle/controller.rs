@@ -1,0 +1,758 @@
+//! The lifecycle autopilot: a background state machine per managed
+//! (predictor, tenant) pair that closes the paper's Fig. 3 loop
+//! without a human in it —
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────────┐
+//!            ▼                (validation fails: cooldown)    │
+//!  Observing ──drift──▶ FitReady ──Eq.5──▶ ShadowDeployed ────┤
+//!      ▲                 (refit T^Q                │pass      │
+//!      │                  from sketch)             ▼          │
+//!      └──── baseline ◀── Promoted ◀──────── Validated        │
+//!            rotated        ▲ (routing swap, COW snapshot)    │
+//!                           └─────────────────────────────────┘
+//! ```
+//!
+//! * **Observing** — live raw scores stream from the data plane into
+//!   per-worker [`ScoreFeed`] rings, drained each tick into sketches.
+//!   With no baseline yet, the pair waits for the Eq. 5 sample gate
+//!   and installs the *initial* custom `T^Q` directly (the paper's
+//!   Section 3.1 first-fit promotion). With a baseline, tumbling
+//!   detection windows are PSI/KS-scored against the distribution
+//!   frozen at the last fit.
+//! * **FitReady** — drift confirmed; the pair collects a fresh
+//!   post-drift sketch until Eq. 5 is satisfied, then refits the
+//!   tenant's `T^Q` from the sketch (O(sketch), not O(events)) and
+//!   shadow-deploys a candidate predictor carrying it.
+//! * **ShadowDeployed** — the existing mirroring machinery feeds the
+//!   candidate; once enough mirrored responses accumulate,
+//!   `validate_shadow` checks distribution stability. Failure tears
+//!   the candidate down and returns to Observing under cooldown.
+//! * **Validated → Promoted** — `promote` rewrites the tenant's
+//!   scoring rule server-side (one COW snapshot publication, traffic
+//!   never pauses), the baseline rotates to the fit distribution, and
+//!   the loop re-arms. The replaced predictor is decommissioned when
+//!   no routing rule references it anymore (configurable).
+//!
+//! The hub side ([`LifecycleHub`]) is the data-plane contract: one
+//! wait-free feed-table load plus one atomic ring append per scored
+//! event, no locks (`EXPERIMENTS.md` "Lifecycle autopilot" measures
+//! the overhead). Everything else — draining, sketch merging, drift
+//! scoring, control-plane calls — happens at tick rate on a
+//! background thread ([`spawn_controller`]) or via
+//! `POST /v1/lifecycle/check`.
+
+use super::drift::DriftDetector;
+use super::sketch::{QuantileSketch, ScoreFeed, SketchSummary};
+use crate::config::LifecycleConfig;
+use crate::coordinator::{ControlPlane, Engine};
+use crate::transforms::quantile_fit;
+use anyhow::{anyhow, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Marker splitting an autopilot candidate name from its root
+/// predictor (`root--lc<seq>-<tenant>`).
+const CANDIDATE_MARKER: &str = "--lc";
+
+/// The per-pair control state (see the module diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleState {
+    Observing,
+    FitReady,
+    ShadowDeployed,
+    Validated,
+    Promoted,
+}
+
+impl LifecycleState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LifecycleState::Observing => "observing",
+            LifecycleState::FitReady => "fit_ready",
+            LifecycleState::ShadowDeployed => "shadow_deployed",
+            LifecycleState::Validated => "validated",
+            LifecycleState::Promoted => "promoted",
+        }
+    }
+}
+
+/// One managed (tenant → live predictor) pair.
+struct PairState {
+    tenant: String,
+    /// The predictor currently serving the tenant's live traffic.
+    predictor: String,
+    state: LifecycleState,
+    /// Fit accumulator: initial calibration (no baseline yet) and the
+    /// post-drift refit sample (FitReady).
+    fit_acc: QuantileSketch,
+    /// Tumbling drift-detection window (Observing with a baseline).
+    window: QuantileSketch,
+    /// Raw-score distribution frozen at the last installed fit.
+    frozen: Option<SketchSummary>,
+    /// The summary the current candidate was fitted from; becomes the
+    /// new baseline on promotion.
+    fit_summary: Option<SketchSummary>,
+    shadow: Option<String>,
+    /// Ticks spent waiting in ShadowDeployed (starvation guard).
+    shadow_ticks: u32,
+    cooldown: u32,
+    candidate_seq: u64,
+    last_psi: f64,
+    last_ks: f64,
+    fits: u64,
+    promotions: u64,
+    validation_failures: u64,
+    dropped_samples: u64,
+    last_error: Option<String>,
+}
+
+impl PairState {
+    fn new(tenant: &str, predictor: &str, cfg: &LifecycleConfig) -> PairState {
+        // Deterministic per-tenant sketch seeds keep runs reproducible.
+        let seed = tenant.bytes().fold(0xD81F_5EEDu64, |h, b| {
+            h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
+        });
+        PairState {
+            tenant: tenant.to_string(),
+            predictor: predictor.to_string(),
+            state: LifecycleState::Observing,
+            fit_acc: QuantileSketch::with_seed(cfg.sketch_k, seed),
+            window: QuantileSketch::with_seed(cfg.sketch_k, seed ^ 0xFF),
+            frozen: None,
+            fit_summary: None,
+            shadow: None,
+            shadow_ticks: 0,
+            cooldown: 0,
+            candidate_seq: 0,
+            last_psi: 0.0,
+            last_ks: 0.0,
+            fits: 0,
+            promotions: 0,
+            validation_failures: 0,
+            dropped_samples: 0,
+            last_error: None,
+        }
+    }
+
+    /// Which sketch is currently fed by the drain.
+    fn draining_into_fit(&self) -> bool {
+        matches!(self.state, LifecycleState::FitReady)
+            || (self.state == LifecycleState::Observing && self.frozen.is_none())
+    }
+}
+
+/// Public snapshot of one pair, for `/v1/lifecycle` and tests.
+#[derive(Debug, Clone)]
+pub struct PairStatus {
+    pub tenant: String,
+    pub predictor: String,
+    pub state: LifecycleState,
+    pub fit_samples: u64,
+    pub window_samples: u64,
+    pub baseline_frozen: bool,
+    pub shadow: Option<String>,
+    pub psi: f64,
+    pub ks: f64,
+    pub fits: u64,
+    pub promotions: u64,
+    pub validation_failures: u64,
+    pub dropped_samples: u64,
+    pub last_error: Option<String>,
+}
+
+/// Outcome of one controller tick.
+#[derive(Debug, Clone)]
+pub struct TickReport {
+    pub pairs: Vec<PairStatus>,
+}
+
+/// Feed lookup table published copy-on-write: predictor → tenant →
+/// ring. Immutable once published, so the hot path probes it without
+/// locks (`Arc<str>: Borrow<str>` lets `&str` keys probe without
+/// allocating).
+type FeedTable = HashMap<Arc<str>, HashMap<Arc<str>, Arc<ScoreFeed>>>;
+
+/// The lifecycle hub: hot-path feed surface + background pair state.
+pub struct LifecycleHub {
+    cfg: LifecycleConfig,
+    feeds: crate::util::swap::SnapCell<FeedTable>,
+    /// Keyed by tenant; background/tick side only.
+    pairs: Mutex<BTreeMap<String, PairState>>,
+}
+
+impl LifecycleHub {
+    pub fn new(cfg: LifecycleConfig) -> LifecycleHub {
+        LifecycleHub {
+            cfg,
+            feeds: crate::util::swap::SnapCell::new(Arc::new(FeedTable::new())),
+            pairs: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> &LifecycleConfig {
+        &self.cfg
+    }
+
+    /// Hot-path record: one wait-free feed-table load, two immutable
+    /// map probes, one atomic ring append. Unregistered pairs are
+    /// ignored (the controller registers them on its next tick).
+    #[inline]
+    pub fn record(&self, predictor: &str, tenant: &str, raw: f64) {
+        let table = self.feeds.load();
+        if let Some(feed) = table.get(predictor).and_then(|m| m.get(tenant)) {
+            feed.push(raw);
+        }
+    }
+
+    /// Batch-path record: the feed is resolved once per (batch,
+    /// tenant) group, appends are one atomic each.
+    pub fn record_batch(&self, predictor: &str, tenant: &str, raws: &[f64]) {
+        let table = self.feeds.load();
+        if let Some(feed) = table.get(predictor).and_then(|m| m.get(tenant)) {
+            for &r in raws {
+                feed.push(r);
+            }
+        }
+    }
+
+    /// Merged live sketch for a pair (everything observed since the
+    /// last fit) — the control plane's `fit_custom_quantile` consumes
+    /// this instead of replaying the data lake when the autopilot is
+    /// tracking the pair.
+    pub fn sketch_summary(&self, predictor: &str, tenant: &str) -> Option<SketchSummary> {
+        let pairs = self.pairs.lock().unwrap();
+        let pair = pairs.get(tenant)?;
+        if pair.predictor != predictor {
+            return None;
+        }
+        let mut merged = pair.fit_acc.clone();
+        merged.merge(&pair.window);
+        if merged.is_empty() {
+            None
+        } else {
+            Some(merged.summary())
+        }
+    }
+
+    /// Current pair statuses without advancing anything.
+    pub fn status(&self) -> Vec<PairStatus> {
+        self.pairs.lock().unwrap().values().map(pair_status).collect()
+    }
+
+    /// Run one controller pass: discover managed pairs, drain feeds
+    /// into sketches, advance every pair's state machine, reconcile
+    /// the feed table. Errors on one pair are recorded on that pair
+    /// and do not abort the others.
+    pub fn tick(&self, engine: &Engine) -> Result<TickReport> {
+        let required = quantile_fit::required_samples(
+            self.cfg.alert_rate,
+            self.cfg.delta,
+            self.cfg.z,
+        )?;
+        let detector = DriftDetector {
+            psi_threshold: self.cfg.psi_threshold,
+            ks_threshold: self.cfg.ks_threshold,
+            bins: self.cfg.drift_bins,
+        };
+        let snap = engine.load_snapshot();
+        let mut pairs = self.pairs.lock().unwrap();
+
+        // 1. Discover managed tenants and their live predictors.
+        let mut tenants: Vec<String> = self.cfg.tenants.clone();
+        if self.cfg.auto_discover {
+            for rule in &snap.routing.scoring_rules {
+                for t in &rule.condition.tenants {
+                    if !tenants.contains(t) {
+                        tenants.push(t.clone());
+                    }
+                }
+            }
+        }
+        for tenant in &tenants {
+            let intent = crate::config::Intent {
+                tenant: tenant.clone(),
+                ..Default::default()
+            };
+            let Ok(res) = crate::coordinator::Router::resolve_in(&snap.routing, &intent) else {
+                continue; // unroutable tenant: nothing to manage
+            };
+            let pair = pairs
+                .entry(tenant.clone())
+                .or_insert_with(|| PairState::new(tenant, &res.live, &self.cfg));
+            // External reroute/promotion: follow the routing truth.
+            // Mid-transition the autopilot owns the routing change, so
+            // only re-sync while Observing.
+            if pair.state == LifecycleState::Observing && pair.predictor != &*res.live {
+                pair.predictor = res.live.to_string();
+            }
+        }
+
+        // 2. Drain feeds into the state-appropriate sketch.
+        let table = self.feeds.load();
+        for pair in pairs.values_mut() {
+            let Some(feed) = table
+                .get(pair.predictor.as_str())
+                .and_then(|m| m.get(pair.tenant.as_str()))
+            else {
+                continue; // registered below; samples start next tick
+            };
+            let stats = if pair.draining_into_fit() {
+                let sink = &mut pair.fit_acc;
+                feed.drain(|v| sink.insert(v))
+            } else {
+                let sink = &mut pair.window;
+                feed.drain(|v| sink.insert(v))
+            };
+            pair.dropped_samples += stats.dropped;
+            if stats.dropped > 0 {
+                engine.counters.add("lifecycle_samples_dropped", stats.dropped);
+            }
+        }
+
+        // 3. Advance the state machines.
+        for pair in pairs.values_mut() {
+            if let Err(e) = advance_pair(engine, &self.cfg, &detector, required, pair) {
+                pair.last_error = Some(format!("{e:#}"));
+                engine.counters.inc("lifecycle_errors");
+            }
+        }
+
+        // 4. Reconcile the feed table with the (possibly promoted)
+        //    live predictor set. One COW publish when anything changed.
+        let desired: Vec<(String, String)> = pairs
+            .values()
+            .map(|p| (p.predictor.clone(), p.tenant.clone()))
+            .collect();
+        drop(pairs);
+        self.reconcile_feeds(&desired);
+
+        engine.counters.inc("lifecycle_ticks");
+        Ok(TickReport { pairs: self.status() })
+    }
+
+    fn reconcile_feeds(&self, desired: &[(String, String)]) {
+        self.feeds.rcu(|old| {
+            let mut changed = false;
+            let mut next: FeedTable = FeedTable::new();
+            for (pred, tenant) in desired {
+                let existing = old
+                    .get(pred.as_str())
+                    .and_then(|m| m.get(tenant.as_str()))
+                    .cloned();
+                let feed = match existing {
+                    Some(f) => f,
+                    None => {
+                        changed = true;
+                        Arc::new(ScoreFeed::new(self.cfg.feed_stripes, self.cfg.feed_capacity))
+                    }
+                };
+                next.entry(Arc::from(pred.as_str()))
+                    .or_default()
+                    .insert(Arc::from(tenant.as_str()), feed);
+            }
+            let dropped_any = old
+                .iter()
+                .any(|(p, m)| m.keys().any(|t| {
+                    !desired.iter().any(|(dp, dt)| dp == &**p && dt == &**t)
+                }));
+            if changed || dropped_any {
+                (Arc::new(next), ())
+            } else {
+                (Arc::clone(old), ())
+            }
+        });
+    }
+}
+
+fn pair_status(p: &PairState) -> PairStatus {
+    PairStatus {
+        tenant: p.tenant.clone(),
+        predictor: p.predictor.clone(),
+        state: p.state,
+        fit_samples: p.fit_acc.count(),
+        window_samples: p.window.count(),
+        baseline_frozen: p.frozen.is_some(),
+        shadow: p.shadow.clone(),
+        psi: p.last_psi,
+        ks: p.last_ks,
+        fits: p.fits,
+        promotions: p.promotions,
+        validation_failures: p.validation_failures,
+        dropped_samples: p.dropped_samples,
+        last_error: p.last_error.clone(),
+    }
+}
+
+/// The reference distribution a pair validates and fits against: the
+/// live predictor's configured reference.
+fn pair_reference(engine: &Engine, predictor: &str) -> crate::transforms::ReferenceDistribution {
+    match engine.registry.config(predictor) {
+        Some(cfg) => Engine::reference(&cfg.reference),
+        None => Engine::reference("fraud-default"),
+    }
+}
+
+fn candidate_name(pair: &PairState) -> String {
+    let root = pair
+        .predictor
+        .split(CANDIDATE_MARKER)
+        .next()
+        .unwrap_or(&pair.predictor);
+    format!(
+        "{root}{CANDIDATE_MARKER}{}-{}",
+        pair.candidate_seq, pair.tenant
+    )
+}
+
+fn advance_pair(
+    engine: &Engine,
+    cfg: &LifecycleConfig,
+    detector: &DriftDetector,
+    required: u64,
+    pair: &mut PairState,
+) -> Result<()> {
+    let cp = ControlPlane::new(engine);
+    match pair.state {
+        LifecycleState::Observing => {
+            if pair.cooldown > 0 {
+                pair.cooldown -= 1;
+                return Ok(());
+            }
+            match &pair.frozen {
+                None => {
+                    // Initial calibration: first custom T^Q, installed
+                    // directly once Eq. 5 is satisfied (Section 3.1).
+                    if pair.fit_acc.count() >= required {
+                        let summary = pair.fit_acc.summary();
+                        let refq = pair_reference(engine, &pair.predictor)
+                            .quantile_grid(engine.quantile_points);
+                        let map = summary
+                            .fit_quantile_map(&refq)
+                            .context("initial sketch fit")?;
+                        engine
+                            .predictor(&pair.predictor)?
+                            .install_tenant_quantile(&pair.tenant, map.shared());
+                        pair.frozen = Some(summary);
+                        pair.fit_acc.reset();
+                        pair.window.reset();
+                        pair.fits += 1;
+                        pair.last_error = None;
+                        engine.counters.inc("lifecycle_fits");
+                    }
+                }
+                Some(frozen) => {
+                    if pair.window.count() >= cfg.min_drift_samples {
+                        let report = detector.evaluate(frozen, &pair.window.summary());
+                        pair.last_psi = report.psi;
+                        pair.last_ks = report.ks;
+                        pair.window.reset();
+                        if report.drifted {
+                            engine.counters.inc("lifecycle_drift_detected");
+                            // Collect a *pure* post-drift sample for
+                            // the refit.
+                            pair.fit_acc.reset();
+                            pair.state = LifecycleState::FitReady;
+                        }
+                    }
+                }
+            }
+        }
+        LifecycleState::FitReady => {
+            if pair.fit_acc.count() >= required {
+                let summary = pair.fit_acc.summary();
+                let refq =
+                    pair_reference(engine, &pair.predictor).quantile_grid(engine.quantile_points);
+                let map = summary
+                    .fit_quantile_map(&refq)
+                    .context("post-drift sketch refit")?
+                    .shared();
+                let mut candidate = engine
+                    .registry
+                    .config(&pair.predictor)
+                    .ok_or_else(|| anyhow!("no deploy config for '{}'", pair.predictor))?;
+                pair.candidate_seq += 1;
+                candidate.name = candidate_name(pair);
+                cp.shadow_deploy(&candidate, &pair.tenant, map)
+                    .with_context(|| format!("shadow deploy '{}'", candidate.name))?;
+                pair.shadow = Some(candidate.name);
+                pair.fit_summary = Some(summary);
+                pair.shadow_ticks = 0;
+                pair.fits += 1;
+                pair.last_error = None;
+                engine.counters.inc("lifecycle_fits");
+                pair.state = LifecycleState::ShadowDeployed;
+            }
+        }
+        LifecycleState::ShadowDeployed => {
+            let shadow = pair.shadow.clone().ok_or_else(|| anyhow!("state lost shadow"))?;
+            let mirrored = engine.lake.count_for(&pair.tenant, &shadow);
+            if mirrored >= cfg.min_validation_samples {
+                pair.shadow_ticks = 0;
+                let reference = pair_reference(engine, &pair.predictor);
+                let v = cp.validate_shadow(
+                    &shadow,
+                    &pair.tenant,
+                    &reference,
+                    cfg.min_validation_samples,
+                    cfg.validation_tolerance,
+                )?;
+                if v.pass {
+                    pair.state = LifecycleState::Validated;
+                } else {
+                    // No promote: tear the candidate down, re-arm
+                    // under cooldown (baseline unchanged — the drift
+                    // is still real, the fit just didn't validate).
+                    cp.decommission(&shadow)
+                        .with_context(|| format!("tear down failed candidate '{shadow}'"))?;
+                    pair.shadow = None;
+                    pair.fit_summary = None;
+                    pair.validation_failures += 1;
+                    pair.cooldown = cfg.cooldown_ticks;
+                    pair.window.reset();
+                    pair.state = LifecycleState::Observing;
+                    engine.counters.inc("lifecycle_validation_failures");
+                }
+            } else {
+                // Starvation guard: the shared lake ring may never
+                // retain enough of this tenant's mirrors (retention
+                // evicts them as fast as they land). Don't hold a
+                // candidate — and its containers and mirror traffic —
+                // hostage forever.
+                pair.shadow_ticks += 1;
+                if pair.shadow_ticks >= cfg.shadow_timeout_ticks {
+                    cp.decommission(&shadow)
+                        .with_context(|| format!("tear down starved candidate '{shadow}'"))?;
+                    pair.shadow = None;
+                    pair.fit_summary = None;
+                    pair.shadow_ticks = 0;
+                    pair.cooldown = cfg.cooldown_ticks;
+                    pair.window.reset();
+                    pair.state = LifecycleState::Observing;
+                    pair.last_error = Some(format!(
+                        "shadow '{shadow}' starved: {mirrored}/{} mirrored samples after {} ticks",
+                        cfg.min_validation_samples, cfg.shadow_timeout_ticks
+                    ));
+                    engine.counters.inc("lifecycle_shadow_timeouts");
+                }
+            }
+        }
+        LifecycleState::Validated => {
+            let shadow = pair.shadow.clone().ok_or_else(|| anyhow!("state lost shadow"))?;
+            cp.promote(&pair.tenant, &shadow)
+                .with_context(|| format!("promote '{shadow}' for '{}'", pair.tenant))?;
+            pair.promotions += 1;
+            engine.counters.inc("lifecycle_promotions");
+            pair.state = LifecycleState::Promoted;
+        }
+        LifecycleState::Promoted => {
+            let shadow = pair.shadow.take().ok_or_else(|| anyhow!("state lost shadow"))?;
+            let old = std::mem::replace(&mut pair.predictor, shadow);
+            // The candidate was fitted on the post-drift distribution:
+            // that summary *is* the new baseline.
+            pair.frozen = pair.fit_summary.take().or(pair.frozen.take());
+            pair.fit_acc.reset();
+            pair.window.reset();
+            // Re-arm FIRST: the rotation above already consumed the
+            // shadow, so any error from here on must not leave the
+            // pair wedged in Promoted (where every tick would fail on
+            // the missing shadow forever).
+            pair.state = LifecycleState::Observing;
+            if cfg.decommission_old && old != pair.predictor {
+                let routing = engine.router.snapshot();
+                let referenced = routing
+                    .scoring_rules
+                    .iter()
+                    .any(|r| &*r.target_predictor == old)
+                    || routing
+                        .shadow_rules
+                        .iter()
+                        .any(|r| r.target_predictors.iter().any(|t| &**t == old));
+                if !referenced {
+                    // Best-effort: a lost race with an operator's own
+                    // decommission is bookkeeping, not a loop failure
+                    // — count it, never fail the pair over it.
+                    match cp.decommission(&old) {
+                        Ok(()) => engine.counters.inc("lifecycle_decommissions"),
+                        Err(_) => engine.counters.inc("lifecycle_decommission_races"),
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Intent, MuseConfig};
+    use crate::coordinator::ScoreRequest;
+    use crate::runtime::{ModelPool, SimArtifacts};
+
+    fn sim_engine(yaml: &str) -> (SimArtifacts, Engine) {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let pool = Arc::new(ModelPool::new(fix.manifest().unwrap()));
+        let engine = Engine::build(&MuseConfig::from_yaml(yaml).unwrap(), pool).unwrap();
+        (fix, engine)
+    }
+
+    const AUTO_CFG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "p"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s1]
+  quantile: identity
+lifecycle:
+  enabled: true
+"#;
+
+    #[test]
+    fn candidate_names_strip_prior_suffixes() {
+        let cfg = crate::config::LifecycleConfig::default();
+        let mut pair = PairState::new("acme", "base", &cfg);
+        pair.candidate_seq = 1;
+        assert_eq!(candidate_name(&pair), "base--lc1-acme");
+        pair.predictor = "base--lc1-acme".into();
+        pair.candidate_seq = 2;
+        assert_eq!(candidate_name(&pair), "base--lc2-acme");
+    }
+
+    #[test]
+    fn record_without_registration_is_a_safe_noop() {
+        let hub = LifecycleHub::new(crate::config::LifecycleConfig::default());
+        hub.record("ghost", "nobody", 0.5);
+        hub.record_batch("ghost", "nobody", &[0.1, 0.2]);
+        assert!(hub.status().is_empty());
+        assert!(hub.sketch_summary("ghost", "nobody").is_none());
+    }
+
+    #[test]
+    fn tick_autodiscovers_rule_tenants_and_wires_feeds() {
+        let (_fix, engine) = sim_engine(AUTO_CFG);
+        let hub = engine.lifecycle.as_ref().unwrap();
+        // First tick: pair discovered from the scoring rule's tenant
+        // condition, feed registered at the end of the pass.
+        hub.tick(&engine).unwrap();
+        let status = hub.status();
+        assert_eq!(status.len(), 1);
+        assert_eq!(status[0].tenant, "bank1");
+        assert_eq!(status[0].predictor, "p");
+        assert_eq!(status[0].state, LifecycleState::Observing);
+        assert_eq!(status[0].fit_samples, 0);
+
+        // Scored traffic now lands in the ring; the next tick drains
+        // it into the pair's fit accumulator (no baseline yet).
+        let d = engine.predictor("p").unwrap().feature_dim();
+        for i in 0..5 {
+            engine
+                .score(&ScoreRequest {
+                    intent: Intent {
+                        tenant: "bank1".into(),
+                        ..Intent::default()
+                    },
+                    entity: format!("e{i}"),
+                    features: vec![0.05 * i as f32; d],
+                })
+                .unwrap();
+        }
+        hub.tick(&engine).unwrap();
+        let status = hub.status();
+        assert_eq!(status[0].fit_samples, 5, "{status:?}");
+        assert_eq!(status[0].dropped_samples, 0);
+        assert_eq!(engine.counters.get("lifecycle_ticks"), 2);
+        // Catch-all traffic from unmanaged tenants is not tracked.
+        engine
+            .score(&ScoreRequest {
+                intent: Intent {
+                    tenant: "stranger".into(),
+                    ..Intent::default()
+                },
+                entity: "x".into(),
+                features: vec![0.0; d],
+            })
+            .unwrap();
+        hub.tick(&engine).unwrap();
+        assert_eq!(hub.status().len(), 1, "stranger must not be managed");
+        engine.drain_shadows();
+    }
+
+    #[test]
+    fn reconcile_preserves_live_feeds_across_ticks() {
+        let (_fix, engine) = sim_engine(AUTO_CFG);
+        let hub = engine.lifecycle.as_ref().unwrap();
+        hub.tick(&engine).unwrap();
+        let t1 = hub.feeds.load();
+        let f1 = t1.get("p").and_then(|m| m.get("bank1")).cloned().unwrap();
+        hub.tick(&engine).unwrap();
+        let t2 = hub.feeds.load();
+        let f2 = t2.get("p").and_then(|m| m.get("bank1")).cloned().unwrap();
+        assert!(
+            Arc::ptr_eq(&f1, &f2),
+            "reconcile must not replace a live feed (in-flight samples would be lost)"
+        );
+    }
+}
+
+/// Handle to the background controller thread.
+pub struct LifecycleController {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LifecycleController {
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for LifecycleController {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn the autopilot loop: one [`LifecycleHub::tick`] every
+/// `lifecycle.checkIntervalMs`. Errors are recorded on the pair (and
+/// in `lifecycle_errors`) — the loop never dies on a failed tick.
+pub fn spawn_controller(engine: Arc<Engine>) -> Result<LifecycleController> {
+    let hub = engine
+        .lifecycle
+        .clone()
+        .ok_or_else(|| anyhow!("lifecycle is not enabled in the config"))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_t = Arc::clone(&stop);
+    let interval = Duration::from_millis(hub.config().check_interval_ms.max(1));
+    let thread = std::thread::Builder::new()
+        .name("lifecycle-controller".into())
+        .spawn(move || {
+            while !stop_t.load(Ordering::SeqCst) {
+                let _ = hub.tick(&engine);
+                // Sleep in small slices so stop() is prompt.
+                let mut left = interval;
+                while !stop_t.load(Ordering::SeqCst) && left > Duration::ZERO {
+                    let step = left.min(Duration::from_millis(50));
+                    std::thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
+            }
+        })
+        .context("spawn lifecycle controller")?;
+    Ok(LifecycleController {
+        stop,
+        thread: Some(thread),
+    })
+}

@@ -1,0 +1,236 @@
+//! Drift detection over sketched score distributions: PSI and KS
+//! statistics between the live window and the distribution frozen at
+//! the last `T^Q` fit, plus the Eq. 5 fit-readiness gate.
+//!
+//! The comparison is *sketch vs sketch*: both sides are
+//! [`SketchSummary`] views, so a drift check costs O(retained items),
+//! never O(events). PSI bins are the frozen distribution's own
+//! quantile edges (equal-mass bins), which makes the expected share
+//! exactly `1/bins` and concentrates sensitivity where the baseline
+//! actually has mass — the standard population-stability construction.
+//!
+//! Interpretation conventions (industry-standard PSI bands): < 0.1 no
+//! shift, 0.1–0.25 moderate, > 0.25 significant. The default
+//! controller threshold sits at 0.25; KS (max CDF gap) defaults to
+//! 0.15. Both must be cheap enough to run every controller tick.
+
+use super::sketch::SketchSummary;
+use crate::transforms::quantile_fit::required_samples;
+use anyhow::Result;
+
+/// Floor for observed/expected shares so empty bins contribute a
+/// large-but-finite PSI term instead of ±∞.
+const SHARE_FLOOR: f64 = 1e-4;
+
+/// Population Stability Index of `live` against `baseline` over
+/// `bins` equal-mass baseline bins (`(o - e) ln(o/e)` per bin, all
+/// terms ≥ 0, summed). Bin edges come from the baseline's quantiles;
+/// the expected share is the baseline's *actual* CDF mass between the
+/// edges (≈ `1/bins` for continuous baselines, but exact under heavy
+/// ties, where equal-mass edges collapse — score distributions pile
+/// up near 0 in fraud workloads, and identical tie-heavy
+/// distributions must yield PSI ≈ 0, not a false alarm).
+pub fn psi(baseline: &SketchSummary, live: &SketchSummary, bins: usize) -> f64 {
+    assert!(bins >= 2);
+    if baseline.is_empty() || live.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut prev_edge = f64::NEG_INFINITY;
+    let mut prev_base_cdf = 0.0;
+    let mut prev_live_cdf = 0.0;
+    for b in 1..=bins {
+        let (edge, base_cdf, live_cdf) = if b == bins {
+            (f64::INFINITY, 1.0, 1.0)
+        } else {
+            let e = baseline.quantile(b as f64 / bins as f64);
+            (e, baseline.cdf(e), live.cdf(e))
+        };
+        // Collapsed (zero-width) bin: fold into the next one.
+        if b < bins && edge <= prev_edge {
+            continue;
+        }
+        let expected = (base_cdf - prev_base_cdf).max(SHARE_FLOOR);
+        let observed = (live_cdf - prev_live_cdf).max(SHARE_FLOOR);
+        total += (observed - expected) * (observed / expected).ln();
+        prev_edge = edge;
+        prev_base_cdf = base_cdf;
+        prev_live_cdf = live_cdf;
+    }
+    total
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic between two sketches:
+/// max CDF gap evaluated over both sketches' quantile grids.
+pub fn ks(a: &SketchSummary, b: &SketchSummary, grid_points: usize) -> f64 {
+    assert!(grid_points >= 2);
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let mut d: f64 = 0.0;
+    for src in [a, b] {
+        for i in 0..grid_points {
+            let x = src.quantile(i as f64 / (grid_points - 1) as f64);
+            d = d.max((a.cdf(x) - b.cdf(x)).abs());
+        }
+    }
+    d
+}
+
+/// Detector thresholds (from `lifecycle` config).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftDetector {
+    pub psi_threshold: f64,
+    pub ks_threshold: f64,
+    pub bins: usize,
+}
+
+/// One drift evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftReport {
+    pub psi: f64,
+    pub ks: f64,
+    pub drifted: bool,
+}
+
+impl DriftDetector {
+    pub fn evaluate(&self, baseline: &SketchSummary, live: &SketchSummary) -> DriftReport {
+        let psi_v = psi(baseline, live, self.bins);
+        let ks_v = ks(baseline, live, 4 * self.bins + 1);
+        DriftReport {
+            psi: psi_v,
+            ks: ks_v,
+            drifted: psi_v > self.psi_threshold || ks_v > self.ks_threshold,
+        }
+    }
+}
+
+/// Eq. 5 fit-readiness: does the sketch hold enough samples to refit
+/// `T^Q` at target alert rate `a` within relative error `delta` at
+/// confidence `z`? (Same bound the manual control-plane fit enforces;
+/// the autopilot just evaluates it against the sketch count.)
+pub fn fit_ready(samples: u64, alert_rate: f64, delta: f64, z: f64) -> Result<bool> {
+    Ok(samples >= required_samples(alert_rate, delta, z)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lifecycle::sketch::QuantileSketch;
+    use crate::util::rng::Rng;
+
+    fn sketch_of(f: impl Fn(&mut Rng) -> f64, n: usize, seed: u64) -> QuantileSketch {
+        let mut rng = Rng::new(seed);
+        let mut s = QuantileSketch::with_seed(1024, seed ^ 0x11);
+        for _ in 0..n {
+            s.insert(f(&mut rng));
+        }
+        s
+    }
+
+    fn detector() -> DriftDetector {
+        DriftDetector {
+            psi_threshold: 0.25,
+            ks_threshold: 0.15,
+            bins: 10,
+        }
+    }
+
+    #[test]
+    fn identical_distributions_do_not_drift() {
+        let a = sketch_of(|r| r.beta(2.0, 8.0), 20_000, 1).summary();
+        let b = sketch_of(|r| r.beta(2.0, 8.0), 20_000, 2).summary();
+        let rep = detector().evaluate(&a, &b);
+        assert!(rep.psi < 0.05, "psi {} on identical dists", rep.psi);
+        assert!(rep.ks < 0.05, "ks {} on identical dists", rep.ks);
+        assert!(!rep.drifted);
+    }
+
+    #[test]
+    fn mean_shift_is_detected_by_both() {
+        let a = sketch_of(|r| 0.3 + 0.1 * r.normal(), 20_000, 3).summary();
+        let b = sketch_of(|r| 0.5 + 0.1 * r.normal(), 20_000, 4).summary();
+        let rep = detector().evaluate(&a, &b);
+        assert!(rep.psi > 0.25, "psi {} too small for a 2σ shift", rep.psi);
+        assert!(rep.ks > 0.15, "ks {} too small for a 2σ shift", rep.ks);
+        assert!(rep.drifted);
+    }
+
+    #[test]
+    fn variance_change_is_detected() {
+        let a = sketch_of(|r| 0.5 + 0.05 * r.normal(), 20_000, 5).summary();
+        let b = sketch_of(|r| 0.5 + 0.20 * r.normal(), 20_000, 6).summary();
+        let rep = detector().evaluate(&a, &b);
+        // A pure variance change moves little of the median mass, so
+        // KS can be modest — PSI on equal-mass bins must catch it.
+        assert!(rep.drifted, "variance x4 not detected: {rep:?}");
+        assert!(rep.psi > 0.25, "psi {}", rep.psi);
+    }
+
+    #[test]
+    fn tail_only_shift_registers_in_psi() {
+        // 85% identical, 15% of mass teleports to the upper tail: the
+        // fraud-wave shape the drift-storm scenario creates. Analytic
+        // PSI: top bin observed ≈ 0.235 vs expected 0.1 contributes
+        // 0.135·ln(2.35) ≈ 0.115, the other bins ≈ 0.02 — ≈ 0.14
+        // total, comfortably above the 0.1 assertion floor even though
+        // most of the distribution is unchanged.
+        let a = sketch_of(|r| r.beta(2.0, 8.0), 30_000, 7).summary();
+        let b = sketch_of(
+            |r| {
+                if r.bernoulli(0.15) {
+                    0.9 + 0.05 * r.f64()
+                } else {
+                    r.beta(2.0, 8.0)
+                }
+            },
+            30_000,
+            8,
+        )
+        .summary();
+        let rep = detector().evaluate(&a, &b);
+        assert!(rep.psi > 0.1, "tail shift psi {}", rep.psi);
+    }
+
+    #[test]
+    fn psi_is_near_zero_for_small_noise_and_large_for_disjoint() {
+        let a = sketch_of(|r| r.f64(), 10_000, 9).summary();
+        let b = sketch_of(|r| r.f64(), 10_000, 10).summary();
+        assert!(psi(&a, &b, 10) < 0.05);
+        let c = sketch_of(|r| 2.0 + r.f64(), 10_000, 11).summary();
+        assert!(psi(&a, &c, 10) > 2.0, "disjoint psi {}", psi(&a, &c, 10));
+    }
+
+    #[test]
+    fn ks_matches_known_uniform_gap() {
+        // U(0,1) vs U(0.25, 1.25): analytic KS = 0.25.
+        let a = sketch_of(|r| r.f64(), 40_000, 12).summary();
+        let b = sketch_of(|r| 0.25 + r.f64(), 40_000, 13).summary();
+        let d = ks(&a, &b, 101);
+        assert!((d - 0.25).abs() < 0.03, "ks {d} vs analytic 0.25");
+    }
+
+    #[test]
+    fn degenerate_baselines_do_not_panic() {
+        // All-ties baseline collapses every equal-mass bin edge.
+        let a = sketch_of(|_| 0.5, 5_000, 14).summary();
+        let b = sketch_of(|r| r.f64(), 5_000, 15).summary();
+        let v = psi(&a, &b, 10);
+        assert!(v.is_finite() && v > 0.25, "point mass vs uniform: psi {v}");
+        // Identical tie-heavy distributions must NOT false-alarm.
+        let c = sketch_of(|_| 0.5, 5_000, 16).summary();
+        assert!(psi(&a, &c, 10) < 0.05, "identical point masses drifted");
+        let empty = QuantileSketch::new(64).summary();
+        assert_eq!(psi(&empty, &b, 10), 0.0);
+        assert_eq!(ks(&empty, &b, 11), 0.0);
+    }
+
+    #[test]
+    fn fit_ready_tracks_eq5() {
+        // a=0.1, delta=0.2, z=1.96 => n ≈ 865.
+        assert!(!fit_ready(800, 0.1, 0.2, 1.96).unwrap());
+        assert!(fit_ready(900, 0.1, 0.2, 1.96).unwrap());
+        assert!(fit_ready(0, 0.5, 1.0, 0.1).is_ok());
+        assert!(fit_ready(10, 0.0, 0.2, 1.96).is_err());
+    }
+}

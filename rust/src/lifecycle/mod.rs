@@ -1,0 +1,18 @@
+//! The lifecycle autopilot (closing the paper's Fig. 3 loop): online
+//! score-distribution tracking with mergeable streaming quantile
+//! sketches fed lock-free from the data plane (`sketch`), PSI/KS
+//! drift detection against the distribution frozen at the last fit
+//! (`drift`), and a background shadow→validate→promote state machine
+//! per managed (predictor, tenant) pair (`controller`) that refits
+//! `T^Q` from sketches — O(sketch), never O(events) — and drives the
+//! existing control-plane machinery with zero client interaction.
+
+pub mod controller;
+pub mod drift;
+pub mod sketch;
+
+pub use controller::{
+    spawn_controller, LifecycleController, LifecycleHub, LifecycleState, PairStatus, TickReport,
+};
+pub use drift::{fit_ready, ks, psi, DriftDetector, DriftReport};
+pub use sketch::{DrainStats, QuantileSketch, ScoreFeed, SketchSummary};

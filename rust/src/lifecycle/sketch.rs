@@ -1,0 +1,743 @@
+//! Mergeable streaming quantile sketch (KLL-style) + the lock-free
+//! per-worker score buffer that feeds it from the scoring hot path.
+//!
+//! The lifecycle autopilot needs the live score distribution of every
+//! (predictor, tenant) pair, continuously, without touching the data
+//! plane. Replaying the `DataLake` is O(events) per refit and grows
+//! without bound; the sketch gives the same quantile surface in
+//! O(k·log(n/k)) memory with O(1) amortized insert, and two sketches
+//! merge losslessly (error bounds add sub-linearly), so per-worker
+//! buffers can be drained into one authoritative sketch by a
+//! background thread.
+//!
+//! # Structure
+//!
+//! A [`QuantileSketch`] is a stack of levels; items at level `i` carry
+//! weight `2^i`. Inserts push weight-1 items into level 0. A full
+//! level (≥ `k` items) is sorted and *compacted*: a random-offset
+//! half of its items is promoted to the next level at double weight.
+//! Each compaction of a level with item weight `w` perturbs any rank
+//! query by at most `w`, and a level sees at most `n/(k·2^i)`
+//! compactions, so the total normalized rank error is bounded by
+//! `(L-1)/k` for `L` levels — `L ≈ log2(n/k) + 1`. [`epsilon`] reports
+//! `(2(L-1) + 2)/k`, a deliberately conservative version of that bound
+//! (the factor 2 absorbs the ±1 total-weight drift a compaction of an
+//! odd-length level can introduce); the property tests in this module
+//! hold the sketch to it across adversarial streams.
+//!
+//! Exact stream min/max are tracked separately so the fitted `T^Q`
+//! support endpoints never collapse inward under compaction.
+//!
+//! [`epsilon`]: QuantileSketch::epsilon
+//!
+//! # Hot-path feed
+//!
+//! [`ScoreFeed`] is the data-plane side: a set of striped rings of
+//! `AtomicU64` cells. A worker thread appends with one `fetch_add`
+//! (its stripe's head cursor) and one `swap` (the cell) — no mutex,
+//! no CAS loop, no allocation. Stripes are assigned per thread from a
+//! thread-local, so concurrent workers do not contend on one cursor.
+//! If producers lap the drainer the oldest samples are overwritten;
+//! the drainer accounts the loss in [`DrainStats::dropped`] (a sketch
+//! is a sample of the distribution anyway — bounded loss under burst
+//! is the designed degradation, in contrast to an unbounded queue).
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Minimum compaction capacity (below this the error bound is
+/// meaningless and compaction overhead dominates).
+pub const MIN_K: usize = 8;
+
+/// A mergeable KLL-style quantile sketch over `f64` scores.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    k: usize,
+    /// True number of inserted samples (merges included).
+    count: u64,
+    /// `levels[i]` holds items of weight `2^i`; only level 0 receives
+    /// raw inserts. Levels are unsorted between compactions.
+    levels: Vec<Vec<f64>>,
+    /// Exact stream extremes (compaction may drop the retained ones).
+    min: f64,
+    max: f64,
+    rng: Rng,
+}
+
+impl QuantileSketch {
+    /// `k` is the per-level compaction capacity: higher `k`, lower
+    /// error, more memory. Seeded deterministically from `k` so runs
+    /// are reproducible; use [`QuantileSketch::with_seed`] to vary.
+    pub fn new(k: usize) -> QuantileSketch {
+        QuantileSketch::with_seed(k, 0x4B4C_4C00 ^ k as u64)
+    }
+
+    pub fn with_seed(k: usize, seed: u64) -> QuantileSketch {
+        let k = k.max(MIN_K);
+        QuantileSketch {
+            k,
+            count: 0,
+            levels: vec![Vec::new()],
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of samples observed (not retained).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Retained items across all levels — the actual memory footprint,
+    /// bounded by `k · levels()` ≤ `k · (log2(n/k) + 2)`.
+    pub fn memory_items(&self) -> usize {
+        self.levels.iter().map(Vec::len).sum()
+    }
+
+    pub fn levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Conservative normalized rank-error bound for the current state
+    /// (see the module docs for the derivation). Quantile queries are
+    /// accurate to ±`epsilon()` in rank across the whole range.
+    pub fn epsilon(&self) -> f64 {
+        (2.0 * (self.levels.len() - 1) as f64 + 2.0) / self.k as f64
+    }
+
+    /// Forget everything (start a fresh observation window).
+    pub fn reset(&mut self) {
+        self.count = 0;
+        self.levels.clear();
+        self.levels.push(Vec::new());
+        self.min = f64::INFINITY;
+        self.max = f64::NEG_INFINITY;
+    }
+
+    /// O(1) amortized: a push, plus a compaction cascade whose total
+    /// work over n inserts is O(n) (each item is touched once per
+    /// level it passes through, and half die at every promotion).
+    pub fn insert(&mut self, x: f64) {
+        if !x.is_finite() {
+            return; // scores are finite by contract; never poison the sketch
+        }
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.levels[0].push(x);
+        if self.levels[0].len() >= self.k {
+            self.compact_cascade(0);
+        }
+    }
+
+    /// Merge another sketch into this one (level-wise concatenation +
+    /// re-compaction). Error bounds are preserved: compaction counts
+    /// stay bounded by the combined weight passing through each level.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        while self.levels.len() < other.levels.len() {
+            self.levels.push(Vec::new());
+        }
+        for (i, lvl) in other.levels.iter().enumerate() {
+            self.levels[i].extend_from_slice(lvl);
+        }
+        for i in 0..self.levels.len() {
+            if self.levels[i].len() >= self.k {
+                self.compact_cascade(i);
+            }
+        }
+    }
+
+    fn compact_cascade(&mut self, mut i: usize) {
+        while i < self.levels.len() && self.levels[i].len() >= self.k {
+            if i + 1 == self.levels.len() {
+                self.levels.push(Vec::new());
+            }
+            let offset = usize::from(self.rng.bernoulli(0.5));
+            let mut lvl = std::mem::take(&mut self.levels[i]);
+            lvl.sort_unstable_by(|a, b| a.partial_cmp(b).expect("finite by insert contract"));
+            let promoted = lvl.iter().skip(offset).step_by(2);
+            self.levels[i + 1].extend(promoted);
+            i += 1;
+        }
+    }
+
+    /// Immutable weighted summary for quantile/CDF queries — O(m log m)
+    /// in retained items, built once and queried many times (drift
+    /// scoring, `T^Q` grid extraction).
+    pub fn summary(&self) -> SketchSummary {
+        let mut items: Vec<(f64, u64)> = Vec::with_capacity(self.memory_items());
+        for (i, lvl) in self.levels.iter().enumerate() {
+            let w = 1u64 << i;
+            items.extend(lvl.iter().map(|&v| (v, w)));
+        }
+        items.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).expect("finite by insert contract"));
+        let total: u64 = items.iter().map(|&(_, w)| w).sum();
+        SketchSummary {
+            items,
+            total,
+            min: self.min,
+            max: self.max,
+        }
+    }
+}
+
+/// Sorted weighted view of a [`QuantileSketch`] at one instant.
+#[derive(Debug, Clone)]
+pub struct SketchSummary {
+    /// (value, weight), sorted by value.
+    items: Vec<(f64, u64)>,
+    total: u64,
+    min: f64,
+    max: f64,
+}
+
+impl SketchSummary {
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Total retained weight (≈ the observed sample count).
+    pub fn total_weight(&self) -> u64 {
+        self.total
+    }
+
+    /// Estimated quantile at probability `p` — the smallest retained
+    /// value whose cumulative weight reaches `p · total`. Endpoints
+    /// return the exact stream min/max.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!(!self.is_empty(), "quantile of empty sketch");
+        let p = p.clamp(0.0, 1.0);
+        if p == 0.0 {
+            return self.min;
+        }
+        if p == 1.0 {
+            return self.max;
+        }
+        let target = p * self.total as f64;
+        let mut cum = 0u64;
+        for &(v, w) in &self.items {
+            cum += w;
+            if cum as f64 >= target {
+                return v;
+            }
+        }
+        self.max
+    }
+
+    /// Estimated CDF: fraction of observed mass ≤ `x`.
+    pub fn cdf(&self, x: f64) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        // items is sorted by value: binary search the upper bound.
+        let idx = self.items.partition_point(|&(v, _)| v <= x);
+        let below: u64 = self.items[..idx].iter().map(|&(_, w)| w).sum();
+        below as f64 / self.total as f64
+    }
+
+    /// Quantiles at the uniform `n_points` probability grid — the
+    /// source grid of a `T^Q` refit (`q^S_i` of Eq. 4), computed in
+    /// one cumulative pass. Non-decreasing by construction; callers
+    /// fitting a `QuantileMap` dedup ties with
+    /// `quantile_fit::dedup_monotone`.
+    pub fn quantile_grid(&self, n_points: usize) -> Vec<f64> {
+        assert!(n_points >= 2);
+        assert!(!self.is_empty(), "quantile grid of empty sketch");
+        let mut out = Vec::with_capacity(n_points);
+        out.push(self.min);
+        let mut cum = 0u64;
+        let mut iter = self.items.iter();
+        let mut cur = iter.next();
+        for i in 1..n_points - 1 {
+            let target = i as f64 / (n_points - 1) as f64 * self.total as f64;
+            while let Some(&(v, w)) = cur {
+                if (cum + w) as f64 >= target {
+                    out.push(v);
+                    break;
+                }
+                cum += w;
+                cur = iter.next();
+            }
+            if out.len() < i + 1 {
+                out.push(self.max);
+            }
+        }
+        out.push(self.max);
+        out
+    }
+
+    /// Fit a tenant `T^Q` from this sketch: the merged quantile grid
+    /// is paired with the reference grid through the generic
+    /// `quantile_fit::fit_from_grid` primitive — O(sketch items),
+    /// never O(events). This adapter lives on the sketch side so the
+    /// `transforms` layer stays independent of the lifecycle
+    /// subsystem.
+    pub fn fit_quantile_map(
+        &self,
+        ref_quantiles: &[f64],
+    ) -> anyhow::Result<crate::transforms::QuantileMap> {
+        anyhow::ensure!(
+            self.total >= ref_quantiles.len() as u64,
+            "sketch holds {} samples for {} quantile points",
+            self.total,
+            ref_quantiles.len()
+        );
+        crate::transforms::quantile_fit::fit_from_grid(
+            self.quantile_grid(ref_quantiles.len()),
+            self.total,
+            ref_quantiles,
+        )
+    }
+
+    /// As [`SketchSummary::fit_quantile_map`], gated by the Eq. 5
+    /// sample bound on the sketch's observed weight.
+    pub fn fit_quantile_map_gated(
+        &self,
+        ref_quantiles: &[f64],
+        alert_rate: f64,
+        delta: f64,
+        z: f64,
+    ) -> anyhow::Result<crate::transforms::QuantileMap> {
+        let need = crate::transforms::quantile_fit::required_samples(alert_rate, delta, z)?;
+        anyhow::ensure!(
+            self.total >= need.max(ref_quantiles.len() as u64),
+            "insufficient samples for quantile fit: sketch has {}, Eq.5 requires {need} \
+             (a={alert_rate}, delta={delta}, z={z})",
+            self.total
+        );
+        crate::transforms::quantile_fit::fit_grid_gated(
+            self.quantile_grid(ref_quantiles.len()),
+            self.total,
+            ref_quantiles,
+            alert_rate,
+            delta,
+            z,
+        )
+    }
+}
+
+// ---------------------------------------------------------------
+// Hot-path feed
+// ---------------------------------------------------------------
+
+/// Sentinel for an empty ring cell. Scores are packed as widened f32
+/// bit patterns (≤ `u32::MAX`), so `u64::MAX` is unreachable.
+const EMPTY: u64 = u64::MAX;
+
+#[inline]
+fn pack(score: f64) -> u64 {
+    // f32 resolution is far below the sketch's rank error; one cell
+    // per event keeps the append a single atomic store.
+    (score as f32).to_bits() as u64
+}
+
+#[inline]
+fn unpack(bits: u64) -> f64 {
+    f32::from_bits(bits as u32) as f64
+}
+
+static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Stable per-thread stripe index, assigned on first use.
+    static THREAD_SLOT: usize = NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed);
+}
+
+struct Stripe {
+    /// Total pushes ever made to this stripe (not wrapped).
+    head: AtomicU64,
+    /// `head` as of the last drain (drainer-only bookkeeping).
+    drained_head: AtomicU64,
+    slots: Box<[AtomicU64]>,
+}
+
+/// Outcome of one [`ScoreFeed::drain`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DrainStats {
+    /// Samples handed to the sink.
+    pub collected: u64,
+    /// Estimated samples lost to ring overwrite since the last drain
+    /// (producers lapping the drainer).
+    pub dropped: u64,
+}
+
+/// Lock-free multi-producer score buffer between the scoring hot path
+/// and the lifecycle drainer. See the module docs for the contract.
+pub struct ScoreFeed {
+    stripes: Vec<Stripe>,
+}
+
+impl ScoreFeed {
+    /// `stripes` rings of `capacity` cells each. Capacity is rounded
+    /// up to a power of two so the ring index is a mask, not a `%`.
+    pub fn new(stripes: usize, capacity: usize) -> ScoreFeed {
+        let stripes = stripes.max(1);
+        let capacity = capacity.max(64).next_power_of_two();
+        ScoreFeed {
+            stripes: (0..stripes)
+                .map(|_| Stripe {
+                    head: AtomicU64::new(0),
+                    drained_head: AtomicU64::new(0),
+                    slots: (0..capacity).map(|_| AtomicU64::new(EMPTY)).collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Hot-path append: one `fetch_add` + one `swap`, both on the
+    /// caller's stripe. Never blocks, never allocates, never loops.
+    #[inline]
+    pub fn push(&self, score: f64) {
+        let slot = THREAD_SLOT.with(|s| *s);
+        let stripe = &self.stripes[slot % self.stripes.len()];
+        let mask = stripe.slots.len() - 1;
+        let i = stripe.head.fetch_add(1, Ordering::Relaxed) as usize & mask;
+        stripe.slots[i].store(pack(score), Ordering::Release);
+    }
+
+    /// Harvest every occupied cell into `sink`, leaving the ring
+    /// empty. Background-thread rate; concurrent pushes may land
+    /// before or after the sweep — either way they are collected by
+    /// this pass or the next.
+    pub fn drain(&self, mut sink: impl FnMut(f64)) -> DrainStats {
+        let mut stats = DrainStats::default();
+        for stripe in &self.stripes {
+            let head = stripe.head.load(Ordering::Acquire);
+            let mut collected = 0u64;
+            for cell in stripe.slots.iter() {
+                let bits = cell.swap(EMPTY, Ordering::Acquire);
+                if bits != EMPTY {
+                    sink(unpack(bits));
+                    collected += 1;
+                }
+            }
+            let prev = stripe.drained_head.swap(head, Ordering::Relaxed);
+            let produced = head - prev;
+            stats.collected += collected;
+            stats.dropped += produced.saturating_sub(collected);
+        }
+        stats
+    }
+
+    /// Total pushes across stripes (tests / monitoring).
+    pub fn pushed(&self) -> u64 {
+        self.stripes
+            .iter()
+            .map(|s| s.head.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    /// Exact normalized rank of `q` in `data` (fraction ≤ q).
+    fn exact_rank(data: &[f64], q: f64) -> f64 {
+        data.iter().filter(|&&x| x <= q).count() as f64 / data.len() as f64
+    }
+
+    fn assert_within_epsilon(data: &[f64], sketch: &QuantileSketch, tag: &str) {
+        let eps = sketch.epsilon();
+        let s = sketch.summary();
+        for i in 0..=20 {
+            let p = i as f64 / 20.0;
+            let q = s.quantile(p);
+            let r = exact_rank(data, q);
+            // The sketch's value at rank p must sit within eps of p.
+            // `exact_rank` counts ties as ≤, so allow the tie mass on
+            // the low side by also accepting rank-of-strictly-less.
+            let r_lo = data.iter().filter(|&&x| x < q).count() as f64 / data.len() as f64;
+            assert!(
+                r + 1e-12 >= p - eps && r_lo <= p + eps,
+                "{tag}: p={p} q={q} rank={r} rank_lo={r_lo} eps={eps} n={}",
+                data.len()
+            );
+        }
+    }
+
+    fn streams(n: usize, seed: u64) -> Vec<(&'static str, Vec<f64>)> {
+        let mut rng = Rng::new(seed);
+        let uniform: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let mut sorted = uniform.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut reversed = sorted.clone();
+        reversed.reverse();
+        let heavy: Vec<f64> = (0..n).map(|_| rng.f64().powi(8)).collect();
+        let dup: Vec<f64> = (0..n).map(|i| if i % 3 == 0 { 0.25 } else { rng.f64() }).collect();
+        vec![
+            ("uniform", uniform),
+            ("sorted", sorted),
+            ("reversed", reversed),
+            ("heavy-tail", heavy),
+            ("duplicates", dup),
+        ]
+    }
+
+    #[test]
+    fn prop_quantiles_within_epsilon_on_adversarial_streams() {
+        prop::check(12, |g| {
+            let n = g.usize(500..6000);
+            let k = *g.pick(&[64usize, 128, 256]);
+            let seed = g.u64();
+            for (tag, data) in streams(n, seed) {
+                let mut s = QuantileSketch::with_seed(k, seed ^ 0xA5);
+                for &x in &data {
+                    s.insert(x);
+                }
+                prop_assert!(s.count() == n as u64, "count mismatch");
+                // Can't use assert_within_epsilon (panics) inside a
+                // prop; inline the check with prop_assert.
+                let eps = s.epsilon();
+                let sum = s.summary();
+                for i in 0..=20 {
+                    let p = i as f64 / 20.0;
+                    let q = sum.quantile(p);
+                    let r = exact_rank(&data, q);
+                    let r_lo =
+                        data.iter().filter(|&&x| x < q).count() as f64 / data.len() as f64;
+                    prop_assert!(
+                        r + 1e-12 >= p - eps && r_lo <= p + eps,
+                        "{tag}: p={p} q={q} rank={r} rank_lo={r_lo} eps={eps} n={n} k={k}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn memory_is_bounded_and_logarithmic() {
+        let k = 128;
+        let mut s = QuantileSketch::new(k);
+        let mut rng = Rng::new(3);
+        let n = 200_000u64;
+        for _ in 0..n {
+            s.insert(rng.f64());
+        }
+        let max_levels = ((n as f64 / k as f64).log2().ceil() as usize) + 2;
+        assert!(
+            s.levels() <= max_levels,
+            "levels {} > log bound {max_levels}",
+            s.levels()
+        );
+        assert!(
+            s.memory_items() <= k * s.levels(),
+            "memory {} items exceeds k*levels = {}",
+            s.memory_items(),
+            k * s.levels()
+        );
+        // The documented epsilon stays useful at this scale.
+        assert!(s.epsilon() < 0.4, "epsilon degenerate: {}", s.epsilon());
+    }
+
+    #[test]
+    fn exact_below_k() {
+        // Fewer than k items: no compaction ever ran, quantiles exact.
+        let mut s = QuantileSketch::new(256);
+        let data: Vec<f64> = (0..100).map(|i| i as f64 / 99.0).collect();
+        for &x in &data {
+            s.insert(x);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.quantile(0.0), 0.0);
+        assert_eq!(sum.quantile(1.0), 1.0);
+        assert!((sum.quantile(0.5) - 0.494949).abs() < 0.02);
+        assert_eq!(s.memory_items(), 100);
+    }
+
+    #[test]
+    fn merge_matches_concatenated_stream() {
+        let mut rng = Rng::new(11);
+        let a_data: Vec<f64> = (0..8_000).map(|_| rng.f64().powi(2)).collect();
+        let b_data: Vec<f64> = (0..12_000).map(|_| 1.0 - rng.f64().powi(3)).collect();
+        let mut a = QuantileSketch::with_seed(256, 1);
+        let mut b = QuantileSketch::with_seed(256, 2);
+        for &x in &a_data {
+            a.insert(x);
+        }
+        for &x in &b_data {
+            b.insert(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20_000);
+        let mut all = a_data;
+        all.extend_from_slice(&b_data);
+        assert_within_epsilon(&all, &a, "merged");
+    }
+
+    #[test]
+    fn merge_empty_and_into_empty() {
+        let mut a = QuantileSketch::new(64);
+        let b = QuantileSketch::new(64);
+        a.merge(&b);
+        assert!(a.is_empty());
+        let mut c = QuantileSketch::new(64);
+        c.insert(0.5);
+        a.merge(&c);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.summary().quantile(0.5), 0.5);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut s = QuantileSketch::new(64);
+        for i in 0..1000 {
+            s.insert(i as f64);
+        }
+        s.reset();
+        assert!(s.is_empty());
+        assert_eq!(s.memory_items(), 0);
+        s.insert(0.7);
+        assert_eq!(s.summary().quantile(0.5), 0.7);
+    }
+
+    #[test]
+    fn non_finite_inserts_are_ignored() {
+        let mut s = QuantileSketch::new(64);
+        s.insert(f64::NAN);
+        s.insert(f64::INFINITY);
+        s.insert(0.3);
+        assert_eq!(s.count(), 1);
+    }
+
+    #[test]
+    fn cdf_and_quantile_agree() {
+        let mut s = QuantileSketch::new(256);
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            s.insert(rng.f64());
+        }
+        let sum = s.summary();
+        for i in 1..10 {
+            let p = i as f64 / 10.0;
+            let q = sum.quantile(p);
+            assert!(
+                (sum.cdf(q) - p).abs() < 2.0 * s.epsilon() + 0.01,
+                "p={p} q={q} cdf={}",
+                sum.cdf(q)
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_grid_is_monotone_and_spans_extremes() {
+        let mut s = QuantileSketch::new(128);
+        let mut rng = Rng::new(6);
+        for _ in 0..5_000 {
+            s.insert(rng.f64() * 0.5 + 0.25);
+        }
+        let grid = s.summary().quantile_grid(65);
+        assert_eq!(grid.len(), 65);
+        for w in grid.windows(2) {
+            assert!(w[1] >= w[0], "grid not monotone");
+        }
+        assert_eq!(grid[0], s.summary().quantile(0.0));
+        assert_eq!(grid[64], s.summary().quantile(1.0));
+    }
+
+    #[test]
+    fn feed_roundtrip_single_thread() {
+        let feed = ScoreFeed::new(2, 64);
+        for i in 0..50 {
+            feed.push(i as f64 / 50.0);
+        }
+        let mut got = Vec::new();
+        let stats = feed.drain(|v| got.push(v));
+        assert_eq!(stats.collected, 50);
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(got.len(), 50);
+        // Values survive the f32 packing within f32 resolution.
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, v) in got.iter().enumerate() {
+            assert!((v - i as f64 / 50.0).abs() < 1e-6);
+        }
+        // Second drain finds nothing.
+        let stats = feed.drain(|_| panic!("ring should be empty"));
+        assert_eq!(stats, DrainStats::default());
+    }
+
+    #[test]
+    fn feed_overflow_drops_oldest_and_accounts_it() {
+        let feed = ScoreFeed::new(1, 64);
+        for i in 0..200 {
+            feed.push(i as f64);
+        }
+        let mut got = Vec::new();
+        let stats = feed.drain(|v| got.push(v));
+        assert_eq!(stats.collected, 64);
+        assert_eq!(stats.dropped, 136);
+        // Survivors are the newest writes.
+        for v in got {
+            assert!(v >= 136.0, "stale value {v} survived overwrite");
+        }
+    }
+
+    #[test]
+    fn feed_concurrent_producers_lose_nothing_within_capacity() {
+        use std::sync::Arc;
+        let feed = Arc::new(ScoreFeed::new(8, 1024));
+        let per_thread = 500usize; // 8 * 500 << 8 * 1024
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let feed = Arc::clone(&feed);
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        feed.push((t * per_thread + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = Vec::new();
+        let stats = feed.drain(|v| got.push(v));
+        // Threads map to stripes by a process-global thread counter,
+        // so several may share a stripe; capacity 1024 per stripe
+        // against ≤ 8·500 writes still cannot overflow a stripe unless
+        // all 8 land on one (impossible: 8 distinct slots cover ≥ 1
+        // stripe each ... but two threads on one stripe is fine:
+        // 2·500 < 1024). Worst legal case: 2 threads/stripe.
+        assert!(stats.collected >= 2 * per_thread as u64, "{stats:?}");
+        assert_eq!(stats.collected + stats.dropped, 8 * per_thread as u64);
+        // No torn values: everything collected is one of the pushes.
+        for v in got {
+            assert!(v.fract() == 0.0 && (0.0..4000.0).contains(&v), "torn value {v}");
+        }
+    }
+
+    #[test]
+    fn feed_drain_into_sketch() {
+        let feed = ScoreFeed::new(4, 256);
+        let mut rng = Rng::new(8);
+        let mut pushed = Vec::new();
+        for _ in 0..600 {
+            let v = rng.f64();
+            pushed.push(v);
+            feed.push(v);
+        }
+        let mut sketch = QuantileSketch::new(128);
+        let stats = feed.drain(|v| sketch.insert(v));
+        assert_eq!(stats.collected, 600);
+        assert_eq!(sketch.count(), 600);
+        assert_within_epsilon(&pushed, &sketch, "drained");
+    }
+}

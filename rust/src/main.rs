@@ -94,8 +94,23 @@ fn serve(args: &[String]) -> Result<()> {
     eprintln!("muse: warming up ({warmup} requests) ...");
     let (bound, _ready, handle) =
         muse::server::spawn_server(Arc::clone(&engine), &addr, config.server.workers, warmup)?;
+    // Lifecycle autopilot: background drift-detection + shadow→promote
+    // loop, one tick per `lifecycle.checkIntervalMs`.
+    let _autopilot = if config.lifecycle.enabled {
+        let c = muse::lifecycle::spawn_controller(Arc::clone(&engine))?;
+        eprintln!(
+            "muse: lifecycle autopilot on ({}ms ticks)",
+            config.lifecycle.check_interval_ms
+        );
+        Some(c)
+    } else {
+        None
+    };
     eprintln!("muse: ready, serving on http://{bound}");
-    eprintln!("muse: POST /score  GET /healthz  GET /metrics  GET /admin/stats");
+    eprintln!(
+        "muse: POST /score  POST /v1/score/batch  GET /healthz  GET /metrics  \
+         GET /admin/stats  GET /v1/lifecycle  POST /v1/lifecycle/check"
+    );
     handle.join().ok();
     Ok(())
 }

@@ -5,7 +5,9 @@
 pub mod container;
 pub mod manifest;
 pub mod pool;
+pub mod simfix;
 
 pub use container::{ModelContainer, ModelHandle};
 pub use manifest::{Manifest, ModelSpec};
 pub use pool::{ModelPool, PoolStats};
+pub use simfix::SimArtifacts;

@@ -1,0 +1,264 @@
+//! Synthetic artifact fixture: a self-contained `muse-sim-hlo v1`
+//! artifact set generated at runtime, so the full serving stack —
+//! containers, predictors, engine, HTTP, lifecycle autopilot — runs
+//! **without** `make artifacts` (no Python, no network, no real HLO).
+//!
+//! The models are hand-built linear scorers over the simulator's
+//! 24-dim transaction features (`simulator::workload`): each computes
+//! `sigmoid(w·x + b)` with weight patterns aligned to the workload's
+//! fraud signatures (P0 lifts dims 0–8, P1 lifts dims 8–16), so fraud
+//! events score meaningfully higher than legit traffic and the score
+//! distribution responds to covariate/label drift exactly the way the
+//! lifecycle scenarios need. The vendored `xla` shim interprets the
+//! programs with the same batch-variant/padding contract as the real
+//! AOT path, so everything downstream (chunking, batchers, pipelines)
+//! is exercised unmodified.
+//!
+//! Everything lifecycle-related (tests, the drift-storm scenario and
+//! example, the sketch-feed bench) builds on [`SimArtifacts::in_temp`]
+//! so it runs identically everywhere — including CI, where
+//! `make artifacts` never ran. The fixture's model roster (`s1..s3`)
+//! is deliberately distinct from the real one (`m1..m8`): configs name
+//! their experts explicitly, so the two sets cannot be silently
+//! confused.
+
+use super::manifest::Manifest;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Feature dimension — matches `simulator::workload::FEATURE_DIM`.
+pub const SIM_FEATURE_DIM: usize = 24;
+/// Quantile grid resolution for sim-backed engines.
+pub const SIM_QUANTILE_POINTS: usize = 129;
+/// AOT batch variants the fixture emits per model.
+pub const SIM_BATCHES: [usize; 3] = [1, 64, 256];
+
+/// One synthetic expert definition.
+struct SimModel {
+    name: &'static str,
+    beta: f64,
+    bias: f32,
+    /// (dim range start, end, base weight) bands.
+    bands: [(usize, usize, f32); 3],
+}
+
+const MODELS: [SimModel; 3] = [
+    // Pattern-P0 specialist: heavy on dims 0..8.
+    SimModel {
+        name: "s1",
+        beta: 0.20,
+        bias: -2.3,
+        bands: [(0, 8, 0.45), (8, 16, 0.22), (16, 24, 0.02)],
+    },
+    // Pattern-P1 specialist: heavy on dims 8..16.
+    SimModel {
+        name: "s2",
+        beta: 0.12,
+        bias: -2.1,
+        bands: [(0, 8, 0.28), (8, 16, 0.40), (16, 24, 0.03)],
+    },
+    // Weak generalist.
+    SimModel {
+        name: "s3",
+        beta: 0.45,
+        bias: -1.9,
+        bands: [(0, 8, 0.16), (8, 16, 0.16), (16, 24, 0.16)],
+    },
+];
+
+static NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// A generated artifact directory; dropping it removes the directory.
+pub struct SimArtifacts {
+    root: PathBuf,
+}
+
+impl SimArtifacts {
+    /// Generate the fixture under a fresh temp directory.
+    pub fn in_temp() -> Result<SimArtifacts> {
+        let dir = std::env::temp_dir().join(format!(
+            "muse-simfix-{}-{}",
+            std::process::id(),
+            NONCE.fetch_add(1, Ordering::Relaxed)
+        ));
+        SimArtifacts::generate(dir)
+    }
+
+    /// Generate the fixture under `dir` (created if missing).
+    pub fn generate(dir: impl Into<PathBuf>) -> Result<SimArtifacts> {
+        let root: PathBuf = dir.into();
+        let models_dir = root.join("models");
+        std::fs::create_dir_all(&models_dir)
+            .with_context(|| format!("create {}", models_dir.display()))?;
+
+        let mut model_entries: Vec<Json> = Vec::new();
+        for m in &MODELS {
+            let weights = m.weights();
+            let mut batches: BTreeMap<String, Json> = BTreeMap::new();
+            for &b in &SIM_BATCHES {
+                let rel = format!("models/{}_b{b}.sim.txt", m.name);
+                let program = render_program(b, &weights, m.bias);
+                std::fs::write(root.join(&rel), program)
+                    .with_context(|| format!("write {rel}"))?;
+                batches.insert(b.to_string(), Json::str(rel));
+            }
+            model_entries.push(Json::obj(vec![
+                ("name", Json::str(m.name)),
+                ("arch", Json::str("simlin")),
+                ("beta", Json::Num(m.beta)),
+                ("feature_dim", Json::Num(SIM_FEATURE_DIM as f64)),
+                ("batches", Json::Obj(batches)),
+            ]));
+        }
+        let manifest = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("feature_dim", Json::Num(SIM_FEATURE_DIM as f64)),
+            ("fraud_prior", Json::Num(0.015)),
+            ("quantile_points", Json::Num(SIM_QUANTILE_POINTS as f64)),
+            (
+                "batch_variants",
+                Json::Arr(SIM_BATCHES.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("models", Json::Arr(model_entries)),
+        ]);
+        std::fs::write(root.join("manifest.json"), manifest.to_string())
+            .context("write manifest.json")?;
+        Ok(SimArtifacts { root })
+    }
+
+    pub fn root(&self) -> &PathBuf {
+        &self.root
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.root)
+    }
+}
+
+impl Drop for SimArtifacts {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+impl SimModel {
+    /// Band weights with a small deterministic jitter so no two dims
+    /// are exactly tied (ties would make expert scores degenerate
+    /// under symmetric inputs).
+    fn weights(&self) -> Vec<f32> {
+        let mut rng = Rng::new(0x51_4D0D ^ self.name.as_bytes()[1] as u64);
+        let mut w = vec![0.0f32; SIM_FEATURE_DIM];
+        for &(lo, hi, base) in &self.bands {
+            for slot in w.iter_mut().take(hi).skip(lo) {
+                *slot = base + 0.02 * (rng.f64() - 0.5) as f32;
+            }
+        }
+        // De-emphasize the amount dim (heavy-tailed lognormal): keep
+        // the logit variance dominated by the Gaussian pattern dims.
+        w[SIM_FEATURE_DIM - 1] = 0.005;
+        w
+    }
+}
+
+fn render_program(batch: usize, weights: &[f32], bias: f32) -> String {
+    let mut out = String::with_capacity(weights.len() * 12 + 128);
+    out.push_str("muse-sim-hlo v1\n");
+    let _ = writeln!(out, "input {batch} {SIM_FEATURE_DIM}");
+    let _ = writeln!(out, "dense {SIM_FEATURE_DIM} 1");
+    for w in weights {
+        let _ = writeln!(out, "{w:.6}");
+    }
+    let _ = writeln!(out, "{bias:.6}");
+    out.push_str("sigmoid\noutput 1\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelPool;
+    use crate::simulator::{TenantProfile, Workload, FEATURE_DIM};
+    use std::sync::Arc;
+
+    #[test]
+    fn generated_manifest_loads_and_containers_score() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let m = fix.manifest().unwrap();
+        assert_eq!(m.feature_dim, FEATURE_DIM);
+        assert_eq!(m.quantile_points, SIM_QUANTILE_POINTS);
+        assert_eq!(m.models.len(), 3);
+        let pool = Arc::new(ModelPool::new(m));
+        let h = pool.acquire("s1").unwrap();
+        let scores = h.infer(&vec![0.0f32; 2 * FEATURE_DIM], 2).unwrap();
+        assert_eq!(scores.len(), 2);
+        for s in &scores {
+            assert!((0.0..=1.0).contains(s), "score {s}");
+            // sigmoid(-2.3) ≈ 0.091 for the zero vector.
+            assert!((s - 0.091).abs() < 0.02, "zero-vector score {s}");
+        }
+        pool.release("s1");
+    }
+
+    #[test]
+    fn fraud_scores_higher_than_legit() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let pool = ModelPool::new(fix.manifest().unwrap());
+        let mut wl = Workload::new(TenantProfile::new("t", 5, 0.3, 0.3), 7);
+        let (feats, labels) = wl.batch(4000);
+        for model in ["s1", "s2", "s3"] {
+            let h = pool.acquire(model).unwrap();
+            let scores = h.infer(&feats, 4000).unwrap();
+            let (mut fraud, mut legit, mut nf, mut nl) = (0.0f64, 0.0f64, 0u32, 0u32);
+            for (s, &y) in scores.iter().zip(&labels) {
+                if y > 0.5 {
+                    fraud += *s as f64;
+                    nf += 1;
+                } else {
+                    legit += *s as f64;
+                    nl += 1;
+                }
+            }
+            let gap = fraud / nf as f64 - legit / nl as f64;
+            assert!(gap > 0.15, "{model}: fraud/legit gap {gap} too small");
+            pool.release(model);
+        }
+    }
+
+    #[test]
+    fn batch_variants_agree_with_singles() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let pool = ModelPool::new(fix.manifest().unwrap());
+        let h = pool.acquire("s2").unwrap();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let n = 90; // crosses the 64 and 256 variants with padding
+        let feats: Vec<f32> = (0..n * FEATURE_DIM).map(|_| rng.normal() as f32).collect();
+        let batched = h.infer(&feats, n).unwrap();
+        for i in (0..n).step_by(13) {
+            let single = h
+                .infer(&feats[i * FEATURE_DIM..(i + 1) * FEATURE_DIM], 1)
+                .unwrap();
+            assert!(
+                (batched[i] - single[0]).abs() < 1e-6,
+                "row {i}: batched {} vs single {}",
+                batched[i],
+                single[0]
+            );
+        }
+        pool.release("s2");
+    }
+
+    #[test]
+    fn temp_fixture_cleans_up_on_drop() {
+        let path = {
+            let fix = SimArtifacts::in_temp().unwrap();
+            assert!(fix.root().join("manifest.json").exists());
+            fix.root().clone()
+        };
+        assert!(!path.exists(), "fixture dir survived drop");
+    }
+}

@@ -11,6 +11,10 @@
 //! * `GET /metrics` — counters, per-tenant batch `scored_events`
 //!   object, and request/batch latency percentiles (JSON)
 //! * `GET /admin/stats` — registry/pool dedup accounting
+//! * `GET /v1/lifecycle` — autopilot status: per-pair state machine,
+//!   drift scores, fit/promotion counters
+//! * `POST /v1/lifecycle/check` — run one controller tick now and
+//!   return the resulting status (manual trigger / cron hook)
 
 pub mod http;
 
@@ -104,6 +108,17 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
             .to_string();
             Response::json(200, body)
         }
+        ("GET", "/v1/lifecycle") => Response::json(200, lifecycle_status_json(engine, false)),
+        ("POST", "/v1/lifecycle/check") => match &engine.lifecycle {
+            None => Response::json(422, r#"{"error":"lifecycle is not enabled"}"#),
+            Some(hub) => match hub.tick(engine) {
+                Ok(_) => Response::json(200, lifecycle_status_json(engine, true)),
+                Err(e) => Response::json(
+                    500,
+                    Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+                ),
+            },
+        },
         ("GET", "/admin/stats") => {
             let s = engine.registry.stats();
             // One wait-free snapshot load: the same world the data
@@ -127,6 +142,57 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
         ("POST", _) | ("GET", _) => Response::text(404, "not found"),
         _ => Response::text(405, "method not allowed"),
     }
+}
+
+/// `GET /v1/lifecycle` body: autopilot enablement + per-pair status.
+fn lifecycle_status_json(engine: &Engine, ticked: bool) -> String {
+    let Some(hub) = &engine.lifecycle else {
+        return Json::obj(vec![
+            ("enabled", Json::Bool(false)),
+            ("pairs", Json::Arr(vec![])),
+        ])
+        .to_string();
+    };
+    let pairs: Vec<Json> = hub
+        .status()
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("tenant", Json::str(p.tenant.clone())),
+                ("predictor", Json::str(p.predictor.clone())),
+                ("state", Json::str(p.state.as_str())),
+                ("psi", Json::Num(p.psi)),
+                ("ks", Json::Num(p.ks)),
+                ("fitSamples", Json::Num(p.fit_samples as f64)),
+                ("windowSamples", Json::Num(p.window_samples as f64)),
+                ("baselineFrozen", Json::Bool(p.baseline_frozen)),
+                ("fits", Json::Num(p.fits as f64)),
+                ("promotions", Json::Num(p.promotions as f64)),
+                ("validationFailures", Json::Num(p.validation_failures as f64)),
+                ("droppedSamples", Json::Num(p.dropped_samples as f64)),
+                (
+                    "shadow",
+                    match &p.shadow {
+                        Some(s) => Json::str(s.clone()),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "lastError",
+                    match &p.last_error {
+                        Some(e) => Json::str(e.clone()),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("enabled", Json::Bool(true)),
+        ("ticked", Json::Bool(ticked)),
+        ("pairs", Json::Arr(pairs)),
+    ])
+    .to_string()
 }
 
 /// Parse one score payload object into a [`ScoreRequest`] (shared by
@@ -364,6 +430,68 @@ predictors:
             let (status, _) = http_request(&addr, "POST", "/score", bad).unwrap();
             assert_eq!(status, 422, "payload: {bad}");
         }
+    }
+
+    #[test]
+    fn lifecycle_endpoints_report_and_tick() {
+        // Sim-dialect artifacts: runs without `make artifacts`.
+        let (_fix, engine) = crate::simulator::drift_storm::tests::sim_engine("");
+        let d = crate::simulator::FEATURE_DIM;
+        let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 5).unwrap();
+
+        // Status before any tick: enabled, no pairs yet.
+        let (status, body) = http_request(&addr, "GET", "/v1/lifecycle", "").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.get("enabled").and_then(crate::util::json::Json::as_bool), Some(true));
+
+        // Score some traffic for the managed tenant, then trigger a
+        // manual check: the pair must appear, observing.
+        let features = vec!["0.1"; d].join(",");
+        let payload = format!(r#"{{"tenant": "acme", "features": [{features}]}}"#);
+        for _ in 0..3 {
+            let (s, b) = http_request(&addr, "POST", "/score", &payload).unwrap();
+            assert_eq!(s, 200, "{b}");
+        }
+        let (status, body) = http_request(&addr, "POST", "/v1/lifecycle/check", "").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.get("ticked").and_then(crate::util::json::Json::as_bool), Some(true));
+        let pairs = v.req("pairs").unwrap().as_arr().unwrap();
+        assert_eq!(pairs.len(), 1, "{body}");
+        assert_eq!(pairs[0].req_str("tenant").unwrap(), "acme");
+        assert_eq!(pairs[0].req_str("predictor").unwrap(), "duo");
+        assert_eq!(pairs[0].req_str("state").unwrap(), "observing");
+        // The tick also shows up in /metrics counters.
+        let (_, metrics) = http_request(&addr, "GET", "/metrics", "").unwrap();
+        assert!(metrics.contains("lifecycle_ticks"), "{metrics}");
+    }
+
+    #[test]
+    fn lifecycle_endpoints_when_disabled() {
+        let fix = crate::runtime::SimArtifacts::in_temp().unwrap();
+        let pool = Arc::new(crate::runtime::ModelPool::new(fix.manifest().unwrap()));
+        let yaml = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s3]
+  quantile: identity
+"#;
+        let engine = Arc::new(
+            Engine::build(&MuseConfig::from_yaml(yaml).unwrap(), pool).unwrap(),
+        );
+        let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 5).unwrap();
+        let (status, body) = http_request(&addr, "GET", "/v1/lifecycle", "").unwrap();
+        assert_eq!(status, 200);
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.get("enabled").and_then(crate::util::json::Json::as_bool), Some(false));
+        let (status, _) = http_request(&addr, "POST", "/v1/lifecycle/check", "").unwrap();
+        assert_eq!(status, 422);
     }
 
     #[test]

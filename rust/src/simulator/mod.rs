@@ -1,11 +1,14 @@
 //! Simulation substrates: the synthetic multi-tenant transaction
 //! workload, the Kubernetes-style rolling-update cluster model behind
 //! Fig. 5, the real-thread swap-under-load harness proving that
-//! routing-config promotions never stall the data plane, and the
+//! routing-config promotions never stall the data plane, the
 //! multi-tenant batch-scoring throughput scenario exercising
-//! `Engine::score_batch` end to end.
+//! `Engine::score_batch` end to end, and the drift-storm scenario
+//! proving the lifecycle autopilot recalibrates per-tenant alert
+//! rates with zero manual control-plane calls.
 
 pub mod cluster;
+pub mod drift_storm;
 pub mod multitenant;
 pub mod workload;
 
@@ -13,5 +16,6 @@ pub use cluster::{
     swap_storm, ClusterConfig, ClusterSim, LatencyModel, RolloutTrace, SwapStormConfig,
     SwapStormReport,
 };
+pub use drift_storm::{run_drift_storm, DriftStormConfig, DriftStormReport};
 pub use multitenant::{run_batch_mix, BatchMixConfig, BatchMixReport};
 pub use workload::{Event, TenantProfile, TrafficMix, Workload, FEATURE_DIM};

@@ -69,6 +69,54 @@ pub fn fit_gated(
     fit_from_scores(scores, ref_quantiles)
 }
 
+/// Fit from a **pre-estimated source quantile grid** instead of a raw
+/// score replay — O(grid), independent of how many events produced
+/// the estimate. `n_samples` is the number of observations behind the
+/// grid (the Eq. 5 currency). This is the primitive the lifecycle
+/// autopilot's streaming-sketch refits consume
+/// (`lifecycle::SketchSummary::fit_quantile_map`): the sketch hands
+/// over its merged quantile grid, and recalibration never replays the
+/// data lake. [`fit_from_scores`] remains for offline fits over
+/// explicit sample vectors.
+pub fn fit_from_grid(
+    mut src_grid: Vec<f64>,
+    n_samples: u64,
+    ref_quantiles: &[f64],
+) -> Result<QuantileMap> {
+    ensure!(
+        src_grid.len() == ref_quantiles.len(),
+        "source grid has {} points for {} reference points",
+        src_grid.len(),
+        ref_quantiles.len()
+    );
+    ensure!(
+        n_samples >= ref_quantiles.len() as u64,
+        "grid estimated from {n_samples} samples for {} quantile points",
+        ref_quantiles.len()
+    );
+    dedup_monotone(&mut src_grid);
+    QuantileMap::new(src_grid, ref_quantiles.to_vec())
+}
+
+/// Gate + fit from a grid: the Eq. 5 bound applies to `n_samples`,
+/// exactly as the data-lake path applies it to the replayed count.
+pub fn fit_grid_gated(
+    src_grid: Vec<f64>,
+    n_samples: u64,
+    ref_quantiles: &[f64],
+    alert_rate: f64,
+    delta: f64,
+    z: f64,
+) -> Result<QuantileMap> {
+    let need = required_samples(alert_rate, delta, z)?;
+    ensure!(
+        n_samples >= need,
+        "insufficient samples for quantile fit: grid built from {n_samples}, Eq.5 \
+         requires {need} (a={alert_rate}, delta={delta}, z={z})"
+    );
+    fit_from_grid(src_grid, n_samples, ref_quantiles)
+}
+
 /// Make a non-decreasing grid strictly increasing by nudging ties up
 /// by one ULP. Empirical quantiles of heavily-concentrated score
 /// distributions (most fraud scores pile near 0) produce ties which
@@ -166,6 +214,67 @@ mod tests {
         assert!(err.to_string().contains("Eq.5"), "{err}");
         // With a lax requirement it passes.
         assert!(fit_gated(&scores, &refq, 0.5, 0.5, 1.0).is_ok());
+    }
+
+    #[test]
+    fn sketch_fit_matches_exact_fit() {
+        // Fit T^Q from a sketch's quantile grid (the autopilot refit
+        // path, via the generic fit_from_grid primitive) and from the
+        // full sample vector: both must align the mapped distribution
+        // with the reference to comparable KS distance.
+        use crate::lifecycle::sketch::QuantileSketch;
+        let mut rng = Rng::new(21);
+        let sample: Vec<f64> = (0..60_000).map(|_| rng.beta(2.0, 8.0)).collect();
+        let mut sk = QuantileSketch::with_seed(1024, 9);
+        for &x in &sample {
+            sk.insert(x);
+        }
+        let refq = stats::prob_grid(257); // uniform reference
+        let exact = fit_from_scores(&sample, &refq).unwrap();
+        let sketched = sk.summary().fit_quantile_map(&refq).unwrap();
+        let fresh: Vec<f64> = (0..20_000).map(|_| rng.beta(2.0, 8.0)).collect();
+        let ks_exact =
+            stats::ks_distance(&fresh.iter().map(|&s| exact.apply(s)).collect::<Vec<_>>(), |x| {
+                x.clamp(0.0, 1.0)
+            });
+        let ks_sketch = stats::ks_distance(
+            &fresh.iter().map(|&s| sketched.apply(s)).collect::<Vec<_>>(),
+            |x| x.clamp(0.0, 1.0),
+        );
+        assert!(ks_exact < 0.02, "exact KS {ks_exact}");
+        assert!(
+            ks_sketch < ks_exact + 2.0 * sk.epsilon(),
+            "sketch KS {ks_sketch} vs exact {ks_exact} (eps {})",
+            sk.epsilon()
+        );
+    }
+
+    #[test]
+    fn sketch_fit_is_gated_by_eq5() {
+        use crate::lifecycle::sketch::QuantileSketch;
+        let mut sk = QuantileSketch::new(256);
+        let mut rng = Rng::new(22);
+        for _ in 0..100 {
+            sk.insert(rng.f64());
+        }
+        let refq = stats::prob_grid(11);
+        let err = sk
+            .summary()
+            .fit_quantile_map_gated(&refq, 0.01, 0.2, 1.96)
+            .unwrap_err();
+        assert!(err.to_string().contains("Eq.5"), "{err}");
+        assert!(sk.summary().fit_quantile_map_gated(&refq, 0.5, 0.5, 1.0).is_ok());
+    }
+
+    #[test]
+    fn grid_fit_rejects_mismatch_and_thin_samples() {
+        let refq = stats::prob_grid(11);
+        // Grid arity must match the reference.
+        assert!(fit_from_grid(vec![0.0, 1.0], 1000, &refq).is_err());
+        // A grid "estimated" from fewer samples than points is noise.
+        let grid: Vec<f64> = (0..11).map(|i| i as f64 / 10.0).collect();
+        assert!(fit_from_grid(grid.clone(), 5, &refq).is_err());
+        assert!(fit_from_grid(grid, 1000, &refq).is_ok());
     }
 
     #[test]
