@@ -10,16 +10,18 @@
 
 use muse::config::{Intent, MuseConfig};
 use muse::coordinator::{ControlPlane, Engine, ScoreRequest};
+use muse::datalake::DataLake;
 use muse::lifecycle::{QuantileSketch, ScoreFeed};
+use muse::metrics::Counters;
 use muse::runtime::{Manifest, ModelPool, SimArtifacts};
 use muse::simulator::{run_batch_mix, BatchMixConfig, TenantProfile, Workload};
 use muse::transforms::{
     Aggregation, PipelineScratch, PipelineSpec, PosteriorCorrection, QuantileMap,
 };
 use muse::util::bench::{bench, section, CountdownGuard};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 const CONFIG: &str = r#"
@@ -261,8 +263,188 @@ lifecycle:
     }
 }
 
+/// A faithful re-enactment of the pre-refactor data lake — one global
+/// `Mutex` around a `VecDeque` ring plus per-pair count maps, paying
+/// two `String` allocations per append — used as the baseline the
+/// sharded lock-free lake is measured against. Pure, always runs.
+struct MutexLake {
+    inner: Mutex<MutexLakeInner>,
+    cap: usize,
+}
+
+#[derive(Default)]
+struct MutexLakeInner {
+    records: VecDeque<(String, String, f64, f64, bool, u64)>,
+    counts: HashMap<String, HashMap<String, usize>>,
+    seq: u64,
+}
+
+impl MutexLake {
+    fn new(cap: usize) -> MutexLake {
+        MutexLake {
+            inner: Mutex::new(MutexLakeInner::default()),
+            cap,
+        }
+    }
+
+    fn append(&self, tenant: &str, predictor: &str, score: f64, raw: f64, shadow: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if self.cap > 0 && inner.records.len() >= self.cap {
+            if let Some((t, p, ..)) = inner.records.pop_front() {
+                if let Some(m) = inner.counts.get_mut(&t) {
+                    if let Some(c) = m.get_mut(&p) {
+                        *c = c.saturating_sub(1);
+                    }
+                }
+            }
+        }
+        let seq = inner.seq;
+        inner.seq += 1;
+        *inner
+            .counts
+            .entry(tenant.to_string())
+            .or_default()
+            .entry(predictor.to_string())
+            .or_insert(0) += 1;
+        inner
+            .records
+            .push_back((tenant.to_string(), predictor.to_string(), score, raw, shadow, seq));
+    }
+}
+
+/// Sharded-vs-global data lake: single-thread cost, then the
+/// multi-threaded append race where the global mutex serializes and
+/// the stripes do not. Pure, always runs.
+fn bench_lake_sharded_vs_global() {
+    section("observation plane: sharded lock-free lake vs global-mutex baseline");
+    const CAP: usize = 1 << 16;
+    let mutex_lake = MutexLake::new(CAP);
+    let r = bench("mutex lake append (seed re-enactment)", 5_000, 500_000, || {
+        mutex_lake.append("bank1", "p1", 0.5, 0.4, false);
+    });
+    println!("{}   ({:.1} ns/event)", r.report(), r.mean_ns);
+    let lake = DataLake::with_shards(CAP, 8);
+    let r_sharded = bench("sharded lake append (8 stripes)", 5_000, 500_000, || {
+        lake.append("bank1", "p1", 0.5, 0.4, false);
+    });
+    println!(
+        "{}   ({:.1} ns/event, {:.2}x vs mutex single-thread)",
+        r_sharded.report(),
+        r_sharded.mean_ns,
+        r.mean_ns / r_sharded.mean_ns
+    );
+
+    for threads in [4usize, 8] {
+        let per_thread = 200_000usize;
+        let mutex_lake = MutexLake::new(CAP);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for w in 0..threads {
+                let mutex_lake = &mutex_lake;
+                s.spawn(move || {
+                    let tenant = if w % 2 == 0 { "bank1" } else { "bank2" };
+                    for _ in 0..per_thread {
+                        mutex_lake.append(tenant, "p1", 0.5, 0.4, false);
+                    }
+                });
+            }
+        });
+        let mutex_eps = (threads * per_thread) as f64 / t0.elapsed().as_secs_f64();
+
+        let lake = DataLake::with_shards(CAP, 8);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for w in 0..threads {
+                let lake = &lake;
+                s.spawn(move || {
+                    let tenant = if w % 2 == 0 { "bank1" } else { "bank2" };
+                    for _ in 0..per_thread {
+                        lake.append(tenant, "p1", 0.5, 0.4, false);
+                    }
+                });
+            }
+        });
+        let sharded_eps = (threads * per_thread) as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "  {threads} threads: mutex {mutex_eps:>12.0} appends/s | sharded {sharded_eps:>12.0} appends/s ({:.2}x)",
+            sharded_eps / mutex_eps
+        );
+        assert_eq!(lake.len(), CAP.min(threads * per_thread), "sharded lake lost records");
+    }
+}
+
+/// Hot counters: the seed's fully-locked map, the new wait-free
+/// name-keyed path, and the pre-resolved handle — single-thread cost
+/// and the 8-thread contended case. Pure, always runs.
+fn bench_hot_counters() {
+    section("observation plane: wait-free counters vs locked-map baseline");
+    // Seed re-enactment: every bump takes the registry mutex.
+    let locked: Mutex<BTreeMap<String, AtomicU64>> = Mutex::new(BTreeMap::new());
+    let r_locked = bench("locked map inc (seed re-enactment)", 10_000, 2_000_000, || {
+        let mut map = locked.lock().unwrap();
+        if let Some(c) = map.get("requests_live") {
+            c.fetch_add(1, Ordering::Relaxed);
+        } else {
+            map.entry("requests_live".to_string())
+                .or_insert_with(|| AtomicU64::new(0))
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    println!("{}   ({:.1} ns/inc)", r_locked.report(), r_locked.mean_ns);
+
+    let counters = Counters::new();
+    let r_named = bench("wait-free named inc (snapshot+probe)", 10_000, 2_000_000, || {
+        counters.inc("requests_live");
+    });
+    println!("{}   ({:.1} ns/inc)", r_named.report(), r_named.mean_ns);
+
+    let handle = counters.handle("requests_live");
+    let r_handle = bench("pre-resolved handle inc (one fetch_add)", 10_000, 2_000_000, || {
+        handle.inc();
+    });
+    println!(
+        "{}   ({:.1} ns/inc, {:.2}x vs locked map)",
+        r_handle.report(),
+        r_handle.mean_ns,
+        r_locked.mean_ns / r_handle.mean_ns
+    );
+
+    let per_thread = 500_000usize;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let locked = &locked;
+            s.spawn(move || {
+                for _ in 0..per_thread {
+                    let map = locked.lock().unwrap();
+                    map["requests_live"].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let locked_ops = 8.0 * per_thread as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let handle = handle.clone();
+            s.spawn(move || {
+                for _ in 0..per_thread {
+                    handle.inc();
+                }
+            });
+        }
+    });
+    let handle_ops = 8.0 * per_thread as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "  8 threads: locked {locked_ops:>12.0} incs/s | handle {handle_ops:>12.0} incs/s ({:.2}x)",
+        handle_ops / locked_ops
+    );
+}
+
 fn main() {
     bench_fused_vs_staged();
+    bench_lake_sharded_vs_global();
+    bench_hot_counters();
     bench_lifecycle_overhead();
 
     let Ok(manifest) = Manifest::load(Manifest::default_root()) else {

@@ -136,12 +136,21 @@ pub struct ServerConfig {
     /// the engine from unbounded single-request work).
     pub max_batch_events: usize,
     pub warmup_requests: usize,
-    /// Data-lake retention cap: oldest records are evicted once the
-    /// lake holds this many (0 = unbounded). Quantile refits no longer
-    /// replay full history (they consume lifecycle sketches), so the
-    /// lake only needs enough depth for shadow validation and the
-    /// repro harnesses.
+    /// Data-lake retention cap: oldest records are evicted (per
+    /// stripe) once the lake holds this many (0 = the lake's default
+    /// capacity, 2^20). Quantile refits no longer replay full history
+    /// (they consume lifecycle sketches), so the lake only needs
+    /// enough depth for shadow validation and the repro harnesses.
     pub lake_max_records: usize,
+    /// Ring stripes in the sharded data lake (`datalake` module docs):
+    /// consecutive appends land on different stripes, so concurrent
+    /// workers never write the same cache lines. Clamped internally to
+    /// the retention cap.
+    pub lake_shards: usize,
+    /// Max HTTP request-body bytes; oversized requests are rejected
+    /// with `413 Payload Too Large` before the body is read, so one
+    /// client cannot balloon worker memory.
+    pub max_body_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -154,6 +163,8 @@ impl Default for ServerConfig {
             max_batch_events: 1024,
             warmup_requests: 200,
             lake_max_records: 1_000_000,
+            lake_shards: 8,
+            max_body_bytes: 1 << 20,
         }
     }
 }
@@ -332,6 +343,11 @@ impl MuseConfig {
             self.server.max_batch_events >= 1,
             "server.max_batch_events must be >= 1"
         );
+        ensure!(self.server.lake_shards >= 1, "server.lakeShards must be >= 1");
+        ensure!(
+            self.server.max_body_bytes >= 1024,
+            "server.maxBodyBytes must be >= 1024 (scoring payloads alone are hundreds of bytes)"
+        );
         let lc = &self.lifecycle;
         ensure!(
             lc.alert_rate > 0.0 && lc.alert_rate < 1.0,
@@ -357,15 +373,21 @@ impl MuseConfig {
             lc.shadow_timeout_ticks >= 1,
             "lifecycle.shadowTimeoutTicks must be >= 1"
         );
-        // Starvation guard: the lake ring is shared by every (tenant,
-        // predictor, live/shadow) stream, so a candidate's retained
-        // mirrors plateau at its share of the ring. A cap close to
-        // minValidationSamples could keep validation gated forever.
-        if lc.enabled && self.server.lake_max_records > 0 {
+        // Starvation guard: the lake rings are shared by every
+        // (tenant, predictor, live/shadow) stream, so a candidate's
+        // retained mirrors plateau at its share of the rings. A cap
+        // close to minValidationSamples could keep validation gated
+        // forever. 0 resolves to the lake's default capacity.
+        if lc.enabled {
+            let effective = if self.server.lake_max_records == 0 {
+                crate::datalake::DEFAULT_CAPACITY
+            } else {
+                self.server.lake_max_records
+            };
             ensure!(
-                self.server.lake_max_records >= 8 * lc.min_validation_samples,
+                effective >= 8 * lc.min_validation_samples,
                 "server.lakeMaxRecords ({}) must be >= 8x lifecycle.minValidationSamples ({}) \
-                 or 0 (unbounded), or shadow validation can starve",
+                 or 0 (default capacity), or shadow validation can starve",
                 self.server.lake_max_records,
                 lc.min_validation_samples
             );
@@ -537,6 +559,14 @@ fn parse_server(v: &Json) -> Result<ServerConfig> {
             .get("lakeMaxRecords")
             .and_then(Json::as_usize)
             .unwrap_or(d.lake_max_records),
+        lake_shards: v
+            .get("lakeShards")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.lake_shards),
+        max_body_bytes: v
+            .get("maxBodyBytes")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.max_body_bytes),
     })
 }
 
@@ -732,6 +762,19 @@ lifecycle:
         ] {
             assert!(MuseConfig::from_yaml(bad).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn server_observation_plane_knobs_parse_and_validate() {
+        let cfg =
+            MuseConfig::from_yaml("server:\n  lakeShards: 16\n  maxBodyBytes: 4096\n").unwrap();
+        assert_eq!(cfg.server.lake_shards, 16);
+        assert_eq!(cfg.server.max_body_bytes, 4096);
+        let d = MuseConfig::from_yaml("").unwrap();
+        assert_eq!(d.server.lake_shards, 8);
+        assert_eq!(d.server.max_body_bytes, 1 << 20);
+        assert!(MuseConfig::from_yaml("server:\n  lakeShards: 0\n").is_err());
+        assert!(MuseConfig::from_yaml("server:\n  maxBodyBytes: 100\n").is_err());
     }
 
     #[test]

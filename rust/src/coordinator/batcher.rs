@@ -7,6 +7,42 @@
 //! batching; here the coordinator owns it, which also exercises the
 //! AOT batch variants (1/16/64/256) produced by the compile path.
 //!
+//! # Allocation-free submit path
+//!
+//! The previous submit path paid, per event: a `sync_channel(1)`
+//! allocation for the reply, a `String` clone of the tenant, a channel
+//! node allocation for the queue send, and a mutex acquisition for the
+//! stats. This one pays none of them:
+//!
+//! * the caller pins a `Submission` on its own stack — features and
+//!   tenant are **borrowed** (`&[f32]` / `&str`), valid because the
+//!   caller blocks until the worker publishes the reply;
+//! * the submission is linked into an intrusive Vyukov-style MPSC
+//!   queue: a push is one `swap` + one `store`, wait-free, no heap
+//!   node;
+//! * the reply handshake is a per-submission atomic state flag plus
+//!   `std::thread::park`/`unpark` — no channel;
+//! * [`BatcherStats`] are plain atomics.
+//!
+//! ## Safety contract (the whole module hangs on it)
+//!
+//! A queued submission's memory — the stack frame of a caller inside
+//! [`Batcher::score`] — stays valid until the worker stores
+//! `DONE` into its state flag, because the caller does not return
+//! before observing `DONE`. The worker therefore (a) never touches a
+//! submission after flagging it, and (b) is guaranteed to flag every
+//! submission exactly once, including on shutdown and on a panicking
+//! scoring pass (a catch-unwind converts panics into error replies,
+//! and a drop guard flags queue stragglers even if the worker thread
+//! itself dies). The shutdown handshake closes the submit/teardown
+//! race with an in-flight counter: submitters register *before*
+//! checking the shutdown flag, and the worker keeps draining the queue
+//! until the in-flight count reaches zero, so a submission enqueued
+//! concurrently with shutdown is always flagged — a late submitter
+//! gets a clean "shut down" error, never a hang (the contract the
+//! decommission path relies on; there is no sentinel message and no
+//! dead-channel trick anymore).
+//!
 //! Transform execution inside the worker is the **compiled pipeline**
 //! (`transforms::pipeline`): expert scores land in a reusable SoA
 //! scratch, the branch-free kernel aggregates them, and each tenant's
@@ -17,25 +53,163 @@
 use super::predictor::Predictor;
 use crate::transforms::{CompiledPipeline, PipelineScratch};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread;
+use std::cell::UnsafeCell;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::{self, Thread};
 use std::time::{Duration, Instant};
 
-struct Pending {
-    features: Vec<f32>,
-    tenant: String,
-    reply: mpsc::SyncSender<Result<(f64, f64)>>, // (final, raw)
+/// Reply states of one submission.
+const PENDING: u32 = 0;
+const DONE: u32 = 1;
+
+/// One in-flight scoring request, pinned on the submitter's stack.
+/// Fields are written by the submitter before the push and read by the
+/// worker until it flags `state = DONE`; `result` crosses back the
+/// other way. See the module-level safety contract.
+struct Submission {
+    /// Intrusive queue link (Vyukov MPSC).
+    next: AtomicPtr<Submission>,
+    /// Borrowed feature slice (valid until `state == DONE`).
+    features: *const f32,
+    features_len: usize,
+    /// Borrowed tenant name (valid until `state == DONE`).
+    tenant: *const u8,
+    tenant_len: usize,
+    /// The submitting thread, unparked after the reply is published.
+    waiter: Thread,
+    state: AtomicU32,
+    /// Written by the worker before `state = DONE` (Release), read by
+    /// the submitter after observing `DONE` (Acquire).
+    result: UnsafeCell<Option<Result<(f64, f64)>>>,
 }
 
-/// A dynamic batcher bound to one predictor.
-pub struct Batcher {
-    queue_tx: mpsc::Sender<Pending>,
-    worker: Option<thread::JoinHandle<()>>,
-    shutdown: Arc<AtomicBool>,
-    stats: Arc<Mutex<BatcherStats>>,
-    pub max_batch: usize,
-    pub max_delay: Duration,
+impl Submission {
+    fn new(features: &[f32], tenant: &str) -> Submission {
+        Submission {
+            next: AtomicPtr::new(ptr::null_mut()),
+            features: features.as_ptr(),
+            features_len: features.len(),
+            tenant: tenant.as_ptr(),
+            tenant_len: tenant.len(),
+            waiter: thread::current(),
+            state: AtomicU32::new(PENDING),
+            result: UnsafeCell::new(None),
+        }
+    }
+
+    /// Queue stub node (never scored, never flagged).
+    fn stub() -> Submission {
+        Submission::new(&[], "")
+    }
+
+    /// The borrowed feature slice.
+    ///
+    /// SAFETY (caller): only before this submission is flagged `DONE`.
+    unsafe fn features(&self) -> &[f32] {
+        std::slice::from_raw_parts(self.features, self.features_len)
+    }
+
+    /// The borrowed tenant name.
+    ///
+    /// SAFETY (caller): only before this submission is flagged `DONE`.
+    unsafe fn tenant(&self) -> &str {
+        std::str::from_utf8_unchecked(std::slice::from_raw_parts(self.tenant, self.tenant_len))
+    }
+}
+
+/// Intrusive MPSC queue (Vyukov): producers push with one `swap` + one
+/// `store`; the single consumer pops in FIFO order. Nodes are the
+/// submissions themselves — no allocation anywhere.
+struct SubmitQueue {
+    /// Push end (most recently pushed node).
+    head: AtomicPtr<Submission>,
+    /// Pop end; consumer-owned (single consumer).
+    tail: UnsafeCell<*mut Submission>,
+    stub: Box<Submission>,
+}
+
+// SAFETY: `head` is an atomic; `tail` is only touched by the single
+// consumer (the worker thread — enforced by this module, which never
+// hands `pop` to anyone else); `stub` is only linked/unlinked through
+// the queue protocol.
+unsafe impl Send for SubmitQueue {}
+unsafe impl Sync for SubmitQueue {}
+
+impl SubmitQueue {
+    fn new() -> SubmitQueue {
+        let stub = Box::new(Submission::stub());
+        let stub_ptr = &*stub as *const Submission as *mut Submission;
+        SubmitQueue {
+            head: AtomicPtr::new(stub_ptr),
+            tail: UnsafeCell::new(stub_ptr),
+            stub,
+        }
+    }
+
+    fn stub_ptr(&self) -> *mut Submission {
+        &*self.stub as *const Submission as *mut Submission
+    }
+
+    /// Producer side: wait-free (one swap, one store), no allocation.
+    ///
+    /// SAFETY (caller): `node` must stay valid until the consumer
+    /// flags it `DONE` (stack pinning + park contract above).
+    unsafe fn push(&self, node: *mut Submission) {
+        (*node).next.store(ptr::null_mut(), Ordering::Relaxed);
+        let prev = self.head.swap(node, Ordering::AcqRel);
+        (*prev).next.store(node, Ordering::Release);
+    }
+
+    /// Consumer side (worker thread only). Returns the oldest
+    /// submission, or `None` when the queue is empty *or* a producer
+    /// is mid-push (retry shortly).
+    ///
+    /// SAFETY (caller): single consumer; returned nodes are owned by
+    /// the caller until flagged.
+    unsafe fn pop(&self) -> Option<*mut Submission> {
+        let tail_cell = self.tail.get();
+        let mut tail = *tail_cell;
+        let mut next = (*tail).next.load(Ordering::Acquire);
+        if tail == self.stub_ptr() {
+            let n = next;
+            if n.is_null() {
+                return None; // empty
+            }
+            *tail_cell = n;
+            tail = n;
+            next = (*tail).next.load(Ordering::Acquire);
+        }
+        if !next.is_null() {
+            *tail_cell = next;
+            return Some(tail);
+        }
+        let head = self.head.load(Ordering::Acquire);
+        if tail != head {
+            return None; // producer between swap and store; retry
+        }
+        // Single element left: re-link the stub behind it so the
+        // element can be detached.
+        self.push(self.stub_ptr());
+        next = (*tail).next.load(Ordering::Acquire);
+        if !next.is_null() {
+            *tail_cell = next;
+            return Some(tail);
+        }
+        None
+    }
+}
+
+/// State shared between submitters and the worker.
+struct Shared {
+    queue: SubmitQueue,
+    shutdown: AtomicBool,
+    /// Submitters inside `score` (registered *before* the shutdown
+    /// check — the Dekker half that makes teardown race-free).
+    inflight: AtomicUsize,
+    batches: AtomicU64,
+    events: AtomicU64,
 }
 
 /// Rolling batcher statistics.
@@ -45,23 +219,36 @@ pub struct BatcherStats {
     pub events: u64,
 }
 
+/// A dynamic batcher bound to one predictor.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    /// The worker's thread handle, for wakeups after a push.
+    worker_thread: Thread,
+    worker: Option<thread::JoinHandle<()>>,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
 impl Batcher {
     pub fn new(predictor: Arc<Predictor>, max_batch: usize, max_delay: Duration) -> Batcher {
         assert!(max_batch >= 1);
-        let (tx, rx) = mpsc::channel::<Pending>();
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let stop = Arc::clone(&shutdown);
-        let stats = Arc::new(Mutex::new(BatcherStats::default()));
-        let stats_w = Arc::clone(&stats);
+        let shared = Arc::new(Shared {
+            queue: SubmitQueue::new(),
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            batches: AtomicU64::new(0),
+            events: AtomicU64::new(0),
+        });
+        let shared_w = Arc::clone(&shared);
         let worker = thread::Builder::new()
             .name(format!("batcher-{}", predictor.name))
-            .spawn(move || batcher_main(predictor, rx, stop, max_batch, max_delay, stats_w))
+            .spawn(move || batcher_main(predictor, shared_w, max_batch, max_delay))
             .expect("spawn batcher");
+        let worker_thread = worker.thread().clone();
         Batcher {
-            queue_tx: tx,
+            shared,
+            worker_thread,
             worker: Some(worker),
-            shutdown,
-            stats,
             max_batch,
             max_delay,
         }
@@ -69,22 +256,41 @@ impl Batcher {
 
     /// Batching effectiveness so far (batches vs events coalesced).
     pub fn stats(&self) -> BatcherStats {
-        *self.stats.lock().unwrap()
+        BatcherStats {
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            events: self.shared.events.load(Ordering::Relaxed),
+        }
     }
 
-    /// Submit one event; blocks until its batch completes.
-    pub fn score(&self, features: Vec<f32>, tenant: &str) -> Result<(f64, f64)> {
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.queue_tx
-            .send(Pending {
-                features,
-                tenant: tenant.to_string(),
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("batcher has shut down"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("batcher dropped the reply"))?
+    /// Submit one event; blocks until its batch completes. The
+    /// features and tenant are borrowed for the duration of the call —
+    /// the submit path performs **zero** heap allocations and **zero**
+    /// lock acquisitions (one queue swap, one state-flag wait).
+    pub fn score(&self, features: &[f32], tenant: &str) -> Result<(f64, f64)> {
+        // Register before the shutdown check (Dekker with the worker's
+        // drain loop): either we observe shutdown here, or the worker
+        // observes inflight > 0 and keeps draining until we are
+        // flagged.
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(anyhow!("batcher has shut down"));
+        }
+        let sub = Submission::new(features, tenant);
+        let sub_ptr = &sub as *const Submission as *mut Submission;
+        // SAFETY: `sub` lives on this stack frame and we do not return
+        // before observing DONE below, which is the worker's last
+        // access — the queue contract of the module docs.
+        unsafe { self.shared.queue.push(sub_ptr) };
+        // Unpark is cheap when the worker is running (token store) and
+        // necessary when it parked waiting for a first event.
+        self.worker_thread.unpark();
+        while sub.state.load(Ordering::Acquire) != DONE {
+            thread::park();
+        }
+        let result = unsafe { (*sub.result.get()).take() };
+        self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        result.unwrap_or_else(|| Err(anyhow!("batcher dropped the reply")))
     }
 
     /// Stop the worker without consuming the batcher (decommission
@@ -92,103 +298,180 @@ impl Batcher {
     /// engine snapshot — get a clean "shut down" error instead of
     /// keeping a worker thread alive behind a retired snapshot.
     pub fn shutdown(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        // Wake the worker if it is blocked waiting for a first event:
-        // a sentinel whose reply channel is already closed.
-        let (reply_tx, _) = mpsc::sync_channel(1);
-        let _ = self.queue_tx.send(Pending {
-            features: vec![],
-            tenant: String::new(),
-            reply: reply_tx,
-        });
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.worker_thread.unpark();
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the worker's recv with a sentinel-free approach:
-        // dropping the sender closes the channel.
-        let (dead_tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.queue_tx, dead_tx);
+        self.shutdown();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
     }
 }
 
+/// Flags one submission with a result and wakes its submitter. The
+/// state store is the worker's final access to the submission; the
+/// waiter handle is cloned out first.
+///
+/// SAFETY (caller): must be the queue consumer, flagging each popped
+/// submission exactly once.
+unsafe fn reply(sub: *mut Submission, result: Result<(f64, f64)>) {
+    let waiter = (*sub).waiter.clone();
+    *(*sub).result.get() = Some(result);
+    (*sub).state.store(DONE, Ordering::Release);
+    // `sub` may be invalid from here on — the submitter can wake and
+    // return as soon as the store lands.
+    waiter.unpark();
+}
+
+/// Worker-exit guard: even if the worker dies on a path that misses
+/// the orderly drain (a panic outside the catch window), late and
+/// queued submitters must be flagged, never left parked.
+struct DrainOnExit {
+    shared: Arc<Shared>,
+}
+
+impl Drop for DrainOnExit {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Keep draining until no submitter is registered. Submitters
+        // registered after the shutdown store bail out before pushing.
+        loop {
+            // SAFETY: the worker thread is the sole consumer, and it
+            // is exiting through this guard.
+            while let Some(sub) = unsafe { self.shared.queue.pop() } {
+                unsafe { reply(sub, Err(anyhow!("batcher shutting down"))) };
+            }
+            if self.shared.inflight.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            thread::park_timeout(Duration::from_micros(50));
+        }
+    }
+}
+
+/// The worker's reusable buffers: persist across batches so the
+/// steady-state loop allocates nothing per batch.
+#[derive(Default)]
+struct WorkerBufs {
+    features: Vec<f32>,
+    scratch: PipelineScratch,
+    raw: Vec<f64>,
+    /// Per-event final results, staged before any reply goes out.
+    finals: Vec<Result<(f64, f64)>>,
+}
+
 fn batcher_main(
     predictor: Arc<Predictor>,
-    rx: mpsc::Receiver<Pending>,
-    shutdown: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     max_batch: usize,
     max_delay: Duration,
-    stats: Arc<Mutex<BatcherStats>>,
 ) {
+    let _guard = DrainOnExit {
+        shared: Arc::clone(&shared),
+    };
     let d = predictor.feature_dim();
-    // Reusable per-worker buffers: the feature matrix, the SoA expert
-    // lanes and the raw-score vector persist across batches, so the
-    // steady-state loop allocates nothing per batch.
-    let mut features: Vec<f32> = Vec::new();
-    let mut scratch = PipelineScratch::default();
-    let mut raw: Vec<f64> = Vec::new();
+    // Reusable per-worker buffers: the submission batch, the feature
+    // matrix, the SoA expert lanes and the raw-score vector persist
+    // across batches, so the steady-state loop allocates nothing per
+    // batch.
+    let mut batch: Vec<*mut Submission> = Vec::with_capacity(max_batch);
+    let mut bufs = WorkerBufs::default();
     loop {
-        // Block for the first event of a batch.
-        let first = match rx.recv() {
-            Ok(p) => p,
-            Err(_) => return, // all senders gone
-        };
-        let deadline = Instant::now() + max_delay;
-        let mut batch = vec![first];
-        // Fill until the deadline or the batch limit.
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+        // Block for the first event of a batch. A plain park suffices
+        // (no poll timeout): every producer push and every shutdown is
+        // followed by an unpark, and an unpark arriving between the
+        // pop and the park leaves a token that makes the park return
+        // immediately — no lost wakeup, no idle polling.
+        let first = loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return; // the exit guard drains stragglers
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(p) => batch.push(p),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            // SAFETY: single consumer (this thread).
+            match unsafe { shared.queue.pop() } {
+                Some(sub) => break sub,
+                None => thread::park(),
+            }
+        };
+        batch.clear();
+        batch.push(first);
+        // Fill until the deadline or the batch limit.
+        let deadline = Instant::now() + max_delay;
+        while batch.len() < max_batch {
+            // SAFETY: single consumer (this thread).
+            match unsafe { shared.queue.pop() } {
+                Some(sub) => batch.push(sub),
+                None => {
+                    let now = Instant::now();
+                    if now >= deadline || shared.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    thread::park_timeout((deadline - now).min(Duration::from_micros(50)));
+                }
             }
         }
-        if shutdown.load(Ordering::SeqCst) {
-            for p in batch {
-                let _ = p.reply.send(Err(anyhow!("batcher shutting down")));
+        if shared.shutdown.load(Ordering::SeqCst) {
+            for &sub in &batch {
+                // SAFETY: popped by this consumer, flagged once.
+                unsafe { reply(sub, Err(anyhow!("batcher shutting down"))) };
             }
             return;
         }
-        // Group by tenant (T^Q is tenant-specific) while keeping one
-        // inference call for the whole batch: run raw once, then apply
-        // each tenant's compiled pipeline tail.
-        let n = batch.len();
-        features.clear();
-        features.reserve(n * d);
-        let mut ok = true;
-        for p in &batch {
-            if p.features.len() != d {
-                ok = false;
+        // A panicking scoring pass must not strand parked submitters
+        // or kill the worker: convert the panic into error replies.
+        // `replied` tracks how many submissions were already flagged,
+        // so the recovery path never double-flags one (a flagged
+        // submitter may have returned and invalidated its frame).
+        let mut replied = 0usize;
+        let scored = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process_batch(&predictor, &shared, &batch, d, &mut bufs, &mut replied)
+        }));
+        if scored.is_err() {
+            for &sub in &batch[replied..] {
+                // SAFETY: popped by this consumer, not yet flagged.
+                unsafe { reply(sub, Err(anyhow!("batcher worker panicked during scoring"))) };
             }
-            features.extend_from_slice(&p.features);
         }
-        if !ok {
-            for p in batch {
-                let msg = if p.features.len() != d {
-                    Err(anyhow!("bad feature dim"))
-                } else {
-                    Err(anyhow!("batch rejected (peer had bad feature dim)"))
-                };
-                let _ = p.reply.send(msg);
-            }
-            continue;
+    }
+}
+
+/// Score one collected batch and reply to every submission. All
+/// fallible/panicking work (inference, pipeline resolution,
+/// finalization) is staged into `bufs.finals` first; the reply loops
+/// run afterwards and only perform non-panicking operations, with
+/// `replied` advanced per flag so the caller's panic recovery knows
+/// exactly which submissions are still unflagged.
+fn process_batch(
+    predictor: &Arc<Predictor>,
+    shared: &Shared,
+    batch: &[*mut Submission],
+    d: usize,
+    bufs: &mut WorkerBufs,
+    replied: &mut usize,
+) {
+    let n = batch.len();
+    bufs.features.clear();
+    bufs.features.reserve(n * d);
+    let mut ok = true;
+    for &sub in batch {
+        // SAFETY: not yet flagged; borrow valid (module contract).
+        let f = unsafe { (*sub).features() };
+        if f.len() != d {
+            ok = false;
         }
-        match predictor.score_batch_raw_compiled(&features, n, &mut scratch, &mut raw) {
+        bufs.features.extend_from_slice(f);
+    }
+    bufs.finals.clear();
+    if ok {
+        let scored =
+            predictor.score_batch_raw_compiled(&bufs.features, n, &mut bufs.scratch, &mut bufs.raw);
+        match scored {
             Ok(()) => {
-                {
-                    let mut s = stats.lock().unwrap();
-                    s.batches += 1;
-                    s.events += n as u64;
-                }
+                shared.batches.fetch_add(1, Ordering::Relaxed);
+                shared.events.fetch_add(n as u64, Ordering::Relaxed);
                 // One inference call for the mixed-tenant batch, then
                 // each event gets its own tenant's T^Q (Section 2.3.3:
                 // the mapping is tenant-specific). The compiled
@@ -199,32 +482,52 @@ fn batcher_main(
                 let quantiles = predictor.quantile_table();
                 let mut tenants: Vec<&str> = Vec::new();
                 let mut pipes: Vec<&Arc<CompiledPipeline>> = Vec::new();
-                for (p, &r) in batch.iter().zip(&raw) {
-                    let g = match tenants.iter().position(|t| *t == p.tenant) {
+                for (&sub, &r) in batch.iter().zip(bufs.raw.iter()) {
+                    // SAFETY: not yet flagged; borrow valid.
+                    let tenant = unsafe { (*sub).tenant() };
+                    let g = match tenants.iter().position(|t| *t == tenant) {
                         Some(g) => g,
                         None => {
-                            tenants.push(&p.tenant);
-                            pipes.push(quantiles.pipeline_for(&p.tenant));
+                            tenants.push(tenant);
+                            pipes.push(quantiles.pipeline_for(tenant));
                             tenants.len() - 1
                         }
                     };
-                    let _ = p.reply.send(Ok((pipes[g].finalize_one(r), r)));
+                    bufs.finals.push(Ok((pipes[g].finalize_one(r), r)));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                for p in batch {
-                    let _ = p.reply.send(Err(anyhow!(msg.clone())));
+                for _ in 0..n {
+                    bufs.finals.push(Err(anyhow!(msg.clone())));
                 }
             }
         }
+    } else {
+        for &sub in batch {
+            // SAFETY: not yet flagged; borrow valid.
+            let bad = unsafe { (*sub).features().len() } != d;
+            bufs.finals.push(if bad {
+                Err(anyhow!("bad feature dim"))
+            } else {
+                Err(anyhow!("batch rejected (peer had bad feature dim)"))
+            });
+        }
+    }
+    debug_assert_eq!(bufs.finals.len(), n);
+    // Reply phase: nothing here panics (moves, atomic stores, unpark).
+    for (&sub, result) in batch.iter().zip(bufs.finals.drain(..)) {
+        // SAFETY: popped by the consumer, flagged exactly once; the
+        // flag is the worker's last access to `sub`.
+        unsafe { reply(sub, result) };
+        *replied += 1;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{MuseConfig, QuantileMode, PredictorConfig};
+    use crate::config::{MuseConfig, PredictorConfig, QuantileMode};
     use crate::coordinator::registry::PredictorRegistry;
     use crate::runtime::{Manifest, ModelPool};
     use crate::transforms::QuantileMap;
@@ -273,7 +576,7 @@ mod tests {
                 let b = Arc::clone(&b);
                 thread::spawn(move || {
                     let feats = vec![0.01 * i as f32; d];
-                    b.score(feats, "t").unwrap()
+                    b.score(&feats, "t").unwrap()
                 })
             })
             .collect();
@@ -300,7 +603,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(9);
         for _ in 0..10 {
             let feats: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-            let (fin, raw) = b.score(feats.clone(), "t").unwrap();
+            let (fin, raw) = b.score(&feats, "t").unwrap();
             let direct = p.score(&feats, 1, "t").unwrap();
             assert!((fin - direct.scores[0]).abs() < 1e-9);
             assert!((raw - direct.raw[0]).abs() < 1e-9);
@@ -317,9 +620,9 @@ mod tests {
         );
         let b = Arc::new(Batcher::new(Arc::clone(&p), 8, Duration::from_millis(20)));
         let b1 = Arc::clone(&b);
-        let h1 = thread::spawn(move || b1.score(vec![0.0; d], "vip").unwrap());
+        let h1 = thread::spawn(move || b1.score(&vec![0.0; d], "vip").unwrap());
         let b2 = Arc::clone(&b);
-        let h2 = thread::spawn(move || b2.score(vec![0.0; d], "normal").unwrap());
+        let h2 = thread::spawn(move || b2.score(&vec![0.0; d], "normal").unwrap());
         let (vip, _) = h1.join().unwrap();
         let (normal, _) = h2.join().unwrap();
         assert!(vip >= 0.9, "vip transform not applied: {vip}");
@@ -330,7 +633,7 @@ mod tests {
     fn bad_feature_dim_is_rejected() {
         let Some(p) = predictor() else { return };
         let b = Batcher::new(Arc::clone(&p), 4, Duration::from_millis(1));
-        assert!(b.score(vec![0.0; 3], "t").is_err());
+        assert!(b.score(&[0.0; 3], "t").is_err());
     }
 
     #[test]
@@ -338,13 +641,46 @@ mod tests {
         let Some(p) = predictor() else { return };
         let d = p.feature_dim();
         let b = Batcher::new(Arc::clone(&p), 4, Duration::from_millis(1));
-        b.score(vec![0.0; d], "t").unwrap();
+        b.score(&vec![0.0; d], "t").unwrap();
         b.shutdown();
         // The worker exits; a stale-snapshot caller gets an error,
         // never a hang. (Exact message depends on where the race
-        // lands: rejected at send, at batch time, or reply dropped.)
-        let err = b.score(vec![0.0; d], "t").unwrap_err();
+        // lands: rejected at submit or flagged by the drain.)
+        let err = b.score(&vec![0.0; d], "t").unwrap_err();
         assert!(err.to_string().contains("batcher"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_flags_queued_submitters() {
+        // Submissions racing a shutdown must all resolve (reply or
+        // clean error) — the in-flight handshake, hammered.
+        let Some(p) = predictor() else { return };
+        let d = p.feature_dim();
+        for round in 0..8 {
+            let b = Arc::new(Batcher::new(
+                Arc::clone(&p),
+                64,
+                Duration::from_millis(2),
+            ));
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let b = Arc::clone(&b);
+                    thread::spawn(move || {
+                        let feats = vec![0.01 * i as f32; d];
+                        // Result may be Ok or a shutdown error; it
+                        // must never hang.
+                        let _ = b.score(&feats, "t");
+                    })
+                })
+                .collect();
+            if round % 2 == 0 {
+                thread::yield_now();
+            }
+            b.shutdown();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
     }
 
     #[test]
@@ -355,7 +691,7 @@ mod tests {
         // A single request must not wait for a full batch: total time
         // stays near max_delay + inference, far under a second.
         let t0 = Instant::now();
-        b.score(vec![0.0; d], "t").unwrap();
+        b.score(&vec![0.0; d], "t").unwrap();
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
 }

@@ -22,7 +22,7 @@ use crate::config::{Intent, MuseConfig, QuantileMode};
 use crate::datalake::DataLake;
 use crate::featurestore::FeatureStore;
 use crate::lifecycle::LifecycleHub;
-use crate::metrics::{Counters, LatencyHistogram};
+use crate::metrics::{CounterHandle, Counters, LatencyHistogram};
 use crate::runtime::ModelPool;
 use crate::transforms::{PipelineScratch, QuantileMap, ReferenceDistribution};
 use crate::util::swap::SnapCell;
@@ -41,14 +41,58 @@ pub struct ScoreRequest {
     pub features: Vec<f32>,
 }
 
-/// The client-visible response.
+/// The client-visible response. The predictor name is a shared
+/// `Arc<str>` clone of the routing config's own string — a refcount
+/// bump, not a per-event `String` allocation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScoreResponse {
     pub score: f64,
-    pub predictor: String,
+    pub predictor: Arc<str>,
     /// Number of shadow predictors the request was mirrored to.
     pub shadow_count: usize,
 }
+
+/// Pre-resolved handles for every counter the per-event paths bump:
+/// resolved once at engine build into direct atomics, so the hot path
+/// performs zero map probes and zero lock acquisitions for metrics
+/// (`metrics::counters` module docs). The same counters stay visible
+/// under their names in `/metrics` — handles alias the registry's own
+/// atomics.
+pub struct HotCounters {
+    pub requests_live: CounterHandle,
+    pub requests_batch: CounterHandle,
+    pub events_batch: CounterHandle,
+    pub shadow_missing_predictor: CounterHandle,
+    pub shadow_enrich_error: CounterHandle,
+}
+
+impl HotCounters {
+    fn resolve(counters: &Counters) -> HotCounters {
+        HotCounters {
+            requests_live: counters.handle("requests_live"),
+            requests_batch: counters.handle("requests_batch"),
+            events_batch: counters.handle("events_batch"),
+            shadow_missing_predictor: counters.handle("shadow_missing_predictor"),
+            shadow_enrich_error: counters.handle("shadow_enrich_error"),
+        }
+    }
+}
+
+/// Counter names the lifecycle controller bumps at tick rate,
+/// pre-interned at build so even a first drift event never pays the
+/// registry's copy-on-write insert on a serving box.
+const LIFECYCLE_COUNTER_NAMES: &[&str] = &[
+    "lifecycle_ticks",
+    "lifecycle_fits",
+    "lifecycle_drift_detected",
+    "lifecycle_promotions",
+    "lifecycle_validation_failures",
+    "lifecycle_shadow_timeouts",
+    "lifecycle_decommissions",
+    "lifecycle_decommission_races",
+    "lifecycle_samples_dropped",
+    "lifecycle_errors",
+];
 
 pub struct Engine {
     pub router: Router,
@@ -69,12 +113,17 @@ pub struct Engine {
     /// `server.maxBatchEvents`). Enforced here, in the engine; the
     /// HTTP layer only surfaces the resulting error as a 422.
     pub max_batch_events: usize,
+    /// HTTP request-body cap (config `server.maxBodyBytes`), consumed
+    /// by the HTTP front end when it binds.
+    pub max_body_bytes: usize,
     pub live_latency: LatencyHistogram,
     /// Whole-batch wall time per `score_batch` call — kept separate
     /// from `live_latency` so batch totals never pollute the
     /// single-request percentiles `/metrics` reports.
     pub batch_latency: LatencyHistogram,
     pub counters: Counters,
+    /// Pre-resolved per-event counter handles (see [`HotCounters`]).
+    pub hot: HotCounters,
     /// Batch-path scored events per tenant (bare tenant keys; surfaced
     /// as the `scored_events` object in `/metrics`). Updated once per
     /// (batch, tenant) group — the single-event hot path is untouched.
@@ -122,19 +171,29 @@ impl Engine {
             .lifecycle
             .enabled
             .then(|| Arc::new(LifecycleHub::new(config.lifecycle.clone())));
+        let counters = Counters::new();
+        let hot = HotCounters::resolve(&counters);
+        for name in LIFECYCLE_COUNTER_NAMES {
+            let _ = counters.handle(name);
+        }
         Ok(Engine {
             router,
             registry,
             features: FeatureStore::new(),
-            lake: Arc::new(DataLake::with_capacity(config.server.lake_max_records)),
+            lake: Arc::new(DataLake::with_shards(
+                config.server.lake_max_records,
+                config.server.lake_shards,
+            )),
             shadow_pool: ThreadPool::new(2.max(config.server.workers / 2)),
             snapshot,
             max_batch,
             max_batch_delay,
             max_batch_events: config.server.max_batch_events,
+            max_body_bytes: config.server.max_body_bytes,
             live_latency: LatencyHistogram::new(),
             batch_latency: LatencyHistogram::new(),
-            counters: Counters::new(),
+            counters,
+            hot,
             tenant_events: Counters::new(),
             quantile_points,
             lifecycle,
@@ -202,8 +261,12 @@ impl Engine {
     }
 
     /// Score one event end to end (the hot path). Exactly one
-    /// wait-free snapshot load; no `RwLock`, no `Mutex`, no `HashMap`
-    /// probe between request and batcher.
+    /// wait-free snapshot load; **zero** `RwLock`/`Mutex` acquisitions
+    /// anywhere on the path — routing, enrichment, batcher submit,
+    /// lake append, lifecycle feed, latency record and counters are
+    /// all wait-free — and zero heap allocations outside enrichment
+    /// and inference (the batcher borrows the enriched features and
+    /// the tenant; the lake and response share interned names).
     pub fn score(&self, req: &ScoreRequest) -> Result<ScoreResponse> {
         let t0 = Instant::now();
         let snap = self.load_snapshot();
@@ -217,7 +280,9 @@ impl Engine {
         // Hot path goes through the per-predictor dynamic batcher:
         // concurrent requests share one PJRT call; T^Q stays
         // per-tenant (applied post-aggregation inside the batcher).
-        let (score, raw) = entry.batcher.score(enriched, &req.intent.tenant)?;
+        // The submit borrows features + tenant — no reply channel, no
+        // clone (coordinator::batcher module docs).
+        let (score, raw) = entry.batcher.score(&enriched, &req.intent.tenant)?;
         self.lake
             .append(&req.intent.tenant, &entry.predictor.name, score, raw, false);
         // Feed the lifecycle sketches: wait-free table load + one
@@ -239,10 +304,10 @@ impl Engine {
         }
 
         self.live_latency.record(t0.elapsed().as_nanos() as u64);
-        self.counters.inc("requests_live");
+        self.hot.requests_live.inc();
         Ok(ScoreResponse {
             score,
-            predictor: resolution.live.to_string(),
+            predictor: resolution.live,
             shadow_count,
         })
     }
@@ -368,18 +433,17 @@ impl Engine {
                     scored.dim,
                 );
             }
-            let predictor_name = g.resolution.live.to_string();
             for (slot, &i) in g.indices.iter().enumerate() {
                 out[i] = Some(ScoreResponse {
                     score: scored.scores[slot],
-                    predictor: predictor_name.clone(),
+                    predictor: Arc::clone(&g.resolution.live),
                     shadow_count,
                 });
             }
         }
         self.batch_latency.record(t0.elapsed().as_nanos() as u64);
-        self.counters.inc("requests_batch");
-        self.counters.add("events_batch", reqs.len() as u64);
+        self.hot.requests_batch.inc();
+        self.hot.events_batch.add(reqs.len() as u64);
         Ok(out
             .into_iter()
             .map(|r| r.expect("every request belongs to exactly one group"))
@@ -401,7 +465,7 @@ impl Engine {
             // gate guarantees the snapshot tracks direct registry
             // mutations by the next request). Counted, never scored.
             let Some(entry) = snap.entry(shadow_name) else {
-                self.counters.inc("shadow_missing_predictor");
+                self.hot.shadow_missing_predictor.inc();
                 continue;
             };
             let enriched = match self
@@ -410,7 +474,7 @@ impl Engine {
             {
                 Ok(e) => e,
                 Err(_) => {
-                    self.counters.inc("shadow_enrich_error");
+                    self.hot.shadow_enrich_error.inc();
                     continue;
                 }
             };
@@ -423,7 +487,7 @@ impl Engine {
             let tenant = tenant.to_string();
             let name = entry.predictor.name.clone();
             self.shadow_pool.execute(move || {
-                if let Ok((score, raw)) = batcher.score(enriched, &tenant) {
+                if let Ok((score, raw)) = batcher.score(&enriched, &tenant) {
                     lake.append(&tenant, &name, score, raw, true);
                 }
             });
@@ -454,7 +518,7 @@ impl Engine {
         let n = indices.len();
         for shadow_name in &resolution.shadows {
             let Some(entry) = snap.entry(shadow_name) else {
-                self.counters.inc("shadow_missing_predictor");
+                self.hot.shadow_missing_predictor.inc();
                 continue;
             };
             let d = entry.predictor.feature_dim();
@@ -467,7 +531,7 @@ impl Engine {
                     match self.features.enrich(&reqs[i].entity, &reqs[i].features, d) {
                         Ok(e) => m.extend_from_slice(&e),
                         Err(_) => {
-                            self.counters.inc("shadow_enrich_error");
+                            self.hot.shadow_enrich_error.inc();
                             ok = false;
                             break;
                         }
@@ -595,7 +659,7 @@ server:
         let Some(engine) = engine() else { return };
         let d = engine.predictor("p1").unwrap().feature_dim();
         let r = engine.score(&req("bank1", d, 1)).unwrap();
-        assert_eq!(r.predictor, "p1");
+        assert_eq!(&*r.predictor, "p1");
         assert_eq!(r.shadow_count, 1);
         assert!((0.0..=1.0).contains(&r.score));
         engine.drain_shadows();
@@ -611,7 +675,7 @@ server:
         let Some(engine) = engine() else { return };
         let d = engine.predictor("global").unwrap().feature_dim();
         let r = engine.score(&req("newclient", d, 2)).unwrap();
-        assert_eq!(r.predictor, "global");
+        assert_eq!(&*r.predictor, "global");
         assert_eq!(r.shadow_count, 0);
     }
 
@@ -744,11 +808,11 @@ server:
         // the new routing on the very next request.
         let Some(engine) = engine() else { return };
         let d = engine.predictor("global").unwrap().feature_dim();
-        assert_eq!(engine.score(&req("bank1", d, 6)).unwrap().predictor, "p1");
+        assert_eq!(&*engine.score(&req("bank1", d, 6)).unwrap().predictor, "p1");
         let mut cfg = engine.router.snapshot().as_ref().clone();
         cfg.scoring_rules[0].target_predictor = "p2".into();
         engine.router.swap(cfg);
-        assert_eq!(engine.score(&req("bank1", d, 7)).unwrap().predictor, "p2");
+        assert_eq!(&*engine.score(&req("bank1", d, 7)).unwrap().predictor, "p2");
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod warmup;
 
 pub use batcher::{Batcher, BatcherStats};
 pub use deployment::{ControlPlane, ShadowValidation};
-pub use engine::{Engine, ScoreRequest, ScoreResponse};
+pub use engine::{Engine, HotCounters, ScoreRequest, ScoreResponse};
 pub use predictor::{ExpertSlot, Predictor, QuantileTable, ScoreBatch};
 pub use registry::{PredictorRegistry, RegistryStats};
 pub use router::{Resolution, Router};

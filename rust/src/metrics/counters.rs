@@ -1,51 +1,120 @@
 //! Serving counters + windowed time series (the Fig. 5 pod-count /
 //! req-rate traces and the `/metrics` endpoint).
+//!
+//! The registry is wait-free on every established path: the name →
+//! counter map is published copy-on-write through a
+//! [`SnapCell`](crate::util::swap::SnapCell), so `inc`/`add`/`get` on
+//! a key that already exists perform one wait-free snapshot load, one
+//! map probe and one `fetch_add` — no mutex. Only the *first* touch of
+//! a new key takes the cell's writer lock to republish the map
+//! (control-plane rate). Hot keys go one step further:
+//! [`Counters::handle`] resolves a name once — at engine build /
+//! deploy time — into a [`CounterHandle`], a direct `Arc<AtomicU64>`
+//! whose `inc` is a single `fetch_add` with no load and no probe at
+//! all. The engine's per-event counters (`requests_live`, batch
+//! counters, shadow-path counters) all go through pre-resolved
+//! handles; the name-keyed map survives for cold/dynamic keys and for
+//! `/metrics` rendering, which sees handle updates because handles
+//! alias the map's own atomics.
 
+use crate::util::swap::SnapCell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
+
+/// A pre-resolved counter: one atomic, shared with the registry map.
+/// `Clone` is a refcount bump; `inc`/`add` are single `fetch_add`s —
+/// the cheapest possible metrics write, suitable for per-event paths.
+#[derive(Clone)]
+pub struct CounterHandle(Arc<AtomicU64>);
+
+impl CounterHandle {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, delta: u64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// A set of named monotonically-increasing counters.
-#[derive(Default)]
 pub struct Counters {
-    inner: Mutex<BTreeMap<String, AtomicU64>>,
+    map: SnapCell<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+impl Default for Counters {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Counters {
     pub fn new() -> Self {
-        Self::default()
+        Counters {
+            map: SnapCell::new(Arc::new(BTreeMap::new())),
+        }
+    }
+
+    /// Resolve `name` into a direct handle, interning it (at zero) if
+    /// new. Call once at deploy/build time; bump the handle on the hot
+    /// path.
+    pub fn handle(&self, name: &str) -> CounterHandle {
+        if let Some(c) = self.map.load().get(name) {
+            return CounterHandle(Arc::clone(c));
+        }
+        CounterHandle(self.intern(name))
     }
 
     pub fn inc(&self, name: &str) {
         self.add(name, 1);
     }
 
+    /// Wait-free once `name` exists: snapshot load + probe +
+    /// `fetch_add`. First touch interns the key copy-on-write.
     pub fn add(&self, name: &str, delta: u64) {
-        let mut map = self.inner.lock().unwrap();
-        // Hot counters already exist: bump without allocating a key.
-        if let Some(c) = map.get(name) {
+        if let Some(c) = self.map.load().get(name) {
             c.fetch_add(delta, Ordering::Relaxed);
             return;
         }
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(delta, Ordering::Relaxed);
+        self.intern(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Intern a new key (copy-on-write republish under the cell's
+    /// writer lock; re-probes first so racing interners converge on
+    /// one atomic).
+    #[cold]
+    fn intern(&self, name: &str) -> Arc<AtomicU64> {
+        self.map.rcu(|old| {
+            if let Some(c) = old.get(name) {
+                return (Arc::clone(old), Arc::clone(c));
+            }
+            let counter = Arc::new(AtomicU64::new(0));
+            let mut next = old.as_ref().clone();
+            next.insert(name.to_string(), Arc::clone(&counter));
+            (Arc::new(next), counter)
+        })
     }
 
     pub fn get(&self, name: &str) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
+        self.map
+            .load()
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
     }
 
     /// Snapshot all counters (for `/metrics` and test assertions).
+    /// Wait-free: one snapshot load, then plain reads.
     pub fn snapshot(&self) -> BTreeMap<String, u64> {
-        self.inner
-            .lock()
-            .unwrap()
+        self.map
+            .load()
             .iter()
             .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
             .collect()
@@ -119,12 +188,38 @@ mod tests {
     }
 
     #[test]
+    fn handles_alias_the_named_map() {
+        let c = Counters::new();
+        let h = c.handle("hot");
+        h.inc();
+        h.add(4);
+        // Handle writes are visible through every name-keyed surface.
+        assert_eq!(c.get("hot"), 5);
+        assert_eq!(c.snapshot()["hot"], 5);
+        assert_eq!(h.get(), 5);
+        // And name-keyed writes are visible through the handle.
+        c.add("hot", 10);
+        assert_eq!(h.get(), 15);
+        // Re-resolving yields the same underlying atomic.
+        let h2 = c.handle("hot");
+        h2.inc();
+        assert_eq!(h.get(), 16);
+    }
+
+    #[test]
+    fn handle_pre_registers_key_at_zero() {
+        let c = Counters::new();
+        let _h = c.handle("deployed");
+        assert_eq!(c.snapshot().get("deployed"), Some(&0));
+    }
+
+    #[test]
     fn concurrent_increments() {
-        use std::sync::Arc;
-        let c = Arc::new(Counters::new());
+        use std::sync::Arc as StdArc;
+        let c = StdArc::new(Counters::new());
         let handles: Vec<_> = (0..8)
             .map(|_| {
-                let c = Arc::clone(&c);
+                let c = StdArc::clone(&c);
                 std::thread::spawn(move || {
                     for _ in 0..1000 {
                         c.inc("hits");
@@ -136,6 +231,40 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get("hits"), 8000);
+    }
+
+    #[test]
+    fn concurrent_interning_never_loses_counts() {
+        // 8 threads race first-touch interning across a disjoint +
+        // shared key mix; every increment must land exactly once even
+        // when the copy-on-write republish races.
+        use std::sync::Arc as StdArc;
+        let c = StdArc::new(Counters::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let c = StdArc::clone(&c);
+                std::thread::spawn(move || {
+                    let h = c.handle("shared_handle");
+                    for i in 0..500 {
+                        c.inc("shared");
+                        c.inc(&format!("own_{t}"));
+                        h.inc();
+                        if i == 0 {
+                            c.inc(&format!("late_{t}"));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get("shared"), 4000);
+        assert_eq!(c.get("shared_handle"), 4000);
+        for t in 0..8 {
+            assert_eq!(c.get(&format!("own_{t}")), 500);
+            assert_eq!(c.get(&format!("late_{t}")), 1);
+        }
     }
 
     #[test]

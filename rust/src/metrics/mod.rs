@@ -1,8 +1,11 @@
 //! Serving metrics: lock-free latency histograms (SLO percentiles)
-//! and named counters / time series for the control plane.
+//! and wait-free named counters / time series for the control plane.
+//! Hot paths bump pre-resolved [`CounterHandle`]s (one `fetch_add`,
+//! no lock, no map probe); dynamic keys stay name-addressed through
+//! the copy-on-write registry.
 
 pub mod counters;
 pub mod histogram;
 
-pub use counters::{Counters, Series};
+pub use counters::{CounterHandle, Counters, Series};
 pub use histogram::LatencyHistogram;

@@ -57,12 +57,17 @@ impl Response {
             400 => "400 Bad Request",
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
+            413 => "413 Payload Too Large",
             422 => "422 Unprocessable Entity",
             503 => "503 Service Unavailable",
             _ => "500 Internal Server Error",
         }
     }
 }
+
+/// Default request-body cap when a server is bound without an
+/// explicit limit (`server.maxBodyBytes` default: 1 MiB).
+pub const DEFAULT_MAX_BODY_BYTES: usize = 1 << 20;
 
 pub type Handler = dyn Fn(&Request) -> Response + Send + Sync + 'static;
 
@@ -72,6 +77,10 @@ pub struct HttpServer {
     pool: Arc<ThreadPool>,
     handler: Arc<Handler>,
     stop: Arc<AtomicBool>,
+    /// Request-body cap (`server.maxBodyBytes`): requests declaring a
+    /// larger Content-Length are refused with 413 before the body is
+    /// read, so one client cannot balloon worker memory.
+    max_body: usize,
 }
 
 impl HttpServer {
@@ -80,12 +89,23 @@ impl HttpServer {
         workers: usize,
         handler: Arc<Handler>,
     ) -> Result<HttpServer> {
+        Self::bind_with_limits(addr, workers, handler, DEFAULT_MAX_BODY_BYTES)
+    }
+
+    /// As [`HttpServer::bind`], with an explicit request-body cap.
+    pub fn bind_with_limits(
+        addr: &str,
+        workers: usize,
+        handler: Arc<Handler>,
+        max_body: usize,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         Ok(HttpServer {
             listener,
             pool: Arc::new(ThreadPool::new(workers)),
             handler,
             stop: Arc::new(AtomicBool::new(false)),
+            max_body: max_body.max(1),
         })
     }
 
@@ -111,22 +131,31 @@ impl HttpServer {
             }
             let Ok(stream) = stream else { continue };
             let handler = Arc::clone(&self.handler);
+            let max_body = self.max_body;
             self.pool.execute(move || {
-                let _ = handle_connection(stream, handler);
+                let _ = handle_connection(stream, handler, max_body);
             });
         }
         Ok(())
     }
 }
 
-fn handle_connection(stream: TcpStream, handler: Arc<Handler>) -> Result<()> {
+fn handle_connection(stream: TcpStream, handler: Arc<Handler>, max_body: usize) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     loop {
-        let req = match read_request(&mut reader) {
-            Ok(Some(r)) => r,
-            Ok(None) => return Ok(()), // clean close
+        let req = match read_request_limited(&mut reader, max_body) {
+            Ok(ReadOutcome::Request(r)) => r,
+            Ok(ReadOutcome::Closed) => return Ok(()), // clean close
+            Ok(ReadOutcome::TooLarge) => {
+                // Rejected from the Content-Length header alone — the
+                // body was never read, so the connection is desynced:
+                // answer 413 and close.
+                let resp = Response::json(413, r#"{"error":"request body too large"}"#);
+                let _ = write_response(&mut writer, &resp, false);
+                return Ok(());
+            }
             Err(_) => {
                 let resp = Response::text(400, "bad request");
                 let _ = write_response(&mut writer, &resp, false);
@@ -150,11 +179,31 @@ fn handle_connection(stream: TcpStream, handler: Arc<Handler>) -> Result<()> {
     }
 }
 
-/// Read one request; Ok(None) on EOF before a request line.
+/// Outcome of reading one request off a keep-alive connection.
+enum ReadOutcome {
+    Request(Request),
+    /// Clean EOF before a request line.
+    Closed,
+    /// Declared Content-Length exceeds the cap; the body was never
+    /// buffered (the 413 is decided from the header alone).
+    TooLarge,
+}
+
+/// Read one request; Ok(None) on EOF before a request line. Bodies
+/// over [`DEFAULT_MAX_BODY_BYTES`] error; servers configure the cap
+/// via [`HttpServer::bind_with_limits`].
 pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
+    match read_request_limited(reader, DEFAULT_MAX_BODY_BYTES)? {
+        ReadOutcome::Request(r) => Ok(Some(r)),
+        ReadOutcome::Closed => Ok(None),
+        ReadOutcome::TooLarge => bail!("body too large"),
+    }
+}
+
+fn read_request_limited<R: BufRead>(reader: &mut R, max_body: usize) -> Result<ReadOutcome> {
     let mut line = String::new();
     if reader.read_line(&mut line)? == 0 {
-        return Ok(None);
+        return Ok(ReadOutcome::Closed);
     }
     let mut parts = line.split_whitespace();
     let method = parts.next().context("missing method")?.to_string();
@@ -179,12 +228,12 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
             }
         }
     }
-    if content_length > 16 * 1024 * 1024 {
-        bail!("body too large");
+    if content_length > max_body {
+        return Ok(ReadOutcome::TooLarge);
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok(Some(Request {
+    Ok(ReadOutcome::Request(Request {
         method,
         path,
         body: String::from_utf8(body).context("body not UTF-8")?,
@@ -250,14 +299,25 @@ mod tests {
     use super::*;
     use std::thread;
 
-    fn spawn_echo() -> String {
-        let handler: Arc<Handler> = Arc::new(|req: &Request| match req.path.as_str() {
+    fn echo_handler() -> Arc<Handler> {
+        Arc::new(|req: &Request| match req.path.as_str() {
             "/healthz" => Response::text(200, "ok"),
             "/echo" => Response::json(200, req.body.clone()),
             "/panic" => panic!("handler exploded"),
             _ => Response::text(404, "not found"),
-        });
-        let server = HttpServer::bind("127.0.0.1:0", 2, handler).unwrap();
+        })
+    }
+
+    fn spawn_echo() -> String {
+        let server = HttpServer::bind("127.0.0.1:0", 2, echo_handler()).unwrap();
+        let addr = server.local_addr();
+        thread::spawn(move || server.serve().unwrap());
+        addr
+    }
+
+    fn spawn_echo_capped(max_body: usize) -> String {
+        let server =
+            HttpServer::bind_with_limits("127.0.0.1:0", 2, echo_handler(), max_body).unwrap();
         let addr = server.local_addr();
         thread::spawn(move || server.serve().unwrap());
         addr
@@ -304,6 +364,44 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_with_413_before_reading_it() {
+        let addr = spawn_echo_capped(256);
+        // Declare a body far over the cap but never send it: the 413
+        // must come from the Content-Length header alone, proving the
+        // server did not try to buffer the payload.
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: 1000000\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut status = String::new();
+        reader.read_line(&mut status).unwrap();
+        assert!(status.contains("413"), "{status}");
+        let mut rest = String::new();
+        let mut tmp = String::new();
+        while reader.read_line(&mut tmp).unwrap() > 0 {
+            rest.push_str(&tmp);
+            tmp.clear();
+        }
+        assert!(rest.contains("request body too large"), "{rest}");
+        assert!(
+            rest.to_ascii_lowercase().contains("connection: close"),
+            "oversized request must close the (desynced) connection: {rest}"
+        );
+        // A body exactly at the cap still round-trips.
+        let payload = "x".repeat(256);
+        let (status, body) = http_request(&addr, "POST", "/echo", &payload).unwrap();
+        assert_eq!((status, body.as_str()), (200, payload.as_str()));
+        // One byte over: rejected.
+        let payload = "x".repeat(257);
+        let (status, _) = http_request(&addr, "POST", "/echo", &payload).unwrap();
+        assert_eq!(status, 413);
     }
 
     #[test]

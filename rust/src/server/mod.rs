@@ -15,6 +15,10 @@
 //!   drift scores, fit/promotion counters
 //! * `POST /v1/lifecycle/check` — run one controller tick now and
 //!   return the resulting status (manual trigger / cron hook)
+//!
+//! Request bodies over `server.maxBodyBytes` (default 1 MiB) are
+//! rejected with `413 Payload Too Large` from the Content-Length
+//! header alone — the body is never buffered.
 
 pub mod http;
 
@@ -218,7 +222,7 @@ fn parse_score_request(v: &Json) -> Result<ScoreRequest> {
 fn score_response_json(resp: &crate::coordinator::ScoreResponse) -> Json {
     Json::obj(vec![
         ("score", Json::Num(resp.score)),
-        ("predictor", Json::str(resp.predictor.clone())),
+        ("predictor", Json::str(resp.predictor.as_ref())),
         ("shadows", Json::Num(resp.shadow_count as f64)),
     ])
 }
@@ -266,7 +270,9 @@ pub fn spawn_server(
 ) -> Result<(String, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
     let ready = Arc::new(AtomicBool::new(false));
     let handler = api_handler(Arc::clone(&engine), Arc::clone(&ready));
-    let server = HttpServer::bind(addr, workers, handler)?;
+    // Body cap from the engine's config (`server.maxBodyBytes`):
+    // oversized requests bounce with 413 before their bodies are read.
+    let server = HttpServer::bind_with_limits(addr, workers, handler, engine.max_body_bytes)?;
     let bound = server.local_addr();
     let handle = std::thread::spawn(move || {
         let _ = server.serve();
@@ -492,6 +498,43 @@ predictors:
         assert_eq!(v.get("enabled").and_then(crate::util::json::Json::as_bool), Some(false));
         let (status, _) = http_request(&addr, "POST", "/v1/lifecycle/check", "").unwrap();
         assert_eq!(status, 422);
+    }
+
+    #[test]
+    fn configured_body_cap_is_enforced_end_to_end() {
+        // Sim-dialect artifacts: runs without `make artifacts`.
+        let fix = crate::runtime::SimArtifacts::in_temp().unwrap();
+        let pool = Arc::new(crate::runtime::ModelPool::new(fix.manifest().unwrap()));
+        let yaml = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s3]
+  quantile: identity
+server:
+  maxBodyBytes: 2048
+"#;
+        let engine = Arc::new(
+            Engine::build(&MuseConfig::from_yaml(yaml).unwrap(), pool).unwrap(),
+        );
+        assert_eq!(engine.max_body_bytes, 2048);
+        let (addr, _ready, _h) = spawn_server(Arc::clone(&engine), "127.0.0.1:0", 2, 5).unwrap();
+        // A payload over the configured cap bounces with 413...
+        let big = format!(r#"{{"tenant": "t", "pad": "{}"}}"#, "x".repeat(4096));
+        let (status, body) = http_request(&addr, "POST", "/score", &big).unwrap();
+        assert_eq!(status, 413, "{body}");
+        // ...while a normal request on a fresh connection still works.
+        let d = crate::simulator::FEATURE_DIM;
+        let payload = format!(
+            r#"{{"tenant": "t", "features": [{}]}}"#,
+            vec!["0.1"; d].join(",")
+        );
+        let (status, body) = http_request(&addr, "POST", "/score", &payload).unwrap();
+        assert_eq!(status, 200, "{body}");
     }
 
     #[test]

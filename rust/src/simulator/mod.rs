@@ -3,13 +3,17 @@
 //! Fig. 5, the real-thread swap-under-load harness proving that
 //! routing-config promotions never stall the data plane, the
 //! multi-tenant batch-scoring throughput scenario exercising
-//! `Engine::score_batch` end to end, and the drift-storm scenario
+//! `Engine::score_batch` end to end, the drift-storm scenario
 //! proving the lifecycle autopilot recalibrates per-tenant alert
-//! rates with zero manual control-plane calls.
+//! rates with zero manual control-plane calls, and the saturation
+//! ramp measuring `Engine::score` scaling across worker threads while
+//! cross-checking the lock-free observation plane against a
+//! sequential oracle.
 
 pub mod cluster;
 pub mod drift_storm;
 pub mod multitenant;
+pub mod saturation;
 pub mod workload;
 
 pub use cluster::{
@@ -18,4 +22,5 @@ pub use cluster::{
 };
 pub use drift_storm::{run_drift_storm, DriftStormConfig, DriftStormReport};
 pub use multitenant::{run_batch_mix, BatchMixConfig, BatchMixReport};
+pub use saturation::{run_saturation, SaturationConfig, SaturationLevel, SaturationReport};
 pub use workload::{Event, TenantProfile, TrafficMix, Workload, FEATURE_DIM};

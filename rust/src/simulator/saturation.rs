@@ -1,0 +1,273 @@
+//! Saturation scenario: the scaling-curve counterpart to
+//! `drift_storm`.
+//!
+//! Drives a **fixed multi-tenant mix** through `Engine::score` from a
+//! ramp of concurrent worker threads (1 → 2 → 4 → 8 by default) and
+//! reports events/s plus p50/p99 latency at every level — the curve
+//! that exposes any serialization left on the observation plane. With
+//! the seed's global `DataLake` mutex and locked counter map, the
+//! curve flattens as soon as two workers contend; with the sharded
+//! lake, wait-free counters and the allocation-free batcher submit it
+//! should keep climbing until PJRT (or the core count) saturates.
+//! EXPERIMENTS.md "Observation plane" records the measured curves;
+//! `examples/saturation.rs` is the CI smoke wrapper.
+//!
+//! The scenario also cross-checks the observation plane against a
+//! sequential oracle while it runs: every level's scored events are
+//! counted by the drivers themselves, and after each ramp level the
+//! shard-merged `DataLake` per-pair counts and `len()` must equal
+//! those driver-side tallies exactly (no event lost, none double
+//! counted, no torn shard merge) — the lock-free refactor's
+//! correctness bar, enforced on every CI run.
+
+use crate::config::Intent;
+use crate::coordinator::{Engine, ScoreRequest};
+use crate::simulator::workload::{TenantProfile, Workload};
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Scenario parameters (defaults match the CI smoke run).
+#[derive(Debug, Clone)]
+pub struct SaturationConfig {
+    /// Worker-thread counts to ramp through.
+    pub thread_steps: Vec<usize>,
+    /// Events each worker drives per level.
+    pub events_per_thread: usize,
+    /// The fixed tenant mix; workers round-robin over it.
+    pub tenants: Vec<TenantProfile>,
+    pub seed: u64,
+}
+
+impl Default for SaturationConfig {
+    fn default() -> Self {
+        SaturationConfig {
+            thread_steps: vec![1, 2, 4, 8],
+            events_per_thread: 2_000,
+            tenants: vec![
+                TenantProfile::new("bank1", 7, 0.3, 0.1),
+                TenantProfile::new("bank2", 11, 0.3, 0.1),
+            ],
+            seed: 17,
+        }
+    }
+}
+
+/// One ramp level's measurements.
+#[derive(Debug, Clone)]
+pub struct SaturationLevel {
+    pub threads: usize,
+    pub events: u64,
+    pub wall_secs: f64,
+    pub events_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Scenario outcome.
+#[derive(Debug, Clone)]
+pub struct SaturationReport {
+    pub levels: Vec<SaturationLevel>,
+    /// Total events scored across all levels.
+    pub events_total: u64,
+    /// `events/s` at the highest thread count over `events/s` at one
+    /// thread — the scaling factor the ramp achieved.
+    pub scaling: f64,
+}
+
+impl SaturationReport {
+    pub fn render(&self) -> String {
+        let mut out = String::from("saturation ramp (Engine::score, fixed tenant mix):\n");
+        for l in &self.levels {
+            out.push_str(&format!(
+                "  threads {:>2}: {:>8.0} events/s  p50 {:>7.3} ms  p99 {:>7.3} ms  ({} events in {:.2}s)\n",
+                l.threads, l.events_per_sec, l.p50_ms, l.p99_ms, l.events, l.wall_secs
+            ));
+        }
+        out.push_str(&format!(
+            "  scaling {}x threads -> {:.2}x throughput, {} events total",
+            self.levels.last().map_or(0, |l| l.threads),
+            self.scaling,
+            self.events_total
+        ));
+        out
+    }
+}
+
+/// Run the ramp against a live engine. Requires only routable tenants;
+/// after every level the lake's shard-merged accounting is checked
+/// against the drivers' own tallies (see module docs).
+pub fn run_saturation(engine: &Engine, cfg: &SaturationConfig) -> Result<SaturationReport> {
+    ensure!(!cfg.thread_steps.is_empty(), "need >= 1 ramp level");
+    ensure!(!cfg.tenants.is_empty(), "need >= 1 tenant");
+    ensure!(cfg.events_per_thread >= 1, "events_per_thread must be >= 1");
+
+    // Per-(tenant, predictor) oracle tallies, accumulated across
+    // levels by the drivers themselves.
+    let mut oracle: Vec<((String, String), u64)> = Vec::new();
+    let mut levels = Vec::new();
+    let mut events_total = 0u64;
+
+    for (level_idx, &threads) in cfg.thread_steps.iter().enumerate() {
+        ensure!(threads >= 1, "thread counts must be >= 1");
+        engine.live_latency.reset();
+        let scored = AtomicU64::new(0);
+        let level_pairs: std::sync::Mutex<Vec<((String, String), u64)>> =
+            std::sync::Mutex::new(Vec::new());
+        let t0 = Instant::now();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for w in 0..threads {
+                let tenant = cfg.tenants[w % cfg.tenants.len()].clone();
+                let scored = &scored;
+                let level_pairs = &level_pairs;
+                let seed = cfg.seed ^ ((level_idx as u64) << 32) ^ w as u64;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let mut wl = Workload::new(tenant.clone(), seed);
+                    // Tally locally; merge once at the end (the oracle
+                    // bookkeeping must not serialize the drivers).
+                    let mut local: Vec<((String, String), u64)> = Vec::new();
+                    for i in 0..cfg.events_per_thread {
+                        let e = wl.next_event();
+                        let resp = engine
+                            .score(&ScoreRequest {
+                                intent: Intent {
+                                    tenant: tenant.name.clone(),
+                                    ..Intent::default()
+                                },
+                                entity: format!("sat{level_idx}-{w}-{i}"),
+                                features: e.features,
+                            })
+                            .context("saturation score")?;
+                        let key = (tenant.name.clone(), resp.predictor.to_string());
+                        match local.iter_mut().find(|(k, _)| *k == key) {
+                            Some((_, n)) => *n += 1,
+                            None => local.push((key, 1)),
+                        }
+                        scored.fetch_add(1, Ordering::Relaxed);
+                    }
+                    level_pairs.lock().unwrap().extend(local);
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().expect("saturation worker panicked")?;
+            }
+            Ok(())
+        })?;
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let events = scored.load(Ordering::Relaxed);
+        events_total += events;
+        ensure!(
+            events == (threads * cfg.events_per_thread) as u64,
+            "driver tally lost events"
+        );
+
+        // Merge this level's tallies into the cross-level oracle.
+        for (key, n) in level_pairs.into_inner().unwrap() {
+            match oracle.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, total)) => *total += n,
+                None => oracle.push((key, n)),
+            }
+        }
+
+        // Observation-plane cross-check: shard-merged per-pair counts
+        // must equal the sequentially-merged driver tallies, exactly.
+        // (Shadow mirrors would land in separate (tenant, shadow
+        // predictor) pairs; the compared pairs are live-only.)
+        engine.drain_shadows();
+        let mut oracle_total = 0u64;
+        for ((tenant, predictor), expect) in &oracle {
+            let got = engine.lake.count_for(tenant, predictor) as u64;
+            ensure!(
+                got == *expect,
+                "lake count_for({tenant},{predictor}) = {got}, oracle says {expect}"
+            );
+            oracle_total += expect;
+        }
+        ensure!(
+            engine.lake.len() as u64 >= oracle_total.min(engine.lake.effective_capacity() as u64),
+            "lake len {} below the oracle floor {oracle_total}",
+            engine.lake.len()
+        );
+
+        levels.push(SaturationLevel {
+            threads,
+            events,
+            wall_secs,
+            events_per_sec: events as f64 / wall_secs.max(1e-9),
+            p50_ms: engine.live_latency.percentile_ns(50.0) as f64 / 1e6,
+            p99_ms: engine.live_latency.percentile_ns(99.0) as f64 / 1e6,
+        });
+    }
+
+    let scaling = match (levels.first(), levels.last()) {
+        (Some(a), Some(b)) if a.events_per_sec > 0.0 => b.events_per_sec / a.events_per_sec,
+        _ => 0.0,
+    };
+    Ok(SaturationReport {
+        levels,
+        events_total,
+        scaling,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MuseConfig;
+    use crate::runtime::{ModelPool, SimArtifacts};
+    use std::sync::Arc;
+
+    const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "duo"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "solo"
+predictors:
+- name: duo
+  experts: [s1, s2]
+  quantile: identity
+- name: solo
+  experts: [s3]
+  quantile: identity
+server:
+  workers: 2
+  maxBatchDelayUs: 50
+"#;
+
+    #[test]
+    fn saturation_ramp_runs_and_cross_checks_the_lake() {
+        // Sim-dialect artifacts: runs without `make artifacts`,
+        // including in CI. Small ramp — the test asserts the oracle
+        // cross-check and report shape, not absolute throughput.
+        let fix = SimArtifacts::in_temp().unwrap();
+        let pool = Arc::new(ModelPool::new(fix.manifest().unwrap()));
+        let engine = Engine::build(&MuseConfig::from_yaml(CONFIG).unwrap(), pool).unwrap();
+        let report = run_saturation(
+            &engine,
+            &SaturationConfig {
+                thread_steps: vec![1, 4],
+                events_per_thread: 300,
+                ..SaturationConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.levels.len(), 2);
+        assert_eq!(report.events_total, 300 + 4 * 300);
+        assert!(report.levels.iter().all(|l| l.events_per_sec > 0.0));
+        assert!(report.levels.iter().all(|l| l.p99_ms >= l.p50_ms));
+        let rendered = report.render();
+        assert!(rendered.contains("threads  1"), "{rendered}");
+        assert!(rendered.contains("threads  4"), "{rendered}");
+        // The engine-side accounting agrees with the run.
+        assert_eq!(engine.hot.requests_live.get(), report.events_total);
+        assert_eq!(engine.lake.forced_overwrites(), 0);
+        assert_eq!(engine.lake.lost_appends(), 0);
+    }
+}

@@ -168,7 +168,7 @@ fn batch_scoring_follows_promotions_and_mirrors_shadows() {
     let before = engine.score_batch(&reqs).unwrap();
     assert!(before
         .iter()
-        .all(|r| r.predictor == "p1" && r.shadow_count == 1));
+        .all(|r| &*r.predictor == "p1" && r.shadow_count == 1));
     engine.drain_shadows();
     assert_eq!(
         engine.lake.counts()[&("bank1".to_string(), "p2".to_string(), true)],
@@ -181,7 +181,7 @@ fn batch_scoring_follows_promotions_and_mirrors_shadows() {
     let after = engine.score_batch(&reqs).unwrap();
     assert!(after
         .iter()
-        .all(|r| r.predictor == "p2" && r.shadow_count == 0));
+        .all(|r| &*r.predictor == "p2" && r.shadow_count == 0));
     engine.drain_shadows();
     // Per-tenant accounting is batch-aware across the whole lifecycle.
     assert_eq!(engine.tenant_events.get("bank1"), 20);
@@ -250,7 +250,7 @@ fn promotions_under_load_never_drop_requests() {
                         })
                         .expect("request dropped during promotion storm");
                     assert!(
-                        resp.predictor == "p1" || resp.predictor == "p2",
+                        &*resp.predictor == "p1" || &*resp.predictor == "p2",
                         "routed to unexpected predictor {}",
                         resp.predictor
                     );
@@ -300,4 +300,169 @@ fn deploy_teardown_cycles_do_not_leak_containers() {
         cp.decommission(&format!("cycle-{round}")).unwrap();
     }
     assert_eq!(engine.registry.stats().pool.live_containers, base);
+}
+
+// ---------------------------------------------------------------
+// Observation-plane concurrency stress (sim-dialect artifacts: runs
+// everywhere, including CI, without `make artifacts`).
+// ---------------------------------------------------------------
+
+/// Engine over synthetic artifacts with two promotable predictors and
+/// a configurable lake geometry.
+fn sim_engine(
+    lake_max_records: usize,
+    lake_shards: usize,
+) -> (muse::runtime::SimArtifacts, Arc<Engine>) {
+    let fix = muse::runtime::SimArtifacts::in_temp().unwrap();
+    let yaml = format!(
+        r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "duo"
+  - description: "catch-all"
+    condition: {{}}
+    targetPredictorName: "solo"
+predictors:
+- name: duo
+  experts: [s1, s2]
+  quantile: identity
+- name: solo
+  experts: [s3]
+  quantile: identity
+server:
+  workers: 2
+  maxBatchDelayUs: 50
+  lakeMaxRecords: {lake_max_records}
+  lakeShards: {lake_shards}
+"#
+    );
+    let pool = Arc::new(muse::runtime::ModelPool::new(fix.manifest().unwrap()));
+    let engine = Arc::new(Engine::build(&MuseConfig::from_yaml(&yaml).unwrap(), pool).unwrap());
+    (fix, engine)
+}
+
+#[test]
+fn sharded_lake_is_oracle_exact_under_a_swap_storm() {
+    // Satellite acceptance: 8 threads hammer score() while the
+    // control plane ping-pongs bank1 between two predictors as fast
+    // as it can publish snapshots. Every response names the predictor
+    // that scored it, so the drivers themselves accumulate a
+    // sequential oracle; after quiescence the shard-merged
+    // count_for/len must match it exactly.
+    let (_fix, engine) = sim_engine(0, 8);
+    let per_thread = 400usize;
+    let threads = 8usize;
+    let workers_live = std::sync::atomic::AtomicU64::new(threads as u64);
+    let tallies: std::sync::Mutex<Vec<(String, u64)>> = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let engine = &engine;
+            let workers_live = &workers_live;
+            let tallies = &tallies;
+            s.spawn(move || {
+                let _live = muse::util::bench::CountdownGuard(workers_live);
+                let mut wl = Workload::new(TenantProfile::new("bank1", 60 + w as u64, 0.3, 0.1), 3);
+                let mut local: Vec<(String, u64)> = Vec::new();
+                for i in 0..per_thread {
+                    let e = wl.next_event();
+                    let resp = engine
+                        .score(&ScoreRequest {
+                            intent: Intent {
+                                tenant: "bank1".into(),
+                                ..Intent::default()
+                            },
+                            entity: format!("st{w}-{i}"),
+                            features: e.features,
+                        })
+                        .expect("request dropped during storm");
+                    let name = resp.predictor.to_string();
+                    match local.iter_mut().find(|(k, _)| *k == name) {
+                        Some((_, n)) => *n += 1,
+                        None => local.push((name, 1)),
+                    }
+                }
+                tallies.lock().unwrap().extend(local);
+            });
+        }
+        let engine = &engine;
+        let workers_live = &workers_live;
+        s.spawn(move || {
+            let cp = ControlPlane::new(engine);
+            let mut k = 0u64;
+            while workers_live.load(std::sync::atomic::Ordering::Relaxed) > 0 {
+                let target = if k % 2 == 0 { "solo" } else { "duo" };
+                cp.promote("bank1", target).unwrap();
+                k += 1;
+            }
+            assert!(k > 0);
+        });
+    });
+    engine.drain_shadows();
+
+    // Sequentially merged oracle.
+    let mut oracle: Vec<(String, u64)> = Vec::new();
+    for (name, n) in tallies.into_inner().unwrap() {
+        match oracle.iter_mut().find(|(k, _)| *k == name) {
+            Some((_, total)) => *total += n,
+            None => oracle.push((name, n)),
+        }
+    }
+    let total: u64 = oracle.iter().map(|(_, n)| n).sum();
+    assert_eq!(total, (threads * per_thread) as u64);
+    for (predictor, expect) in &oracle {
+        assert_eq!(
+            engine.lake.count_for("bank1", predictor) as u64,
+            *expect,
+            "count_for(bank1,{predictor}) diverged from the oracle"
+        );
+        assert_eq!(
+            engine.lake.records_for("bank1", predictor).len() as u64,
+            *expect,
+            "scan of (bank1,{predictor}) diverged from the oracle"
+        );
+    }
+    assert_eq!(engine.lake.len() as u64, total, "len() diverged from the oracle");
+    assert_eq!(engine.hot.requests_live.get(), total);
+    assert_eq!(engine.lake.forced_overwrites(), 0);
+    assert_eq!(engine.lake.lost_appends(), 0);
+}
+
+#[test]
+fn sharded_lake_eviction_stays_bounded_and_exact_under_concurrency() {
+    // Small cap, concurrent writers pushing far past it: the bound
+    // must hold exactly and the per-pair counts must equal a scan.
+    let (_fix, engine) = sim_engine(512, 8);
+    std::thread::scope(|s| {
+        for w in 0..8usize {
+            let engine = &engine;
+            s.spawn(move || {
+                let mut wl = Workload::new(TenantProfile::new("bank1", 80 + w as u64, 0.3, 0.1), 5);
+                for i in 0..500 {
+                    let e = wl.next_event();
+                    engine
+                        .score(&ScoreRequest {
+                            intent: Intent {
+                                tenant: "bank1".into(),
+                                ..Intent::default()
+                            },
+                            entity: format!("ev{w}-{i}"),
+                            features: e.features,
+                        })
+                        .unwrap();
+                }
+            });
+        }
+    });
+    engine.drain_shadows();
+    assert_eq!(engine.lake.len(), 512, "eviction must bound the lake at the cap");
+    assert_eq!(
+        engine.lake.count_for("bank1", "duo"),
+        engine.lake.records_for("bank1", "duo").len(),
+        "pair counts must stay exact under concurrent eviction"
+    );
+    assert_eq!(engine.lake.forced_overwrites(), 0);
+    assert_eq!(engine.lake.lost_appends(), 0);
 }
