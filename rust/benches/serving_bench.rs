@@ -441,11 +441,71 @@ fn bench_hot_counters() {
     );
 }
 
+/// Verification plane: the model-based suite's sequential oracle
+/// (`muse::testkit` — one mutex around everything, linear-scan PWL,
+/// per-event batch-1 inference) against the production engine on
+/// identical traffic over the synthetic sim artifacts. The point of
+/// the number is the *gap*: the oracle is deliberately naive so its
+/// correctness is self-evident, and this section records what that
+/// naivety costs — i.e. why it is a test-only component and why the
+/// lock-free data plane exists at all.
+fn bench_oracle_vs_engine() {
+    section("verification plane: sequential oracle vs production engine (sim artifacts)");
+    let fix = SimArtifacts::in_temp().unwrap();
+    let yaml = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "duo"
+predictors:
+- name: duo
+  experts: [s1, s2]
+  quantile: identity
+server:
+  workers: 2
+"#;
+    let cfg = MuseConfig::from_yaml(yaml).unwrap();
+    let (engine, oracle) = muse::testkit::build_pair(&fix, &cfg).unwrap();
+    let mut wl = Workload::new(TenantProfile::new("acme", 5, 0.3, 0.1), 9);
+    let reqs: Vec<ScoreRequest> = (0..256)
+        .map(|i| ScoreRequest {
+            intent: Intent {
+                tenant: "acme".into(),
+                ..Intent::default()
+            },
+            entity: format!("e{i}"),
+            features: wl.next_event().features,
+        })
+        .collect();
+    let mut i = 0usize;
+    let r = bench("engine.score (lock-free data plane)", 128, 2_000, || {
+        let req = &reqs[i % reqs.len()];
+        i += 1;
+        std::hint::black_box(engine.score(req).unwrap());
+    });
+    println!("  {}", r.report());
+    let engine_ns = r.mean_ns;
+    let mut j = 0usize;
+    let r = bench("oracle.score (one mutex, linear scans)", 128, 2_000, || {
+        let req = &reqs[j % reqs.len()];
+        j += 1;
+        std::hint::black_box(oracle.score(&req.intent, &req.features).unwrap());
+    });
+    println!("  {}", r.report());
+    println!(
+        "  oracle/engine mean ratio: {:.2}x (the price of obvious correctness)",
+        r.mean_ns / engine_ns
+    );
+    engine.drain_shadows();
+}
+
 fn main() {
     bench_fused_vs_staged();
     bench_lake_sharded_vs_global();
     bench_hot_counters();
     bench_lifecycle_overhead();
+    bench_oracle_vs_engine();
 
     let Ok(manifest) = Manifest::load(Manifest::default_root()) else {
         println!("\nserving_bench: artifacts not built, skipping PJRT sections (run `make artifacts`)");

@@ -6,6 +6,6 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    Condition, Intent, MuseConfig, PredictorConfig, QuantileMode, RoutingConfig, ScoringRule,
-    ServerConfig, ShadowRule,
+    Condition, Intent, LifecycleConfig, MuseConfig, PredictorConfig, QuantileMode, RoutingConfig,
+    ScoringRule, ServerConfig, ShadowRule,
 };

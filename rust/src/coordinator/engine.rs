@@ -595,6 +595,28 @@ impl Engine {
     }
 }
 
+/// Verification-plane introspection (`testkit`): the oracle-diff
+/// harness (`testkit::harness`) compares the engine's published world
+/// against a sequential oracle after every generated command storm.
+/// These read-only hooks expose state that is deliberately private in
+/// production — compiled into the binary only under `cfg(test)` or the
+/// `testkit` feature, so they cannot rot unnoticed (CI builds
+/// `--features testkit`).
+#[cfg(any(test, feature = "testkit"))]
+impl Engine {
+    /// Sorted predictor names in the current data-plane snapshot
+    /// (republishing first if routing/registry changed behind it).
+    pub fn snapshot_predictor_names(&self) -> Vec<String> {
+        self.load_snapshot().entry_names()
+    }
+
+    /// Per-predictor dynamic-batcher totals from the current snapshot
+    /// — the harness's event-conservation source.
+    pub fn batcher_event_totals(&self) -> Vec<(String, super::batcher::BatcherStats)> {
+        self.load_snapshot().batcher_stats()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -98,6 +98,26 @@ impl QuantileTable {
     }
 }
 
+/// Verification-plane introspection (`testkit`): the default map and
+/// the override key set are private state the oracle-diff harness must
+/// compare against its own model after a command storm — `for_tenant`
+/// alone cannot distinguish "override installed" from "fell back to an
+/// identical default".
+#[cfg(any(test, feature = "testkit"))]
+impl QuantileTable {
+    /// The default `T^Q` (what tenants without an override get).
+    pub fn default_map(&self) -> &Arc<QuantileMap> {
+        &self.default
+    }
+
+    /// Sorted tenant names carrying a custom `T^Q` override.
+    pub fn tenant_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.tenants.keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
 pub struct Predictor {
     pub name: String,
     experts: Vec<ExpertSlot>,

@@ -140,3 +140,33 @@ impl EngineSnapshot {
         self.entries.len()
     }
 }
+
+/// Verification-plane introspection (`testkit`): the snapshot's entry
+/// set and per-entry batcher accounting are otherwise unobservable
+/// (the `entries` map is private by design — the data plane reaches it
+/// only through resolved indices), but the oracle-diff harness needs
+/// to assert the published world equals the oracle's model of it.
+#[cfg(any(test, feature = "testkit"))]
+impl EngineSnapshot {
+    /// Sorted names of every deployed predictor entry in this
+    /// snapshot.
+    pub fn entry_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.entries.keys().map(|n| n.to_string()).collect();
+        names.sort();
+        names
+    }
+
+    /// Per-predictor dynamic-batcher stats (batches/events coalesced),
+    /// sorted by name — the harness's conservation check: every
+    /// single-path event (live or shadow mirror) passes through
+    /// exactly one batcher.
+    pub fn batcher_stats(&self) -> Vec<(String, super::batcher::BatcherStats)> {
+        let mut out: Vec<(String, super::batcher::BatcherStats)> = self
+            .entries
+            .iter()
+            .map(|(name, e)| (name.to_string(), e.batcher.stats()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}

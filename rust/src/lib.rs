@@ -37,5 +37,7 @@ pub mod repro;
 pub mod runtime;
 pub mod server;
 pub mod simulator;
+#[cfg(any(test, feature = "testkit"))]
+pub mod testkit;
 pub mod transforms;
 pub mod util;

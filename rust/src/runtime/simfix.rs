@@ -23,12 +23,14 @@
 //! confused.
 
 use super::manifest::Manifest;
+use crate::simulator::{TenantProfile, Workload};
+use crate::util::dataset::DATASET_MAGIC;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Feature dimension — matches `simulator::workload::FEATURE_DIM`.
@@ -71,6 +73,112 @@ const MODELS: [SimModel; 3] = [
     },
 ];
 
+/// The paper-shaped roster for the repro harnesses: the 8-expert
+/// ensemble of Fig. 4 (`m1..m8`) with per-model undersampling ratios
+/// (`beta`) spanning the paper's range — `m3` is the beta=2%
+/// specialist Table 1 singles out. Band patterns alternate between
+/// P0-heavy, P1-heavy and generalist so ensembles over subsets behave
+/// like genuinely distinct experts.
+const PAPER_MODELS: [SimModel; 8] = [
+    SimModel {
+        name: "m1",
+        beta: 0.18,
+        bias: -2.3,
+        bands: [(0, 8, 0.45), (8, 16, 0.20), (16, 24, 0.03)],
+    },
+    SimModel {
+        name: "m2",
+        beta: 0.18,
+        bias: -2.1,
+        bands: [(0, 8, 0.26), (8, 16, 0.42), (16, 24, 0.04)],
+    },
+    SimModel {
+        name: "m3",
+        beta: 0.02,
+        bias: -2.6,
+        bands: [(0, 8, 0.10), (8, 16, 0.52), (16, 24, 0.02)],
+    },
+    SimModel {
+        name: "m4",
+        beta: 0.25,
+        bias: -1.9,
+        bands: [(0, 8, 0.18), (8, 16, 0.18), (16, 24, 0.16)],
+    },
+    SimModel {
+        name: "m5",
+        beta: 0.32,
+        bias: -2.0,
+        bands: [(0, 8, 0.38), (8, 16, 0.10), (16, 24, 0.08)],
+    },
+    SimModel {
+        name: "m6",
+        beta: 0.12,
+        bias: -2.2,
+        bands: [(0, 8, 0.14), (8, 16, 0.34), (16, 24, 0.10)],
+    },
+    SimModel {
+        name: "m7",
+        beta: 0.08,
+        bias: -2.4,
+        bands: [(0, 8, 0.30), (8, 16, 0.30), (16, 24, 0.02)],
+    },
+    SimModel {
+        name: "m8",
+        beta: 0.50,
+        bias: -1.8,
+        bands: [(0, 8, 0.12), (8, 16, 0.12), (16, 24, 0.20)],
+    },
+];
+
+/// One synthetic dataset spec for the paper fixture.
+struct SimDataset {
+    name: &'static str,
+    n: usize,
+    /// (tenant name, profile seed, shift_scale, pattern1_frac,
+    /// fraud_rate, stream seed) — `client_b_pre`/`client_b_post`
+    /// share a profile seed so they model the *same* tenant before
+    /// and after the P1 fraud wave the Fig. 6 update answers.
+    profile: (&'static str, u64, f64, f64, f64, u64),
+}
+
+const PAPER_DATASETS: [SimDataset; 7] = [
+    SimDataset {
+        name: "train_pool",
+        n: 12_000,
+        profile: ("provider", 11, 0.05, 0.10, 0.05, 101),
+    },
+    SimDataset {
+        name: "client_a_live",
+        n: 8_000,
+        profile: ("clientA", 23, 0.55, 0.15, 0.03, 103),
+    },
+    SimDataset {
+        name: "client_b_pre",
+        n: 8_000,
+        profile: ("clientB", 31, 0.35, 0.05, 0.04, 107),
+    },
+    SimDataset {
+        name: "client_b_post",
+        n: 8_000,
+        profile: ("clientB", 31, 0.35, 0.75, 0.10, 109),
+    },
+    SimDataset {
+        name: "valid_m1",
+        n: 4_000,
+        profile: ("valid1", 41, 0.05, 0.10, 0.05, 113),
+    },
+    SimDataset {
+        name: "valid_m2",
+        n: 4_000,
+        profile: ("valid2", 43, 0.05, 0.25, 0.05, 127),
+    },
+    SimDataset {
+        name: "valid_m3",
+        n: 4_000,
+        profile: ("valid3", 47, 0.05, 0.60, 0.05, 131),
+    },
+];
+
 static NONCE: AtomicU64 = AtomicU64::new(0);
 
 /// A generated artifact directory; dropping it removes the directory.
@@ -89,15 +197,43 @@ impl SimArtifacts {
         SimArtifacts::generate(dir)
     }
 
-    /// Generate the fixture under `dir` (created if missing).
+    /// Generate the paper-roster fixture (`m1..m8` + binary datasets)
+    /// under a fresh temp directory — enough surface for every
+    /// `repro::*` harness to run end to end without `make artifacts`
+    /// (see `tests/repro_smoke.rs`; point `MUSE_ARTIFACTS` at
+    /// [`SimArtifacts::root`]).
+    pub fn in_temp_paper() -> Result<SimArtifacts> {
+        let dir = std::env::temp_dir().join(format!(
+            "muse-simfix-paper-{}-{}",
+            std::process::id(),
+            NONCE.fetch_add(1, Ordering::Relaxed)
+        ));
+        SimArtifacts::generate_paper(dir)
+    }
+
+    /// Generate the lifecycle fixture (`s1..s3`, no datasets) under
+    /// `dir` (created if missing).
     pub fn generate(dir: impl Into<PathBuf>) -> Result<SimArtifacts> {
-        let root: PathBuf = dir.into();
+        SimArtifacts::generate_with(dir.into(), &MODELS, &[])
+    }
+
+    /// Generate the paper-roster fixture (`m1..m8` + the Fig. 4/6 and
+    /// Table 1 datasets) under `dir`.
+    pub fn generate_paper(dir: impl Into<PathBuf>) -> Result<SimArtifacts> {
+        SimArtifacts::generate_with(dir.into(), &PAPER_MODELS, &PAPER_DATASETS)
+    }
+
+    fn generate_with(
+        root: PathBuf,
+        models: &[SimModel],
+        datasets: &[SimDataset],
+    ) -> Result<SimArtifacts> {
         let models_dir = root.join("models");
         std::fs::create_dir_all(&models_dir)
             .with_context(|| format!("create {}", models_dir.display()))?;
 
         let mut model_entries: Vec<Json> = Vec::new();
-        for m in &MODELS {
+        for m in models {
             let weights = m.weights();
             let mut batches: BTreeMap<String, Json> = BTreeMap::new();
             for &b in &SIM_BATCHES {
@@ -115,7 +251,28 @@ impl SimArtifacts {
                 ("batches", Json::Obj(batches)),
             ]));
         }
-        let manifest = Json::obj(vec![
+        let mut dataset_entries: Vec<Json> = Vec::new();
+        if !datasets.is_empty() {
+            let data_dir = root.join("data");
+            std::fs::create_dir_all(&data_dir)
+                .with_context(|| format!("create {}", data_dir.display()))?;
+            for ds in datasets {
+                let (tenant, pseed, shift, p1, fraud, sseed) = ds.profile;
+                let profile =
+                    TenantProfile::new(tenant, pseed, shift, p1).with_fraud_rate(fraud);
+                let mut wl = Workload::new(profile, sseed);
+                let (features, labels) = wl.batch(ds.n);
+                let rel = format!("data/{}.bin", ds.name);
+                write_dataset(&root.join(&rel), &features, &labels, SIM_FEATURE_DIM)
+                    .with_context(|| format!("write {rel}"))?;
+                dataset_entries.push(Json::obj(vec![
+                    ("name", Json::str(ds.name)),
+                    ("path", Json::str(rel)),
+                    ("n", Json::Num(ds.n as f64)),
+                ]));
+            }
+        }
+        let mut manifest_fields = vec![
             ("version", Json::Num(1.0)),
             ("feature_dim", Json::Num(SIM_FEATURE_DIM as f64)),
             ("fraud_prior", Json::Num(0.015)),
@@ -125,7 +282,11 @@ impl SimArtifacts {
                 Json::Arr(SIM_BATCHES.iter().map(|&b| Json::Num(b as f64)).collect()),
             ),
             ("models", Json::Arr(model_entries)),
-        ]);
+        ];
+        if !dataset_entries.is_empty() {
+            manifest_fields.push(("datasets", Json::Arr(dataset_entries)));
+        }
+        let manifest = Json::obj(manifest_fields);
         std::fs::write(root.join("manifest.json"), manifest.to_string())
             .context("write manifest.json")?;
         Ok(SimArtifacts { root })
@@ -163,6 +324,26 @@ impl SimModel {
         w[SIM_FEATURE_DIM - 1] = 0.005;
         w
     }
+}
+
+/// Write one dataset in the binary interchange `util::dataset::Dataset`
+/// reads (`python/compile/datagen.py::write_dataset` layout):
+/// `magic | version | n | d | reserved | f32 features | f32 labels`.
+fn write_dataset(path: &Path, features: &[f32], labels: &[f32], d: usize) -> Result<()> {
+    debug_assert_eq!(features.len(), labels.len() * d);
+    let mut buf: Vec<u8> = Vec::with_capacity(24 + 4 * (features.len() + labels.len()));
+    buf.extend_from_slice(&DATASET_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&(labels.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&(d as u32).to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    for f in features {
+        buf.extend_from_slice(&f.to_le_bytes());
+    }
+    for l in labels {
+        buf.extend_from_slice(&l.to_le_bytes());
+    }
+    std::fs::write(path, buf).with_context(|| format!("write {}", path.display()))
 }
 
 fn render_program(batch: usize, weights: &[f32], bias: f32) -> String {
@@ -250,6 +431,49 @@ mod tests {
             );
         }
         pool.release("s2");
+    }
+
+    #[test]
+    fn paper_fixture_has_full_roster_and_readable_datasets() {
+        let fix = SimArtifacts::in_temp_paper().unwrap();
+        let m = fix.manifest().unwrap();
+        assert_eq!(m.models.len(), 8);
+        assert!((m.model("m3").unwrap().beta - 0.02).abs() < 1e-12);
+        assert_eq!(m.quantile_points, SIM_QUANTILE_POINTS);
+        // Every dataset the repro harnesses name loads through the
+        // binary reader with the declared row count and a usable
+        // positive rate.
+        for name in [
+            "train_pool",
+            "client_a_live",
+            "client_b_pre",
+            "client_b_post",
+            "valid_m1",
+            "valid_m2",
+            "valid_m3",
+        ] {
+            let spec = m.dataset(name).unwrap();
+            let ds = crate::util::dataset::Dataset::load(&spec.path).unwrap();
+            assert_eq!(ds.n, spec.n, "{name}");
+            assert_eq!(ds.d, FEATURE_DIM, "{name}");
+            let pr = ds.positive_rate();
+            assert!(pr > 0.005 && pr < 0.3, "{name}: positive rate {pr}");
+        }
+        // The paper-roster models score through containers like the
+        // lifecycle roster does.
+        let pool = ModelPool::new(fix.manifest().unwrap());
+        let h = pool.acquire("m3").unwrap();
+        let scores = h.infer(&vec![0.0f32; FEATURE_DIM], 1).unwrap();
+        assert!((0.0..=1.0).contains(&scores[0]));
+        pool.release("m3");
+        // The drifted post-period is the same tenant (same covariate
+        // profile seed), not a new one: pre and post differ in fraud
+        // mix, which is exactly the Fig. 6 scenario.
+        let pre = m.dataset("client_b_pre").unwrap();
+        let post = m.dataset("client_b_post").unwrap();
+        let pre_ds = crate::util::dataset::Dataset::load(&pre.path).unwrap();
+        let post_ds = crate::util::dataset::Dataset::load(&post.path).unwrap();
+        assert!(post_ds.positive_rate() > 2.0 * pre_ds.positive_rate());
     }
 
     #[test]

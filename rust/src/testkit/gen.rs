@@ -1,0 +1,520 @@
+//! Seeded scenario generators for the model-based suite: tenant
+//! topologies, intent/event streams (via the simulator's fraud/legit
+//! workload mixtures), quantile-grid payloads, and control-plane
+//! command interleavings (shadow-deploy / promote / decommission /
+//! quantile-install storms).
+//!
+//! Everything is driven by `util::prop::Gen`, so the suites in
+//! `tests/model_based.rs` inherit the prop framework's seed printing
+//! and shrinking: a failing case panics with its seed, and
+//! `prop::check_seeded(seed, 1, ...)` replays it exactly (recipe in
+//! docs/TESTING.md).
+//!
+//! The generators maintain a lightweight routing mirror while emitting
+//! commands so that storms stay *serving-valid* (no tenant is ever
+//! left unroutable, live targets are never decommissioned) — with a
+//! deliberate sprinkle of invalid commands (promote-to-ghost,
+//! duplicate deploys) whose **error parity** the harness asserts
+//! instead of their effects.
+
+use crate::config::{
+    Condition, Intent, LifecycleConfig, MuseConfig, PredictorConfig, QuantileMode, RoutingConfig,
+    ScoringRule, ServerConfig, ShadowRule,
+};
+use crate::simulator::{TenantProfile, Workload, FEATURE_DIM};
+use crate::util::prop::Gen;
+
+/// The synthetic-fixture model roster (`runtime::simfix`).
+pub const SIM_MODELS: [&str; 3] = ["s1", "s2", "s3"];
+
+/// A generated serving topology: the boot config plus the tenant
+/// universe the trace draws intents from.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub config: MuseConfig,
+    pub tenants: Vec<String>,
+}
+
+/// One generated control-plane command. Quantile payloads carry
+/// explicit grids (generated, not fitted) so the oracle and the engine
+/// install byte-identical tables.
+#[derive(Debug, Clone)]
+pub enum Command {
+    ShadowDeploy {
+        cfg: PredictorConfig,
+        tenant: String,
+        src: Vec<f64>,
+        refq: Vec<f64>,
+    },
+    Promote {
+        tenant: String,
+        predictor: String,
+    },
+    Decommission {
+        predictor: String,
+    },
+    InstallTenantQuantile {
+        predictor: String,
+        tenant: String,
+        src: Vec<f64>,
+        refq: Vec<f64>,
+    },
+    SetDefaultQuantile {
+        predictor: String,
+        src: Vec<f64>,
+        refq: Vec<f64>,
+    },
+}
+
+/// One scoring call in a trace.
+#[derive(Debug, Clone)]
+pub enum Call {
+    Single {
+        intent: Intent,
+        entity: String,
+        features: Vec<f32>,
+    },
+    Batch(Vec<(Intent, String, Vec<f32>)>),
+}
+
+/// One phase: commands applied at the barrier, then events scored
+/// (concurrently, for the swap-storm suite — commands never race
+/// events, which is what makes the oracle's prediction exact).
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub commands: Vec<Command>,
+    pub calls: Vec<Call>,
+}
+
+/// A complete generated scenario.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub topology: Topology,
+    pub phases: Vec<Phase>,
+    /// Whether any (valid) decommission command is in the trace — the
+    /// batcher-conservation check only holds without teardowns.
+    pub has_decommission: bool,
+}
+
+fn intent_for(tenant: &str) -> Intent {
+    Intent {
+        tenant: tenant.to_string(),
+        ..Intent::default()
+    }
+}
+
+/// Random non-empty distinct expert subset of the sim roster.
+fn expert_subset(g: &mut Gen) -> Vec<String> {
+    let mut pool: Vec<&str> = SIM_MODELS.to_vec();
+    g.rng().shuffle(&mut pool);
+    let k = g.usize(1..(SIM_MODELS.len() + 1));
+    pool[..k].iter().map(|m| m.to_string()).collect()
+}
+
+fn predictor_cfg(g: &mut Gen, name: &str) -> PredictorConfig {
+    let experts = expert_subset(g);
+    let weights: Vec<f64> = (0..experts.len()).map(|_| g.f64(0.1..2.0)).collect();
+    PredictorConfig {
+        name: name.to_string(),
+        experts,
+        weights,
+        quantile_mode: QuantileMode::Identity,
+        reference: "fraud-default".to_string(),
+        posterior_correction: g.bool(0.5),
+    }
+}
+
+fn grid_pair(g: &mut Gen) -> (Vec<f64>, Vec<f64>) {
+    let n = g.usize(2..33);
+    (g.monotone_grid(n, 0.0, 1.0), g.monotone_grid(n, 0.0, 1.0))
+}
+
+/// Generate a serving topology over the sim roster: 1-3 predictors,
+/// 1-3 tenants each with a dedicated first-match rule, a catch-all,
+/// and a sprinkle of shadow rules. Always passes `MuseConfig::validate`.
+pub fn topology(g: &mut Gen) -> Topology {
+    let n_preds = g.usize(1..4);
+    let predictors: Vec<PredictorConfig> = (0..n_preds)
+        .map(|i| predictor_cfg(g, &format!("p{i}")))
+        .collect();
+    let names: Vec<String> = predictors.iter().map(|p| p.name.clone()).collect();
+    let n_tenants = g.usize(1..4);
+    let tenants: Vec<String> = (0..n_tenants).map(|i| format!("t{i}")).collect();
+    let mut scoring_rules: Vec<ScoringRule> = tenants
+        .iter()
+        .map(|t| ScoringRule {
+            description: format!("dedicated {t}"),
+            condition: Condition {
+                tenants: vec![t.clone()],
+                ..Condition::default()
+            },
+            target_predictor: g.pick(&names).as_str().into(),
+        })
+        .collect();
+    scoring_rules.push(ScoringRule {
+        description: "catch-all".to_string(),
+        condition: Condition::default(),
+        target_predictor: g.pick(&names).as_str().into(),
+    });
+    let mut shadow_rules: Vec<ShadowRule> = Vec::new();
+    for t in &tenants {
+        if g.bool(0.4) {
+            let mut targets: Vec<std::sync::Arc<str>> =
+                vec![g.pick(&names).as_str().into()];
+            if n_preds > 1 && g.bool(0.4) {
+                let extra = g.pick(&names).as_str();
+                if !targets.iter().any(|x| &**x == extra) {
+                    targets.push(extra.into());
+                }
+            }
+            shadow_rules.push(ShadowRule {
+                description: format!("shadow for {t}"),
+                condition: Condition {
+                    tenants: vec![t.clone()],
+                    ..Condition::default()
+                },
+                target_predictors: targets,
+            });
+        }
+    }
+    let config = MuseConfig {
+        routing: RoutingConfig {
+            scoring_rules,
+            shadow_rules,
+        },
+        predictors,
+        server: ServerConfig {
+            workers: 2,
+            // Low enough that generated whole-batch calls (up to 24
+            // events) sometimes trip the admission check — both sides
+            // must reject those identically.
+            max_batch_events: g.usize(16..33),
+            ..ServerConfig::default()
+        },
+        lifecycle: LifecycleConfig::default(),
+    };
+    debug_assert!(config.validate().is_ok(), "generated config must validate");
+    Topology { config, tenants }
+}
+
+/// Routing mirror used *during generation* to keep command storms
+/// serving-valid. `None` tenant = the catch-all rule.
+struct RoutingModel {
+    rules: Vec<(Option<String>, String)>,
+    deployed: Vec<String>,
+}
+
+impl RoutingModel {
+    fn from_topology(t: &Topology) -> RoutingModel {
+        RoutingModel {
+            rules: t
+                .config
+                .routing
+                .scoring_rules
+                .iter()
+                .map(|r| {
+                    let tenant = r.condition.tenants.first().cloned();
+                    (tenant, r.target_predictor.to_string())
+                })
+                .collect(),
+            deployed: t.config.predictors.iter().map(|p| p.name.clone()).collect(),
+        }
+    }
+
+    fn live_targets(&self) -> Vec<String> {
+        self.rules.iter().map(|(_, p)| p.clone()).collect()
+    }
+
+    /// Mirror of `ControlPlane::promote`'s routing rewrite.
+    fn promote(&mut self, tenant: &str, predictor: &str) {
+        let matched = self.rules.iter().position(|(t, _)| match t {
+            Some(t) => t == tenant,
+            None => true, // catch-all matches everyone
+        });
+        if let Some(i) = matched {
+            if self.rules[i].0.as_deref() == Some(tenant) {
+                self.rules[i].1 = predictor.to_string();
+            } else {
+                self.rules
+                    .insert(0, (Some(tenant.to_string()), predictor.to_string()));
+            }
+        }
+    }
+
+    fn decommission(&mut self, predictor: &str) {
+        self.rules.retain(|(_, p)| p != predictor);
+        self.deployed.retain(|p| p != predictor);
+    }
+
+    /// Deployed predictors not targeted by any scoring rule — safe to
+    /// decommission without stranding a tenant.
+    fn idle(&self) -> Vec<String> {
+        let live = self.live_targets();
+        self.deployed
+            .iter()
+            .filter(|p| !live.contains(p))
+            .cloned()
+            .collect()
+    }
+}
+
+/// Generate the commands for one phase barrier, advancing the routing
+/// mirror. Returns (commands, saw_valid_decommission).
+fn phase_commands(
+    g: &mut Gen,
+    model: &mut RoutingModel,
+    tenants: &[String],
+    candidate_seq: &mut usize,
+) -> (Vec<Command>, bool) {
+    let mut commands = Vec::new();
+    let mut decommissioned = false;
+    let n = g.usize(0..4);
+    for _ in 0..n {
+        let roll = g.usize(0..10);
+        match roll {
+            // Shadow-deploy a fresh candidate for a random tenant.
+            0..=3 => {
+                let name = format!("cand{}", *candidate_seq);
+                *candidate_seq += 1;
+                let cfg = predictor_cfg(g, &name);
+                let tenant = g.pick(tenants).clone();
+                let (src, refq) = grid_pair(g);
+                model.deployed.push(name);
+                commands.push(Command::ShadowDeploy {
+                    cfg,
+                    tenant,
+                    src,
+                    refq,
+                });
+            }
+            // Promote a deployed predictor for a random tenant.
+            4..=5 => {
+                let tenant = g.pick(tenants).clone();
+                let predictor = g.pick(&model.deployed).clone();
+                model.promote(&tenant, &predictor);
+                commands.push(Command::Promote { tenant, predictor });
+            }
+            // Install a tenant override on a deployed predictor.
+            6..=7 => {
+                let predictor = g.pick(&model.deployed).clone();
+                let tenant = g.pick(tenants).clone();
+                let (src, refq) = grid_pair(g);
+                commands.push(Command::InstallTenantQuantile {
+                    predictor,
+                    tenant,
+                    src,
+                    refq,
+                });
+            }
+            // Swap a default map.
+            8 => {
+                let predictor = g.pick(&model.deployed).clone();
+                let (src, refq) = grid_pair(g);
+                commands.push(Command::SetDefaultQuantile {
+                    predictor,
+                    src,
+                    refq,
+                });
+            }
+            // Decommission an idle predictor, or emit a deliberately
+            // invalid command for error-parity coverage
+            // (promote-to-ghost, decommission-of-ghost, duplicate
+            // deploy of an already-deployed name).
+            _ => {
+                let idle = model.idle();
+                if !idle.is_empty() && g.bool(0.7) {
+                    let predictor = g.pick(&idle).clone();
+                    model.decommission(&predictor);
+                    decommissioned = true;
+                    commands.push(Command::Decommission { predictor });
+                } else {
+                    match g.usize(0..3) {
+                        0 => commands.push(Command::Promote {
+                            tenant: g.pick(tenants).clone(),
+                            predictor: "ghost-undeployed".to_string(),
+                        }),
+                        1 => commands.push(Command::Decommission {
+                            predictor: "ghost-undeployed".to_string(),
+                        }),
+                        _ => {
+                            // Duplicate deploy: both sides must reject
+                            // "already deployed" with routing untouched.
+                            let name = g.pick(&model.deployed).clone();
+                            let cfg = predictor_cfg(g, &name);
+                            let tenant = g.pick(tenants).clone();
+                            let (src, refq) = grid_pair(g);
+                            commands.push(Command::ShadowDeploy {
+                                cfg,
+                                tenant,
+                                src,
+                                refq,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (commands, decommissioned)
+}
+
+/// Generate a full trace: a topology plus 2-4 phases of command
+/// barriers and event waves. `concurrent` traces emit only `Single`
+/// calls (the swap-storm runner partitions them across threads);
+/// sequential traces mix in whole-batch calls so `score_batch`'s
+/// group-and-commit path is diffed too.
+pub fn trace(g: &mut Gen, concurrent: bool) -> Trace {
+    let topology = topology(g);
+    let mut model = RoutingModel::from_topology(&topology);
+    let mut candidate_seq = 0usize;
+    let mut has_decommission = false;
+
+    // Per-tenant workloads for realistic fraud/legit score mixtures
+    // (plus a stranger tenant exercising the catch-all path).
+    let mut tenant_names: Vec<String> = topology.tenants.clone();
+    tenant_names.push("stranger".to_string());
+    let mut workloads: Vec<(String, Workload)> = tenant_names
+        .iter()
+        .map(|t| {
+            let profile = TenantProfile::new(t, g.u64(), g.f64(0.0..0.6), g.f64(0.0..0.4));
+            (t.clone(), Workload::new(profile, g.u64()))
+        })
+        .collect();
+    let mut next_event = |g: &mut Gen, entity_seq: &mut usize| {
+        let wi = {
+            // Mostly known tenants, occasionally the catch-all path.
+            let n = workloads.len();
+            if g.bool(0.12) {
+                n - 1
+            } else {
+                g.usize(0..(n - 1).max(1))
+            }
+        };
+        let (tenant, wl) = &mut workloads[wi];
+        let e = wl.next_event();
+        *entity_seq += 1;
+        let mut features = e.features;
+        // Occasional partial payloads: the engine's feature store is
+        // empty in these traces, so enrichment zero-pads — the oracle
+        // must model exactly that.
+        if g.bool(0.08) {
+            features.truncate(g.usize(1..FEATURE_DIM));
+        }
+        (intent_for(tenant), format!("e{entity_seq}"), features)
+    };
+
+    let mut entity_seq = 0usize;
+    let n_phases = g.usize(2..5);
+    let mut phases = Vec::with_capacity(n_phases);
+    for pi in 0..n_phases {
+        // Phase 0 starts from the boot config: events first, commands
+        // only from the second phase on (so every trace exercises the
+        // pristine world too).
+        let (commands, decommissioned) = if pi == 0 {
+            (Vec::new(), false)
+        } else {
+            phase_commands(g, &mut model, &topology.tenants, &mut candidate_seq)
+        };
+        has_decommission |= decommissioned;
+        let mut calls = Vec::new();
+        let n_singles = g.usize(24..72);
+        for _ in 0..n_singles {
+            let (intent, entity, features) = next_event(g, &mut entity_seq);
+            calls.push(Call::Single {
+                intent,
+                entity,
+                features,
+            });
+        }
+        if !concurrent && g.bool(0.7) {
+            let n_batch = g.usize(4..25);
+            let batch: Vec<(Intent, String, Vec<f32>)> = (0..n_batch)
+                .map(|_| next_event(g, &mut entity_seq))
+                .collect();
+            calls.push(Call::Batch(batch));
+        }
+        phases.push(Phase { commands, calls });
+    }
+    Trace {
+        topology,
+        phases,
+        has_decommission,
+    }
+}
+
+/// Parameters for one seamless-update storm (the metamorphic alert-
+/// rate scenario; see `harness::run_update_storm`).
+#[derive(Debug, Clone)]
+pub struct UpdateStorm {
+    /// The tenant's configured alert rate `a` (the decision-boundary
+    /// contract under test).
+    pub alert_rate: f64,
+    pub experts: Vec<String>,
+    pub weights: Vec<f64>,
+    pub posterior_correction: bool,
+    /// Calibration-period workload.
+    pub calib: DriftSpec,
+    /// Two successive drifts, each answered by a refit + promotion.
+    pub drifts: Vec<DriftSpec>,
+    /// Events used to fit each `T^Q` (also the mirror volume).
+    pub n_fit: usize,
+    /// Events per alert-rate evaluation window.
+    pub n_eval: usize,
+}
+
+/// One workload regime for the storm.
+#[derive(Debug, Clone)]
+pub struct DriftSpec {
+    pub profile_seed: u64,
+    pub stream_seed: u64,
+    pub shift_scale: f64,
+    pub pattern1_frac: f64,
+    pub fraud_rate: f64,
+}
+
+impl DriftSpec {
+    pub fn workload(&self, tenant: &str) -> Workload {
+        let profile = TenantProfile::new(
+            tenant,
+            self.profile_seed,
+            self.shift_scale,
+            self.pattern1_frac,
+        )
+        .with_fraud_rate(self.fraud_rate);
+        Workload::new(profile, self.stream_seed)
+    }
+}
+
+/// Generate one update storm: a calm calibration regime, then two
+/// strong drifts (covariate shift + fraud-wave + attack-pattern flip)
+/// that each force a refit and promotion.
+pub fn update_storm(g: &mut Gen) -> UpdateStorm {
+    let experts = expert_subset(g);
+    let weights: Vec<f64> = (0..experts.len()).map(|_| g.f64(0.2..2.0)).collect();
+    let calib = DriftSpec {
+        profile_seed: g.u64(),
+        stream_seed: g.u64(),
+        shift_scale: g.f64(0.05..0.3),
+        pattern1_frac: g.f64(0.02..0.15),
+        fraud_rate: g.f64(0.015..0.03),
+    };
+    let drifts = (0..2)
+        .map(|_| DriftSpec {
+            profile_seed: g.u64(),
+            stream_seed: g.u64(),
+            shift_scale: g.f64(0.6..1.1),
+            pattern1_frac: g.f64(0.6..0.9),
+            fraud_rate: g.f64(0.08..0.15),
+        })
+        .collect();
+    UpdateStorm {
+        alert_rate: g.f64(0.08..0.16),
+        experts,
+        weights,
+        posterior_correction: g.bool(0.5),
+        calib,
+        drifts,
+        n_fit: 1400,
+        n_eval: 1100,
+    }
+}

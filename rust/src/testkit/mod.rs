@@ -1,0 +1,38 @@
+//! The model-based verification plane.
+//!
+//! Four PRs of lock-free serving machinery implement one promise —
+//! after a model swap, every tenant's decision boundary stays put —
+//! and this module is how that promise gets *checked* instead of
+//! reviewed. Three parts:
+//!
+//! * [`oracle`] — a deliberately naive, single-threaded,
+//!   `Mutex`-and-`Vec` reference implementation of the engine
+//!   semantics (route → `T^C` → `A` → `T^Q`, FIFO bounded lake,
+//!   counters, the shadow→promote→decommission state machine) sharing
+//!   only artifact/config types with production.
+//! * [`gen`] — seeded generators for tenant topologies, event streams
+//!   and control-plane command interleavings, built on
+//!   `util::prop::Gen` so failures print replayable seeds.
+//! * [`harness`] — the deterministic runner that replays one generated
+//!   trace through both engines and diffs final scores bitwise
+//!   (single-thread) or as multisets plus exact counts (concurrent
+//!   swap storms), plus the seamless-update metamorphic check.
+//!
+//! Compiled only under `cfg(test)` or `--features testkit` (the self
+//! dev-dependency in Cargo.toml turns the feature on for every dev
+//! target). The driving suites live in `tests/model_based.rs`;
+//! docs/TESTING.md documents the invariant catalog and the
+//! failing-seed replay recipe.
+
+pub mod gen;
+pub mod harness;
+pub mod oracle;
+
+pub use gen::{Call, Command, DriftSpec, Phase, Topology, Trace, UpdateStorm};
+pub use harness::{
+    apply_command, base_seed, build_pair, check_batcher_conservation, check_logged, diff_state,
+    run_trace_concurrent, run_trace_single, run_update_storm, UpdateStormReport,
+};
+pub use oracle::{
+    OracleEngine, OracleLake, OracleQuantile, OracleQuantileState, OracleRecord, OracleResponse,
+};

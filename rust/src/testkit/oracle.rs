@@ -1,0 +1,879 @@
+//! The sequential oracle engine: a deliberately naive, single-threaded
+//! `Mutex`-and-`Vec` reference implementation of the MUSE engine
+//! semantics, sharing **only the artifact and config types**
+//! (`runtime::ModelPool`, `config::*`) with production. Everything the
+//! production engine does with lock-free snapshots, sharded seqlock
+//! rings, compiled pipelines and wait-free counters, the oracle does
+//! with a handful of mutex-guarded maps and linear scans — slow,
+//! obviously correct, and therefore usable as the ground truth the
+//! real engine is diffed against (`testkit::harness`).
+//!
+//! # Equivalence contract
+//!
+//! The oracle's *arithmetic* mirrors the staged reference path
+//! (`PipelineSpec::score_staged_one`'s operation order: per-expert
+//! clamp → Eq. 3 rational map → clamp, then `num += c*w; den += w;
+//! num/den`, then the Eq. 4 PWL lookup with precomputed segment
+//! slopes) so that, against the row-independent `muse-sim-hlo`
+//! interpreter, final scores agree **bitwise** with production — not
+//! merely within a tolerance. The *structure* is naive on purpose: the
+//! quantile lookup is a linear scan, the data lake is one
+//! `Mutex<VecDeque>`, counters are a `Mutex<BTreeMap>`, and the
+//! control plane mutates plain structs. Do not "optimise" this module;
+//! its slowness is the point (see `benches/serving_bench.rs`,
+//! "verification plane" section, for the measured gap).
+
+use crate::config::{
+    Condition, Intent, MuseConfig, PredictorConfig, RoutingConfig, ScoringRule, ShadowRule,
+};
+use crate::runtime::{ModelHandle, ModelPool};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Naive piecewise-linear quantile map: same validation and the same
+/// arithmetic as `transforms::QuantileMap` (slopes precomputed as
+/// `(refq[i+1]-refq[i]) / (src[i+1]-src[i])`, lookup evaluates
+/// `refq[i] + (score - src[i]) * slopes[i]`), but the segment search
+/// is a linear scan instead of a binary `partition_point`.
+#[derive(Debug, Clone)]
+pub struct OracleQuantile {
+    src: Vec<f64>,
+    refq: Vec<f64>,
+    slopes: Vec<f64>,
+}
+
+impl OracleQuantile {
+    pub fn new(src: Vec<f64>, refq: Vec<f64>) -> Result<OracleQuantile> {
+        ensure!(src.len() == refq.len(), "quantile grids differ in length");
+        ensure!(src.len() >= 2, "need at least 2 quantile points");
+        ensure!(
+            src.iter().all(|v| v.is_finite()) && refq.iter().all(|v| v.is_finite()),
+            "quantiles must be finite"
+        );
+        for w in src.windows(2) {
+            ensure!(w[1] > w[0], "source quantiles must be strictly increasing");
+        }
+        for w in refq.windows(2) {
+            ensure!(w[1] >= w[0], "reference quantiles must be non-decreasing");
+        }
+        let slopes = src
+            .windows(2)
+            .zip(refq.windows(2))
+            .map(|(s, r)| (r[1] - r[0]) / (s[1] - s[0]))
+            .collect();
+        Ok(OracleQuantile { src, refq, slopes })
+    }
+
+    /// Identity map on [0, 1], same knot arithmetic as
+    /// `QuantileMap::identity`.
+    pub fn identity(n_points: usize) -> Result<OracleQuantile> {
+        let grid: Vec<f64> = (0..n_points)
+            .map(|i| i as f64 / (n_points - 1) as f64)
+            .collect();
+        OracleQuantile::new(grid.clone(), grid)
+    }
+
+    pub fn source_quantiles(&self) -> &[f64] {
+        &self.src
+    }
+
+    pub fn reference_quantiles(&self) -> &[f64] {
+        &self.refq
+    }
+
+    /// Eq. 4 by linear scan. Bitwise-equal to `QuantileMap::apply` for
+    /// every input: the segment index is the same (largest `i` with
+    /// `src[i] <= score`) and the interpolation uses the identical
+    /// operation sequence.
+    pub fn apply(&self, score: f64) -> f64 {
+        if score.is_nan() {
+            return f64::NAN;
+        }
+        let n = self.src.len();
+        if score <= self.src[0] {
+            return self.refq[0];
+        }
+        if score >= self.src[n - 1] {
+            return self.refq[n - 1];
+        }
+        let mut i = 0;
+        while i + 1 < n && self.src[i + 1] <= score {
+            i += 1;
+        }
+        self.refq[i] + (score - self.src[i]) * self.slopes[i]
+    }
+}
+
+/// One recorded scoring event in the oracle lake.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OracleRecord {
+    pub tenant: String,
+    pub predictor: String,
+    pub score: f64,
+    pub raw: f64,
+    pub shadow: bool,
+    pub seq: u64,
+}
+
+/// The oracle data lake: one mutex, one `VecDeque`, strict global FIFO
+/// eviction at `cap`. (The production lake's per-stripe eviction
+/// tracks this to within one stripe round; oracle-exactness traces
+/// keep the cap above the event volume so the comparison is exact.)
+pub struct OracleLake {
+    cap: usize,
+    inner: Mutex<OracleLakeInner>,
+}
+
+struct OracleLakeInner {
+    records: VecDeque<OracleRecord>,
+    next_seq: u64,
+}
+
+impl OracleLake {
+    pub fn new(cap: usize) -> OracleLake {
+        let cap = if cap == 0 {
+            crate::datalake::DEFAULT_CAPACITY
+        } else {
+            cap
+        };
+        OracleLake {
+            cap,
+            inner: Mutex::new(OracleLakeInner {
+                records: VecDeque::new(),
+                next_seq: 0,
+            }),
+        }
+    }
+
+    pub fn append(&self, tenant: &str, predictor: &str, score: f64, raw: f64, shadow: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.records.push_back(OracleRecord {
+            tenant: tenant.to_string(),
+            predictor: predictor.to_string(),
+            score,
+            raw,
+            shadow,
+            seq,
+        });
+        while inner.records.len() > self.cap {
+            inner.records.pop_front();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All records for a pair in append order (live + shadow).
+    pub fn records_for(&self, tenant: &str, predictor: &str) -> Vec<OracleRecord> {
+        self.inner
+            .lock()
+            .unwrap()
+            .records
+            .iter()
+            .filter(|r| r.tenant == tenant && r.predictor == predictor)
+            .cloned()
+            .collect()
+    }
+
+    pub fn raw_scores(&self, tenant: &str, predictor: &str) -> Vec<f64> {
+        self.records_for(tenant, predictor)
+            .into_iter()
+            .map(|r| r.raw)
+            .collect()
+    }
+
+    pub fn final_scores(&self, tenant: &str, predictor: &str) -> Vec<f64> {
+        self.records_for(tenant, predictor)
+            .into_iter()
+            .map(|r| r.score)
+            .collect()
+    }
+
+    pub fn count_for(&self, tenant: &str, predictor: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .records
+            .iter()
+            .filter(|r| r.tenant == tenant && r.predictor == predictor)
+            .count()
+    }
+
+    /// Count per (tenant, predictor, shadow-flag) — the same shape
+    /// `DataLake::counts` returns.
+    pub fn counts(&self) -> BTreeMap<(String, String, bool), usize> {
+        let mut out = BTreeMap::new();
+        for r in self.inner.lock().unwrap().records.iter() {
+            *out.entry((r.tenant.clone(), r.predictor.clone(), r.shadow))
+                .or_insert(0) += 1;
+        }
+        out
+    }
+}
+
+/// One deployed predictor in the oracle: the config, the acquired
+/// container handles, per-expert betas (None = no `T^C`), and the
+/// tenant quantile table as two plain maps.
+struct OraclePredictor {
+    config: PredictorConfig,
+    handles: Vec<ModelHandle>,
+    betas: Vec<Option<f64>>,
+    default_q: Arc<OracleQuantile>,
+    tenants: BTreeMap<String, Arc<OracleQuantile>>,
+}
+
+impl OraclePredictor {
+    fn feature_dim(&self) -> usize {
+        self.handles[0].feature_dim
+    }
+
+    fn quantile_for(&self, tenant: &str) -> &OracleQuantile {
+        match self.tenants.get(tenant) {
+            Some(q) => q,
+            None => &self.default_q,
+        }
+    }
+
+    /// Eq. 3 then A over one event's expert scores — the staged
+    /// reference arithmetic, per event, no compilation.
+    fn raw_score(&self, expert_scores: &[f32]) -> f64 {
+        if self.handles.len() == 1 {
+            // Identity aggregation (registry rule for single-model
+            // predictors): the corrected score verbatim.
+            let s = expert_scores[0] as f64;
+            return match self.betas[0] {
+                Some(b) => correct(b, s),
+                None => s,
+            };
+        }
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for ((&s, beta), &w) in expert_scores
+            .iter()
+            .zip(&self.betas)
+            .zip(&self.config.weights)
+        {
+            let c = match beta {
+                Some(b) => correct(*b, s as f64),
+                None => s as f64,
+            };
+            num += c * w;
+            den += w;
+        }
+        num / den
+    }
+}
+
+/// Eq. 3 with exactly `PosteriorCorrection::apply`'s operation order.
+fn correct(beta: f64, score: f64) -> f64 {
+    let s = score.clamp(0.0, 1.0);
+    let denom = 1.0 - (1.0 - beta) * s;
+    (beta * s / denom).clamp(0.0, 1.0)
+}
+
+/// The oracle's routing outcome (mirrors `coordinator::Resolution`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OracleResolution {
+    pub live: String,
+    pub shadows: Vec<String>,
+}
+
+/// The oracle's response to one scored event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OracleResponse {
+    pub score: f64,
+    pub raw: f64,
+    pub predictor: String,
+    pub shadow_count: usize,
+}
+
+/// One predictor's quantile-table state as the oracle models it
+/// (sorted override names + the grids behind them).
+pub struct OracleQuantileState {
+    pub tenant_names: Vec<String>,
+    pub default: Arc<OracleQuantile>,
+    pub overrides: BTreeMap<String, Arc<OracleQuantile>>,
+}
+
+/// The sequential oracle engine. Every field sits behind a plain
+/// mutex; every operation takes them in a fixed order (routing →
+/// predictors → lake → counters) so the oracle itself can never
+/// deadlock, and nothing here is clever.
+pub struct OracleEngine {
+    pool: Arc<ModelPool>,
+    quantile_points: usize,
+    /// `server.maxBatchEvents` — mirrored because the production
+    /// engine enforces it as an admission check in `score_batch`.
+    max_batch_events: usize,
+    routing: Mutex<RoutingConfig>,
+    predictors: Mutex<BTreeMap<String, OraclePredictor>>,
+    pub lake: OracleLake,
+    counters: Mutex<BTreeMap<String, u64>>,
+    tenant_events: Mutex<BTreeMap<String, u64>>,
+}
+
+/// `FeatureStore::enrich` with an empty store (the harness never
+/// seeds derived features or a fallback): payload first, zero-pad up
+/// to the model dim, error only when the payload is *wider* than the
+/// model expects.
+fn enrich_like_empty_store(payload: &[f32], target_dim: usize) -> Result<Vec<f32>> {
+    ensure!(
+        payload.len() <= target_dim,
+        "payload has {} features but model expects {target_dim}",
+        payload.len()
+    );
+    let mut out = payload.to_vec();
+    out.resize(target_dim, 0.0);
+    Ok(out)
+}
+
+impl OracleEngine {
+    /// Build from the same validated config the production engine was
+    /// built from, against the oracle's **own** model pool (sharing
+    /// only the artifact files, never runtime state).
+    pub fn build(config: &MuseConfig, pool: Arc<ModelPool>) -> Result<OracleEngine> {
+        config.validate()?;
+        let quantile_points = pool.manifest().quantile_points;
+        let oracle = OracleEngine {
+            pool,
+            quantile_points,
+            max_batch_events: config.server.max_batch_events,
+            routing: Mutex::new(config.routing.clone()),
+            predictors: Mutex::new(BTreeMap::new()),
+            lake: OracleLake::new(config.server.lake_max_records),
+            counters: Mutex::new(BTreeMap::new()),
+            tenant_events: Mutex::new(BTreeMap::new()),
+        };
+        for pc in &config.predictors {
+            let initial = Arc::new(OracleQuantile::identity(quantile_points.max(2))?);
+            oracle.deploy(pc, initial)?;
+        }
+        Ok(oracle)
+    }
+
+    fn bump(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn tenant_events(&self, tenant: &str) -> u64 {
+        self.tenant_events.lock().unwrap().get(tenant).copied().unwrap_or(0)
+    }
+
+    /// The full per-tenant batch-event map (the harness compares it
+    /// whole against `Engine::tenant_events`, in both directions — a
+    /// key missing on either side is a divergence).
+    pub fn tenant_events_snapshot(&self) -> BTreeMap<String, u64> {
+        self.tenant_events.lock().unwrap().clone()
+    }
+
+    /// Sorted names of every deployed predictor.
+    pub fn deployed(&self) -> Vec<String> {
+        self.predictors.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// One predictor's quantile-table state — compared against the
+    /// production `QuantileTable` hooks.
+    pub fn quantile_state(&self, predictor: &str) -> Option<OracleQuantileState> {
+        let preds = self.predictors.lock().unwrap();
+        let p = preds.get(predictor)?;
+        Some(OracleQuantileState {
+            tenant_names: p.tenants.keys().cloned().collect(),
+            default: Arc::clone(&p.default_q),
+            overrides: p.tenants.clone(),
+        })
+    }
+
+    // ---------------------------------------------------------------
+    // Routing (mirrors `Router::resolve_in`)
+    // ---------------------------------------------------------------
+
+    /// First-match live rule + deduped parallel shadow union, never
+    /// shadowing onto the live target — `Router::resolve_in` verbatim,
+    /// minus the `Arc<str>` sharing.
+    pub fn resolve(&self, intent: &Intent) -> Result<OracleResolution> {
+        let routing = self.routing.lock().unwrap();
+        let mut live: Option<String> = None;
+        for rule in &routing.scoring_rules {
+            if rule.condition.matches(intent) {
+                live = Some(rule.target_predictor.to_string());
+                break;
+            }
+        }
+        let Some(live) = live else {
+            bail!("no scoring rule matches intent (tenant='{}')", intent.tenant);
+        };
+        let mut shadows: Vec<String> = Vec::new();
+        for rule in &routing.shadow_rules {
+            if rule.condition.matches(intent) {
+                for t in &rule.target_predictors {
+                    let t = t.to_string();
+                    if t != live && !shadows.contains(&t) {
+                        shadows.push(t);
+                    }
+                }
+            }
+        }
+        Ok(OracleResolution { live, shadows })
+    }
+
+    // ---------------------------------------------------------------
+    // Scoring (mirrors `Engine::score` / `Engine::score_batch`)
+    // ---------------------------------------------------------------
+
+    fn infer_one(&self, p: &OraclePredictor, features: &[f32]) -> Result<Vec<f32>> {
+        let mut scores = Vec::with_capacity(p.handles.len());
+        for h in &p.handles {
+            let out = h.infer(features, 1)?;
+            scores.push(out[0]);
+        }
+        Ok(scores)
+    }
+
+    /// Score one event end to end: route → infer → `T^C` → `A` →
+    /// tenant `T^Q` → lake append → shadow mirrors — everything the
+    /// production hot path does, executed sequentially under mutexes.
+    pub fn score(&self, intent: &Intent, features: &[f32]) -> Result<OracleResponse> {
+        let res = self.resolve(intent)?;
+        let (score, raw) = {
+            let preds = self.predictors.lock().unwrap();
+            let p = preds
+                .get(&res.live)
+                .ok_or_else(|| anyhow!("routed to undeployed predictor '{}'", res.live))?;
+            let enriched = enrich_like_empty_store(features, p.feature_dim())?;
+            let expert_scores = self.infer_one(p, &enriched)?;
+            let raw = p.raw_score(&expert_scores);
+            (p.quantile_for(&intent.tenant).apply(raw), raw)
+        };
+        self.lake.append(&intent.tenant, &res.live, score, raw, false);
+        // Shadow mirrors (production: async on the shadow pool; the
+        // oracle mirrors inline — the harness drains the production
+        // pool before diffing, so the end states agree). Inference
+        // failures are swallowed exactly like production's
+        // `if let Ok(..)` shadow task: no record, live response
+        // unaffected.
+        for shadow in &res.shadows {
+            let preds = self.predictors.lock().unwrap();
+            let Some(sp) = preds.get(shadow) else {
+                drop(preds);
+                self.bump("shadow_missing_predictor", 1);
+                continue;
+            };
+            let Ok(enriched) = enrich_like_empty_store(features, sp.feature_dim()) else {
+                drop(preds);
+                self.bump("shadow_enrich_error", 1);
+                continue;
+            };
+            let Ok(expert_scores) = self.infer_one(sp, &enriched) else {
+                drop(preds);
+                continue;
+            };
+            let sraw = sp.raw_score(&expert_scores);
+            let sfinal = sp.quantile_for(&intent.tenant).apply(sraw);
+            drop(preds);
+            self.lake.append(&intent.tenant, shadow, sfinal, sraw, true);
+            self.bump("testkit_shadow_mirrors_single", 1);
+        }
+        self.bump("requests_live", 1);
+        Ok(OracleResponse {
+            score,
+            raw,
+            predictor: res.live,
+            shadow_count: res.shadows.len(),
+        })
+    }
+
+    /// Score a batch with `Engine::score_batch`'s semantics: group by
+    /// identical intent in first-appearance order, route once per
+    /// group, commit lake records and per-tenant counters per group
+    /// only after every group scored, responses in input order.
+    pub fn score_batch(
+        &self,
+        reqs: &[(Intent, Vec<f32>)],
+    ) -> Result<Vec<OracleResponse>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        ensure!(
+            reqs.len() <= self.max_batch_events,
+            "batch of {} events exceeds maxBatchEvents = {}",
+            reqs.len(),
+            self.max_batch_events
+        );
+        struct Group {
+            first: usize,
+            indices: Vec<usize>,
+            resolution: OracleResolution,
+        }
+        let mut groups: Vec<Group> = Vec::new();
+        for (i, (intent, _)) in reqs.iter().enumerate() {
+            match groups.iter().position(|g| &reqs[g.first].0 == intent) {
+                Some(gi) => groups[gi].indices.push(i),
+                None => groups.push(Group {
+                    first: i,
+                    indices: vec![i],
+                    resolution: self.resolve(intent)?,
+                }),
+            }
+        }
+        // Phase 1: score every group, no side effects.
+        struct Scored {
+            finals: Vec<f64>,
+            raws: Vec<f64>,
+        }
+        let mut results: Vec<Scored> = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let preds = self.predictors.lock().unwrap();
+            let p = preds.get(&g.resolution.live).ok_or_else(|| {
+                anyhow!("routed to undeployed predictor '{}'", g.resolution.live)
+            })?;
+            let tenant = &reqs[g.first].0.tenant;
+            let mut finals = Vec::with_capacity(g.indices.len());
+            let mut raws = Vec::with_capacity(g.indices.len());
+            for &i in &g.indices {
+                let enriched = enrich_like_empty_store(&reqs[i].1, p.feature_dim())?;
+                let expert_scores = self.infer_one(p, &enriched)?;
+                let raw = p.raw_score(&expert_scores);
+                raws.push(raw);
+                finals.push(p.quantile_for(tenant).apply(raw));
+            }
+            results.push(Scored { finals, raws });
+        }
+        // Phase 2: commit side effects, build responses in input order.
+        let mut out: Vec<Option<OracleResponse>> = (0..reqs.len()).map(|_| None).collect();
+        for (g, scored) in groups.iter().zip(&results) {
+            let tenant = reqs[g.first].0.tenant.clone();
+            for (slot, &i) in g.indices.iter().enumerate() {
+                self.lake.append(
+                    &tenant,
+                    &g.resolution.live,
+                    scored.finals[slot],
+                    scored.raws[slot],
+                    false,
+                );
+                out[i] = Some(OracleResponse {
+                    score: scored.finals[slot],
+                    raw: scored.raws[slot],
+                    predictor: g.resolution.live.clone(),
+                    shadow_count: g.resolution.shadows.len(),
+                });
+            }
+            *self
+                .tenant_events
+                .lock()
+                .unwrap()
+                .entry(tenant.clone())
+                .or_insert(0) += g.indices.len() as u64;
+            // Batch shadow mirrors: whole sub-batch per shadow
+            // target, skipped in full on dim mismatch (counted, like
+            // production's re-enrich failure) or inference failure
+            // (swallowed silently, like production's `.is_ok()` pool
+            // task — never an error on the caller's path).
+            for shadow in &g.resolution.shadows {
+                let preds = self.predictors.lock().unwrap();
+                let Some(sp) = preds.get(shadow) else {
+                    drop(preds);
+                    self.bump("shadow_missing_predictor", 1);
+                    continue;
+                };
+                let mut mirrored: Vec<(f64, f64)> = Vec::with_capacity(g.indices.len());
+                let mut dims_ok = true;
+                let mut infer_ok = true;
+                for &i in &g.indices {
+                    let Ok(enriched) = enrich_like_empty_store(&reqs[i].1, sp.feature_dim())
+                    else {
+                        dims_ok = false;
+                        break;
+                    };
+                    let Ok(expert_scores) = self.infer_one(sp, &enriched) else {
+                        infer_ok = false;
+                        break;
+                    };
+                    let sraw = sp.raw_score(&expert_scores);
+                    mirrored.push((sp.quantile_for(&tenant).apply(sraw), sraw));
+                }
+                drop(preds);
+                if !dims_ok {
+                    self.bump("shadow_enrich_error", 1);
+                    continue;
+                }
+                if !infer_ok {
+                    continue;
+                }
+                for (sfinal, sraw) in mirrored {
+                    self.lake.append(&tenant, shadow, sfinal, sraw, true);
+                }
+            }
+        }
+        self.bump("requests_batch", 1);
+        self.bump("events_batch", reqs.len() as u64);
+        Ok(out
+            .into_iter()
+            .map(|r| r.expect("every request belongs to exactly one group"))
+            .collect())
+    }
+
+    // ---------------------------------------------------------------
+    // Control plane (mirrors `ControlPlane` + `PredictorRegistry`)
+    // ---------------------------------------------------------------
+
+    /// Deploy with `PredictorRegistry::deploy`'s validation order:
+    /// duplicate name, unknown model, beta range, aggregation-weight
+    /// rules. Failed deploys release every acquired container.
+    pub fn deploy(&self, cfg: &PredictorConfig, quantile: Arc<OracleQuantile>) -> Result<()> {
+        let mut preds = self.predictors.lock().unwrap();
+        if preds.contains_key(&cfg.name) {
+            bail!("predictor '{}' is already deployed", cfg.name);
+        }
+        ensure!(!cfg.experts.is_empty(), "predictor '{}' needs >= 1 expert", cfg.name);
+        let mut handles: Vec<ModelHandle> = Vec::with_capacity(cfg.experts.len());
+        let mut betas: Vec<Option<f64>> = Vec::with_capacity(cfg.experts.len());
+        let build = (|| -> Result<()> {
+            for model in &cfg.experts {
+                let handle = self.pool.acquire(model)?;
+                let beta = handle.beta;
+                // Acquired before validation, like the registry: the
+                // failure path below releases every pushed handle.
+                handles.push(handle);
+                if cfg.posterior_correction {
+                    ensure!(
+                        beta > 0.0 && beta <= 1.0 && beta.is_finite(),
+                        "undersampling ratio beta must be in (0, 1], got {beta}"
+                    );
+                    betas.push(Some(beta));
+                } else {
+                    betas.push(None);
+                }
+            }
+            if cfg.experts.len() > 1 {
+                // `Aggregation::weighted` validation.
+                ensure!(!cfg.weights.is_empty(), "weights must be non-empty");
+                ensure!(
+                    cfg.weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+                    "weights must be finite and non-negative"
+                );
+                ensure!(
+                    cfg.weights.iter().sum::<f64>() > 0.0,
+                    "at least one weight must be positive"
+                );
+                ensure!(
+                    cfg.weights.len() == cfg.experts.len(),
+                    "aggregation arity mismatch"
+                );
+            }
+            let dim = handles[0].feature_dim;
+            ensure!(
+                handles.iter().all(|h| h.feature_dim == dim),
+                "experts disagree on feature_dim"
+            );
+            Ok(())
+        })();
+        if let Err(e) = build {
+            for h in &handles {
+                self.pool.release(&h.name);
+            }
+            return Err(e);
+        }
+        preds.insert(
+            cfg.name.clone(),
+            OraclePredictor {
+                config: cfg.clone(),
+                handles,
+                betas,
+                default_q: quantile,
+                tenants: BTreeMap::new(),
+            },
+        );
+        Ok(())
+    }
+
+    /// `ControlPlane::shadow_deploy`: deploy first (routing untouched
+    /// on failure), then append the tenant's shadow rule.
+    pub fn shadow_deploy(
+        &self,
+        cfg: &PredictorConfig,
+        tenant: &str,
+        quantile: Arc<OracleQuantile>,
+    ) -> Result<()> {
+        self.deploy(cfg, quantile)?;
+        let mut routing = self.routing.lock().unwrap();
+        routing.shadow_rules.push(ShadowRule {
+            description: format!("shadow {} for {tenant}", cfg.name),
+            condition: Condition {
+                tenants: vec![tenant.to_string()],
+                ..Condition::default()
+            },
+            target_predictors: vec![cfg.name.as_str().into()],
+        });
+        Ok(())
+    }
+
+    /// `ControlPlane::promote` verbatim, including the dedicated-rule
+    /// insertion quirk and whole-rule shadow removal.
+    pub fn promote(&self, tenant: &str, new_predictor: &str) -> Result<()> {
+        ensure!(
+            self.predictors.lock().unwrap().contains_key(new_predictor),
+            "cannot promote undeployed predictor '{new_predictor}'"
+        );
+        let mut routing = self.routing.lock().unwrap();
+        let intent = Intent {
+            tenant: tenant.to_string(),
+            ..Default::default()
+        };
+        let matched = routing
+            .scoring_rules
+            .iter()
+            .position(|r| r.condition.matches(&intent));
+        let Some(i) = matched else {
+            bail!("no scoring rule matches tenant '{tenant}'");
+        };
+        if routing.scoring_rules[i].condition.tenants == vec![tenant.to_string()] {
+            routing.scoring_rules[i].target_predictor = new_predictor.into();
+        } else {
+            routing.scoring_rules.insert(
+                0,
+                ScoringRule {
+                    description: format!("promoted {new_predictor} for {tenant}"),
+                    condition: Condition {
+                        tenants: vec![tenant.to_string()],
+                        ..Condition::default()
+                    },
+                    target_predictor: new_predictor.into(),
+                },
+            );
+        }
+        routing
+            .shadow_rules
+            .retain(|r| !r.target_predictors.iter().any(|t| &**t == new_predictor));
+        Ok(())
+    }
+
+    /// `ControlPlane::decommission`: routing is stripped first (and
+    /// stays stripped) even when the registry removal then errors.
+    pub fn decommission(&self, predictor: &str) -> Result<()> {
+        {
+            let mut routing = self.routing.lock().unwrap();
+            routing
+                .scoring_rules
+                .retain(|r| &*r.target_predictor != predictor);
+            for rule in routing.shadow_rules.iter_mut() {
+                rule.target_predictors.retain(|t| &**t != predictor);
+            }
+            routing.shadow_rules.retain(|r| !r.target_predictors.is_empty());
+        }
+        let removed = self.predictors.lock().unwrap().remove(predictor);
+        let Some(p) = removed else {
+            bail!("predictor '{predictor}' is not deployed");
+        };
+        for h in &p.handles {
+            self.pool.release(&h.name);
+        }
+        Ok(())
+    }
+
+    /// `ControlPlane::install_custom_quantile` /
+    /// `Predictor::install_tenant_quantile`.
+    pub fn install_tenant_quantile(
+        &self,
+        predictor: &str,
+        tenant: &str,
+        map: Arc<OracleQuantile>,
+    ) -> Result<()> {
+        let mut preds = self.predictors.lock().unwrap();
+        let p = preds
+            .get_mut(predictor)
+            .ok_or_else(|| anyhow!("unknown predictor '{predictor}'"))?;
+        p.tenants.insert(tenant.to_string(), map);
+        Ok(())
+    }
+
+    /// `Predictor::set_default_quantile` (tenant overrides carried
+    /// along).
+    pub fn set_default_quantile(&self, predictor: &str, map: Arc<OracleQuantile>) -> Result<()> {
+        let mut preds = self.predictors.lock().unwrap();
+        let p = preds
+            .get_mut(predictor)
+            .ok_or_else(|| anyhow!("unknown predictor '{predictor}'"))?;
+        p.default_q = map;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::transforms::QuantileMap;
+    use crate::util::prop;
+
+    #[test]
+    fn oracle_quantile_is_bitwise_equal_to_production_map() {
+        prop::check(256, |g| {
+            let n = g.usize(2..40);
+            let src = g.monotone_grid(n, 0.0, 1.0);
+            let refq = g.monotone_grid(n, 0.0, 1.0);
+            let prod = QuantileMap::new(src.clone(), refq.clone()).unwrap();
+            let oracle = OracleQuantile::new(src, refq).unwrap();
+            for _ in 0..32 {
+                let x = g.f64(-0.3..1.3);
+                prop_assert!(
+                    prod.apply(x).to_bits() == oracle.apply(x).to_bits(),
+                    "maps diverge at {x}: prod {} vs oracle {}",
+                    prod.apply(x),
+                    oracle.apply(x)
+                );
+            }
+            prop_assert!(prod.apply(f64::NAN).is_nan() && oracle.apply(f64::NAN).is_nan(), "NaN");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn oracle_identity_matches_production_identity() {
+        for n in [2usize, 3, 33, 129] {
+            let prod = QuantileMap::identity(n).unwrap();
+            let oracle = OracleQuantile::identity(n).unwrap();
+            assert_eq!(prod.source_quantiles(), oracle.source_quantiles());
+            assert_eq!(prod.reference_quantiles(), oracle.reference_quantiles());
+        }
+        assert!(OracleQuantile::identity(1).is_err());
+    }
+
+    #[test]
+    fn oracle_lake_fifo_eviction_is_strict() {
+        let lake = OracleLake::new(4);
+        for i in 0..10 {
+            lake.append("t", "p", i as f64, i as f64, false);
+        }
+        assert_eq!(lake.len(), 4);
+        let raws = lake.raw_scores("t", "p");
+        assert_eq!(raws, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(lake.count_for("t", "p"), 4);
+    }
+
+    #[test]
+    fn oracle_correction_matches_posterior_correction() {
+        use crate::transforms::PosteriorCorrection;
+        prop::check(128, |g| {
+            let beta = g.f64(0.001..1.0);
+            let pc = PosteriorCorrection::new(beta).unwrap();
+            let s = g.f64(-0.2..1.2);
+            prop_assert!(
+                pc.apply(s).to_bits() == correct(beta, s).to_bits(),
+                "T^C diverges at {s} (beta {beta})"
+            );
+            Ok(())
+        });
+    }
+}

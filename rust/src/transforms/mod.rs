@@ -15,5 +15,5 @@ pub mod reference;
 pub use aggregation::Aggregation;
 pub use pipeline::{CompiledPipeline, CompiledStages, PipelineScratch, PipelineSpec};
 pub use posterior::PosteriorCorrection;
-pub use quantile::QuantileMap;
+pub use quantile::{QuantileError, QuantileMap};
 pub use reference::ReferenceDistribution;

@@ -461,18 +461,20 @@ mod tests {
             let compiled = s.compile().map_err(|e| e.to_string())?;
             for _ in 0..16 {
                 // Mostly in-range scores, with deliberate edge,
-                // out-of-grid, and non-finite cases mixed in.
-                // +inf exercises the neutral slot's non-finite
-                // passthrough; -inf is excluded because opposite
-                // infinities aggregate to NaN, which QuantileMap::apply
-                // rejects by panicking on both paths alike.
+                // out-of-grid, and non-finite cases mixed in. ±inf
+                // exercise the neutral slot's non-finite passthrough;
+                // opposite infinities aggregate to NaN, which
+                // `QuantileMap::apply` now propagates (NaN in, NaN
+                // out) identically on both paths — the `agree` closure
+                // below accepts matching NaNs.
                 let scores: Vec<f32> = (0..k)
-                    .map(|_| match g.usize(0..10) {
+                    .map(|_| match g.usize(0..11) {
                         0 => 0.0,
                         1 => 1.0,
                         2 => g.f64(-0.5..0.0) as f32,
                         3 => g.f64(1.0..1.5) as f32,
                         4 => f32::INFINITY,
+                        5 => f32::NEG_INFINITY,
                         _ => g.f64(0.0..1.0) as f32,
                     })
                     .collect();

@@ -12,7 +12,33 @@
 //! reported score changes.
 
 use anyhow::{ensure, Result};
+use std::fmt;
 use std::sync::Arc;
+
+/// Typed error for quantile-map application. `QuantileMap::apply`
+/// historically panicked on a NaN input (the `partition_point` index
+/// arithmetic underflowed); it is now total (NaN in, NaN out) and
+/// callers that must *reject* non-finite scores instead of propagating
+/// them use [`QuantileMap::try_apply`], which returns this.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuantileError {
+    /// The score was NaN or ±∞ (the offending value is carried for
+    /// error messages; NaN compares unequal to itself, so match on the
+    /// variant, not the payload).
+    NonFiniteScore(f64),
+}
+
+impl fmt::Display for QuantileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QuantileError::NonFiniteScore(s) => {
+                write!(f, "cannot quantile-map non-finite score {s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QuantileError {}
 
 /// An immutable piecewise-linear quantile transformation.
 #[derive(Debug, Clone, PartialEq)]
@@ -74,9 +100,18 @@ impl QuantileMap {
     }
 
     /// Eq. 4: map one score. Scores outside the source support clamp
-    /// to the reference bounds. O(log N).
+    /// to the reference bounds (±∞ included); NaN propagates (NaN in,
+    /// NaN out — the map is total and never panics; use
+    /// [`QuantileMap::try_apply`] to reject non-finite inputs with a
+    /// typed error instead). O(log N).
     #[inline]
     pub fn apply(&self, score: f64) -> f64 {
+        if score.is_nan() {
+            // Without this guard every comparison below is false and
+            // `partition_point` returns 0, underflowing the segment
+            // index — a panic on the hot path for one poisoned event.
+            return f64::NAN;
+        }
         let n = self.src.len();
         if score <= self.src[0] {
             return self.refq[0];
@@ -88,6 +123,21 @@ impl QuantileMap {
         // the segment index is that minus one.
         let i = self.src.partition_point(|&q| q <= score) - 1;
         self.refq[i] + (score - self.src[i]) * self.slopes[i]
+    }
+
+    /// As [`QuantileMap::apply`], but rejects non-finite scores (NaN
+    /// and ±∞) with a typed [`QuantileError`] instead of propagating
+    /// or clamping them — the strict front door for scores that cross
+    /// a trust boundary rather than coming out of the engine's own
+    /// pipeline. (Replayed lakes are guarded on the fitting side too:
+    /// `quantile_fit::fit_from_scores` rejects non-finite samples
+    /// with a typed error instead of panicking in the quantile sort.)
+    #[inline]
+    pub fn try_apply(&self, score: f64) -> std::result::Result<f64, QuantileError> {
+        if !score.is_finite() {
+            return Err(QuantileError::NonFiniteScore(score));
+        }
+        Ok(self.apply(score))
     }
 
     /// Map a batch in place.
@@ -220,6 +270,133 @@ mod tests {
             let x = g.f64(-1.0..2.0);
             let y = m.apply(x);
             prop_assert!((0.2..=0.7).contains(&y), "out of ref bounds: {y}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_propagates_instead_of_panicking() {
+        // The discovered panic: NaN fails every comparison, so the
+        // pre-hardening segment search underflowed. The map is total
+        // now — NaN in, NaN out — and try_apply surfaces the typed
+        // error.
+        let m = simple();
+        assert!(m.apply(f64::NAN).is_nan());
+        assert!(matches!(
+            m.try_apply(f64::NAN),
+            Err(QuantileError::NonFiniteScore(_))
+        ));
+        assert!(matches!(
+            m.try_apply(f64::INFINITY),
+            Err(QuantileError::NonFiniteScore(_))
+        ));
+        assert!(matches!(
+            m.try_apply(f64::NEG_INFINITY),
+            Err(QuantileError::NonFiniteScore(_))
+        ));
+        assert_eq!(m.try_apply(0.1), Ok(m.apply(0.1)));
+        // ±∞ clamp under apply (the lenient path), like any
+        // out-of-support score.
+        assert_eq!(m.apply(f64::INFINITY), 1.0);
+        assert_eq!(m.apply(f64::NEG_INFINITY), 0.0);
+        // The error renders and matches on its variant.
+        let e = m.try_apply(f64::NAN).unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
+    }
+
+    #[test]
+    fn degenerate_identity_grids_error_not_panic() {
+        // identity(1) divides by zero into a NaN grid; identity(0)
+        // produces an empty grid. Both must be rejected by the
+        // constructor, never panic downstream.
+        assert!(QuantileMap::identity(0).is_err());
+        assert!(QuantileMap::identity(1).is_err());
+        assert!(QuantileMap::identity(2).is_ok());
+    }
+
+    #[test]
+    fn prop_grid_boundaries_clamp_exactly() {
+        // Below q^S_0 and above q^S_N the map must return the exact
+        // reference endpoints (bitwise), for grids of every size
+        // including the minimal 2-point grid.
+        prop::check(256, |g| {
+            let n = g.usize(2..40);
+            let src = g.monotone_grid(n, 0.1, 0.9);
+            let refq = g.monotone_grid(n, 0.2, 0.8);
+            let m = QuantileMap::new(src.clone(), refq.clone()).unwrap();
+            let below = src[0] - g.f64(0.0..1.0) - 1e-9;
+            let above = src[n - 1] + g.f64(0.0..1.0) + 1e-9;
+            prop_assert!(
+                m.apply(below).to_bits() == refq[0].to_bits(),
+                "below-support {below} -> {} != refq[0] {}",
+                m.apply(below),
+                refq[0]
+            );
+            prop_assert!(
+                m.apply(above).to_bits() == refq[n - 1].to_bits(),
+                "above-support {above} -> {} != refq[N] {}",
+                m.apply(above),
+                refq[n - 1]
+            );
+            // The knots themselves map exactly to their endpoints.
+            prop_assert!(m.apply(src[0]).to_bits() == refq[0].to_bits(), "q0 knot");
+            prop_assert!(
+                m.apply(src[n - 1]).to_bits() == refq[n - 1].to_bits(),
+                "qN knot"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_two_point_grids_interpolate_and_clamp() {
+        // The smallest legal grid (one segment) across random spans:
+        // interior points interpolate linearly, the outside clamps,
+        // and non-finite inputs never panic.
+        prop::check(256, |g| {
+            let a = g.f64(-5.0..5.0);
+            let b = a + g.f64(1e-6..3.0);
+            let c = g.f64(-2.0..2.0);
+            let d = c + g.f64(0.0..2.0);
+            let m = QuantileMap::new(vec![a, b], vec![c, d]).map_err(|e| e.to_string())?;
+            let t = g.f64(0.0..1.0);
+            let x = a + (b - a) * t;
+            let want = c + (x - a) * ((d - c) / (b - a));
+            let got = m.apply(x);
+            prop_assert!((got - want).abs() <= 1e-9, "interp {x} -> {got}, want {want}");
+            prop_assert!(m.apply(a - 1.0) == c && m.apply(b + 1.0) == d, "clamp");
+            prop_assert!(m.apply(f64::NAN).is_nan(), "NaN must propagate");
+            prop_assert!(m.try_apply(f64::NAN).is_err(), "NaN must be rejected");
+            prop_assert!(
+                m.try_apply(x).map_err(|e| e.to_string())? == got,
+                "try_apply disagrees with apply"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_rejects_non_finite_grids() {
+        // NaN/±∞ anywhere in either grid is a constructor error — the
+        // map can then assume finite knots everywhere else.
+        prop::check(128, |g| {
+            let n = g.usize(2..20);
+            let poison = *g.pick(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY]);
+            let at = g.usize(0..n);
+            let mut src = g.monotone_grid(n, 0.0, 1.0);
+            let refq = g.monotone_grid(n, 0.0, 1.0);
+            src[at] = poison;
+            prop_assert!(
+                QuantileMap::new(src, refq.clone()).is_err(),
+                "poisoned src accepted (poison {poison} at {at})"
+            );
+            let src = g.monotone_grid(n, 0.0, 1.0);
+            let mut refq = refq;
+            refq[at] = poison;
+            prop_assert!(
+                QuantileMap::new(src, refq).is_err(),
+                "poisoned refq accepted (poison {poison} at {at})"
+            );
             Ok(())
         });
     }

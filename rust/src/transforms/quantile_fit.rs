@@ -41,6 +41,17 @@ pub fn fit_from_scores(scores: &[f64], ref_quantiles: &[f64]) -> Result<Quantile
         scores.len(),
         ref_quantiles.len()
     );
+    // A NaN among the scores would panic deep inside the quantile
+    // sort (`util::stats::quantiles`). `QuantileMap::apply` is total
+    // now (NaN propagates instead of panicking on the hot path), so a
+    // poisoned event *can* reach a lake replay — reject it here as a
+    // typed error on the control-plane path rather than a panic.
+    ensure!(
+        scores.iter().all(|s| s.is_finite()),
+        "cannot fit quantiles from non-finite scores ({} of {} samples non-finite)",
+        scores.iter().filter(|s| !s.is_finite()).count(),
+        scores.len()
+    );
     let probs = stats::prob_grid(ref_quantiles.len());
     let mut src = stats::quantiles(scores, &probs);
     dedup_monotone(&mut src);
@@ -203,6 +214,21 @@ mod tests {
     fn fit_requires_enough_samples() {
         let refq = stats::prob_grid(101);
         assert!(fit_from_scores(&[0.1; 50], &refq).is_err());
+    }
+
+    #[test]
+    fn fit_rejects_non_finite_scores_with_typed_error() {
+        // One poisoned sample in a lake replay must be an error, not a
+        // panic inside the quantile sort.
+        let refq = stats::prob_grid(11);
+        let mut scores: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        scores[50] = f64::NAN;
+        let err = fit_from_scores(&scores, &refq).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        scores[50] = f64::INFINITY;
+        assert!(fit_from_scores(&scores, &refq).is_err());
+        scores[50] = 0.5;
+        assert!(fit_from_scores(&scores, &refq).is_ok());
     }
 
     #[test]

@@ -1,0 +1,91 @@
+//! Model-based verification suite (`cargo test -q --test model_based`).
+//!
+//! Every test replays ≥ 50 generated scenarios through the production
+//! engine *and* the sequential oracle (`muse::testkit`), diffing the
+//! two. A failure panics with the generated case's seed; replay it
+//! with the recipe in docs/TESTING.md:
+//!
+//! ```text
+//! MUSE_MB_SEED=<base_seed> cargo test --test model_based <suite> -- --nocapture
+//! ```
+//!
+//! (the per-case seed in the panic message pins the exact case via
+//! `prop::check_seeded`), and CI uploads
+//! `target/model-based-seeds/*.txt` on failure.
+//!
+//! Invariant catalog (docs/TESTING.md has the long form):
+//!
+//! 1. **Oracle score equality** — single-threaded, every response is
+//!    bitwise-equal to the naive staged arithmetic, across generated
+//!    topologies and control-plane storms; final lake/counters/tables
+//!    agree exactly, in append order.
+//! 2. **Lake/count oracle-exactness under concurrent swap storms** —
+//!    4 scorer threads race through promote/deploy/decommission
+//!    barriers; responses stay bitwise-deterministic, the sharded
+//!    seqlock lake's merged reads equal the oracle's Mutex-VecDeque
+//!    as multisets with exact per-pair counts and zero degradation.
+//! 3. **Seamless-update alert-rate stability** — for generated drift
+//!    storms with ≥ 2 promotions, the tenant's alert rate at its
+//!    configured threshold returns to target after every promotion
+//!    while the raw score distribution demonstrably shifts (and never
+//!    does worse than keeping the old transformation).
+
+use muse::runtime::SimArtifacts;
+use muse::testkit::{gen, harness};
+
+/// Invariant 1: single-threaded bitwise oracle equality.
+#[test]
+fn model_oracle_single_thread_bitwise_equality() {
+    let fix = SimArtifacts::in_temp().expect("sim fixture");
+    harness::check_logged(
+        "model_oracle_single_thread_bitwise_equality",
+        harness::base_seed(0x4D42_5345),
+        60,
+        |g| {
+            let trace = gen::trace(g, false);
+            harness::run_trace_single(&fix, &trace)
+        },
+    );
+}
+
+/// Invariant 2: concurrent swap storms — multiset lake exactness,
+/// O(1) count oracle-exactness, bitwise response determinism.
+#[test]
+fn model_oracle_concurrent_swap_storm_exactness() {
+    let fix = SimArtifacts::in_temp().expect("sim fixture");
+    harness::check_logged(
+        "model_oracle_concurrent_swap_storm_exactness",
+        harness::base_seed(0x4D42_5757),
+        50,
+        |g| {
+            let trace = gen::trace(g, true);
+            harness::run_trace_concurrent(&fix, &trace, 4)
+        },
+    );
+}
+
+/// Invariant 3: the seamless-update metamorphic check — alert-rate
+/// stability across ≥ 2 refit+promotion cycles under generated drift.
+#[test]
+fn model_seamless_update_alert_rate_stability() {
+    let fix = SimArtifacts::in_temp().expect("sim fixture");
+    harness::check_logged(
+        "model_seamless_update_alert_rate_stability",
+        harness::base_seed(0x4D42_5550),
+        50,
+        |g| {
+            let storm = gen::update_storm(g);
+            let report = harness::run_update_storm(&fix, &storm)?;
+            if report.promotions < 2 {
+                return Err(format!(
+                    "storm completed only {} promotions (need >= 2)",
+                    report.promotions
+                ));
+            }
+            if report.rates.len() != 3 {
+                return Err(format!("expected 3 rate windows, got {:?}", report.rates));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,54 @@
+//! Repro-plane smoke suite: every paper-exhibit harness must run end
+//! to end on the synthetic paper-roster fixture
+//! (`SimArtifacts::in_temp_paper`) with **no** `make artifacts`, no
+//! Python, no network.
+//!
+//! This asserts *executability*, not paper fidelity: the shape checks
+//! inside each harness print `[ok]`/`[FAIL]` lines either way, and
+//! only the real AOT artifacts reproduce the paper's exact figures
+//! (docs/TESTING.md "Repro smoke"). What rots without this suite is
+//! the harness plumbing itself — manifest/dataset wiring, the fit
+//! paths, engine construction — which used to be exercised only on
+//! machines that had run the full Python compile step.
+//!
+//! Kept as a single `#[test]` on purpose: the harnesses resolve the
+//! artifact root through the `MUSE_ARTIFACTS` environment variable,
+//! and this file being its own integration-test binary (plus one test
+//! function) means the `set_var` cannot race another test's
+//! `Manifest::default_root` lookup.
+
+use muse::repro;
+use muse::runtime::SimArtifacts;
+
+#[test]
+fn every_repro_harness_runs_on_synthetic_artifacts() {
+    let fix = SimArtifacts::in_temp_paper().expect("paper fixture");
+    std::env::set_var("MUSE_ARTIFACTS", fix.root());
+
+    // Fig. 5 is pure cluster simulation (no artifacts) — and its shape
+    // checks are deterministic, so they must pass even here.
+    let out = repro::fig5::run().expect("fig5");
+    assert!(out.contains("Figure 5"), "{out}");
+    assert!(!out.contains("[FAIL]"), "fig5 shape must hold:\n{out}");
+
+    // The artifact-backed harnesses: end-to-end completion on the
+    // synthetic roster (cold-start mixture fit, quantile fits, recall,
+    // calibration tables, SLO measurement).
+    let out = repro::fig4::run().expect("fig4");
+    assert!(out.contains("Figure 4"), "{out}");
+    assert!(out.contains("predictor v1"), "{out}");
+
+    let out = repro::fig6::run().expect("fig6");
+    assert!(out.contains("Figure 6"), "{out}");
+    assert!(out.contains("Recall@1%FPR"), "{out}");
+
+    let out = repro::table1::run().expect("table1");
+    assert!(out.contains("Table 1"), "{out}");
+    assert!(out.contains("Brier"), "{out}");
+
+    // Headline at reduced volume (full volume is `muse repro
+    // headline`); debug builds only require completion, mirroring the
+    // harness's own in-tree test.
+    let out = repro::headline::run_scaled(4, 400).expect("headline");
+    assert!(out.contains("throughput"), "{out}");
+}
