@@ -151,6 +151,33 @@ pub struct ServerConfig {
     /// with `413 Payload Too Large` before the body is read, so one
     /// client cannot balloon worker memory.
     pub max_body_bytes: usize,
+    /// Stream `POST /v1/score/batch` bodies through the incremental
+    /// parser (events reach the scoring sink as they parse, the body
+    /// is never materialized). Off = the buffered path; responses are
+    /// bitwise identical either way.
+    pub stream_batch: bool,
+    /// Tenant -> shed priority for ingress admission control. A
+    /// tenant with priority `p` is shed only once the batcher queue
+    /// exceeds `shedQueueDepth << p`, so higher-priority tenants
+    /// survive deeper overload. Tenants not listed use
+    /// `defaultPriority`.
+    pub tenant_priorities: Vec<(String, u8)>,
+    /// Shed priority for tenants absent from `tenantPriorities`.
+    pub default_priority: u8,
+    /// Batcher queue depth at which priority-0 tenants start being
+    /// shed with `429 Too Many Requests` + `Retry-After`.
+    /// 0 disables admission control entirely.
+    pub shed_queue_depth: usize,
+    /// Slowloris guards: deadline from a request's first byte to the
+    /// end of its header section, and from there to the end of its
+    /// body. Idle keep-alive connections carry no deadline.
+    pub header_read_timeout_ms: u64,
+    pub body_read_timeout_ms: u64,
+    /// Max request header-section bytes (431 beyond this).
+    pub max_header_bytes: usize,
+    /// Max concurrently open connections; accepts beyond this are
+    /// dropped immediately (counted in `ingress_over_capacity`).
+    pub max_connections: usize,
 }
 
 impl Default for ServerConfig {
@@ -165,6 +192,14 @@ impl Default for ServerConfig {
             lake_max_records: 1_000_000,
             lake_shards: 8,
             max_body_bytes: 1 << 20,
+            stream_batch: true,
+            tenant_priorities: Vec::new(),
+            default_priority: 0,
+            shed_queue_depth: 0,
+            header_read_timeout_ms: 5_000,
+            body_read_timeout_ms: 15_000,
+            max_header_bytes: 16 * 1024,
+            max_connections: 8192,
         }
     }
 }
@@ -348,6 +383,28 @@ impl MuseConfig {
             self.server.max_body_bytes >= 1024,
             "server.maxBodyBytes must be >= 1024 (scoring payloads alone are hundreds of bytes)"
         );
+        ensure!(
+            self.server.max_header_bytes >= 256,
+            "server.maxHeaderBytes must be >= 256 (a bare request line plus Host is ~64 bytes)"
+        );
+        ensure!(
+            self.server.max_connections >= 1,
+            "server.maxConnections must be >= 1"
+        );
+        ensure!(
+            self.server.header_read_timeout_ms >= 10 && self.server.body_read_timeout_ms >= 10,
+            "server read timeouts must be >= 10 ms (lower values shed healthy clients)"
+        );
+        ensure!(
+            self.server.default_priority <= 16,
+            "server.defaultPriority must be <= 16 (shed threshold is shedQueueDepth << priority)"
+        );
+        for (tenant, p) in &self.server.tenant_priorities {
+            ensure!(
+                *p <= 16,
+                "server.tenantPriorities['{tenant}'] must be <= 16 (shed threshold is shedQueueDepth << priority)"
+            );
+        }
         let lc = &self.lifecycle;
         ensure!(
             lc.alert_rate > 0.0 && lc.alert_rate < 1.0,
@@ -567,6 +624,51 @@ fn parse_server(v: &Json) -> Result<ServerConfig> {
             .get("maxBodyBytes")
             .and_then(Json::as_usize)
             .unwrap_or(d.max_body_bytes),
+        stream_batch: v
+            .get("streamBatch")
+            .and_then(Json::as_bool)
+            .unwrap_or(d.stream_batch),
+        tenant_priorities: match v.get("tenantPriorities") {
+            None => d.tenant_priorities,
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(tenant, p)| {
+                    p.as_usize()
+                        .filter(|p| *p <= u8::MAX as usize)
+                        .map(|p| (tenant.clone(), p as u8))
+                        .with_context(|| {
+                            format!(
+                                "server.tenantPriorities['{tenant}'] must be a small non-negative integer"
+                            )
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            Some(_) => bail!("server.tenantPriorities must be a map of tenant -> priority"),
+        },
+        default_priority: v
+            .get("defaultPriority")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.default_priority as usize) as u8,
+        shed_queue_depth: v
+            .get("shedQueueDepth")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.shed_queue_depth),
+        header_read_timeout_ms: v
+            .get("headerReadTimeoutMs")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.header_read_timeout_ms as usize) as u64,
+        body_read_timeout_ms: v
+            .get("bodyReadTimeoutMs")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.body_read_timeout_ms as usize) as u64,
+        max_header_bytes: v
+            .get("maxHeaderBytes")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.max_header_bytes),
+        max_connections: v
+            .get("maxConnections")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.max_connections),
     })
 }
 
@@ -775,6 +877,51 @@ lifecycle:
         assert_eq!(d.server.max_body_bytes, 1 << 20);
         assert!(MuseConfig::from_yaml("server:\n  lakeShards: 0\n").is_err());
         assert!(MuseConfig::from_yaml("server:\n  maxBodyBytes: 100\n").is_err());
+    }
+
+    #[test]
+    fn server_ingress_knobs_parse_and_validate() {
+        let cfg = MuseConfig::from_yaml(
+            "server:\n  streamBatch: false\n  shedQueueDepth: 128\n  defaultPriority: 1\n  tenantPriorities:\n    vip: 4\n    bulk: 0\n  headerReadTimeoutMs: 250\n  bodyReadTimeoutMs: 900\n  maxHeaderBytes: 4096\n  maxConnections: 512\n",
+        )
+        .unwrap();
+        assert!(!cfg.server.stream_batch);
+        assert_eq!(cfg.server.shed_queue_depth, 128);
+        assert_eq!(cfg.server.default_priority, 1);
+        assert_eq!(cfg.server.header_read_timeout_ms, 250);
+        assert_eq!(cfg.server.body_read_timeout_ms, 900);
+        assert_eq!(cfg.server.max_header_bytes, 4096);
+        assert_eq!(cfg.server.max_connections, 512);
+        // BTreeMap source: entries arrive sorted by tenant.
+        assert_eq!(
+            cfg.server.tenant_priorities,
+            vec![("bulk".to_string(), 0), ("vip".to_string(), 4)]
+        );
+
+        let d = MuseConfig::from_yaml("").unwrap();
+        assert!(d.server.stream_batch, "streaming ingress is the default");
+        assert_eq!(d.server.shed_queue_depth, 0, "admission control defaults off");
+        assert_eq!(d.server.max_header_bytes, 16 * 1024);
+        assert_eq!(d.server.max_connections, 8192);
+        assert_eq!(d.server.header_read_timeout_ms, 5_000);
+        assert_eq!(d.server.body_read_timeout_ms, 15_000);
+        assert!(d.server.tenant_priorities.is_empty());
+    }
+
+    #[test]
+    fn server_ingress_knobs_reject_nonsense() {
+        assert!(MuseConfig::from_yaml("server:\n  maxHeaderBytes: 10\n").is_err());
+        assert!(MuseConfig::from_yaml("server:\n  maxConnections: 0\n").is_err());
+        assert!(MuseConfig::from_yaml("server:\n  headerReadTimeoutMs: 1\n").is_err());
+        assert!(MuseConfig::from_yaml("server:\n  defaultPriority: 40\n").is_err());
+        assert!(
+            MuseConfig::from_yaml("server:\n  tenantPriorities:\n    vip: 40\n").is_err(),
+            "priority over 16 would overflow the shift"
+        );
+        assert!(
+            MuseConfig::from_yaml("server:\n  tenantPriorities: 3\n").is_err(),
+            "tenantPriorities must be a map"
+        );
     }
 
     #[test]

@@ -208,6 +208,11 @@ struct Shared {
     /// Submitters inside `score` (registered *before* the shutdown
     /// check — the Dekker half that makes teardown race-free).
     inflight: AtomicUsize,
+    /// Submissions pushed but not yet popped by the worker: the queue
+    /// depth the ingress admission controller probes. Incremented
+    /// before the push, decremented at every pop site, so a reader
+    /// may transiently over-count but never under-count pressure.
+    queued: AtomicUsize,
     batches: AtomicU64,
     events: AtomicU64,
 }
@@ -236,6 +241,7 @@ impl Batcher {
             queue: SubmitQueue::new(),
             shutdown: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
             batches: AtomicU64::new(0),
             events: AtomicU64::new(0),
         });
@@ -278,6 +284,7 @@ impl Batcher {
         }
         let sub = Submission::new(features, tenant);
         let sub_ptr = &sub as *const Submission as *mut Submission;
+        self.shared.queued.fetch_add(1, Ordering::Relaxed);
         // SAFETY: `sub` lives on this stack frame and we do not return
         // before observing DONE below, which is the worker's last
         // access — the queue contract of the module docs.
@@ -291,6 +298,14 @@ impl Batcher {
         let result = unsafe { (*sub.result.get()).take() };
         self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
         result.unwrap_or_else(|| Err(anyhow!("batcher dropped the reply")))
+    }
+
+    /// Submissions waiting in the queue right now (pushed, not yet
+    /// popped by the worker). The ingress plane's admission
+    /// controller reads this to decide tenant-priority shedding;
+    /// wait-free, may transiently over-count, never under-counts.
+    pub fn depth(&self) -> usize {
+        self.shared.queued.load(Ordering::Relaxed)
     }
 
     /// Stop the worker without consuming the batcher (decommission
@@ -343,6 +358,7 @@ impl Drop for DrainOnExit {
             // SAFETY: the worker thread is the sole consumer, and it
             // is exiting through this guard.
             while let Some(sub) = unsafe { self.shared.queue.pop() } {
+                self.shared.queued.fetch_sub(1, Ordering::Relaxed);
                 unsafe { reply(sub, Err(anyhow!("batcher shutting down"))) };
             }
             if self.shared.inflight.load(Ordering::SeqCst) == 0 {
@@ -392,7 +408,10 @@ fn batcher_main(
             }
             // SAFETY: single consumer (this thread).
             match unsafe { shared.queue.pop() } {
-                Some(sub) => break sub,
+                Some(sub) => {
+                    shared.queued.fetch_sub(1, Ordering::Relaxed);
+                    break sub;
+                }
                 None => thread::park(),
             }
         };
@@ -403,7 +422,10 @@ fn batcher_main(
         while batch.len() < max_batch {
             // SAFETY: single consumer (this thread).
             match unsafe { shared.queue.pop() } {
-                Some(sub) => batch.push(sub),
+                Some(sub) => {
+                    shared.queued.fetch_sub(1, Ordering::Relaxed);
+                    batch.push(sub);
+                }
                 None => {
                     let now = Instant::now();
                     if now >= deadline || shared.shutdown.load(Ordering::SeqCst) {

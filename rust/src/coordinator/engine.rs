@@ -116,6 +116,10 @@ pub struct Engine {
     /// HTTP request-body cap (config `server.maxBodyBytes`), consumed
     /// by the HTTP front end when it binds.
     pub max_body_bytes: usize,
+    /// The full `server:` config block, kept on the engine so the
+    /// ingress plane can wire limits, read deadlines and
+    /// tenant-priority admission without re-reading config files.
+    pub server_cfg: crate::config::ServerConfig,
     pub live_latency: LatencyHistogram,
     /// Whole-batch wall time per `score_batch` call — kept separate
     /// from `live_latency` so batch totals never pollute the
@@ -190,6 +194,7 @@ impl Engine {
             max_batch_delay,
             max_batch_events: config.server.max_batch_events,
             max_body_bytes: config.server.max_body_bytes,
+            server_cfg: config.server.clone(),
             live_latency: LatencyHistogram::new(),
             batch_latency: LatencyHistogram::new(),
             counters,
@@ -219,6 +224,15 @@ impl Engine {
             return snap;
         }
         self.republish()
+    }
+
+    /// Ingress-admission pressure signal: the deepest dynamic-batcher
+    /// queue across deployed predictors right now. Wait-free (one
+    /// snapshot load plus relaxed gauge reads) so the ingress plane can
+    /// probe it on every `/v1/score/batch` request without touching
+    /// the data path.
+    pub fn ingress_pressure(&self) -> usize {
+        self.load_snapshot().max_batcher_depth()
     }
 
     /// Rebuild the data-plane snapshot from the current routing config

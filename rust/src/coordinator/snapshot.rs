@@ -139,6 +139,17 @@ impl EngineSnapshot {
     pub fn predictor_count(&self) -> usize {
         self.entries.len()
     }
+
+    /// Deepest dynamic-batcher queue across deployed predictors right
+    /// now — the pressure signal the ingress admission controller
+    /// sheds on (wait-free gauge loads, no locks).
+    pub fn max_batcher_depth(&self) -> usize {
+        self.entries
+            .values()
+            .map(|e| e.batcher.depth())
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 /// Verification-plane introspection (`testkit`): the snapshot's entry

@@ -1,21 +1,50 @@
-//! Minimal HTTP/1.1 server (from scratch; no hyper/tokio offline).
+//! Event-driven HTTP/1.1 ingress plane (from scratch; no hyper/tokio
+//! offline — see docs/ARCHITECTURE.md "Ingress plane").
 //!
-//! Enough protocol for the serving front end: request-line + headers +
-//! Content-Length bodies, keep-alive, JSON in/out. Connections are
-//! dispatched to the worker thread pool; the scoring handler calls
-//! straight into the engine (Python nowhere in sight), which serves
-//! each request off one wait-free `EngineSnapshot` load — workers
-//! never block on routing or batcher state (they share only the
-//! snapshot cell's reader counter, a few uncontended-in-practice
-//! atomic ops), so adding workers scales until PJRT saturates
-//! (EXPERIMENTS.md "Contention").
+//! One reactor thread drives a [`reactor::Poller`] (raw epoll) over
+//! the listener plus every connection; per-connection state machines
+//! parse request heads and bodies incrementally from nonblocking
+//! sockets, and only complete requests are dispatched to the bounded
+//! worker pool — a slow or malicious client can no longer pin a
+//! worker (the seed's thread-per-connection loop parked one worker on
+//! every open socket). Protection raised here, before any JSON or
+//! engine work:
+//!
+//! * **413** from the Content-Length header alone (body never read);
+//! * **431** when the header section exceeds `maxHeaderBytes`;
+//! * **408** when a started request head/body misses its read
+//!   deadline (slowloris) — idle keep-alive connections are exempt;
+//! * **400** for malformed request lines, non-UTF-8 buffered bodies
+//!   and conflicting duplicate Content-Length headers;
+//! * accept-time shedding when `maxConnections` is reached;
+//! * pipelined bytes beyond a cap pause reading (level-triggered
+//!   interest drop) until the in-flight response drains.
+//!
+//! `POST /v1/score/batch` can additionally stream: when a
+//! [`StreamRoute`] is installed, its [`BatchSink`] receives events
+//! from the incremental `streamjson` parser as body slices arrive —
+//! the request is never materialized — and scoring runs on a pool
+//! worker at body end. Everything else (and the streaming fallback)
+//! uses the buffered path, byte-compatible with the seed server.
+//!
+//! Every rejection increments an [`IngressCounters`] counter; when
+//! the server is built by `spawn_server` these resolve into the
+//! engine's counter registry and surface in `GET /metrics`.
 
+use super::reactor::{PollEvent, Poller, EV_ERR, EV_HUP, EV_RDHUP, EV_READ, EV_WRITE};
+use super::streamjson::{BatchBodyParser, BatchShape, StreamItem};
+use crate::metrics::counters::{CounterHandle, Counters};
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Read, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -31,6 +60,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: String,
+    /// Emitted as a `Retry-After` header (seconds) when set — the
+    /// admission controller's shed hint on 429s.
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
@@ -39,6 +71,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: body.into(),
+            retry_after: None,
         }
     }
 
@@ -47,7 +80,14 @@ impl Response {
             status,
             content_type: "text/plain",
             body: body.into(),
+            retry_after: None,
         }
+    }
+
+    /// Attach a `Retry-After: secs` header.
+    pub fn with_retry_after(mut self, secs: u64) -> Response {
+        self.retry_after = Some(secs);
+        self
     }
 
     fn status_line(&self) -> &'static str {
@@ -57,8 +97,11 @@ impl Response {
             400 => "400 Bad Request",
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
+            408 => "408 Request Timeout",
             413 => "413 Payload Too Large",
             422 => "422 Unprocessable Entity",
+            429 => "429 Too Many Requests",
+            431 => "431 Request Header Fields Too Large",
             503 => "503 Service Unavailable",
             _ => "500 Internal Server Error",
         }
@@ -69,26 +112,111 @@ impl Response {
 /// explicit limit (`server.maxBodyBytes` default: 1 MiB).
 pub const DEFAULT_MAX_BODY_BYTES: usize = 1 << 20;
 
+/// Pipelined-input cap: while a request is in flight, at most this
+/// many unparsed bytes are buffered before the connection's read
+/// interest is dropped (connection-level backpressure).
+const PIPELINE_CAP: usize = 64 * 1024;
+
 pub type Handler = dyn Fn(&Request) -> Response + Send + Sync + 'static;
 
-/// The HTTP server: bind, accept, dispatch to the pool.
+/// Ingress limits and deadlines (`server:` config block).
+#[derive(Debug, Clone)]
+pub struct IngressConfig {
+    /// `server.maxBodyBytes`: 413 from the Content-Length alone.
+    pub max_body: usize,
+    /// `server.maxHeaderBytes`: 431 when the head section exceeds it.
+    pub max_header: usize,
+    /// `server.maxConnections`: accept-time shed above this.
+    pub max_connections: usize,
+    /// `server.headerReadTimeoutMs`: first request byte -> head end.
+    pub header_deadline: Duration,
+    /// `server.bodyReadTimeoutMs`: head end -> body end.
+    pub body_deadline: Duration,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        IngressConfig {
+            max_body: DEFAULT_MAX_BODY_BYTES,
+            max_header: 16 * 1024,
+            max_connections: 8192,
+            header_deadline: Duration::from_secs(5),
+            body_deadline: Duration::from_secs(15),
+        }
+    }
+}
+
+/// Wait-free ingress accounting (pre-resolved [`CounterHandle`]s, the
+/// `HotCounters` pattern). Resolved against the engine's registry by
+/// `spawn_server`, so every counter shows up in `GET /metrics`.
+pub struct IngressCounters {
+    pub accepted: CounterHandle,
+    pub closed: CounterHandle,
+    pub requests: CounterHandle,
+    pub bad_requests: CounterHandle,
+    pub too_large: CounterHandle,
+    pub header_overflow: CounterHandle,
+    pub timeouts: CounterHandle,
+    pub shed: CounterHandle,
+    pub truncated: CounterHandle,
+    pub panics: CounterHandle,
+    pub over_capacity: CounterHandle,
+    pub streamed_events: CounterHandle,
+}
+
+impl IngressCounters {
+    pub fn resolve(c: &Counters) -> IngressCounters {
+        IngressCounters {
+            accepted: c.handle("ingress_accepted"),
+            closed: c.handle("ingress_closed"),
+            requests: c.handle("ingress_requests"),
+            bad_requests: c.handle("ingress_bad_requests"),
+            too_large: c.handle("ingress_too_large"),
+            header_overflow: c.handle("ingress_header_overflow"),
+            timeouts: c.handle("ingress_timeouts"),
+            shed: c.handle("ingress_shed"),
+            truncated: c.handle("ingress_truncated"),
+            panics: c.handle("ingress_panics"),
+            over_capacity: c.handle("ingress_over_capacity"),
+            streamed_events: c.handle("ingress_streamed_events"),
+        }
+    }
+}
+
+/// Per-request sink for the streaming batch route. Events arrive on
+/// the **reactor** thread as they parse; [`BatchSink::finish`] runs
+/// on a pool worker (that's where scoring happens).
+pub trait BatchSink: Send {
+    /// One parsed event. Return `Some(response)` to abort the stream
+    /// early (admission shed): the rest of the body is discarded and
+    /// the response sent once it drains.
+    fn event(&mut self, value: Json) -> Option<Response>;
+    /// A later top-level `"events"` key superseded this collection.
+    fn restart(&mut self);
+    /// Body complete and syntactically valid: produce the response.
+    fn finish(self: Box<Self>, shape: BatchShape) -> Response;
+}
+
+/// Installed by the API layer to claim requests for streaming; return
+/// `None` to fall back to the buffered handler path.
+pub trait StreamRoute: Send + Sync {
+    fn begin(&self, method: &str, path: &str) -> Option<Box<dyn BatchSink>>;
+}
+
+/// The HTTP server: bind, then [`HttpServer::serve`] runs the
+/// reactor on the calling thread.
 pub struct HttpServer {
     listener: TcpListener,
     pool: Arc<ThreadPool>,
     handler: Arc<Handler>,
     stop: Arc<AtomicBool>,
-    /// Request-body cap (`server.maxBodyBytes`): requests declaring a
-    /// larger Content-Length are refused with 413 before the body is
-    /// read, so one client cannot balloon worker memory.
-    max_body: usize,
+    config: IngressConfig,
+    ingress: Arc<IngressCounters>,
+    stream_route: Option<Arc<dyn StreamRoute>>,
 }
 
 impl HttpServer {
-    pub fn bind(
-        addr: &str,
-        workers: usize,
-        handler: Arc<Handler>,
-    ) -> Result<HttpServer> {
+    pub fn bind(addr: &str, workers: usize, handler: Arc<Handler>) -> Result<HttpServer> {
         Self::bind_with_limits(addr, workers, handler, DEFAULT_MAX_BODY_BYTES)
     }
 
@@ -99,13 +227,36 @@ impl HttpServer {
         handler: Arc<Handler>,
         max_body: usize,
     ) -> Result<HttpServer> {
+        let config = IngressConfig {
+            max_body: max_body.max(1),
+            ..IngressConfig::default()
+        };
+        // Standalone servers (tests, tools) get private counters; the
+        // handles keep the atomics alive on their own.
+        let ingress = IngressCounters::resolve(&Counters::new());
+        Self::bind_with_config(addr, workers, handler, config, ingress, None)
+    }
+
+    /// Full-control constructor: explicit limits, shared counters and
+    /// an optional streaming route.
+    pub fn bind_with_config(
+        addr: &str,
+        workers: usize,
+        handler: Arc<Handler>,
+        config: IngressConfig,
+        ingress: IngressCounters,
+        stream_route: Option<Arc<dyn StreamRoute>>,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
         Ok(HttpServer {
             listener,
             pool: Arc::new(ThreadPool::new(workers)),
             handler,
             stop: Arc::new(AtomicBool::new(false)),
-            max_body: max_body.max(1),
+            config,
+            ingress: Arc::new(ingress),
+            stream_route,
         })
     }
 
@@ -116,82 +267,927 @@ impl HttpServer {
             .unwrap_or_default()
     }
 
-    /// A flag the accept loop checks; set true then poke the socket to
+    /// A flag the reactor checks; set true then poke the socket to
     /// stop `serve`.
     pub fn stop_flag(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.stop)
     }
 
-    /// Accept loop (blocks the calling thread). Each connection is
-    /// handled on the pool with keep-alive.
+    /// Ingress accounting (tests and the storm driver read these).
+    pub fn counters(&self) -> Arc<IngressCounters> {
+        Arc::clone(&self.ingress)
+    }
+
+    /// Run the reactor event loop on the calling thread until the
+    /// stop flag is set (and the listener is poked).
     pub fn serve(&self) -> Result<()> {
-        for stream in self.listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
+        Reactor::new(self)?.run()
+    }
+}
+
+// -----------------------------------------------------------------------
+// Reactor internals
+// -----------------------------------------------------------------------
+
+/// Token assignments: listener, worker wakeup pipe, then connections
+/// at `slot + CONN_TOKEN_BASE`.
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKE: usize = 1;
+const CONN_TOKEN_BASE: usize = 2;
+
+/// A finished worker job, queued back to the reactor.
+struct Completion {
+    slot: usize,
+    gen: u64,
+    resp: Response,
+    panicked: bool,
+}
+
+type CompletionQueue = Arc<Mutex<VecDeque<Completion>>>;
+
+/// The parsed request head, pending its body.
+struct Head {
+    method: String,
+    path: String,
+    content_length: usize,
+    connection_close: bool,
+}
+
+enum ConnState {
+    /// Accumulating head bytes in `buf`.
+    Headers,
+    /// Head parsed; collecting `need` more body bytes into `body`.
+    BufferedBody { need: usize },
+    /// Streaming route: feeding body slices straight to the parser.
+    Streaming {
+        parser: BatchBodyParser,
+        sink: Option<Box<dyn BatchSink>>,
+        remaining: usize,
+        /// Early failure (parse error / shed): the rest of the body
+        /// is discarded and this answers once it drains.
+        failed: Option<Response>,
+    },
+    /// A worker owns the request; response arrives as a Completion.
+    Dispatched,
+    /// Serialized response draining to the socket.
+    Writing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    gen: u64,
+    state: ConnState,
+    /// Unparsed input (head bytes, pipelined requests).
+    buf: Vec<u8>,
+    /// Buffered-path body accumulator.
+    body: Vec<u8>,
+    head: Option<Head>,
+    /// Pending output and write cursor.
+    out: Vec<u8>,
+    out_pos: usize,
+    close_after: bool,
+    /// Read deadline for the *started* request (None while idle).
+    deadline: Option<Instant>,
+    /// Current poller interest mask.
+    interest: u32,
+    peer_closed: bool,
+}
+
+impl Conn {
+    fn reset_for_next_request(&mut self) {
+        self.state = ConnState::Headers;
+        self.head = None;
+        self.body.clear();
+        self.out.clear();
+        self.out_pos = 0;
+        self.deadline = None;
+    }
+}
+
+struct Reactor<'a> {
+    server: &'a HttpServer,
+    poller: Poller,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    live: usize,
+    next_gen: u64,
+    completions: CompletionQueue,
+    wake_rx: UnixStream,
+    wake_tx: Arc<UnixStream>,
+}
+
+impl<'a> Reactor<'a> {
+    fn new(server: &'a HttpServer) -> Result<Reactor<'a>> {
+        let mut poller = Poller::new().context("poller")?;
+        let (wake_tx, wake_rx) = UnixStream::pair().context("wake pipe")?;
+        wake_tx.set_nonblocking(true).ok();
+        wake_rx.set_nonblocking(true).ok();
+        poller
+            .register(server.listener.as_raw_fd(), TOKEN_LISTENER, EV_READ)
+            .context("register listener")?;
+        poller
+            .register(wake_rx.as_raw_fd(), TOKEN_WAKE, EV_READ)
+            .context("register wake pipe")?;
+        Ok(Reactor {
+            server,
+            poller,
+            conns: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            next_gen: 0,
+            completions: Arc::new(Mutex::new(VecDeque::new())),
+            wake_rx,
+            wake_tx: Arc::new(wake_tx),
+        })
+    }
+
+    fn run(&mut self) -> Result<()> {
+        let mut events: Vec<PollEvent> = Vec::new();
+        let mut scratch = vec![0u8; 64 * 1024];
+        loop {
+            if self.server.stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            // Cap the wait so request deadlines are swept promptly.
+            let timeout = self
+                .next_deadline()
+                .map(|d| {
+                    d.saturating_duration_since(Instant::now())
+                        .as_millis()
+                        .min(100) as i32
+                })
+                .unwrap_or(100);
+            self.poller.wait(&mut events, timeout.max(1))?;
+            let batch: Vec<PollEvent> = events.clone();
+            for ev in batch {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.drain_wake(),
+                    t => {
+                        let slot = t - CONN_TOKEN_BASE;
+                        if ev.events & (EV_READ | EV_RDHUP | EV_ERR | EV_HUP) != 0 {
+                            self.on_readable(slot, &mut scratch);
+                        }
+                        if ev.events & EV_WRITE != 0 {
+                            self.on_writable(slot);
+                        }
+                    }
+                }
+            }
+            self.drain_completions();
+            self.sweep_deadlines();
+        }
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        self.conns
+            .iter()
+            .flatten()
+            .filter_map(|c| c.deadline)
+            .min()
+    }
+
+    // ----------------------------------------------------------------
+    // Accept path
+    // ----------------------------------------------------------------
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.server.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.live >= self.server.config.max_connections {
+                        self.server.ingress.over_capacity.inc();
+                        drop(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    self.server.ingress.accepted.inc();
+                    self.next_gen += 1;
+                    let conn = Conn {
+                        stream,
+                        gen: self.next_gen,
+                        state: ConnState::Headers,
+                        buf: Vec::new(),
+                        body: Vec::new(),
+                        head: None,
+                        out: Vec::new(),
+                        out_pos: 0,
+                        close_after: false,
+                        deadline: None,
+                        interest: EV_READ | EV_RDHUP,
+                        peer_closed: false,
+                    };
+                    let slot = match self.free.pop() {
+                        Some(s) => {
+                            self.conns[s] = Some(conn);
+                            s
+                        }
+                        None => {
+                            self.conns.push(Some(conn));
+                            self.conns.len() - 1
+                        }
+                    };
+                    let fd = self.conns[slot].as_ref().unwrap().stream.as_raw_fd();
+                    if self
+                        .poller
+                        .register(fd, slot + CONN_TOKEN_BASE, EV_READ | EV_RDHUP)
+                        .is_err()
+                    {
+                        self.close_conn(slot);
+                        continue;
+                    }
+                    self.live += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut sink = [0u8; 256];
+        loop {
+            match (&self.wake_rx).read(&mut sink) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // Connection lifecycle
+    // ----------------------------------------------------------------
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            self.poller.deregister(conn.stream.as_raw_fd()).ok();
+            self.server.ingress.closed.inc();
+            self.live = self.live.saturating_sub(1);
+            self.free.push(slot);
+        }
+    }
+
+    /// Recompute and apply the poller interest for a slot.
+    fn update_interest(&mut self, slot: usize) {
+        let Some(conn) = self.conns[slot].as_mut() else { return };
+        let reading = !conn.peer_closed
+            && !(matches!(conn.state, ConnState::Dispatched | ConnState::Writing)
+                && conn.buf.len() >= PIPELINE_CAP);
+        let writing = matches!(conn.state, ConnState::Writing);
+        let mut want = 0;
+        if reading {
+            want |= EV_READ | EV_RDHUP;
+        }
+        if writing {
+            want |= EV_WRITE;
+        }
+        if want != conn.interest {
+            conn.interest = want;
+            let fd = conn.stream.as_raw_fd();
+            self.poller.modify(fd, slot + CONN_TOKEN_BASE, want).ok();
+        }
+    }
+
+    fn on_readable(&mut self, slot: usize, scratch: &mut [u8]) {
+        loop {
+            let Some(conn) = self.conns[slot].as_mut() else { return };
+            // Backpressure: while a request is in flight, stop
+            // pulling pipelined bytes past the cap.
+            if matches!(conn.state, ConnState::Dispatched | ConnState::Writing)
+                && conn.buf.len() >= PIPELINE_CAP
+            {
                 break;
             }
-            let Ok(stream) = stream else { continue };
-            let handler = Arc::clone(&self.handler);
-            let max_body = self.max_body;
-            self.pool.execute(move || {
-                let _ = handle_connection(stream, handler, max_body);
-            });
-        }
-        Ok(())
-    }
-}
-
-fn handle_connection(stream: TcpStream, handler: Arc<Handler>, max_body: usize) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    loop {
-        let req = match read_request_limited(&mut reader, max_body) {
-            Ok(ReadOutcome::Request(r)) => r,
-            Ok(ReadOutcome::Closed) => return Ok(()), // clean close
-            Ok(ReadOutcome::TooLarge) => {
-                // Rejected from the Content-Length header alone — the
-                // body was never read, so the connection is desynced:
-                // answer 413 and close.
-                let resp = Response::json(413, r#"{"error":"request body too large"}"#);
-                let _ = write_response(&mut writer, &resp, false);
-                return Ok(());
+            match conn.stream.read(scratch) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    let started = conn.buf.is_empty()
+                        && matches!(conn.state, ConnState::Headers)
+                        && conn.deadline.is_none();
+                    if started {
+                        // The head deadline starts at the request's
+                        // first byte — idle keep-alive is exempt.
+                        conn.deadline = Some(Instant::now() + self.server.config.header_deadline);
+                    }
+                    if !self.ingest(slot, &scratch[..n]) {
+                        return; // connection closed
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.abort_conn(slot);
+                    return;
+                }
             }
+        }
+        self.after_read(slot);
+    }
+
+    /// Post-read bookkeeping: peer EOF handling + interest refresh.
+    fn after_read(&mut self, slot: usize) {
+        let Some(conn) = self.conns[slot].as_mut() else { return };
+        if conn.peer_closed {
+            match conn.state {
+                ConnState::Headers if conn.buf.is_empty() => {
+                    // Clean close between requests.
+                    self.close_conn(slot);
+                    return;
+                }
+                ConnState::Headers
+                | ConnState::BufferedBody { .. }
+                | ConnState::Streaming { .. } => {
+                    // Mid-request disconnect: nothing to answer into.
+                    self.server.ingress.truncated.inc();
+                    self.close_conn(slot);
+                    return;
+                }
+                // Dispatched/Writing: half-close — finish writing the
+                // in-flight response, then close.
+                _ => {
+                    conn.close_after = true;
+                }
+            }
+        }
+        self.update_interest(slot);
+    }
+
+    /// Hard-close without a response (I/O error paths).
+    fn abort_conn(&mut self, slot: usize) {
+        let mid_request = self.conns[slot]
+            .as_ref()
+            .map(|c| !matches!(c.state, ConnState::Headers) || !c.buf.is_empty())
+            .unwrap_or(false);
+        if mid_request {
+            self.server.ingress.truncated.inc();
+        }
+        self.close_conn(slot);
+    }
+
+    /// Feed freshly read bytes through the connection state machine.
+    /// Returns false when the connection was closed.
+    fn ingest(&mut self, slot: usize, mut bytes: &[u8]) -> bool {
+        while !bytes.is_empty() || self.can_advance(slot) {
+            let Some(conn) = self.conns[slot].as_mut() else { return false };
+            match &mut conn.state {
+                ConnState::Headers => {
+                    conn.buf.extend_from_slice(bytes);
+                    bytes = &[];
+                    match self.try_parse_head(slot) {
+                        HeadOutcome::NeedMore => return true,
+                        HeadOutcome::Closed => return false,
+                        HeadOutcome::Parsed => continue,
+                    }
+                }
+                ConnState::BufferedBody { need } => {
+                    let take = (*need).min(bytes.len() + conn.buf.len());
+                    // Drain buf first (pipelined bytes), then `bytes`.
+                    let from_buf = take.min(conn.buf.len());
+                    conn.body.extend_from_slice(&conn.buf[..from_buf]);
+                    conn.buf.drain(..from_buf);
+                    let from_new = take - from_buf;
+                    conn.body.extend_from_slice(&bytes[..from_new]);
+                    bytes = &bytes[from_new..];
+                    *need -= take;
+                    if *need > 0 {
+                        return true;
+                    }
+                    // Anything after the body is pipelined input.
+                    conn.buf.extend_from_slice(bytes);
+                    bytes = &[];
+                    if !self.dispatch_buffered(slot) {
+                        return false;
+                    }
+                }
+                ConnState::Streaming { remaining, .. } => {
+                    // Route up to `remaining` bytes into the parser;
+                    // the rest is pipelined input.
+                    let mut slice = Vec::new();
+                    let from_buf = (*remaining).min(conn.buf.len());
+                    slice.extend_from_slice(&conn.buf[..from_buf]);
+                    conn.buf.drain(..from_buf);
+                    let from_new = (*remaining - from_buf).min(bytes.len());
+                    slice.extend_from_slice(&bytes[..from_new]);
+                    let leftover = &bytes[from_new..];
+                    conn.buf.extend_from_slice(leftover);
+                    bytes = &[];
+                    *remaining -= slice.len();
+                    let done = *remaining == 0;
+                    self.stream_feed(slot, &slice);
+                    if done && !self.stream_close(slot) {
+                        return false;
+                    }
+                    if !done {
+                        return true;
+                    }
+                }
+                ConnState::Dispatched | ConnState::Writing => {
+                    // Park pipelined bytes (bounded by PIPELINE_CAP
+                    // via the read loop) until the response drains.
+                    conn.buf.extend_from_slice(bytes);
+                    return true;
+                }
+            }
+        }
+        true
+    }
+
+    /// Whether `ingest` should loop again with no new bytes (a state
+    /// that can make progress from `buf` alone).
+    fn can_advance(&self, slot: usize) -> bool {
+        match self.conns[slot].as_ref() {
+            Some(c) => match c.state {
+                ConnState::Headers => !c.buf.is_empty(),
+                ConnState::BufferedBody { need } => need == 0 || !c.buf.is_empty(),
+                ConnState::Streaming { remaining, .. } => remaining == 0 || !c.buf.is_empty(),
+                _ => false,
+            },
+            None => false,
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // Head parsing
+    // ----------------------------------------------------------------
+
+    fn try_parse_head(&mut self, slot: usize) -> HeadOutcome {
+        let conn = self.conns[slot].as_mut().unwrap();
+        let Some(end) = find_header_end(&conn.buf) else {
+            if conn.buf.len() > self.server.config.max_header {
+                self.server.ingress.header_overflow.inc();
+                self.respond(
+                    slot,
+                    Response::json(431, r#"{"error":"header section too large"}"#),
+                    true,
+                );
+                return HeadOutcome::Parsed; // now Writing (then close)
+            }
+            return HeadOutcome::NeedMore;
+        };
+        if end > self.server.config.max_header {
+            self.server.ingress.header_overflow.inc();
+            self.respond(
+                slot,
+                Response::json(431, r#"{"error":"header section too large"}"#),
+                true,
+            );
+            return HeadOutcome::Parsed;
+        }
+        let head_bytes: Vec<u8> = conn.buf.drain(..end).collect();
+        let head = match parse_head(&head_bytes) {
+            Ok(h) => h,
             Err(_) => {
-                let resp = Response::text(400, "bad request");
-                let _ = write_response(&mut writer, &resp, false);
-                return Ok(());
+                self.server.ingress.bad_requests.inc();
+                self.respond(slot, Response::text(400, "bad request"), true);
+                return HeadOutcome::Parsed;
             }
         };
-        // A panicking handler must not silently drop a keep-alive
-        // connection (the client would see an unexplained EOF) or kill
-        // the pool worker: catch the unwind, answer with a 500 JSON
-        // body, and close this connection — handler state after a
-        // panic is unknown, so keep-alive ends here.
-        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)));
-        match resp {
-            Ok(resp) => write_response(&mut writer, &resp, true)?,
-            Err(_) => {
-                let resp = Response::json(500, r#"{"error":"internal server error"}"#);
-                let _ = write_response(&mut writer, &resp, false);
-                return Ok(());
+        if head.content_length > self.server.config.max_body {
+            // Decided from the header alone — the body was never
+            // read, so the connection is desynced: answer and close.
+            self.server.ingress.too_large.inc();
+            self.respond(
+                slot,
+                Response::json(413, r#"{"error":"request body too large"}"#),
+                true,
+            );
+            return HeadOutcome::Parsed;
+        }
+        let conn = self.conns[slot].as_mut().unwrap();
+        conn.close_after = conn.close_after || head.connection_close;
+        conn.deadline = Some(Instant::now() + self.server.config.body_deadline);
+        // Streaming route?
+        if let Some(route) = &self.server.stream_route {
+            if let Some(sink) = route.begin(&head.method, &head.path) {
+                let conn = self.conns[slot].as_mut().unwrap();
+                conn.state = ConnState::Streaming {
+                    parser: BatchBodyParser::new(),
+                    sink: Some(sink),
+                    remaining: head.content_length,
+                    failed: None,
+                };
+                conn.head = Some(head);
+                return HeadOutcome::Parsed;
             }
+        }
+        let conn = self.conns[slot].as_mut().unwrap();
+        conn.body.clear();
+        conn.body.reserve(head.content_length.min(self.server.config.max_body));
+        conn.state = ConnState::BufferedBody {
+            need: head.content_length,
+        };
+        conn.head = Some(head);
+        HeadOutcome::Parsed
+    }
+
+    // ----------------------------------------------------------------
+    // Buffered dispatch
+    // ----------------------------------------------------------------
+
+    fn dispatch_buffered(&mut self, slot: usize) -> bool {
+        let conn = self.conns[slot].as_mut().unwrap();
+        let head = conn.head.take().expect("head parsed before body");
+        let body_bytes = std::mem::take(&mut conn.body);
+        let body = match String::from_utf8(body_bytes) {
+            Ok(b) => b,
+            Err(_) => {
+                self.server.ingress.bad_requests.inc();
+                self.respond(slot, Response::text(400, "bad request"), true);
+                return true;
+            }
+        };
+        let req = Request {
+            method: head.method,
+            path: head.path,
+            body,
+        };
+        self.server.ingress.requests.inc();
+        conn.state = ConnState::Dispatched;
+        conn.deadline = None;
+        let gen = conn.gen;
+        let handler = Arc::clone(&self.server.handler);
+        let completions = Arc::clone(&self.completions);
+        let wake = Arc::clone(&self.wake_tx);
+        self.server.pool.execute(move || {
+            // A panicking handler answers 500 and closes — it must
+            // not kill the worker or strand the connection.
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)));
+            let (resp, panicked) = match out {
+                Ok(r) => (r, false),
+                Err(_) => (
+                    Response::json(500, r#"{"error":"internal server error"}"#),
+                    true,
+                ),
+            };
+            completions.lock().unwrap().push_back(Completion {
+                slot,
+                gen,
+                resp,
+                panicked,
+            });
+            let _ = (&*wake).write(&[1u8]);
+        });
+        self.update_interest(slot);
+        true
+    }
+
+    // ----------------------------------------------------------------
+    // Streaming path
+    // ----------------------------------------------------------------
+
+    /// Feed a body slice to the connection's incremental parser.
+    fn stream_feed(&mut self, slot: usize, slice: &[u8]) {
+        let Some(conn) = self.conns[slot].as_mut() else { return };
+        let ConnState::Streaming { parser, sink, failed, .. } = &mut conn.state else {
+            return;
+        };
+        if failed.is_some() {
+            return; // discarding the rest of the body
+        }
+        let Some(sink_ref) = sink.as_mut() else { return };
+        let mut abort: Option<Response> = None;
+        let mut events = 0u64;
+        let fed = {
+            let mut cb = |item: StreamItem| match item {
+                StreamItem::Event(v) => {
+                    if abort.is_none() {
+                        events += 1;
+                        abort = sink_ref.event(v);
+                    }
+                }
+                StreamItem::EventsRestart => sink_ref.restart(),
+            };
+            parser.feed(slice, &mut cb)
+        };
+        self.server.ingress.streamed_events.add(events);
+        if let Err(e) = fed {
+            // Same error surface as the buffered path: 422 with the
+            // JsonError's Display (message + byte offset).
+            let body = Json::obj(vec![("error", Json::str(e.to_string()))]).to_string();
+            let conn = self.conns[slot].as_mut().unwrap();
+            if let ConnState::Streaming { failed, .. } = &mut conn.state {
+                *failed = Some(Response::json(422, body));
+            }
+        } else if let Some(resp) = abort {
+            if resp.status == 429 {
+                self.server.ingress.shed.inc();
+            }
+            let conn = self.conns[slot].as_mut().unwrap();
+            if let ConnState::Streaming { failed, .. } = &mut conn.state {
+                *failed = Some(resp);
+            }
+        }
+    }
+
+    /// Content-Length consumed: close out the streamed request.
+    /// Returns false when the connection was closed.
+    fn stream_close(&mut self, slot: usize) -> bool {
+        let Some(conn) = self.conns[slot].as_mut() else { return false };
+        let ConnState::Streaming { parser, sink, failed, .. } = &mut conn.state else {
+            return true;
+        };
+        // Early failure (shed or parse error): the body has drained,
+        // the connection is synced — answer and keep it alive.
+        if let Some(resp) = failed.take() {
+            self.respond(slot, resp, false);
+            return true;
+        }
+        let mut sink_box = sink.take().expect("sink present until finish");
+        let mut abort: Option<Response> = None;
+        let mut events = 0u64;
+        let finished = {
+            let mut cb = |item: StreamItem| match item {
+                StreamItem::Event(v) => {
+                    if abort.is_none() {
+                        events += 1;
+                        abort = sink_box.event(v);
+                    }
+                }
+                StreamItem::EventsRestart => sink_box.restart(),
+            };
+            parser.finish(&mut cb)
+        };
+        self.server.ingress.streamed_events.add(events);
+        let shape = match finished {
+            Ok(shape) => shape,
+            Err(e) => {
+                let body = Json::obj(vec![("error", Json::str(e.to_string()))]).to_string();
+                self.respond(slot, Response::json(422, body), false);
+                return true;
+            }
+        };
+        if let Some(resp) = abort {
+            if resp.status == 429 {
+                self.server.ingress.shed.inc();
+            }
+            self.respond(slot, resp, false);
+            return true;
+        }
+        // Scoring happens on a worker, like the buffered path.
+        let conn = self.conns[slot].as_mut().unwrap();
+        self.server.ingress.requests.inc();
+        conn.state = ConnState::Dispatched;
+        conn.head = None;
+        conn.deadline = None;
+        let gen = conn.gen;
+        let completions = Arc::clone(&self.completions);
+        let wake = Arc::clone(&self.wake_tx);
+        self.server.pool.execute(move || {
+            let out =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sink_box.finish(shape)));
+            let (resp, panicked) = match out {
+                Ok(r) => (r, false),
+                Err(_) => (
+                    Response::json(500, r#"{"error":"internal server error"}"#),
+                    true,
+                ),
+            };
+            completions.lock().unwrap().push_back(Completion {
+                slot,
+                gen,
+                resp,
+                panicked,
+            });
+            let _ = (&*wake).write(&[1u8]);
+        });
+        self.update_interest(slot);
+        true
+    }
+
+    // ----------------------------------------------------------------
+    // Responses and completions
+    // ----------------------------------------------------------------
+
+    fn drain_completions(&mut self) {
+        loop {
+            let c = self.completions.lock().unwrap().pop_front();
+            let Some(c) = c else { return };
+            let Some(conn) = self.conns[c.slot].as_mut() else { continue };
+            if conn.gen != c.gen {
+                continue; // slot was reused; stale completion
+            }
+            if c.panicked {
+                self.server.ingress.panics.inc();
+            }
+            self.respond(c.slot, c.resp, c.panicked);
+        }
+    }
+
+    /// Serialize `resp` and start draining it. `force_close` closes
+    /// the connection after the write even if the request asked for
+    /// keep-alive (panics, protocol desyncs).
+    fn respond(&mut self, slot: usize, resp: Response, force_close: bool) {
+        let Some(conn) = self.conns[slot].as_mut() else { return };
+        conn.close_after = conn.close_after || force_close;
+        let keep_alive = !conn.close_after;
+        conn.out = response_bytes(&resp, keep_alive);
+        conn.out_pos = 0;
+        conn.state = ConnState::Writing;
+        conn.deadline = None;
+        self.try_write(slot);
+    }
+
+    fn on_writable(&mut self, slot: usize) {
+        self.try_write(slot);
+    }
+
+    fn try_write(&mut self, slot: usize) {
+        loop {
+            let Some(conn) = self.conns[slot].as_mut() else { return };
+            if !matches!(conn.state, ConnState::Writing) {
+                self.update_interest(slot);
+                return;
+            }
+            if conn.out_pos >= conn.out.len() {
+                // Response fully drained.
+                if conn.close_after || conn.peer_closed {
+                    self.close_conn(slot);
+                    return;
+                }
+                conn.reset_for_next_request();
+                self.update_interest(slot);
+                // Pipelined request already buffered? Keep going.
+                if self
+                    .conns[slot]
+                    .as_ref()
+                    .map(|c| !c.buf.is_empty())
+                    .unwrap_or(false)
+                {
+                    if let Some(c) = self.conns[slot].as_mut() {
+                        c.deadline =
+                            Some(Instant::now() + self.server.config.header_deadline);
+                    }
+                    if !self.ingest(slot, &[]) {
+                        return;
+                    }
+                    continue;
+                }
+                return;
+            }
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => {
+                    self.abort_conn(slot);
+                    return;
+                }
+                Ok(n) => {
+                    conn.out_pos += n;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    self.update_interest(slot);
+                    return;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.abort_conn(slot);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Expire requests that missed their read deadline (slowloris):
+    /// 408 + close. Idle keep-alive connections carry no deadline.
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        let expired: Vec<usize> = self
+            .conns
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                c.as_ref()
+                    .and_then(|c| c.deadline)
+                    .filter(|d| *d <= now)
+                    .map(|_| i)
+            })
+            .collect();
+        for slot in expired {
+            self.server.ingress.timeouts.inc();
+            self.respond(
+                slot,
+                Response::json(408, r#"{"error":"request read timed out"}"#),
+                true,
+            );
         }
     }
 }
 
-/// Outcome of reading one request off a keep-alive connection.
+enum HeadOutcome {
+    NeedMore,
+    Parsed,
+    /// Connection closed during handling.
+    #[allow(dead_code)]
+    Closed,
+}
+
+/// Find the end of the header section: the byte index one past the
+/// first blank line. Accepts `\r\n\r\n` and bare `\n\n` (the seed's
+/// `read_line` + `trim_end` parser accepted both).
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            if buf[i + 1..].starts_with(b"\r\n") {
+                return Some(i + 3);
+            }
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some(i + 2);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse the request line + headers (same tolerances as the seed:
+/// whitespace-split request line, case-insensitive header names,
+/// `\r` optional). Hardened: duplicate Content-Length headers with
+/// conflicting values are rejected.
+fn parse_head(head: &[u8]) -> Result<Head> {
+    let text = std::str::from_utf8(head).context("head not UTF-8")?;
+    let mut lines = text.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().context("empty head")?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version}");
+    }
+    let mut content_length: Option<usize> = None;
+    let mut connection_close = false;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                let v: usize = value.trim().parse().context("bad content-length")?;
+                if let Some(prev) = content_length {
+                    if prev != v {
+                        bail!("conflicting content-length headers");
+                    }
+                }
+                content_length = Some(v);
+            } else if name.eq_ignore_ascii_case("connection") {
+                if value.trim().eq_ignore_ascii_case("close") {
+                    connection_close = true;
+                }
+            }
+        }
+    }
+    Ok(Head {
+        method,
+        path,
+        content_length: content_length.unwrap_or(0),
+        connection_close,
+    })
+}
+
+/// Serialize a response (the single wire format both the reactor and
+/// [`write_response`] emit — responses stay byte-identical across
+/// the streamed and buffered paths).
+fn response_bytes(resp: &Response, keep_alive: bool) -> Vec<u8> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let retry = resp
+        .retry_after
+        .map(|s| format!("Retry-After: {s}\r\n"))
+        .unwrap_or_default();
+    format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n{}\r\n{}",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len(),
+        conn,
+        retry,
+        resp.body
+    )
+    .into_bytes()
+}
+
+// -----------------------------------------------------------------------
+// Blocking helpers (tests, warm-up driver, simple clients)
+// -----------------------------------------------------------------------
+
+/// Outcome of reading one request off a blocking reader.
 enum ReadOutcome {
     Request(Request),
-    /// Clean EOF before a request line.
     Closed,
-    /// Declared Content-Length exceeds the cap; the body was never
-    /// buffered (the 413 is decided from the header alone).
     TooLarge,
 }
 
-/// Read one request; Ok(None) on EOF before a request line. Bodies
-/// over [`DEFAULT_MAX_BODY_BYTES`] error; servers configure the cap
-/// via [`HttpServer::bind_with_limits`].
+/// Read one request from a blocking reader; `Ok(None)` on EOF before
+/// a request line. Bodies over [`DEFAULT_MAX_BODY_BYTES`] error. (The
+/// server itself parses incrementally — this helper serves tests and
+/// tools that want the simple blocking form.)
 pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
     match read_request_limited(reader, DEFAULT_MAX_BODY_BYTES)? {
         ReadOutcome::Request(r) => Ok(Some(r)),
@@ -241,16 +1237,7 @@ fn read_request_limited<R: BufRead>(reader: &mut R, max_body: usize) -> Result<R
 }
 
 pub fn write_response<W: Write>(w: &mut W, resp: &Response, keep_alive: bool) -> Result<()> {
-    let conn = if keep_alive { "keep-alive" } else { "close" };
-    write!(
-        w,
-        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
-        resp.status_line(),
-        resp.content_type,
-        resp.body.len(),
-        conn,
-        resp.body
-    )?;
+    w.write_all(&response_bytes(resp, keep_alive))?;
     w.flush()?;
     Ok(())
 }
@@ -298,12 +1285,14 @@ pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<
 mod tests {
     use super::*;
     use std::thread;
+    use std::time::Duration;
 
     fn echo_handler() -> Arc<Handler> {
         Arc::new(|req: &Request| match req.path.as_str() {
             "/healthz" => Response::text(200, "ok"),
             "/echo" => Response::json(200, req.body.clone()),
             "/panic" => panic!("handler exploded"),
+            "/shed" => Response::json(429, r#"{"error":"shed"}"#).with_retry_after(7),
             _ => Response::text(404, "not found"),
         })
     }
@@ -322,6 +1311,66 @@ mod tests {
         thread::spawn(move || server.serve().unwrap());
         addr
     }
+
+    /// Spawn with explicit config + route; returns (addr, counters).
+    fn spawn_with(
+        config: IngressConfig,
+        route: Option<Arc<dyn StreamRoute>>,
+    ) -> (String, Arc<IngressCounters>) {
+        let server = HttpServer::bind_with_config(
+            "127.0.0.1:0",
+            2,
+            echo_handler(),
+            config,
+            IngressCounters::resolve(&Counters::new()),
+            route,
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let counters = server.counters();
+        thread::spawn(move || server.serve().unwrap());
+        (addr, counters)
+    }
+
+    /// Read one full response off a blocking reader: (status, raw
+    /// header lines, exact body).
+    fn read_raw_response<R: BufRead>(reader: &mut R) -> (u16, String, String) {
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line).unwrap();
+        let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let mut headers = String::new();
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            if h.trim_end().is_empty() {
+                break;
+            }
+            if let Some((name, value)) = h.trim_end().split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().unwrap();
+                }
+            }
+            headers.push_str(&h);
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body).unwrap();
+        (status, headers, String::from_utf8(body).unwrap())
+    }
+
+    fn wait_for(counter: &CounterHandle, at_least: u64) {
+        for _ in 0..200 {
+            if counter.get() >= at_least {
+                return;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        panic!("counter never reached {at_least} (got {})", counter.get());
+    }
+
+    // ------------------------------------------------------------------
+    // Seed behavior (must survive the reactor rewrite unchanged)
+    // ------------------------------------------------------------------
 
     #[test]
     fn health_endpoint() {
@@ -491,5 +1540,376 @@ mod tests {
             reader.read_exact(&mut body).unwrap();
             assert_eq!(&body, b"ok");
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Protocol-abuse corpus (new with the reactor)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn pipelined_requests_are_each_answered_in_order() {
+        let addr = spawn_echo();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        // Three requests in one write: the reactor must answer all
+        // three in order on the same connection.
+        let one = "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n";
+        let two = "POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        stream
+            .write_all(format!("{one}{two}{one}").as_bytes())
+            .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (s1, _, b1) = read_raw_response(&mut reader);
+        let (s2, _, b2) = read_raw_response(&mut reader);
+        let (s3, _, b3) = read_raw_response(&mut reader);
+        assert_eq!((s1, b1.as_str()), (200, "ok"));
+        assert_eq!((s2, b2.as_str()), (200, "hello"));
+        assert_eq!((s3, b3.as_str()), (200, "ok"));
+    }
+
+    #[test]
+    fn mid_body_disconnect_is_counted_and_server_survives() {
+        let (addr, counters) = spawn_with(IngressConfig::default(), None);
+        {
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            write!(
+                stream,
+                "POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: 100\r\n\r\npartial"
+            )
+            .unwrap();
+            stream.flush().unwrap();
+            // Drop mid-body.
+        }
+        wait_for(&counters.truncated, 1);
+        assert_eq!(counters.requests.get(), 0, "truncated request must not dispatch");
+        let (status, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok"));
+    }
+
+    #[test]
+    fn conflicting_duplicate_content_length_is_rejected() {
+        let (addr, counters) = spawn_with(IngressConfig::default(), None);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "POST /echo HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 6\r\n\r\nhello!"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, headers, _) = read_raw_response(&mut reader);
+        assert_eq!(status, 400);
+        assert!(headers.to_ascii_lowercase().contains("connection: close"));
+        wait_for(&counters.bad_requests, 1);
+        // Duplicate but *agreeing* Content-Length headers stay legal.
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "POST /echo HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, _, body) = read_raw_response(&mut reader);
+        assert_eq!((status, body.as_str()), (200, "hello"));
+    }
+
+    #[test]
+    fn oversized_header_section_gets_431() {
+        let config = IngressConfig {
+            max_header: 512,
+            ..IngressConfig::default()
+        };
+        let (addr, counters) = spawn_with(config, None);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let giant = "x".repeat(2048);
+        write!(
+            stream,
+            "GET /healthz HTTP/1.1\r\nX-Giant: {giant}\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, headers, body) = read_raw_response(&mut reader);
+        assert_eq!(status, 431);
+        assert!(body.contains("header section too large"), "{body}");
+        assert!(headers.to_ascii_lowercase().contains("connection: close"));
+        wait_for(&counters.header_overflow, 1);
+    }
+
+    #[test]
+    fn content_length_mismatch_desyncs_into_400() {
+        let addr = spawn_echo();
+        // Body longer than declared: the excess parses as the next
+        // "request", which is garbage -> 400 + close after the first
+        // (valid) response.
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "POST /echo HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloXYZ\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (s1, _, b1) = read_raw_response(&mut reader);
+        assert_eq!((s1, b1.as_str()), (200, "hello"));
+        let (s2, _, _) = read_raw_response(&mut reader);
+        assert_eq!(s2, 400);
+    }
+
+    #[test]
+    fn slowloris_header_drip_hits_read_deadline_with_408() {
+        let config = IngressConfig {
+            header_deadline: Duration::from_millis(200),
+            ..IngressConfig::default()
+        };
+        let (addr, counters) = spawn_with(config, None);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        // Start a request but never finish the head.
+        stream.write_all(b"GET /healthz HTT").unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, headers, _) = read_raw_response(&mut reader);
+        assert_eq!(status, 408);
+        assert!(headers.to_ascii_lowercase().contains("connection: close"));
+        wait_for(&counters.timeouts, 1);
+    }
+
+    #[test]
+    fn idle_keep_alive_is_exempt_from_read_deadlines() {
+        let config = IngressConfig {
+            header_deadline: Duration::from_millis(200),
+            body_deadline: Duration::from_millis(200),
+            ..IngressConfig::default()
+        };
+        let (addr, _) = spawn_with(config, None);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        // First request proves the connection is live.
+        write!(
+            stream,
+            "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (s1, _, _) = read_raw_response(&mut reader);
+        assert_eq!(s1, 200);
+        // Idle well past the deadline: the connection must survive,
+        // because the deadline only arms at a request's first byte.
+        thread::sleep(Duration::from_millis(600));
+        write!(
+            stream,
+            "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let (s2, _, b2) = read_raw_response(&mut reader);
+        assert_eq!((s2, b2.as_str()), (200, "ok"));
+    }
+
+    #[test]
+    fn connection_cap_sheds_excess_accepts() {
+        let config = IngressConfig {
+            max_connections: 2,
+            ..IngressConfig::default()
+        };
+        let (addr, counters) = spawn_with(config, None);
+        // Two established connections, proven live with a request.
+        let mut keep = Vec::new();
+        for _ in 0..2 {
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            write!(
+                stream,
+                "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+            )
+            .unwrap();
+            stream.flush().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let (s, _, _) = read_raw_response(&mut reader);
+            assert_eq!(s, 200);
+            keep.push(stream);
+        }
+        // The third is dropped at accept time.
+        let mut extra = TcpStream::connect(&addr).unwrap();
+        extra
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = [0u8; 1];
+        let got = extra.read(&mut buf);
+        assert!(
+            matches!(got, Ok(0)) || got.is_err(),
+            "over-capacity connection should be dropped, got {got:?}"
+        );
+        wait_for(&counters.over_capacity, 1);
+        drop(keep);
+    }
+
+    #[test]
+    fn retry_after_header_is_emitted_on_shed_responses() {
+        let addr = spawn_echo();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "GET /shed HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, headers, _) = read_raw_response(&mut reader);
+        assert_eq!(status, 429);
+        assert!(
+            headers.contains("Retry-After: 7"),
+            "missing Retry-After: {headers}"
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Streaming route plumbing
+    // ------------------------------------------------------------------
+
+    /// Test sink: counts events; sheds after `abort_after` if set.
+    struct CountingSink {
+        count: usize,
+        restarts: usize,
+        abort_after: Option<usize>,
+    }
+
+    impl BatchSink for CountingSink {
+        fn event(&mut self, _value: Json) -> Option<Response> {
+            self.count += 1;
+            match self.abort_after {
+                Some(n) if self.count >= n => Some(
+                    Response::json(429, r#"{"error":"shed"}"#).with_retry_after(1),
+                ),
+                _ => None,
+            }
+        }
+        fn restart(&mut self) {
+            self.count = 0;
+            self.restarts += 1;
+        }
+        fn finish(self: Box<Self>, shape: BatchShape) -> Response {
+            Response::json(
+                200,
+                format!(
+                    "{{\"count\":{},\"restarts\":{},\"seen\":{}}}",
+                    self.count, self.restarts, shape.events_seen
+                ),
+            )
+        }
+    }
+
+    struct CountingRoute {
+        abort_after: Option<usize>,
+    }
+
+    impl StreamRoute for CountingRoute {
+        fn begin(&self, method: &str, path: &str) -> Option<Box<dyn BatchSink>> {
+            if method == "POST" && path == "/v1/score/batch" {
+                Some(Box::new(CountingSink {
+                    count: 0,
+                    restarts: 0,
+                    abort_after: self.abort_after,
+                }))
+            } else {
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_route_sees_every_event_without_buffering() {
+        let route: Arc<dyn StreamRoute> = Arc::new(CountingRoute { abort_after: None });
+        let (addr, counters) = spawn_with(IngressConfig::default(), Some(route));
+        let body = r#"{"events": [{"a":1},{"a":2},{"a":3}], "tag": "x"}"#;
+        let (status, resp) = http_request(&addr, "POST", "/v1/score/batch", body).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(resp, r#"{"count":3,"restarts":0,"seen":true}"#);
+        assert_eq!(counters.streamed_events.get(), 3);
+        // Non-matching paths still take the buffered handler.
+        let (status, resp) = http_request(&addr, "POST", "/echo", "plain").unwrap();
+        assert_eq!((status, resp.as_str()), (200, "plain"));
+    }
+
+    #[test]
+    fn streamed_parse_error_is_422_and_keeps_the_connection() {
+        let route: Arc<dyn StreamRoute> = Arc::new(CountingRoute { abort_after: None });
+        let (addr, _) = spawn_with(IngressConfig::default(), Some(route));
+        let bad = r#"{"events": [{"a":1}, wat]}"#;
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "POST /v1/score/batch HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{bad}",
+            bad.len()
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, _, body) = read_raw_response(&mut reader);
+        assert_eq!(status, 422);
+        assert!(body.contains("json error at byte"), "{body}");
+        // The body was fully consumed: the connection stays usable.
+        write!(
+            stream,
+            "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let (s2, _, b2) = read_raw_response(&mut reader);
+        assert_eq!((s2, b2.as_str()), (200, "ok"));
+    }
+
+    #[test]
+    fn streamed_shed_aborts_early_drains_and_keeps_the_connection() {
+        let route: Arc<dyn StreamRoute> = Arc::new(CountingRoute { abort_after: Some(1) });
+        let (addr, counters) = spawn_with(IngressConfig::default(), Some(route));
+        let body = r#"{"events": [{"a":1},{"a":2},{"a":3}]}"#;
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "POST /v1/score/batch HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, headers, _) = read_raw_response(&mut reader);
+        assert_eq!(status, 429);
+        assert!(headers.contains("Retry-After: 1"), "{headers}");
+        assert_eq!(counters.shed.get(), 1);
+        // Keep-alive after the shed: the remaining body was drained.
+        write!(
+            stream,
+            "GET /healthz HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        let (s2, _, b2) = read_raw_response(&mut reader);
+        assert_eq!((s2, b2.as_str()), (200, "ok"));
+    }
+
+    #[test]
+    fn chunk_boundaries_do_not_change_streamed_results() {
+        let route: Arc<dyn StreamRoute> = Arc::new(CountingRoute { abort_after: None });
+        let (addr, _) = spawn_with(IngressConfig::default(), Some(route));
+        let body = r#"{"events": [{"a":1},{"b":[2,3]},{"c":"x"}]}"#;
+        // Drip the body one byte at a time across many packets: the
+        // incremental parser must produce the same result as one shot.
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        write!(
+            stream,
+            "POST /v1/score/batch HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        )
+        .unwrap();
+        stream.flush().unwrap();
+        for chunk in body.as_bytes().chunks(1) {
+            stream.write_all(chunk).unwrap();
+            stream.flush().unwrap();
+        }
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let (status, _, resp) = read_raw_response(&mut reader);
+        assert_eq!(status, 200);
+        assert_eq!(resp, r#"{"count":3,"restarts":0,"seen":true}"#);
     }
 }

@@ -19,16 +19,44 @@
 //! Request bodies over `server.maxBodyBytes` (default 1 MiB) are
 //! rejected with `413 Payload Too Large` from the Content-Length
 //! header alone — the body is never buffered.
+//!
+//! ## Ingress plane
+//!
+//! The front end is an event-driven reactor (`server::http`): one
+//! epoll thread multiplexes every connection and hands complete
+//! requests to a bounded worker pool. `POST /v1/score/batch` bodies
+//! are additionally parsed *incrementally* (`server::streamjson`):
+//! events reach [`ScoreBatchSink`] as their bytes arrive, so the
+//! batch endpoint never buffers a request body — yet its responses
+//! stay byte-identical to the buffered handler path (set
+//! `server.streamBatch: false` to get that path back).
+//!
+//! Streaming also enables **tenant-priority admission control**:
+//! the first event of a batch names the tenant, and when the deepest
+//! dynamic-batcher queue exceeds `server.shedQueueDepth <<
+//! priority(tenant)` the request is shed with `429 Too Many
+//! Requests` + `Retry-After` before any scoring work is queued.
+//! Slow or abusive clients are bounded by `server.maxHeaderBytes`
+//! (431), `server.headerReadTimeoutMs` / `server.bodyReadTimeoutMs`
+//! (408) and `server.maxConnections` (accept-time shed); every
+//! outcome is accounted under `ingress_*` in `GET /metrics`.
 
 pub mod http;
+pub mod reactor;
+pub mod streamjson;
 
 use crate::coordinator::{Engine, ScoreRequest};
-use crate::config::Intent;
+use crate::config::{Intent, ServerConfig};
 use crate::util::json::Json;
 use anyhow::Result;
-use http::{Handler, HttpServer, Request, Response};
+use http::{
+    BatchSink, Handler, HttpServer, IngressConfig, IngressCounters, Request, Response,
+    StreamRoute,
+};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+use streamjson::BatchShape;
 
 /// Build the API handler for an engine. `ready` gates /healthz and
 /// /score until warm-up completes (a pod readiness gate).
@@ -248,7 +276,15 @@ fn handle_score_batch(engine: &Engine, body: &str) -> Result<Response> {
         .iter()
         .map(parse_score_request)
         .collect::<Result<Vec<_>>>()?;
-    let resps = engine.score_batch(&reqs)?;
+    batch_response(engine, &reqs)
+}
+
+/// Score a parsed batch and render the `{count, results}` body — the
+/// single serialization point shared by the buffered handler and the
+/// streaming sink, so the two paths are byte-identical by
+/// construction.
+fn batch_response(engine: &Engine, reqs: &[ScoreRequest]) -> Result<Response> {
+    let resps = engine.score_batch(reqs)?;
     let results: Vec<Json> = resps.iter().map(score_response_json).collect();
     Ok(Response::json(
         200,
@@ -258,6 +294,191 @@ fn handle_score_batch(engine: &Engine, body: &str) -> Result<Response> {
         ])
         .to_string(),
     ))
+}
+
+/// The buffered route's 422 envelope (`route()` wraps handler errors
+/// the same way); the streaming sink reuses it so error bodies match
+/// byte-for-byte.
+fn error_422(msg: impl Into<String>) -> Response {
+    Response::json(
+        422,
+        Json::obj(vec![("error", Json::str(msg.into()))]).to_string(),
+    )
+}
+
+// -----------------------------------------------------------------------
+// Tenant-priority admission control
+// -----------------------------------------------------------------------
+
+/// Sheds batch requests by tenant priority when the engine's dynamic
+/// batchers back up. The threshold for a tenant is
+/// `shedQueueDepth << priority` (priorities are capped at 16 by
+/// config validation): each priority level doubles how deep the
+/// queue may grow before that tenant is turned away, so
+/// high-priority tenants keep landing while bulk traffic sheds
+/// first. `shedQueueDepth: 0` (the default) disables shedding.
+pub struct AdmissionControl {
+    priorities: Vec<(String, u8)>,
+    default_priority: u8,
+    shed_queue_depth: usize,
+    /// Current pressure signal — in production
+    /// [`Engine::ingress_pressure`], injectable in tests/storms.
+    depth_probe: Box<dyn Fn() -> usize + Send + Sync>,
+}
+
+impl AdmissionControl {
+    pub fn new(
+        priorities: Vec<(String, u8)>,
+        default_priority: u8,
+        shed_queue_depth: usize,
+        depth_probe: Box<dyn Fn() -> usize + Send + Sync>,
+    ) -> AdmissionControl {
+        AdmissionControl {
+            priorities,
+            default_priority,
+            shed_queue_depth,
+            depth_probe,
+        }
+    }
+
+    /// Wire up from the `server:` config block with the engine's
+    /// live batcher-depth gauge as the pressure probe.
+    pub fn from_config(cfg: &ServerConfig, engine: Arc<Engine>) -> AdmissionControl {
+        AdmissionControl::new(
+            cfg.tenant_priorities.clone(),
+            cfg.default_priority,
+            cfg.shed_queue_depth,
+            Box::new(move || engine.ingress_pressure()),
+        )
+    }
+
+    pub fn priority(&self, tenant: &str) -> u8 {
+        self.priorities
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map(|(_, p)| *p)
+            .unwrap_or(self.default_priority)
+    }
+
+    /// Queue depth above which `tenant` is shed
+    /// (`shedQueueDepth << priority`, saturating — a huge configured
+    /// depth must never wrap into a tiny threshold).
+    pub fn threshold(&self, tenant: &str) -> usize {
+        let p = self.priority(tenant).min(64) as u32; // config caps at 16
+        let shifted = (self.shed_queue_depth as u128) << p;
+        shifted.min(usize::MAX as u128) as usize
+    }
+
+    /// Admit a batch for `tenant` right now? Wait-free: one snapshot
+    /// load plus relaxed gauge reads.
+    pub fn admit(&self, tenant: &str) -> bool {
+        self.shed_queue_depth == 0 || (self.depth_probe)() <= self.threshold(tenant)
+    }
+
+    /// The shed response: `429` with `Retry-After: 1` so well-behaved
+    /// clients back off for a batching interval before retrying.
+    fn shed_response(&self, tenant: &str) -> Response {
+        Response::json(
+            429,
+            Json::obj(vec![(
+                "error",
+                Json::str(format!("overloaded: shedding tenant '{tenant}'")),
+            )])
+            .to_string(),
+        )
+        .with_retry_after(1)
+    }
+}
+
+// -----------------------------------------------------------------------
+// Streaming batch route
+// -----------------------------------------------------------------------
+
+/// Claims `POST /v1/score/batch` for incremental parsing. Returning
+/// `None` (warming up, or some other route) falls back to the
+/// buffered handler, which produces the identical response.
+pub struct ScoreBatchRoute {
+    pub engine: Arc<Engine>,
+    pub ready: Arc<AtomicBool>,
+    pub admission: Arc<AdmissionControl>,
+}
+
+impl StreamRoute for ScoreBatchRoute {
+    fn begin(&self, method: &str, path: &str) -> Option<Box<dyn BatchSink>> {
+        if method != "POST" || path != "/v1/score/batch" {
+            return None;
+        }
+        if !self.ready.load(Ordering::SeqCst) {
+            // Buffered path answers `503 warming up` before parsing;
+            // declining here routes the request there.
+            return None;
+        }
+        Some(Box::new(ScoreBatchSink {
+            engine: Arc::clone(&self.engine),
+            admission: Arc::clone(&self.admission),
+            reqs: Vec::new(),
+            deferred: None,
+        }))
+    }
+}
+
+/// Collects parsed events as the body streams in. Error surfacing is
+/// deliberately *deferred*: the buffered path parses the whole body
+/// before validating events, so the first invalid event must produce
+/// the same 422 whether it arrives early or late in the stream — we
+/// record it, keep draining (keeps the connection synced), and
+/// answer at body end.
+struct ScoreBatchSink {
+    engine: Arc<Engine>,
+    admission: Arc<AdmissionControl>,
+    reqs: Vec<ScoreRequest>,
+    deferred: Option<String>,
+}
+
+impl BatchSink for ScoreBatchSink {
+    fn event(&mut self, value: Json) -> Option<Response> {
+        if self.deferred.is_some() {
+            return None; // first error wins, like the buffered path
+        }
+        match parse_score_request(&value) {
+            Ok(req) => {
+                // Admission is decided on the batch's first event —
+                // the tenant is known, nothing is queued yet.
+                if self.reqs.is_empty() && !self.admission.admit(&req.intent.tenant) {
+                    return Some(self.admission.shed_response(&req.intent.tenant));
+                }
+                self.reqs.push(req);
+            }
+            Err(e) => self.deferred = Some(e.to_string()),
+        }
+        None
+    }
+
+    fn restart(&mut self) {
+        // A later top-level `"events"` key supersedes this one
+        // (duplicate-key last-wins, matching `util::json::parse`).
+        self.reqs.clear();
+        self.deferred = None;
+    }
+
+    fn finish(self: Box<Self>, shape: BatchShape) -> Response {
+        if let Some(msg) = self.deferred {
+            return error_422(msg);
+        }
+        if !shape.events_seen {
+            // Byte-identical to the buffered path's
+            // `v.req("events")` failure on a valid body.
+            let missing = Json::obj(vec![]).req("events").unwrap_err();
+            return error_422(missing.to_string());
+        }
+        if !shape.events_is_array {
+            return error_422("events must be a list of score payloads");
+        }
+        match batch_response(&self.engine, &self.reqs) {
+            Ok(resp) => resp,
+            Err(e) => error_422(e.to_string()),
+        }
+    }
 }
 
 /// Convenience: build + bind + warm up + serve on a background thread.
@@ -270,9 +491,31 @@ pub fn spawn_server(
 ) -> Result<(String, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
     let ready = Arc::new(AtomicBool::new(false));
     let handler = api_handler(Arc::clone(&engine), Arc::clone(&ready));
-    // Body cap from the engine's config (`server.maxBodyBytes`):
-    // oversized requests bounce with 413 before their bodies are read.
-    let server = HttpServer::bind_with_limits(addr, workers, handler, engine.max_body_bytes)?;
+    // Ingress limits from the engine's `server:` config block —
+    // oversized requests bounce with 413 before their bodies are
+    // read, slow readers hit 408, oversized heads 431.
+    let cfg = &engine.server_cfg;
+    let config = IngressConfig {
+        max_body: engine.max_body_bytes,
+        max_header: cfg.max_header_bytes,
+        max_connections: cfg.max_connections,
+        header_deadline: Duration::from_millis(cfg.header_read_timeout_ms),
+        body_deadline: Duration::from_millis(cfg.body_read_timeout_ms),
+    };
+    // Ingress counters live in the engine's registry so they show up
+    // in `GET /metrics` next to the serving counters.
+    let ingress = IngressCounters::resolve(&engine.counters);
+    let stream_route: Option<Arc<dyn StreamRoute>> = if cfg.stream_batch {
+        let admission = Arc::new(AdmissionControl::from_config(cfg, Arc::clone(&engine)));
+        Some(Arc::new(ScoreBatchRoute {
+            engine: Arc::clone(&engine),
+            ready: Arc::clone(&ready),
+            admission,
+        }))
+    } else {
+        None
+    };
+    let server = HttpServer::bind_with_config(addr, workers, handler, config, ingress, stream_route)?;
     let bound = server.local_addr();
     let handle = std::thread::spawn(move || {
         let _ = server.serve();
@@ -543,5 +786,167 @@ server:
         let (addr, _ready, _h) = spawn_server(engine, "127.0.0.1:0", 2, 5).unwrap();
         let (status, _) = http_request(&addr, "GET", "/nope", "").unwrap();
         assert_eq!(status, 404);
+    }
+
+    /// Sim-dialect config shared by the ingress tests below.
+    const SIM_YAML: &str = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s3]
+  quantile: identity
+"#;
+
+    /// Raw round-trip with `Connection: close` so response *headers*
+    /// are visible (the `http_request` helper strips them).
+    fn raw_request(addr: &str, method: &str, path: &str, body: &str) -> String {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    /// The tentpole's differential guarantee: every body — valid,
+    /// malformed, adversarial — gets the *same bytes* back whether it
+    /// flows through the incremental streaming sink (default) or the
+    /// seed's buffered handler (`server.streamBatch: false`). Both
+    /// engines score off the same sim artifacts, so even the float
+    /// results must match exactly.
+    #[test]
+    fn streamed_and_buffered_batch_responses_are_bitwise_identical() {
+        let fix = crate::runtime::SimArtifacts::in_temp().unwrap();
+        let spawn = |extra: &str| {
+            let pool = Arc::new(crate::runtime::ModelPool::new(fix.manifest().unwrap()));
+            let yaml = format!("{SIM_YAML}{extra}");
+            let engine =
+                Arc::new(Engine::build(&MuseConfig::from_yaml(&yaml).unwrap(), pool).unwrap());
+            spawn_server(engine, "127.0.0.1:0", 2, 5).unwrap().0
+        };
+        let streamed = spawn("");
+        let buffered = spawn("server:\n  streamBatch: false\n");
+
+        let d = crate::simulator::FEATURE_DIM;
+        let feats = vec!["0.25"; d].join(",");
+        let ev = format!(r#"{{"tenant": "acme", "features": [{feats}]}}"#);
+        let bodies: Vec<String> = vec![
+            format!(r#"{{"events": [{ev}, {ev}]}}"#), // happy path
+            String::new(),                            // empty body
+            "{}".to_string(),                         // no events key
+            r#"{"other": 1}"#.to_string(),            // no events key
+            r#"{"events": 3}"#.to_string(),           // events not a list
+            r#"{"events": [{"tenant": "x"}]}"#.to_string(), // event missing features
+            format!(r#"{{"events": [{ev}, {{"tenant": 7}}]}}"#), // second event bad
+            r#"{"events": ["#.to_string(),            // truncated JSON
+            r#"{"events": [{]}"#.to_string(),         // syntax error mid-object
+            format!(r#"{{"events": "no", "events": [{ev}]}}"#), // dup key, last wins
+            format!(r#"{{"events": [{ev}], "events": "no"}}"#), // dup key, last invalid
+            format!(r#"{{"events": [{ev}]}} trailing"#), // trailing garbage
+            r#"{"events": []}"#.to_string(),          // empty batch
+        ];
+        for body in &bodies {
+            let a = http_request(&streamed, "POST", "/v1/score/batch", body).unwrap();
+            let b = http_request(&buffered, "POST", "/v1/score/batch", body).unwrap();
+            assert_eq!(a, b, "streamed vs buffered diverged for body: {body:?}");
+        }
+        // The streaming plane accounts itself in /metrics.
+        let (status, metrics) = http_request(&streamed, "GET", "/metrics", "").unwrap();
+        assert_eq!(status, 200);
+        assert!(metrics.contains("ingress_accepted"), "{metrics}");
+        assert!(metrics.contains("ingress_streamed_events"), "{metrics}");
+    }
+
+    #[test]
+    fn admission_thresholds_scale_with_priority() {
+        let ac = AdmissionControl::new(
+            vec![("vip".to_string(), 4), ("bulk".to_string(), 0)],
+            1,
+            64,
+            Box::new(|| 500),
+        );
+        assert_eq!(ac.priority("vip"), 4);
+        assert_eq!(ac.priority("unlisted"), 1); // defaultPriority
+        assert_eq!(ac.threshold("vip"), 64 << 4);
+        assert_eq!(ac.threshold("bulk"), 64);
+        assert!(ac.admit("vip")); // 500 <= 1024
+        assert!(!ac.admit("bulk")); // 500 > 64
+        assert!(!ac.admit("unlisted")); // 500 > 128
+        // shedQueueDepth 0 disables shedding no matter the pressure.
+        let off = AdmissionControl::new(vec![], 0, 0, Box::new(|| usize::MAX));
+        assert!(off.admit("anyone"));
+        // The shift saturates instead of wrapping into a tiny value.
+        let sat = AdmissionControl::new(
+            vec![("t".to_string(), 16)],
+            0,
+            usize::MAX / 2,
+            Box::new(|| 0),
+        );
+        assert_eq!(sat.threshold("t"), usize::MAX);
+    }
+
+    /// End-to-end tenant-priority shedding through a real server: a
+    /// synthetic pressure probe reports a deep queue; the vip tenant
+    /// (priority 4) still lands while bulk traffic is turned away
+    /// with `429` + `Retry-After` before any scoring work is queued.
+    #[test]
+    fn tenant_priority_shed_is_enforced_end_to_end() {
+        let fix = crate::runtime::SimArtifacts::in_temp().unwrap();
+        let pool = Arc::new(crate::runtime::ModelPool::new(fix.manifest().unwrap()));
+        let engine = Arc::new(
+            Engine::build(&MuseConfig::from_yaml(SIM_YAML).unwrap(), pool).unwrap(),
+        );
+        let ready = Arc::new(AtomicBool::new(true));
+        let handler = api_handler(Arc::clone(&engine), Arc::clone(&ready));
+        let admission = Arc::new(AdmissionControl::new(
+            vec![("vip".to_string(), 4)],
+            0,
+            64,
+            Box::new(|| 500), // queue "looks" 500 deep
+        ));
+        let route: Arc<dyn http::StreamRoute> = Arc::new(ScoreBatchRoute {
+            engine: Arc::clone(&engine),
+            ready,
+            admission,
+        });
+        let server = HttpServer::bind_with_config(
+            "127.0.0.1:0",
+            2,
+            handler,
+            http::IngressConfig::default(),
+            http::IngressCounters::resolve(&engine.counters),
+            Some(route),
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let counters = server.counters();
+        std::thread::spawn(move || {
+            let _ = server.serve();
+        });
+
+        let d = crate::simulator::FEATURE_DIM;
+        let feats = vec!["0.1"; d].join(",");
+        let body = |tenant: &str| {
+            format!(r#"{{"events": [{{"tenant": "{tenant}", "features": [{feats}]}}]}}"#)
+        };
+        // vip rides out the pressure (64 << 4 = 1024 >= 500)...
+        let (status, resp) =
+            http_request(&addr, "POST", "/v1/score/batch", &body("vip")).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        // ...bulk sheds at threshold 64 with a backoff hint.
+        let raw = raw_request(&addr, "POST", "/v1/score/batch", &body("bulk"));
+        assert!(raw.starts_with("HTTP/1.1 429 "), "{raw}");
+        assert!(raw.contains("Retry-After: 1"), "{raw}");
+        assert!(raw.contains("shedding tenant 'bulk'"), "{raw}");
+        assert_eq!(counters.shed.get(), 1);
     }
 }

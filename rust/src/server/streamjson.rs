@@ -1,0 +1,694 @@
+//! Incremental `/v1/score/batch` body parser: resumable at any byte
+//! boundary, so the ingress plane can feed events to the scoring
+//! sink **as they parse** instead of materializing the request.
+//!
+//! # Differential contract (enforced by `tests/ingress_fuzz.rs`)
+//!
+//! For every body `b` and every way of chunking `b`:
+//!
+//! * if `util::json::parse(b)` succeeds, the streaming parse succeeds
+//!   and emits exactly the elements of the **last** top-level
+//!   `"events"` array (duplicate keys are last-wins in the buffered
+//!   path's `BTreeMap`; [`StreamItem::EventsRestart`] tells the sink
+//!   to discard a superseded collection);
+//! * if `util::json::parse(b)` fails, the streaming parse fails with
+//!   the **same message at the same byte offset**, regardless of how
+//!   the body was chunked.
+//!
+//! The equality is by construction, not by imitation: this module
+//! only hand-emulates the *framing* of the top-level object (`{`,
+//! keys, `:`, `,`, `}` and the `"events"` array skeleton — a dozen
+//! exactly-mirrored error sites), while every complete value and
+//! every key is re-parsed by the production parser via
+//! `util::json::parse_value_at`, which reports the production error
+//! strings and offsets verbatim. Values are byte-scanned to find
+//! their extent (string/escape/depth tracking only — no validation),
+//! then validated in one call; a scanner/parser extent disagreement
+//! (e.g. mismatched brackets) always trips the production parser
+//! first, at the byte the buffered path would have reported.
+//!
+//! Memory: one event's bytes are buffered at a time (plus any
+//! non-`events` member being skipped); the whole request is never
+//! held. The HTTP layer separately caps the body via Content-Length.
+
+use crate::util::json::{parse_value_at, Json, JsonError};
+
+/// Items pushed to the sink as the body parses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamItem {
+    /// One element of the top-level `"events"` array, in order.
+    Event(Json),
+    /// A later top-level `"events"` key supersedes everything emitted
+    /// so far (buffered parsing is last-wins): reset accumulated
+    /// state, including any deferred per-event validation error.
+    EventsRestart,
+}
+
+/// What the body said about `"events"`, for the sink's shape errors
+/// (`missing required field 'events'` / `events must be a list ...`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchShape {
+    /// A top-level `"events"` key was present.
+    pub events_seen: bool,
+    /// The last `"events"` value was an array.
+    pub events_is_array: bool,
+}
+
+/// Where a completed scanned value goes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Dest {
+    /// An `"events"` array element: emit to the sink.
+    Event,
+    /// A non-`events` member value: syntax-validate and drop.
+    Skip,
+    /// A non-object body: validate, then require only trailing ws.
+    Top,
+}
+
+/// Extent scanner for one value (no validation — see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Scan {
+    /// `{`/`[`: depth-balanced, string-aware.
+    Container { depth: u32, in_string: bool, esc: bool },
+    /// `"`: ends at the first backslash-unescaped quote.
+    Str { esc: bool },
+    /// Number or literal: ends at ws / `,` / `]` / `}` / EOF.
+    Scalar,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum State {
+    /// Leading ws; expecting the top-level value.
+    Start,
+    /// After `{`: `}` or a first key.
+    ObjFirst,
+    /// After `,` in the object: a key must follow.
+    NextKey,
+    /// Inside a key string (stash accumulating).
+    Key { esc: bool },
+    /// After a key: expecting `:`.
+    AfterKey,
+    /// After `:`: expecting the member value.
+    BeforeValue,
+    /// After `[` of the events array: `]` or a first element.
+    EventsFirst,
+    /// After `,` in the events array: an element must follow.
+    EventElem,
+    /// Scanning one complete value into the stash.
+    Value { dest: Dest, scan: Scan },
+    /// After an events element: `,` or `]`.
+    AfterEvent,
+    /// After a member value: `,` or `}`.
+    AfterValue,
+    /// After the top-level value: only trailing ws.
+    Trailing,
+    Done,
+}
+
+/// The resumable parser. Feed body slices with [`feed`], then call
+/// [`finish`] once the Content-Length is consumed. Errors are sticky:
+/// after a failure both methods keep returning the same error.
+///
+/// [`feed`]: BatchBodyParser::feed
+/// [`finish`]: BatchBodyParser::finish
+pub struct BatchBodyParser {
+    state: State,
+    /// Absolute offset of the next unconsumed input byte.
+    pos: usize,
+    /// Bytes of the key or value being scanned.
+    stash: Vec<u8>,
+    /// Absolute offset of `stash[0]`.
+    stash_start: usize,
+    /// Decoded current member key (decides `"events"` routing).
+    key_is_events: bool,
+    events_seen: bool,
+    events_is_array: bool,
+    failed: Option<JsonError>,
+}
+
+impl Default for BatchBodyParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+const fn is_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\n' | b'\r')
+}
+
+impl BatchBodyParser {
+    pub fn new() -> BatchBodyParser {
+        BatchBodyParser {
+            state: State::Start,
+            pos: 0,
+            stash: Vec::new(),
+            stash_start: 0,
+            key_is_events: false,
+            events_seen: false,
+            events_is_array: false,
+            failed: None,
+        }
+    }
+
+    /// Bytes consumed so far (diagnostics / abuse counters).
+    pub fn consumed(&self) -> usize {
+        self.pos
+    }
+
+    fn err(&mut self, msg: &str, offset: usize) -> JsonError {
+        let e = JsonError { msg: msg.to_string(), offset };
+        self.failed = Some(e.clone());
+        e
+    }
+
+    /// Feed the next body slice, pushing parsed items to `sink`.
+    pub fn feed(
+        &mut self,
+        chunk: &[u8],
+        sink: &mut dyn FnMut(StreamItem),
+    ) -> Result<(), JsonError> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        for &b in chunk {
+            let at = self.pos;
+            self.process_byte(b, at, sink)?;
+            self.pos += 1;
+        }
+        Ok(())
+    }
+
+    /// Signal end of body. Returns the `"events"` shape on success.
+    pub fn finish(&mut self, sink: &mut dyn FnMut(StreamItem)) -> Result<BatchShape, JsonError> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        // A completed scalar at EOF transitions to its after-state,
+        // whose own EOF handling then applies — hence the loop.
+        loop {
+            let at = self.pos;
+            match &self.state {
+                State::Done | State::Trailing => {
+                    self.state = State::Done;
+                    return Ok(BatchShape {
+                        events_seen: self.events_seen,
+                        events_is_array: self.events_is_array,
+                    });
+                }
+                State::Start | State::BeforeValue | State::EventsFirst | State::EventElem => {
+                    return Err(self.err("unexpected end of input", at));
+                }
+                State::ObjFirst | State::NextKey => {
+                    return Err(self.err("expected '\"'", at));
+                }
+                State::AfterKey => return Err(self.err("expected ':'", at)),
+                State::AfterEvent => {
+                    return Err(self.err("expected ',' or ']' in array", at));
+                }
+                State::AfterValue => {
+                    return Err(self.err("expected ',' or '}' in object", at));
+                }
+                State::Key { .. } => {
+                    // Unterminated key: the production parser reports
+                    // the exact mid-string error (unterminated string,
+                    // truncated \u escape, ...) at the right offset.
+                    let e = match parse_value_at(&self.stash, 0) {
+                        Err(e) => e,
+                        Ok(_) => unreachable!("key stash has no closing quote"),
+                    };
+                    return Err(self.err(&e.msg, self.stash_start + e.offset));
+                }
+                State::Value { dest, scan } => {
+                    let (dest, scan) = (*dest, *scan);
+                    if scan == Scan::Scalar {
+                        // EOF delimits a scalar; validate and fall
+                        // through to the after-state's EOF handling.
+                        self.finish_value(dest, sink)?;
+                        continue;
+                    }
+                    // Truncated container/string: production error.
+                    let e = match parse_value_at(&self.stash, 0) {
+                        Err(e) => e,
+                        Ok(_) => unreachable!("scanner says the value is incomplete"),
+                    };
+                    return Err(self.err(&e.msg, self.stash_start + e.offset));
+                }
+            }
+        }
+    }
+
+    /// Process one input byte at absolute offset `at`. Loops through
+    /// non-consuming transitions (a delimiter that completes a scalar
+    /// is re-examined by the successor state within the same call).
+    fn process_byte(
+        &mut self,
+        b: u8,
+        at: usize,
+        sink: &mut dyn FnMut(StreamItem),
+    ) -> Result<(), JsonError> {
+        loop {
+            match &mut self.state {
+                State::Done | State::Trailing => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    return Err(self.err("trailing content after JSON value", at));
+                }
+                State::Start => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if b == b'{' {
+                        self.state = State::ObjFirst;
+                        return Ok(());
+                    }
+                    return self.begin_value(b, at, Dest::Top);
+                }
+                State::ObjFirst => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if b == b'}' {
+                        self.state = State::Trailing;
+                        return Ok(());
+                    }
+                    if b == b'"' {
+                        self.begin_key(b, at);
+                        return Ok(());
+                    }
+                    return Err(self.err("expected '\"'", at));
+                }
+                State::NextKey => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if b == b'"' {
+                        self.begin_key(b, at);
+                        return Ok(());
+                    }
+                    return Err(self.err("expected '\"'", at));
+                }
+                State::Key { esc } => {
+                    let was_esc = *esc;
+                    *esc = !was_esc && b == b'\\';
+                    self.stash.push(b);
+                    if !was_esc && b == b'"' {
+                        return self.finish_key();
+                    }
+                    return Ok(());
+                }
+                State::AfterKey => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if b == b':' {
+                        self.state = State::BeforeValue;
+                        return Ok(());
+                    }
+                    return Err(self.err("expected ':'", at));
+                }
+                State::BeforeValue => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if self.key_is_events {
+                        if self.events_seen {
+                            // Last-wins: tell the sink to drop the
+                            // superseded collection.
+                            sink(StreamItem::EventsRestart);
+                        }
+                        self.events_seen = true;
+                        self.events_is_array = b == b'[';
+                        if b == b'[' {
+                            self.state = State::EventsFirst;
+                            return Ok(());
+                        }
+                        // Non-array events value: still has to be
+                        // syntactically valid JSON.
+                        return self.begin_value(b, at, Dest::Skip);
+                    }
+                    return self.begin_value(b, at, Dest::Skip);
+                }
+                State::EventsFirst => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if b == b']' {
+                        self.state = State::AfterValue;
+                        return Ok(());
+                    }
+                    return self.begin_value(b, at, Dest::Event);
+                }
+                State::EventElem => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    return self.begin_value(b, at, Dest::Event);
+                }
+                State::AfterEvent => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if b == b',' {
+                        self.state = State::EventElem;
+                        return Ok(());
+                    }
+                    if b == b']' {
+                        self.state = State::AfterValue;
+                        return Ok(());
+                    }
+                    // The buffered parser bumps before erroring here.
+                    return Err(self.err("expected ',' or ']' in array", at + 1));
+                }
+                State::AfterValue => {
+                    if is_ws(b) {
+                        return Ok(());
+                    }
+                    if b == b',' {
+                        self.state = State::NextKey;
+                        return Ok(());
+                    }
+                    if b == b'}' {
+                        self.state = State::Trailing;
+                        return Ok(());
+                    }
+                    return Err(self.err("expected ',' or '}' in object", at + 1));
+                }
+                State::Value { dest, scan } => {
+                    let dest = *dest;
+                    match scan {
+                        Scan::Container { depth, in_string, esc } => {
+                            if *in_string {
+                                let was_esc = *esc;
+                                *esc = !was_esc && b == b'\\';
+                                if !was_esc && b == b'"' {
+                                    *in_string = false;
+                                }
+                            } else {
+                                match b {
+                                    b'"' => *in_string = true,
+                                    b'{' | b'[' => *depth += 1,
+                                    // Depth only hits 0 outside a
+                                    // string, where the scan ends —
+                                    // `}`/`]` mismatches are caught by
+                                    // the validating re-parse below.
+                                    b'}' | b']' => *depth -= 1,
+                                    _ => {}
+                                }
+                            }
+                            let complete = *depth == 0;
+                            self.stash.push(b);
+                            if complete {
+                                return self.finish_value(dest, sink);
+                            }
+                            return Ok(());
+                        }
+                        Scan::Str { esc } => {
+                            let was_esc = *esc;
+                            *esc = !was_esc && b == b'\\';
+                            self.stash.push(b);
+                            if !was_esc && b == b'"' {
+                                return self.finish_value(dest, sink);
+                            }
+                            return Ok(());
+                        }
+                        Scan::Scalar => {
+                            if is_ws(b) || matches!(b, b',' | b']' | b'}') {
+                                // Delimiter: complete the scalar, then
+                                // re-examine `b` in the after-state.
+                                self.finish_value(dest, sink)?;
+                                continue;
+                            }
+                            self.stash.push(b);
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn begin_key(&mut self, quote: u8, at: usize) {
+        debug_assert_eq!(quote, b'"');
+        self.stash.clear();
+        self.stash.push(quote);
+        self.stash_start = at;
+        self.state = State::Key { esc: false };
+    }
+
+    /// Dispatch on a value's first byte exactly like `Parser::value`.
+    fn begin_value(&mut self, b: u8, at: usize, dest: Dest) -> Result<(), JsonError> {
+        let scan = match b {
+            b'{' | b'[' => Scan::Container { depth: 1, in_string: false, esc: false },
+            b'"' => Scan::Str { esc: false },
+            b't' | b'f' | b'n' | b'-' => Scan::Scalar,
+            c if c.is_ascii_digit() => Scan::Scalar,
+            _ => return Err(self.err("unexpected character", at)),
+        };
+        self.stash.clear();
+        self.stash.push(b);
+        self.stash_start = at;
+        self.state = State::Value { dest, scan };
+        Ok(())
+    }
+
+    /// A key's closing quote landed: decode it with the production
+    /// parser (same escape/UTF-8 errors at the same offsets).
+    fn finish_key(&mut self) -> Result<(), JsonError> {
+        match parse_value_at(&self.stash, 0) {
+            Ok((Json::Str(k), _)) => {
+                self.key_is_events = k == "events";
+                self.stash.clear();
+                self.state = State::AfterKey;
+                Ok(())
+            }
+            Ok(_) => unreachable!("a quoted stash parses as a string"),
+            Err(e) => Err(self.err(&e.msg, self.stash_start + e.offset)),
+        }
+    }
+
+    /// A scanned value's extent is complete: validate it with the
+    /// production parser, route it, and replay any trailing stash
+    /// bytes the parser did not consume (scalar tokens like `truex`)
+    /// through the successor state — which rejects them exactly where
+    /// the buffered parse would have.
+    fn finish_value(
+        &mut self,
+        dest: Dest,
+        sink: &mut dyn FnMut(StreamItem),
+    ) -> Result<(), JsonError> {
+        let (v, consumed) = match parse_value_at(&self.stash, 0) {
+            Ok(ok) => ok,
+            Err(e) => {
+                let off = self.stash_start + e.offset;
+                return Err(self.err(&e.msg, off));
+            }
+        };
+        if dest == Dest::Event {
+            sink(StreamItem::Event(v));
+        }
+        self.state = match dest {
+            Dest::Event => State::AfterEvent,
+            Dest::Skip => State::AfterValue,
+            Dest::Top => State::Trailing,
+        };
+        if consumed < self.stash.len() {
+            // The first unconsumed byte is never a delimiter (the
+            // scan would have stopped there), so the successor state
+            // rejects it immediately — one byte decides the error.
+            let lb = self.stash[consumed];
+            let l_at = self.stash_start + consumed;
+            self.stash.clear();
+            return self.process_byte(lb, l_at, sink);
+        }
+        self.stash.clear();
+        Ok(())
+    }
+}
+
+/// Convenience used by tests and the differential harness: run a
+/// whole body through the parser in the given chunk sizes.
+pub fn parse_chunked(
+    body: &[u8],
+    chunks: &[usize],
+    sink: &mut dyn FnMut(StreamItem),
+) -> Result<BatchShape, JsonError> {
+    let mut p = BatchBodyParser::new();
+    let mut idx = 0;
+    let mut ci = 0;
+    while idx < body.len() {
+        let n = if chunks.is_empty() {
+            body.len() - idx
+        } else {
+            let n = chunks[ci % chunks.len()].max(1);
+            ci += 1;
+            n.min(body.len() - idx)
+        };
+        p.feed(&body[idx..idx + n], sink)?;
+        idx += n;
+    }
+    p.finish(sink)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    /// Reference semantics: the buffered path's view of a body.
+    fn reference(body: &str) -> Result<(Vec<Json>, BatchShape), JsonError> {
+        let v = parse(body)?;
+        let events = v.get("events");
+        let shape = BatchShape {
+            events_seen: events.is_some(),
+            events_is_array: events.map(|e| e.as_arr().is_some()).unwrap_or(false),
+        };
+        let evs = events
+            .and_then(Json::as_arr)
+            .map(|a| a.to_vec())
+            .unwrap_or_default();
+        Ok((evs, shape))
+    }
+
+    /// Streaming semantics under a fixed chunking.
+    fn streamed(body: &str, chunks: &[usize]) -> Result<(Vec<Json>, BatchShape), JsonError> {
+        let mut events = Vec::new();
+        let mut sink = |item: StreamItem| match item {
+            StreamItem::Event(v) => events.push(v),
+            StreamItem::EventsRestart => events.clear(),
+        };
+        let shape = parse_chunked(body.as_bytes(), chunks, &mut sink)?;
+        Ok((events, shape))
+    }
+
+    /// The differential assertion used throughout: reference and
+    /// streaming agree event-for-event (or error-for-error, same
+    /// message and byte offset) for every chunking tried.
+    fn assert_differential(body: &str) {
+        let want = reference(body);
+        for chunks in [
+            vec![],        // one shot
+            vec![1],       // byte at a time
+            vec![2],
+            vec![3, 1],
+            vec![7, 1, 2],
+            vec![body.len().max(1) / 2 + 1],
+        ] {
+            let got = streamed(body, &chunks);
+            match (&want, &got) {
+                (Ok(w), Ok(g)) => assert_eq!(w, g, "body={body:?} chunks={chunks:?}"),
+                (Err(w), Err(g)) => {
+                    assert_eq!((&w.msg, w.offset), (&g.msg, g.offset),
+                        "body={body:?} chunks={chunks:?}");
+                }
+                _ => panic!(
+                    "ok/err divergence for body={body:?} chunks={chunks:?}: \
+                     want={want:?} got={got:?}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn streams_events_in_order() {
+        let (evs, shape) = streamed(
+            r#"{"events": [{"tenant":"a","features":[1]}, {"tenant":"b","features":[2,3]}]}"#,
+            &[1],
+        )
+        .unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].req_str("tenant").unwrap(), "a");
+        assert_eq!(evs[1].req_str("tenant").unwrap(), "b");
+        assert!(shape.events_seen && shape.events_is_array);
+    }
+
+    #[test]
+    fn shapes_match_reference() {
+        for body in [
+            r#"{}"#,
+            r#"{"other": 1}"#,
+            r#"{"events": []}"#,
+            r#"{"events": "nope"}"#,
+            r#"{"events": {"a": 1}}"#,
+            r#"{"events": null}"#,
+            r#"[1,2,3]"#,
+            r#""just a string""#,
+            "42",
+        ] {
+            assert_differential(body);
+        }
+    }
+
+    #[test]
+    fn duplicate_events_keys_are_last_wins() {
+        // BTreeMap insert is last-wins in the buffered path; the
+        // stream signals a restart so the sink matches.
+        assert_differential(r#"{"events": [{"x":1}], "events": [{"y":2}, {"y":3}]}"#);
+        assert_differential(r#"{"events": [{"x":1}], "events": "nope"}"#);
+        assert_differential(r#"{"events": "nope", "events": [{"y":2}]}"#);
+        let (evs, shape) =
+            streamed(r#"{"events": [{"x":1}], "events": [{"y":2}]}"#, &[1]).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("y"), Some(&Json::Num(2.0)));
+        assert!(shape.events_is_array);
+    }
+
+    #[test]
+    fn nested_events_keys_do_not_stream() {
+        assert_differential(r#"{"outer": {"events": [1,2,3]}, "events": [{"z":9}]}"#);
+        let (evs, _) =
+            streamed(r#"{"outer": {"events": [1,2,3]}, "events": [{"z":9}]}"#, &[2]).unwrap();
+        assert_eq!(evs.len(), 1);
+    }
+
+    #[test]
+    fn errors_carry_buffered_offsets() {
+        for body in [
+            "",
+            "   ",
+            "{",
+            "}",
+            r#"{"events""#,
+            r#"{"events" 1}"#,
+            r#"{"events": [}"#,
+            r#"{"events": [1,]}"#,
+            r#"{"events": [1 2]}"#,
+            r#"{"events": [truex]}"#,
+            r#"{"events": [tru]}"#,
+            r#"{"events": [01]}"#,
+            r#"{"events": [1.]}"#,
+            r#"{"events": [1e]}"#,
+            r#"{"events": ["\x"]}"#,
+            r#"{"events": ["unterminated}"#,
+            r#"{"events": [{"a":1}}"#,
+            r#"{"events": [{"a":1]]}"#,
+            r#"{"events": [1]} extra"#,
+            r#"{"events": [1],}"#,
+            r#"{"events": [1] "k": 2}"#,
+            r#"{"ev\ud800ents": [1]}"#,
+            r#"{"events": [1], 5: 2}"#,
+            "{\"a\"\n:\n1\n,\n\"events\":[ ]\n}\n\n",
+            "nope",
+            "1x",
+            "[1,2",
+        ] {
+            assert_differential(body);
+        }
+    }
+
+    #[test]
+    fn whitespace_and_unicode_bodies() {
+        assert_differential("  {  \"events\" :\t[ {\"s\":\"héllo — 事\"} , 2.5e-3 ]\r\n} ");
+        assert_differential(r#"{"events": [" \u0041\ud83d\ude00 "]}"#);
+    }
+
+    #[test]
+    fn parser_is_sticky_after_failure() {
+        let mut p = BatchBodyParser::new();
+        let mut sink = |_: StreamItem| {};
+        let e1 = p.feed(b"nope", &mut sink).unwrap_err();
+        let e2 = p.feed(b" more", &mut sink).unwrap_err();
+        assert_eq!(e1, e2);
+        assert_eq!(p.finish(&mut sink).unwrap_err(), e1);
+    }
+}

@@ -1,0 +1,440 @@
+//! Connection-storm scenario: the ingress plane's scaling proof.
+//!
+//! Where `saturation` ramps threads against `Engine::score` directly,
+//! this scenario attacks the whole serving stack **over real
+//! sockets**: it opens thousands of concurrent keep-alive HTTP
+//! connections against a live [`spawn_server`] instance and drives
+//! every one of them from a *single* client thread multiplexed by the
+//! same [`Poller`] the server's reactor uses. The seed's
+//! thread-per-connection server kept all of `maxConnections` worker
+//! threads parked on blocking reads under this load; the event-driven
+//! ingress plane holds every connection on one reactor thread and
+//! keeps the worker pool free for scoring.
+//!
+//! The scenario is also an end-to-end conservation check, in the
+//! `saturation` tradition: the client drivers tally every response
+//! per (tenant, predictor) and, after the storm, those tallies must
+//! agree **exactly** with the engine's observation plane — the
+//! sharded `DataLake` per-pair counts, the wait-free
+//! `hot.requests_live` gauge, and the `ingress_*` counters that the
+//! reactor publishes into `GET /metrics`. No request lost, none
+//! double-counted, across connect/accept, event-loop dispatch, worker
+//! hand-off and keep-alive reuse.
+//!
+//! `examples/connection_storm.rs` is the CI smoke wrapper (>= 5k
+//! connections; `MUSE_STORM_CONNS` overrides).
+//!
+//! [`spawn_server`]: crate::server::spawn_server
+//! [`Poller`]: crate::server::reactor::Poller
+
+use crate::coordinator::Engine;
+use crate::server::reactor::{PollEvent, Poller, EV_READ, EV_WRITE};
+use crate::simulator::workload::{TenantProfile, Workload};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::fd::AsRawFd;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Scenario parameters (defaults match the unit test; the CI example
+/// scales `connections` to >= 5000).
+#[derive(Debug, Clone)]
+pub struct ConnectionStormConfig {
+    /// Concurrent keep-alive connections to hold open.
+    pub connections: usize,
+    /// Requests each connection sends (> 1 exercises keep-alive).
+    pub requests_per_connection: usize,
+    /// Tenant mix; connections round-robin over it.
+    pub tenants: Vec<TenantProfile>,
+    /// Server worker threads.
+    pub server_workers: usize,
+    pub seed: u64,
+}
+
+impl Default for ConnectionStormConfig {
+    fn default() -> Self {
+        ConnectionStormConfig {
+            connections: 256,
+            requests_per_connection: 3,
+            tenants: vec![
+                TenantProfile::new("bank1", 7, 0.3, 0.1),
+                TenantProfile::new("bank2", 11, 0.3, 0.1),
+            ],
+            server_workers: 4,
+            seed: 29,
+        }
+    }
+}
+
+/// Scenario outcome. The conservation checks have already passed by
+/// the time a report is returned; the numbers are for the ledger.
+#[derive(Debug, Clone)]
+pub struct ConnectionStormReport {
+    pub connections: usize,
+    /// Connections simultaneously open at the peak (all of them: the
+    /// storm connects everyone before the first request is sent).
+    pub peak_open: usize,
+    pub requests_total: u64,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    /// Client-observed request latency (write start -> body end).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl ConnectionStormReport {
+    pub fn render(&self) -> String {
+        format!(
+            "connection storm ({} keep-alive conns, one client thread):\n  \
+             {:>8.0} req/s  p50 {:>7.3} ms  p99 {:>7.3} ms  \
+             ({} requests in {:.2}s, peak {} open)",
+            self.connections,
+            self.requests_per_sec,
+            self.p50_ms,
+            self.p99_ms,
+            self.requests_total,
+            self.wall_secs,
+            self.peak_open
+        )
+    }
+}
+
+/// One multiplexed client connection's state machine.
+struct ClientConn {
+    stream: TcpStream,
+    tenant: String,
+    workload: Workload,
+    /// Requests still to send (including any in flight).
+    remaining: usize,
+    out: Vec<u8>,
+    out_pos: usize,
+    inbuf: Vec<u8>,
+    sent_at: Instant,
+    /// Current registered interest (avoid redundant epoll_ctl).
+    interest: u32,
+    done: bool,
+}
+
+impl ClientConn {
+    fn next_request(&mut self) -> Vec<u8> {
+        let e = self.workload.next_event();
+        let feats: Vec<String> = e.features.iter().map(|f| format!("{f:.6}")).collect();
+        let body = format!(
+            r#"{{"tenant": "{}", "features": [{}]}}"#,
+            self.tenant,
+            feats.join(",")
+        );
+        format!(
+            "POST /score HTTP/1.1\r\nHost: storm\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .into_bytes()
+    }
+
+    /// A complete response sitting at the front of `inbuf`? Returns
+    /// (status, body length consumed) without copying.
+    fn complete_response(&self) -> Option<(u16, usize, usize)> {
+        let head_end = self
+            .inbuf
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .map(|p| p + 4)?;
+        let head = std::str::from_utf8(&self.inbuf[..head_end]).ok()?;
+        let status: u16 = head.split_whitespace().nth(1)?.parse().ok()?;
+        let mut content_length = 0usize;
+        for line in head.lines() {
+            if let Some((k, v)) = line.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().ok()?;
+                }
+            }
+        }
+        if self.inbuf.len() < head_end + content_length {
+            return None;
+        }
+        Some((status, head_end, content_length))
+    }
+}
+
+/// Run the storm against a live engine's HTTP front end. Returns the
+/// report only if every conservation check passed (see module docs).
+pub fn run_connection_storm(
+    engine: Arc<Engine>,
+    cfg: &ConnectionStormConfig,
+) -> Result<ConnectionStormReport> {
+    ensure!(cfg.connections >= 1, "need >= 1 connection");
+    ensure!(cfg.requests_per_connection >= 1, "need >= 1 request per connection");
+    ensure!(!cfg.tenants.is_empty(), "need >= 1 tenant");
+
+    let base_requests = engine.counters.get("ingress_requests");
+    let base_accepted = engine.counters.get("ingress_accepted");
+    let base_live = engine.hot.requests_live.get();
+
+    // Warm-up 0: every scored event must come from this storm so the
+    // conservation checks can demand exact equality.
+    let (addr, _ready, _server) =
+        crate::server::spawn_server(Arc::clone(&engine), "127.0.0.1:0", cfg.server_workers, 0)?;
+
+    // Phase 1: open every connection before sending anything — the
+    // storm's whole point is holding them open *simultaneously*.
+    let mut poller = Poller::new().context("client poller")?;
+    let mut conns: Vec<ClientConn> = Vec::with_capacity(cfg.connections);
+    for i in 0..cfg.connections {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connect #{i}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).context("client nonblocking")?;
+        let tenant = cfg.tenants[i % cfg.tenants.len()].clone();
+        let workload = Workload::new(tenant.clone(), cfg.seed ^ ((i as u64) << 16));
+        conns.push(ClientConn {
+            stream,
+            tenant: tenant.name.clone(),
+            workload,
+            remaining: cfg.requests_per_connection,
+            out: Vec::new(),
+            out_pos: 0,
+            inbuf: Vec::new(),
+            sent_at: Instant::now(),
+            interest: EV_READ,
+            done: false,
+        });
+    }
+    let peak_open = conns.len();
+
+    // Phase 2: drive them all from this one thread.
+    let mut latencies_ns: Vec<u64> = Vec::with_capacity(cfg.connections * cfg.requests_per_connection);
+    let mut tallies: Vec<((String, String), u64)> = Vec::new();
+    let t0 = Instant::now();
+    for (i, c) in conns.iter_mut().enumerate() {
+        c.sent_at = Instant::now();
+        c.out = c.next_request();
+        c.out_pos = 0;
+        // Optimistic write; leftover waits for EV_WRITE.
+        pump_write(c)?;
+        let interest = if c.out_pos < c.out.len() {
+            EV_READ | EV_WRITE
+        } else {
+            EV_READ
+        };
+        c.interest = interest;
+        poller
+            .register(c.stream.as_raw_fd(), i, interest)
+            .context("register client conn")?;
+    }
+
+    let mut open = conns.len();
+    let mut events: Vec<PollEvent> = Vec::new();
+    let deadline = Instant::now() + std::time::Duration::from_secs(120);
+    while open > 0 {
+        ensure!(Instant::now() < deadline, "storm stalled: {open} connections unfinished");
+        poller.wait(&mut events, 100).context("client wait")?;
+        for &ev in &events {
+            let c = match conns.get_mut(ev.token) {
+                Some(c) if !c.done => c,
+                _ => continue,
+            };
+            if ev.events & EV_WRITE != 0 {
+                pump_write(c)?;
+            }
+            // Read whatever's there (level-triggered: loop to WouldBlock).
+            let mut scratch = [0u8; 16 * 1024];
+            loop {
+                match c.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        bail!(
+                            "server closed connection {} early ({} requests left)",
+                            ev.token,
+                            c.remaining
+                        );
+                    }
+                    Ok(n) => c.inbuf.extend_from_slice(&scratch[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("client read"),
+                }
+            }
+            // Process every complete response in the buffer.
+            while let Some((status, head_end, body_len)) = c.complete_response() {
+                let body = String::from_utf8_lossy(&c.inbuf[head_end..head_end + body_len])
+                    .into_owned();
+                c.inbuf.drain(..head_end + body_len);
+                ensure!(status == 200, "request failed with {status}: {body}");
+                let v = crate::util::json::parse(&body)
+                    .map_err(|e| anyhow::anyhow!("bad response body: {e}: {body}"))?;
+                let predictor = v.req_str("predictor").map_err(|e| anyhow::anyhow!("{e}"))?;
+                latencies_ns.push(c.sent_at.elapsed().as_nanos() as u64);
+                let key = (c.tenant.clone(), predictor.to_string());
+                match tallies.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, n)) => *n += 1,
+                    None => tallies.push((key, 1)),
+                }
+                c.remaining -= 1;
+                if c.remaining == 0 {
+                    c.done = true;
+                    poller.deregister(c.stream.as_raw_fd()).ok();
+                    open -= 1;
+                    break;
+                }
+                // Next request on the same (kept-alive) connection.
+                c.sent_at = Instant::now();
+                c.out = c.next_request();
+                c.out_pos = 0;
+                pump_write(c)?;
+            }
+            if !c.done {
+                let want = if c.out_pos < c.out.len() {
+                    EV_READ | EV_WRITE
+                } else {
+                    EV_READ
+                };
+                if want != c.interest {
+                    c.interest = want;
+                    poller
+                        .modify(c.stream.as_raw_fd(), ev.token, want)
+                        .context("modify client conn")?;
+                }
+            }
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let requests_total = latencies_ns.len() as u64;
+    ensure!(
+        requests_total == (cfg.connections * cfg.requests_per_connection) as u64,
+        "driver tally lost requests"
+    );
+
+    // Conservation: driver tallies vs the engine's observation plane.
+    engine.drain_shadows();
+    let mut oracle_total = 0u64;
+    for ((tenant, predictor), expect) in &tallies {
+        let got = engine.lake.count_for(tenant, predictor) as u64;
+        ensure!(
+            got == *expect,
+            "lake count_for({tenant},{predictor}) = {got}, driver says {expect}"
+        );
+        oracle_total += expect;
+    }
+    ensure!(oracle_total == requests_total, "per-pair tallies don't sum to the total");
+    ensure!(
+        engine.hot.requests_live.get() - base_live == requests_total,
+        "hot.requests_live {} != driven {requests_total}",
+        engine.hot.requests_live.get() - base_live
+    );
+    // Ingress accounting: every connection accepted once, every
+    // request dispatched once (keep-alive reuse, no double counts).
+    let accepted = engine.counters.get("ingress_accepted") - base_accepted;
+    let dispatched = engine.counters.get("ingress_requests") - base_requests;
+    ensure!(
+        accepted == cfg.connections as u64,
+        "ingress_accepted {accepted} != {} connections",
+        cfg.connections
+    );
+    ensure!(
+        dispatched == requests_total,
+        "ingress_requests {dispatched} != driven {requests_total}"
+    );
+    // ...and the same numbers are what /metrics publishes.
+    let (status, metrics) =
+        crate::server::http::http_request(&addr, "GET", "/metrics", "").context("GET /metrics")?;
+    ensure!(status == 200, "/metrics returned {status}");
+    let m = crate::util::json::parse(&metrics).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let published = m
+        .req("counters")
+        .and_then(|c| c.req("ingress_requests"))
+        .ok()
+        .and_then(crate::util::json::Json::as_f64)
+        .unwrap_or(-1.0);
+    ensure!(
+        published >= dispatched as f64,
+        "/metrics ingress_requests {published} below driver count {dispatched}"
+    );
+
+    latencies_ns.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        if latencies_ns.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p / 100.0) * (latencies_ns.len() - 1) as f64).round() as usize;
+        latencies_ns[idx.min(latencies_ns.len() - 1)] as f64 / 1e6
+    };
+    let report = ConnectionStormReport {
+        connections: cfg.connections,
+        peak_open,
+        requests_total,
+        wall_secs,
+        requests_per_sec: requests_total as f64 / wall_secs.max(1e-9),
+        p50_ms: pct(50.0),
+        p99_ms: pct(99.0),
+    };
+    ensure!(report.p99_ms >= report.p50_ms, "percentiles out of order");
+    ensure!(report.p99_ms > 0.0, "p99 must be measurable");
+    Ok(report)
+}
+
+/// Write as much pending output as the socket accepts.
+fn pump_write(c: &mut ClientConn) -> Result<()> {
+    while c.out_pos < c.out.len() {
+        match c.stream.write(&c.out[c.out_pos..]) {
+            Ok(0) => bail!("client write returned 0"),
+            Ok(n) => c.out_pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("client write"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MuseConfig;
+    use crate::runtime::{ModelPool, SimArtifacts};
+
+    const CONFIG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "duo"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "solo"
+predictors:
+- name: duo
+  experts: [s1, s2]
+  quantile: identity
+- name: solo
+  experts: [s3]
+  quantile: identity
+server:
+  workers: 2
+  maxBatchDelayUs: 50
+"#;
+
+    #[test]
+    fn storm_holds_concurrent_connections_and_conserves_every_event() {
+        // Sim-dialect artifacts: runs without `make artifacts`. Small
+        // enough for default fd limits; the CI example runs >= 5k.
+        let fix = SimArtifacts::in_temp().unwrap();
+        let pool = Arc::new(ModelPool::new(fix.manifest().unwrap()));
+        let engine =
+            Arc::new(Engine::build(&MuseConfig::from_yaml(CONFIG).unwrap(), pool).unwrap());
+        let cfg = ConnectionStormConfig {
+            connections: 256,
+            requests_per_connection: 2,
+            ..ConnectionStormConfig::default()
+        };
+        let report = run_connection_storm(Arc::clone(&engine), &cfg).unwrap();
+        assert_eq!(report.peak_open, 256);
+        assert_eq!(report.requests_total, 512);
+        assert!(report.requests_per_sec > 0.0);
+        let rendered = report.render();
+        assert!(rendered.contains("256 keep-alive conns"), "{rendered}");
+        // Conservation is enforced inside the run; spot-check the
+        // engine side once more from the outside.
+        assert_eq!(engine.hot.requests_live.get(), 512);
+        assert_eq!(engine.lake.lost_appends(), 0);
+    }
+}

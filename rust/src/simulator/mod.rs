@@ -8,9 +8,12 @@
 //! rates with zero manual control-plane calls, and the saturation
 //! ramp measuring `Engine::score` scaling across worker threads while
 //! cross-checking the lock-free observation plane against a
-//! sequential oracle.
+//! sequential oracle, and the connection storm holding thousands of
+//! concurrent keep-alive sockets against the event-driven ingress
+//! plane with exact end-to-end event conservation.
 
 pub mod cluster;
+pub mod connection_storm;
 pub mod drift_storm;
 pub mod multitenant;
 pub mod saturation;
@@ -19,6 +22,9 @@ pub mod workload;
 pub use cluster::{
     swap_storm, ClusterConfig, ClusterSim, LatencyModel, RolloutTrace, SwapStormConfig,
     SwapStormReport,
+};
+pub use connection_storm::{
+    run_connection_storm, ConnectionStormConfig, ConnectionStormReport,
 };
 pub use drift_storm::{run_drift_storm, DriftStormConfig, DriftStormReport};
 pub use multitenant::{run_batch_mix, BatchMixConfig, BatchMixReport};

@@ -281,6 +281,20 @@ pub fn parse(input: &str) -> Result<Json, JsonError> {
     Ok(v)
 }
 
+/// Parse exactly one JSON value starting at byte `start` of `bytes`
+/// (the caller has already positioned `start` on the value's first
+/// byte — no leading whitespace is skipped). Returns the value and
+/// the byte offset one past its end. Errors carry offsets relative to
+/// `bytes`, exactly as [`parse`] would report them — this is the
+/// reuse point for the incremental parser in `server::streamjson`,
+/// whose differential contract is byte-for-byte error equality with
+/// this module.
+pub(crate) fn parse_value_at(bytes: &[u8], start: usize) -> Result<(Json, usize), JsonError> {
+    let mut p = Parser { bytes, pos: start };
+    let v = p.value()?;
+    Ok((v, p.pos))
+}
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,

@@ -1,0 +1,342 @@
+//! Differential fuzz coverage for the streaming ingress plane
+//! (`cargo test -q --test ingress_fuzz`).
+//!
+//! The incremental batch parser (`muse::server::streamjson`) promises
+//! that chunking is *unobservable*: feeding a body byte-by-byte, in
+//! random slices, or whole must produce the same events in the same
+//! order, the same `"events"` shape, and — on rejection — the same
+//! typed error (`JsonError`) with the same message at the same byte
+//! offset as the buffered `util::json::parse`. These suites generate
+//! thousands of valid and near-valid (byte-mutated) bodies and check
+//! that promise against the buffered parser across chunk boundaries,
+//! then once more end-to-end over HTTP against a `streamBatch: false`
+//! twin server.
+//!
+//! A failure panics with the generated case's seed; replay with:
+//!
+//! ```text
+//! MUSE_MB_SEED=<base_seed> cargo test --test ingress_fuzz <suite> -- --nocapture
+//! ```
+//!
+//! (the per-case seed in the panic message pins the exact case), and
+//! CI uploads `target/model-based-seeds/*.txt` on failure.
+
+use muse::server::streamjson::{parse_chunked, BatchShape, StreamItem};
+use muse::testkit::harness;
+use muse::util::json::{parse, Json, JsonError};
+use muse::util::prop::Gen;
+
+// ---------------------------------------------------------------------
+// Body generators (ASCII-only so byte mutations stay valid UTF-8)
+// ---------------------------------------------------------------------
+
+fn ws(g: &mut Gen) -> String {
+    let n = g.usize(0..4);
+    (0..n)
+        .map(|_| *g.pick(&[' ', '\t', '\n', '\r']))
+        .collect()
+}
+
+fn gen_string(g: &mut Gen) -> String {
+    let n = g.usize(0..8);
+    let s: String = (0..n)
+        .map(|_| *g.pick(&['a', 'b', 'z', 'T', '0', '9', '_', '-', '.', ' ']))
+        .collect();
+    format!("\"{s}\"")
+}
+
+fn gen_number(g: &mut Gen) -> String {
+    match g.usize(0..4) {
+        0 => format!("{}", g.usize(0..1000)),
+        1 => format!("-{}", g.usize(0..100)),
+        2 => format!("{:.4}", g.f64(-10.0..10.0)),
+        _ => format!("{:.2}e{}", g.f64(0.0..9.0), g.usize(0..3)),
+    }
+}
+
+/// A random JSON value, depth-bounded.
+fn gen_value(g: &mut Gen, depth: usize) -> String {
+    let top = if depth == 0 { 5 } else { 7 };
+    match g.usize(0..top) {
+        0 => "null".to_string(),
+        1 => "true".to_string(),
+        2 => "false".to_string(),
+        3 => gen_number(g),
+        4 => gen_string(g),
+        5 => {
+            let n = g.usize(0..4);
+            let items: Vec<String> = (0..n).map(|_| gen_value(g, depth - 1)).collect();
+            format!("[{}{}]", ws(g), items.join(","))
+        }
+        _ => {
+            let n = g.usize(0..4);
+            let members: Vec<String> = (0..n)
+                .map(|_| format!("{}{}: {}", ws(g), gen_string(g), gen_value(g, depth - 1)))
+                .collect();
+            format!("{{{}{}}}", members.join(","), ws(g))
+        }
+    }
+}
+
+/// One `"events"` element: usually a score-payload-shaped object,
+/// sometimes an arbitrary value.
+fn gen_event(g: &mut Gen) -> String {
+    if g.bool(0.25) {
+        return gen_value(g, 2);
+    }
+    let feats: Vec<String> = (0..g.usize(0..6)).map(|_| gen_number(g)).collect();
+    let mut members = vec![
+        format!("\"tenant\": {}", gen_string(g)),
+        format!("\"features\": [{}]", feats.join(",")),
+    ];
+    if g.bool(0.3) {
+        members.push(format!("\"entity\": {}", gen_string(g)));
+    }
+    if g.bool(0.2) {
+        members.push(format!("{}: {}", gen_string(g), gen_value(g, 1)));
+    }
+    format!("{{{}{}}}", ws(g), members.join(","))
+}
+
+/// A batch body: usually a top-level object with an `"events"` member
+/// somewhere among decoys; sometimes shapeless (missing/duplicate
+/// `"events"`, non-array `"events"`, non-object top level).
+fn gen_body(g: &mut Gen) -> String {
+    if g.bool(0.08) {
+        return format!("{}{}{}", ws(g), gen_value(g, 2), ws(g));
+    }
+    let mut members: Vec<String> = Vec::new();
+    let decoys = g.usize(0..3);
+    for _ in 0..decoys {
+        members.push(format!("{}: {}", gen_string(g), gen_value(g, 2)));
+    }
+    let events_copies = match g.usize(0..10) {
+        0 => 0,          // missing events
+        1 | 2 => 2,      // duplicate key (last wins)
+        _ => 1,
+    };
+    for _ in 0..events_copies {
+        if g.bool(0.15) {
+            members.push(format!("\"events\": {}", gen_value(g, 1)));
+        } else {
+            let evs: Vec<String> = (0..g.usize(0..5)).map(|_| gen_event(g)).collect();
+            members.push(format!("\"events\": [{}{}]", ws(g), evs.join(",")));
+        }
+    }
+    // Shuffle member order (seeded).
+    for i in (1..members.len()).rev() {
+        members.swap(i, g.usize(0..i + 1));
+    }
+    let inner: Vec<String> = members
+        .iter()
+        .map(|m| format!("{}{m}{}", ws(g), ws(g)))
+        .collect();
+    format!("{}{{{}}}{}", ws(g), inner.join(","), ws(g))
+}
+
+/// Corrupt a valid body with 1..=3 ASCII byte edits (replace, insert
+/// or delete) — the near-valid corpus that exercises error paths.
+fn mutate(g: &mut Gen, body: &str) -> String {
+    const BYTES: &[u8] = b"{}[]:,\"\\e0x d.-";
+    let mut bytes = body.as_bytes().to_vec();
+    for _ in 0..g.usize(1..4) {
+        if bytes.is_empty() {
+            bytes.push(*g.pick(BYTES));
+            continue;
+        }
+        let at = g.usize(0..bytes.len());
+        match g.usize(0..3) {
+            0 => bytes[at] = *g.pick(BYTES),
+            1 => bytes.insert(at, *g.pick(BYTES)),
+            _ => {
+                bytes.remove(at);
+            }
+        }
+    }
+    String::from_utf8(bytes).expect("ASCII edits keep UTF-8 valid")
+}
+
+// ---------------------------------------------------------------------
+// Differential core
+// ---------------------------------------------------------------------
+
+/// The buffered path's view of a body (shared reference semantics).
+fn reference(body: &str) -> Result<(Vec<Json>, BatchShape), JsonError> {
+    let v = parse(body)?;
+    let events = v.get("events");
+    let shape = BatchShape {
+        events_seen: events.is_some(),
+        events_is_array: events.map(|e| e.as_arr().is_some()).unwrap_or(false),
+    };
+    let evs = events
+        .and_then(Json::as_arr)
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    Ok((evs, shape))
+}
+
+/// The streaming parser's view under a fixed chunking pattern.
+fn streamed(body: &str, chunks: &[usize]) -> Result<(Vec<Json>, BatchShape), JsonError> {
+    let mut events = Vec::new();
+    let mut sink = |item: StreamItem| match item {
+        StreamItem::Event(v) => events.push(v),
+        StreamItem::EventsRestart => events.clear(),
+    };
+    let shape = parse_chunked(body.as_bytes(), chunks, &mut sink)?;
+    Ok((events, shape))
+}
+
+/// Assert `streamed(body, chunks)` is indistinguishable from
+/// `reference(body)` — same events, same shape, or the same
+/// `JsonError` (message *and* byte offset).
+fn assert_differential(body: &str, chunks: &[usize]) -> Result<(), String> {
+    let want = reference(body);
+    let got = streamed(body, chunks);
+    match (&want, &got) {
+        (Ok((wev, wsh)), Ok((gev, gsh))) => {
+            if wev != gev {
+                return Err(format!(
+                    "event divergence under chunks {chunks:?} for {body:?}: \
+                     buffered saw {} events, streamed {}",
+                    wev.len(),
+                    gev.len()
+                ));
+            }
+            if wsh != gsh {
+                return Err(format!(
+                    "shape divergence under chunks {chunks:?} for {body:?}: \
+                     buffered {wsh:?}, streamed {gsh:?}"
+                ));
+            }
+        }
+        (Err(we), Err(ge)) => {
+            if we != ge {
+                return Err(format!(
+                    "error divergence under chunks {chunks:?} for {body:?}: \
+                     buffered '{we}' (offset {}), streamed '{ge}' (offset {})",
+                    we.offset, ge.offset
+                ));
+            }
+        }
+        _ => {
+            return Err(format!(
+                "accept/reject divergence under chunks {chunks:?} for {body:?}: \
+                 buffered {:?}, streamed {:?}",
+                want.as_ref().map(|_| "accepted").map_err(|e| e.to_string()),
+                got.as_ref().map(|_| "accepted").map_err(|e| e.to_string()),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Run the differential across the chunkings that matter: whole-body,
+/// byte-by-byte, every two-chunk split (all byte boundaries), and a
+/// few seeded irregular patterns.
+fn assert_chunk_invariant(g: &mut Gen, body: &str) -> Result<(), String> {
+    assert_differential(body, &[])?;
+    assert_differential(body, &[1])?;
+    for split in 1..body.len() {
+        assert_differential(body, &[split, body.len() - split])?;
+    }
+    for _ in 0..4 {
+        let pattern: Vec<usize> = (0..g.usize(1..5)).map(|_| g.usize(1..9)).collect();
+        assert_differential(body, &pattern)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Suites
+// ---------------------------------------------------------------------
+
+/// Valid-ish generated bodies: every chunking agrees with the
+/// buffered parser event-for-event (including duplicate-`"events"`
+/// restarts and non-object top levels).
+#[test]
+fn fuzz_generated_bodies_parse_chunk_invariantly() {
+    harness::check_logged(
+        "fuzz_generated_bodies_parse_chunk_invariantly",
+        harness::base_seed(0x4947_A001),
+        60,
+        |g| {
+            let body = gen_body(g);
+            assert_chunk_invariant(g, &body)
+        },
+    );
+}
+
+/// Byte-mutated (near-valid) bodies: rejections must carry the same
+/// message at the same byte offset no matter where the chunk
+/// boundaries fall.
+#[test]
+fn fuzz_mutated_bodies_reject_identically_at_every_boundary() {
+    harness::check_logged(
+        "fuzz_mutated_bodies_reject_identically_at_every_boundary",
+        harness::base_seed(0x4947_A002),
+        60,
+        |g| {
+            let body = mutate(g, &gen_body(g));
+            assert_chunk_invariant(g, &body)
+        },
+    );
+}
+
+/// End-to-end twin-server differential: the same generated bodies go
+/// through a streaming server and a `streamBatch: false` buffered
+/// server; status line and body must match byte-for-byte.
+#[test]
+fn fuzz_http_streamed_vs_buffered_servers_agree_bytewise() {
+    use muse::config::MuseConfig;
+    use muse::coordinator::Engine;
+    use muse::runtime::{ModelPool, SimArtifacts};
+    use muse::server::http::http_request;
+    use std::sync::Arc;
+
+    const YAML: &str = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s3]
+  quantile: identity
+"#;
+    let fix = SimArtifacts::in_temp().expect("sim fixture");
+    let spawn = |extra: &str| {
+        let pool = Arc::new(ModelPool::new(fix.manifest().unwrap()));
+        let yaml = format!("{YAML}{extra}");
+        let engine =
+            Arc::new(Engine::build(&MuseConfig::from_yaml(&yaml).unwrap(), pool).unwrap());
+        muse::server::spawn_server(engine, "127.0.0.1:0", 2, 0)
+            .unwrap()
+            .0
+    };
+    let streaming = spawn("");
+    let buffered = spawn("server:\n  streamBatch: false\n");
+
+    harness::check_logged(
+        "fuzz_http_streamed_vs_buffered_servers_agree_bytewise",
+        harness::base_seed(0x4947_A003),
+        40,
+        |g| {
+            let body = if g.bool(0.5) {
+                gen_body(g)
+            } else {
+                mutate(g, &gen_body(g))
+            };
+            let a = http_request(&streaming, "POST", "/v1/score/batch", &body)
+                .map_err(|e| format!("streaming request failed: {e}"))?;
+            let b = http_request(&buffered, "POST", "/v1/score/batch", &body)
+                .map_err(|e| format!("buffered request failed: {e}"))?;
+            if a != b {
+                return Err(format!(
+                    "HTTP divergence for body {body:?}: streaming {a:?}, buffered {b:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
