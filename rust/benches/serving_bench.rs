@@ -9,7 +9,7 @@
 //! Numbers are recorded in EXPERIMENTS.md.
 
 use muse::config::{Intent, MuseConfig};
-use muse::coordinator::{ControlPlane, Engine, ScoreRequest};
+use muse::coordinator::{ControlPlane, Engine, ScoreRequest, TenantInterner};
 use muse::datalake::DataLake;
 use muse::lifecycle::{QuantileSketch, ScoreFeed};
 use muse::metrics::Counters;
@@ -149,6 +149,147 @@ fn bench_fused_vs_staged() {
             );
         }
     }
+}
+
+/// Scoring kernels: each lane-parallel kernel against the scalar
+/// path it must stay bitwise-equal to, plus the tenant-probe cost the
+/// handle interning removed. Pure transforms — always runs. The
+/// equivalence itself is pinned by property tests
+/// (`transforms::quantile::tests`, `transforms::pipeline::tests`);
+/// this section records only the speed side of the contract.
+fn bench_scoring_kernels() {
+    section("scoring kernels: lane-parallel (8-wide) vs scalar");
+    let n = 4096usize;
+    let mut rng = muse::util::rng::Rng::new(41);
+    let base: Vec<f64> = (0..n).map(|_| rng.f64() * 1.4 - 0.2).collect();
+
+    // PWL quantile lookup, both grid regimes: small grids take the
+    // counting scan, large grids the lane-interleaved CMOV search.
+    for &(n_points, regime) in &[(33usize, "counting scan"), (1025usize, "CMOV search")] {
+        let src: Vec<f64> = (0..n_points)
+            .map(|i| (i as f64 / (n_points - 1) as f64).powi(2))
+            .collect();
+        let refq: Vec<f64> = (0..n_points)
+            .map(|i| i as f64 / (n_points - 1) as f64)
+            .collect();
+        let map = QuantileMap::new(src, refq).unwrap();
+        let mut sink = 0.0f64;
+        let r_scalar = bench(
+            &format!("T^Q scalar apply      ({n_points} knots)"),
+            5,
+            500,
+            || {
+                for &s in &base {
+                    sink += map.apply(s);
+                }
+            },
+        );
+        println!("{}   ({:.1} ns/event)", r_scalar.report(), r_scalar.mean_ns / n as f64);
+        let mut buf = vec![0.0f64; n];
+        let r_lanes = bench(
+            &format!("T^Q apply_batch 8-wide ({n_points} knots, {regime})"),
+            5,
+            500,
+            || {
+                buf.copy_from_slice(&base);
+                map.apply_batch(&mut buf);
+                sink += buf[n - 1];
+            },
+        );
+        std::hint::black_box(sink);
+        println!(
+            "{}   ({:.1} ns/event, {:.2}x vs scalar)",
+            r_lanes.report(),
+            r_lanes.mean_ns / n as f64,
+            r_scalar.mean_ns / r_lanes.mean_ns
+        );
+    }
+
+    // Stage 1+2 (T^C + A): per-event raw_one vs the lane-parallel
+    // raw_into kernel, k=3 with a mixed Some/None correction row.
+    let k = 3usize;
+    let corrections: Vec<Option<PosteriorCorrection>> = (0..k)
+        .map(|j| {
+            if j == k - 1 {
+                None
+            } else {
+                Some(PosteriorCorrection::new(0.1 + 0.2 * j as f64).unwrap())
+            }
+        })
+        .collect();
+    let map = QuantileMap::identity(33).unwrap().shared();
+    let spec = PipelineSpec::new(
+        corrections,
+        Aggregation::weighted(vec![1.0, 1.0, 2.0]).unwrap(),
+        map,
+    )
+    .unwrap();
+    let stages = Arc::clone(spec.compile().unwrap().stages());
+    let mut scratch = PipelineScratch::default();
+    scratch.begin(k, n);
+    let mut event_major = vec![0.0f32; n * k];
+    for j in 0..k {
+        let lane = scratch.lane_mut(j);
+        for i in 0..n {
+            let s = rng.f64() as f32;
+            lane[i] = s;
+            event_major[i * k + j] = s;
+        }
+    }
+    let mut sink = 0.0f64;
+    let r_scalar = bench("T^C+A raw_one per event (k=3)", 5, 500, || {
+        for i in 0..n {
+            sink += stages.raw_one(&event_major[i * k..(i + 1) * k]);
+        }
+    });
+    println!("{}   ({:.1} ns/event)", r_scalar.report(), r_scalar.mean_ns / n as f64);
+    let mut raw = Vec::with_capacity(n);
+    let r_lanes = bench("T^C+A raw_into 8-wide   (k=3)", 5, 500, || {
+        raw.clear();
+        stages.raw_into(&scratch, &mut raw);
+        sink += raw[n - 1];
+    });
+    std::hint::black_box(sink);
+    println!(
+        "{}   ({:.1} ns/event, {:.2}x vs scalar)",
+        r_lanes.report(),
+        r_lanes.mean_ns / n as f64,
+        r_scalar.mean_ns / r_lanes.mean_ns
+    );
+
+    // Tenant probe: the seed hashed the tenant string per event
+    // (HashMap probe in the batcher, the counters, the admission
+    // gate); the interner resolves once at the ingress edge and
+    // everything downstream is a dense-vector index.
+    let interner = TenantInterner::new();
+    let by_handle: Vec<u8> = (0..64)
+        .map(|i| {
+            let h = interner.resolve(&format!("tenant-{i:03}"));
+            (h.index() % 7) as u8
+        })
+        .collect();
+    let names: Vec<String> = (0..64).map(|i| format!("tenant-{i:03}")).collect();
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    let r_str = bench("tenant probe by string (hash per event)", 2_000, 500_000, || {
+        let h = interner.lookup(&names[i % names.len()]).unwrap();
+        acc += by_handle[h.index()] as u64;
+        i += 1;
+    });
+    println!("{}   ({:.1} ns/probe)", r_str.report(), r_str.mean_ns);
+    let handles: Vec<_> = names.iter().map(|n| interner.resolve(n)).collect();
+    let mut j = 0usize;
+    let r_handle = bench("tenant probe by handle (dense index)", 2_000, 500_000, || {
+        acc += by_handle[handles[j % handles.len()].index()] as u64;
+        j += 1;
+    });
+    std::hint::black_box(acc);
+    println!(
+        "{}   ({:.1} ns/probe, {:.2}x vs string)",
+        r_handle.report(),
+        r_handle.mean_ns,
+        r_str.mean_ns / r_handle.mean_ns
+    );
 }
 
 /// Lifecycle sketch-feed overhead. Two layers:
@@ -502,6 +643,7 @@ server:
 
 fn main() {
     bench_fused_vs_staged();
+    bench_scoring_kernels();
     bench_lake_sharded_vs_global();
     bench_hot_counters();
     bench_lifecycle_overhead();

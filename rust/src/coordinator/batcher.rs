@@ -14,9 +14,11 @@
 //! node allocation for the queue send, and a mutex acquisition for the
 //! stats. This one pays none of them:
 //!
-//! * the caller pins a `Submission` on its own stack — features and
-//!   tenant are **borrowed** (`&[f32]` / `&str`), valid because the
-//!   caller blocks until the worker publishes the reply;
+//! * the caller pins a `Submission` on its own stack — features are
+//!   **borrowed** (`&[f32]`), valid because the caller blocks until
+//!   the worker publishes the reply, and the tenant is a `Copy`
+//!   [`TenantHandle`] interned at the ingress edge (see
+//!   `coordinator::tenants`) — no string crosses the queue at all;
 //! * the submission is linked into an intrusive Vyukov-style MPSC
 //!   queue: a push is one `swap` + one `store`, wait-free, no heap
 //!   node;
@@ -51,6 +53,7 @@
 //! (`Predictor::score_raw`).
 
 use super::predictor::Predictor;
+use super::tenants::TenantHandle;
 use crate::transforms::{CompiledPipeline, PipelineScratch};
 use anyhow::{anyhow, Result};
 use std::cell::UnsafeCell;
@@ -74,9 +77,9 @@ struct Submission {
     /// Borrowed feature slice (valid until `state == DONE`).
     features: *const f32,
     features_len: usize,
-    /// Borrowed tenant name (valid until `state == DONE`).
-    tenant: *const u8,
-    tenant_len: usize,
+    /// Interned tenant handle — `Copy`, so nothing is borrowed and no
+    /// string is hashed anywhere past this point.
+    tenant: TenantHandle,
     /// The submitting thread, unparked after the reply is published.
     waiter: Thread,
     state: AtomicU32,
@@ -86,13 +89,12 @@ struct Submission {
 }
 
 impl Submission {
-    fn new(features: &[f32], tenant: &str) -> Submission {
+    fn new(features: &[f32], tenant: TenantHandle) -> Submission {
         Submission {
             next: AtomicPtr::new(ptr::null_mut()),
             features: features.as_ptr(),
             features_len: features.len(),
-            tenant: tenant.as_ptr(),
-            tenant_len: tenant.len(),
+            tenant,
             waiter: thread::current(),
             state: AtomicU32::new(PENDING),
             result: UnsafeCell::new(None),
@@ -101,7 +103,7 @@ impl Submission {
 
     /// Queue stub node (never scored, never flagged).
     fn stub() -> Submission {
-        Submission::new(&[], "")
+        Submission::new(&[], TenantHandle::INVALID)
     }
 
     /// The borrowed feature slice.
@@ -109,13 +111,6 @@ impl Submission {
     /// SAFETY (caller): only before this submission is flagged `DONE`.
     unsafe fn features(&self) -> &[f32] {
         std::slice::from_raw_parts(self.features, self.features_len)
-    }
-
-    /// The borrowed tenant name.
-    ///
-    /// SAFETY (caller): only before this submission is flagged `DONE`.
-    unsafe fn tenant(&self) -> &str {
-        std::str::from_utf8_unchecked(std::slice::from_raw_parts(self.tenant, self.tenant_len))
     }
 }
 
@@ -269,10 +264,12 @@ impl Batcher {
     }
 
     /// Submit one event; blocks until its batch completes. The
-    /// features and tenant are borrowed for the duration of the call —
-    /// the submit path performs **zero** heap allocations and **zero**
-    /// lock acquisitions (one queue swap, one state-flag wait).
-    pub fn score(&self, features: &[f32], tenant: &str) -> Result<(f64, f64)> {
+    /// features are borrowed for the duration of the call and the
+    /// tenant is a `Copy` handle (interned once at the ingress edge) —
+    /// the submit path performs **zero** heap allocations, **zero**
+    /// string hashes and **zero** lock acquisitions (one queue swap,
+    /// one state-flag wait).
+    pub fn score(&self, features: &[f32], tenant: TenantHandle) -> Result<(f64, f64)> {
         // Register before the shutdown check (Dekker with the worker's
         // drain loop): either we observe shutdown here, or the worker
         // observes inflight > 0 and keeps draining until we are
@@ -502,16 +499,18 @@ fn process_batch(
                 // tenant in the batch (linear scan over the handful of
                 // live groups) — zero per-event hashmap probes.
                 let quantiles = predictor.quantile_table();
-                let mut tenants: Vec<&str> = Vec::new();
+                let mut tenants: Vec<TenantHandle> = Vec::new();
                 let mut pipes: Vec<&Arc<CompiledPipeline>> = Vec::new();
                 for (&sub, &r) in batch.iter().zip(bufs.raw.iter()) {
-                    // SAFETY: not yet flagged; borrow valid.
-                    let tenant = unsafe { (*sub).tenant() };
+                    // SAFETY: not yet flagged (Copy read of the handle).
+                    let tenant = unsafe { (*sub).tenant };
+                    // Integer compares over the handful of live groups;
+                    // pipeline resolution itself is an array index.
                     let g = match tenants.iter().position(|t| *t == tenant) {
                         Some(g) => g,
                         None => {
                             tenants.push(tenant);
-                            pipes.push(quantiles.pipeline_for(tenant));
+                            pipes.push(quantiles.pipeline_for_handle(tenant));
                             tenants.len() - 1
                         }
                     };
@@ -593,12 +592,13 @@ mod tests {
             64,
             Duration::from_millis(5),
         ));
+        let t = p.tenants().resolve("t");
         let handles: Vec<_> = (0..32)
             .map(|i| {
                 let b = Arc::clone(&b);
                 thread::spawn(move || {
                     let feats = vec![0.01 * i as f32; d];
-                    b.score(&feats, "t").unwrap()
+                    b.score(&feats, t).unwrap()
                 })
             })
             .collect();
@@ -622,10 +622,11 @@ mod tests {
         let Some(p) = predictor() else { return };
         let d = p.feature_dim();
         let b = Batcher::new(Arc::clone(&p), 16, Duration::from_millis(1));
+        let t = p.tenants().resolve("t");
         let mut rng = crate::util::rng::Rng::new(9);
         for _ in 0..10 {
             let feats: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-            let (fin, raw) = b.score(&feats, "t").unwrap();
+            let (fin, raw) = b.score(&feats, t).unwrap();
             let direct = p.score(&feats, 1, "t").unwrap();
             assert!((fin - direct.scores[0]).abs() < 1e-9);
             assert!((raw - direct.raw[0]).abs() < 1e-9);
@@ -641,10 +642,12 @@ mod tests {
             QuantileMap::new(vec![0.0, 1.0], vec![0.9, 1.0]).unwrap().shared(),
         );
         let b = Arc::new(Batcher::new(Arc::clone(&p), 8, Duration::from_millis(20)));
+        let vip_h = p.tenants().resolve("vip");
+        let normal_h = p.tenants().resolve("normal");
         let b1 = Arc::clone(&b);
-        let h1 = thread::spawn(move || b1.score(&vec![0.0; d], "vip").unwrap());
+        let h1 = thread::spawn(move || b1.score(&vec![0.0; d], vip_h).unwrap());
         let b2 = Arc::clone(&b);
-        let h2 = thread::spawn(move || b2.score(&vec![0.0; d], "normal").unwrap());
+        let h2 = thread::spawn(move || b2.score(&vec![0.0; d], normal_h).unwrap());
         let (vip, _) = h1.join().unwrap();
         let (normal, _) = h2.join().unwrap();
         assert!(vip >= 0.9, "vip transform not applied: {vip}");
@@ -655,7 +658,7 @@ mod tests {
     fn bad_feature_dim_is_rejected() {
         let Some(p) = predictor() else { return };
         let b = Batcher::new(Arc::clone(&p), 4, Duration::from_millis(1));
-        assert!(b.score(&[0.0; 3], "t").is_err());
+        assert!(b.score(&[0.0; 3], p.tenants().resolve("t")).is_err());
     }
 
     #[test]
@@ -663,12 +666,13 @@ mod tests {
         let Some(p) = predictor() else { return };
         let d = p.feature_dim();
         let b = Batcher::new(Arc::clone(&p), 4, Duration::from_millis(1));
-        b.score(&vec![0.0; d], "t").unwrap();
+        let t = p.tenants().resolve("t");
+        b.score(&vec![0.0; d], t).unwrap();
         b.shutdown();
         // The worker exits; a stale-snapshot caller gets an error,
         // never a hang. (Exact message depends on where the race
         // lands: rejected at submit or flagged by the drain.)
-        let err = b.score(&vec![0.0; d], "t").unwrap_err();
+        let err = b.score(&vec![0.0; d], t).unwrap_err();
         assert!(err.to_string().contains("batcher"), "{err}");
     }
 
@@ -678,6 +682,7 @@ mod tests {
         // clean error) — the in-flight handshake, hammered.
         let Some(p) = predictor() else { return };
         let d = p.feature_dim();
+        let t = p.tenants().resolve("t");
         for round in 0..8 {
             let b = Arc::new(Batcher::new(
                 Arc::clone(&p),
@@ -691,7 +696,7 @@ mod tests {
                         let feats = vec![0.01 * i as f32; d];
                         // Result may be Ok or a shutdown error; it
                         // must never hang.
-                        let _ = b.score(&feats, "t");
+                        let _ = b.score(&feats, t);
                     })
                 })
                 .collect();
@@ -713,7 +718,7 @@ mod tests {
         // A single request must not wait for a full batch: total time
         // stays near max_delay + inference, far under a second.
         let t0 = Instant::now();
-        b.score(&vec![0.0; d], "t").unwrap();
+        b.score(&vec![0.0; d], p.tenants().resolve("t")).unwrap();
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
 }

@@ -18,6 +18,7 @@ use super::predictor::Predictor;
 use super::registry::PredictorRegistry;
 use super::router::{Resolution, Router};
 use super::snapshot::EngineSnapshot;
+use super::tenants::{TenantHandle, TenantInterner};
 use crate::config::{Intent, MuseConfig, QuantileMode};
 use crate::datalake::DataLake;
 use crate::featurestore::FeatureStore;
@@ -140,6 +141,14 @@ pub struct Engine {
     /// drift scoring and the shadow→promote loop run off-path in
     /// [`LifecycleHub::tick`].
     pub lifecycle: Option<Arc<LifecycleHub>>,
+    /// The engine-wide tenant interner: requests resolve their tenant
+    /// name to a dense [`TenantHandle`] once, at the ingress edge, and
+    /// every downstream tenant-keyed structure (batcher submissions,
+    /// quantile pipelines, lake pair slots, event counters, lifecycle
+    /// feeds, admission priorities) indexes by that handle. Shared
+    /// with the registry (predictor quantile tables) and the server's
+    /// admission controller.
+    pub tenants: Arc<TenantInterner>,
 }
 
 impl Engine {
@@ -150,7 +159,8 @@ impl Engine {
     pub fn build(config: &MuseConfig, pool: Arc<ModelPool>) -> Result<Engine> {
         config.validate()?;
         let quantile_points = pool.manifest().quantile_points;
-        let registry = PredictorRegistry::new(pool);
+        let tenants = Arc::new(TenantInterner::new());
+        let registry = PredictorRegistry::with_interner(pool, Arc::clone(&tenants));
         for pc in &config.predictors {
             let initial: Arc<QuantileMap> = match pc.quantile_mode {
                 QuantileMode::Identity | QuantileMode::Custom | QuantileMode::Default => {
@@ -202,6 +212,7 @@ impl Engine {
             tenant_events: Counters::new(),
             quantile_points,
             lifecycle,
+            tenants,
         })
     }
 
@@ -279,8 +290,11 @@ impl Engine {
     /// anywhere on the path — routing, enrichment, batcher submit,
     /// lake append, lifecycle feed, latency record and counters are
     /// all wait-free — and zero heap allocations outside enrichment
-    /// and inference (the batcher borrows the enriched features and
-    /// the tenant; the lake and response share interned names).
+    /// and inference (the batcher borrows the enriched features). The
+    /// tenant name is hashed exactly once, at the interner below;
+    /// everything after that point — batcher submit, quantile
+    /// pipeline, lake pair slot, lifecycle feed — indexes by the dense
+    /// [`TenantHandle`] through the entry's cached [`TenantRoute`].
     pub fn score(&self, req: &ScoreRequest) -> Result<ScoreResponse> {
         let t0 = Instant::now();
         let snap = self.load_snapshot();
@@ -288,21 +302,29 @@ impl Engine {
         let entry = snap.live_entry(resolution.rule_index).ok_or_else(|| {
             anyhow!("routed to undeployed predictor '{}'", resolution.live)
         })?;
+        // The ingress edge: the request's one tenant-string hash.
+        let tenant = self.tenants.resolve(&req.intent.tenant);
         let enriched =
             self.features
                 .enrich(&req.entity, &req.features, entry.predictor.feature_dim())?;
         // Hot path goes through the per-predictor dynamic batcher:
         // concurrent requests share one PJRT call; T^Q stays
         // per-tenant (applied post-aggregation inside the batcher).
-        // The submit borrows features + tenant — no reply channel, no
-        // clone (coordinator::batcher module docs).
-        let (score, raw) = entry.batcher.score(&enriched, &req.intent.tenant)?;
-        self.lake
-            .append(&req.intent.tenant, &entry.predictor.name, score, raw, false);
-        // Feed the lifecycle sketches: wait-free table load + one
-        // atomic ring append — no lock joins the hot path here.
-        if let Some(hub) = &self.lifecycle {
-            hub.record(&entry.predictor.name, &req.intent.tenant, raw);
+        // The submit borrows features and carries the Copy handle — no
+        // reply channel, no clone (coordinator::batcher module docs).
+        let (score, raw) = entry.batcher.score(&enriched, tenant)?;
+        // Commit side effects through the cached per-(predictor,
+        // tenant) route: lake append and lifecycle feed are direct
+        // slot/ring operations, no string re-hashing.
+        let route = entry.route(
+            tenant,
+            &req.intent.tenant,
+            &self.lake,
+            self.lifecycle.as_deref(),
+        );
+        self.lake.append_ref(&route.pair, score, raw, false);
+        if let Some(feed) = &route.feed {
+            feed.push(raw);
         }
 
         // Mirror to shadows off the hot path.
@@ -311,6 +333,7 @@ impl Engine {
             self.dispatch_shadows(
                 &snap,
                 &resolution,
+                tenant,
                 &req.intent.tenant,
                 &req.entity,
                 &req.features,
@@ -385,6 +408,7 @@ impl Engine {
             raw: Vec<f64>,
             matrix: Vec<f32>,
             dim: usize,
+            tenant: TenantHandle,
         }
         let mut scratch = PipelineScratch::default();
         let mut results: Vec<Scored> = Vec::with_capacity(groups.len());
@@ -394,7 +418,10 @@ impl Engine {
             })?;
             let d = entry.predictor.feature_dim();
             let n = g.indices.len();
-            let tenant = &reqs[g.first].intent.tenant;
+            // One tenant-string hash per (batch, tenant) group; the
+            // pipeline probe below and every phase-2 side effect index
+            // by the handle.
+            let tenant = self.tenants.resolve(&reqs[g.first].intent.tenant);
             let mut matrix: Vec<f32> = Vec::with_capacity(n * d);
             for &i in &g.indices {
                 let enriched = self
@@ -403,7 +430,7 @@ impl Engine {
                 matrix.extend_from_slice(&enriched);
             }
             let (mut raw, mut scores) = (Vec::new(), Vec::new());
-            entry.predictor.score_batch_for_tenant(
+            entry.predictor.score_batch_for_tenant_handle(
                 &matrix,
                 n,
                 tenant,
@@ -416,6 +443,7 @@ impl Engine {
                 raw,
                 matrix,
                 dim: d,
+                tenant,
             });
         }
 
@@ -427,12 +455,23 @@ impl Engine {
                 .live_entry(g.resolution.rule_index)
                 .expect("resolved in phase 1 against the same snapshot");
             let n = g.indices.len();
-            let tenant = &reqs[g.first].intent.tenant;
+            let tenant_name = &reqs[g.first].intent.tenant;
+            // One cached route per (batch, tenant) group: the lake
+            // append, the per-tenant counter and the lifecycle feed
+            // are slot/atomic/ring operations off the handle.
+            let route = entry.route(
+                scored.tenant,
+                tenant_name,
+                &self.lake,
+                self.lifecycle.as_deref(),
+            );
             self.lake
-                .append_batch(tenant, &entry.predictor.name, &scored.scores, &scored.raw, false);
-            self.tenant_events.add(tenant, n as u64);
-            if let Some(hub) = &self.lifecycle {
-                hub.record_batch(&entry.predictor.name, tenant, &scored.raw);
+                .append_batch_ref(&route.pair, &scored.scores, &scored.raw, false);
+            route.counter(&self.tenant_events).add(n as u64);
+            if let Some(feed) = &route.feed {
+                for &r in &scored.raw {
+                    feed.push(r);
+                }
             }
 
             let shadow_count = g.resolution.shadows.len();
@@ -442,7 +481,8 @@ impl Engine {
                     &g.resolution,
                     &g.indices,
                     reqs,
-                    tenant,
+                    scored.tenant,
+                    tenant_name,
                     &scored.matrix,
                     scored.dim,
                 );
@@ -468,7 +508,8 @@ impl Engine {
         &self,
         snap: &EngineSnapshot,
         resolution: &Resolution,
-        tenant: &str,
+        tenant: TenantHandle,
+        tenant_name: &str,
         entity: &str,
         payload: &[f32],
     ) {
@@ -496,13 +537,16 @@ impl Engine {
             // they go through the same dynamic batcher — unbatched
             // shadow calls on a wide ensemble would otherwise starve
             // the live path (EXPERIMENTS.md "Perf log", step 3).
+            // The closure captures the Copy handle and the shadow
+            // entry's cached route — no tenant `String` clone, no
+            // predictor-name clone, no string hashing on the pool
+            // thread.
             let batcher: Arc<Batcher> = Arc::clone(&entry.batcher);
             let lake = Arc::clone(&self.lake);
-            let tenant = tenant.to_string();
-            let name = entry.predictor.name.clone();
+            let route = entry.route(tenant, tenant_name, &self.lake, self.lifecycle.as_deref());
             self.shadow_pool.execute(move || {
-                if let Ok((score, raw)) = batcher.score(&enriched, &tenant) {
-                    lake.append(&tenant, &name, score, raw, true);
+                if let Ok((score, raw)) = batcher.score(&enriched, tenant) {
+                    lake.append_ref(&route.pair, score, raw, true);
                 }
             });
         }
@@ -525,7 +569,8 @@ impl Engine {
         resolution: &Resolution,
         indices: &[usize],
         reqs: &[ScoreRequest],
-        tenant: &str,
+        tenant: TenantHandle,
+        tenant_name: &str,
         live_matrix: &[f32],
         live_dim: usize,
     ) {
@@ -556,24 +601,26 @@ impl Engine {
                 }
                 m
             };
+            // Copy handle + cached route into the closure — no tenant
+            // `String` clone crosses to the pool thread.
             let predictor = Arc::clone(&entry.predictor);
             let lake = Arc::clone(&self.lake);
-            let tenant = tenant.to_string();
+            let route = entry.route(tenant, tenant_name, &self.lake, self.lifecycle.as_deref());
             self.shadow_pool.execute(move || {
                 let mut scratch = PipelineScratch::default();
                 let (mut raw, mut scores) = (Vec::new(), Vec::new());
                 let ok = predictor
-                    .score_batch_for_tenant(
+                    .score_batch_for_tenant_handle(
                         &matrix,
                         n,
-                        &tenant,
+                        tenant,
                         &mut scratch,
                         &mut raw,
                         &mut scores,
                     )
                     .is_ok();
                 if ok {
-                    lake.append_batch(&tenant, &predictor.name, &scores, &raw, true);
+                    lake.append_batch_ref(&route.pair, &scores, &raw, true);
                 }
             });
         }
@@ -818,6 +865,32 @@ server:
         assert_eq!(engine.batch_latency.count(), 1);
         // bank1's shadow (p2) mirrored the whole sub-batch once per path.
         assert_eq!(engine.lake.raw_scores("bank1", "p2").len(), 8);
+    }
+
+    #[test]
+    fn single_event_path_interns_no_tenant_event_keys() {
+        // Route building is shared by the single-event, batch and
+        // shadow paths, but only the batch path counts scored_events —
+        // a single-event score must not leave a zero-count key behind
+        // (the verification harness checks full-map equality of
+        // `tenant_events` against the oracle).
+        let Some(engine) = engine() else { return };
+        let d = engine.predictor("p1").unwrap().feature_dim();
+        engine.score(&req("bank1", d, 77)).unwrap();
+        engine.drain_shadows();
+        assert!(
+            engine.tenant_events.snapshot().is_empty(),
+            "single-event path leaked scored_events keys: {:?}",
+            engine.tenant_events.snapshot()
+        );
+        // The route itself is cached: a second resolution for the same
+        // tenant returns the same Arc (warm path, no rebuild).
+        let snap = engine.load_snapshot();
+        let entry = snap.entry("p1").unwrap();
+        let h = engine.tenants.resolve("bank1");
+        let a = entry.route(h, "bank1", &engine.lake, engine.lifecycle.as_deref());
+        let b = entry.route(h, "bank1", &engine.lake, engine.lifecycle.as_deref());
+        assert!(Arc::ptr_eq(&a, &b), "warm route must be reused, not rebuilt");
     }
 
     #[test]

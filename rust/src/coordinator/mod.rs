@@ -10,6 +10,7 @@ pub mod predictor;
 pub mod registry;
 pub mod router;
 pub mod snapshot;
+pub mod tenants;
 pub mod warmup;
 
 pub use batcher::{Batcher, BatcherStats};
@@ -18,5 +19,6 @@ pub use engine::{Engine, HotCounters, ScoreRequest, ScoreResponse};
 pub use predictor::{ExpertSlot, Predictor, QuantileTable, ScoreBatch};
 pub use registry::{PredictorRegistry, RegistryStats};
 pub use router::{Resolution, Router};
-pub use snapshot::{EngineSnapshot, PredictorEntry};
+pub use snapshot::{EngineSnapshot, PredictorEntry, TenantRoute};
+pub use tenants::{TenantHandle, TenantInterner};
 pub use warmup::{warm_up, WarmupReport};

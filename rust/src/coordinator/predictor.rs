@@ -13,6 +13,7 @@
 //! (no locks per event or per batch) while the control plane promotes
 //! new transformations copy-on-write with zero downtime.
 
+use super::tenants::{TenantHandle, TenantInterner};
 use crate::runtime::ModelHandle;
 use crate::transforms::{
     Aggregation, CompiledPipeline, CompiledStages, PipelineScratch, PosteriorCorrection,
@@ -51,6 +52,14 @@ pub struct QuantileTable {
     tenants: HashMap<String, Arc<QuantileMap>>,
     default_pipeline: Arc<CompiledPipeline>,
     tenant_pipelines: HashMap<String, Arc<CompiledPipeline>>,
+    /// Override pipelines indexed by [`TenantHandle`], built at
+    /// publication time by resolving each override tenant through the
+    /// predictor's interner. `None` slots (and out-of-range handles —
+    /// tenants interned after this table was published) fall back to
+    /// the default pipeline, which is exactly the no-override
+    /// semantics; installing an override republishes the table, so a
+    /// covered handle can never see a stale `None`.
+    by_handle: Vec<Option<Arc<CompiledPipeline>>>,
 }
 
 impl QuantileTable {
@@ -58,8 +67,9 @@ impl QuantileTable {
         stages: &Arc<CompiledStages>,
         default: Arc<QuantileMap>,
         tenants: HashMap<String, Arc<QuantileMap>>,
+        interner: &TenantInterner,
     ) -> QuantileTable {
-        let tenant_pipelines = tenants
+        let tenant_pipelines: HashMap<String, Arc<CompiledPipeline>> = tenants
             .iter()
             .map(|(t, m)| {
                 (
@@ -68,6 +78,14 @@ impl QuantileTable {
                 )
             })
             .collect();
+        let mut by_handle: Vec<Option<Arc<CompiledPipeline>>> = Vec::new();
+        for (t, p) in &tenant_pipelines {
+            let idx = interner.resolve(t).index();
+            if by_handle.len() <= idx {
+                by_handle.resize(idx + 1, None);
+            }
+            by_handle[idx] = Some(Arc::clone(p));
+        }
         QuantileTable {
             default_pipeline: Arc::new(CompiledPipeline::new(
                 Arc::clone(stages),
@@ -76,6 +94,7 @@ impl QuantileTable {
             default,
             tenants,
             tenant_pipelines,
+            by_handle,
         }
     }
 
@@ -89,6 +108,19 @@ impl QuantileTable {
     pub fn pipeline_for(&self, tenant: &str) -> &Arc<CompiledPipeline> {
         self.tenant_pipelines
             .get(tenant)
+            .unwrap_or(&self.default_pipeline)
+    }
+
+    /// The compiled pipeline in effect for an interned tenant handle —
+    /// a bounds-checked array index, no hashing. Out-of-range or
+    /// uncovered handles (no override installed) get the default
+    /// pipeline, identical to [`QuantileTable::pipeline_for`] on an
+    /// unknown name.
+    #[inline]
+    pub fn pipeline_for_handle(&self, tenant: TenantHandle) -> &Arc<CompiledPipeline> {
+        self.by_handle
+            .get(tenant.index())
+            .and_then(|p| p.as_ref())
             .unwrap_or(&self.default_pipeline)
     }
 
@@ -131,6 +163,10 @@ pub struct Predictor {
     /// the scoring path.
     quantiles: SnapCell<QuantileTable>,
     feature_dim: usize,
+    /// The engine-wide tenant interner (shared via the registry) —
+    /// used to key `QuantileTable::by_handle` and exposed so batch
+    /// callers resolve a tenant name to a [`TenantHandle`] once.
+    tenants: Arc<TenantInterner>,
 }
 
 impl Predictor {
@@ -139,6 +175,7 @@ impl Predictor {
         experts: Vec<ExpertSlot>,
         aggregation: Aggregation,
         default_quantile: Arc<QuantileMap>,
+        tenants: Arc<TenantInterner>,
     ) -> Result<Predictor> {
         let name = name.into();
         ensure!(!experts.is_empty(), "predictor '{name}' needs >= 1 expert");
@@ -168,10 +205,18 @@ impl Predictor {
                 &stages,
                 default_quantile,
                 HashMap::new(),
+                &tenants,
             ))),
             stages,
             feature_dim,
+            tenants,
         })
+    }
+
+    /// The tenant interner this predictor keys handle-indexed state by
+    /// (shared engine-wide through the registry).
+    pub fn tenants(&self) -> &Arc<TenantInterner> {
+        &self.tenants
     }
 
     pub fn feature_dim(&self) -> usize {
@@ -206,6 +251,7 @@ impl Predictor {
                     &self.stages,
                     Arc::clone(&old.default),
                     tenants,
+                    &self.tenants,
                 )),
                 (),
             )
@@ -221,6 +267,7 @@ impl Predictor {
                     &self.stages,
                     map,
                     old.tenants.clone(),
+                    &self.tenants,
                 )),
                 (),
             )
@@ -328,10 +375,16 @@ impl Predictor {
         if n == 0 {
             return Ok(());
         }
+        // One feature copy for the whole ensemble: the batch is cloned
+        // into a shared `Arc` once and every expert's dispatch borrows
+        // it (`infer_async` would copy the slice per expert). For a
+        // k-expert predictor this removes k-1 batch-sized copies per
+        // dispatch from the hot path.
+        let shared = Arc::new(features.to_vec());
         let tickets: Vec<_> = self
             .experts
             .iter()
-            .map(|e| e.handle.infer_async(features, n))
+            .map(|e| e.handle.infer_async_shared(Arc::clone(&shared), n))
             .collect::<Result<Vec<_>>>()?;
         for (j, (t, e)) in tickets.into_iter().zip(&self.experts).enumerate() {
             let scores = t
@@ -366,6 +419,26 @@ impl Predictor {
         out.clear();
         let table = self.quantiles.load();
         table.pipeline_for(tenant).finalize_into(raw_out, out);
+        Ok(())
+    }
+
+    /// [`Predictor::score_batch_for_tenant`] keyed by an interned
+    /// handle: the per-batch tenant-pipeline resolution is an array
+    /// index instead of a string hash. This is the engine's batch hot
+    /// path; the string variant remains for callers without a handle.
+    pub fn score_batch_for_tenant_handle(
+        &self,
+        features: &[f32],
+        n: usize,
+        tenant: TenantHandle,
+        scratch: &mut PipelineScratch,
+        raw_out: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        self.score_batch_raw_compiled(features, n, scratch, raw_out)?;
+        out.clear();
+        let table = self.quantiles.load();
+        table.pipeline_for_handle(tenant).finalize_into(raw_out, out);
         Ok(())
     }
 }
@@ -404,6 +477,7 @@ mod tests {
             experts,
             Aggregation::weighted(vec![1.0; k]).unwrap(),
             QuantileMap::identity(101).unwrap().shared(),
+            Arc::new(TenantInterner::new()),
         )
         .unwrap()
     }
@@ -439,6 +513,7 @@ mod tests {
             }],
             Aggregation::Identity,
             QuantileMap::identity(101).unwrap().shared(),
+            Arc::new(TenantInterner::new()),
         )
         .unwrap();
         let mut rng = crate::util::rng::Rng::new(2);
@@ -598,7 +673,49 @@ mod tests {
             experts,
             Aggregation::weighted(vec![1.0, 1.0]).unwrap(),
             QuantileMap::identity(3).unwrap().shared(),
+            Arc::new(TenantInterner::new()),
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn handle_keyed_pipeline_matches_string_keyed() {
+        let Some(pool) = pool() else { return };
+        let p = ensemble(&pool, &["m1", "m2"]);
+        // Handle interned *before* the override exists: the republish
+        // on install must cover it.
+        let early = p.tenants().resolve("vip");
+        p.install_tenant_quantile(
+            "vip",
+            QuantileMap::new(vec![0.0, 1.0], vec![0.9, 1.0]).unwrap().shared(),
+        );
+        let t = p.quantile_table();
+        assert!(Arc::ptr_eq(t.pipeline_for_handle(early), t.pipeline_for("vip")));
+        // A handle interned after this table was published is out of
+        // range -> default pipeline, same as an unknown name.
+        let late = p.tenants().resolve("latecomer");
+        assert!(Arc::ptr_eq(t.pipeline_for_handle(late), t.pipeline_for("latecomer")));
+        assert!(Arc::ptr_eq(
+            t.pipeline_for_handle(TenantHandle::INVALID),
+            t.pipeline_for("no-such-tenant")
+        ));
+        // End to end: handle-keyed batch scoring is bitwise equal to
+        // the string-keyed path for both override and default tenants.
+        let d = p.feature_dim();
+        let mut rng = crate::util::rng::Rng::new(17);
+        let n = 23;
+        let feats: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut scratch = crate::transforms::PipelineScratch::default();
+        let (mut raw_h, mut out_h) = (Vec::new(), Vec::new());
+        let (mut raw_s, mut out_s) = (Vec::new(), Vec::new());
+        for tenant in ["vip", "latecomer"] {
+            let h = p.tenants().resolve(tenant);
+            p.score_batch_for_tenant_handle(&feats, n, h, &mut scratch, &mut raw_h, &mut out_h)
+                .unwrap();
+            p.score_batch_for_tenant(&feats, n, tenant, &mut scratch, &mut raw_s, &mut out_s)
+                .unwrap();
+            assert_eq!(raw_h, raw_s, "{tenant}: raw scores must be bitwise equal");
+            assert_eq!(out_h, out_s, "{tenant}: final scores must be bitwise equal");
+        }
     }
 }

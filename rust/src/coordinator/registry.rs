@@ -5,6 +5,7 @@
 //! referenced by hundreds of predictors".
 
 use super::predictor::{ExpertSlot, Predictor};
+use super::tenants::TenantInterner;
 use crate::config::PredictorConfig;
 use crate::runtime::{ModelPool, PoolStats};
 use crate::transforms::{Aggregation, PosteriorCorrection, QuantileMap};
@@ -24,6 +25,9 @@ pub struct PredictorRegistry {
     /// snapshot staleness gate compares it so registry mutations made
     /// without a routing swap still trigger a republish.
     generation: AtomicU64,
+    /// The engine-wide tenant interner, handed to every deployed
+    /// predictor so handle-indexed tables agree on the numbering.
+    tenants: Arc<TenantInterner>,
 }
 
 /// Registry + pool occupancy, for the dedup accounting.
@@ -38,16 +42,29 @@ pub struct RegistryStats {
 
 impl PredictorRegistry {
     pub fn new(pool: Arc<ModelPool>) -> Self {
+        Self::with_interner(pool, Arc::new(TenantInterner::new()))
+    }
+
+    /// Build a registry sharing an existing tenant interner — the
+    /// engine passes its own so the admission controller, the routes
+    /// and every predictor's quantile table use one numbering.
+    pub fn with_interner(pool: Arc<ModelPool>, tenants: Arc<TenantInterner>) -> Self {
         PredictorRegistry {
             pool,
             predictors: RwLock::new(HashMap::new()),
             configs: RwLock::new(HashMap::new()),
             generation: AtomicU64::new(0),
+            tenants,
         }
     }
 
     pub fn pool(&self) -> &Arc<ModelPool> {
         &self.pool
+    }
+
+    /// The tenant interner shared by every predictor in this registry.
+    pub fn tenants(&self) -> &Arc<TenantInterner> {
+        &self.tenants
     }
 
     /// Monotonic deployment-set version (see field docs).
@@ -94,7 +111,13 @@ impl PredictorRegistry {
         } else {
             Aggregation::weighted(cfg.weights.clone())?
         };
-        let predictor = match Predictor::new(cfg.name.clone(), experts, aggregation, quantile) {
+        let predictor = match Predictor::new(
+            cfg.name.clone(),
+            experts,
+            aggregation,
+            quantile,
+            Arc::clone(&self.tenants),
+        ) {
             Ok(p) => p,
             Err(err) => {
                 for m in &acquired {

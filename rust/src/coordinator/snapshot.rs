@@ -36,10 +36,55 @@
 use super::batcher::Batcher;
 use super::predictor::Predictor;
 use super::registry::PredictorRegistry;
+use super::tenants::TenantHandle;
 use crate::config::RoutingConfig;
+use crate::datalake::{DataLake, PairRef};
+use crate::lifecycle::{LifecycleHub, ScoreFeed};
+use crate::metrics::{CounterHandle, Counters};
+use crate::util::swap::SnapCell;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Everything the commit phase of a scored event needs for one
+/// `(tenant, predictor)` pair, resolved once and cached by
+/// [`TenantHandle`] index on the predictor's entry: the data-lake
+/// pair ref, the per-tenant event counter handle and the lifecycle
+/// feed ring. With a warm route, committing an event performs zero
+/// string hashing — every side effect is an array index or a direct
+/// atomic (see `coordinator::tenants` for the interning story).
+pub struct TenantRoute {
+    /// Cached lake pair slot — `append_ref` skips both `&str` probes.
+    pub pair: PairRef,
+    /// The interned tenant name (shared with the interner's table).
+    tenant_name: Arc<str>,
+    /// `tenant_events` counter, created on **first batch commit** —
+    /// not at route build. The observable `scored_events` map must
+    /// contain exactly the tenants the batch path accounted
+    /// (`Counters::handle` interns its key at zero, and the
+    /// verification harness checks full-map equality against the
+    /// oracle), and routes are also built by the single-event and
+    /// shadow paths, which never count.
+    counter: std::sync::OnceLock<CounterHandle>,
+    /// Feed-table epoch this route was resolved against; a mismatch
+    /// with [`LifecycleHub::feeds_epoch`] invalidates `feed` only —
+    /// the route rebuilds lazily on next use.
+    feed_epoch: u64,
+    /// The pair's lifecycle feed ring (`None`: unmanaged pair or
+    /// lifecycle disabled).
+    pub feed: Option<Arc<ScoreFeed>>,
+}
+
+impl TenantRoute {
+    /// The tenant's `scored_events` counter: one string hash on the
+    /// first batch commit through this route, a plain atomic load
+    /// afterwards.
+    #[inline]
+    pub fn counter(&self, tenant_events: &Counters) -> &CounterHandle {
+        self.counter
+            .get_or_init(|| tenant_events.handle(&self.tenant_name))
+    }
+}
 
 /// A predictor resolved for serving: the handle plus its dynamic
 /// batcher. Shared (`Arc`) between consecutive snapshots, so a config
@@ -47,6 +92,69 @@ use std::time::Duration;
 pub struct PredictorEntry {
     pub predictor: Arc<Predictor>,
     pub batcher: Arc<Batcher>,
+    /// Handle-indexed tenant routes, published copy-on-write. Shared
+    /// with the batcher across snapshot republishes (the entry itself
+    /// is reused), so a routing swap does not cold-start the cache.
+    routes: SnapCell<Vec<Option<Arc<TenantRoute>>>>,
+}
+
+impl PredictorEntry {
+    fn new(predictor: Arc<Predictor>, batcher: Arc<Batcher>) -> PredictorEntry {
+        PredictorEntry {
+            predictor,
+            batcher,
+            routes: SnapCell::new(Arc::new(Vec::new())),
+        }
+    }
+
+    /// Resolve the commit route for `tenant` — one wait-free vector
+    /// load + one index on the warm path. Cold (first sight of the
+    /// tenant on this predictor, or the lifecycle feed table moved):
+    /// re-resolves by name and republishes the cache copy-on-write.
+    #[inline]
+    pub fn route(
+        &self,
+        tenant: TenantHandle,
+        tenant_name: &str,
+        lake: &DataLake,
+        hub: Option<&LifecycleHub>,
+    ) -> Arc<TenantRoute> {
+        let epoch = hub.map_or(0, |h| h.feeds_epoch());
+        if let Some(Some(r)) = self.routes.load().get(tenant.index()) {
+            if r.feed_epoch == epoch {
+                return Arc::clone(r);
+            }
+        }
+        self.rebuild_route(tenant, tenant_name, epoch, lake, hub)
+    }
+
+    #[cold]
+    fn rebuild_route(
+        &self,
+        tenant: TenantHandle,
+        tenant_name: &str,
+        epoch: u64,
+        lake: &DataLake,
+        hub: Option<&LifecycleHub>,
+    ) -> Arc<TenantRoute> {
+        let name = &*self.predictor.name;
+        let route = Arc::new(TenantRoute {
+            pair: lake.pair_ref(tenant_name, name),
+            tenant_name: Arc::from(tenant_name),
+            counter: std::sync::OnceLock::new(),
+            feed_epoch: epoch,
+            feed: hub.and_then(|h| h.feed_for(name, tenant_name)),
+        });
+        self.routes.rcu(|old| {
+            let mut next = old.as_ref().clone();
+            if next.len() <= tenant.index() {
+                next.resize(tenant.index() + 1, None);
+            }
+            next[tenant.index()] = Some(Arc::clone(&route));
+            (Arc::new(next), ())
+        });
+        route
+    }
 }
 
 /// One immutable world for the scoring data plane.
@@ -89,14 +197,14 @@ impl EngineSnapshot {
             });
             let entry = match reused {
                 Some(e) => Arc::clone(e),
-                None => Arc::new(PredictorEntry {
-                    batcher: Arc::new(Batcher::new(
+                None => {
+                    let batcher = Arc::new(Batcher::new(
                         Arc::clone(&predictor),
                         max_batch,
                         max_batch_delay,
-                    )),
-                    predictor,
-                }),
+                    ));
+                    Arc::new(PredictorEntry::new(predictor, batcher))
+                }
             };
             entries.insert(Arc::from(name.as_str()), entry);
         }

@@ -1,0 +1,185 @@
+//! Tenant-handle interning: resolve a tenant's name to a dense
+//! integer **once, at the ingress edge**, and index every downstream
+//! tenant-keyed structure by that integer instead of re-hashing the
+//! string per event.
+//!
+//! Before this module, one scored event paid up to six separate
+//! tenant-string hashes past routing: the batcher's per-group tenant
+//! compare, the quantile table's `pipeline_for` probe, the data lake's
+//! pair-slot probe, the lifecycle hub's feed-table probe, the
+//! per-tenant event counter, and the admission controller's priority
+//! scan. With interning, the engine resolves the tenant to a
+//! [`TenantHandle`] (one hash) when the request enters, and every
+//! later hop is an array index off that handle — see
+//! `coordinator::snapshot::TenantRoute` for the per-predictor route
+//! cache the handle keys.
+//!
+//! The table is published copy-on-write through a
+//! [`SnapCell`](crate::util::swap::SnapCell): lookups are one
+//! wait-free load + one map probe; interning a never-seen tenant takes
+//! the cell's writer lock once per tenant *lifetime* (control-plane
+//! rate). Handles are dense (`0..len`), never reused, and permanently
+//! valid — downstream tables sized before a tenant appeared simply
+//! don't cover its index yet, and treat the miss as "use defaults",
+//! which is exactly the behavior a brand-new tenant should get.
+
+use crate::util::swap::SnapCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A dense, copyable tenant identifier. `Copy` on purpose: handles
+/// cross thread boundaries (batcher submissions, shadow closures)
+/// without cloning a `String` or pinning a borrow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TenantHandle(u32);
+
+impl TenantHandle {
+    /// A handle that is valid to *use* but matches no interned tenant:
+    /// every handle-indexed table treats it as out of range and serves
+    /// defaults. Used for queue stubs and other never-scored slots.
+    pub const INVALID: TenantHandle = TenantHandle(u32::MAX);
+
+    /// The dense index this handle occupies in handle-keyed tables.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Immutable interner snapshot: name → handle plus the reverse map.
+#[derive(Default)]
+struct TenantTable {
+    by_name: HashMap<Arc<str>, u32>,
+    names: Vec<Arc<str>>,
+}
+
+/// The process-wide tenant interner (one per engine, shared with the
+/// admission controller). See the module docs for the contract.
+pub struct TenantInterner {
+    cell: SnapCell<TenantTable>,
+}
+
+impl Default for TenantInterner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TenantInterner {
+    pub fn new() -> TenantInterner {
+        TenantInterner {
+            cell: SnapCell::new(Arc::new(TenantTable::default())),
+        }
+    }
+
+    /// Resolve without interning: `None` for a never-seen tenant.
+    /// The admission controller uses this so unauthenticated junk
+    /// tenant names shed *without* growing the table.
+    pub fn lookup(&self, tenant: &str) -> Option<TenantHandle> {
+        self.cell.load().by_name.get(tenant).copied().map(TenantHandle)
+    }
+
+    /// Resolve, interning on first sight — the ingress edge's one
+    /// tenant-string hash. Wait-free for every established tenant.
+    pub fn resolve(&self, tenant: &str) -> TenantHandle {
+        if let Some(h) = self.lookup(tenant) {
+            return h;
+        }
+        self.intern(tenant)
+    }
+
+    #[cold]
+    fn intern(&self, tenant: &str) -> TenantHandle {
+        self.cell.rcu(|old| {
+            // Re-probe under the writer lock: racing interners must
+            // converge on one handle per name.
+            if let Some(&h) = old.by_name.get(tenant) {
+                return (Arc::clone(old), TenantHandle(h));
+            }
+            let id = u32::try_from(old.names.len()).expect("tenant handle overflow");
+            let name: Arc<str> = Arc::from(tenant);
+            let mut next = TenantTable {
+                by_name: old.by_name.clone(),
+                names: old.names.clone(),
+            };
+            next.names.push(Arc::clone(&name));
+            next.by_name.insert(name, id);
+            (Arc::new(next), TenantHandle(id))
+        })
+    }
+
+    /// The interned name behind a handle (`None` for
+    /// [`TenantHandle::INVALID`] or a foreign handle).
+    pub fn name(&self, handle: TenantHandle) -> Option<Arc<str>> {
+        self.cell.load().names.get(handle.index()).cloned()
+    }
+
+    /// Number of interned tenants (handles are dense: `0..len`).
+    pub fn len(&self) -> usize {
+        self.cell.load().names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_dense_and_stable() {
+        let t = TenantInterner::new();
+        let a = t.resolve("acme");
+        let b = t.resolve("bank1");
+        assert_eq!(a.index(), 0);
+        assert_eq!(b.index(), 1);
+        // Re-resolving is a pure lookup returning the same handle.
+        assert_eq!(t.resolve("acme"), a);
+        assert_eq!(t.lookup("acme"), Some(a));
+        assert_eq!(t.len(), 2);
+        assert_eq!(&*t.name(a).unwrap(), "acme");
+        assert_eq!(&*t.name(b).unwrap(), "bank1");
+    }
+
+    #[test]
+    fn lookup_never_interns() {
+        let t = TenantInterner::new();
+        assert_eq!(t.lookup("ghost"), None);
+        assert_eq!(t.len(), 0, "lookup must not grow the table");
+        assert_eq!(t.name(TenantHandle::INVALID), None);
+    }
+
+    #[test]
+    fn concurrent_interning_converges_on_one_handle_per_name() {
+        let t = Arc::new(TenantInterner::new());
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    for i in 0..64 {
+                        // Shared names race; per-worker names interleave.
+                        seen.push((format!("shared{}", i % 7), t.resolve(&format!("shared{}", i % 7))));
+                        seen.push((format!("own{w}"), t.resolve(&format!("own{w}"))));
+                    }
+                    seen
+                })
+            })
+            .collect();
+        let mut by_name: HashMap<String, TenantHandle> = HashMap::new();
+        for h in handles {
+            for (name, handle) in h.join().unwrap() {
+                let prev = by_name.entry(name.clone()).or_insert(handle);
+                assert_eq!(*prev, handle, "name '{name}' got two handles");
+            }
+        }
+        assert_eq!(t.len(), 7 + 8);
+        // Dense: every index below len is named, round-trips by name.
+        for i in 0..t.len() {
+            let name = t.name(by_name.values().find(|h| h.index() == i).copied().unwrap());
+            assert!(name.is_some());
+        }
+    }
+}

@@ -250,6 +250,20 @@ struct PairTable {
     slab: Vec<Arc<PairSlot>>,
 }
 
+/// An opaque, cacheable resolution of one `(tenant, predictor)` pair:
+/// [`DataLake::append_ref`] / [`DataLake::append_batch_ref`] take it
+/// instead of two `&str` keys, turning the hot path's two hashmap
+/// probes into one slab-index + pointer-identity check. The engine's
+/// per-predictor tenant routes (`coordinator::snapshot::TenantRoute`)
+/// resolve one per (tenant, predictor) lifetime and reuse it forever
+/// — the pair table is grow-only and ids are never reused, so a ref
+/// cannot go stale; the identity check is cheap insurance should that
+/// invariant ever change.
+#[derive(Clone)]
+pub struct PairRef {
+    slot: Arc<PairSlot>,
+}
+
 /// Thread-safe data lake: sharded append-mostly rings with a global
 /// retention cap. See the module docs for the concurrency contract.
 pub struct DataLake {
@@ -374,6 +388,73 @@ impl DataLake {
         for (i, (&score, &raw)) in scores.iter().zip(raw_scores).enumerate() {
             self.write_record(&table, &pair, base + i as u64, score, raw, shadow);
         }
+    }
+
+    /// Resolve (or intern) a cacheable pair ref for
+    /// `(tenant, predictor)` — the control-plane half of the
+    /// string-free append path (see [`PairRef`]).
+    pub fn pair_ref(&self, tenant: &str, predictor: &str) -> PairRef {
+        let (_, slot) = self.pair_slot(tenant, predictor);
+        PairRef { slot }
+    }
+
+    /// Append one record through a cached [`PairRef`]: identical
+    /// side effects to [`DataLake::append`], zero string hashing.
+    pub fn append_ref(&self, pair: &PairRef, score: f64, raw_score: f64, shadow: bool) {
+        let table = self.pairs.load();
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        if Self::ref_is_current(&table, &pair.slot) {
+            self.write_record(&table, &pair.slot, seq, score, raw_score, shadow);
+        } else {
+            self.append_ref_stale(pair, seq, score, raw_score, shadow);
+        }
+    }
+
+    /// Append a whole scored batch through a cached [`PairRef`]:
+    /// identical side effects to [`DataLake::append_batch`] (one
+    /// contiguous sequence block), zero string hashing.
+    pub fn append_batch_ref(
+        &self,
+        pair: &PairRef,
+        scores: &[f64],
+        raw_scores: &[f64],
+        shadow: bool,
+    ) {
+        debug_assert_eq!(scores.len(), raw_scores.len());
+        if scores.is_empty() {
+            return;
+        }
+        let table = self.pairs.load();
+        let base = self.next_seq.fetch_add(scores.len() as u64, Ordering::Relaxed);
+        if Self::ref_is_current(&table, &pair.slot) {
+            for (i, (&score, &raw)) in scores.iter().zip(raw_scores).enumerate() {
+                self.write_record(&table, &pair.slot, base + i as u64, score, raw, shadow);
+            }
+        } else {
+            let (table, slot) = self.pair_slot(&pair.slot.tenant, &pair.slot.predictor);
+            for (i, (&score, &raw)) in scores.iter().zip(raw_scores).enumerate() {
+                self.write_record(&table, &slot, base + i as u64, score, raw, shadow);
+            }
+        }
+    }
+
+    /// Whether a cached ref's slot is the one the current table holds
+    /// under its id (always true today — the table is grow-only).
+    #[inline]
+    fn ref_is_current(table: &PairTable, slot: &Arc<PairSlot>) -> bool {
+        table
+            .slab
+            .get(slot.id as usize)
+            .is_some_and(|p| Arc::ptr_eq(p, slot))
+    }
+
+    /// Never taken under the current grow-only table invariant; kept
+    /// so a cached ref degrades to a by-name re-resolve instead of
+    /// corrupting pair accounting if that invariant ever changes.
+    #[cold]
+    fn append_ref_stale(&self, pair: &PairRef, seq: u64, score: f64, raw: f64, shadow: bool) {
+        let (table, slot) = self.pair_slot(&pair.slot.tenant, &pair.slot.predictor);
+        self.write_record(&table, &slot, seq, score, raw, shadow);
     }
 
     /// Resolve (or intern) the pair slot for `(tenant, predictor)`.
@@ -796,6 +877,31 @@ mod tests {
             assert_eq!(w[1].seq, w[0].seq + 1, "batch seq must stay contiguous");
         }
         assert!(records.iter().all(|r| r.shadow));
+    }
+
+    #[test]
+    fn cached_pair_refs_match_string_keyed_appends() {
+        let a = DataLake::new();
+        let b = DataLake::new();
+        // Refs resolved before AND after other pairs intern must stay
+        // valid (ids are slab-stable across copy-on-write republish).
+        let early = a.pair_ref("t", "p");
+        a.append("other", "q", 0.5, 0.5, false);
+        b.append("other", "q", 0.5, 0.5, false);
+        let finals = [0.9, 0.8, 0.7];
+        let raws = [0.12, 0.10, 0.08];
+        a.append_ref(&early, 0.1, 0.2, false);
+        b.append("t", "p", 0.1, 0.2, false);
+        a.append_batch_ref(&early, &finals, &raws, true);
+        b.append_batch("t", "p", &finals, &raws, true);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.raw_scores("t", "p"), b.raw_scores("t", "p"));
+        assert_eq!(a.final_scores("t", "p"), b.final_scores("t", "p"));
+        assert_eq!(a.counts(), b.counts());
+        assert_eq!(a.count_for("t", "p"), 4);
+        // A ref re-resolved later aliases the same interned slot.
+        let again = a.pair_ref("t", "p");
+        assert!(Arc::ptr_eq(&early.slot, &again.slot));
     }
 
     #[test]

@@ -179,6 +179,12 @@ type FeedTable = HashMap<Arc<str>, HashMap<Arc<str>, Arc<ScoreFeed>>>;
 pub struct LifecycleHub {
     cfg: LifecycleConfig,
     feeds: crate::util::swap::SnapCell<FeedTable>,
+    /// Bumped after every feed-table republish. The engine's
+    /// per-predictor tenant routes cache `(epoch, feed)` pairs keyed
+    /// by [`TenantHandle`](crate::coordinator::TenantHandle); an epoch
+    /// mismatch invalidates the cached feed in one integer compare,
+    /// so the hot path never probes the two-level string table.
+    feeds_epoch: std::sync::atomic::AtomicU64,
     /// Keyed by tenant; background/tick side only.
     pairs: Mutex<BTreeMap<String, PairState>>,
 }
@@ -188,8 +194,26 @@ impl LifecycleHub {
         LifecycleHub {
             cfg,
             feeds: crate::util::swap::SnapCell::new(Arc::new(FeedTable::new())),
+            feeds_epoch: std::sync::atomic::AtomicU64::new(0),
             pairs: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// The current feed-table epoch (see the field docs). Monotone;
+    /// a cached `(epoch, feed)` pair is valid iff epochs match.
+    #[inline]
+    pub fn feeds_epoch(&self) -> u64 {
+        self.feeds_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Resolve a pair's feed ring directly (route-cache rebuild path):
+    /// one table load + two probes, `None` for unmanaged pairs.
+    pub fn feed_for(&self, predictor: &str, tenant: &str) -> Option<Arc<ScoreFeed>> {
+        self.feeds
+            .load()
+            .get(predictor)
+            .and_then(|m| m.get(tenant))
+            .cloned()
     }
 
     pub fn config(&self) -> &LifecycleConfig {
@@ -334,7 +358,7 @@ impl LifecycleHub {
     }
 
     fn reconcile_feeds(&self, desired: &[(String, String)]) {
-        self.feeds.rcu(|old| {
+        let republished = self.feeds.rcu(|old| {
             let mut changed = false;
             let mut next: FeedTable = FeedTable::new();
             for (pred, tenant) in desired {
@@ -359,11 +383,17 @@ impl LifecycleHub {
                     !desired.iter().any(|(dp, dt)| dp == &**p && dt == &**t)
                 }));
             if changed || dropped_any {
-                (Arc::new(next), ())
+                (Arc::new(next), true)
             } else {
-                (Arc::clone(old), ())
+                (Arc::clone(old), false)
             }
         });
+        if republished {
+            // After the publish, so a reader pairing the new epoch
+            // with the old table is impossible; the benign inverse
+            // race (old epoch + new table) self-heals on next use.
+            self.feeds_epoch.fetch_add(1, Ordering::SeqCst);
+        }
     }
 }
 
@@ -701,6 +731,24 @@ lifecycle:
             Arc::ptr_eq(&f1, &f2),
             "reconcile must not replace a live feed (in-flight samples would be lost)"
         );
+    }
+
+    #[test]
+    fn feed_epoch_bumps_only_on_republish() {
+        let (_fix, engine) = sim_engine(AUTO_CFG);
+        let hub = engine.lifecycle.as_ref().unwrap();
+        assert_eq!(hub.feeds_epoch(), 0);
+        assert!(hub.feed_for("p", "bank1").is_none());
+        hub.tick(&engine).unwrap(); // registers the bank1 feed
+        assert_eq!(hub.feeds_epoch(), 1);
+        let feed = hub.feed_for("p", "bank1").unwrap();
+        hub.tick(&engine).unwrap(); // unchanged world: no republish
+        assert_eq!(
+            hub.feeds_epoch(),
+            1,
+            "an unchanged feed table must not invalidate cached routes"
+        );
+        assert!(Arc::ptr_eq(&feed, &hub.feed_for("p", "bank1").unwrap()));
     }
 }
 

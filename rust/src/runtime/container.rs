@@ -16,10 +16,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 
-/// An inference request: `features` is a row-major `[n, d]` slice with
-/// `n <= max batch variant`; the container pads to the best variant.
+/// An inference request: `features` is a row-major `[n, d]` buffer;
+/// the container pads/chunks to the best batch variant. Shared
+/// (`Arc`) so an ensemble fan-out ships one copy of the batch matrix
+/// to all expert containers instead of one copy per expert.
 struct InferJob {
-    features: Vec<f32>,
+    features: Arc<Vec<f32>>,
     n: usize,
     reply: mpsc::SyncSender<Result<Vec<f32>>>,
 }
@@ -70,6 +72,22 @@ impl ModelHandle {
     /// independent threads, so per-event service time is max over
     /// experts, not the sum — see EXPERIMENTS.md "Perf log").
     pub fn infer_async(&self, features: &[f32], n: usize) -> Result<InferTicket> {
+        if n == 0 {
+            let (_reply_tx, reply_rx) = mpsc::sync_channel(1);
+            return Ok(InferTicket {
+                rx: reply_rx,
+                model: self.name.clone(),
+                empty: true,
+            });
+        }
+        self.infer_async_shared(Arc::new(features.to_vec()), n)
+    }
+
+    /// As [`ModelHandle::infer_async`], but the caller supplies the
+    /// batch matrix behind an `Arc` — an ensemble fan-out builds it
+    /// once and ships the same allocation to every expert container
+    /// (the per-expert `to_vec` copy is gone from the batch path).
+    pub fn infer_async_shared(&self, features: Arc<Vec<f32>>, n: usize) -> Result<InferTicket> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         if n == 0 {
             return Ok(InferTicket {
@@ -89,7 +107,7 @@ impl ModelHandle {
         }
         self.tx
             .send(Msg::Infer(InferJob {
-                features: features.to_vec(),
+                features,
                 n,
                 reply: reply_tx,
             }))

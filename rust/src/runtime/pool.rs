@@ -12,6 +12,7 @@ use super::container::{ModelContainer, ModelHandle};
 use super::manifest::Manifest;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 struct Entry {
@@ -23,8 +24,9 @@ struct Entry {
 pub struct ModelPool {
     manifest: Manifest,
     entries: Mutex<BTreeMap<String, Entry>>,
-    /// Lifetime counters for the dedup accounting.
-    spawned_total: Mutex<u64>,
+    /// Lifetime counter for the dedup accounting (atomic: `stats()`
+    /// readers never contend with the entries lock for it).
+    spawned_total: AtomicU64,
 }
 
 /// A snapshot of pool occupancy.
@@ -40,7 +42,7 @@ impl ModelPool {
         ModelPool {
             manifest,
             entries: Mutex::new(BTreeMap::new()),
-            spawned_total: Mutex::new(0),
+            spawned_total: AtomicU64::new(0),
         }
     }
 
@@ -63,7 +65,7 @@ impl ModelPool {
         let container = ModelContainer::spawn(spec)?;
         let handle = container.handle.clone();
         entries.insert(model.to_string(), Entry { container, refs: 1 });
-        *self.spawned_total.lock().unwrap() += 1;
+        self.spawned_total.fetch_add(1, Ordering::Relaxed);
         Ok(handle)
     }
 
@@ -88,7 +90,7 @@ impl ModelPool {
         PoolStats {
             live_containers: entries.len(),
             total_references: entries.values().map(|e| e.refs).sum(),
-            spawned_total: *self.spawned_total.lock().unwrap(),
+            spawned_total: self.spawned_total.load(Ordering::Relaxed),
         }
     }
 }

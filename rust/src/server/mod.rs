@@ -45,7 +45,7 @@ pub mod http;
 pub mod reactor;
 pub mod streamjson;
 
-use crate::coordinator::{Engine, ScoreRequest};
+use crate::coordinator::{Engine, ScoreRequest, TenantInterner};
 use crate::config::{Intent, ServerConfig};
 use crate::util::json::Json;
 use anyhow::Result;
@@ -318,7 +318,15 @@ fn error_422(msg: impl Into<String>) -> Response {
 /// high-priority tenants keep landing while bulk traffic sheds
 /// first. `shedQueueDepth: 0` (the default) disables shedding.
 pub struct AdmissionControl {
-    priorities: Vec<(String, u8)>,
+    /// Shared tenant interner (the engine's in production): configured
+    /// priorities resolve to handles **once, here at construction** —
+    /// the shed gate re-probes nothing per batch.
+    tenants: Arc<TenantInterner>,
+    /// Priority by tenant-handle index; out-of-range handles (tenants
+    /// interned after construction) and never-interned names get
+    /// `default_priority` — exactly the unlisted-tenant semantics the
+    /// old per-batch linear scan had.
+    by_handle: Vec<u8>,
     default_priority: u8,
     shed_queue_depth: usize,
     /// Current pressure signal — in production
@@ -333,8 +341,35 @@ impl AdmissionControl {
         shed_queue_depth: usize,
         depth_probe: Box<dyn Fn() -> usize + Send + Sync>,
     ) -> AdmissionControl {
-        AdmissionControl {
+        Self::with_interner(
             priorities,
+            default_priority,
+            shed_queue_depth,
+            depth_probe,
+            Arc::new(TenantInterner::new()),
+        )
+    }
+
+    /// Build against an existing interner so the admission table and
+    /// the engine's scoring paths agree on handle numbering.
+    pub fn with_interner(
+        priorities: Vec<(String, u8)>,
+        default_priority: u8,
+        shed_queue_depth: usize,
+        depth_probe: Box<dyn Fn() -> usize + Send + Sync>,
+        tenants: Arc<TenantInterner>,
+    ) -> AdmissionControl {
+        let mut by_handle: Vec<u8> = Vec::new();
+        for (t, p) in &priorities {
+            let idx = tenants.resolve(t).index();
+            if by_handle.len() <= idx {
+                by_handle.resize(idx + 1, default_priority);
+            }
+            by_handle[idx] = *p;
+        }
+        AdmissionControl {
+            tenants,
+            by_handle,
             default_priority,
             shed_queue_depth,
             depth_probe,
@@ -342,21 +377,27 @@ impl AdmissionControl {
     }
 
     /// Wire up from the `server:` config block with the engine's
-    /// live batcher-depth gauge as the pressure probe.
+    /// live batcher-depth gauge as the pressure probe, sharing the
+    /// engine's tenant interner.
     pub fn from_config(cfg: &ServerConfig, engine: Arc<Engine>) -> AdmissionControl {
-        AdmissionControl::new(
+        let tenants = Arc::clone(&engine.tenants);
+        AdmissionControl::with_interner(
             cfg.tenant_priorities.clone(),
             cfg.default_priority,
             cfg.shed_queue_depth,
             Box::new(move || engine.ingress_pressure()),
+            tenants,
         )
     }
 
+    /// A tenant's configured priority: one interner lookup + one array
+    /// load. `lookup` (not `resolve`) on purpose — junk tenant names
+    /// arriving at the shed gate must not grow the shared table;
+    /// interning happens only after admission, at the scoring edge.
     pub fn priority(&self, tenant: &str) -> u8 {
-        self.priorities
-            .iter()
-            .find(|(t, _)| t == tenant)
-            .map(|(_, p)| *p)
+        self.tenants
+            .lookup(tenant)
+            .and_then(|h| self.by_handle.get(h.index()).copied())
             .unwrap_or(self.default_priority)
     }
 

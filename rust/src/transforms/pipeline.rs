@@ -43,6 +43,11 @@ use super::{Aggregation, PosteriorCorrection, QuantileMap};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 
+/// Events per lane group in the batched stage-1+2 kernel. Matches the
+/// quantile kernel's group width so a whole chunk flows through
+/// `T^C`, `A`, and `T^Q` with the same stride.
+const LANES: usize = 8;
+
 /// One expert's compiled `T^C`: the Eq. 3 rational map, or the
 /// **neutral slot** for an absent correction. The neutral case is a
 /// test of a slot-local constant flag — always perfectly predicted,
@@ -181,6 +186,15 @@ impl CompiledStages {
     /// for every event, appended to `out`. Branch-free per event — no
     /// `Option` match, no per-event `calibrated` buffer, no per-event
     /// allocation.
+    ///
+    /// Lane-parallel across events: 8 events move through the
+    /// expert loop together, with each slot's neutral flag hoisted
+    /// out of the lane loop (it is a slot constant, not per-event
+    /// state), so the inner loops are straight-line arithmetic the
+    /// compiler can vectorize. Per event the accumulation still
+    /// visits experts in order `0..k` with the exact operation
+    /// sequence of the scalar path, so results are bitwise equal to
+    /// [`CompiledStages::raw_one`] and the staged oracle.
     pub fn raw_into(&self, scratch: &PipelineScratch, out: &mut Vec<f64>) {
         let (lanes, k, n) = scratch.lanes();
         debug_assert_eq!(k, self.slots.len(), "scratch lane count mismatch");
@@ -190,22 +204,63 @@ impl CompiledStages {
             out.extend(lanes[..n].iter().map(|&s| s as f64));
             return;
         }
+        let mut i = 0;
         match &self.agg {
             CompiledAgg::Dot {
                 weights,
                 weight_sum,
             } => {
-                for i in 0..n {
+                while i + LANES <= n {
+                    let mut num = [0.0f64; LANES];
+                    for (j, (slot, w)) in self.slots.iter().zip(weights).enumerate() {
+                        let lane = &lanes[j * n + i..j * n + i + LANES];
+                        if slot.neutral {
+                            for l in 0..LANES {
+                                num[l] += lane[l] as f64 * w;
+                            }
+                        } else {
+                            for l in 0..LANES {
+                                let s = (lane[l] as f64).clamp(0.0, 1.0);
+                                let denom = 1.0 - slot.one_minus_beta * s;
+                                num[l] += (slot.beta * s / denom).clamp(0.0, 1.0) * w;
+                            }
+                        }
+                    }
+                    for &v in &num {
+                        out.push(v / weight_sum);
+                    }
+                    i += LANES;
+                }
+                // Remainder events (n % 8): the scalar event loop.
+                for i in i..n {
                     let mut num = 0.0;
                     for (j, (slot, w)) in self.slots.iter().zip(weights).enumerate() {
-                        let s = lanes[j * n + i] as f64;
-                        num += slot.apply(s) * w;
+                        num += slot.apply(lanes[j * n + i] as f64) * w;
                     }
                     out.push(num / weight_sum);
                 }
             }
             CompiledAgg::Max => {
-                for i in 0..n {
+                while i + LANES <= n {
+                    let mut m = [f64::MIN; LANES];
+                    for (j, slot) in self.slots.iter().enumerate() {
+                        let lane = &lanes[j * n + i..j * n + i + LANES];
+                        if slot.neutral {
+                            for l in 0..LANES {
+                                m[l] = m[l].max(lane[l] as f64);
+                            }
+                        } else {
+                            for l in 0..LANES {
+                                let s = (lane[l] as f64).clamp(0.0, 1.0);
+                                let denom = 1.0 - slot.one_minus_beta * s;
+                                m[l] = m[l].max((slot.beta * s / denom).clamp(0.0, 1.0));
+                            }
+                        }
+                    }
+                    out.extend_from_slice(&m);
+                    i += LANES;
+                }
+                for i in i..n {
                     let mut m = f64::MIN;
                     for (j, slot) in self.slots.iter().enumerate() {
                         m = m.max(slot.apply(lanes[j * n + i] as f64));
@@ -320,10 +375,13 @@ impl CompiledPipeline {
         self.table.apply(raw)
     }
 
-    /// Stage 3 over a raw slice, appended to `out`.
+    /// Stage 3 over a raw slice, appended to `out` — the lane-parallel
+    /// `T^Q` kernel ([`QuantileMap::apply_batch`]), bitwise equal to
+    /// mapping `apply` per event.
     pub fn finalize_into(&self, raw: &[f64], out: &mut Vec<f64>) {
-        out.reserve(raw.len());
-        out.extend(raw.iter().map(|&r| self.table.apply(r)));
+        let start = out.len();
+        out.extend_from_slice(raw);
+        self.table.apply_batch(&mut out[start..]);
     }
 
     /// Whole chain for one event: `(raw, final)`.
@@ -541,6 +599,79 @@ mod tests {
                     "fin[{i}] {} vs scalar {f1} vs staged {f2}",
                     fin[i]
                 );
+            }
+            Ok(())
+        });
+    }
+
+    /// The lane-parallel batch kernel is bitwise-equal to the scalar
+    /// event loop at every remainder length `n % 8 ∈ 0..=7`, across
+    /// aggregations (Dot and Max), neutral/corrected slot mixes, and
+    /// NaN/±∞ expert scores.
+    #[test]
+    fn prop_unrolled_batch_bitwise_matches_scalar() {
+        prop::check(256, |g| {
+            let k = g.usize(1..6);
+            let betas: Vec<Option<f64>> = (0..k)
+                .map(|_| {
+                    if g.bool(0.4) {
+                        None
+                    } else {
+                        Some(g.f64(0.001..1.0))
+                    }
+                })
+                .collect();
+            let aggregation = if g.bool(0.3) {
+                Aggregation::Max
+            } else {
+                Aggregation::weighted((0..k).map(|_| g.f64(0.01..3.0)).collect()).unwrap()
+            };
+            let s = spec(&betas, aggregation, random_map(g));
+            let compiled = s.compile().map_err(|e| e.to_string())?;
+            for rem in 0..8usize {
+                let n = 8 * g.usize(0..3) + rem;
+                let events: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        (0..k)
+                            .map(|_| match g.usize(0..10) {
+                                0 => f32::NAN,
+                                1 => f32::INFINITY,
+                                2 => f32::NEG_INFINITY,
+                                3 => g.f64(-0.5..0.0) as f32,
+                                4 => g.f64(1.0..1.5) as f32,
+                                _ => g.f64(0.0..1.0) as f32,
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let mut scratch = PipelineScratch::default();
+                scratch.begin(k, n);
+                for j in 0..k {
+                    let lane = scratch.lane_mut(j);
+                    for (i, e) in events.iter().enumerate() {
+                        lane[i] = e[j];
+                    }
+                }
+                let mut raw = Vec::new();
+                let mut fin = Vec::new();
+                compiled.score_into(&scratch, &mut raw, &mut fin);
+                prop_assert!(raw.len() == n && fin.len() == n, "length mismatch");
+                for (i, e) in events.iter().enumerate() {
+                    let (r1, f1) = compiled.score_one(e);
+                    let bits = |a: f64, b: f64| a.to_bits() == b.to_bits();
+                    prop_assert!(
+                        bits(raw[i], r1),
+                        "raw[{i}]/{n} {:x} != scalar {:x} (scores {e:?})",
+                        raw[i].to_bits(),
+                        r1.to_bits()
+                    );
+                    prop_assert!(
+                        bits(fin[i], f1),
+                        "fin[{i}]/{n} {:x} != scalar {:x} (scores {e:?})",
+                        fin[i].to_bits(),
+                        f1.to_bits()
+                    );
+                }
             }
             Ok(())
         });

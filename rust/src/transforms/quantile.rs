@@ -15,6 +15,14 @@ use anyhow::{ensure, Result};
 use std::fmt;
 use std::sync::Arc;
 
+/// Events per lane group in [`QuantileMap::apply_batch`].
+const LANES: usize = 8;
+
+/// Grids at or below this many knots use the counting-scan segment
+/// search (O(N) per lane group but perfectly vectorizable); larger
+/// grids switch to the interleaved branchless binary search.
+const SCAN_KNOTS: usize = 32;
+
 /// Typed error for quantile-map application. `QuantileMap::apply`
 /// historically panicked on a NaN input (the `partition_point` index
 /// arithmetic underflowed); it is now total (NaN in, NaN out) and
@@ -140,10 +148,98 @@ impl QuantileMap {
         Ok(self.apply(score))
     }
 
-    /// Map a batch in place.
+    /// Map a batch in place. Lane-parallel: events are processed in
+    /// 8-wide groups whose segment search is branch-free (a counting
+    /// scan for small grids, an interleaved CMOV binary search for
+    /// large ones), so the compiler can keep all eight lanes in
+    /// flight. Each event's arithmetic is the exact operation
+    /// sequence of [`QuantileMap::apply`] — the early returns become
+    /// selects over the same loads — so results are bitwise equal to
+    /// the scalar path for every input, NaN and ±∞ included.
     pub fn apply_batch(&self, scores: &mut [f64]) {
-        for s in scores {
+        let mut chunks = scores.chunks_exact_mut(LANES);
+        if self.src.len() <= SCAN_KNOTS {
+            for chunk in &mut chunks {
+                self.apply_lanes_scan(chunk);
+            }
+        } else {
+            for chunk in &mut chunks {
+                self.apply_lanes_search(chunk);
+            }
+        }
+        // Remainder events (n % 8) take the scalar path — identical
+        // by definition.
+        for s in chunks.into_remainder() {
             *s = self.apply(*s);
+        }
+    }
+
+    /// 8-wide kernel for small grids: the segment index is a counting
+    /// scan (`idx = Σ_k [src[k] <= s]`) — one broadcast compare-and-
+    /// accumulate per knot across all lanes, no data-dependent
+    /// control flow.
+    #[inline]
+    fn apply_lanes_scan(&self, s: &mut [f64]) {
+        debug_assert_eq!(s.len(), LANES);
+        let mut count = [0usize; LANES];
+        for &knot in &self.src {
+            for l in 0..LANES {
+                count[l] += (knot <= s[l]) as usize;
+            }
+        }
+        self.finish_lanes(s, &count);
+    }
+
+    /// 8-wide kernel for large grids: a branchless binary search
+    /// (conditional-move steps, no mispredictable branches)
+    /// interleaved across all lanes — every step issues eight
+    /// independent loads, hiding memory latency the scalar
+    /// `partition_point` serializes.
+    #[inline]
+    fn apply_lanes_search(&self, s: &mut [f64]) {
+        debug_assert_eq!(s.len(), LANES);
+        let n = self.src.len();
+        let mut base = [0usize; LANES];
+        let mut size = n;
+        while size > 1 {
+            let half = size / 2;
+            for l in 0..LANES {
+                let mid = base[l] + half;
+                // Both arms are plain loads: compiles to CMOV.
+                base[l] = if self.src[mid] <= s[l] { mid } else { base[l] };
+            }
+            size -= half;
+        }
+        let mut count = [0usize; LANES];
+        for l in 0..LANES {
+            count[l] = base[l] + (self.src[base[l]] <= s[l]) as usize;
+        }
+        self.finish_lanes(s, &count);
+    }
+
+    /// Shared tail: `count[l]` is the number of knots `<= s[l]`
+    /// (exactly what `partition_point` returns on the interior).
+    /// The interpolation is computed unconditionally — for clamped
+    /// or NaN lanes it may produce garbage (never a panic: the index
+    /// is clamped into the slope table) — and the scalar path's
+    /// early returns are replayed as selects in the same priority
+    /// order: NaN, low clamp, high clamp, interpolate.
+    #[inline]
+    fn finish_lanes(&self, s: &mut [f64], count: &[usize; LANES]) {
+        let n = self.src.len();
+        for l in 0..LANES {
+            let x = s[l];
+            let i = count[l].saturating_sub(1).min(n - 2);
+            let interp = self.refq[i] + (x - self.src[i]) * self.slopes[i];
+            s[l] = if x.is_nan() {
+                f64::NAN
+            } else if x <= self.src[0] {
+                self.refq[0]
+            } else if x >= self.src[n - 1] {
+                self.refq[n - 1]
+            } else {
+                interp
+            };
         }
     }
 
@@ -408,6 +504,89 @@ mod tests {
         let want: Vec<f64> = batch.iter().map(|&x| m.apply(x)).collect();
         m.apply_batch(&mut batch);
         assert_eq!(batch, want);
+    }
+
+    /// The vectorized batch kernel is bitwise-equal to the scalar
+    /// `apply` for every input class — NaN, ±∞, knots, out-of-support
+    /// — on grids both sides of the scan/search threshold, at every
+    /// remainder length `len % 8 ∈ 0..=7`.
+    #[test]
+    fn prop_apply_batch_bitwise_matches_scalar() {
+        prop::check(256, |g| {
+            // Straddle SCAN_KNOTS: small grids take the counting
+            // scan, large ones the branchless search.
+            let n = if g.bool(0.5) {
+                g.usize(2..SCAN_KNOTS + 1)
+            } else {
+                g.usize(SCAN_KNOTS + 1..4 * SCAN_KNOTS)
+            };
+            let src = g.monotone_grid(n, -0.5, 1.5);
+            let refq = g.monotone_grid(n, 0.0, 1.0);
+            let m = QuantileMap::new(src.clone(), refq).unwrap();
+            for rem in 0..8usize {
+                let len = 8 * g.usize(0..3) + rem;
+                let mut batch: Vec<f64> = (0..len)
+                    .map(|_| match g.usize(0..12) {
+                        0 => f64::NAN,
+                        1 => f64::INFINITY,
+                        2 => f64::NEG_INFINITY,
+                        3 => src[0],
+                        4 => src[n - 1],
+                        5 => *g.pick(&src),
+                        6 => src[0] - g.f64(0.0..2.0),
+                        7 => src[n - 1] + g.f64(0.0..2.0),
+                        _ => g.f64(-1.0..2.0),
+                    })
+                    .collect();
+                let want: Vec<u64> =
+                    batch.iter().map(|&x| m.apply(x).to_bits()).collect();
+                m.apply_batch(&mut batch);
+                for (i, (got, want)) in
+                    batch.iter().map(|v| v.to_bits()).zip(&want).enumerate()
+                {
+                    prop_assert!(
+                        got == *want,
+                        "lane {i}/{len} (grid {n}): batch {:x} != scalar {want:x}",
+                        got
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Both lane kernels individually reproduce the scalar path on a
+    /// deliberately adversarial 8-lane group (the exact group shape
+    /// `apply_batch` dispatches).
+    #[test]
+    fn lane_kernels_match_scalar_on_edge_lanes() {
+        for n in [2, SCAN_KNOTS, SCAN_KNOTS + 1, 257] {
+            let src: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+            let refq: Vec<f64> =
+                (0..n).map(|i| (i as f64 / (n - 1) as f64).sqrt()).collect();
+            let m = QuantileMap::new(src, refq).unwrap();
+            let lanes = [
+                f64::NAN,
+                f64::NEG_INFINITY,
+                f64::INFINITY,
+                -0.0,
+                0.0,
+                1.0,
+                0.5,
+                1.0 + 1e-12,
+            ];
+            let want: Vec<u64> = lanes.iter().map(|&x| m.apply(x).to_bits()).collect();
+            let mut got = lanes;
+            m.apply_batch(&mut got);
+            for l in 0..8 {
+                assert_eq!(
+                    got[l].to_bits(),
+                    want[l],
+                    "grid {n} lane {l} input {}",
+                    lanes[l]
+                );
+            }
+        }
     }
 
     #[test]
