@@ -1,0 +1,66 @@
+//! Replicated control commands, as plain data.
+//!
+//! The cluster control plane replicates every update command to every
+//! serving node, so the command itself must be self-contained: no
+//! `Arc`s into one node's state, no prebuilt `QuantileMap`s — each
+//! node rebuilds derived state from the raw grids during its stage
+//! phase. That keeps the enum trivially serializable for a future
+//! socket transport and makes the replicated log replayable on a
+//! joining node.
+
+use crate::config::PredictorConfig;
+
+/// One cluster-wide control command. Mirrors the single-node
+/// `coordinator::deployment::ControlPlane` surface (shadow deploy,
+/// promote, decommission, quantile install) — the node's stage/commit
+/// split decomposes each into a routing-invisible preparation step
+/// and a single snapshot flip.
+#[derive(Clone, Debug)]
+pub enum ClusterCommand {
+    /// Deploy `cfg` and shadow it for `tenant`. `src`/`refq` are the
+    /// quantile alignment grids (monotone, equal length >= 2).
+    ShadowDeploy {
+        cfg: PredictorConfig,
+        tenant: String,
+        src: Vec<f64>,
+        refq: Vec<f64>,
+    },
+    /// Flip `tenant`'s live traffic to `predictor`.
+    Promote { tenant: String, predictor: String },
+    /// Remove `predictor` from routing and the registry.
+    Decommission { predictor: String },
+    /// Install a per-tenant quantile override on `predictor`.
+    InstallTenantQuantile {
+        predictor: String,
+        tenant: String,
+        src: Vec<f64>,
+        refq: Vec<f64>,
+    },
+    /// Swap `predictor`'s default quantile map.
+    SetDefaultQuantile {
+        predictor: String,
+        src: Vec<f64>,
+        refq: Vec<f64>,
+    },
+}
+
+impl ClusterCommand {
+    /// Short human-readable label for logs and status output.
+    pub fn describe(&self) -> String {
+        match self {
+            ClusterCommand::ShadowDeploy { cfg, tenant, .. } => {
+                format!("shadow-deploy {} for {tenant}", cfg.name)
+            }
+            ClusterCommand::Promote { tenant, predictor } => {
+                format!("promote {predictor} for {tenant}")
+            }
+            ClusterCommand::Decommission { predictor } => format!("decommission {predictor}"),
+            ClusterCommand::InstallTenantQuantile {
+                predictor, tenant, ..
+            } => format!("install quantile {predictor}/{tenant}"),
+            ClusterCommand::SetDefaultQuantile { predictor, .. } => {
+                format!("set default quantile {predictor}")
+            }
+        }
+    }
+}

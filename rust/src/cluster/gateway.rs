@@ -1,0 +1,162 @@
+//! Tenant-consistent request routing over the live membership.
+//!
+//! The gateway owns no state of its own: it loads the membership
+//! snapshot (published copy-on-write by the control plane through a
+//! `SnapCell`, exactly like the engine's routing snapshots) and picks
+//! a node by rendezvous (highest-random-weight) hashing of the
+//! tenant. Rendezvous gives the two properties the cluster needs
+//! without a coordination round:
+//!
+//! * **stability** — while the membership is unchanged, a tenant
+//!   always lands on the same node, so its lake records and shadow
+//!   mirrors accumulate in one place;
+//! * **minimal disruption** — when a node crashes or leaves, only the
+//!   tenants it owned remap (each to its next-best node); everyone
+//!   else's placement is untouched.
+//!
+//! Fail-over is the candidate order itself: scoring walks nodes in
+//! descending weight and uses the first one that is `Serving`, so a
+//! crash between the membership snapshot and the call costs a skip,
+//! never a dropped request. Engine errors (unroutable tenant, feature
+//! dim mismatch) are *request* errors, identical on every replica,
+//! and propagate without retry.
+
+use super::node::{EpochScored, EpochScoredBatch, NodeHandle, NodeState};
+use super::transport::NodeId;
+use crate::coordinator::{ScoreRequest, ScoreResponse};
+use crate::util::swap::SnapCell;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// The live membership: only `Serving` nodes, published by the
+/// control plane on every join/leave/crash.
+pub struct Membership {
+    pub nodes: Vec<Arc<NodeHandle>>,
+}
+
+/// A gateway-scored response: the engine response plus the node that
+/// served it and the committed-epoch window it is attributable to.
+pub struct GatewayResponse {
+    pub node: NodeId,
+    pub epoch_lo: u64,
+    pub epoch_hi: u64,
+    pub resp: ScoreResponse,
+}
+
+/// A gateway-scored batch (routed whole, by its first event's tenant).
+pub struct GatewayBatch {
+    pub node: NodeId,
+    pub epoch_lo: u64,
+    pub epoch_hi: u64,
+    pub resps: Vec<ScoreResponse>,
+}
+
+/// The scoring front door of the cluster.
+pub struct ClusterGateway {
+    members: Arc<SnapCell<Membership>>,
+}
+
+fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer: cheap, well-mixed avalanche.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn weight(tenant_hash: u64, node: NodeId) -> u64 {
+    mix64(tenant_hash ^ mix64(node as u64))
+}
+
+impl ClusterGateway {
+    pub(crate) fn new(members: Arc<SnapCell<Membership>>) -> ClusterGateway {
+        ClusterGateway { members }
+    }
+
+    /// Current membership snapshot (wait-free load).
+    pub fn members(&self) -> Arc<Membership> {
+        self.members.load()
+    }
+
+    /// Fail-over candidate order for `tenant`: members sorted by
+    /// descending rendezvous weight (node id breaks exact ties).
+    fn ranked(&self, tenant: &str) -> Vec<Arc<NodeHandle>> {
+        let members = self.members.load();
+        let th = fnv1a64(tenant);
+        let mut ranked: Vec<(u64, Arc<NodeHandle>)> = members
+            .nodes
+            .iter()
+            .map(|n| (weight(th, n.id), Arc::clone(n)))
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.id.cmp(&b.1.id)));
+        ranked.into_iter().map(|(_, n)| n).collect()
+    }
+
+    /// The node currently owning `tenant`, if any member serves.
+    pub fn route(&self, tenant: &str) -> Option<Arc<NodeHandle>> {
+        self.ranked(tenant)
+            .into_iter()
+            .find(|n| n.state() == NodeState::Serving)
+    }
+
+    /// Score one request on the tenant's node, failing over past
+    /// non-serving members.
+    pub fn score(&self, req: &ScoreRequest) -> Result<GatewayResponse> {
+        for node in self.ranked(&req.intent.tenant) {
+            if node.state() != NodeState::Serving {
+                continue;
+            }
+            let EpochScored {
+                resp,
+                epoch_lo,
+                epoch_hi,
+            } = node.score(req)?;
+            return Ok(GatewayResponse {
+                node: node.id,
+                epoch_lo,
+                epoch_hi,
+                resp,
+            });
+        }
+        bail!(
+            "no serving node for tenant '{}' (membership empty or draining)",
+            req.intent.tenant
+        )
+    }
+
+    /// Score a whole batch on one node, routed by the first event's
+    /// tenant (a batch is one request; splitting it would break the
+    /// engine's whole-batch admission and grouping semantics).
+    pub fn score_batch(&self, reqs: &[ScoreRequest]) -> Result<GatewayBatch> {
+        let tenant = reqs
+            .first()
+            .map(|r| r.intent.tenant.as_str())
+            .unwrap_or("");
+        for node in self.ranked(tenant) {
+            if node.state() != NodeState::Serving {
+                continue;
+            }
+            let EpochScoredBatch {
+                resps,
+                epoch_lo,
+                epoch_hi,
+            } = node.score_batch(reqs)?;
+            return Ok(GatewayBatch {
+                node: node.id,
+                epoch_lo,
+                epoch_hi,
+                resps,
+            });
+        }
+        bail!("no serving node for batch (membership empty or draining)")
+    }
+}

@@ -1,0 +1,78 @@
+//! The cluster plane: N in-process serving nodes behind one gateway,
+//! with a replicated control plane that publishes every model update
+//! through a **two-phase publish** so no event anywhere in the fleet
+//! is ever scored by a mixed-version view.
+//!
+//! The paper's deployment is a fleet, not a process: a promote must
+//! flip atomically across every serving replica while the request
+//! path keeps running (PAPER.md §2.5 — rolling updates + warm-up).
+//! PRs 1–7 reproduced seamlessness *inside* one `Engine`; this module
+//! is the layer above it:
+//!
+//! * [`node::NodeHandle`] — one serving replica: an unmodified
+//!   [`crate::coordinator::Engine`] plus a control thread that stages
+//!   and commits replicated commands, and an epoch word that stamps
+//!   every response with the snapshot generation(s) it could have
+//!   been scored under.
+//! * [`transport::Transport`] — the operator→node control channel.
+//!   The in-process [`transport::ChannelTransport`] is the only
+//!   implementation today; commands are plain data
+//!   ([`command::ClusterCommand`]) so a socket transport can slot in
+//!   without touching the protocol.
+//! * [`gateway::ClusterGateway`] — tenant-consistent request routing
+//!   by rendezvous (highest-random-weight) hashing over the live
+//!   membership, with fail-over to the next-best node when the owner
+//!   is gone. Scoring never blocks on the control plane.
+//! * [`plane::MuseCluster`] — the replicated control plane. It owns
+//!   desired state off the request path (the Latchkey split: the
+//!   operator computes, nodes consume) and drives the two-phase
+//!   publish: phase 1 **stages** the command on every serving node
+//!   (validation + side effects invisible to routing) and collects
+//!   acks; phase 2 **commits**, flipping each node's published
+//!   snapshot. Nodes that never ack are timed out, marked crashed and
+//!   fenced out of the membership; survivors flip. A committed
+//!   command is appended to the replicated log so a joining node can
+//!   replay its way to the committed epoch before taking traffic.
+//!
+//! ## Epoch rules
+//!
+//! Each node carries one `AtomicU64` epoch word: value `2k` means
+//! "stable at committed epoch `k`", `2k+1` means "flipping from `k`
+//! to `k+1`". A scoring call reads the word before and after the
+//! engine call; the response is then attributable to the closed
+//! window `[e1 >> 1, (e2 >> 1) + (e2 & 1)]` of committed epochs. With
+//! no concurrent publish the window is a single epoch; racing a flip
+//! widens it to exactly the two adjacent epochs. The cluster-wide
+//! seamlessness invariant (verified by the testkit cluster runner and
+//! the `cluster_storm` scenario) is that every response equals the
+//! oracle's answer at *some* epoch inside its window — i.e. no torn,
+//! mixed-version scoring, ever.
+//!
+//! ## Failure matrix
+//!
+//! | crash point            | node state            | cluster outcome |
+//! |------------------------|-----------------------|-----------------|
+//! | before stage ack       | nothing staged        | operator times the node out, marks it crashed, proceeds with survivors |
+//! | after stage ack, before commit apply | staged, never flips | survivors flip; the node is fenced at the old epoch |
+//! | mid-flip (after apply, before commit ack) | flipped | survivors flip; the node is fenced but consistent |
+//! | stale-epoch commit     | rejected (`Nack`)     | defensive: an out-of-protocol commit never applies |
+//!
+//! A validation `Nack` (deterministic engines nack in unison) aborts
+//! the publish cluster-wide: staged side effects are undone on every
+//! node and the epoch does not advance — outcome parity with the
+//! single-node control plane.
+
+pub mod command;
+pub mod gateway;
+pub mod node;
+pub mod plane;
+pub mod transport;
+
+pub use command::ClusterCommand;
+pub use gateway::{ClusterGateway, GatewayBatch, GatewayResponse, Membership};
+pub use node::{EpochScored, FaultPoint, NodeHandle, NodeState};
+pub use plane::{ClusterOptions, ClusterStatus, MuseCluster, NodeStatus, PoolFactory, PublishStats};
+pub use transport::{
+    AckKind, ChannelTransport, ControlMsg, ControlReply, NodeEndpoint, NodeId, Transport,
+    TransportError,
+};

@@ -1,0 +1,410 @@
+//! One serving replica: an unmodified [`Engine`] plus the control
+//! loop that stages and commits replicated commands, and the epoch
+//! word that makes every response attributable to a committed
+//! snapshot generation.
+//!
+//! ## Stage/commit decomposition
+//!
+//! Each [`ClusterCommand`] splits so that the staged half is
+//! invisible to routing and the committed half is a single published
+//! snapshot flip — every intermediate state a request can observe is
+//! response-equivalent to either the old epoch or the new one:
+//!
+//! * `ShadowDeploy` — stage: build the quantile map and
+//!   `registry.deploy` (deployed-but-unrouted predictors never affect
+//!   responses); commit: append the shadow rule and republish. Abort
+//!   undoes the staged deploy.
+//! * `Promote` / `Decommission` — stage: validate only (the routing
+//!   rewrite cannot be made invisible, so it is deferred wholesale);
+//!   commit: the single-node `ControlPlane` op, which ends in one
+//!   snapshot publication.
+//! * Quantile installs — stage: build + validate the map; commit:
+//!   install (copy-on-write inside `QuantileTable`) and republish.
+//!
+//! ## Epoch word
+//!
+//! `2k` = stable at committed epoch `k`; `2k+1` = flipping from `k`
+//! to `k+1`. [`NodeHandle::score`] reads the word around the engine
+//! call and reports the closed window of epochs the response could
+//! belong to. The window is **never** re-scored on a race: re-running
+//! the engine would double-append lake records and double-count
+//! events; attribution, not retry, is the contract.
+
+use super::command::ClusterCommand;
+use super::transport::{AckKind, ControlMsg, ControlReply, NodeEndpoint, NodeId};
+use crate::config::{Condition, Intent, ShadowRule};
+use crate::coordinator::{ControlPlane, Engine, ScoreRequest, ScoreResponse};
+use crate::transforms::QuantileMap;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Node lifecycle state, as the gateway and operator see it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Spawned, replaying the committed log; not in the membership.
+    Joining,
+    /// Live: routed traffic and replicated publishes.
+    Serving,
+    /// Leaving gracefully: out of the membership, settling shadows.
+    Draining,
+    /// Gone after a graceful leave.
+    Left,
+    /// Fenced: timed out, nacked a commit, or died by fault injection.
+    Crashed,
+}
+
+impl NodeState {
+    fn as_u8(self) -> u8 {
+        match self {
+            NodeState::Joining => 0,
+            NodeState::Serving => 1,
+            NodeState::Draining => 2,
+            NodeState::Left => 3,
+            NodeState::Crashed => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> NodeState {
+        match v {
+            0 => NodeState::Joining,
+            1 => NodeState::Serving,
+            2 => NodeState::Draining,
+            3 => NodeState::Left,
+            _ => NodeState::Crashed,
+        }
+    }
+
+    /// Status-endpoint label.
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeState::Joining => "joining",
+            NodeState::Serving => "serving",
+            NodeState::Draining => "draining",
+            NodeState::Left => "left",
+            NodeState::Crashed => "crashed",
+        }
+    }
+}
+
+/// Fault-injection points for the two-phase publish, armed per node
+/// and consumed by the next publish that reaches the point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FaultPoint {
+    #[default]
+    None,
+    /// Die mid-phase-1: the stage request arrives but is never acked.
+    CrashBeforeStageAck,
+    /// Die mid-flip: staged and acked, but the commit never applies.
+    CrashBeforeCommitApply,
+    /// Die after the flip applied but before the commit ack.
+    CrashAfterCommitApply,
+}
+
+/// A response stamped with the committed-epoch window it could have
+/// been scored under (see module docs).
+pub struct EpochScored {
+    pub resp: ScoreResponse,
+    pub epoch_lo: u64,
+    pub epoch_hi: u64,
+}
+
+/// A batch response with its epoch window.
+pub struct EpochScoredBatch {
+    pub resps: Vec<ScoreResponse>,
+    pub epoch_lo: u64,
+    pub epoch_hi: u64,
+}
+
+/// Shared handle to one serving node. The control loop, the gateway
+/// and the operator all hold `Arc<NodeHandle>`; the engine itself is
+/// untouched by clustering.
+pub struct NodeHandle {
+    pub id: NodeId,
+    pub engine: Arc<Engine>,
+    /// Epoch word: `2k` stable, `2k+1` flipping (module docs).
+    epoch: AtomicU64,
+    state: AtomicU8,
+    fault: Mutex<FaultPoint>,
+}
+
+impl NodeHandle {
+    pub(crate) fn new(id: NodeId, engine: Arc<Engine>, state: NodeState) -> NodeHandle {
+        NodeHandle {
+            id,
+            engine,
+            epoch: AtomicU64::new(0),
+            state: AtomicU8::new(state.as_u8()),
+            fault: Mutex::new(FaultPoint::None),
+        }
+    }
+
+    pub fn state(&self) -> NodeState {
+        NodeState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    pub(crate) fn set_state(&self, s: NodeState) {
+        self.state.store(s.as_u8(), Ordering::Release);
+    }
+
+    /// Committed epoch this node last flipped to.
+    pub fn committed_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire) >> 1
+    }
+
+    /// True while a flip is in progress on this node.
+    pub fn is_flipping(&self) -> bool {
+        self.epoch.load(Ordering::Acquire) & 1 == 1
+    }
+
+    /// Arm a fault for the next publish that reaches its point.
+    pub fn arm_fault(&self, fault: FaultPoint) {
+        *self.fault.lock().unwrap() = fault;
+    }
+
+    fn take_fault_if(&self, point: FaultPoint) -> bool {
+        let mut g = self.fault.lock().unwrap();
+        if *g == point {
+            *g = FaultPoint::None;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Score one request, stamped with its epoch window.
+    pub fn score(&self, req: &ScoreRequest) -> Result<EpochScored> {
+        let e1 = self.epoch.load(Ordering::Acquire);
+        let resp = self.engine.score(req)?;
+        let e2 = self.epoch.load(Ordering::Acquire);
+        Ok(EpochScored {
+            resp,
+            epoch_lo: e1 >> 1,
+            epoch_hi: (e2 >> 1) + (e2 & 1),
+        })
+    }
+
+    /// Score a whole batch, stamped with its epoch window.
+    pub fn score_batch(&self, reqs: &[ScoreRequest]) -> Result<EpochScoredBatch> {
+        let e1 = self.epoch.load(Ordering::Acquire);
+        let resps = self.engine.score_batch(reqs)?;
+        let e2 = self.epoch.load(Ordering::Acquire);
+        Ok(EpochScoredBatch {
+            resps,
+            epoch_lo: e1 >> 1,
+            epoch_hi: (e2 >> 1) + (e2 & 1),
+        })
+    }
+}
+
+/// Staged (phase-1) state held between stage and commit/abort.
+enum Staged {
+    ShadowDeploy { name: String, tenant: String },
+    Promote { tenant: String, predictor: String },
+    Decommission { predictor: String },
+    InstallTenantQuantile { predictor: String, tenant: String, map: Arc<QuantileMap> },
+    SetDefaultQuantile { predictor: String, map: Arc<QuantileMap> },
+}
+
+/// Phase 1: validate and prepare, with no routing-visible effect.
+fn stage(engine: &Engine, cmd: &ClusterCommand) -> Result<Staged> {
+    match cmd {
+        ClusterCommand::ShadowDeploy {
+            cfg,
+            tenant,
+            src,
+            refq,
+        } => {
+            let map = Arc::new(QuantileMap::new(src.clone(), refq.clone())?);
+            // Deployed-but-unrouted predictors never affect responses:
+            // the next lazy republish carries the entry, but no rule
+            // targets it until the commit appends the shadow rule.
+            engine.registry.deploy(cfg, map)?;
+            Ok(Staged::ShadowDeploy {
+                name: cfg.name.clone(),
+                tenant: tenant.clone(),
+            })
+        }
+        ClusterCommand::Promote { tenant, predictor } => {
+            // Mirror ControlPlane::promote's checks, in its order, so
+            // the nack reason matches the single-node error.
+            ensure!(
+                engine.registry.get(predictor).is_some(),
+                "cannot promote undeployed predictor '{predictor}'"
+            );
+            let routing = engine.router.snapshot();
+            let intent = Intent {
+                tenant: tenant.clone(),
+                ..Intent::default()
+            };
+            ensure!(
+                routing
+                    .scoring_rules
+                    .iter()
+                    .any(|r| r.condition.matches(&intent)),
+                "no scoring rule matches tenant '{tenant}'"
+            );
+            Ok(Staged::Promote {
+                tenant: tenant.clone(),
+                predictor: predictor.clone(),
+            })
+        }
+        ClusterCommand::Decommission { predictor } => {
+            ensure!(
+                engine.registry.get(predictor).is_some(),
+                "predictor '{predictor}' is not deployed"
+            );
+            Ok(Staged::Decommission {
+                predictor: predictor.clone(),
+            })
+        }
+        ClusterCommand::InstallTenantQuantile {
+            predictor,
+            tenant,
+            src,
+            refq,
+        } => {
+            let map = Arc::new(QuantileMap::new(src.clone(), refq.clone())?);
+            engine.predictor(predictor)?;
+            Ok(Staged::InstallTenantQuantile {
+                predictor: predictor.clone(),
+                tenant: tenant.clone(),
+                map,
+            })
+        }
+        ClusterCommand::SetDefaultQuantile {
+            predictor,
+            src,
+            refq,
+        } => {
+            let map = Arc::new(QuantileMap::new(src.clone(), refq.clone())?);
+            engine.predictor(predictor)?;
+            Ok(Staged::SetDefaultQuantile {
+                predictor: predictor.clone(),
+                map,
+            })
+        }
+    }
+}
+
+/// Phase 2: flip the staged command into the published snapshot.
+fn commit(engine: &Engine, staged: Staged) -> Result<()> {
+    let cp = ControlPlane::new(engine);
+    match staged {
+        Staged::ShadowDeploy { name, tenant } => {
+            // The registry half happened at stage; this is the second
+            // half of ControlPlane::shadow_deploy, verbatim.
+            let mut routing = engine.router.snapshot().as_ref().clone();
+            routing.shadow_rules.push(ShadowRule {
+                description: format!("shadow {name} for {tenant}"),
+                condition: Condition {
+                    tenants: vec![tenant],
+                    ..Condition::default()
+                },
+                target_predictors: vec![name.as_str().into()],
+            });
+            engine.router.swap(routing);
+            engine.republish();
+            Ok(())
+        }
+        Staged::Promote { tenant, predictor } => cp.promote(&tenant, &predictor),
+        Staged::Decommission { predictor } => cp.decommission(&predictor),
+        Staged::InstallTenantQuantile {
+            predictor,
+            tenant,
+            map,
+        } => {
+            engine.predictor(&predictor)?.install_tenant_quantile(&tenant, map);
+            Ok(())
+        }
+        Staged::SetDefaultQuantile { predictor, map } => {
+            engine.predictor(&predictor)?.set_default_quantile(map);
+            engine.republish();
+            Ok(())
+        }
+    }
+}
+
+/// Undo a staged command's side effects (abort path).
+fn undo_stage(engine: &Engine, staged: Staged) {
+    if let Staged::ShadowDeploy { name, .. } = staged {
+        let _ = engine.registry.decommission(&name);
+        engine.republish();
+    }
+}
+
+/// The node's control loop: runs on a dedicated thread, consuming the
+/// transport inbox until shutdown or disconnect. Exactly one staged
+/// publish can be pending at a time (the operator serializes
+/// publishes), and a commit or abort for any other epoch is rejected
+/// as stale.
+pub(crate) fn node_loop(node: Arc<NodeHandle>, endpoint: NodeEndpoint) {
+    let reply = |epoch: u64, kind: AckKind| {
+        let _ = endpoint.replies.send(ControlReply {
+            node: node.id,
+            epoch,
+            kind,
+        });
+    };
+    let mut staged: Option<(u64, Staged)> = None;
+    while let Ok(msg) = endpoint.inbox.recv() {
+        match msg {
+            ControlMsg::Stage { epoch, cmd } => {
+                if node.take_fault_if(FaultPoint::CrashBeforeStageAck) {
+                    node.set_state(NodeState::Crashed);
+                    return; // dies silently; the operator times out
+                }
+                // A leftover staged publish means the operator gave up
+                // on us mid-protocol (it will have fenced this node);
+                // unwind it so staging stays idempotent regardless.
+                if let Some((_, old)) = staged.take() {
+                    undo_stage(&node.engine, old);
+                }
+                match stage(&node.engine, &cmd) {
+                    Ok(st) => {
+                        staged = Some((epoch, st));
+                        reply(epoch, AckKind::Staged);
+                    }
+                    Err(e) => reply(epoch, AckKind::Nack(e.to_string())),
+                }
+            }
+            ControlMsg::Commit { epoch } => {
+                let matches = staged.as_ref().is_some_and(|(e, _)| *e == epoch);
+                if !matches {
+                    reply(epoch, AckKind::Nack(format!("stale commit for epoch {epoch}")));
+                    continue;
+                }
+                let (_, st) = staged.take().expect("staged checked above");
+                if node.take_fault_if(FaultPoint::CrashBeforeCommitApply) {
+                    node.set_state(NodeState::Crashed);
+                    return; // fenced at the old epoch, staged state abandoned
+                }
+                node.epoch.store(2 * epoch - 1, Ordering::Release);
+                let applied = commit(&node.engine, st);
+                node.epoch.store(2 * epoch, Ordering::Release);
+                if node.take_fault_if(FaultPoint::CrashAfterCommitApply) {
+                    node.set_state(NodeState::Crashed);
+                    return; // flipped but never acked: fenced, consistent
+                }
+                match applied {
+                    Ok(()) => reply(epoch, AckKind::Committed),
+                    Err(e) => reply(epoch, AckKind::Nack(e.to_string())),
+                }
+            }
+            ControlMsg::Abort { epoch } => match staged.take() {
+                Some((e, st)) if e == epoch => {
+                    undo_stage(&node.engine, st);
+                    reply(epoch, AckKind::Aborted);
+                }
+                Some(other) => {
+                    staged = Some(other);
+                    reply(epoch, AckKind::Nack(format!("stale abort for epoch {epoch}")));
+                }
+                // Nothing staged (we nacked the stage): ack the abort
+                // so the operator's bookkeeping stays simple.
+                None => reply(epoch, AckKind::Aborted),
+            },
+            ControlMsg::Shutdown => break,
+        }
+    }
+}

@@ -1,0 +1,860 @@
+//! The replicated control plane: desired state, the two-phase
+//! publish, membership and node lifecycle.
+//!
+//! [`MuseCluster`] is the operator. It owns the committed command log
+//! and the epoch counter off the request path (the Latchkey split:
+//! the operator computes and replicates, nodes consume snapshots);
+//! the gateway only ever reads the membership `SnapCell` it
+//! publishes. All control-plane mutation — publish, join, leave,
+//! crash — serializes on one mutex, so the protocol below never runs
+//! concurrently with itself.
+//!
+//! ## Two-phase publish
+//!
+//! 1. **Stage**: send `Stage { epoch, cmd }` to every serving node;
+//!    each validates and prepares with no routing-visible effect,
+//!    then acks. Nodes that nack (validation failure — deterministic
+//!    engines nack in unison) abort the publish cluster-wide; nodes
+//!    that stay silent past the ack timeout are marked crashed and
+//!    fenced out of the membership.
+//! 2. **Flip**: send `Commit { epoch }` to every staged node; each
+//!    flips its published snapshot (walking its epoch word through
+//!    `2k -> 2k+1 -> 2k+2`) and acks. Silent or nacking nodes are
+//!    fenced; as long as one node flips, the epoch commits and the
+//!    command is appended to the replicated log.
+//!
+//! The committed log is what makes `join` safe: a new node replays it
+//! epoch by epoch (stage + commit per entry, while still outside the
+//! membership) and only then starts serving — it can never answer a
+//! request from a world older than the committed epoch.
+
+use super::command::ClusterCommand;
+use super::gateway::{ClusterGateway, Membership};
+use super::node::{node_loop, FaultPoint, NodeHandle, NodeState};
+use super::transport::{AckKind, ChannelTransport, ControlMsg, NodeId, Transport};
+use crate::config::MuseConfig;
+use crate::coordinator::Engine;
+use crate::metrics::LatencyHistogram;
+use crate::runtime::ModelPool;
+use crate::util::swap::SnapCell;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Builds one node's model pool. Nodes do not share pools — each
+/// replica loads its own experts, as separate processes would.
+pub type PoolFactory = Box<dyn Fn() -> Result<Arc<ModelPool>> + Send + Sync>;
+
+/// Cluster construction knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterOptions {
+    /// Initial node count.
+    pub nodes: usize,
+    /// Per-phase ack collection budget. In-process acks arrive in
+    /// microseconds; this bounds how long a dead node can stall a
+    /// publish before it is fenced.
+    pub ack_timeout: Duration,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> ClusterOptions {
+        ClusterOptions {
+            nodes: 4,
+            ack_timeout: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Control-plane event counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PublishStats {
+    /// Committed publishes (the committed epoch equals this).
+    pub publishes: u64,
+    /// Publishes aborted by a validation nack.
+    pub aborted: u64,
+    /// Nodes fenced (timeout, commit nack, injected death, forced).
+    pub crashes: u64,
+    /// Nodes that joined (including the initial set).
+    pub joins: u64,
+    /// Graceful leaves.
+    pub leaves: u64,
+}
+
+/// One node's row in the status report.
+pub struct NodeStatus {
+    pub id: NodeId,
+    pub state: NodeState,
+    /// Committed epoch the node last flipped to.
+    pub epoch: u64,
+    pub flipping: bool,
+    pub lake_records: usize,
+    /// Events scored on this node (live + batch).
+    pub scored: u64,
+}
+
+/// The `/v1/cluster` view.
+pub struct ClusterStatus {
+    pub committed_epoch: u64,
+    pub stats: PublishStats,
+    pub flip_p50_ms: f64,
+    pub flip_p99_ms: f64,
+    pub nodes: Vec<NodeStatus>,
+}
+
+struct PlaneInner {
+    /// Every node ever created, in join order. Crashed and left nodes
+    /// stay here: their engines still hold scored history, and
+    /// cluster-wide conservation is accounted over all of them.
+    nodes: Vec<Arc<NodeHandle>>,
+    threads: Vec<thread::JoinHandle<()>>,
+    committed: u64,
+    log: Vec<ClusterCommand>,
+    next_id: NodeId,
+    stats: PublishStats,
+}
+
+/// The cluster: replicated control plane + membership + gateway.
+pub struct MuseCluster {
+    config: MuseConfig,
+    pools: PoolFactory,
+    opts: ClusterOptions,
+    transport: Arc<ChannelTransport>,
+    members: Arc<SnapCell<Membership>>,
+    gateway: Arc<ClusterGateway>,
+    /// Stage-send to last-commit-ack latency per committed publish.
+    flip_latency: LatencyHistogram,
+    inner: Mutex<PlaneInner>,
+}
+
+impl MuseCluster {
+    /// Build a cluster of `opts.nodes` replicas of `config`, each
+    /// with its own engine and model pool.
+    pub fn build(
+        config: &MuseConfig,
+        opts: ClusterOptions,
+        pools: PoolFactory,
+    ) -> Result<Arc<MuseCluster>> {
+        ensure!(opts.nodes >= 1, "cluster needs at least one node");
+        config.validate()?;
+        let members = Arc::new(SnapCell::new(Arc::new(Membership { nodes: Vec::new() })));
+        let cluster = Arc::new(MuseCluster {
+            config: config.clone(),
+            pools,
+            opts,
+            transport: Arc::new(ChannelTransport::new()),
+            gateway: Arc::new(ClusterGateway::new(Arc::clone(&members))),
+            members,
+            flip_latency: LatencyHistogram::new(),
+            inner: Mutex::new(PlaneInner {
+                nodes: Vec::new(),
+                threads: Vec::new(),
+                committed: 0,
+                log: Vec::new(),
+                next_id: 0,
+                stats: PublishStats::default(),
+            }),
+        });
+        for _ in 0..opts.nodes {
+            cluster.join()?;
+        }
+        Ok(cluster)
+    }
+
+    /// The scoring front door.
+    pub fn gateway(&self) -> Arc<ClusterGateway> {
+        Arc::clone(&self.gateway)
+    }
+
+    pub fn committed_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().committed
+    }
+
+    pub fn stats(&self) -> PublishStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    pub fn options(&self) -> ClusterOptions {
+        self.opts
+    }
+
+    /// Every node ever created (serving, draining, left and crashed) —
+    /// the aggregation domain for cluster-wide conservation checks.
+    pub fn nodes(&self) -> Vec<Arc<NodeHandle>> {
+        self.inner.lock().unwrap().nodes.clone()
+    }
+
+    /// Nodes currently in the membership.
+    pub fn serving_nodes(&self) -> Vec<Arc<NodeHandle>> {
+        self.members.load().nodes.clone()
+    }
+
+    pub fn command_log_len(&self) -> usize {
+        self.inner.lock().unwrap().log.len()
+    }
+
+    /// Flip latency (stage send to last commit ack) percentile;
+    /// `p` is in `[0, 100]` like [`crate::metrics::LatencyHistogram`].
+    pub fn flip_percentile_ms(&self, p: f64) -> f64 {
+        self.flip_latency.percentile_ns(p) as f64 / 1e6
+    }
+
+    /// Replicate `cmd` to every serving node via two-phase publish.
+    /// Returns the committed epoch; `Err` means the cluster state is
+    /// unchanged (validation abort) or no node survived the flip.
+    pub fn publish(&self, cmd: ClusterCommand) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let epoch = inner.committed + 1;
+        let targets: Vec<Arc<NodeHandle>> = inner
+            .nodes
+            .iter()
+            .filter(|n| n.state() == NodeState::Serving)
+            .cloned()
+            .collect();
+        ensure!(!targets.is_empty(), "publish with no serving nodes");
+        let t0 = Instant::now();
+
+        // Phase 1: stage everywhere.
+        let mut awaiting: Vec<NodeId> = Vec::new();
+        let mut dead: Vec<NodeId> = Vec::new();
+        for n in &targets {
+            match self.transport.send(
+                n.id,
+                ControlMsg::Stage {
+                    epoch,
+                    cmd: cmd.clone(),
+                },
+            ) {
+                Ok(()) => awaiting.push(n.id),
+                Err(_) => dead.push(n.id),
+            }
+        }
+        let mut staged: Vec<NodeId> = Vec::new();
+        let mut nacks: Vec<(NodeId, String)> = Vec::new();
+        self.collect(epoch, &mut awaiting, |id, kind| match kind {
+            AckKind::Staged => staged.push(id),
+            AckKind::Nack(reason) => nacks.push((id, reason)),
+            _ => {}
+        });
+        dead.append(&mut awaiting); // silent past the timeout: crashed mid-phase-1
+
+        if let Some((nacker, reason)) = nacks.first().cloned() {
+            // Validation failed. Unwind the staged nodes so the epoch
+            // does not advance anywhere, then surface the nack.
+            let mut aborting: Vec<NodeId> = Vec::new();
+            for &id in &staged {
+                if self
+                    .transport
+                    .send(id, ControlMsg::Abort { epoch })
+                    .is_ok()
+                {
+                    aborting.push(id);
+                }
+            }
+            self.collect(epoch, &mut aborting, |_, _| {});
+            self.fence(&mut inner, &dead);
+            inner.stats.aborted += 1;
+            self.republish_members(&inner);
+            bail!("publish rejected at stage by node {nacker}: {reason}");
+        }
+
+        if staged.is_empty() {
+            self.fence(&mut inner, &dead);
+            self.republish_members(&inner);
+            bail!("all serving nodes lost during stage of epoch {epoch}");
+        }
+
+        // Phase 2: flip every staged node.
+        let mut committing: Vec<NodeId> = Vec::new();
+        for &id in &staged {
+            match self.transport.send(id, ControlMsg::Commit { epoch }) {
+                Ok(()) => committing.push(id),
+                Err(_) => dead.push(id),
+            }
+        }
+        let mut committed_nodes = 0usize;
+        self.collect(epoch, &mut committing, |id, kind| match kind {
+            AckKind::Committed => committed_nodes += 1,
+            // A commit nack (stale epoch, failed apply) means the node
+            // diverged from the replicated state machine: fence it.
+            _ => dead.push(id),
+        });
+        dead.append(&mut committing); // silent mid-flip: crashed, fenced
+
+        self.fence(&mut inner, &dead);
+        if committed_nodes == 0 {
+            self.republish_members(&inner);
+            bail!("no node survived the flip of epoch {epoch}");
+        }
+        inner.committed = epoch;
+        inner.log.push(cmd);
+        inner.stats.publishes += 1;
+        self.flip_latency.record(t0.elapsed().as_nanos() as u64);
+        self.republish_members(&inner);
+        Ok(epoch)
+    }
+
+    /// Spin up a new node and catch it up: it replays the committed
+    /// command log while still outside the membership (staged state,
+    /// no traffic), then starts serving. Serialized with publishes by
+    /// the plane mutex, so the log cannot move under the replay.
+    pub fn join(&self) -> Result<NodeId> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let endpoint = self.transport.attach(id);
+        let pool = (self.pools)()?;
+        let engine = Arc::new(Engine::build(&self.config, pool)?);
+        let node = Arc::new(NodeHandle::new(id, engine, NodeState::Joining));
+        let handle = {
+            let n = Arc::clone(&node);
+            thread::Builder::new()
+                .name(format!("muse-node-{id}"))
+                .spawn(move || node_loop(n, endpoint))?
+        };
+        inner.nodes.push(Arc::clone(&node));
+        inner.threads.push(handle);
+
+        let log: Vec<(u64, ClusterCommand)> = inner
+            .log
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, c)| ((i + 1) as u64, c))
+            .collect();
+        for (epoch, cmd) in log {
+            // Committed commands were valid when they committed and
+            // replay deterministically; any failure here is a real
+            // divergence, so the node never joins.
+            if let Err(err) = self.replay_step(id, epoch, cmd) {
+                node.set_state(NodeState::Crashed);
+                self.transport.detach(id);
+                inner.stats.crashes += 1;
+                bail!("node {id} failed catch-up at epoch {epoch}: {err:#}");
+            }
+        }
+        node.set_state(NodeState::Serving);
+        inner.stats.joins += 1;
+        self.republish_members(&inner);
+        Ok(id)
+    }
+
+    /// Graceful leave: out of the membership first, then settle the
+    /// node's shadow mirrors, then stop its control loop. The engine
+    /// (and its scored history) stays owned by the cluster.
+    pub fn leave(&self, id: NodeId) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let node = self.find(&inner, id)?;
+        ensure!(
+            node.state() == NodeState::Serving,
+            "node {id} is {} — only serving nodes can leave",
+            node.state().name()
+        );
+        node.set_state(NodeState::Draining);
+        self.republish_members(&inner);
+        node.engine.drain_shadows();
+        node.set_state(NodeState::Left);
+        let _ = self.transport.send(id, ControlMsg::Shutdown);
+        self.transport.detach(id);
+        inner.stats.leaves += 1;
+        self.republish_members(&inner);
+        Ok(())
+    }
+
+    /// Forced node death (fault injection): fence immediately, no
+    /// drain. In-flight requests on the node still complete — the
+    /// engine is consistent; the node is simply no longer routable.
+    pub fn crash(&self, id: NodeId) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let node = self.find(&inner, id)?;
+        ensure!(
+            matches!(node.state(), NodeState::Serving | NodeState::Draining),
+            "node {id} is already {}",
+            node.state().name()
+        );
+        node.set_state(NodeState::Crashed);
+        inner.stats.crashes += 1;
+        let _ = self.transport.send(id, ControlMsg::Shutdown);
+        self.transport.detach(id);
+        self.republish_members(&inner);
+        Ok(())
+    }
+
+    /// Arm a publish-protocol fault on one node (see [`FaultPoint`]).
+    pub fn arm_fault(&self, id: NodeId, fault: FaultPoint) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        self.find(&inner, id)?.arm_fault(fault);
+        Ok(())
+    }
+
+    /// The `/v1/cluster` status snapshot.
+    pub fn status(&self) -> ClusterStatus {
+        let inner = self.inner.lock().unwrap();
+        let nodes = inner
+            .nodes
+            .iter()
+            .map(|n| NodeStatus {
+                id: n.id,
+                state: n.state(),
+                epoch: n.committed_epoch(),
+                flipping: n.is_flipping(),
+                lake_records: n.engine.lake.len(),
+                scored: n.engine.counters.get("requests_live")
+                    + n.engine.counters.get("events_batch"),
+            })
+            .collect();
+        ClusterStatus {
+            committed_epoch: inner.committed,
+            stats: inner.stats,
+            flip_p50_ms: self.flip_percentile_ms(50.0),
+            flip_p99_ms: self.flip_percentile_ms(99.0),
+            nodes,
+        }
+    }
+
+    fn find(&self, inner: &PlaneInner, id: NodeId) -> Result<Arc<NodeHandle>> {
+        inner
+            .nodes
+            .iter()
+            .find(|n| n.id == id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown node {id}"))
+    }
+
+    /// Collect replies for `epoch` from the nodes in `awaiting` until
+    /// all answered or the ack budget runs out; answered ids are
+    /// removed, stragglers remain for the caller to fence.
+    fn collect(&self, epoch: u64, awaiting: &mut Vec<NodeId>, mut on_ack: impl FnMut(NodeId, AckKind)) {
+        let deadline = Instant::now() + self.opts.ack_timeout;
+        while !awaiting.is_empty() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let Some(reply) = self.transport.recv_reply(deadline - now) else {
+                break;
+            };
+            if reply.epoch != epoch {
+                continue; // stray late ack from a fenced publish
+            }
+            let Some(pos) = awaiting.iter().position(|&id| id == reply.node) else {
+                continue;
+            };
+            awaiting.swap_remove(pos);
+            on_ack(reply.node, reply.kind);
+        }
+    }
+
+    /// One stage+commit round against a single (joining) node.
+    fn replay_step(&self, id: NodeId, epoch: u64, cmd: ClusterCommand) -> Result<()> {
+        self.transport
+            .send(id, ControlMsg::Stage { epoch, cmd })
+            .map_err(|e| anyhow!("{e}"))?;
+        self.await_ack(id, epoch, AckKind::Staged)?;
+        self.transport
+            .send(id, ControlMsg::Commit { epoch })
+            .map_err(|e| anyhow!("{e}"))?;
+        self.await_ack(id, epoch, AckKind::Committed)?;
+        Ok(())
+    }
+
+    fn await_ack(&self, id: NodeId, epoch: u64, want: AckKind) -> Result<()> {
+        let deadline = Instant::now() + self.opts.ack_timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("node {id} ack timeout at epoch {epoch}");
+            }
+            let Some(reply) = self.transport.recv_reply(deadline - now) else {
+                continue;
+            };
+            if reply.node != id || reply.epoch != epoch {
+                continue; // stray late ack from a fenced publish
+            }
+            ensure!(
+                reply.kind == want,
+                "node {id} replied {:?} to epoch {epoch} (wanted {want:?})",
+                reply.kind
+            );
+            return Ok(());
+        }
+    }
+
+    /// Mark `ids` crashed and cut their transport. Idempotent per
+    /// node (a self-crashed node is only counted once).
+    fn fence(&self, inner: &mut PlaneInner, ids: &[NodeId]) {
+        for &id in ids {
+            if let Some(node) = inner.nodes.iter().find(|n| n.id == id) {
+                if node.state() != NodeState::Crashed {
+                    inner.stats.crashes += 1;
+                }
+                node.set_state(NodeState::Crashed);
+            }
+            self.transport.detach(id);
+        }
+    }
+
+    /// Publish the membership (serving nodes only) for the gateway.
+    fn republish_members(&self, inner: &PlaneInner) {
+        let nodes = inner
+            .nodes
+            .iter()
+            .filter(|n| n.state() == NodeState::Serving)
+            .cloned()
+            .collect();
+        self.members.store(Arc::new(Membership { nodes }));
+    }
+}
+
+impl Drop for MuseCluster {
+    fn drop(&mut self) {
+        let mut inner = self.inner.lock().unwrap();
+        let ids: Vec<NodeId> = inner.nodes.iter().map(|n| n.id).collect();
+        for id in ids {
+            let _ = self.transport.send(id, ControlMsg::Shutdown);
+            self.transport.detach(id);
+        }
+        for handle in inner.threads.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::node::FaultPoint;
+    use crate::config::{
+        Condition, Intent, LifecycleConfig, PredictorConfig, QuantileMode, RoutingConfig,
+        ScoringRule, ServerConfig,
+    };
+    use crate::coordinator::ScoreRequest;
+    use crate::runtime::{Manifest, SimArtifacts};
+
+    fn test_config(tenants: &[&str], pred: &str) -> MuseConfig {
+        let mut scoring_rules: Vec<ScoringRule> = tenants
+            .iter()
+            .map(|t| ScoringRule {
+                description: format!("dedicated {t}"),
+                condition: Condition {
+                    tenants: vec![t.to_string()],
+                    ..Condition::default()
+                },
+                target_predictor: pred.into(),
+            })
+            .collect();
+        scoring_rules.push(ScoringRule {
+            description: "catch-all".to_string(),
+            condition: Condition::default(),
+            target_predictor: pred.into(),
+        });
+        MuseConfig {
+            routing: RoutingConfig {
+                scoring_rules,
+                shadow_rules: Vec::new(),
+            },
+            predictors: vec![predictor_cfg(pred)],
+            server: ServerConfig {
+                workers: 2,
+                ..ServerConfig::default()
+            },
+            lifecycle: LifecycleConfig::default(),
+        }
+    }
+
+    fn predictor_cfg(name: &str) -> PredictorConfig {
+        PredictorConfig {
+            name: name.to_string(),
+            experts: vec!["s1".to_string()],
+            weights: vec![1.0],
+            quantile_mode: QuantileMode::Identity,
+            reference: "fraud-default".to_string(),
+            posterior_correction: false,
+        }
+    }
+
+    fn build_cluster(fix: &SimArtifacts, nodes: usize) -> Arc<MuseCluster> {
+        let config = test_config(&["t0", "t1", "t2"], "base");
+        let root = fix.root().clone();
+        let factory: PoolFactory =
+            Box::new(move || Ok(Arc::new(ModelPool::new(Manifest::load(&root)?))));
+        MuseCluster::build(
+            &config,
+            ClusterOptions {
+                nodes,
+                ack_timeout: Duration::from_millis(150),
+            },
+            factory,
+        )
+        .unwrap()
+    }
+
+    fn req(tenant: &str, i: usize) -> ScoreRequest {
+        ScoreRequest {
+            intent: Intent {
+                tenant: tenant.to_string(),
+                ..Intent::default()
+            },
+            entity: format!("e{i}"),
+            features: vec![0.25, 0.5, 0.75],
+        }
+    }
+
+    fn shadow_deploy(name: &str, tenant: &str) -> ClusterCommand {
+        ClusterCommand::ShadowDeploy {
+            cfg: predictor_cfg(name),
+            tenant: tenant.to_string(),
+            src: vec![0.0, 1.0],
+            refq: vec![0.0, 1.0],
+        }
+    }
+
+    #[test]
+    fn two_phase_publish_replicates_to_all_nodes() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cluster = build_cluster(&fix, 3);
+        cluster.publish(shadow_deploy("cand", "t0")).unwrap();
+        cluster
+            .publish(ClusterCommand::Promote {
+                tenant: "t0".to_string(),
+                predictor: "cand".to_string(),
+            })
+            .unwrap();
+        assert_eq!(cluster.committed_epoch(), 2);
+        for node in cluster.nodes() {
+            assert_eq!(node.state(), NodeState::Serving);
+            assert_eq!(node.committed_epoch(), 2);
+            assert!(!node.is_flipping());
+            assert!(node.engine.registry.get("cand").is_some());
+            let res = node
+                .engine
+                .router
+                .resolve(&Intent {
+                    tenant: "t0".to_string(),
+                    ..Intent::default()
+                })
+                .unwrap();
+            assert_eq!(&*res.predictor, "cand");
+        }
+        let gw = cluster.gateway();
+        let r = gw.score(&req("t0", 0)).unwrap();
+        assert_eq!(&*r.resp.predictor, "cand");
+        assert_eq!(r.epoch_lo, 2);
+        assert_eq!(r.epoch_hi, 2);
+    }
+
+    #[test]
+    fn invalid_command_aborts_cluster_wide() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cluster = build_cluster(&fix, 3);
+        let err = cluster
+            .publish(ClusterCommand::Promote {
+                tenant: "t0".to_string(),
+                predictor: "ghost".to_string(),
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "got: {err}");
+        assert_eq!(cluster.committed_epoch(), 0);
+        assert_eq!(cluster.stats().aborted, 1);
+        for node in cluster.nodes() {
+            assert_eq!(node.state(), NodeState::Serving);
+            assert_eq!(node.committed_epoch(), 0);
+        }
+        // An aborted staged deploy must be fully unwound too: a
+        // duplicate deploy nacks on every node, and the registry keeps
+        // exactly one copy from the earlier committed publish.
+        cluster.publish(shadow_deploy("cand", "t0")).unwrap();
+        let err = cluster.publish(shadow_deploy("cand", "t1")).unwrap_err();
+        assert!(err.to_string().contains("cand"), "got: {err}");
+        assert_eq!(cluster.committed_epoch(), 1);
+        for node in cluster.nodes() {
+            assert!(node.engine.registry.get("cand").is_some());
+            assert_eq!(node.engine.registry.names().len(), 2); // base + cand
+        }
+    }
+
+    #[test]
+    fn crash_before_stage_ack_proceeds_with_survivors() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cluster = build_cluster(&fix, 3);
+        cluster.publish(shadow_deploy("cand", "t0")).unwrap();
+        let victim = cluster.nodes()[1].id;
+        cluster.arm_fault(victim, FaultPoint::CrashBeforeStageAck).unwrap();
+        cluster
+            .publish(ClusterCommand::Promote {
+                tenant: "t0".to_string(),
+                predictor: "cand".to_string(),
+            })
+            .unwrap();
+        assert_eq!(cluster.committed_epoch(), 2);
+        assert_eq!(cluster.serving_nodes().len(), 2);
+        assert_eq!(cluster.stats().crashes, 1);
+        for node in cluster.nodes() {
+            if node.id == victim {
+                assert_eq!(node.state(), NodeState::Crashed);
+                assert_eq!(node.committed_epoch(), 1); // never staged epoch 2
+            } else {
+                assert_eq!(node.committed_epoch(), 2);
+            }
+        }
+        // Traffic the victim owned fails over: every tenant scores.
+        let gw = cluster.gateway();
+        for t in ["t0", "t1", "t2"] {
+            let r = gw.score(&req(t, 1)).unwrap();
+            assert_ne!(r.node, victim);
+        }
+    }
+
+    #[test]
+    fn crash_mid_flip_fences_node_and_survivors_commit() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cluster = build_cluster(&fix, 3);
+        cluster.publish(shadow_deploy("cand", "t1")).unwrap();
+        let victim = cluster.nodes()[2].id;
+        cluster
+            .arm_fault(victim, FaultPoint::CrashBeforeCommitApply)
+            .unwrap();
+        cluster
+            .publish(ClusterCommand::Promote {
+                tenant: "t1".to_string(),
+                predictor: "cand".to_string(),
+            })
+            .unwrap();
+        assert_eq!(cluster.committed_epoch(), 2);
+        let victim_node = cluster
+            .nodes()
+            .into_iter()
+            .find(|n| n.id == victim)
+            .unwrap();
+        // Staged but never applied: fenced at the old epoch, and its
+        // routing still targets the old predictor — which is exactly
+        // why it must never serve again.
+        assert_eq!(victim_node.state(), NodeState::Crashed);
+        assert_eq!(victim_node.committed_epoch(), 1);
+        let res = victim_node
+            .engine
+            .router
+            .resolve(&Intent {
+                tenant: "t1".to_string(),
+                ..Intent::default()
+            })
+            .unwrap();
+        assert_eq!(&*res.predictor, "base");
+        for node in cluster.serving_nodes() {
+            assert_eq!(node.committed_epoch(), 2);
+        }
+    }
+
+    #[test]
+    fn stale_epoch_commit_is_rejected_at_the_node() {
+        // Drive one node's control loop directly: a commit for an
+        // epoch that was never staged must nack, not apply.
+        let fix = SimArtifacts::in_temp().unwrap();
+        let config = test_config(&["t0"], "base");
+        let pool = Arc::new(ModelPool::new(fix.manifest().unwrap()));
+        let engine = Arc::new(Engine::build(&config, pool).unwrap());
+        let transport = ChannelTransport::new();
+        let endpoint = transport.attach(0);
+        let node = Arc::new(NodeHandle::new(0, engine, NodeState::Serving));
+        let handle = {
+            let n = Arc::clone(&node);
+            thread::spawn(move || node_loop(n, endpoint))
+        };
+        transport.send(0, ControlMsg::Commit { epoch: 5 }).unwrap();
+        let reply = transport.recv_reply(Duration::from_secs(1)).unwrap();
+        assert_eq!(reply.epoch, 5);
+        assert!(
+            matches!(reply.kind, AckKind::Nack(ref r) if r.contains("stale")),
+            "got: {:?}",
+            reply.kind
+        );
+        assert_eq!(node.committed_epoch(), 0);
+
+        // And an abort for a staged epoch unwinds the staged deploy.
+        transport
+            .send(
+                0,
+                ControlMsg::Stage {
+                    epoch: 1,
+                    cmd: shadow_deploy("cand", "t0"),
+                },
+            )
+            .unwrap();
+        let reply = transport.recv_reply(Duration::from_secs(1)).unwrap();
+        assert_eq!(reply.kind, AckKind::Staged);
+        assert!(node.engine.registry.get("cand").is_some());
+        transport.send(0, ControlMsg::Abort { epoch: 1 }).unwrap();
+        let reply = transport.recv_reply(Duration::from_secs(1)).unwrap();
+        assert_eq!(reply.kind, AckKind::Aborted);
+        assert!(node.engine.registry.get("cand").is_none());
+        assert_eq!(node.committed_epoch(), 0);
+
+        transport.send(0, ControlMsg::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn join_replays_log_and_takes_traffic() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cluster = build_cluster(&fix, 2);
+        cluster.publish(shadow_deploy("cand", "t2")).unwrap();
+        cluster
+            .publish(ClusterCommand::Promote {
+                tenant: "t2".to_string(),
+                predictor: "cand".to_string(),
+            })
+            .unwrap();
+        let id = cluster.join().unwrap();
+        assert_eq!(cluster.serving_nodes().len(), 3);
+        let joined = cluster.nodes().into_iter().find(|n| n.id == id).unwrap();
+        assert_eq!(joined.committed_epoch(), 2);
+        assert!(joined.engine.registry.get("cand").is_some());
+        let res = joined
+            .engine
+            .router
+            .resolve(&Intent {
+                tenant: "t2".to_string(),
+                ..Intent::default()
+            })
+            .unwrap();
+        assert_eq!(&*res.predictor, "cand");
+        // The joined node answers identically to the rest of the fleet.
+        let gw = cluster.gateway();
+        let r = gw.score(&req("t2", 3)).unwrap();
+        assert_eq!(&*r.resp.predictor, "cand");
+    }
+
+    #[test]
+    fn leave_drains_and_gateway_reroutes() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cluster = build_cluster(&fix, 2);
+        let gone = cluster.nodes()[0].id;
+        cluster.leave(gone).unwrap();
+        assert_eq!(cluster.serving_nodes().len(), 1);
+        assert_eq!(cluster.stats().leaves, 1);
+        let gw = cluster.gateway();
+        for t in ["t0", "t1", "t2"] {
+            let r = gw.score(&req(t, 4)).unwrap();
+            assert_ne!(r.node, gone);
+        }
+        // Leaving twice is an error, as is leaving while not serving.
+        assert!(cluster.leave(gone).is_err());
+    }
+
+    #[test]
+    fn rendezvous_routing_is_stable_until_membership_changes() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cluster = build_cluster(&fix, 4);
+        let gw = cluster.gateway();
+        let owner = gw.score(&req("t1", 0)).unwrap().node;
+        for i in 1..8 {
+            assert_eq!(gw.score(&req("t1", i)).unwrap().node, owner);
+        }
+        cluster.crash(owner).unwrap();
+        let next = gw.score(&req("t1", 9)).unwrap().node;
+        assert_ne!(next, owner);
+        for i in 10..14 {
+            assert_eq!(gw.score(&req("t1", i)).unwrap().node, next);
+        }
+    }
+}

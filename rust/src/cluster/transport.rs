@@ -1,0 +1,193 @@
+//! The operator→node control transport.
+//!
+//! The two-phase publish protocol needs exactly two primitives from
+//! its wire layer: send a control message to one node, and receive
+//! the next reply from any node. [`Transport`] captures that surface;
+//! [`ChannelTransport`] implements it over in-process mpsc channels
+//! (one inbox per node, one shared reply lane back to the operator).
+//! Because [`super::command::ClusterCommand`] and the message enums
+//! are plain data, a socket transport can replace this without
+//! touching the protocol in `plane.rs` or `node.rs`.
+
+use super::command::ClusterCommand;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Cluster-unique node identifier, assigned at join time and never
+/// reused.
+pub type NodeId = usize;
+
+/// Operator→node control messages.
+#[derive(Debug)]
+pub enum ControlMsg {
+    /// Phase 1: validate + prepare `cmd` for `epoch`. Side effects
+    /// must be invisible to routing until the commit.
+    Stage { epoch: u64, cmd: ClusterCommand },
+    /// Phase 2: flip the staged `epoch` into the published snapshot.
+    Commit { epoch: u64 },
+    /// Undo whatever `Stage { epoch }` prepared.
+    Abort { epoch: u64 },
+    /// Stop the node's control loop (leave/crash/teardown).
+    Shutdown,
+}
+
+/// What a node reply means.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AckKind {
+    Staged,
+    Committed,
+    Aborted,
+    /// Validation or protocol rejection (stale epoch, failed apply).
+    Nack(String),
+}
+
+/// Node→operator reply, tagged with the epoch it answers for so the
+/// operator can discard stray late acks from timed-out publishes.
+#[derive(Clone, Debug)]
+pub struct ControlReply {
+    pub node: NodeId,
+    pub epoch: u64,
+    pub kind: AckKind,
+}
+
+/// Send-side failure: the node is unknown (never attached or already
+/// detached) or its control loop is gone.
+#[derive(Debug)]
+pub enum TransportError {
+    Unknown(NodeId),
+    Disconnected(NodeId),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Unknown(id) => write!(f, "node {id} is not attached"),
+            TransportError::Disconnected(id) => write!(f, "node {id} control loop is gone"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// The operator-side control channel surface.
+pub trait Transport: Send + Sync {
+    /// Deliver `msg` to `node`'s control loop.
+    fn send(&self, node: NodeId, msg: ControlMsg) -> Result<(), TransportError>;
+    /// Next reply from any node, or `None` after `timeout`.
+    fn recv_reply(&self, timeout: Duration) -> Option<ControlReply>;
+}
+
+/// A node's end of the transport: its private inbox plus the shared
+/// reply lane back to the operator.
+pub struct NodeEndpoint {
+    pub node: NodeId,
+    pub inbox: Receiver<ControlMsg>,
+    pub replies: Sender<ControlReply>,
+}
+
+/// In-process channel transport: one mpsc inbox per node, one shared
+/// reply channel. Detaching a node drops the only sender to its
+/// inbox, which unblocks its control loop with a disconnect.
+pub struct ChannelTransport {
+    peers: Mutex<HashMap<NodeId, Sender<ControlMsg>>>,
+    reply_tx: Sender<ControlReply>,
+    reply_rx: Mutex<Receiver<ControlReply>>,
+}
+
+impl ChannelTransport {
+    pub fn new() -> ChannelTransport {
+        let (reply_tx, reply_rx) = channel();
+        ChannelTransport {
+            peers: Mutex::new(HashMap::new()),
+            reply_tx,
+            reply_rx: Mutex::new(reply_rx),
+        }
+    }
+
+    /// Create `node`'s inbox and hand back its endpoint. Replaces any
+    /// previous attachment for the id (ids are never reused in
+    /// practice).
+    pub fn attach(&self, node: NodeId) -> NodeEndpoint {
+        let (tx, rx) = channel();
+        self.peers.lock().unwrap().insert(node, tx);
+        NodeEndpoint {
+            node,
+            inbox: rx,
+            replies: self.reply_tx.clone(),
+        }
+    }
+
+    /// Forget `node`: subsequent sends fail and its control loop sees
+    /// a disconnect once in-flight messages drain.
+    pub fn detach(&self, node: NodeId) {
+        self.peers.lock().unwrap().remove(&node);
+    }
+}
+
+impl Default for ChannelTransport {
+    fn default() -> Self {
+        ChannelTransport::new()
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, node: NodeId, msg: ControlMsg) -> Result<(), TransportError> {
+        let peers = self.peers.lock().unwrap();
+        let tx = peers.get(&node).ok_or(TransportError::Unknown(node))?;
+        tx.send(msg).map_err(|_| TransportError::Disconnected(node))
+    }
+
+    fn recv_reply(&self, timeout: Duration) -> Option<ControlReply> {
+        // The transport holds its own reply_tx clone, so the channel
+        // can never disconnect: a recv error here is purely a timeout.
+        self.reply_rx.lock().unwrap().recv_timeout(timeout).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_detach_semantics() {
+        let t = ChannelTransport::new();
+        let ep = t.attach(3);
+        t.send(3, ControlMsg::Commit { epoch: 7 }).unwrap();
+        match ep.inbox.recv().unwrap() {
+            ControlMsg::Commit { epoch } => assert_eq!(epoch, 7),
+            other => panic!("unexpected message: {other:?}"),
+        }
+        ep.replies
+            .send(ControlReply {
+                node: 3,
+                epoch: 7,
+                kind: AckKind::Committed,
+            })
+            .unwrap();
+        let r = t.recv_reply(Duration::from_millis(100)).unwrap();
+        assert_eq!(r.node, 3);
+        assert_eq!(r.epoch, 7);
+        assert_eq!(r.kind, AckKind::Committed);
+
+        assert!(matches!(
+            t.send(9, ControlMsg::Shutdown),
+            Err(TransportError::Unknown(9))
+        ));
+        t.detach(3);
+        assert!(matches!(
+            t.send(3, ControlMsg::Shutdown),
+            Err(TransportError::Unknown(3))
+        ));
+        // The node side observes the detach as a disconnect.
+        assert!(ep.inbox.recv().is_err());
+    }
+
+    #[test]
+    fn recv_reply_times_out_without_traffic() {
+        let t = ChannelTransport::new();
+        assert!(t.recv_reply(Duration::from_millis(10)).is_none());
+    }
+}

@@ -26,6 +26,7 @@
 
 pub mod baselines;
 pub mod calibration;
+pub mod cluster;
 pub mod coldstart;
 pub mod config;
 pub mod coordinator;

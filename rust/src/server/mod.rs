@@ -16,6 +16,15 @@
 //! * `POST /v1/lifecycle/check` — run one controller tick now and
 //!   return the resulting status (manual trigger / cron hook)
 //!
+//! A [`crate::cluster::MuseCluster`] gets the same front end from
+//! [`spawn_cluster_server`]: `POST /score` and `POST /v1/score/batch`
+//! route through the rendezvous [`crate::cluster::ClusterGateway`]
+//! (responses additionally carry `node`, `epochLo`, `epochHi` — the
+//! committed-epoch attribution window), and `GET /v1/cluster` reports
+//! the replicated control plane: committed epoch, publish/crash/join
+//! accounting, two-phase flip latency percentiles and one row per
+//! node ever created.
+//!
 //! Request bodies over `server.maxBodyBytes` (default 1 MiB) are
 //! rejected with `413 Payload Too Large` from the Content-Length
 //! header alone — the body is never buffered.
@@ -567,6 +576,181 @@ pub fn spawn_server(
     Ok((bound, ready, handle))
 }
 
+// -----------------------------------------------------------------------
+// Cluster front end
+// -----------------------------------------------------------------------
+
+/// Build the API handler for a cluster: scoring flows through the
+/// rendezvous gateway (tenant-consistent, fails over past non-serving
+/// nodes), `GET /v1/cluster` reports the replicated control plane.
+pub fn cluster_api_handler(
+    cluster: Arc<crate::cluster::MuseCluster>,
+    ready: Arc<AtomicBool>,
+) -> Arc<Handler> {
+    Arc::new(move |req: &Request| cluster_route(&cluster, &ready, req))
+}
+
+fn cluster_route(
+    cluster: &crate::cluster::MuseCluster,
+    ready: &AtomicBool,
+    req: &Request,
+) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if ready.load(Ordering::SeqCst) && !cluster.serving_nodes().is_empty() {
+                Response::text(200, "ok")
+            } else {
+                Response::text(503, "warming up")
+            }
+        }
+        ("GET", "/v1/cluster") => Response::json(200, cluster_status_json(cluster)),
+        ("POST", "/score") => {
+            if !ready.load(Ordering::SeqCst) {
+                return Response::json(503, r#"{"error":"warming up"}"#);
+            }
+            match handle_cluster_score(cluster, &req.body) {
+                Ok(resp) => resp,
+                Err(e) => error_422(e.to_string()),
+            }
+        }
+        ("POST", "/v1/score/batch") => {
+            if !ready.load(Ordering::SeqCst) {
+                return Response::json(503, r#"{"error":"warming up"}"#);
+            }
+            match handle_cluster_score_batch(cluster, &req.body) {
+                Ok(resp) => resp,
+                Err(e) => error_422(e.to_string()),
+            }
+        }
+        ("POST", _) | ("GET", _) => Response::text(404, "not found"),
+        _ => Response::text(405, "method not allowed"),
+    }
+}
+
+/// `GET /v1/cluster`: the two-phase control plane's own ledger.
+fn cluster_status_json(cluster: &crate::cluster::MuseCluster) -> String {
+    let s = cluster.status();
+    let nodes: Vec<Json> = s
+        .nodes
+        .iter()
+        .map(|n| {
+            Json::obj(vec![
+                ("id", Json::Num(n.id as f64)),
+                ("state", Json::str(n.state.name())),
+                ("epoch", Json::Num(n.epoch as f64)),
+                ("flipping", Json::Bool(n.flipping)),
+                ("lakeRecords", Json::Num(n.lake_records as f64)),
+                ("scored", Json::Num(n.scored as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("committedEpoch", Json::Num(s.committed_epoch as f64)),
+        ("publishes", Json::Num(s.stats.publishes as f64)),
+        ("aborted", Json::Num(s.stats.aborted as f64)),
+        ("crashes", Json::Num(s.stats.crashes as f64)),
+        ("joins", Json::Num(s.stats.joins as f64)),
+        ("leaves", Json::Num(s.stats.leaves as f64)),
+        (
+            "flipLatencyMs",
+            Json::obj(vec![
+                ("p50", Json::Num(s.flip_p50_ms)),
+                ("p99", Json::Num(s.flip_p99_ms)),
+            ]),
+        ),
+        ("nodes", Json::Arr(nodes)),
+    ])
+    .to_string()
+}
+
+fn handle_cluster_score(
+    cluster: &crate::cluster::MuseCluster,
+    body: &str,
+) -> Result<Response> {
+    let v = crate::util::json::parse(body)?;
+    let req = parse_score_request(&v)?;
+    let g = cluster.gateway().score(&req)?;
+    let mut fields = match score_response_json(&g.resp) {
+        Json::Obj(fields) => fields,
+        _ => unreachable!("score_response_json returns an object"),
+    };
+    fields.push(("node".to_string(), Json::Num(g.node as f64)));
+    fields.push(("epochLo".to_string(), Json::Num(g.epoch_lo as f64)));
+    fields.push(("epochHi".to_string(), Json::Num(g.epoch_hi as f64)));
+    Ok(Response::json(200, Json::Obj(fields).to_string()))
+}
+
+/// The whole batch is routed to one node by its first event's tenant
+/// and scored off one engine snapshot there; the attribution window
+/// covers every event in the batch.
+fn handle_cluster_score_batch(
+    cluster: &crate::cluster::MuseCluster,
+    body: &str,
+) -> Result<Response> {
+    let v = crate::util::json::parse(body)?;
+    let events = v
+        .req("events")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("events must be a list of score payloads"))?;
+    let reqs = events
+        .iter()
+        .map(parse_score_request)
+        .collect::<Result<Vec<_>>>()?;
+    let b = cluster.gateway().score_batch(&reqs)?;
+    let results: Vec<Json> = b.resps.iter().map(score_response_json).collect();
+    Ok(Response::json(
+        200,
+        Json::obj(vec![
+            ("count", Json::Num(results.len() as f64)),
+            ("node", Json::Num(b.node as f64)),
+            ("epochLo", Json::Num(b.epoch_lo as f64)),
+            ("epochHi", Json::Num(b.epoch_hi as f64)),
+            ("results", Json::Arr(results)),
+        ])
+        .to_string(),
+    ))
+}
+
+/// Convenience: bind the cluster front end, warm every serving node,
+/// flip readiness, serve on a background thread. Ingress limits and
+/// counters come from the first node's engine — every replica runs
+/// the same `server:` block, and parking the `ingress_*` counters in
+/// one node's registry keeps them inspectable.
+pub fn spawn_cluster_server(
+    cluster: Arc<crate::cluster::MuseCluster>,
+    addr: &str,
+    workers: usize,
+    warmup_requests: usize,
+) -> Result<(String, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+    let nodes = cluster.serving_nodes();
+    let first = nodes
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("cluster has no serving nodes"))?;
+    let cfg = &first.engine.server_cfg;
+    let config = IngressConfig {
+        max_body: first.engine.max_body_bytes,
+        max_header: cfg.max_header_bytes,
+        max_connections: cfg.max_connections,
+        header_deadline: Duration::from_millis(cfg.header_read_timeout_ms),
+        body_deadline: Duration::from_millis(cfg.body_read_timeout_ms),
+    };
+    let ingress = IngressCounters::resolve(&first.engine.counters);
+    let ready = Arc::new(AtomicBool::new(false));
+    let handler = cluster_api_handler(Arc::clone(&cluster), Arc::clone(&ready));
+    let server = HttpServer::bind_with_config(addr, workers, handler, config, ingress, None)?;
+    let bound = server.local_addr();
+    let handle = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    // Warm every replica before flipping readiness — the gateway may
+    // route a tenant to any of them.
+    for node in &nodes {
+        crate::coordinator::warm_up(&node.engine, warmup_requests, 0xC0FFEE)?;
+    }
+    ready.store(true, Ordering::SeqCst);
+    Ok((bound, ready, handle))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -905,6 +1089,122 @@ predictors:
         assert_eq!(status, 200);
         assert!(metrics.contains("ingress_accepted"), "{metrics}");
         assert!(metrics.contains("ingress_streamed_events"), "{metrics}");
+    }
+
+    /// The cluster front end end-to-end: gateway-routed scoring with
+    /// epoch attribution, `/v1/cluster` control-plane reporting, and
+    /// a two-phase promote visible through both.
+    #[test]
+    fn cluster_front_end_scores_and_reports_the_control_plane() {
+        use crate::cluster::{ClusterCommand, ClusterOptions, MuseCluster, PoolFactory};
+        use crate::config::PredictorConfig;
+
+        let fix = crate::runtime::SimArtifacts::in_temp().unwrap();
+        let yaml = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p-v0"
+predictors:
+- name: p-v0
+  experts: [s1]
+  quantile: identity
+server:
+  workers: 2
+"#;
+        let root = fix.root().clone();
+        let factory: PoolFactory = Box::new(move || {
+            Ok(Arc::new(crate::runtime::ModelPool::new(Manifest::load(
+                &root,
+            )?)))
+        });
+        let cluster = MuseCluster::build(
+            &MuseConfig::from_yaml(yaml).unwrap(),
+            ClusterOptions {
+                nodes: 2,
+                ..ClusterOptions::default()
+            },
+            factory,
+        )
+        .unwrap();
+        let d = cluster.serving_nodes()[0]
+            .engine
+            .predictor("p-v0")
+            .unwrap()
+            .feature_dim();
+        let (addr, _ready, _h) =
+            spawn_cluster_server(Arc::clone(&cluster), "127.0.0.1:0", 2, 3).unwrap();
+
+        let (status, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!((status, body.as_str()), (200, "ok"));
+
+        let payload = format!(
+            r#"{{"tenant": "acme", "features": [{}]}}"#,
+            vec!["0.2"; d].join(",")
+        );
+        let (status, body) = http_request(&addr, "POST", "/score", &payload).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.req_str("predictor").unwrap(), "p-v0");
+        assert_eq!(v.req_f64("epochLo").unwrap(), 0.0);
+        assert_eq!(v.req_f64("epochHi").unwrap(), 0.0);
+
+        // Promote a new version through the two-phase publish; the
+        // gateway must score with it and the ledger must advance.
+        cluster
+            .publish(ClusterCommand::ShadowDeploy {
+                cfg: PredictorConfig {
+                    name: "p-v1".to_string(),
+                    experts: vec!["s2".to_string()],
+                    weights: vec![1.0],
+                    quantile_mode: crate::config::QuantileMode::Identity,
+                    reference: "fraud-default".to_string(),
+                    posterior_correction: false,
+                },
+                tenant: "acme".to_string(),
+                src: vec![0.0, 1.0],
+                refq: vec![0.0, 1.0],
+            })
+            .unwrap();
+        cluster
+            .publish(ClusterCommand::Promote {
+                tenant: "acme".to_string(),
+                predictor: "p-v1".to_string(),
+            })
+            .unwrap();
+
+        let (status, body) = http_request(&addr, "POST", "/score", &payload).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.req_str("predictor").unwrap(), "p-v1");
+        assert_eq!(v.req_f64("epochLo").unwrap(), 2.0);
+
+        let batch = format!(r#"{{"events": [{payload}, {payload}]}}"#);
+        let (status, body) = http_request(&addr, "POST", "/v1/score/batch", &batch).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.req_f64("count").unwrap(), 2.0);
+        assert_eq!(v.req_f64("epochLo").unwrap(), 2.0);
+        let results = v.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].req_str("predictor").unwrap(), "p-v1");
+
+        let (status, body) = http_request(&addr, "GET", "/v1/cluster", "").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = crate::util::json::parse(&body).unwrap();
+        assert_eq!(v.req_f64("committedEpoch").unwrap(), 2.0);
+        assert_eq!(v.req_f64("publishes").unwrap(), 2.0);
+        assert_eq!(v.req_f64("joins").unwrap(), 2.0);
+        assert_eq!(v.req_f64("crashes").unwrap(), 0.0);
+        let nodes = v.req("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 2, "{body}");
+        for n in nodes {
+            assert_eq!(n.req_str("state").unwrap(), "serving");
+            assert_eq!(n.req_f64("epoch").unwrap(), 2.0);
+        }
+
+        let (status, _) = http_request(&addr, "GET", "/nope", "").unwrap();
+        assert_eq!(status, 404);
     }
 
     #[test]

@@ -5,10 +5,14 @@
 //! docs/ARCHITECTURE.md "Crate-availability constraint"), so on Linux
 //! the three epoll syscalls are issued directly via inline `asm!` —
 //! the same vendored-shim spirit as `vendor/anyhow` and `vendor/xla`.
-//! On non-Linux unix the [`Poller`] degrades to a timer that reports
-//! every registered token ready each tick (level-triggered semantics
-//! make that *correct* — callers read until `WouldBlock` — just not
-//! efficient); production targets are Linux.
+//! On non-Linux unix the [`Poller`] degrades to the timer-tick
+//! [`FallbackPoller`]: each `wait` sleeps the **full** requested
+//! timeout, then reports every registered token with exactly its
+//! registered interest mask (level-triggered semantics make the
+//! optimistic readiness *correct* — callers read/write until
+//! `WouldBlock` — just not efficient); production targets are Linux.
+//! The fallback is compiled and tested on every platform so its
+//! timing contract cannot rot where CI never runs it.
 //!
 //! Level-triggered only, one event loop per [`Poller`]. The server's
 //! reactor (`server::http`) registers the listener plus every
@@ -176,15 +180,78 @@ mod sys {
     }
 }
 
+/// Degraded timer-tick poller for platforms without epoll. Never
+/// touches the fds it is given: `wait` sleeps the full requested
+/// timeout (a real tick — the caller genuinely idles instead of
+/// spinning) and then optimistically reports every registered token
+/// with its registered interest mask, nothing more.
+///
+/// The previous fallback had two busy-spin bugs, both fixed here and
+/// pinned by `fallback_poller_makes_progress_without_pegging_a_core`:
+/// it clamped every sleep to 10ms regardless of the requested timeout
+/// (so a reactor asking for a 100ms tick woke 100x/s, re-walking
+/// every connection each time), and it OR-ed a spurious `EV_ERR` into
+/// every event (waking error paths that were never requested). It is
+/// compiled unconditionally — the non-Linux [`Poller`] delegates to
+/// it — so the regression test runs on Linux CI too.
+pub struct FallbackPoller {
+    /// fd -> (token, interest); BTreeMap for deterministic report
+    /// order.
+    registered: std::collections::BTreeMap<RawFd, (usize, u32)>,
+}
+
+impl FallbackPoller {
+    pub fn new() -> FallbackPoller {
+        FallbackPoller {
+            registered: std::collections::BTreeMap::new(),
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: u32) {
+        self.registered.insert(fd, (token, interest));
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: usize, interest: u32) {
+        self.registered.insert(fd, (token, interest));
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) {
+        self.registered.remove(&fd);
+    }
+
+    /// Tick semantics: sleep the full `timeout_ms` (0 = non-blocking
+    /// poll, no sleep at all), then claim every registered fd ready
+    /// for exactly its registered interest. Callers looping on
+    /// `wait(.., 0)` own their cadence — the poller must not insert a
+    /// hidden sleep into a caller that asked not to block.
+    pub fn wait(&mut self, out: &mut Vec<PollEvent>, timeout_ms: i32) {
+        out.clear();
+        if timeout_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(timeout_ms as u64));
+        }
+        for (&_fd, &(token, interest)) in &self.registered {
+            out.push(PollEvent {
+                token,
+                events: interest,
+            });
+        }
+    }
+}
+
+impl Default for FallbackPoller {
+    fn default() -> Self {
+        FallbackPoller::new()
+    }
+}
+
 /// The event-notification handle. See module docs for semantics.
 pub struct Poller {
     #[cfg(target_os = "linux")]
     epfd: i32,
     #[cfg(target_os = "linux")]
     buf: Vec<sys::EpollEvent>,
-    /// Fallback bookkeeping (also used by tests to introspect).
     #[cfg(not(target_os = "linux"))]
-    registered: std::collections::HashMap<RawFd, (usize, u32)>,
+    fallback: FallbackPoller,
 }
 
 impl Poller {
@@ -198,7 +265,9 @@ impl Poller {
         }
         #[cfg(not(target_os = "linux"))]
         {
-            Ok(Poller { registered: std::collections::HashMap::new() })
+            Ok(Poller {
+                fallback: FallbackPoller::new(),
+            })
         }
     }
 
@@ -212,7 +281,7 @@ impl Poller {
         }
         #[cfg(not(target_os = "linux"))]
         {
-            self.registered.insert(fd, (token, interest));
+            self.fallback.register(fd, token, interest);
             Ok(())
         }
     }
@@ -226,7 +295,7 @@ impl Poller {
         }
         #[cfg(not(target_os = "linux"))]
         {
-            self.registered.insert(fd, (token, interest));
+            self.fallback.modify(fd, token, interest);
             Ok(())
         }
     }
@@ -240,7 +309,7 @@ impl Poller {
         }
         #[cfg(not(target_os = "linux"))]
         {
-            self.registered.remove(&fd);
+            self.fallback.deregister(fd);
             Ok(())
         }
     }
@@ -267,15 +336,7 @@ impl Poller {
         }
         #[cfg(not(target_os = "linux"))]
         {
-            // Degraded mode: tick, then claim every registered fd is
-            // ready for its full interest set. Level-triggered callers
-            // read/write until WouldBlock, so this is correct.
-            std::thread::sleep(std::time::Duration::from_millis(
-                (timeout_ms.clamp(0, 10)) as u64,
-            ));
-            for (&_fd, &(token, interest)) in &self.registered {
-                out.push(PollEvent { token, events: interest | EV_ERR });
-            }
+            self.fallback.wait(out, timeout_ms);
             Ok(out.len())
         }
     }
@@ -360,5 +421,55 @@ mod tests {
         }
         assert!(seen_write, "write readiness never reported after modify");
         poller.deregister(server_side.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn fallback_poller_makes_progress_without_pegging_a_core() {
+        use std::time::{Duration, Instant};
+
+        // Raw fd values only — the fallback never touches the fd.
+        let mut poller = FallbackPoller::new();
+        poller.register(100, 7, EV_READ);
+        poller.register(101, 8, EV_READ | EV_WRITE);
+
+        // Progress with honest timing: each 20ms wait must actually
+        // idle ~20ms (the old fallback clamped every sleep to 10ms,
+        // so a reactor asking for a long tick busy-woke 100x/s), and
+        // every wait must report both tokens so callers advance.
+        let t0 = Instant::now();
+        let mut events = Vec::new();
+        for _ in 0..5 {
+            poller.wait(&mut events, 20);
+            assert_eq!(events.len(), 2);
+            let read = events.iter().find(|e| e.token == 7).unwrap();
+            assert_eq!(read.events, EV_READ);
+            let rw = events.iter().find(|e| e.token == 8).unwrap();
+            // Exactly the registered interest — no spurious EV_ERR
+            // (the old fallback OR-ed it into every event).
+            assert_eq!(rw.events, EV_READ | EV_WRITE);
+        }
+        assert!(
+            t0.elapsed() >= Duration::from_millis(80),
+            "5 waits of 20ms finished in {:?} — the fallback is not \
+             honoring its timeout (busy-spin regression)",
+            t0.elapsed()
+        );
+
+        // A zero timeout is a non-blocking poll: no hidden sleep.
+        let t1 = Instant::now();
+        for _ in 0..100 {
+            poller.wait(&mut events, 0);
+        }
+        assert!(
+            t1.elapsed() < Duration::from_millis(500),
+            "non-blocking polls slept: {:?}",
+            t1.elapsed()
+        );
+
+        // Deregistered fds stop being reported.
+        poller.deregister(100);
+        poller.wait(&mut events, 0);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 8);
     }
 }

@@ -1,0 +1,587 @@
+//! Cluster-storm scenario: the cluster plane's seamlessness proof
+//! under fire.
+//!
+//! Where the testkit cluster runner (`testkit::harness::run_cluster_trace`)
+//! replays generated storms at *barriers* — commands never race events,
+//! so every response gets an exact single-epoch attribution — this
+//! scenario removes the barriers. N serving nodes take Zipf-skewed
+//! multi-tenant traffic from several client threads **while** a control
+//! thread drives continuous version rotations (shadow-deploy → promote
+//! → decommission) through the two-phase publish, kills one node
+//! mid-flip and joins a replacement that must catch up by replaying
+//! the committed log.
+//!
+//! Three things are asserted, exactly:
+//!
+//! * **zero dropped, zero torn** — every driven event produces a
+//!   response whose predictor matches the control thread's recorded
+//!   assignment at *some* committed epoch inside the response's
+//!   attribution window `[epoch_lo, epoch_hi]`. A response scored by
+//!   predictor X when no epoch in its window assigned X to that
+//!   tenant would be a torn, mixed-version score — the exact failure
+//!   the two-phase publish exists to rule out.
+//! * **epoch-exact accounting** — the per-(tenant, predictor)
+//!   non-shadow record counts summed over *every node ever created*
+//!   (the crashed node's engine keeps its scored history) equal the
+//!   driver tallies as exact multiset counts; no node forced an
+//!   overwrite or lost an append.
+//! * **lifecycle arithmetic** — exactly one crash, `nodes + 1` joins
+//!   (the initial set plus the mid-storm replacement), zero aborts,
+//!   and `publishes == committed_epoch`.
+//!
+//! One deliberate client-side concession: a request that holds a
+//! stale engine snapshot while its predictor's batcher is being
+//! decommissioned gets a clean "batcher has shut down" error
+//! (`coordinator::batcher` shutdown docs) — the engine guarantees the
+//! failed attempt leaves **no** trace in the lake or counters, so the
+//! driver retries it, exactly as a production client would. Retries
+//! are counted and reported; the conservation checks stay exact
+//! because only successful attempts record anywhere.
+//!
+//! `examples/cluster_storm.rs` is the CI smoke wrapper
+//! (`MUSE_CLUSTER_EVENTS` / `MUSE_CLUSTER_NODES` override).
+
+use crate::cluster::{
+    ClusterCommand, ClusterOptions, FaultPoint, MuseCluster, NodeId, PoolFactory,
+};
+use crate::config::{
+    Condition, Intent, LifecycleConfig, MuseConfig, PredictorConfig, QuantileMode, RoutingConfig,
+    ScoringRule, ServerConfig,
+};
+use crate::coordinator::ScoreRequest;
+use crate::runtime::{Manifest, ModelPool, SimArtifacts};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Scenario parameters (defaults match the unit test; the CI example
+/// scales `calls` up and uses 4–8 nodes).
+#[derive(Debug, Clone)]
+pub struct ClusterStormConfig {
+    /// Initial serving nodes (the storm crashes one and joins one).
+    pub nodes: usize,
+    /// Tenants t0..t{n-1}; traffic is Zipf-skewed toward t0.
+    pub tenants: usize,
+    /// Scoring calls claimed by the client threads. Every
+    /// `batch_every`-th call is a whole batch of `batch_size` events,
+    /// so the driven event total is slightly higher.
+    pub calls: usize,
+    /// Version rotations (shadow-deploy → promote → decommission),
+    /// spread evenly across the call stream.
+    pub promotions: usize,
+    /// Client scorer threads.
+    pub threads: usize,
+    /// Every k-th call is a batch (0 disables batches).
+    pub batch_every: usize,
+    pub batch_size: usize,
+    /// Two-phase publish ack budget; the injected crash costs exactly
+    /// one ack timeout before the victim is fenced.
+    pub ack_timeout: Duration,
+    pub seed: u64,
+}
+
+impl Default for ClusterStormConfig {
+    fn default() -> Self {
+        ClusterStormConfig {
+            nodes: 5,
+            tenants: 6,
+            calls: 2_000,
+            promotions: 12,
+            threads: 4,
+            batch_every: 7,
+            batch_size: 4,
+            ack_timeout: Duration::from_millis(500),
+            seed: 41,
+        }
+    }
+}
+
+/// Scenario outcome. Every invariant in the module docs has already
+/// been enforced by the time a report is returned.
+#[derive(Debug, Clone)]
+pub struct ClusterStormReport {
+    pub nodes_initial: usize,
+    pub nodes_serving_final: usize,
+    pub calls_total: u64,
+    /// Driven events (singles + batch events) == lake non-shadow total.
+    pub events_total: u64,
+    /// Client-side retries of the decommission/shutdown race.
+    pub retries: u64,
+    pub promotions: u64,
+    pub committed_epoch: u64,
+    pub crashes: u64,
+    pub joins: u64,
+    pub wall_secs: f64,
+    pub events_per_sec: f64,
+    /// Events served per node id, from the driver's own records.
+    pub per_node_events: Vec<(NodeId, u64)>,
+    /// Two-phase flip latency (stage send → last commit ack).
+    pub flip_p50_ms: f64,
+    pub flip_p99_ms: f64,
+}
+
+impl ClusterStormReport {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "cluster storm ({} nodes, {} threads): {:>8.0} events/s  \
+             flip p50 {:.3} ms  p99 {:.3} ms\n  \
+             {} events / {} calls in {:.2}s, {} retries, \
+             {} promotions -> epoch {}, {} crash(es), {} joins, {} serving\n",
+            self.nodes_initial,
+            self.per_node_events.len().max(1),
+            self.events_per_sec,
+            self.flip_p50_ms,
+            self.flip_p99_ms,
+            self.events_total,
+            self.calls_total,
+            self.wall_secs,
+            self.retries,
+            self.promotions,
+            self.committed_epoch,
+            self.crashes,
+            self.joins,
+            self.nodes_serving_final,
+        );
+        for (id, n) in &self.per_node_events {
+            out.push_str(&format!(
+                "  node {id}: {n} events ({:.0}/s)\n",
+                *n as f64 / self.wall_secs.max(1e-9)
+            ));
+        }
+        out
+    }
+}
+
+/// One recorded response: enough to replay the torn check and the
+/// conservation tally after the storm.
+struct RespRec {
+    tenant: usize,
+    node: NodeId,
+    epoch_lo: u64,
+    epoch_hi: u64,
+    predictor: String,
+}
+
+struct ScorerOut {
+    recs: Vec<RespRec>,
+    retries: u64,
+}
+
+/// Versioned expert rotation: successive versions of a tenant's
+/// predictor really are different models, so a torn score would also
+/// be numerically wrong, not just mislabeled.
+fn candidate_cfg(tenant: usize, version: usize) -> PredictorConfig {
+    PredictorConfig {
+        name: format!("p{tenant}-v{version}"),
+        experts: vec![format!("s{}", 1 + (tenant + version) % 3)],
+        weights: vec![1.0],
+        quantile_mode: QuantileMode::Identity,
+        reference: "fraud-default".to_string(),
+        posterior_correction: false,
+    }
+}
+
+/// One dedicated predictor per tenant plus a catch-all, mirroring the
+/// paper's per-tenant rollout unit.
+fn storm_config(tenants: usize) -> MuseConfig {
+    let mut scoring_rules: Vec<ScoringRule> = (0..tenants)
+        .map(|i| ScoringRule {
+            description: format!("dedicated t{i}"),
+            condition: Condition {
+                tenants: vec![format!("t{i}")],
+                ..Condition::default()
+            },
+            target_predictor: format!("p{i}-v0").into(),
+        })
+        .collect();
+    scoring_rules.push(ScoringRule {
+        description: "catch-all".to_string(),
+        condition: Condition::default(),
+        target_predictor: "p0-v0".into(),
+    });
+    MuseConfig {
+        routing: RoutingConfig {
+            scoring_rules,
+            shadow_rules: Vec::new(),
+        },
+        predictors: (0..tenants).map(|i| candidate_cfg(i, 0)).collect(),
+        server: ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+        lifecycle: LifecycleConfig::default(),
+    }
+}
+
+/// The tenant live at committed epoch `k`, per the control thread's
+/// own record (`history` is promote events in epoch order).
+fn assignment_at(history: &[(u64, String)], k: u64) -> Option<&str> {
+    history
+        .iter()
+        .rev()
+        .find(|(e, _)| *e <= k)
+        .map(|(_, name)| name.as_str())
+}
+
+/// Zipf(1) pick over tenant ranks: t0 most popular.
+fn zipf_pick(cum: &[f64], u: f64) -> usize {
+    let total = cum.last().copied().unwrap_or(1.0);
+    let target = u * total;
+    cum.iter().position(|&c| target < c).unwrap_or(cum.len() - 1)
+}
+
+/// Run the storm. Returns the report only if every seamlessness,
+/// conservation and lifecycle check passed (see module docs).
+pub fn run_cluster_storm(
+    fix: &SimArtifacts,
+    cfg: &ClusterStormConfig,
+) -> Result<ClusterStormReport> {
+    ensure!(cfg.nodes >= 2, "storm needs >= 2 nodes (one gets crashed)");
+    ensure!(cfg.tenants >= 1, "storm needs >= 1 tenant");
+    ensure!(cfg.threads >= 1, "storm needs >= 1 scorer thread");
+    ensure!(cfg.promotions >= 1, "storm needs >= 1 promotion");
+    ensure!(cfg.batch_every == 0 || cfg.batch_size >= 1, "batch_size >= 1");
+
+    let config = storm_config(cfg.tenants);
+    let root = fix.root().clone();
+    let factory: PoolFactory =
+        Box::new(move || Ok(Arc::new(ModelPool::new(Manifest::load(&root)?))));
+    let cluster = MuseCluster::build(
+        &config,
+        ClusterOptions {
+            nodes: cfg.nodes,
+            ack_timeout: cfg.ack_timeout,
+        },
+        factory,
+    )?;
+    let dim = cluster.serving_nodes()[0]
+        .engine
+        .predictor("p0-v0")?
+        .feature_dim();
+
+    // Zipf(1) cumulative weights over tenant ranks.
+    let mut cum = Vec::with_capacity(cfg.tenants);
+    let mut acc = 0.0f64;
+    for i in 0..cfg.tenants {
+        acc += 1.0 / (i + 1) as f64;
+        cum.push(acc);
+    }
+
+    let next_call = AtomicUsize::new(0);
+    let aborted = AtomicBool::new(false);
+    let t0 = Instant::now();
+
+    let (history, scorer_outs) = std::thread::scope(|s| {
+        // The control thread is the cluster's sole publisher, so its
+        // (epoch, predictor) record *is* the assignment history — the
+        // committed epoch returned by each promote pins exactly when
+        // the flip became the cluster truth.
+        let control = s.spawn(|| -> Result<Vec<Vec<(u64, String)>>> {
+            let mut history: Vec<Vec<(u64, String)>> = (0..cfg.tenants)
+                .map(|i| vec![(0, format!("p{i}-v0"))])
+                .collect();
+            let mut version = vec![0usize; cfg.tenants];
+            for r in 0..cfg.promotions {
+                // Spread rotations across the call stream instead of
+                // racing them all past the first few events.
+                let threshold = ((r + 1) * cfg.calls) / (cfg.promotions + 2);
+                while next_call.load(Ordering::Relaxed) < threshold
+                    && !aborted.load(Ordering::Relaxed)
+                {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                if aborted.load(Ordering::Relaxed) {
+                    break;
+                }
+                let ti = r % cfg.tenants;
+                let v = version[ti] + 1;
+                let name = format!("p{ti}-v{v}");
+                if r == cfg.promotions / 2 {
+                    // Kill one replica mid-flip: it stage-acks the next
+                    // publish, then dies before applying the commit —
+                    // fenced at the old epoch while survivors flip.
+                    let victim = cluster.serving_nodes()[0].id;
+                    cluster.arm_fault(victim, FaultPoint::CrashBeforeCommitApply)?;
+                }
+                cluster.publish(ClusterCommand::ShadowDeploy {
+                    cfg: candidate_cfg(ti, v),
+                    tenant: format!("t{ti}"),
+                    src: vec![0.0, 1.0],
+                    refq: vec![0.0, 1.0],
+                })?;
+                let epoch = cluster.publish(ClusterCommand::Promote {
+                    tenant: format!("t{ti}"),
+                    predictor: name.clone(),
+                })?;
+                history[ti].push((epoch, name));
+                version[ti] = v;
+                // Deferred-by-one retirement: the version demoted two
+                // rotations ago has no traffic and no shadow rule left.
+                if v >= 2 {
+                    cluster.publish(ClusterCommand::Decommission {
+                        predictor: format!("p{ti}-v{}", v - 2),
+                    })?;
+                }
+                if r == cfg.promotions / 2 {
+                    // The replacement replays the committed log before
+                    // taking traffic.
+                    cluster.join()?;
+                }
+            }
+            Ok(history)
+        });
+
+        let mut scorers = Vec::with_capacity(cfg.threads);
+        for t in 0..cfg.threads {
+            let cluster = &cluster;
+            let cfg = &cfg;
+            let cum = &cum;
+            let next_call = &next_call;
+            let aborted = &aborted;
+            scorers.push(s.spawn(move || -> Result<ScorerOut> {
+                let mut rng = Rng::new(cfg.seed ^ ((t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+                let gw = cluster.gateway();
+                let mut recs: Vec<RespRec> = Vec::new();
+                let mut retries = 0u64;
+                loop {
+                    let idx = next_call.fetch_add(1, Ordering::Relaxed);
+                    if idx >= cfg.calls {
+                        break;
+                    }
+                    let ti = zipf_pick(cum, rng.f64());
+                    let tenant = format!("t{ti}");
+                    let is_batch = cfg.batch_every != 0 && idx % cfg.batch_every == 0;
+                    let n_events = if is_batch { cfg.batch_size } else { 1 };
+                    let reqs: Vec<ScoreRequest> = (0..n_events)
+                        .map(|j| ScoreRequest {
+                            intent: Intent {
+                                tenant: tenant.clone(),
+                                ..Intent::default()
+                            },
+                            entity: format!("c{idx}-{j}"),
+                            features: (0..dim).map(|_| rng.normal() as f32).collect(),
+                        })
+                        .collect();
+                    let mut attempt = 0usize;
+                    loop {
+                        attempt += 1;
+                        let res: Result<Vec<(NodeId, u64, u64, String)>> = if is_batch {
+                            gw.score_batch(&reqs).map(|b| {
+                                b.resps
+                                    .iter()
+                                    .map(|r| {
+                                        (b.node, b.epoch_lo, b.epoch_hi, r.predictor.to_string())
+                                    })
+                                    .collect()
+                            })
+                        } else {
+                            gw.score(&reqs[0]).map(|g| {
+                                vec![(g.node, g.epoch_lo, g.epoch_hi, g.resp.predictor.to_string())]
+                            })
+                        };
+                        match res {
+                            Ok(rs) => {
+                                for (node, epoch_lo, epoch_hi, predictor) in rs {
+                                    recs.push(RespRec {
+                                        tenant: ti,
+                                        node,
+                                        epoch_lo,
+                                        epoch_hi,
+                                        predictor,
+                                    });
+                                }
+                                break;
+                            }
+                            // The decommission/shutdown race (module
+                            // docs): the failed attempt recorded
+                            // nothing, so a retry cannot double-count.
+                            Err(_) if attempt < 64 => {
+                                retries += 1;
+                                std::thread::yield_now();
+                            }
+                            Err(e) => {
+                                aborted.store(true, Ordering::Relaxed);
+                                return Err(anyhow!(
+                                    "call {idx} for {tenant} dropped after {attempt} attempts: {e:#}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(ScorerOut { recs, retries })
+            }));
+        }
+
+        let mut outs = Vec::with_capacity(scorers.len());
+        for h in scorers {
+            outs.push(h.join().map_err(|_| anyhow!("scorer thread panicked"))?);
+        }
+        let history = control
+            .join()
+            .map_err(|_| anyhow!("control thread panicked"))?;
+        Ok::<_, anyhow::Error>((history, outs))
+    })?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    // Scorer errors first: a dropped request is the root cause worth
+    // reporting even when it also derailed the control thread.
+    let mut retries = 0u64;
+    let mut recs: Vec<RespRec> = Vec::new();
+    for out in scorer_outs {
+        let out = out?;
+        retries += out.retries;
+        recs.extend(out.recs);
+    }
+    let history = history?;
+
+    // Zero dropped: every claimed call produced its full event count.
+    let batches = if cfg.batch_every == 0 {
+        0
+    } else {
+        cfg.calls.div_ceil(cfg.batch_every)
+    };
+    let expected_events = (cfg.calls - batches) + batches * cfg.batch_size;
+    ensure!(
+        recs.len() == expected_events,
+        "driver recorded {} events, drove {expected_events}",
+        recs.len()
+    );
+
+    // Zero torn: the response predictor must be the tenant's assigned
+    // predictor at some committed epoch inside the attribution window.
+    let final_epoch = cluster.committed_epoch();
+    for rec in &recs {
+        ensure!(rec.epoch_lo <= rec.epoch_hi, "inverted epoch window");
+        ensure!(
+            rec.epoch_hi <= final_epoch,
+            "window [{}, {}] beyond committed epoch {final_epoch}",
+            rec.epoch_lo,
+            rec.epoch_hi
+        );
+        let hist = &history[rec.tenant];
+        let fits = (rec.epoch_lo..=rec.epoch_hi)
+            .any(|k| assignment_at(hist, k) == Some(rec.predictor.as_str()));
+        ensure!(
+            fits,
+            "torn score: t{} got '{}' in window [{}, {}] but assignments are {:?}",
+            rec.tenant,
+            rec.predictor,
+            rec.epoch_lo,
+            rec.epoch_hi,
+            hist
+        );
+    }
+
+    // Epoch-exact accounting: driver multiset == cluster-aggregated
+    // non-shadow lake, over every node ever created (the crashed
+    // node's engine keeps its scored history).
+    let mut expect: BTreeMap<(String, String), u64> = BTreeMap::new();
+    let mut per_node: BTreeMap<NodeId, u64> = BTreeMap::new();
+    for rec in &recs {
+        *expect
+            .entry((format!("t{}", rec.tenant), rec.predictor.clone()))
+            .or_default() += 1;
+        *per_node.entry(rec.node).or_default() += 1;
+    }
+    let all_nodes = cluster.nodes();
+    for node in &all_nodes {
+        node.engine.drain_shadows();
+    }
+    let mut got: BTreeMap<(String, String), u64> = BTreeMap::new();
+    for node in &all_nodes {
+        ensure!(
+            node.engine.lake.forced_overwrites() == 0,
+            "node {}: lake forced an overwrite (storm exceeds capacity?)",
+            node.id
+        );
+        ensure!(
+            node.engine.lake.lost_appends() == 0,
+            "node {}: lake lost an append",
+            node.id
+        );
+        for ((tenant, predictor, shadow), n) in node.engine.lake.counts() {
+            if !shadow {
+                *got.entry((tenant, predictor)).or_default() += n as u64;
+            }
+        }
+    }
+    ensure!(
+        got == expect,
+        "cluster lake multiset diverges from driver tallies:\n  lake:   {got:?}\n  driver: {expect:?}"
+    );
+
+    // Lifecycle arithmetic.
+    let stats = cluster.stats();
+    ensure!(stats.crashes == 1, "expected exactly 1 crash, got {}", stats.crashes);
+    ensure!(
+        stats.joins == (cfg.nodes + 1) as u64,
+        "expected {} joins, got {}",
+        cfg.nodes + 1,
+        stats.joins
+    );
+    ensure!(stats.aborted == 0, "unexpected aborted publish(es): {}", stats.aborted);
+    ensure!(
+        stats.publishes == final_epoch,
+        "publishes {} != committed epoch {final_epoch}",
+        stats.publishes
+    );
+    let serving = cluster.serving_nodes().len();
+    ensure!(
+        serving == cfg.nodes,
+        "expected {} serving nodes at the end (crash + join), got {serving}",
+        cfg.nodes
+    );
+
+    let events_total = recs.len() as u64;
+    Ok(ClusterStormReport {
+        nodes_initial: cfg.nodes,
+        nodes_serving_final: serving,
+        calls_total: cfg.calls as u64,
+        events_total,
+        retries,
+        promotions: cfg.promotions as u64,
+        committed_epoch: final_epoch,
+        crashes: stats.crashes,
+        joins: stats.joins,
+        wall_secs,
+        events_per_sec: events_total as f64 / wall_secs.max(1e-9),
+        per_node_events: per_node.into_iter().collect(),
+        flip_p50_ms: cluster.flip_percentile_ms(50.0),
+        flip_p99_ms: cluster.flip_percentile_ms(99.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storm_is_seamless_and_conserves_every_event() {
+        let fix = SimArtifacts::in_temp().unwrap();
+        let cfg = ClusterStormConfig {
+            nodes: 4,
+            tenants: 3,
+            calls: 400,
+            promotions: 6,
+            threads: 3,
+            ack_timeout: Duration::from_millis(250),
+            ..ClusterStormConfig::default()
+        };
+        let report = run_cluster_storm(&fix, &cfg).unwrap();
+        assert_eq!(report.calls_total, 400);
+        assert!(report.events_total >= 400);
+        assert_eq!(report.crashes, 1);
+        assert_eq!(report.joins, 5);
+        assert_eq!(report.nodes_serving_final, 4);
+        // 6 rotations: 6 deploys + 6 promotes + decommissions for
+        // every version that reached v >= 2.
+        assert!(report.committed_epoch >= 12);
+        assert!(report.events_per_sec > 0.0);
+        let rendered = report.render();
+        assert!(rendered.contains("cluster storm (4 nodes"), "{rendered}");
+        assert!(rendered.contains("1 crash(es)"), "{rendered}");
+    }
+}

@@ -10,9 +10,14 @@
 //! cross-checking the lock-free observation plane against a
 //! sequential oracle, and the connection storm holding thousands of
 //! concurrent keep-alive sockets against the event-driven ingress
-//! plane with exact end-to-end event conservation.
+//! plane with exact end-to-end event conservation. `cluster_storm`
+//! attacks the real cluster plane (`crate::cluster`): Zipf traffic
+//! over N serving nodes racing continuous two-phase publishes, with a
+//! mid-flip crash and a log-replay join, asserting zero dropped, zero
+//! torn and epoch-exact accounting.
 
 pub mod cluster;
+pub mod cluster_storm;
 pub mod connection_storm;
 pub mod drift_storm;
 pub mod multitenant;
@@ -23,6 +28,7 @@ pub use cluster::{
     swap_storm, ClusterConfig, ClusterSim, LatencyModel, RolloutTrace, SwapStormConfig,
     SwapStormReport,
 };
+pub use cluster_storm::{run_cluster_storm, ClusterStormConfig, ClusterStormReport};
 pub use connection_storm::{
     run_connection_storm, ConnectionStormConfig, ConnectionStormReport,
 };

@@ -27,9 +27,12 @@
 //! distribution demonstrably shifts — and must never be worse than the
 //! counterfactual "keep the old transformation" world.
 
+use crate::cluster::{
+    ClusterCommand, ClusterOptions, FaultPoint, MuseCluster, NodeState, PoolFactory,
+};
 use crate::config::{Intent, MuseConfig, PredictorConfig, QuantileMode};
 use crate::coordinator::{ControlPlane, Engine, ScoreRequest, ScoreResponse};
-use crate::runtime::{ModelPool, SimArtifacts};
+use crate::runtime::{Manifest, ModelPool, SimArtifacts};
 use crate::testkit::gen::{Call, Command, Trace, UpdateStorm};
 use crate::testkit::oracle::{OracleEngine, OracleQuantile, OracleResponse};
 use crate::transforms::{quantile_fit, QuantileMap, ReferenceDistribution};
@@ -784,6 +787,556 @@ pub fn run_update_storm(
         raw_ks,
         promotions,
     })
+}
+
+// -------------------------------------------------------------------
+// The cluster runner: N-node system vs the single oracle
+// -------------------------------------------------------------------
+
+/// Convert a generated command into its cluster twin, field for field,
+/// so the replicated publish installs byte-identical state to what the
+/// oracle applies.
+pub fn to_cluster_command(cmd: &Command) -> ClusterCommand {
+    match cmd {
+        Command::ShadowDeploy {
+            cfg,
+            tenant,
+            src,
+            refq,
+        } => ClusterCommand::ShadowDeploy {
+            cfg: cfg.clone(),
+            tenant: tenant.clone(),
+            src: src.clone(),
+            refq: refq.clone(),
+        },
+        Command::Promote { tenant, predictor } => ClusterCommand::Promote {
+            tenant: tenant.clone(),
+            predictor: predictor.clone(),
+        },
+        Command::Decommission { predictor } => ClusterCommand::Decommission {
+            predictor: predictor.clone(),
+        },
+        Command::InstallTenantQuantile {
+            predictor,
+            tenant,
+            src,
+            refq,
+        } => ClusterCommand::InstallTenantQuantile {
+            predictor: predictor.clone(),
+            tenant: tenant.clone(),
+            src: src.clone(),
+            refq: refq.clone(),
+        },
+        Command::SetDefaultQuantile {
+            predictor,
+            src,
+            refq,
+        } => ClusterCommand::SetDefaultQuantile {
+            predictor: predictor.clone(),
+            src: src.clone(),
+            refq: refq.clone(),
+        },
+    }
+}
+
+/// Publish one generated command to the cluster and apply it to the
+/// oracle, asserting **outcome parity**: a two-phase publish must
+/// commit exactly when the sequential oracle accepts the command (a
+/// validation nack on any replica aborts cluster-wide, which is only
+/// correct because deterministic replicas nack in unison).
+pub fn cluster_apply_command(
+    cluster: &MuseCluster,
+    oracle: &OracleEngine,
+    cmd: &Command,
+) -> PropResult {
+    let c_ok = cluster.publish(to_cluster_command(cmd)).is_ok();
+    let (o_ok, label) = match cmd {
+        Command::ShadowDeploy {
+            cfg, tenant, src, refq,
+        } => {
+            let omap = Arc::new(
+                OracleQuantile::new(src.clone(), refq.clone())
+                    .map_err(|e| format!("oracle grid invalid: {e}"))?,
+            );
+            (
+                oracle.shadow_deploy(cfg, tenant, omap).is_ok(),
+                format!("shadow_deploy {} for {tenant}", cfg.name),
+            )
+        }
+        Command::Promote { tenant, predictor } => (
+            oracle.promote(tenant, predictor).is_ok(),
+            format!("promote {predictor} for {tenant}"),
+        ),
+        Command::Decommission { predictor } => (
+            oracle.decommission(predictor).is_ok(),
+            format!("decommission {predictor}"),
+        ),
+        Command::InstallTenantQuantile {
+            predictor, tenant, src, refq,
+        } => {
+            let omap = Arc::new(
+                OracleQuantile::new(src.clone(), refq.clone())
+                    .map_err(|e| format!("oracle grid invalid: {e}"))?,
+            );
+            (
+                oracle.install_tenant_quantile(predictor, tenant, omap).is_ok(),
+                format!("install_tenant_quantile {predictor}/{tenant}"),
+            )
+        }
+        Command::SetDefaultQuantile {
+            predictor, src, refq,
+        } => {
+            let omap = Arc::new(
+                OracleQuantile::new(src.clone(), refq.clone())
+                    .map_err(|e| format!("oracle grid invalid: {e}"))?,
+            );
+            (
+                oracle.set_default_quantile(predictor, omap).is_ok(),
+                format!("set_default_quantile {predictor}"),
+            )
+        }
+    };
+    if c_ok != o_ok {
+        return Err(format!(
+            "publish outcome divergence on [{label}]: cluster ok={c_ok}, oracle ok={o_ok}"
+        ));
+    }
+    Ok(())
+}
+
+/// One wave call's gateway outcome, recorded by the scoring threads
+/// for the sequential oracle comparison afterwards.
+enum WaveOut {
+    Single(std::result::Result<crate::cluster::GatewayResponse, String>),
+    Batch(std::result::Result<crate::cluster::GatewayBatch, String>),
+}
+
+/// Replay a trace against an N-node [`MuseCluster`] and the single
+/// sequential [`OracleEngine`] — the cluster-wide seamlessness check.
+///
+/// Every phase's commands land as two-phase publishes at the barrier
+/// (with outcome parity per [`cluster_apply_command`]); the phase's
+/// events are then scored through the gateway from `threads` client
+/// threads. Mid-storm the runner injects the failure schedule the
+/// ISSUE demands: a crash armed to fire **mid-promotion**
+/// (`CrashBeforeCommitApply` on the first publish flip after phase 0,
+/// with a forced crash as fallback so every trace ends with a fenced
+/// node), a `join` that must catch up by log replay before the last
+/// phase, and a graceful `leave` right after it.
+///
+/// Checks, per event: bitwise score equality against the oracle and
+/// an exact epoch attribution window (commands never race events, so
+/// `epoch_lo == epoch_hi ==` the committed epoch read at the wave
+/// barrier). At the end: cluster-aggregated conservation via
+/// [`diff_cluster_state`].
+pub fn run_cluster_trace(
+    fix: &SimArtifacts,
+    trace: &Trace,
+    nodes: usize,
+    threads: usize,
+) -> PropResult {
+    let root = fix.root().clone();
+    let factory: PoolFactory =
+        Box::new(move || Ok(Arc::new(ModelPool::new(Manifest::load(&root)?))));
+    let cluster = MuseCluster::build(
+        &trace.topology.config,
+        ClusterOptions {
+            nodes,
+            ack_timeout: std::time::Duration::from_secs(2),
+        },
+        factory,
+    )
+    .map_err(|e| format!("cluster build: {e:#}"))?;
+    let oracle = OracleEngine::build(
+        &trace.topology.config,
+        Arc::new(ModelPool::new(
+            fix.manifest().map_err(|e| format!("manifest: {e:#}"))?,
+        )),
+    )
+    .map_err(|e| format!("oracle build: {e:#}"))?;
+
+    let n_phases = trace.phases.len();
+    let mut victim: Option<crate::cluster::NodeId> = None;
+    let mut joined: Option<crate::cluster::NodeId> = None;
+    let mut event_idx = 0usize;
+
+    for (pi, phase) in trace.phases.iter().enumerate() {
+        if pi == 1 {
+            // Arm the mid-promotion crash: the first committed publish
+            // from here on kills this node between stage-ack and
+            // commit-apply, so it is fenced at the *old* epoch.
+            let v = cluster.serving_nodes()[0].id;
+            cluster
+                .arm_fault(v, FaultPoint::CrashBeforeCommitApply)
+                .map_err(|e| format!("arm_fault: {e:#}"))?;
+            victim = Some(v);
+        }
+        if pi + 1 == n_phases && n_phases > 1 {
+            // Join mid-storm: the newcomer replays the committed log
+            // (outside the membership) and then takes traffic...
+            let id = cluster.join().map_err(|e| format!("join: {e:#}"))?;
+            joined = Some(id);
+            // ...while another node leaves gracefully.
+            let leaver = cluster
+                .serving_nodes()
+                .iter()
+                .map(|n| n.id)
+                .find(|&id2| id2 != id && Some(id2) != victim);
+            if let Some(leaver) = leaver {
+                cluster.leave(leaver).map_err(|e| format!("leave: {e:#}"))?;
+            }
+        }
+        for cmd in &phase.commands {
+            cluster_apply_command(&cluster, &oracle, cmd)?;
+        }
+
+        // The wave: whole calls partitioned across client threads —
+        // a batch is one request and lands wholly on one node.
+        let epoch = cluster.committed_epoch();
+        let gw = cluster.gateway();
+        let mut results: Vec<Option<WaveOut>> = (0..phase.calls.len()).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let gw = &gw;
+            let calls = &phase.calls;
+            let handles: Vec<_> = (0..threads.max(1))
+                .map(|t| {
+                    s.spawn(move || {
+                        let mut out: Vec<(usize, WaveOut)> = Vec::new();
+                        for (i, call) in calls.iter().enumerate() {
+                            if i % threads.max(1) != t {
+                                continue;
+                            }
+                            let r = match call {
+                                Call::Single {
+                                    intent,
+                                    entity,
+                                    features,
+                                } => WaveOut::Single(
+                                    gw.score(&to_request(intent, entity, features))
+                                        .map_err(|e| format!("{e:#}")),
+                                ),
+                                Call::Batch(items) => {
+                                    let reqs: Vec<ScoreRequest> = items
+                                        .iter()
+                                        .map(|(i2, en, f)| to_request(i2, en, f))
+                                        .collect();
+                                    WaveOut::Batch(
+                                        gw.score_batch(&reqs).map_err(|e| format!("{e:#}")),
+                                    )
+                                }
+                            };
+                            out.push((i, r));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("cluster scoring thread panicked") {
+                    results[i] = Some(r);
+                }
+            }
+        });
+
+        // Sequential oracle pass + bitwise/epoch comparison in order.
+        for (call, out) in phase.calls.iter().zip(results.iter_mut()) {
+            let out = out.take().expect("every call scored by exactly one thread");
+            match (call, out) {
+                (
+                    Call::Single {
+                        intent, features, ..
+                    },
+                    WaveOut::Single(e),
+                ) => {
+                    let o = oracle.score(intent, features).map_err(|err| format!("{err:#}"));
+                    if let Ok(g) = &e {
+                        if g.epoch_lo != epoch || g.epoch_hi != epoch {
+                            return Err(format!(
+                                "event {event_idx}: epoch window [{}, {}] off the barrier \
+                                 epoch {epoch} (node {})",
+                                g.epoch_lo, g.epoch_hi, g.node
+                            ));
+                        }
+                    }
+                    compare_responses(event_idx, &e.map(|g| g.resp), &o)?;
+                    event_idx += 1;
+                }
+                (Call::Batch(items), WaveOut::Batch(e)) => {
+                    let oreqs: Vec<(Intent, Vec<f32>)> = items
+                        .iter()
+                        .map(|(i2, _, f)| (i2.clone(), f.clone()))
+                        .collect();
+                    let o = oracle.score_batch(&oreqs).map_err(|err| format!("{err:#}"));
+                    match (&e, &o) {
+                        (Ok(gb), Ok(os)) => {
+                            if gb.epoch_lo != epoch || gb.epoch_hi != epoch {
+                                return Err(format!(
+                                    "batch at event {event_idx}: epoch window [{}, {}] off \
+                                     the barrier epoch {epoch} (node {})",
+                                    gb.epoch_lo, gb.epoch_hi, gb.node
+                                ));
+                            }
+                            if gb.resps.len() != os.len() {
+                                return Err(format!(
+                                    "batch at event {event_idx}: {} vs oracle {}",
+                                    gb.resps.len(),
+                                    os.len()
+                                ));
+                            }
+                            for (i, (er, or)) in gb.resps.iter().zip(os).enumerate() {
+                                compare_responses(
+                                    event_idx + i,
+                                    &Ok(er.clone()),
+                                    &Ok(or.clone()),
+                                )?;
+                            }
+                        }
+                        (Err(_), Err(_)) => {}
+                        (a, b) => {
+                            return Err(format!(
+                                "batch outcome divergence at event {event_idx}: cluster \
+                                 ok={} oracle ok={}",
+                                a.is_ok(),
+                                b.is_ok()
+                            ));
+                        }
+                    }
+                    event_idx += items.len();
+                }
+                _ => return Err("wave result shape mismatch".to_string()),
+            }
+        }
+        // Shadow mirrors settle before the next command barrier, on
+        // every engine that may have scored (including fenced ones).
+        for node in cluster.nodes() {
+            node.engine.drain_shadows();
+        }
+    }
+
+    // The armed crash only fires on a committed flip; if the storm
+    // never published a valid command after arming, force the death so
+    // every trace still ends with a fenced node in the accounting.
+    if let Some(v) = victim {
+        let node = cluster
+            .nodes()
+            .into_iter()
+            .find(|n| n.id == v)
+            .ok_or_else(|| "victim vanished from the node ledger".to_string())?;
+        if node.state() == NodeState::Serving && cluster.serving_nodes().len() > 1 {
+            cluster.crash(v).map_err(|e| format!("forced crash: {e:#}"))?;
+        }
+    }
+    let _ = joined; // the join is asserted through diff_cluster_state
+    for node in cluster.nodes() {
+        node.engine.drain_shadows();
+    }
+    diff_cluster_state(&cluster, &oracle, !trace.has_decommission)
+}
+
+/// Diff the cluster against the oracle:
+///
+/// * **aggregates over every node ever created** (serving, left,
+///   crashed — fenced engines keep their scored history): lake
+///   length, per-(tenant, predictor, shadow) record multisets,
+///   `count_for`, data-plane counters, per-tenant batch accounting —
+///   each event was scored on exactly one node, so the cluster-wide
+///   sums must equal the single oracle **exactly**;
+/// * **per serving node**: the replicated control-plane state — the
+///   deployed set, the published snapshot's entry set and every
+///   quantile table must equal the oracle's world on *each* replica
+///   (left/crashed nodes are excluded: they are fenced at an older
+///   epoch by design);
+/// * optionally (traces without teardowns), cluster-wide batcher
+///   event conservation.
+pub fn diff_cluster_state(
+    cluster: &MuseCluster,
+    oracle: &OracleEngine,
+    check_conservation: bool,
+) -> PropResult {
+    let all = cluster.nodes();
+    // Lake cardinality and per-(tenant, predictor, shadow) counts.
+    let c_len: usize = all.iter().map(|n| n.engine.lake.len()).sum();
+    let o_len = oracle.lake.len();
+    if c_len != o_len {
+        return Err(format!(
+            "cluster lake len {c_len} (over {} nodes) vs oracle {o_len}",
+            all.len()
+        ));
+    }
+    let mut c_counts: BTreeMap<(String, String, bool), usize> = BTreeMap::new();
+    for n in &all {
+        for (k, v) in n.engine.lake.counts() {
+            *c_counts.entry(k).or_insert(0) += v;
+        }
+    }
+    let o_counts = oracle.lake.counts();
+    if c_counts != o_counts {
+        return Err(format!(
+            "cluster lake counts diverge:\n  cluster: {c_counts:?}\n  oracle: {o_counts:?}"
+        ));
+    }
+    for n in &all {
+        if n.engine.lake.forced_overwrites() != 0 || n.engine.lake.lost_appends() != 0 {
+            return Err(format!(
+                "lake degradation on node {}: forced={} lost={}",
+                n.id,
+                n.engine.lake.forced_overwrites(),
+                n.engine.lake.lost_appends()
+            ));
+        }
+    }
+    // Per-pair record multisets, merged across nodes.
+    let pairs: Vec<(String, String)> = {
+        let mut v: Vec<(String, String)> = c_counts
+            .keys()
+            .map(|(t, p, _)| (t.clone(), p.clone()))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    for (tenant, predictor) in &pairs {
+        let c_cf: usize = all
+            .iter()
+            .map(|n| n.engine.lake.count_for(tenant, predictor))
+            .sum();
+        let o_cf = oracle.lake.count_for(tenant, predictor);
+        if c_cf != o_cf {
+            return Err(format!(
+                "cluster count_for({tenant},{predictor}) {c_cf} vs oracle {o_cf}"
+            ));
+        }
+        for shadow in [false, true] {
+            let mut c_pairs: Vec<(u64, u64)> = all
+                .iter()
+                .flat_map(|n| n.engine.lake.records_for(tenant, predictor))
+                .filter(|r| r.shadow == shadow)
+                .map(|r| (r.score.to_bits(), r.raw_score.to_bits()))
+                .collect();
+            let mut o_pairs: Vec<(u64, u64)> = oracle
+                .lake
+                .records_for(tenant, predictor)
+                .iter()
+                .filter(|r| r.shadow == shadow)
+                .map(|r| (r.score.to_bits(), r.raw.to_bits()))
+                .collect();
+            c_pairs.sort_unstable();
+            o_pairs.sort_unstable();
+            if c_pairs != o_pairs {
+                return Err(format!(
+                    "cluster lake records diverge for ({tenant},{predictor},shadow={shadow}): \
+                     {} vs oracle {} records",
+                    c_pairs.len(),
+                    o_pairs.len()
+                ));
+            }
+        }
+    }
+    // Data-plane counters, summed cluster-wide.
+    for name in [
+        "requests_live",
+        "requests_batch",
+        "events_batch",
+        "shadow_missing_predictor",
+        "shadow_enrich_error",
+    ] {
+        let c: u64 = all.iter().map(|n| n.engine.counters.get(name)).sum();
+        let o = oracle.counter(name);
+        if c != o {
+            return Err(format!("cluster counter '{name}': {c} vs oracle {o}"));
+        }
+    }
+    // Per-tenant batch accounting, merged cluster-wide.
+    let mut c_tenants: BTreeMap<String, u64> = BTreeMap::new();
+    for n in &all {
+        for (k, v) in n.engine.tenant_events.snapshot() {
+            *c_tenants.entry(k).or_insert(0) += v;
+        }
+    }
+    let o_tenants = oracle.tenant_events_snapshot();
+    if c_tenants != o_tenants {
+        return Err(format!(
+            "cluster tenant_events diverge:\n  cluster: {c_tenants:?}\n  oracle: {o_tenants:?}"
+        ));
+    }
+    // The replicated control-plane state, on every *serving* replica.
+    let serving = cluster.serving_nodes();
+    if serving.is_empty() {
+        return Err("no serving nodes left at the end of the trace".to_string());
+    }
+    for n in &serving {
+        diff_node_control_state(n.id, &n.engine, oracle)?;
+    }
+    // Batcher event conservation, cluster-wide.
+    if check_conservation {
+        let total: u64 = all
+            .iter()
+            .flat_map(|n| n.engine.batcher_event_totals())
+            .map(|(_, s)| s.events)
+            .sum();
+        let expected =
+            oracle.counter("requests_live") + oracle.counter("testkit_shadow_mirrors_single");
+        if total != expected {
+            return Err(format!(
+                "cluster batcher conservation broken: batchers saw {total}, oracle counted \
+                 {expected} (live + single-path shadow mirrors)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// One serving node's control-plane state vs the oracle's world: the
+/// deployed set, the published snapshot's entry set and every
+/// predictor's quantile table (override key sets + exact grids).
+fn diff_node_control_state(
+    id: crate::cluster::NodeId,
+    engine: &Engine,
+    oracle: &OracleEngine,
+) -> PropResult {
+    let e_deployed = engine.registry.names();
+    let o_deployed = oracle.deployed();
+    if e_deployed != o_deployed {
+        return Err(format!(
+            "node {id}: deployed set diverges: {e_deployed:?} vs oracle {o_deployed:?}"
+        ));
+    }
+    let snap_names = engine.snapshot_predictor_names();
+    if snap_names != o_deployed {
+        return Err(format!(
+            "node {id}: published snapshot {snap_names:?} lags oracle world {o_deployed:?}"
+        ));
+    }
+    for name in &e_deployed {
+        let p = engine
+            .predictor(name)
+            .map_err(|e| format!("node {id}: predictor '{name}': {e:#}"))?;
+        let table = p.quantile_table();
+        let ostate = oracle
+            .quantile_state(name)
+            .ok_or_else(|| format!("oracle lost predictor '{name}'"))?;
+        if table.tenant_names() != ostate.tenant_names {
+            return Err(format!(
+                "node {id}: tenant-override set diverges for '{name}': {:?} vs oracle {:?}",
+                table.tenant_names(),
+                ostate.tenant_names
+            ));
+        }
+        if table.default_map().source_quantiles() != ostate.default.source_quantiles()
+            || table.default_map().reference_quantiles() != ostate.default.reference_quantiles()
+        {
+            return Err(format!("node {id}: default T^Q grids diverge for '{name}'"));
+        }
+        for (tenant, omap) in &ostate.overrides {
+            let emap = table.for_tenant(tenant);
+            if emap.source_quantiles() != omap.source_quantiles()
+                || emap.reference_quantiles() != omap.reference_quantiles()
+            {
+                return Err(format!("node {id}: T^Q grids diverge for '{name}'/{tenant}"));
+            }
+        }
+    }
+    Ok(())
 }
 
 // -------------------------------------------------------------------

@@ -30,8 +30,10 @@ pub mod oracle;
 
 pub use gen::{Call, Command, DriftSpec, Phase, Topology, Trace, UpdateStorm};
 pub use harness::{
-    apply_command, base_seed, build_pair, check_batcher_conservation, check_logged, diff_state,
-    run_trace_concurrent, run_trace_single, run_update_storm, UpdateStormReport,
+    apply_command, base_seed, build_pair, check_batcher_conservation, check_logged,
+    cluster_apply_command, diff_cluster_state, diff_state, run_cluster_trace,
+    run_trace_concurrent, run_trace_single, run_update_storm, to_cluster_command,
+    UpdateStormReport,
 };
 pub use oracle::{
     OracleEngine, OracleLake, OracleQuantile, OracleQuantileState, OracleRecord, OracleResponse,

@@ -29,6 +29,13 @@
 //!    configured threshold returns to target after every promotion
 //!    while the raw score distribution demonstrably shifts (and never
 //!    does worse than keeping the old transformation).
+//! 4. **Cluster-wide seamlessness** — the same generated storms
+//!    replayed against an N-node `MuseCluster` (two-phase publish,
+//!    rendezvous gateway, a crash armed mid-promotion, a join by log
+//!    replay and a graceful leave): every response is bitwise-equal to
+//!    the single oracle with an exact committed-epoch attribution
+//!    window, and the cluster-aggregated lake/counters/tenant
+//!    accounting is exactly conserved.
 
 use muse::runtime::SimArtifacts;
 use muse::testkit::{gen, harness};
@@ -60,6 +67,26 @@ fn model_oracle_concurrent_swap_storm_exactness() {
         |g| {
             let trace = gen::trace(g, true);
             harness::run_trace_concurrent(&fix, &trace, 4)
+        },
+    );
+}
+
+/// Invariant 4: cluster-wide seamlessness. Generated control storms
+/// replicated over 4–6 nodes via two-phase publish, with the failure
+/// schedule injected mid-storm (crash mid-promotion, join by log
+/// replay, graceful leave) and events scored through the rendezvous
+/// gateway from 4 client threads.
+#[test]
+fn model_cluster_two_phase_publish_exactness() {
+    let fix = SimArtifacts::in_temp().expect("sim fixture");
+    harness::check_logged(
+        "model_cluster_two_phase_publish_exactness",
+        harness::base_seed(0x4D42_434C),
+        12,
+        |g| {
+            let trace = gen::trace(g, false);
+            let nodes = g.usize(4..7);
+            harness::run_cluster_trace(&fix, &trace, nodes, 4)
         },
     );
 }
