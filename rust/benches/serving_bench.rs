@@ -4,7 +4,10 @@
 //! across the AOT variants, single-event end-to-end engine latency,
 //! engine throughput under concurrency (quiescent and under a
 //! control-plane promotion storm), end-to-end batch scoring through
-//! `Engine::score_batch`, and the infra-dedup registry ops.
+//! `Engine::score_batch`, and the infra-dedup registry ops. The
+//! tenant-state-plane section measures the 100k-tenant scale-out:
+//! string-map vs handle-slab probes, onboarding-storm republish cost,
+//! and the `/metrics` scrape with 100k live tenant counters.
 //! PJRT sections skip (with a message) when artifacts are missing.
 //! Numbers are recorded in EXPERIMENTS.md.
 
@@ -582,6 +585,158 @@ fn bench_hot_counters() {
     );
 }
 
+/// Tenant state plane at scale: the three costs the sharded-slab
+/// registries change. (1) the per-event state probe — string-keyed
+/// map vs dense-handle slab; (2) the onboarding storm — first-touch
+/// republish cost of a single whole-map COW cell vs the sharded
+/// interner; (3) the `/metrics` scrape at 100k tenant keys —
+/// clone-then-serialize vs shard-streamed. Mostly pure; the scrape
+/// half runs on the synthetic sim artifacts.
+fn bench_tenant_state_plane() {
+    use muse::util::slab::HandleSlab;
+    use muse::util::swap::SnapCell;
+
+    section("tenant state plane: sharded slab registries at 100k tenants");
+    const N: usize = 100_000;
+    let names: Vec<Arc<str>> = (0..N).map(|i| Arc::from(format!("tenant-{i:06}"))).collect();
+
+    // (1) Feed-table probe: published string map vs handle slab, both
+    // behind the same wait-free snapshot discipline the engine uses.
+    // Payloads are warm-tier rings so the probe cost is measured on
+    // the real value type.
+    let ring = || Arc::new(muse::lifecycle::ScoreFeed::new(1, 8));
+    let by_name: SnapCell<HashMap<Arc<str>, Arc<muse::lifecycle::ScoreFeed>>> = SnapCell::new(
+        Arc::new(names.iter().map(|n| (Arc::clone(n), ring())).collect()),
+    );
+    let slab: HandleSlab<Arc<muse::lifecycle::ScoreFeed>> = HandleSlab::with_shards(16);
+    for i in 0..N {
+        slab.set(i, ring());
+    }
+    let mut acc = 0usize;
+    let mut i = 0usize;
+    let r_map = bench("feed probe by tenant string (hash per event)", 2_000, 500_000, || {
+        let table = by_name.load();
+        acc += table[&names[(i * 7919) % N]].memory_bytes();
+        i += 1;
+    });
+    println!("{}   ({:.1} ns/probe)", r_map.report(), r_map.mean_ns);
+    let mut j = 0usize;
+    let r_slab = bench("feed probe by handle slab (dense index)  ", 2_000, 500_000, || {
+        acc += slab.get((j * 7919) % N).unwrap().memory_bytes();
+        j += 1;
+    });
+    std::hint::black_box(acc);
+    println!(
+        "{}   ({:.1} ns/probe, {:.2}x vs string map)",
+        r_slab.report(),
+        r_slab.mean_ns,
+        r_map.mean_ns / r_slab.mean_ns
+    );
+    // Both probe paths are snapshot-load + indexed reads — no lock,
+    // no CAS loop. Anchor the equivalence: every index the string map
+    // serves, the slab serves too.
+    let table = by_name.load();
+    for k in (0..N).step_by(997) {
+        assert!(
+            slab.get(k).is_some() && table.contains_key(&names[k]),
+            "probe surfaces disagree at index {k}"
+        );
+    }
+
+    // (2) Onboarding storm: every first touch of the seed layout
+    // cloned the whole name map under one writer lock — O(n^2) across
+    // an n-tenant storm — so the re-enactment stops at 10k while the
+    // sharded interner runs the full 100k.
+    let cow: SnapCell<HashMap<Arc<str>, u32>> = SnapCell::new(Arc::new(HashMap::new()));
+    let t0 = Instant::now();
+    for (id, name) in names.iter().take(10_000).enumerate() {
+        cow.rcu(|old| {
+            let mut next = old.as_ref().clone();
+            next.insert(Arc::clone(name), id as u32);
+            (Arc::new(next), ())
+        });
+    }
+    let cow_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  onboard 10k  whole-map COW (seed re-enactment): {:>8.3}s ({:.1} us/tenant)",
+        cow_wall,
+        cow_wall * 1e6 / 10_000.0
+    );
+    for count in [10_000usize, N] {
+        let interner = TenantInterner::new();
+        let t0 = Instant::now();
+        for name in names.iter().take(count) {
+            interner.resolve(name);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  onboard {:>4}k sharded slab interner:            {:>8.3}s ({:.3} us/tenant{})",
+            count / 1000,
+            wall,
+            wall * 1e6 / count as f64,
+            if count == 10_000 {
+                format!(", {:.0}x vs COW", cow_wall / wall)
+            } else {
+                String::new()
+            }
+        );
+    }
+
+    // (3) /metrics scrape with 100k live tenant counters.
+    let fix = match SimArtifacts::in_temp() {
+        Ok(f) => f,
+        Err(e) => {
+            println!("  (skipping /metrics scrape comparison: {e})");
+            return;
+        }
+    };
+    let yaml = r#"
+routing:
+  scoringRules:
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "solo"
+predictors:
+- name: solo
+  experts: [s1]
+  quantile: identity
+server:
+  workers: 2
+"#;
+    let pool = Arc::new(ModelPool::new(fix.manifest().unwrap()));
+    let engine = Engine::build(&MuseConfig::from_yaml(yaml).unwrap(), pool).unwrap();
+    for name in &names {
+        let h = engine.tenants.resolve(name);
+        engine.tenant_events.handle(h.index()).add(1);
+    }
+    let mut sink = 0usize;
+    let r_snap = bench("scrape via snapshot clone (seed re-enactment)", 2, 20, || {
+        let snap = engine.scored_events_snapshot();
+        let mut body = String::with_capacity(snap.len() * 24);
+        for (name, n) in &snap {
+            muse::util::json::write_escaped(name, &mut body);
+            body.push(':');
+            muse::util::json::write_num(*n as f64, &mut body);
+        }
+        sink += body.len();
+    });
+    println!(
+        "{}   ({:.2} ms/scrape)",
+        r_snap.report(),
+        r_snap.mean_ns / 1e6
+    );
+    let r_stream = bench("scrape via streamed /metrics (shard iteration)", 2, 20, || {
+        sink += muse::server::metrics_json(&engine).len();
+    });
+    std::hint::black_box(sink);
+    println!(
+        "{}   ({:.2} ms/scrape, {:.2}x vs clone)",
+        r_stream.report(),
+        r_stream.mean_ns / 1e6,
+        r_snap.mean_ns / r_stream.mean_ns
+    );
+}
+
 /// Verification plane: the model-based suite's sequential oracle
 /// (`muse::testkit` — one mutex around everything, linear-scan PWL,
 /// per-event batch-1 inference) against the production engine on
@@ -646,6 +801,7 @@ fn main() {
     bench_scoring_kernels();
     bench_lake_sharded_vs_global();
     bench_hot_counters();
+    bench_tenant_state_plane();
     bench_lifecycle_overhead();
     bench_oracle_vs_engine();
 

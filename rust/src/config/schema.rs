@@ -178,6 +178,13 @@ pub struct ServerConfig {
     /// Max concurrently open connections; accepts beyond this are
     /// dropped immediately (counted in `ingress_over_capacity`).
     pub max_connections: usize,
+    /// Shards in the tenant state plane (interner name maps and the
+    /// handle-indexed slab registries: quantile slots, tenant event
+    /// counters, routes, lifecycle feeds). More shards = less
+    /// contention between concurrent onboarding threads; reads are
+    /// wait-free at any count. Shard-count 1 reproduces the old
+    /// single-cell copy-on-write layout.
+    pub tenant_shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -200,6 +207,7 @@ impl Default for ServerConfig {
             body_read_timeout_ms: 15_000,
             max_header_bytes: 16 * 1024,
             max_connections: 8192,
+            tenant_shards: 16,
         }
     }
 }
@@ -250,6 +258,22 @@ pub struct LifecycleConfig {
     /// Decommission the replaced predictor after a promotion when no
     /// routing rule references it anymore.
     pub decommission_old: bool,
+    /// Memory-budget tiers (bounded RSS at ~100k mostly-idle tenants;
+    /// `lifecycle::controller` module docs). A pair whose one-tick
+    /// ring pressure (samples drained + samples overwritten) reaches
+    /// this gets (or keeps) the full-size **hot** feed ring; below it
+    /// the pair runs a small **warm** ring.
+    pub hot_feed_samples: u64,
+    /// Consecutive zero-sample ticks after which a pair's feed ring is
+    /// evicted entirely (**cold**: the ring is drained into the pair's
+    /// sketch first, so eviction never loses a buffered sample).
+    /// Cold pairs are re-promoted to warm when their data-lake pair
+    /// count moves again; samples that arrived while cold are
+    /// accounted in `lifecycle_cold_missed_samples`.
+    pub cold_after_idle_ticks: u32,
+    /// Warm-tier ring capacity (single stripe; rounded up to a power
+    /// of two, minimum 64 — `ScoreFeed::new`).
+    pub warm_feed_capacity: usize,
 }
 
 impl Default for LifecycleConfig {
@@ -274,6 +298,9 @@ impl Default for LifecycleConfig {
             cooldown_ticks: 8,
             check_interval_ms: 1000,
             decommission_old: true,
+            hot_feed_samples: 256,
+            cold_after_idle_ticks: 8,
+            warm_feed_capacity: 128,
         }
     }
 }
@@ -425,6 +452,18 @@ impl MuseConfig {
         ensure!(
             lc.feed_stripes >= 1 && lc.feed_capacity >= 64,
             "lifecycle feed needs >= 1 stripe of >= 64 cells"
+        );
+        ensure!(
+            lc.cold_after_idle_ticks >= 1,
+            "lifecycle.coldAfterIdleTicks must be >= 1 (0 would evict every idle tick)"
+        );
+        ensure!(
+            lc.warm_feed_capacity >= 1,
+            "lifecycle.warmFeedCapacity must be >= 1"
+        );
+        ensure!(
+            self.server.tenant_shards >= 1 && self.server.tenant_shards <= 4096,
+            "server.tenantShards must be in 1..=4096"
         );
         ensure!(
             lc.shadow_timeout_ticks >= 1,
@@ -587,6 +626,15 @@ fn parse_lifecycle(v: &Json) -> Result<LifecycleConfig> {
             .and_then(Json::as_u64)
             .unwrap_or(d.check_interval_ms),
         decommission_old: get_bool("decommissionOld", d.decommission_old),
+        hot_feed_samples: v
+            .get("hotFeedSamples")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.hot_feed_samples),
+        cold_after_idle_ticks: v
+            .get("coldAfterIdleTicks")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.cold_after_idle_ticks as u64) as u32,
+        warm_feed_capacity: get_usize("warmFeedCapacity", d.warm_feed_capacity),
     })
 }
 
@@ -669,6 +717,10 @@ fn parse_server(v: &Json) -> Result<ServerConfig> {
             .get("maxConnections")
             .and_then(Json::as_usize)
             .unwrap_or(d.max_connections),
+        tenant_shards: v
+            .get("tenantShards")
+            .and_then(Json::as_usize)
+            .unwrap_or(d.tenant_shards),
     })
 }
 

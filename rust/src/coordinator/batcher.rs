@@ -500,7 +500,7 @@ fn process_batch(
                 // live groups) — zero per-event hashmap probes.
                 let quantiles = predictor.quantile_table();
                 let mut tenants: Vec<TenantHandle> = Vec::new();
-                let mut pipes: Vec<&Arc<CompiledPipeline>> = Vec::new();
+                let mut pipes: Vec<Arc<CompiledPipeline>> = Vec::new();
                 for (&sub, &r) in batch.iter().zip(bufs.raw.iter()) {
                     // SAFETY: not yet flagged (Copy read of the handle).
                     let tenant = unsafe { (*sub).tenant };

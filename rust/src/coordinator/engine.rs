@@ -23,7 +23,7 @@ use crate::config::{Intent, MuseConfig, QuantileMode};
 use crate::datalake::DataLake;
 use crate::featurestore::FeatureStore;
 use crate::lifecycle::LifecycleHub;
-use crate::metrics::{CounterHandle, Counters, LatencyHistogram};
+use crate::metrics::{CounterHandle, Counters, LatencyHistogram, TenantCounters};
 use crate::runtime::ModelPool;
 use crate::transforms::{PipelineScratch, QuantileMap, ReferenceDistribution};
 use crate::util::swap::SnapCell;
@@ -93,6 +93,9 @@ const LIFECYCLE_COUNTER_NAMES: &[&str] = &[
     "lifecycle_decommission_races",
     "lifecycle_samples_dropped",
     "lifecycle_errors",
+    "lifecycle_feed_evictions",
+    "lifecycle_feed_repromotions",
+    "lifecycle_cold_missed_samples",
 ];
 
 pub struct Engine {
@@ -129,10 +132,13 @@ pub struct Engine {
     pub counters: Counters,
     /// Pre-resolved per-event counter handles (see [`HotCounters`]).
     pub hot: HotCounters,
-    /// Batch-path scored events per tenant (bare tenant keys; surfaced
-    /// as the `scored_events` object in `/metrics`). Updated once per
-    /// (batch, tenant) group — the single-event hot path is untouched.
-    pub tenant_events: Counters,
+    /// Batch-path scored events per tenant, on a handle-indexed slab
+    /// sharded like the interner (surfaced as the `scored_events`
+    /// object in `/metrics` through [`Engine::scored_events_for_each`]
+    /// — names re-attach at read time via the interner). Updated once
+    /// per (batch, tenant) group — the single-event hot path is
+    /// untouched, and a bump is a direct atomic with no name hashing.
+    pub tenant_events: TenantCounters,
     /// Quantile grid resolution (from the manifest).
     pub quantile_points: usize,
     /// Lifecycle autopilot hub (`lifecycle.enabled`): the hot paths
@@ -159,7 +165,7 @@ impl Engine {
     pub fn build(config: &MuseConfig, pool: Arc<ModelPool>) -> Result<Engine> {
         config.validate()?;
         let quantile_points = pool.manifest().quantile_points;
-        let tenants = Arc::new(TenantInterner::new());
+        let tenants = Arc::new(TenantInterner::with_shards(config.server.tenant_shards));
         let registry = PredictorRegistry::with_interner(pool, Arc::clone(&tenants));
         for pc in &config.predictors {
             let initial: Arc<QuantileMap> = match pc.quantile_mode {
@@ -181,10 +187,12 @@ impl Engine {
             max_batch,
             max_batch_delay,
         )));
-        let lifecycle = config
-            .lifecycle
-            .enabled
-            .then(|| Arc::new(LifecycleHub::new(config.lifecycle.clone())));
+        let lifecycle = config.lifecycle.enabled.then(|| {
+            Arc::new(LifecycleHub::new(
+                config.lifecycle.clone(),
+                Arc::clone(&tenants),
+            ))
+        });
         let counters = Counters::new();
         let hot = HotCounters::resolve(&counters);
         for name in LIFECYCLE_COUNTER_NAMES {
@@ -209,7 +217,7 @@ impl Engine {
             batch_latency: LatencyHistogram::new(),
             counters,
             hot,
-            tenant_events: Counters::new(),
+            tenant_events: TenantCounters::new(config.server.tenant_shards),
             quantile_points,
             lifecycle,
             tenants,
@@ -244,6 +252,52 @@ impl Engine {
     /// the data path.
     pub fn ingress_pressure(&self) -> usize {
         self.load_snapshot().max_batcher_depth()
+    }
+
+    /// Batch-path scored events for one tenant name (observability /
+    /// verification surface). Retired-and-reonboarded tenants hold
+    /// several handles over their lifetime; this sums every slot whose
+    /// handle currently resolves from — or ever resolved to — the
+    /// name, matching the one-key-per-name view `/metrics` serves.
+    pub fn scored_events(&self, tenant: &str) -> u64 {
+        let mut total = 0;
+        self.scored_events_for_each(|name, n| {
+            if name == tenant {
+                total += n;
+            }
+        });
+        total
+    }
+
+    /// Stream every non-zero per-tenant scored-event counter as
+    /// `(name, count)`, in slab (handle-allocation) order. The same
+    /// name may be visited more than once (a tenant retired and
+    /// re-onboarded owns several handles) — aggregating consumers sum,
+    /// which is what [`Engine::scored_events_snapshot`] and the
+    /// `/metrics` writer do. Zero-count slots (routes interned by
+    /// non-counting paths) are skipped: the observable map contains
+    /// exactly the tenants the batch path accounted.
+    pub fn scored_events_for_each(&self, mut f: impl FnMut(&str, u64)) {
+        self.tenant_events.for_each(|index, n| {
+            if n == 0 {
+                return;
+            }
+            if let Some(name) = self.tenants.name(TenantHandle::from_index(index)) {
+                f(&name, n);
+            }
+        });
+    }
+
+    /// Materialized per-tenant scored-event counts by name (sorted;
+    /// duplicate handles for one name summed). Verification-plane
+    /// convenience — `/metrics` streams via
+    /// [`Engine::scored_events_for_each`] instead of cloning this map.
+    pub fn scored_events_snapshot(&self) -> std::collections::BTreeMap<String, u64> {
+        let mut out = std::collections::BTreeMap::new();
+        self.scored_events_for_each(|name, n| {
+            *out.entry(name.to_string()).or_insert(0) += n;
+        });
+        out
     }
 
     /// Rebuild the data-plane snapshot from the current routing config
@@ -859,8 +913,8 @@ server:
         assert_eq!(engine.counters.get("events_batch"), 12);
         // Per-tenant accounting covers the batch path (bare tenant
         // keys; the single-event hot path is deliberately untouched).
-        assert_eq!(engine.tenant_events.get("bank1"), 4);
-        assert_eq!(engine.tenant_events.get("other"), 8);
+        assert_eq!(engine.scored_events("bank1"), 4);
+        assert_eq!(engine.scored_events("other"), 8);
         // Batch latency is recorded separately from request latency.
         assert_eq!(engine.batch_latency.count(), 1);
         // bank1's shadow (p2) mirrored the whole sub-batch once per path.
@@ -879,9 +933,9 @@ server:
         engine.score(&req("bank1", d, 77)).unwrap();
         engine.drain_shadows();
         assert!(
-            engine.tenant_events.snapshot().is_empty(),
+            engine.scored_events_snapshot().is_empty(),
             "single-event path leaked scored_events keys: {:?}",
-            engine.tenant_events.snapshot()
+            engine.scored_events_snapshot()
         );
         // The route itself is cached: a second resolution for the same
         // tenant returns the same Arc (warm path, no rebuild).

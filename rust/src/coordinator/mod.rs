@@ -20,5 +20,5 @@ pub use predictor::{ExpertSlot, Predictor, QuantileTable, ScoreBatch};
 pub use registry::{PredictorRegistry, RegistryStats};
 pub use router::{Resolution, Router};
 pub use snapshot::{EngineSnapshot, PredictorEntry, TenantRoute};
-pub use tenants::{TenantHandle, TenantInterner};
+pub use tenants::{TenantHandle, TenantInterner, DEFAULT_NAME_SHARDS};
 pub use warmup::{warm_up, WarmupReport};

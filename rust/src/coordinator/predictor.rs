@@ -13,15 +13,15 @@
 //! (no locks per event or per batch) while the control plane promotes
 //! new transformations copy-on-write with zero downtime.
 
-use super::tenants::{TenantHandle, TenantInterner};
+use super::tenants::{TenantHandle, TenantInterner, DEFAULT_NAME_SHARDS};
 use crate::runtime::ModelHandle;
 use crate::transforms::{
     Aggregation, CompiledPipeline, CompiledStages, PipelineScratch, PosteriorCorrection,
     QuantileMap,
 };
+use crate::util::slab::HandleSlab;
 use crate::util::swap::SnapCell;
 use anyhow::{ensure, Context, Result};
-use std::collections::HashMap;
 use std::sync::Arc;
 
 /// One expert slot: a shared model container + its `T^C_k`.
@@ -40,88 +40,79 @@ pub struct ScoreBatch {
     pub raw: Vec<f64>,
 }
 
-/// Immutable snapshot of a predictor's quantile state: the default
-/// `T^Q` plus every tenant-specific override, **and** the compiled
-/// per-tenant pipelines resolved from them at publication time (see
-/// `transforms::pipeline`). Published atomically as one unit, so a
-/// mixed-tenant batch applies one coherent table and the hot path
-/// resolves a tenant's compiled pipeline with a single probe per
-/// (batch, tenant) group — never per event.
+/// One tenant's installed quantile override: the raw `T^Q` plus the
+/// pipeline compiled from it at install time. Published as one unit
+/// into the predictor's slab slot, so a probe always sees a map and
+/// its own compiled form together.
+struct TenantQuantile {
+    map: Arc<QuantileMap>,
+    pipeline: Arc<CompiledPipeline>,
+}
+
+/// The predictor's quantile state as the scoring path sees it: the
+/// default `T^Q` (+ compiled default pipeline), published
+/// copy-on-write, plus the **slab-indexed per-tenant override slots**
+/// shared across table publications.
+///
+/// The old layout rebuilt this table wholesale per install —
+/// recompiling *every* tenant pipeline and recloning both name maps,
+/// an O(tenants) republish per first touch that turns a 100k-tenant
+/// onboarding storm into O(n²) work on one writer lock. Now an
+/// install compiles exactly one pipeline and publishes exactly one
+/// slab slot (constant-size segment clone, owning shard only); the
+/// default swap still republishes the table, which is constant-size.
+///
+/// Hot-path contract: a batch group resolves its pipeline with one
+/// wait-free slab probe per distinct tenant in the batch — never per
+/// event, never a string hash, never a lock.
 pub struct QuantileTable {
     default: Arc<QuantileMap>,
-    tenants: HashMap<String, Arc<QuantileMap>>,
     default_pipeline: Arc<CompiledPipeline>,
-    tenant_pipelines: HashMap<String, Arc<CompiledPipeline>>,
-    /// Override pipelines indexed by [`TenantHandle`], built at
-    /// publication time by resolving each override tenant through the
-    /// predictor's interner. `None` slots (and out-of-range handles —
-    /// tenants interned after this table was published) fall back to
-    /// the default pipeline, which is exactly the no-override
-    /// semantics; installing an override republishes the table, so a
-    /// covered handle can never see a stale `None`.
-    by_handle: Vec<Option<Arc<CompiledPipeline>>>,
+    /// Handle-indexed override slots, shared (same `Arc`) across
+    /// every table this predictor publishes. `None` slots and
+    /// out-of-range handles fall back to the default pipeline — the
+    /// no-override semantics a brand-new tenant should get.
+    slots: Arc<HandleSlab<Arc<TenantQuantile>>>,
+    /// The engine-wide interner: string-keyed probes resolve the name
+    /// to a handle (without interning) and then index the slab.
+    interner: Arc<TenantInterner>,
 }
 
 impl QuantileTable {
-    fn build(
-        stages: &Arc<CompiledStages>,
-        default: Arc<QuantileMap>,
-        tenants: HashMap<String, Arc<QuantileMap>>,
-        interner: &TenantInterner,
-    ) -> QuantileTable {
-        let tenant_pipelines: HashMap<String, Arc<CompiledPipeline>> = tenants
-            .iter()
-            .map(|(t, m)| {
-                (
-                    t.clone(),
-                    Arc::new(CompiledPipeline::new(Arc::clone(stages), Arc::clone(m))),
-                )
-            })
-            .collect();
-        let mut by_handle: Vec<Option<Arc<CompiledPipeline>>> = Vec::new();
-        for (t, p) in &tenant_pipelines {
-            let idx = interner.resolve(t).index();
-            if by_handle.len() <= idx {
-                by_handle.resize(idx + 1, None);
-            }
-            by_handle[idx] = Some(Arc::clone(p));
-        }
-        QuantileTable {
-            default_pipeline: Arc::new(CompiledPipeline::new(
-                Arc::clone(stages),
-                Arc::clone(&default),
-            )),
-            default,
-            tenants,
-            tenant_pipelines,
-            by_handle,
-        }
+    /// The installed override slot for a tenant name, if any.
+    fn slot_for(&self, tenant: &str) -> Option<Arc<TenantQuantile>> {
+        let h = self.interner.lookup(tenant)?;
+        self.slots.get(h.index())
     }
 
     /// The transformation in effect for `tenant`.
-    pub fn for_tenant(&self, tenant: &str) -> &QuantileMap {
-        self.tenants.get(tenant).unwrap_or(&self.default)
+    pub fn for_tenant(&self, tenant: &str) -> Arc<QuantileMap> {
+        match self.slot_for(tenant) {
+            Some(s) => Arc::clone(&s.map),
+            None => Arc::clone(&self.default),
+        }
     }
 
     /// The compiled pipeline in effect for `tenant` (one probe; hot
     /// paths do this once per batch group, not per event).
-    pub fn pipeline_for(&self, tenant: &str) -> &Arc<CompiledPipeline> {
-        self.tenant_pipelines
-            .get(tenant)
-            .unwrap_or(&self.default_pipeline)
+    pub fn pipeline_for(&self, tenant: &str) -> Arc<CompiledPipeline> {
+        match self.slot_for(tenant) {
+            Some(s) => Arc::clone(&s.pipeline),
+            None => Arc::clone(&self.default_pipeline),
+        }
     }
 
     /// The compiled pipeline in effect for an interned tenant handle —
-    /// a bounds-checked array index, no hashing. Out-of-range or
+    /// one wait-free slab probe, no hashing, no locks. Out-of-range or
     /// uncovered handles (no override installed) get the default
     /// pipeline, identical to [`QuantileTable::pipeline_for`] on an
     /// unknown name.
     #[inline]
-    pub fn pipeline_for_handle(&self, tenant: TenantHandle) -> &Arc<CompiledPipeline> {
-        self.by_handle
-            .get(tenant.index())
-            .and_then(|p| p.as_ref())
-            .unwrap_or(&self.default_pipeline)
+    pub fn pipeline_for_handle(&self, tenant: TenantHandle) -> Arc<CompiledPipeline> {
+        match self.slots.get(tenant.index()) {
+            Some(s) => Arc::clone(&s.pipeline),
+            None => Arc::clone(&self.default_pipeline),
+        }
     }
 
     /// Apply the tenant's `T^Q` to an aggregated raw score.
@@ -144,7 +135,12 @@ impl QuantileTable {
 
     /// Sorted tenant names carrying a custom `T^Q` override.
     pub fn tenant_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.tenants.keys().cloned().collect();
+        let mut names: Vec<String> = Vec::new();
+        self.slots.for_each(|i, _| {
+            if let Some(name) = self.interner.name(TenantHandle::from_index(i)) {
+                names.push(name.to_string());
+            }
+        });
         names.sort();
         names
     }
@@ -162,6 +158,10 @@ pub struct Predictor {
     /// swapped copy-on-write by the control plane; read wait-free by
     /// the scoring path.
     quantiles: SnapCell<QuantileTable>,
+    /// The tenant-override slab behind every published
+    /// [`QuantileTable`] (one `Arc`, shared): installs publish one
+    /// slot instead of rebuilding the table.
+    slots: Arc<HandleSlab<Arc<TenantQuantile>>>,
     feature_dim: usize,
     /// The engine-wide tenant interner (shared via the registry) —
     /// used to key `QuantileTable::by_handle` and exposed so batch
@@ -197,16 +197,22 @@ impl Predictor {
             CompiledStages::compile(&corrections, &aggregation)
                 .with_context(|| format!("compile pipeline stages for '{name}'"))?,
         );
+        let slots: Arc<HandleSlab<Arc<TenantQuantile>>> =
+            Arc::new(HandleSlab::with_shards(DEFAULT_NAME_SHARDS));
         Ok(Predictor {
             name,
             experts,
             aggregation,
-            quantiles: SnapCell::new(Arc::new(QuantileTable::build(
-                &stages,
-                default_quantile,
-                HashMap::new(),
-                &tenants,
-            ))),
+            quantiles: SnapCell::new(Arc::new(QuantileTable {
+                default_pipeline: Arc::new(CompiledPipeline::new(
+                    Arc::clone(&stages),
+                    Arc::clone(&default_quantile),
+                )),
+                default: default_quantile,
+                slots: Arc::clone(&slots),
+                interner: Arc::clone(&tenants),
+            })),
+            slots,
             stages,
             feature_dim,
             tenants,
@@ -240,35 +246,37 @@ impl Predictor {
     /// Install a tenant-specific quantile transformation (the paper's
     /// "custom transformation" promotion, Section 3.1). The tenant's
     /// pipeline is **compiled here**, at control-plane rate, and
-    /// published copy-on-write with the raw map as one atomic table;
-    /// takes effect atomically for subsequent requests.
+    /// published into the tenant's slab slot as one atomic unit (map +
+    /// compiled form); takes effect atomically for subsequent
+    /// requests. Publishing touches only the handle's owning shard
+    /// segment — the table itself is *not* republished, so a 100k
+    /// tenant onboarding storm stays O(n) instead of O(n²).
     pub fn install_tenant_quantile(&self, tenant: &str, map: Arc<QuantileMap>) {
-        self.quantiles.rcu(|old| {
-            let mut tenants = old.tenants.clone();
-            tenants.insert(tenant.to_string(), map);
-            (
-                Arc::new(QuantileTable::build(
-                    &self.stages,
-                    Arc::clone(&old.default),
-                    tenants,
-                    &self.tenants,
-                )),
-                (),
-            )
-        });
+        let h = self.tenants.resolve(tenant);
+        let pipeline = Arc::new(CompiledPipeline::new(
+            Arc::clone(&self.stages),
+            Arc::clone(&map),
+        ));
+        self.slots
+            .set(h.index(), Arc::new(TenantQuantile { map, pipeline }));
     }
 
     /// Replace the default quantile transformation (recompiles the
-    /// default pipeline; tenant overrides are carried along).
+    /// default pipeline; tenant overrides live in the shared slab and
+    /// are carried along untouched — the republished table is
+    /// constant-size).
     pub fn set_default_quantile(&self, map: Arc<QuantileMap>) {
         self.quantiles.rcu(|old| {
             (
-                Arc::new(QuantileTable::build(
-                    &self.stages,
-                    map,
-                    old.tenants.clone(),
-                    &self.tenants,
-                )),
+                Arc::new(QuantileTable {
+                    default_pipeline: Arc::new(CompiledPipeline::new(
+                        Arc::clone(&self.stages),
+                        Arc::clone(&map),
+                    )),
+                    default: map,
+                    slots: Arc::clone(&old.slots),
+                    interner: Arc::clone(&old.interner),
+                }),
                 (),
             )
         });
@@ -276,7 +284,10 @@ impl Predictor {
 
     /// Whether `tenant` has a custom transformation installed.
     pub fn has_tenant_quantile(&self, tenant: &str) -> bool {
-        self.quantiles.load().tenants.contains_key(tenant)
+        match self.tenants.lookup(tenant) {
+            Some(h) => self.slots.get(h.index()).is_some(),
+            None => false,
+        }
     }
 
     /// Apply the tenant's `T^Q` to an already-aggregated raw score.
@@ -646,10 +657,8 @@ mod tests {
         let t = p.quantile_table();
         // One probe resolves the compiled pipeline; its table is the
         // same object the raw map lookup returns.
-        assert!(std::ptr::eq(
-            t.pipeline_for("vip").table().as_ref(),
-            t.for_tenant("vip")
-        ));
+        let vip_pipe = t.pipeline_for("vip");
+        assert!(Arc::ptr_eq(vip_pipe.table(), &t.for_tenant("vip")));
         assert!((t.pipeline_for("vip").finalize_one(0.0) - 0.9).abs() < 1e-12);
         assert!(t.pipeline_for("other").finalize_one(0.0) < 0.9);
         // Default-swap recompiles the default pipeline, keeps vip.
@@ -682,22 +691,28 @@ mod tests {
     fn handle_keyed_pipeline_matches_string_keyed() {
         let Some(pool) = pool() else { return };
         let p = ensemble(&pool, &["m1", "m2"]);
-        // Handle interned *before* the override exists: the republish
-        // on install must cover it.
+        // Handle interned *before* the override exists: the slot
+        // publish on install must cover it.
         let early = p.tenants().resolve("vip");
         p.install_tenant_quantile(
             "vip",
             QuantileMap::new(vec![0.0, 1.0], vec![0.9, 1.0]).unwrap().shared(),
         );
         let t = p.quantile_table();
-        assert!(Arc::ptr_eq(t.pipeline_for_handle(early), t.pipeline_for("vip")));
-        // A handle interned after this table was published is out of
-        // range -> default pipeline, same as an unknown name.
-        let late = p.tenants().resolve("latecomer");
-        assert!(Arc::ptr_eq(t.pipeline_for_handle(late), t.pipeline_for("latecomer")));
         assert!(Arc::ptr_eq(
-            t.pipeline_for_handle(TenantHandle::INVALID),
-            t.pipeline_for("no-such-tenant")
+            &t.pipeline_for_handle(early),
+            &t.pipeline_for("vip")
+        ));
+        // A handle with no override installed -> default pipeline,
+        // same as an unknown name.
+        let late = p.tenants().resolve("latecomer");
+        assert!(Arc::ptr_eq(
+            &t.pipeline_for_handle(late),
+            &t.pipeline_for("latecomer")
+        ));
+        assert!(Arc::ptr_eq(
+            &t.pipeline_for_handle(TenantHandle::INVALID),
+            &t.pipeline_for("no-such-tenant")
         ));
         // End to end: handle-keyed batch scoring is bitwise equal to
         // the string-keyed path for both override and default tenants.

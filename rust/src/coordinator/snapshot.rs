@@ -36,12 +36,12 @@
 use super::batcher::Batcher;
 use super::predictor::Predictor;
 use super::registry::PredictorRegistry;
-use super::tenants::TenantHandle;
+use super::tenants::{TenantHandle, DEFAULT_NAME_SHARDS};
 use crate::config::RoutingConfig;
 use crate::datalake::{DataLake, PairRef};
 use crate::lifecycle::{LifecycleHub, ScoreFeed};
-use crate::metrics::{CounterHandle, Counters};
-use crate::util::swap::SnapCell;
+use crate::metrics::{CounterHandle, TenantCounters};
+use crate::util::slab::HandleSlab;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -56,12 +56,13 @@ use std::time::Duration;
 pub struct TenantRoute {
     /// Cached lake pair slot — `append_ref` skips both `&str` probes.
     pub pair: PairRef,
-    /// The interned tenant name (shared with the interner's table).
-    tenant_name: Arc<str>,
+    /// The interned tenant handle — keys the engine's `tenant_events`
+    /// counter slab and the lifecycle feed slab.
+    pub tenant: TenantHandle,
     /// `tenant_events` counter, created on **first batch commit** —
     /// not at route build. The observable `scored_events` map must
     /// contain exactly the tenants the batch path accounted
-    /// (`Counters::handle` interns its key at zero, and the
+    /// (`TenantCounters::handle` interns the slot at zero, and the
     /// verification harness checks full-map equality against the
     /// oracle), and routes are also built by the single-event and
     /// shadow paths, which never count.
@@ -76,13 +77,13 @@ pub struct TenantRoute {
 }
 
 impl TenantRoute {
-    /// The tenant's `scored_events` counter: one string hash on the
+    /// The tenant's `scored_events` counter: one slab intern on the
     /// first batch commit through this route, a plain atomic load
-    /// afterwards.
+    /// afterwards. No string is hashed anywhere on this path.
     #[inline]
-    pub fn counter(&self, tenant_events: &Counters) -> &CounterHandle {
+    pub fn counter(&self, tenant_events: &TenantCounters) -> &CounterHandle {
         self.counter
-            .get_or_init(|| tenant_events.handle(&self.tenant_name))
+            .get_or_init(|| tenant_events.handle(self.tenant.index()))
     }
 }
 
@@ -92,10 +93,14 @@ impl TenantRoute {
 pub struct PredictorEntry {
     pub predictor: Arc<Predictor>,
     pub batcher: Arc<Batcher>,
-    /// Handle-indexed tenant routes, published copy-on-write. Shared
-    /// with the batcher across snapshot republishes (the entry itself
-    /// is reused), so a routing swap does not cold-start the cache.
-    routes: SnapCell<Vec<Option<Arc<TenantRoute>>>>,
+    /// Handle-indexed tenant routes on a sharded slab. Shared with the
+    /// batcher across snapshot republishes (the entry itself is
+    /// reused), so a routing swap does not cold-start the cache.
+    /// Publishing a rebuilt route clones one constant-size segment of
+    /// the handle's owning shard — the old copy-on-write `Vec`
+    /// recloned every cached route per first touch, an O(tenants)
+    /// republish that made onboarding storms quadratic.
+    routes: HandleSlab<Arc<TenantRoute>>,
 }
 
 impl PredictorEntry {
@@ -103,14 +108,14 @@ impl PredictorEntry {
         PredictorEntry {
             predictor,
             batcher,
-            routes: SnapCell::new(Arc::new(Vec::new())),
+            routes: HandleSlab::with_shards(DEFAULT_NAME_SHARDS),
         }
     }
 
-    /// Resolve the commit route for `tenant` — one wait-free vector
-    /// load + one index on the warm path. Cold (first sight of the
-    /// tenant on this predictor, or the lifecycle feed table moved):
-    /// re-resolves by name and republishes the cache copy-on-write.
+    /// Resolve the commit route for `tenant` — one wait-free slab
+    /// probe on the warm path. Cold (first sight of the tenant on this
+    /// predictor, or the lifecycle feed table moved): re-resolves by
+    /// name and publishes into the handle's slab slot.
     #[inline]
     pub fn route(
         &self,
@@ -120,9 +125,9 @@ impl PredictorEntry {
         hub: Option<&LifecycleHub>,
     ) -> Arc<TenantRoute> {
         let epoch = hub.map_or(0, |h| h.feeds_epoch());
-        if let Some(Some(r)) = self.routes.load().get(tenant.index()) {
+        if let Some(r) = self.routes.get(tenant.index()) {
             if r.feed_epoch == epoch {
-                return Arc::clone(r);
+                return r;
             }
         }
         self.rebuild_route(tenant, tenant_name, epoch, lake, hub)
@@ -140,19 +145,12 @@ impl PredictorEntry {
         let name = &*self.predictor.name;
         let route = Arc::new(TenantRoute {
             pair: lake.pair_ref(tenant_name, name),
-            tenant_name: Arc::from(tenant_name),
+            tenant,
             counter: std::sync::OnceLock::new(),
             feed_epoch: epoch,
-            feed: hub.and_then(|h| h.feed_for(name, tenant_name)),
+            feed: hub.and_then(|h| h.feed_for(name, tenant)),
         });
-        self.routes.rcu(|old| {
-            let mut next = old.as_ref().clone();
-            if next.len() <= tenant.index() {
-                next.resize(tenant.index() + 1, None);
-            }
-            next[tenant.index()] = Some(Arc::clone(&route));
-            (Arc::new(next), ())
-        });
+        self.routes.set(tenant.index(), Arc::clone(&route));
         route
     }
 }

@@ -14,23 +14,52 @@
 //! `coordinator::snapshot::TenantRoute` for the per-predictor route
 //! cache the handle keys.
 //!
-//! The table is published copy-on-write through a
-//! [`SnapCell`](crate::util::swap::SnapCell): lookups are one
-//! wait-free load + one map probe; interning a never-seen tenant takes
-//! the cell's writer lock once per tenant *lifetime* (control-plane
-//! rate). Handles are dense (`0..len`), never reused, and permanently
-//! valid — downstream tables sized before a tenant appeared simply
-//! don't cover its index yet, and treat the miss as "use defaults",
-//! which is exactly the behavior a brand-new tenant should get.
+//! # Scale-out layout (the 100k-tenant onboarding storm)
+//!
+//! The name → handle map is **sharded by name hash** across N
+//! independent [`SnapCell`](crate::util::swap::SnapCell)s: lookups
+//! stay one wait-free load + one map probe, but interning a
+//! never-seen tenant republishes only its owning shard (O(tenants/N)
+//! instead of O(tenants) per first touch, with N writer locks
+//! admitting concurrent onboarding). The handle → name reverse map
+//! is a [`HandleSlab`](crate::util::swap) — lazily allocated
+//! fixed-size segments, so publishing a new name clones one
+//! constant-size segment, never the table.
+//!
+//! Handles are allocated from one monotone counter: dense
+//! (`0..len`), **never reused**, and permanently valid — downstream
+//! tables sized before a tenant appeared simply don't cover its index
+//! yet, and treat the miss as "use defaults", which is exactly the
+//! behavior a brand-new tenant should get.
+//!
+//! # Epochs and decommission
+//!
+//! [`TenantInterner::retire`] removes a name from the forward map and
+//! bumps the interner **epoch**. The handle stays allocated (its name
+//! still reverse-resolves, its slab slots stay addressable for
+//! drain-out), but a later [`resolve`](TenantInterner::resolve) of
+//! the same name allocates a *fresh* handle — per-tenant state from
+//! the previous tenancy can never be confused with the new one. The
+//! epoch counter lets caches that key off handles observe that the
+//! name ↔ handle binding moved.
 
+use crate::util::slab::HandleSlab;
 use crate::util::swap::SnapCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Default shard count for the name → handle map. 16 shards keep the
+/// worst-case first-touch republish at tenants/16 map clones while
+/// letting 16 onboarding threads intern without serializing.
+pub const DEFAULT_NAME_SHARDS: usize = 16;
 
 /// A dense, copyable tenant identifier. `Copy` on purpose: handles
 /// cross thread boundaries (batcher submissions, shadow closures)
-/// without cloning a `String` or pinning a borrow.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// without cloning a `String` or pinning a borrow. `Ord` so that
+/// handle-keyed control-plane maps (lifecycle pair states) iterate
+/// deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct TenantHandle(u32);
 
 impl TenantHandle {
@@ -44,19 +73,42 @@ impl TenantHandle {
     pub fn index(self) -> usize {
         self.0 as usize
     }
+
+    /// Rehydrate a handle from its dense index. For slab-iteration
+    /// consumers (streaming `/metrics`, oracle diffs) reconstructing
+    /// handles the slab yielded as indices; the data plane only ever
+    /// receives handles from the interner.
+    pub fn from_index(index: usize) -> TenantHandle {
+        TenantHandle(u32::try_from(index).expect("tenant handle overflow"))
+    }
 }
 
-/// Immutable interner snapshot: name → handle plus the reverse map.
-#[derive(Default)]
-struct TenantTable {
-    by_name: HashMap<Arc<str>, u32>,
-    names: Vec<Arc<str>>,
+/// FNV-1a over the name bytes — one cheap pass to pick the owning
+/// shard (the shard map re-hashes internally for its probe).
+#[inline]
+fn shard_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// The process-wide tenant interner (one per engine, shared with the
 /// admission controller). See the module docs for the contract.
 pub struct TenantInterner {
-    cell: SnapCell<TenantTable>,
+    /// Name → handle, sharded by name hash; each shard publishes
+    /// copy-on-write independently.
+    shards: Box<[SnapCell<HashMap<Arc<str>, u32>>]>,
+    /// Handle → name (slab-indexed; entries are permanent).
+    names: HandleSlab<Arc<str>>,
+    /// Next handle to allocate. Monotone: handles are never reused.
+    next: AtomicU32,
+    /// Bumped on every successful [`retire`](TenantInterner::retire).
+    epoch: AtomicU64,
+    /// Total retirements (observability / tsunami accounting).
+    retired: AtomicU64,
 }
 
 impl Default for TenantInterner {
@@ -67,16 +119,35 @@ impl Default for TenantInterner {
 
 impl TenantInterner {
     pub fn new() -> TenantInterner {
+        TenantInterner::with_shards(DEFAULT_NAME_SHARDS)
+    }
+
+    /// An interner with an explicit shard count (1 reproduces the old
+    /// single-cell COW layout — the equivalence tests pin that).
+    pub fn with_shards(shards: usize) -> TenantInterner {
+        let shards = shards.max(1);
         TenantInterner {
-            cell: SnapCell::new(Arc::new(TenantTable::default())),
+            shards: (0..shards)
+                .map(|_| SnapCell::new(Arc::new(HashMap::new())))
+                .collect(),
+            names: HandleSlab::with_shards(shards),
+            next: AtomicU32::new(0),
+            epoch: AtomicU64::new(0),
+            retired: AtomicU64::new(0),
         }
     }
 
-    /// Resolve without interning: `None` for a never-seen tenant.
-    /// The admission controller uses this so unauthenticated junk
-    /// tenant names shed *without* growing the table.
+    #[inline]
+    fn shard(&self, tenant: &str) -> &SnapCell<HashMap<Arc<str>, u32>> {
+        &self.shards[(shard_hash(tenant) as usize) % self.shards.len()]
+    }
+
+    /// Resolve without interning: `None` for a never-seen (or
+    /// retired) tenant. The admission controller uses this so
+    /// unauthenticated junk tenant names shed *without* growing the
+    /// table.
     pub fn lookup(&self, tenant: &str) -> Option<TenantHandle> {
-        self.cell.load().by_name.get(tenant).copied().map(TenantHandle)
+        self.shard(tenant).load().get(tenant).copied().map(TenantHandle)
     }
 
     /// Resolve, interning on first sight — the ingress edge's one
@@ -90,43 +161,99 @@ impl TenantInterner {
 
     #[cold]
     fn intern(&self, tenant: &str) -> TenantHandle {
-        self.cell.rcu(|old| {
-            // Re-probe under the writer lock: racing interners must
-            // converge on one handle per name.
-            if let Some(&h) = old.by_name.get(tenant) {
+        self.shard(tenant).rcu(|old| {
+            // Re-probe under the shard's writer lock: racing interners
+            // must converge on one handle per name.
+            if let Some(&h) = old.get(tenant) {
                 return (Arc::clone(old), TenantHandle(h));
             }
-            let id = u32::try_from(old.names.len()).expect("tenant handle overflow");
+            let id = self.next.fetch_add(1, Ordering::Relaxed);
+            assert!(id != u32::MAX, "tenant handle overflow");
             let name: Arc<str> = Arc::from(tenant);
-            let mut next = TenantTable {
-                by_name: old.by_name.clone(),
-                names: old.names.clone(),
-            };
-            next.names.push(Arc::clone(&name));
-            next.by_name.insert(name, id);
+            // Publish the reverse map first so the handle names
+            // itself the instant the forward probe can return it.
+            self.names.set(id as usize, Arc::clone(&name));
+            let mut next = old.as_ref().clone();
+            next.insert(name, id);
             (Arc::new(next), TenantHandle(id))
         })
     }
 
-    /// The interned name behind a handle (`None` for
-    /// [`TenantHandle::INVALID`] or a foreign handle).
-    pub fn name(&self, handle: TenantHandle) -> Option<Arc<str>> {
-        self.cell.load().names.get(handle.index()).cloned()
+    /// Decommission a tenancy: unbind `tenant` from its handle and
+    /// bump the interner epoch. The handle is **not** freed — it
+    /// stays allocated and reverse-resolvable so in-flight work and
+    /// slab-indexed state drain out addressably — but a subsequent
+    /// `resolve` of the same name allocates a fresh handle. Returns
+    /// the retired handle (`None`: name was not bound).
+    pub fn retire(&self, tenant: &str) -> Option<TenantHandle> {
+        let retired = self.shard(tenant).rcu(|old| match old.get(tenant) {
+            None => (Arc::clone(old), None),
+            Some(&h) => {
+                let mut next = old.as_ref().clone();
+                next.remove(tenant);
+                (Arc::new(next), Some(TenantHandle(h)))
+            }
+        });
+        if retired.is_some() {
+            self.retired.fetch_add(1, Ordering::Relaxed);
+            self.epoch.fetch_add(1, Ordering::Release);
+        }
+        retired
     }
 
-    /// Number of interned tenants (handles are dense: `0..len`).
+    /// The current name ↔ handle binding epoch: bumps once per
+    /// retirement. Caches keyed by handle use a stable epoch across
+    /// two reads as their validity witness.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Total tenancies retired so far.
+    pub fn retired_count(&self) -> u64 {
+        self.retired.load(Ordering::Relaxed)
+    }
+
+    /// The interned name behind a handle (`None` for
+    /// [`TenantHandle::INVALID`] or a foreign handle). Retired
+    /// handles still name themselves — state keyed by them stays
+    /// attributable.
+    pub fn name(&self, handle: TenantHandle) -> Option<Arc<str>> {
+        if handle == TenantHandle::INVALID {
+            return None;
+        }
+        self.names.get(handle.index())
+    }
+
+    /// Number of handles ever allocated (handles are dense: `0..len`,
+    /// retirements included).
     pub fn len(&self) -> usize {
-        self.cell.load().names.len()
+        self.next.load(Ordering::Relaxed) as usize
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Reverse-map segments actually allocated (tsunami RSS
+    /// accounting: growth must be O(tenants), in constant-size steps).
+    pub fn name_segments(&self) -> usize {
+        self.names.segments_allocated()
+    }
+
+    /// Shard count this interner was built with. Slab-backed tenant
+    /// state planes (lifecycle feed table, counter slabs) size their
+    /// own shards to match, so a handle's shard assignment is
+    /// consistent across every registry it indexes.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
 
     #[test]
     fn handles_are_dense_and_stable() {
@@ -181,5 +308,117 @@ mod tests {
             let name = t.name(by_name.values().find(|h| h.index() == i).copied().unwrap());
             assert!(name.is_some());
         }
+    }
+
+    #[test]
+    fn retire_unbinds_name_but_keeps_the_handle() {
+        let t = TenantInterner::new();
+        let a = t.resolve("acme");
+        assert_eq!(t.epoch(), 0);
+        assert_eq!(t.retire("acme"), Some(a));
+        assert_eq!(t.epoch(), 1);
+        assert_eq!(t.retired_count(), 1);
+        // The name no longer forward-resolves...
+        assert_eq!(t.lookup("acme"), None);
+        // ...but the retired handle still names itself.
+        assert_eq!(&*t.name(a).unwrap(), "acme");
+        // Retiring an unbound name is a no-op (no epoch bump).
+        assert_eq!(t.retire("acme"), None);
+        assert_eq!(t.retire("ghost"), None);
+        assert_eq!(t.epoch(), 1);
+        // Re-onboarding allocates a fresh handle; the old one is
+        // never reissued.
+        let a2 = t.resolve("acme");
+        assert_ne!(a2, a);
+        assert_eq!(a2.index(), 1);
+        assert_eq!(t.len(), 2);
+    }
+
+    /// The satellite property: across arbitrary interleavings of
+    /// onboarding and decommission, handles are never reused — every
+    /// allocation is fresh, the allocation counter is dense, and the
+    /// epoch counts exactly the successful retirements.
+    #[test]
+    fn prop_handles_are_never_reused_across_retirement_epochs() {
+        prop::check(16, |g| {
+            let shards = *g.pick(&[1usize, 2, 16]);
+            let t = TenantInterner::with_shards(shards);
+            let names: Vec<String> = (0..8).map(|i| format!("tenant-{i}")).collect();
+            let mut ever_issued: Vec<TenantHandle> = Vec::new();
+            let mut bound: HashMap<String, TenantHandle> = HashMap::new();
+            let mut retires = 0u64;
+            for _ in 0..g.usize(20..120) {
+                let name = g.pick(&names).clone();
+                if g.bool(0.35) {
+                    let got = t.retire(&name);
+                    let want = bound.remove(&name);
+                    prop_assert!(got == want, "retire({name}): {got:?} vs {want:?}");
+                    if want.is_some() {
+                        retires += 1;
+                    }
+                } else {
+                    let h = t.resolve(&name);
+                    match bound.get(&name) {
+                        Some(&prev) => prop_assert!(h == prev, "rebinding moved a live handle"),
+                        None => {
+                            prop_assert!(
+                                !ever_issued.contains(&h),
+                                "handle {h:?} was reused after retirement"
+                            );
+                            ever_issued.push(h);
+                            bound.insert(name.clone(), h);
+                        }
+                    }
+                }
+            }
+            // Dense: exactly len() handles issued, indices 0..len.
+            prop_assert!(ever_issued.len() == t.len(), "allocation counter not dense");
+            let mut idx: Vec<usize> = ever_issued.iter().map(|h| h.index()).collect();
+            idx.sort_unstable();
+            prop_assert!(idx == (0..t.len()).collect::<Vec<_>>(), "handle space has holes");
+            prop_assert!(t.epoch() == retires, "epoch {} != retires {retires}", t.epoch());
+            // Every handle ever issued still reverse-resolves.
+            for h in &ever_issued {
+                prop_assert!(t.name(*h).is_some(), "retired handle lost its name");
+            }
+            Ok(())
+        });
+    }
+
+    /// Shard-count=1 equivalence: a single-shard interner (the old
+    /// whole-map COW layout) and a multi-shard one expose identical
+    /// observable behavior over the same operation sequence — only
+    /// handle *numbering* may differ under concurrency, so the
+    /// sequence here is deterministic and the binding surfaces must
+    /// match exactly.
+    #[test]
+    fn prop_sharded_interner_is_oracle_exact_vs_single_shard() {
+        prop::check(16, |g| {
+            let a = TenantInterner::with_shards(1);
+            let b = TenantInterner::with_shards(*g.pick(&[4usize, 16, 64]));
+            let names: Vec<String> = (0..10).map(|i| format!("t{i}")).collect();
+            for _ in 0..g.usize(20..150) {
+                let name = g.pick(&names).clone();
+                if g.bool(0.3) {
+                    let (ra, rb) = (a.retire(&name), b.retire(&name));
+                    prop_assert!(ra == rb, "retire({name}) diverged: {ra:?} vs {rb:?}");
+                } else {
+                    let (ha, hb) = (a.resolve(&name), b.resolve(&name));
+                    prop_assert!(ha == hb, "resolve({name}) diverged: {ha:?} vs {hb:?}");
+                }
+                let probe = g.pick(&names);
+                prop_assert!(a.lookup(probe) == b.lookup(probe), "lookup({probe}) diverged");
+            }
+            prop_assert!(a.len() == b.len(), "len diverged");
+            prop_assert!(a.epoch() == b.epoch(), "epoch diverged");
+            for i in 0..a.len() {
+                let h = TenantHandle::from_index(i);
+                prop_assert!(
+                    a.name(h).as_deref() == b.name(h).as_deref(),
+                    "name({i}) diverged"
+                );
+            }
+            Ok(())
+        });
     }
 }

@@ -34,14 +34,21 @@
 //!   monotone `fetch_max`, and readers (control-plane rate) retry the
 //!   handful of slots they observe mid-write. Versions only move
 //!   forward, so reads are never torn.
-//! * **Interned pair slots.** `(tenant, predictor)` pairs are
-//!   interned once (cold path, copy-on-write through a
-//!   [`SnapCell`](crate::util::swap::SnapCell)) into slots carrying an
-//!   `AtomicU64` retained-record count. The hot path probes the
-//!   published table by `&str` (no allocation) and bumps one atomic;
+//! * **Interned pair slots, sharded.** `(tenant, predictor)` pairs
+//!   are interned once into slots carrying an `AtomicU64`
+//!   retained-record count, registered in two places: a name index
+//!   **sharded by tenant hash** (each shard a
+//!   [`SnapCell`](crate::util::swap::SnapCell) of `Arc`'d per-tenant
+//!   maps, so a first touch republishes one shard shallowly — never a
+//!   global table) and an id-keyed
+//!   [`HandleSlab`](crate::util::slab::HandleSlab) whose publication
+//!   clones one constant-size segment. The hot path probes the
+//!   published shard by `&str` (no allocation) and bumps one atomic;
 //!   `count_for` — polled every lifecycle tick while a shadow
 //!   accumulates mirrors — is one wait-free probe + load, O(1), and
-//!   never touches the write path.
+//!   never touches the write path. Eviction resolves the outgoing
+//!   record's pair by id through the slab, so append paths carry no
+//!   table snapshot at all.
 //! * **Lazy segments.** Stripe rings allocate 4096-slot segments on
 //!   first touch, so a default-capacity (2^20 records) lake costs
 //!   memory proportional to its high-water mark, not its cap.
@@ -67,10 +74,11 @@
 //! `lifecycle::ScoreFeed`: an observability store degrades by
 //! dropping a sample, never by blocking the data plane.
 
+use crate::util::slab::HandleSlab;
 use crate::util::swap::SnapCell;
 use std::collections::{BTreeMap, HashMap};
 use std::ptr;
-use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// One recorded scoring event (the read-side view; storage is packed
@@ -241,13 +249,31 @@ struct PairSlot {
     count: AtomicU64,
 }
 
-/// The published pair table: probe-by-`&str` nested maps (hot path)
-/// plus the id-indexed slab (evict/scan side). Grow-only; republished
-/// copy-on-write when a new pair appears (cold, per-pair-lifetime).
-#[derive(Default)]
-struct PairTable {
-    by: HashMap<Arc<str>, HashMap<Arc<str>, Arc<PairSlot>>>,
-    slab: Vec<Arc<PairSlot>>,
+/// One shard of the name-keyed pair index: tenant → (predictor →
+/// slot). Inner per-tenant maps are `Arc`'d so republishing a shard
+/// clones only its outer entries (shallow, O(tenants-in-shard) `Arc`
+/// bumps) plus the one touched tenant's inner map (a handful of
+/// predictors) — never every pair in the lake.
+type TenantPairs = HashMap<Arc<str>, Arc<HashMap<Arc<str>, Arc<PairSlot>>>>;
+
+/// Shard count for the pair name index and the id slab — the same
+/// scale-out factor the tenant interner defaults to
+/// (`coordinator::tenants::DEFAULT_NAME_SHARDS`), kept as a local
+/// constant so the observation plane does not depend on the
+/// coordinator layer.
+const PAIR_SHARDS: usize = 16;
+
+/// FNV-1a over the tenant name — one cheap pass to pick the owning
+/// shard (the shard map re-hashes internally for its probe; same
+/// idiom as the tenant interner).
+#[inline]
+fn pair_shard_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// An opaque, cacheable resolution of one `(tenant, predictor)` pair:
@@ -256,9 +282,9 @@ struct PairTable {
 /// probes into one slab-index + pointer-identity check. The engine's
 /// per-predictor tenant routes (`coordinator::snapshot::TenantRoute`)
 /// resolve one per (tenant, predictor) lifetime and reuse it forever
-/// — the pair table is grow-only and ids are never reused, so a ref
-/// cannot go stale; the identity check is cheap insurance should that
-/// invariant ever change.
+/// — the pair registry is grow-only and ids are never reused, so a
+/// ref cannot go stale; the identity check is cheap insurance should
+/// that invariant ever change.
 #[derive(Clone)]
 pub struct PairRef {
     slot: Arc<PairSlot>,
@@ -281,7 +307,15 @@ pub struct DataLake {
     forced: AtomicU64,
     /// Diagnostic: appends dropped after losing a full-lap race.
     lost: AtomicU64,
-    pairs: SnapCell<PairTable>,
+    /// Name-keyed pair index, sharded by tenant hash; each shard
+    /// publishes copy-on-write independently (see [`TenantPairs`]).
+    pair_shards: Box<[SnapCell<TenantPairs>]>,
+    /// Id → slot registry on the slab substrate: publishing a new
+    /// pair clones one constant-size segment, and evict/scan paths
+    /// resolve ids through it wait-free with no table snapshot.
+    pair_slab: HandleSlab<Arc<PairSlot>>,
+    /// Next pair id. Monotone: ids are never reused.
+    next_pair_id: AtomicU32,
 }
 
 impl Default for DataLake {
@@ -322,7 +356,11 @@ impl DataLake {
             dead: AtomicU64::new(0),
             forced: AtomicU64::new(0),
             lost: AtomicU64::new(0),
-            pairs: SnapCell::new(Arc::new(PairTable::default())),
+            pair_shards: (0..PAIR_SHARDS)
+                .map(|_| SnapCell::new(Arc::new(TenantPairs::new())))
+                .collect(),
+            pair_slab: HandleSlab::with_shards(PAIR_SHARDS),
+            next_pair_id: AtomicU32::new(0),
         }
     }
 
@@ -358,13 +396,13 @@ impl DataLake {
     // Write path
     // ---------------------------------------------------------------
 
-    /// Append one record. Hot path: one pair-table load + probe, one
+    /// Append one record. Hot path: one pair-shard load + probe, one
     /// global `fetch_add`, one slot claim/publish, one pair-count
     /// bump — no mutex, no allocation once the pair is interned.
     pub fn append(&self, tenant: &str, predictor: &str, score: f64, raw_score: f64, shadow: bool) {
-        let (table, pair) = self.pair_slot(tenant, predictor);
+        let pair = self.pair_slot(tenant, predictor);
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        self.write_record(&table, &pair, seq, score, raw_score, shadow);
+        self.write_record(&pair, seq, score, raw_score, shadow);
     }
 
     /// Append a whole scored batch: the pair resolves once and the
@@ -383,10 +421,10 @@ impl DataLake {
         if scores.is_empty() {
             return;
         }
-        let (table, pair) = self.pair_slot(tenant, predictor);
+        let pair = self.pair_slot(tenant, predictor);
         let base = self.next_seq.fetch_add(scores.len() as u64, Ordering::Relaxed);
         for (i, (&score, &raw)) in scores.iter().zip(raw_scores).enumerate() {
-            self.write_record(&table, &pair, base + i as u64, score, raw, shadow);
+            self.write_record(&pair, base + i as u64, score, raw, shadow);
         }
     }
 
@@ -394,17 +432,17 @@ impl DataLake {
     /// `(tenant, predictor)` — the control-plane half of the
     /// string-free append path (see [`PairRef`]).
     pub fn pair_ref(&self, tenant: &str, predictor: &str) -> PairRef {
-        let (_, slot) = self.pair_slot(tenant, predictor);
-        PairRef { slot }
+        PairRef {
+            slot: self.pair_slot(tenant, predictor),
+        }
     }
 
     /// Append one record through a cached [`PairRef`]: identical
     /// side effects to [`DataLake::append`], zero string hashing.
     pub fn append_ref(&self, pair: &PairRef, score: f64, raw_score: f64, shadow: bool) {
-        let table = self.pairs.load();
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        if Self::ref_is_current(&table, &pair.slot) {
-            self.write_record(&table, &pair.slot, seq, score, raw_score, shadow);
+        if self.ref_is_current(&pair.slot) {
+            self.write_record(&pair.slot, seq, score, raw_score, shadow);
         } else {
             self.append_ref_stale(pair, seq, score, raw_score, shadow);
         }
@@ -424,93 +462,89 @@ impl DataLake {
         if scores.is_empty() {
             return;
         }
-        let table = self.pairs.load();
         let base = self.next_seq.fetch_add(scores.len() as u64, Ordering::Relaxed);
-        if Self::ref_is_current(&table, &pair.slot) {
+        if self.ref_is_current(&pair.slot) {
             for (i, (&score, &raw)) in scores.iter().zip(raw_scores).enumerate() {
-                self.write_record(&table, &pair.slot, base + i as u64, score, raw, shadow);
+                self.write_record(&pair.slot, base + i as u64, score, raw, shadow);
             }
         } else {
-            let (table, slot) = self.pair_slot(&pair.slot.tenant, &pair.slot.predictor);
+            let slot = self.pair_slot(&pair.slot.tenant, &pair.slot.predictor);
             for (i, (&score, &raw)) in scores.iter().zip(raw_scores).enumerate() {
-                self.write_record(&table, &slot, base + i as u64, score, raw, shadow);
+                self.write_record(&slot, base + i as u64, score, raw, shadow);
             }
         }
     }
 
-    /// Whether a cached ref's slot is the one the current table holds
-    /// under its id (always true today — the table is grow-only).
+    /// Whether a cached ref's slot is the one the registry holds
+    /// under its id (always true today — the registry is grow-only).
     #[inline]
-    fn ref_is_current(table: &PairTable, slot: &Arc<PairSlot>) -> bool {
-        table
-            .slab
+    fn ref_is_current(&self, slot: &Arc<PairSlot>) -> bool {
+        self.pair_slab
             .get(slot.id as usize)
-            .is_some_and(|p| Arc::ptr_eq(p, slot))
+            .is_some_and(|p| Arc::ptr_eq(&p, slot))
     }
 
-    /// Never taken under the current grow-only table invariant; kept
-    /// so a cached ref degrades to a by-name re-resolve instead of
-    /// corrupting pair accounting if that invariant ever changes.
+    /// Never taken under the current grow-only registry invariant;
+    /// kept so a cached ref degrades to a by-name re-resolve instead
+    /// of corrupting pair accounting if that invariant ever changes.
     #[cold]
     fn append_ref_stale(&self, pair: &PairRef, seq: u64, score: f64, raw: f64, shadow: bool) {
-        let (table, slot) = self.pair_slot(&pair.slot.tenant, &pair.slot.predictor);
-        self.write_record(&table, &slot, seq, score, raw, shadow);
+        let slot = self.pair_slot(&pair.slot.tenant, &pair.slot.predictor);
+        self.write_record(&slot, seq, score, raw, shadow);
+    }
+
+    /// The pair shard owning `tenant`'s slots.
+    #[inline]
+    fn pair_shard(&self, tenant: &str) -> &SnapCell<TenantPairs> {
+        &self.pair_shards[(pair_shard_hash(tenant) as usize) % self.pair_shards.len()]
     }
 
     /// Resolve (or intern) the pair slot for `(tenant, predictor)`.
-    /// Established pairs: one wait-free table load + two `&str` map
+    /// Established pairs: one wait-free shard load + two `&str` map
     /// probes + one `Arc` refcount bump. First appearance: one
-    /// copy-on-write republish (control-plane rate).
+    /// shard-local shallow republish (control-plane rate).
     #[inline]
-    fn pair_slot(&self, tenant: &str, predictor: &str) -> (Arc<PairTable>, Arc<PairSlot>) {
-        let table = self.pairs.load();
-        if let Some(slot) = table.by.get(tenant).and_then(|m| m.get(predictor)) {
-            let slot = Arc::clone(slot);
-            return (table, slot);
+    fn pair_slot(&self, tenant: &str, predictor: &str) -> Arc<PairSlot> {
+        let shard = self.pair_shard(tenant).load();
+        if let Some(slot) = shard.get(tenant).and_then(|m| m.get(predictor)) {
+            return Arc::clone(slot);
         }
         self.intern(tenant, predictor)
     }
 
     #[cold]
-    fn intern(&self, tenant: &str, predictor: &str) -> (Arc<PairTable>, Arc<PairSlot>) {
-        self.pairs.rcu(|old| {
-            // Re-probe under the writer lock: another thread may have
-            // interned the pair between our load and this rcu.
-            if let Some(slot) = old.by.get(tenant).and_then(|m| m.get(predictor)) {
-                return (Arc::clone(old), (Arc::clone(old), Arc::clone(slot)));
+    fn intern(&self, tenant: &str, predictor: &str) -> Arc<PairSlot> {
+        self.pair_shard(tenant).rcu(|old| {
+            // Re-probe under the shard's writer lock: another thread
+            // may have interned the pair between our load and this rcu.
+            if let Some(slot) = old.get(tenant).and_then(|m| m.get(predictor)) {
+                return (Arc::clone(old), Arc::clone(slot));
             }
+            let id = self.next_pair_id.fetch_add(1, Ordering::Relaxed);
+            assert!(id != u32::MAX, "pair id overflow");
             let slot = Arc::new(PairSlot {
                 tenant: Arc::from(tenant),
                 predictor: Arc::from(predictor),
-                id: u32::try_from(old.slab.len()).expect("pair slab overflow"),
+                id,
                 count: AtomicU64::new(0),
             });
-            let mut next = PairTable {
-                by: old.by.clone(),
-                slab: old.slab.clone(),
-            };
-            next.slab.push(Arc::clone(&slot));
-            next.by
-                .entry(Arc::clone(&slot.tenant))
-                .or_default()
-                .insert(Arc::clone(&slot.predictor), Arc::clone(&slot));
-            let next = Arc::new(next);
-            let out = (Arc::clone(&next), slot);
-            (next, out)
+            // Publish the id registry first so an evictor can un-count
+            // a record the instant its id can appear in a ring slot.
+            self.pair_slab.set(id as usize, Arc::clone(&slot));
+            let mut next = old.as_ref().clone();
+            let mut inner = next
+                .get(tenant)
+                .map(|m| m.as_ref().clone())
+                .unwrap_or_default();
+            inner.insert(Arc::clone(&slot.predictor), Arc::clone(&slot));
+            next.insert(Arc::clone(&slot.tenant), Arc::new(inner));
+            (Arc::new(next), slot)
         })
     }
 
     /// Write the record claimed as `seq` into its slot, evicting (and
     /// un-counting) whatever the previous lap left there.
-    fn write_record(
-        &self,
-        table: &PairTable,
-        pair: &PairSlot,
-        seq: u64,
-        score: f64,
-        raw: f64,
-        shadow: bool,
-    ) {
+    fn write_record(&self, pair: &PairSlot, seq: u64, score: f64, raw: f64, shadow: bool) {
         let n = self.stripes.len() as u64;
         let stripe = &self.stripes[(seq % n) as usize];
         let k = seq / n;
@@ -518,7 +552,7 @@ impl DataLake {
         let pos = (k % cs) as usize;
         let lap = k / cs;
         let slot = stripe.slot(pos);
-        if !self.claim(slot, lap, table) {
+        if !self.claim(slot, lap) {
             return; // lost a full-lap race; accounted in `lost`
         }
         // Release fence: the claim's version transition must become
@@ -540,7 +574,7 @@ impl DataLake {
     /// Claim a slot for lap `lap`. Returns false when this append lost
     /// a full-lap race (record dropped, counted). On success, the
     /// evicted predecessor (if any) has been un-counted.
-    fn claim(&self, slot: &Slot, lap: u64, table: &PairTable) -> bool {
+    fn claim(&self, slot: &Slot, lap: u64) -> bool {
         let writing = v_writing(lap);
         let mut spins = 0u32;
         loop {
@@ -576,7 +610,7 @@ impl DataLake {
                 ) {
                     Ok(_) => {
                         if v == prior_live {
-                            self.uncount_evicted(slot, table);
+                            self.uncount_evicted(slot);
                         } else {
                             // Tombstone physically leaves the ring.
                             self.dead.fetch_sub(1, Ordering::Relaxed);
@@ -605,18 +639,13 @@ impl DataLake {
 
     /// Decrement the retained count of the record being evicted from
     /// `slot` (called with the slot exclusively claimed, payload
-    /// still the predecessor's).
-    fn uncount_evicted(&self, slot: &Slot, table: &PairTable) {
+    /// still the predecessor's). The id registry is live (not a
+    /// snapshot) and a pair's slab publication happens-before any
+    /// record carrying its id, so the probe cannot miss; the guard is
+    /// defensive.
+    fn uncount_evicted(&self, slot: &Slot) {
         let old_id = (slot.meta.load(Ordering::Acquire) >> 1) as usize;
-        if let Some(p) = table.slab.get(old_id) {
-            p.count.fetch_sub(1, Ordering::Relaxed);
-            return;
-        }
-        // Our table snapshot predates the evicted record's intern
-        // (possible only across a pathological stall); the current
-        // table always contains every id ever issued.
-        let fresh = self.pairs.load();
-        if let Some(p) = fresh.slab.get(old_id) {
+        if let Some(p) = self.pair_slab.get(old_id) {
             p.count.fetch_sub(1, Ordering::Relaxed);
         }
     }
@@ -682,7 +711,6 @@ impl DataLake {
     /// Visit every stable live record (unordered; callers sort by seq
     /// where order matters).
     fn scan(&self, mut f: impl FnMut(u64, &PairSlot, bool, f64, f64)) {
-        let table = self.pairs.load();
         for (si, stripe) in self.stripes.iter().enumerate() {
             for (seg, cell) in stripe.segments.iter().enumerate() {
                 let p = cell.load(Ordering::Acquire);
@@ -696,8 +724,8 @@ impl DataLake {
                     if let Some((seq, id, shadow, score, raw)) =
                         self.read_slot(slot, si, stripe.cap, pos)
                     {
-                        if let Some(pair) = table.slab.get(id) {
-                            f(seq, pair, shadow, score, raw);
+                        if let Some(pair) = self.pair_slab.get(id) {
+                            f(seq, &pair, shadow, score, raw);
                         }
                     }
                 }
@@ -706,9 +734,8 @@ impl DataLake {
     }
 
     fn pair_id(&self, tenant: &str, predictor: &str) -> Option<u32> {
-        self.pairs
+        self.pair_shard(tenant)
             .load()
-            .by
             .get(tenant)
             .and_then(|m| m.get(predictor))
             .map(|p| p.id)
@@ -773,13 +800,23 @@ impl DataLake {
     /// lifecycle controller polls this every tick while a shadow
     /// accumulates mirrors; it never touches the rings).
     pub fn count_for(&self, tenant: &str, predictor: &str) -> usize {
-        self.pairs
+        self.pair_shard(tenant)
             .load()
-            .by
             .get(tenant)
             .and_then(|m| m.get(predictor))
             .map(|p| p.count.load(Ordering::Relaxed) as usize)
             .unwrap_or(0)
+    }
+
+    /// Number of `(tenant, predictor)` pairs ever interned (grow-only).
+    pub fn pair_count(&self) -> usize {
+        self.next_pair_id.load(Ordering::Relaxed) as usize
+    }
+
+    /// Id-registry segments actually allocated — pair-registry memory
+    /// grows in constant-size steps (tsunami RSS accounting).
+    pub fn pair_segments(&self) -> usize {
+        self.pair_slab.segments_allocated()
     }
 
     /// Count of records per (tenant, predictor, shadow-flag).
@@ -796,7 +833,6 @@ impl DataLake {
     /// matching slots are tombstoned (CAS live → dead) and un-counted;
     /// the tombstones are reclaimed as later laps overwrite them.
     pub fn purge_predictor(&self, predictor: &str) -> usize {
-        let table = self.pairs.load();
         let mut removed = 0usize;
         for stripe in self.stripes.iter() {
             for (seg, cell) in stripe.segments.iter().enumerate() {
@@ -817,7 +853,7 @@ impl DataLake {
                             continue; // torn read; re-examine
                         }
                         let id = (meta >> 1) as usize;
-                        let Some(pair) = table.slab.get(id) else { break };
+                        let Some(pair) = self.pair_slab.get(id) else { break };
                         if &*pair.predictor != predictor {
                             break;
                         }
@@ -902,6 +938,33 @@ mod tests {
         // A ref re-resolved later aliases the same interned slot.
         let again = a.pair_ref("t", "p");
         assert!(Arc::ptr_eq(&early.slot, &again.slot));
+    }
+
+    #[test]
+    fn pair_registry_is_slab_backed_and_grow_only() {
+        // An onboarding storm of distinct tenants grows the pair
+        // registry in constant-size segment steps (one per slab shard
+        // here: 600 dense ids over PAIR_SHARDS shards stay inside each
+        // shard's first segment) — never a whole-table republish.
+        let lake = DataLake::new();
+        assert_eq!(lake.pair_count(), 0);
+        assert_eq!(lake.pair_segments(), 0);
+        for i in 0..600 {
+            lake.append(&format!("tenant-{i}"), "p", 0.5, 0.5, false);
+        }
+        assert_eq!(lake.pair_count(), 600);
+        assert_eq!(lake.pair_segments(), PAIR_SHARDS);
+        for i in (0..600).step_by(97) {
+            assert_eq!(lake.count_for(&format!("tenant-{i}"), "p"), 1);
+        }
+        // A second predictor for an existing tenant interns a fresh
+        // id without disturbing the first pair's slot.
+        let before = lake.pair_ref("tenant-0", "p");
+        lake.append("tenant-0", "q", 0.1, 0.1, true);
+        assert_eq!(lake.pair_count(), 601);
+        let after = lake.pair_ref("tenant-0", "p");
+        assert!(Arc::ptr_eq(&before.slot, &after.slot));
+        assert_eq!(lake.count_for("tenant-0", "q"), 1);
     }
 
     #[test]

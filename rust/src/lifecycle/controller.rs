@@ -43,13 +43,14 @@
 //! `POST /v1/lifecycle/check`.
 
 use super::drift::DriftDetector;
-use super::sketch::{QuantileSketch, ScoreFeed, SketchSummary};
-use crate::config::LifecycleConfig;
-use crate::coordinator::{ControlPlane, Engine};
+use super::sketch::{DrainStats, QuantileSketch, ScoreFeed, SketchSummary};
+use crate::config::{LifecycleConfig, RoutingConfig};
+use crate::coordinator::{ControlPlane, Engine, TenantHandle, TenantInterner};
 use crate::transforms::quantile_fit;
+use crate::util::slab::HandleSlab;
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -79,11 +80,59 @@ impl LifecycleState {
     }
 }
 
-/// One managed (tenant → live predictor) pair.
+/// Memory-budget tier of a pair's feed ring. At 100k mostly-idle
+/// tenants the rings — not the KLL sketches — dominate the lifecycle
+/// plane's RSS (`feedStripes × feedCapacity × 8B` each), so the
+/// controller sizes each pair's ring to its observed activity:
+///
+/// * **Hot** — a full `feedStripes × feedCapacity` ring; earned by a
+///   tick whose ring pressure (samples drained + samples overwritten)
+///   reaches `hotFeedSamples`. Sticky: a hot pair keeps its ring
+///   until it goes cold (no resize flapping at the promotion
+///   threshold).
+/// * **Warm** — a single `warmFeedCapacity` stripe; where every pair
+///   starts, and where cold pairs return on renewed traffic.
+/// * **Cold** — no ring at all; reached after `coldAfterIdleTicks`
+///   consecutive zero-sample drains. The ring is drained into the
+///   pair's sketch before eviction (no buffered sample is lost), and
+///   renewed traffic is detected from the pair's data-lake record
+///   count — samples scored while cold reach the lake but not the
+///   sketch, accounted in `lifecycle_cold_missed_samples`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedTier {
+    Hot,
+    Warm,
+    Cold,
+}
+
+impl FeedTier {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FeedTier::Hot => "hot",
+            FeedTier::Warm => "warm",
+            FeedTier::Cold => "cold",
+        }
+    }
+
+    /// The ring this tier wants installed (`None`: evicted).
+    fn ring_tier(self) -> Option<FeedTier> {
+        match self {
+            FeedTier::Cold => None,
+            t => Some(t),
+        }
+    }
+}
+
+/// One managed (tenant → live predictor) pair. Keyed by
+/// [`TenantHandle`] in the hub's pair map; the name fields are
+/// interned `Arc<str>`s shared with the router/interner, so an
+/// established pair's tick allocates no strings.
 struct PairState {
-    tenant: String,
+    tenant: Arc<str>,
+    /// The pair's interned handle — indexes the feed slabs.
+    handle: TenantHandle,
     /// The predictor currently serving the tenant's live traffic.
-    predictor: String,
+    predictor: Arc<str>,
     state: LifecycleState,
     /// Fit accumulator: initial calibration (no baseline yet) and the
     /// post-drift refit sample (FitReady).
@@ -107,17 +156,43 @@ struct PairState {
     validation_failures: u64,
     dropped_samples: u64,
     last_error: Option<String>,
+    /// Memory-budget tier (see [`FeedTier`]).
+    tier: FeedTier,
+    /// Tier of the ring currently installed in the feed slab (`None`:
+    /// no ring). Reconcile touches the slab only when this disagrees
+    /// with `tier` or the pair moved predictor — live rings are
+    /// otherwise preserved across ticks.
+    ring: Option<FeedTier>,
+    /// Predictor whose feed slab holds this pair's ring (lags
+    /// `predictor` for one reconcile after a promotion).
+    feed_predictor: Arc<str>,
+    /// Consecutive ticks whose drain collected zero samples.
+    idle_ticks: u32,
+    /// The pair's data-lake record count captured at eviction; growth
+    /// beyond it re-promotes the pair to Warm.
+    lake_count_at_cold: usize,
 }
 
 impl PairState {
-    fn new(tenant: &str, predictor: &str, cfg: &LifecycleConfig) -> PairState {
+    fn new(
+        tenant: &str,
+        handle: TenantHandle,
+        predictor: &Arc<str>,
+        cfg: &LifecycleConfig,
+    ) -> PairState {
         // Deterministic per-tenant sketch seeds keep runs reproducible.
         let seed = tenant.bytes().fold(0xD81F_5EEDu64, |h, b| {
             h.wrapping_mul(0x100000001B3).wrapping_add(b as u64)
         });
         PairState {
-            tenant: tenant.to_string(),
-            predictor: predictor.to_string(),
+            tenant: Arc::from(tenant),
+            handle,
+            predictor: Arc::clone(predictor),
+            feed_predictor: Arc::clone(predictor),
+            tier: FeedTier::Warm,
+            ring: None,
+            idle_ticks: 0,
+            lake_count_at_cold: 0,
             state: LifecycleState::Observing,
             fit_acc: QuantileSketch::with_seed(cfg.sketch_k, seed),
             window: QuantileSketch::with_seed(cfg.sketch_k, seed ^ 0xFF),
@@ -150,6 +225,7 @@ pub struct PairStatus {
     pub tenant: String,
     pub predictor: String,
     pub state: LifecycleState,
+    pub tier: FeedTier,
     pub fit_samples: u64,
     pub window_samples: u64,
     pub baseline_frozen: bool,
@@ -169,33 +245,50 @@ pub struct TickReport {
     pub pairs: Vec<PairStatus>,
 }
 
-/// Feed lookup table published copy-on-write: predictor → tenant →
-/// ring. Immutable once published, so the hot path probes it without
-/// locks (`Arc<str>: Borrow<str>` lets `&str` keys probe without
-/// allocating).
-type FeedTable = HashMap<Arc<str>, HashMap<Arc<str>, Arc<ScoreFeed>>>;
+/// Feed lookup: predictor name → handle-indexed feed slab. The outer
+/// map is published copy-on-write at predictor-**set**-change rate
+/// (rare: a predictor appearing or leaving the managed set); a
+/// per-tenant ring install publishes one constant-size segment of the
+/// handle's owning slab shard. The old two-level string map recloned
+/// every registered tenant's entry per registration — an O(tenants)
+/// republish that made onboarding storms quadratic.
+type FeedTable = HashMap<Arc<str>, Arc<HandleSlab<Arc<ScoreFeed>>>>;
 
 /// The lifecycle hub: hot-path feed surface + background pair state.
 pub struct LifecycleHub {
     cfg: LifecycleConfig,
+    /// The engine's tenant interner (shared): pair discovery resolves
+    /// handles through it, name-keyed admin probes look up through it,
+    /// and the feed slabs mirror its shard count.
+    interner: Arc<TenantInterner>,
     feeds: crate::util::swap::SnapCell<FeedTable>,
-    /// Bumped after every feed-table republish. The engine's
-    /// per-predictor tenant routes cache `(epoch, feed)` pairs keyed
-    /// by [`TenantHandle`](crate::coordinator::TenantHandle); an epoch
+    /// Bumped after every feed-table change (outer republish or slab
+    /// slot install/evict). The engine's per-predictor tenant routes
+    /// cache `(epoch, feed)` pairs keyed by [`TenantHandle`]; an epoch
     /// mismatch invalidates the cached feed in one integer compare,
-    /// so the hot path never probes the two-level string table.
-    feeds_epoch: std::sync::atomic::AtomicU64,
-    /// Keyed by tenant; background/tick side only.
-    pairs: Mutex<BTreeMap<String, PairState>>,
+    /// so the hot path never probes the table at all when warm.
+    feeds_epoch: AtomicU64,
+    /// Keyed by tenant handle; background/tick side only. A pair's
+    /// full identity is `(handle, predictor)` — both interned, so a
+    /// tick over established pairs allocates no strings.
+    pairs: Mutex<BTreeMap<TenantHandle, PairState>>,
+    /// The routing config the last discovery pass ran against. The
+    /// managed-tenant set is a pure function of `cfg.tenants` plus the
+    /// routing rules, so discovery (the only per-tick string work) is
+    /// skipped entirely while routing is unchanged. Holding the `Arc`
+    /// keeps the pointer identity check sound (no address reuse).
+    last_routing: Mutex<Option<Arc<RoutingConfig>>>,
 }
 
 impl LifecycleHub {
-    pub fn new(cfg: LifecycleConfig) -> LifecycleHub {
+    pub fn new(cfg: LifecycleConfig, interner: Arc<TenantInterner>) -> LifecycleHub {
         LifecycleHub {
             cfg,
+            interner,
             feeds: crate::util::swap::SnapCell::new(Arc::new(FeedTable::new())),
-            feeds_epoch: std::sync::atomic::AtomicU64::new(0),
+            feeds_epoch: AtomicU64::new(0),
             pairs: Mutex::new(BTreeMap::new()),
+            last_routing: Mutex::new(None),
         }
     }
 
@@ -207,35 +300,34 @@ impl LifecycleHub {
     }
 
     /// Resolve a pair's feed ring directly (route-cache rebuild path):
-    /// one table load + two probes, `None` for unmanaged pairs.
-    pub fn feed_for(&self, predictor: &str, tenant: &str) -> Option<Arc<ScoreFeed>> {
-        self.feeds
-            .load()
-            .get(predictor)
-            .and_then(|m| m.get(tenant))
-            .cloned()
+    /// one table load, one name probe, one wait-free slab probe.
+    /// `None` for unmanaged or cold pairs.
+    pub fn feed_for(&self, predictor: &str, tenant: TenantHandle) -> Option<Arc<ScoreFeed>> {
+        let table = self.feeds.load();
+        table.get(predictor)?.get(tenant.index())
     }
 
     pub fn config(&self) -> &LifecycleConfig {
         &self.cfg
     }
 
-    /// Hot-path record: one wait-free feed-table load, two immutable
-    /// map probes, one atomic ring append. Unregistered pairs are
-    /// ignored (the controller registers them on its next tick).
+    /// Hot-path record: one wait-free feed-table load, one name probe,
+    /// one wait-free slab probe, one atomic ring append — no string is
+    /// hashed for the tenant. Unregistered (or cold) pairs are ignored
+    /// (the controller registers them on its next tick).
     #[inline]
-    pub fn record(&self, predictor: &str, tenant: &str, raw: f64) {
+    pub fn record(&self, predictor: &str, tenant: TenantHandle, raw: f64) {
         let table = self.feeds.load();
-        if let Some(feed) = table.get(predictor).and_then(|m| m.get(tenant)) {
+        if let Some(feed) = table.get(predictor).and_then(|s| s.get(tenant.index())) {
             feed.push(raw);
         }
     }
 
     /// Batch-path record: the feed is resolved once per (batch,
     /// tenant) group, appends are one atomic each.
-    pub fn record_batch(&self, predictor: &str, tenant: &str, raws: &[f64]) {
+    pub fn record_batch(&self, predictor: &str, tenant: TenantHandle, raws: &[f64]) {
         let table = self.feeds.load();
-        if let Some(feed) = table.get(predictor).and_then(|m| m.get(tenant)) {
+        if let Some(feed) = table.get(predictor).and_then(|s| s.get(tenant.index())) {
             for &r in raws {
                 feed.push(r);
             }
@@ -245,11 +337,13 @@ impl LifecycleHub {
     /// Merged live sketch for a pair (everything observed since the
     /// last fit) — the control plane's `fit_custom_quantile` consumes
     /// this instead of replaying the data lake when the autopilot is
-    /// tracking the pair.
+    /// tracking the pair. Name-keyed (admin surface): resolves the
+    /// handle through the interner.
     pub fn sketch_summary(&self, predictor: &str, tenant: &str) -> Option<SketchSummary> {
+        let handle = self.interner.lookup(tenant)?;
         let pairs = self.pairs.lock().unwrap();
-        let pair = pairs.get(tenant)?;
-        if pair.predictor != predictor {
+        let pair = pairs.get(&handle)?;
+        if &*pair.predictor != predictor {
             return None;
         }
         let mut merged = pair.fit_acc.clone();
@@ -264,6 +358,32 @@ impl LifecycleHub {
     /// Current pair statuses without advancing anything.
     pub fn status(&self) -> Vec<PairStatus> {
         self.pairs.lock().unwrap().values().map(pair_status).collect()
+    }
+
+    /// Live feed-ring bytes across every installed ring — the
+    /// lifecycle plane's dominant RSS term and the tenant-tsunami
+    /// scenario's bounded-memory gauge.
+    pub fn feed_memory_bytes(&self) -> usize {
+        let table = self.feeds.load();
+        let mut total = 0;
+        for slab in table.values() {
+            slab.for_each(|_, feed| total += feed.memory_bytes());
+        }
+        total
+    }
+
+    /// `(hot, warm, cold)` pair counts.
+    pub fn tier_counts(&self) -> (usize, usize, usize) {
+        let pairs = self.pairs.lock().unwrap();
+        let mut counts = (0usize, 0usize, 0usize);
+        for p in pairs.values() {
+            match p.tier {
+                FeedTier::Hot => counts.0 += 1,
+                FeedTier::Warm => counts.1 += 1,
+                FeedTier::Cold => counts.2 += 1,
+            }
+        }
+        counts
     }
 
     /// Run one controller pass: discover managed pairs, drain feeds
@@ -284,55 +404,106 @@ impl LifecycleHub {
         let snap = engine.load_snapshot();
         let mut pairs = self.pairs.lock().unwrap();
 
-        // 1. Discover managed tenants and their live predictors.
-        let mut tenants: Vec<String> = self.cfg.tenants.clone();
-        if self.cfg.auto_discover {
-            for rule in &snap.routing.scoring_rules {
-                for t in &rule.condition.tenants {
-                    if !tenants.contains(t) {
-                        tenants.push(t.clone());
+        // 1. Discover managed tenants and their live predictors. The
+        //    only string-allocating pass of the tick, and it runs only
+        //    when the routing config changed since the last tick — the
+        //    managed set is a pure function of `cfg.tenants` plus the
+        //    routing rules, so an unchanged config (pointer identity;
+        //    the Arc below pins the address) cannot change it.
+        let discover = {
+            let mut last = self.last_routing.lock().unwrap();
+            let changed = last
+                .as_ref()
+                .map_or(true, |r| !Arc::ptr_eq(r, &snap.routing));
+            if changed {
+                *last = Some(Arc::clone(&snap.routing));
+            }
+            changed
+        };
+        if discover {
+            let mut tenants: Vec<&str> = self.cfg.tenants.iter().map(String::as_str).collect();
+            if self.cfg.auto_discover {
+                for rule in &snap.routing.scoring_rules {
+                    for t in &rule.condition.tenants {
+                        if !tenants.contains(&t.as_str()) {
+                            tenants.push(t);
+                        }
                     }
                 }
             }
-        }
-        for tenant in &tenants {
-            let intent = crate::config::Intent {
-                tenant: tenant.clone(),
-                ..Default::default()
-            };
-            let Ok(res) = crate::coordinator::Router::resolve_in(&snap.routing, &intent) else {
-                continue; // unroutable tenant: nothing to manage
-            };
-            let pair = pairs
-                .entry(tenant.clone())
-                .or_insert_with(|| PairState::new(tenant, &res.live, &self.cfg));
-            // External reroute/promotion: follow the routing truth.
-            // Mid-transition the autopilot owns the routing change, so
-            // only re-sync while Observing.
-            if pair.state == LifecycleState::Observing && pair.predictor != &*res.live {
-                pair.predictor = res.live.to_string();
+            for tenant in tenants {
+                let intent = crate::config::Intent {
+                    tenant: tenant.to_string(),
+                    ..Default::default()
+                };
+                let Ok(res) = crate::coordinator::Router::resolve_in(&snap.routing, &intent)
+                else {
+                    continue; // unroutable tenant: nothing to manage
+                };
+                let handle = self.interner.resolve(tenant);
+                let pair = pairs
+                    .entry(handle)
+                    .or_insert_with(|| PairState::new(tenant, handle, &res.live, &self.cfg));
+                // External reroute/promotion: follow the routing truth.
+                // Mid-transition the autopilot owns the routing change,
+                // so only re-sync while Observing.
+                if pair.state == LifecycleState::Observing && *pair.predictor != *res.live {
+                    pair.predictor = Arc::clone(&res.live);
+                }
             }
         }
 
-        // 2. Drain feeds into the state-appropriate sketch.
+        // 2. Drain feeds into the state-appropriate sketch, and let
+        //    the drain result drive the pair's memory tier.
         let table = self.feeds.load();
         for pair in pairs.values_mut() {
-            let Some(feed) = table
-                .get(pair.predictor.as_str())
-                .and_then(|m| m.get(pair.tenant.as_str()))
-            else {
-                continue; // registered below; samples start next tick
+            let feed = table
+                .get(&*pair.feed_predictor)
+                .and_then(|s| s.get(pair.handle.index()));
+            let Some(feed) = feed else {
+                if pair.tier == FeedTier::Cold {
+                    // No ring: watch the pair's lake record count for
+                    // renewed traffic. Growth re-promotes to Warm; the
+                    // grown-by samples reached the lake but no sketch,
+                    // so they are accounted as missed. Shrinkage is
+                    // lake-retention decay, not traffic — track it so
+                    // decay plus new traffic still nets a detection.
+                    let now = engine.lake.count_for(&pair.tenant, &pair.predictor);
+                    if now > pair.lake_count_at_cold {
+                        let missed = (now - pair.lake_count_at_cold) as u64;
+                        engine
+                            .counters
+                            .add("lifecycle_cold_missed_samples", missed);
+                        engine.counters.inc("lifecycle_feed_repromotions");
+                        pair.tier = FeedTier::Warm;
+                        pair.idle_ticks = 0;
+                    } else {
+                        pair.lake_count_at_cold = now;
+                    }
+                }
+                continue; // Warm/Hot without a ring: registered below
             };
-            let stats = if pair.draining_into_fit() {
-                let sink = &mut pair.fit_acc;
-                feed.drain(|v| sink.insert(v))
-            } else {
-                let sink = &mut pair.window;
-                feed.drain(|v| sink.insert(v))
-            };
+            let stats = drain_into(pair, &feed);
             pair.dropped_samples += stats.dropped;
             if stats.dropped > 0 {
                 engine.counters.add("lifecycle_samples_dropped", stats.dropped);
+            }
+            if stats.collected > 0 {
+                pair.idle_ticks = 0;
+                // Ring pressure — drained plus overwritten — is the
+                // hot signal, not drained alone: a warm ring smaller
+                // than `hotFeedSamples` saturates (drops) long before
+                // its drain count could ever reach the threshold.
+                if stats.collected + stats.dropped >= self.cfg.hot_feed_samples {
+                    pair.tier = FeedTier::Hot;
+                }
+            } else {
+                pair.idle_ticks = pair.idle_ticks.saturating_add(1);
+                if pair.idle_ticks >= self.cfg.cold_after_idle_ticks {
+                    pair.tier = FeedTier::Cold;
+                    pair.lake_count_at_cold =
+                        engine.lake.count_for(&pair.tenant, &pair.predictor);
+                }
             }
         }
 
@@ -344,51 +515,102 @@ impl LifecycleHub {
             }
         }
 
-        // 4. Reconcile the feed table with the (possibly promoted)
-        //    live predictor set. One COW publish when anything changed.
-        let desired: Vec<(String, String)> = pairs
-            .values()
-            .map(|p| (p.predictor.clone(), p.tenant.clone()))
-            .collect();
+        // 4. Reconcile the feed table with the pairs' (possibly
+        //    promoted) predictors and (possibly changed) tiers. Runs
+        //    under the pairs lock so an outgoing ring can be drained
+        //    into its pair's sketch before eviction or resize.
+        self.reconcile_feeds(engine, &mut pairs);
         drop(pairs);
-        self.reconcile_feeds(&desired);
 
         engine.counters.inc("lifecycle_ticks");
         Ok(TickReport { pairs: self.status() })
     }
 
-    fn reconcile_feeds(&self, desired: &[(String, String)]) {
-        let republished = self.feeds.rcu(|old| {
-            let mut changed = false;
-            let mut next: FeedTable = FeedTable::new();
-            for (pred, tenant) in desired {
-                let existing = old
-                    .get(pred.as_str())
-                    .and_then(|m| m.get(tenant.as_str()))
-                    .cloned();
-                let feed = match existing {
-                    Some(f) => f,
-                    None => {
+    fn reconcile_feeds(&self, engine: &Engine, pairs: &mut BTreeMap<TenantHandle, PairState>) {
+        let mut changed = false;
+        let current = self.feeds.load();
+
+        // A. Retire rings whose pair moved predictor, changed tier or
+        //    went cold. The outgoing ring drains into the pair's
+        //    sketch first — an eviction or resize never loses a
+        //    buffered sample (samples racing in behind the drain are
+        //    bounded by the route-cache epoch window).
+        for pair in pairs.values_mut() {
+            let desired = pair.tier.ring_tier();
+            let moved = *pair.feed_predictor != *pair.predictor;
+            if pair.ring.is_some() && (moved || pair.ring != desired) {
+                if let Some(slab) = current.get(&*pair.feed_predictor) {
+                    if let Some(feed) = slab.get(pair.handle.index()) {
+                        let stats = drain_into(pair, &feed);
+                        pair.dropped_samples += stats.dropped;
+                        if stats.dropped > 0 {
+                            engine
+                                .counters
+                                .add("lifecycle_samples_dropped", stats.dropped);
+                        }
+                        slab.clear(pair.handle.index());
                         changed = true;
-                        Arc::new(ScoreFeed::new(self.cfg.feed_stripes, self.cfg.feed_capacity))
                     }
-                };
-                next.entry(Arc::from(pred.as_str()))
-                    .or_default()
-                    .insert(Arc::from(tenant.as_str()), feed);
+                }
+                pair.ring = None;
+                if desired.is_none() {
+                    engine.counters.inc("lifecycle_feed_evictions");
+                }
             }
-            let dropped_any = old
-                .iter()
-                .any(|(p, m)| m.keys().any(|t| {
-                    !desired.iter().any(|(dp, dt)| dp == &**p && dt == &**t)
-                }));
-            if changed || dropped_any {
-                (Arc::new(next), true)
+        }
+
+        // B. Republish the outer predictor map only when the managed
+        //    predictor *set* changed (slabs are reused by name).
+        let mut needed: Vec<Arc<str>> = Vec::new();
+        for p in pairs.values() {
+            if p.tier != FeedTier::Cold && !needed.iter().any(|n| **n == *p.predictor) {
+                needed.push(Arc::clone(&p.predictor));
+            }
+        }
+        let outer_changed = needed.iter().any(|n| !current.contains_key(&**n))
+            || current.keys().any(|k| !needed.iter().any(|n| **n == **k));
+        let table = if outer_changed {
+            changed = true;
+            let shards = self.interner.shard_count();
+            self.feeds.rcu(|old| {
+                let mut next = FeedTable::with_capacity(needed.len());
+                for n in &needed {
+                    let slab = old
+                        .get(&**n)
+                        .cloned()
+                        .unwrap_or_else(|| Arc::new(HandleSlab::with_shards(shards)));
+                    next.insert(Arc::clone(n), slab);
+                }
+                let next = Arc::new(next);
+                (Arc::clone(&next), next)
+            })
+        } else {
+            current
+        };
+
+        // C. Install rings the pairs' tiers call for.
+        for pair in pairs.values_mut() {
+            let Some(tier) = pair.tier.ring_tier() else {
+                continue;
+            };
+            if pair.ring == Some(tier) {
+                continue;
+            }
+            let Some(slab) = table.get(&*pair.predictor) else {
+                continue;
+            };
+            let feed = if tier == FeedTier::Hot {
+                ScoreFeed::new(self.cfg.feed_stripes, self.cfg.feed_capacity)
             } else {
-                (Arc::clone(old), false)
-            }
-        });
-        if republished {
+                ScoreFeed::new(1, self.cfg.warm_feed_capacity)
+            };
+            slab.set(pair.handle.index(), Arc::new(feed));
+            pair.ring = Some(tier);
+            pair.feed_predictor = Arc::clone(&pair.predictor);
+            changed = true;
+        }
+
+        if changed {
             // After the publish, so a reader pairing the new epoch
             // with the old table is impossible; the benign inverse
             // race (old epoch + new table) self-heals on next use.
@@ -397,11 +619,23 @@ impl LifecycleHub {
     }
 }
 
+/// Drain `feed` into the sketch the pair's state is filling.
+fn drain_into(pair: &mut PairState, feed: &ScoreFeed) -> DrainStats {
+    if pair.draining_into_fit() {
+        let sink = &mut pair.fit_acc;
+        feed.drain(|v| sink.insert(v))
+    } else {
+        let sink = &mut pair.window;
+        feed.drain(|v| sink.insert(v))
+    }
+}
+
 fn pair_status(p: &PairState) -> PairStatus {
     PairStatus {
-        tenant: p.tenant.clone(),
-        predictor: p.predictor.clone(),
+        tenant: p.tenant.to_string(),
+        predictor: p.predictor.to_string(),
         state: p.state,
+        tier: p.tier,
         fit_samples: p.fit_acc.count(),
         window_samples: p.window.count(),
         baseline_frozen: p.frozen.is_some(),
@@ -579,7 +813,7 @@ fn advance_pair(
         }
         LifecycleState::Promoted => {
             let shadow = pair.shadow.take().ok_or_else(|| anyhow!("state lost shadow"))?;
-            let old = std::mem::replace(&mut pair.predictor, shadow);
+            let old = std::mem::replace(&mut pair.predictor, Arc::from(shadow));
             // The candidate was fitted on the post-drift distribution:
             // that summary *is* the new baseline.
             pair.frozen = pair.fit_summary.take().or(pair.frozen.take());
@@ -595,11 +829,11 @@ fn advance_pair(
                 let referenced = routing
                     .scoring_rules
                     .iter()
-                    .any(|r| &*r.target_predictor == old)
+                    .any(|r| *r.target_predictor == *old)
                     || routing
                         .shadow_rules
                         .iter()
-                        .any(|r| r.target_predictors.iter().any(|t| &**t == old));
+                        .any(|r| r.target_predictors.iter().any(|t| **t == *old));
                 if !referenced {
                     // Best-effort: a lost race with an operator's own
                     // decommission is bookkeeping, not a loop failure
@@ -650,7 +884,8 @@ lifecycle:
     #[test]
     fn candidate_names_strip_prior_suffixes() {
         let cfg = crate::config::LifecycleConfig::default();
-        let mut pair = PairState::new("acme", "base", &cfg);
+        let base: Arc<str> = Arc::from("base");
+        let mut pair = PairState::new("acme", TenantHandle::from_index(0), &base, &cfg);
         pair.candidate_seq = 1;
         assert_eq!(candidate_name(&pair), "base--lc1-acme");
         pair.predictor = "base--lc1-acme".into();
@@ -660,11 +895,19 @@ lifecycle:
 
     #[test]
     fn record_without_registration_is_a_safe_noop() {
-        let hub = LifecycleHub::new(crate::config::LifecycleConfig::default());
-        hub.record("ghost", "nobody", 0.5);
-        hub.record_batch("ghost", "nobody", &[0.1, 0.2]);
+        let interner = Arc::new(TenantInterner::new());
+        let hub = LifecycleHub::new(
+            crate::config::LifecycleConfig::default(),
+            Arc::clone(&interner),
+        );
+        let nobody = interner.resolve("nobody");
+        hub.record("ghost", nobody, 0.5);
+        hub.record_batch("ghost", nobody, &[0.1, 0.2]);
+        // A handle the interner never issued is equally inert.
+        hub.record("ghost", TenantHandle::from_index(7), 0.5);
         assert!(hub.status().is_empty());
         assert!(hub.sketch_summary("ghost", "nobody").is_none());
+        assert_eq!(hub.feed_memory_bytes(), 0);
     }
 
     #[test]
@@ -721,12 +964,11 @@ lifecycle:
     fn reconcile_preserves_live_feeds_across_ticks() {
         let (_fix, engine) = sim_engine(AUTO_CFG);
         let hub = engine.lifecycle.as_ref().unwrap();
+        let bank1 = engine.tenants.resolve("bank1");
         hub.tick(&engine).unwrap();
-        let t1 = hub.feeds.load();
-        let f1 = t1.get("p").and_then(|m| m.get("bank1")).cloned().unwrap();
+        let f1 = hub.feed_for("p", bank1).unwrap();
         hub.tick(&engine).unwrap();
-        let t2 = hub.feeds.load();
-        let f2 = t2.get("p").and_then(|m| m.get("bank1")).cloned().unwrap();
+        let f2 = hub.feed_for("p", bank1).unwrap();
         assert!(
             Arc::ptr_eq(&f1, &f2),
             "reconcile must not replace a live feed (in-flight samples would be lost)"
@@ -737,18 +979,98 @@ lifecycle:
     fn feed_epoch_bumps_only_on_republish() {
         let (_fix, engine) = sim_engine(AUTO_CFG);
         let hub = engine.lifecycle.as_ref().unwrap();
+        let bank1 = engine.tenants.resolve("bank1");
         assert_eq!(hub.feeds_epoch(), 0);
-        assert!(hub.feed_for("p", "bank1").is_none());
+        assert!(hub.feed_for("p", bank1).is_none());
         hub.tick(&engine).unwrap(); // registers the bank1 feed
         assert_eq!(hub.feeds_epoch(), 1);
-        let feed = hub.feed_for("p", "bank1").unwrap();
+        let feed = hub.feed_for("p", bank1).unwrap();
         hub.tick(&engine).unwrap(); // unchanged world: no republish
         assert_eq!(
             hub.feeds_epoch(),
             1,
             "an unchanged feed table must not invalidate cached routes"
         );
-        assert!(Arc::ptr_eq(&feed, &hub.feed_for("p", "bank1").unwrap()));
+        assert!(Arc::ptr_eq(&feed, &hub.feed_for("p", bank1).unwrap()));
+    }
+
+    const TIER_CFG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "p"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s1]
+  quantile: identity
+lifecycle:
+  enabled: true
+  hotFeedSamples: 4
+  coldAfterIdleTicks: 2
+  warmFeedCapacity: 64
+"#;
+
+    fn score_n(engine: &Engine, tenant: &str, n: usize) {
+        let d = engine.predictor("p").unwrap().feature_dim();
+        for i in 0..n {
+            engine
+                .score(&ScoreRequest {
+                    intent: Intent {
+                        tenant: tenant.into(),
+                        ..Intent::default()
+                    },
+                    entity: format!("e{i}"),
+                    features: vec![0.05 * (i % 16) as f32; d],
+                })
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn tiers_promote_on_volume_and_evict_on_idle() {
+        let (_fix, engine) = sim_engine(TIER_CFG);
+        let hub = engine.lifecycle.as_ref().unwrap();
+        let bank1 = engine.tenants.resolve("bank1");
+
+        hub.tick(&engine).unwrap(); // pair discovered, warm ring wired
+        assert_eq!(hub.tier_counts(), (0, 1, 0));
+        let warm_bytes = hub.feed_memory_bytes();
+        assert!(warm_bytes > 0);
+
+        // A drain at/above hotFeedSamples earns the full-size ring.
+        score_n(&engine, "bank1", 5);
+        hub.tick(&engine).unwrap();
+        assert_eq!(hub.tier_counts(), (1, 0, 0));
+        assert_eq!(hub.status()[0].fit_samples, 5, "resize must not drop samples");
+        assert!(
+            hub.feed_memory_bytes() > warm_bytes,
+            "hot ring must be larger than warm"
+        );
+
+        // coldAfterIdleTicks zero-sample drains evict the ring.
+        hub.tick(&engine).unwrap();
+        hub.tick(&engine).unwrap();
+        assert_eq!(hub.tier_counts(), (0, 0, 1));
+        assert!(hub.feed_for("p", bank1).is_none(), "cold pair keeps no ring");
+        assert_eq!(hub.feed_memory_bytes(), 0);
+        assert_eq!(engine.counters.get("lifecycle_feed_evictions"), 1);
+        assert_eq!(hub.status()[0].fit_samples, 5, "eviction must not drop samples");
+
+        // Traffic while cold reaches the lake but no ring; the next
+        // tick notices the lake growth, accounts the missed samples
+        // and re-promotes the pair to Warm with a fresh ring.
+        score_n(&engine, "bank1", 3);
+        hub.tick(&engine).unwrap();
+        assert_eq!(hub.tier_counts(), (0, 1, 0));
+        assert!(hub.feed_for("p", bank1).is_some());
+        assert_eq!(engine.counters.get("lifecycle_feed_repromotions"), 1);
+        assert_eq!(engine.counters.get("lifecycle_cold_missed_samples"), 3);
+        engine.drain_shadows();
     }
 }
 

@@ -12,7 +12,8 @@ pub mod drift;
 pub mod sketch;
 
 pub use controller::{
-    spawn_controller, LifecycleController, LifecycleHub, LifecycleState, PairStatus, TickReport,
+    spawn_controller, FeedTier, LifecycleController, LifecycleHub, LifecycleState, PairStatus,
+    TickReport,
 };
 pub use drift::{fit_ready, ks, psi, DriftDetector, DriftReport};
 pub use sketch::{DrainStats, QuantileSketch, ScoreFeed, SketchSummary};

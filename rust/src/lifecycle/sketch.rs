@@ -441,6 +441,17 @@ impl ScoreFeed {
             .map(|s| s.head.load(Ordering::Relaxed))
             .sum()
     }
+
+    /// Ring-buffer bytes this feed holds live (slots only — the
+    /// dominant term). Drives the lifecycle memory budget: at 100k
+    /// mostly-idle tenants the rings, not the KLL sketches, are the
+    /// RSS story, so tier transitions resize exactly this.
+    pub fn memory_bytes(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.slots.len() * std::mem::size_of::<u64>())
+            .sum()
+    }
 }
 
 #[cfg(test)]

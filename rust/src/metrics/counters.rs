@@ -17,6 +17,7 @@
 //! `/metrics` rendering, which sees handle updates because handles
 //! alias the map's own atomics.
 
+use crate::util::slab::HandleSlab;
 use crate::util::swap::SnapCell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,6 +42,12 @@ impl CounterHandle {
 
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
+    }
+
+    /// A fresh zeroed counter not (yet) bound to any name — the
+    /// slab-backed registries intern these directly by handle index.
+    fn zero() -> CounterHandle {
+        CounterHandle(Arc::new(AtomicU64::new(0)))
     }
 }
 
@@ -110,14 +117,81 @@ impl Counters {
             .unwrap_or(0)
     }
 
-    /// Snapshot all counters (for `/metrics` and test assertions).
-    /// Wait-free: one snapshot load, then plain reads.
+    /// Visit every counter in sorted key order **without cloning the
+    /// map**: one wait-free snapshot load, then borrowed reads. This
+    /// is the `/metrics` scrape path — at 100k keys the old
+    /// `snapshot()` cloned every `String` per scrape; the visitor
+    /// streams straight into the response writer.
+    pub fn for_each(&self, mut f: impl FnMut(&str, u64)) {
+        let snap = self.map.load();
+        for (k, v) in snap.iter() {
+            f(k, v.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Snapshot all counters into an owned map (test assertions and
+    /// oracle models that want a value they can hold across
+    /// mutations). Render paths should prefer [`Counters::for_each`].
     pub fn snapshot(&self) -> BTreeMap<String, u64> {
-        self.map
-            .load()
-            .iter()
-            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
-            .collect()
+        let mut out = BTreeMap::new();
+        self.for_each(|k, v| {
+            out.insert(k.to_string(), v);
+        });
+        out
+    }
+}
+
+/// Per-tenant event counters indexed by the dense
+/// [`TenantHandle`](crate::coordinator::TenantHandle) index instead
+/// of the tenant-name string. The old layout interned
+/// `tenant_events` keys into the copy-on-write name map — the first
+/// commit of tenant `n` cloned all `n-1` existing keys; at 100k
+/// tenants that is the O(n²) onboarding storm. Here the first commit
+/// publishes one constant-size slab segment, and established tenants
+/// pay exactly what they did before: one pre-resolved `fetch_add`.
+///
+/// Name binding (for `/metrics` rendering and oracle diffs) lives
+/// with the caller, who owns the interner — this type never touches
+/// a string.
+pub struct TenantCounters {
+    slab: HandleSlab<CounterHandle>,
+}
+
+impl TenantCounters {
+    /// A counter slab striped over `shards` shards.
+    pub fn new(shards: usize) -> TenantCounters {
+        TenantCounters {
+            slab: HandleSlab::with_shards(shards),
+        }
+    }
+
+    /// Resolve the counter for a tenant-handle index, interning it at
+    /// zero on first touch (racing interners converge on one atomic).
+    /// Call once per route; bump the returned handle on the hot path.
+    pub fn handle(&self, index: usize) -> CounterHandle {
+        self.slab.get_or_insert_with(index, CounterHandle::zero)
+    }
+
+    /// Current value at `index` (0 when never interned) — wait-free.
+    pub fn get(&self, index: usize) -> u64 {
+        self.slab.get(index).map(|c| c.get()).unwrap_or(0)
+    }
+
+    /// Visit every interned counter, shard by shard — the streaming
+    /// `/metrics` iteration (no map clone, no allocation).
+    pub fn for_each(&self, mut f: impl FnMut(usize, u64)) {
+        self.slab.for_each(|i, c| f(i, c.get()));
+    }
+
+    /// Slab segments allocated (tsunami RSS accounting).
+    pub fn segments_allocated(&self) -> usize {
+        self.slab.segments_allocated()
+    }
+}
+
+impl Default for TenantCounters {
+    fn default() -> Self {
+        TenantCounters::new(crate::coordinator::DEFAULT_NAME_SHARDS)
     }
 }
 
@@ -264,6 +338,63 @@ mod tests {
         for t in 0..8 {
             assert_eq!(c.get(&format!("own_{t}")), 500);
             assert_eq!(c.get(&format!("late_{t}")), 1);
+        }
+    }
+
+    #[test]
+    fn for_each_agrees_with_snapshot_in_sorted_order() {
+        let c = Counters::new();
+        c.add("b", 2);
+        c.inc("a");
+        c.add("z", 9);
+        let mut visited = Vec::new();
+        c.for_each(|k, v| visited.push((k.to_string(), v)));
+        // Sorted (BTreeMap order) and identical to the owned snapshot.
+        assert_eq!(
+            visited,
+            c.snapshot().into_iter().collect::<Vec<_>>(),
+            "visitor and snapshot must expose the same surface"
+        );
+        assert_eq!(visited[0].0, "a");
+        assert_eq!(visited[2], ("z".to_string(), 9));
+    }
+
+    #[test]
+    fn tenant_counters_index_by_handle_and_stream() {
+        let t = TenantCounters::new(4);
+        assert_eq!(t.get(3), 0);
+        let h = t.handle(3);
+        h.add(5);
+        // Re-resolving lands on the same atomic.
+        t.handle(3).inc();
+        assert_eq!(t.get(3), 6);
+        t.handle(900).add(2);
+        let mut seen = Vec::new();
+        t.for_each(|i, v| seen.push((i, v)));
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(3, 6), (900, 2)]);
+        assert!(t.segments_allocated() >= 1);
+    }
+
+    #[test]
+    fn tenant_counters_concurrent_first_touch_loses_nothing() {
+        use std::sync::Arc as StdArc;
+        let t = StdArc::new(TenantCounters::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let t = StdArc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..200 {
+                        t.handle(i).inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for i in 0..200 {
+            assert_eq!(t.get(i), 8, "index {i}");
         }
     }
 

@@ -7,5 +7,5 @@
 pub mod counters;
 pub mod histogram;
 
-pub use counters::{CounterHandle, Counters, Series};
+pub use counters::{CounterHandle, Counters, Series, TenantCounters};
 pub use histogram::LatencyHistogram;

@@ -54,9 +54,9 @@ pub mod http;
 pub mod reactor;
 pub mod streamjson;
 
-use crate::coordinator::{Engine, ScoreRequest, TenantInterner};
+use crate::coordinator::{Engine, ScoreRequest, TenantHandle, TenantInterner};
 use crate::config::{Intent, ServerConfig};
-use crate::util::json::Json;
+use crate::util::json::{write_escaped, write_num, Json};
 use anyhow::Result;
 use http::{
     BatchSink, Handler, HttpServer, IngressConfig, IngressCounters, Request, Response,
@@ -106,49 +106,7 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
                 ),
             }
         }
-        ("GET", "/metrics") => {
-            let snap = engine.counters.snapshot();
-            let counters: Vec<(String, Json)> = snap
-                .into_iter()
-                .map(|(k, v)| (k, Json::Num(v as f64)))
-                .collect();
-            // Batch-path scored events per tenant (bare tenant keys).
-            let tenants: Vec<(String, Json)> = engine
-                .tenant_events
-                .snapshot()
-                .into_iter()
-                .map(|(k, v)| (k, Json::Num(v as f64)))
-                .collect();
-            let body = Json::obj(vec![
-                (
-                    "counters",
-                    Json::Obj(counters.into_iter().collect()),
-                ),
-                (
-                    "scored_events",
-                    Json::Obj(tenants.into_iter().collect()),
-                ),
-                (
-                    "latency_ms",
-                    Json::obj(vec![
-                        ("p50", Json::Num(engine.live_latency.percentile_ns(50.0) as f64 / 1e6)),
-                        ("p99", Json::Num(engine.live_latency.percentile_ns(99.0) as f64 / 1e6)),
-                        ("p999", Json::Num(engine.live_latency.percentile_ns(99.9) as f64 / 1e6)),
-                        ("count", Json::Num(engine.live_latency.count() as f64)),
-                    ]),
-                ),
-                (
-                    "batch_latency_ms",
-                    Json::obj(vec![
-                        ("p50", Json::Num(engine.batch_latency.percentile_ns(50.0) as f64 / 1e6)),
-                        ("p99", Json::Num(engine.batch_latency.percentile_ns(99.0) as f64 / 1e6)),
-                        ("count", Json::Num(engine.batch_latency.count() as f64)),
-                    ]),
-                ),
-            ])
-            .to_string();
-            Response::json(200, body)
-        }
+        ("GET", "/metrics") => Response::json(200, metrics_json(engine)),
         ("GET", "/v1/lifecycle") => Response::json(200, lifecycle_status_json(engine, false)),
         ("POST", "/v1/lifecycle/check") => match &engine.lifecycle {
             None => Response::json(422, r#"{"error":"lifecycle is not enabled"}"#),
@@ -185,6 +143,103 @@ fn route(engine: &Engine, ready: &AtomicBool, req: &Request) -> Response {
     }
 }
 
+/// `GET /metrics` body, streamed. The counter registry and the
+/// per-tenant `scored_events` slab are written entry-by-entry into
+/// the response buffer — borrowed names, no intermediate tree. The
+/// old builder cloned two whole `BTreeMap`s (every counter name +
+/// every tenant key) per scrape; at 100k tenants that was ~100k
+/// `String` allocations per poll of what is typically a 10s-interval
+/// endpoint hammered by every scrape agent in the fleet. Public so
+/// `benches/serving_bench.rs` can measure the scrape directly.
+pub fn metrics_json(engine: &Engine) -> String {
+    let mut body = String::with_capacity(1024);
+    body.push_str("{\"counters\":{");
+    let mut first = true;
+    engine.counters.for_each(|name, v| {
+        if !first {
+            body.push(',');
+        }
+        first = false;
+        write_escaped(name, &mut body);
+        body.push(':');
+        write_num(v as f64, &mut body);
+    });
+
+    // Per-tenant batch scored events. Slab entries stream in handle
+    // order; a tenant retired and re-onboarded owns several handles,
+    // and JSON object keys must stay unique, so the (rare) counts
+    // riding on handles that are no longer the name's current binding
+    // are pre-merged by name and folded into the live entry — totals
+    // per key match `Engine::scored_events_snapshot` exactly.
+    body.push_str("},\"scored_events\":{");
+    let mut stale: std::collections::BTreeMap<std::sync::Arc<str>, u64> =
+        std::collections::BTreeMap::new();
+    engine.tenant_events.for_each(|index, n| {
+        if n == 0 {
+            return;
+        }
+        let h = TenantHandle::from_index(index);
+        if let Some(name) = engine.tenants.name(h) {
+            if engine.tenants.lookup(&name) != Some(h) {
+                *stale.entry(name).or_insert(0) += n;
+            }
+        }
+    });
+    let mut first = true;
+    engine.tenant_events.for_each(|index, n| {
+        if n == 0 {
+            return;
+        }
+        let h = TenantHandle::from_index(index);
+        let Some(name) = engine.tenants.name(h) else {
+            return;
+        };
+        if engine.tenants.lookup(&name) != Some(h) {
+            return; // merged into the live entry (or the tail below)
+        }
+        let total = n + stale.remove(&*name).unwrap_or(0);
+        if !first {
+            body.push(',');
+        }
+        first = false;
+        write_escaped(&name, &mut body);
+        body.push(':');
+        write_num(total as f64, &mut body);
+    });
+    for (name, n) in stale {
+        // Counts whose tenant is retired with no current binding.
+        if !first {
+            body.push(',');
+        }
+        first = false;
+        write_escaped(&name, &mut body);
+        body.push(':');
+        write_num(n as f64, &mut body);
+    }
+
+    body.push_str("},\"latency_ms\":");
+    body.push_str(
+        &Json::obj(vec![
+            ("p50", Json::Num(engine.live_latency.percentile_ns(50.0) as f64 / 1e6)),
+            ("p99", Json::Num(engine.live_latency.percentile_ns(99.0) as f64 / 1e6)),
+            ("p999", Json::Num(engine.live_latency.percentile_ns(99.9) as f64 / 1e6)),
+            ("count", Json::Num(engine.live_latency.count() as f64)),
+        ])
+        .to_string(),
+    );
+    body.push_str(",\"batch_latency_ms\":");
+    body.push_str(
+        &Json::obj(vec![
+            ("p50", Json::Num(engine.batch_latency.percentile_ns(50.0) as f64 / 1e6)),
+            ("p99", Json::Num(engine.batch_latency.percentile_ns(99.0) as f64 / 1e6)),
+            ("count", Json::Num(engine.batch_latency.count() as f64)),
+        ])
+        .to_string(),
+    );
+    body.push('}');
+    body
+}
+
 /// `GET /v1/lifecycle` body: autopilot enablement + per-pair status.
 fn lifecycle_status_json(engine: &Engine, ticked: bool) -> String {
     let Some(hub) = &engine.lifecycle else {
@@ -202,6 +257,7 @@ fn lifecycle_status_json(engine: &Engine, ticked: bool) -> String {
                 ("tenant", Json::str(p.tenant.clone())),
                 ("predictor", Json::str(p.predictor.clone())),
                 ("state", Json::str(p.state.as_str())),
+                ("tier", Json::str(p.tier.as_str())),
                 ("psi", Json::Num(p.psi)),
                 ("ks", Json::Num(p.ks)),
                 ("fitSamples", Json::Num(p.fit_samples as f64)),

@@ -14,7 +14,11 @@
 //! attacks the real cluster plane (`crate::cluster`): Zipf traffic
 //! over N serving nodes racing continuous two-phase publishes, with a
 //! mid-flip crash and a log-replay join, asserting zero dropped, zero
-//! torn and epoch-exact accounting.
+//! torn and epoch-exact accounting. `tenant_tsunami` is the
+//! 100k-tenant scale-out proof: an onboarding storm plus Zipf
+//! steady-state with a drifting head tenant, asserting bounded
+//! registry/feed RSS, zero lost appends and exact per-tenant
+//! accounting.
 
 pub mod cluster;
 pub mod cluster_storm;
@@ -22,6 +26,7 @@ pub mod connection_storm;
 pub mod drift_storm;
 pub mod multitenant;
 pub mod saturation;
+pub mod tenant_tsunami;
 pub mod workload;
 
 pub use cluster::{
@@ -35,4 +40,5 @@ pub use connection_storm::{
 pub use drift_storm::{run_drift_storm, DriftStormConfig, DriftStormReport};
 pub use multitenant::{run_batch_mix, BatchMixConfig, BatchMixReport};
 pub use saturation::{run_saturation, SaturationConfig, SaturationLevel, SaturationReport};
+pub use tenant_tsunami::{run_tenant_tsunami, TsunamiConfig, TsunamiReport};
 pub use workload::{Event, TenantProfile, TrafficMix, Workload, FEATURE_DIM};

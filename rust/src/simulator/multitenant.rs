@@ -56,7 +56,7 @@ pub fn run_batch_mix(engine: &Engine, cfg: &BatchMixConfig) -> Result<BatchMixRe
 
     let mut per_tenant: BTreeMap<String, u64> = BTreeMap::new();
     let mut events = 0u64;
-    let counters_before: BTreeMap<String, u64> = engine.tenant_events.snapshot();
+    let counters_before: BTreeMap<String, u64> = engine.scored_events_snapshot();
     let t0 = Instant::now();
     let mut reqs: Vec<ScoreRequest> = Vec::with_capacity(cfg.batch_size);
     for b in 0..cfg.batches {
@@ -83,7 +83,7 @@ pub fn run_batch_mix(engine: &Engine, cfg: &BatchMixConfig) -> Result<BatchMixRe
     // moved by exactly what this run scored (batch-aware accounting).
     for (tenant, n) in &per_tenant {
         let before = counters_before.get(tenant).copied().unwrap_or(0);
-        let after = engine.tenant_events.get(tenant);
+        let after = engine.scored_events(tenant);
         ensure!(
             after - before == *n,
             "scored_events[{tenant}] moved by {} for {n} scored events",

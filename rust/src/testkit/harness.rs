@@ -436,7 +436,7 @@ pub fn diff_state(engine: &Engine, oracle: &OracleEngine, ordered: bool) -> Prop
     // Per-tenant batch accounting: full-map equality, so an engine
     // that silently stops accounting a tenant (missing key) diverges
     // just as loudly as a wrong count.
-    let e_tenants: BTreeMap<String, u64> = engine.tenant_events.snapshot();
+    let e_tenants: BTreeMap<String, u64> = engine.scored_events_snapshot();
     let o_tenants = oracle.tenant_events_snapshot();
     if e_tenants != o_tenants {
         return Err(format!(
@@ -1249,7 +1249,7 @@ pub fn diff_cluster_state(
     // Per-tenant batch accounting, merged cluster-wide.
     let mut c_tenants: BTreeMap<String, u64> = BTreeMap::new();
     for n in &all {
-        for (k, v) in n.engine.tenant_events.snapshot() {
+        for (k, v) in n.engine.scored_events_snapshot() {
             *c_tenants.entry(k).or_insert(0) += v;
         }
     }

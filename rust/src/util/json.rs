@@ -234,7 +234,12 @@ impl Json {
     }
 }
 
-fn write_num(n: f64, out: &mut String) {
+/// Streaming-writer building block: append one JSON number to `out`
+/// with exactly the formatting `Json::Num` serializes with (integers
+/// without a fraction, `null` for non-finite). Lets high-cardinality
+/// endpoints (`/metrics` at 100k tenant keys) write straight into the
+/// response buffer instead of materializing a `Json` tree.
+pub fn write_num(n: f64, out: &mut String) {
     if !n.is_finite() {
         // JSON has no NaN/Inf; emit null like most tolerant encoders.
         out.push_str("null");
@@ -245,7 +250,9 @@ fn write_num(n: f64, out: &mut String) {
     }
 }
 
-fn write_escaped(s: &str, out: &mut String) {
+/// Streaming-writer building block: append one JSON string (quoted,
+/// escaped) to `out` — the same escaping `Json::Str` serializes with.
+pub fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -7,6 +7,7 @@ pub mod dataset;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod slab;
 pub mod stats;
 pub mod swap;
 pub mod threadpool;
