@@ -44,6 +44,58 @@ impl Default for FitConfig {
     }
 }
 
+/// Typed rejection of an unusable [`FitConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitConfigError {
+    pub field: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for FitConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid FitConfig.{}: {}", self.field, self.message)
+    }
+}
+
+impl std::error::Error for FitConfigError {}
+
+impl FitConfig {
+    /// Reject configurations the DE search cannot run on. The
+    /// rand/1/bin strategy draws three distinct partners besides the
+    /// current index, so a population below 4 makes the partner-
+    /// selection loops spin forever — that floor used to be a silent
+    /// `max(8)` fix-up buried in `de_minimize`, far from the loops it
+    /// protected and overriding whatever the caller configured.
+    pub fn validate(&self) -> Result<(), FitConfigError> {
+        let err = |field: &'static str, message: String| Err(FitConfigError { field, message });
+        if self.population < 4 {
+            return err(
+                "population",
+                format!(
+                    "DE rand/1/bin needs >= 4 members to pick 3 distinct partners, got {}",
+                    self.population
+                ),
+            );
+        }
+        if self.n_trials == 0 {
+            return err("n_trials", "need at least one trial".into());
+        }
+        if self.generations == 0 {
+            return err("generations", "need at least one generation".into());
+        }
+        if !(self.f.is_finite() && self.f > 0.0) {
+            return err("f", format!("differential weight must be > 0, got {}", self.f));
+        }
+        if !(0.0..=1.0).contains(&self.cr) {
+            return err("cr", format!("crossover rate must be in [0,1], got {}", self.cr));
+        }
+        if self.hist_bins < 2 {
+            return err("hist_bins", format!("JSD needs >= 2 bins, got {}", self.hist_bins));
+        }
+        Ok(())
+    }
+}
+
 /// Search space: log-uniform over each Beta shape parameter.
 const LOG_LO: f64 = -3.0; // e^-3 ~ 0.05
 const LOG_HI: f64 = 5.0; // e^5  ~ 148
@@ -85,8 +137,15 @@ fn de_minimize(
     emp: &[f64; 4],
     cfg: &FitConfig,
     rng: &mut Rng,
-) -> ([f64; 4], f64) {
-    let np = cfg.population.max(8);
+) -> Result<([f64; 4], f64)> {
+    let np = cfg.population;
+    // `FitConfig::validate` already rejected np < 4; re-assert at the
+    // site that would otherwise spin forever, so a future caller that
+    // skips validation fails loudly instead of hanging.
+    ensure!(
+        np >= 4,
+        "DE partner selection needs population >= 4, got {np} (unvalidated FitConfig?)"
+    );
     // Initialise population log-uniformly.
     let mut pop: Vec<[f64; 4]> = (0..np)
         .map(|_| {
@@ -143,7 +202,7 @@ fn de_minimize(
         .min_by(|x, y| x.1.partial_cmp(y.1).unwrap())
         .map(|(i, _)| i)
         .unwrap();
-    (pop[best], fitness[best])
+    Ok((pop[best], fitness[best]))
 }
 
 /// Fit the bimodal Beta mixture to observed scores (Eqs. 6-8).
@@ -152,8 +211,11 @@ fn de_minimize(
 /// of its experts; `w` is the positive-class prior of that data
 /// (paper: `w = P(y=1)`).
 pub fn fit_mixture(scores: &[f64], w: f64, cfg: &FitConfig) -> Result<MixtureFit> {
+    cfg.validate()?;
     ensure!(scores.len() >= 100, "need >= 100 scores to fit, got {}", scores.len());
-    ensure!((0.0..1.0).contains(&w), "prior w must be in [0,1)");
+    // Same domain, same message as `BetaMixture::new` — the two used
+    // to disagree (`[0,1)` here vs `[0,1]` there).
+    BetaMixture::validate_weight(w)?;
     ensure!(
         scores.iter().all(|s| (0.0..=1.0).contains(s)),
         "scores must lie in [0,1]"
@@ -169,9 +231,9 @@ pub fn fit_mixture(scores: &[f64], w: f64, cfg: &FitConfig) -> Result<MixtureFit
 
     let mut rng = Rng::new(cfg.seed);
     let mut best: Option<MixtureFit> = None;
-    for trial in 0..cfg.n_trials.max(1) {
+    for trial in 0..cfg.n_trials {
         let mut trial_rng = rng.fork(trial as u64 + 1);
-        let (theta, loss) = de_minimize(w, &emp, cfg, &mut trial_rng);
+        let (theta, loss) = de_minimize(w, &emp, cfg, &mut trial_rng)?;
         let mixture = BetaMixture::from_params(
             w,
             theta[0].exp(),
@@ -288,6 +350,44 @@ mod tests {
         let mut bad = vec![0.5; 200];
         bad[0] = 1.5;
         assert!(fit_mixture(&bad, 0.1, &quick_cfg(1)).is_err());
+    }
+
+    #[test]
+    fn tiny_population_is_a_typed_error_not_a_silent_bump() {
+        // Regression (ISSUE 10 satellite 3): population < 4 used to be
+        // silently rewritten to 8 inside de_minimize — the configured
+        // value was ignored and the loop-hang hazard it papered over
+        // stayed latent. It is now a typed FitConfig rejection.
+        let scores: Vec<f64> = (0..200).map(|i| (i as f64 / 200.0).powi(2)).collect();
+        let cfg = FitConfig { population: 3, ..quick_cfg(1) };
+        let err = cfg.validate().unwrap_err();
+        assert_eq!(err.field, "population");
+        let err = fit_mixture(&scores, 0.1, &cfg).unwrap_err();
+        assert!(err.to_string().contains("population"), "{err}");
+        // The floor itself is exact: 4 is valid.
+        assert!(FitConfig { population: 4, ..quick_cfg(1) }.validate().is_ok());
+        // Other degenerate hyper-parameters are typed too.
+        assert!(FitConfig { n_trials: 0, ..quick_cfg(1) }.validate().is_err());
+        assert!(FitConfig { generations: 0, ..quick_cfg(1) }.validate().is_err());
+        assert!(FitConfig { cr: 1.5, ..quick_cfg(1) }.validate().is_err());
+        assert!(FitConfig { f: 0.0, ..quick_cfg(1) }.validate().is_err());
+        assert!(FitConfig { hist_bins: 1, ..quick_cfg(1) }.validate().is_err());
+    }
+
+    #[test]
+    fn w_domain_matches_beta_mixture_exactly() {
+        // Regression (ISSUE 10 satellite 3): fit_mixture rejected
+        // w = 1.0 ("prior w must be in [0,1)") while
+        // BetaMixture::from_params accepted it — same parameter, two
+        // domains, two messages. Both now share one check.
+        let scores: Vec<f64> = (0..200).map(|i| i as f64 / 200.0).collect();
+        assert!(fit_mixture(&scores, 1.0, &quick_cfg(3)).is_ok(), "w=1.0 is a legal prior");
+        let fit_err = fit_mixture(&scores, 1.5, &quick_cfg(3)).unwrap_err().to_string();
+        let mix_err = BetaMixture::from_params(1.5, 1.0, 1.0, 1.0, 1.0)
+            .unwrap_err()
+            .to_string();
+        assert_eq!(fit_err, mix_err, "the two paths must reject with one message");
+        assert!(fit_mixture(&scores, f64::NAN, &quick_cfg(3)).is_err());
     }
 
     #[test]

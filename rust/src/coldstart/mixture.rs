@@ -20,11 +20,21 @@ pub struct BetaMixture {
 }
 
 impl BetaMixture {
-    pub fn new(w: f64, c0: Beta, c1: Beta) -> Result<Self> {
+    /// The one domain check for the mixture/fraud prior `w`, shared
+    /// verbatim by [`BetaMixture::new`] and `coldstart::fit_mixture`
+    /// so both paths reject exactly the same domain with exactly the
+    /// same message (they used to disagree: the fit path rejected
+    /// `w = 1.0` that the constructor accepted).
+    pub fn validate_weight(w: f64) -> Result<()> {
         ensure!(
             (0.0..=1.0).contains(&w) && w.is_finite(),
             "mixture weight must be in [0,1], got {w}"
         );
+        Ok(())
+    }
+
+    pub fn new(w: f64, c0: Beta, c1: Beta) -> Result<Self> {
+        BetaMixture::validate_weight(w)?;
         Ok(BetaMixture { w, c0, c1 })
     }
 

@@ -6,6 +6,6 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    Condition, Intent, LifecycleConfig, MuseConfig, PredictorConfig, QuantileMode, RoutingConfig,
-    ScoringRule, ServerConfig, ShadowRule,
+    CalibrationStrategy, Condition, Intent, LifecycleConfig, MuseConfig, PredictorConfig,
+    QuantileMode, RoutingConfig, ScoringRule, ServerConfig, ShadowRule,
 };

@@ -212,6 +212,44 @@ impl Default for ServerConfig {
     }
 }
 
+/// Which T^Q re-fitting strategy the lifecycle autopilot uses when a
+/// pair's fit gate (Eq. 5) or drift pipeline asks for a new map
+/// (`lifecycle.calibrationStrategy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CalibrationStrategy {
+    /// The paper's empirical quantile mapping: live sketch quantile
+    /// grid → reference quantile grid (Eq. 4). Exact on the observed
+    /// sample, but tie-heavy adversarial score masses collapse its
+    /// knots and fast attacker drift drags the whole map.
+    #[default]
+    QuantileMap,
+    /// Full-range calibration (arXiv:2607.05481 regime): fit a smooth
+    /// low-dof Beta-mixture to the live distribution and map through
+    /// its analytic quantiles instead of raw empirical knots
+    /// (`transforms::full_range`). Robust to ties and slower to chase
+    /// an attacker's score mass.
+    FullRange,
+}
+
+impl CalibrationStrategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CalibrationStrategy::QuantileMap => "quantileMap",
+            CalibrationStrategy::FullRange => "fullRange",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "quantileMap" => Ok(CalibrationStrategy::QuantileMap),
+            "fullRange" => Ok(CalibrationStrategy::FullRange),
+            other => bail!(
+                "lifecycle.calibrationStrategy must be 'quantileMap' or 'fullRange', got '{other}'"
+            ),
+        }
+    }
+}
+
 /// Lifecycle-autopilot configuration (`lifecycle:` block): the
 /// streaming-sketch feed, drift thresholds, Eq. 5 fit gate and the
 /// shadow→promote control loop (`lifecycle` module). Disabled by
@@ -274,6 +312,21 @@ pub struct LifecycleConfig {
     /// Warm-tier ring capacity (single stripe; rounded up to a power
     /// of two, minimum 64 — `ScoreFeed::new`).
     pub warm_feed_capacity: usize,
+    /// Which T^Q fitting strategy the autopilot installs (initial fit
+    /// and drift re-fit alike).
+    pub calibration_strategy: CalibrationStrategy,
+    /// Cold-start gate: once a fresh pair (no frozen baseline yet) has
+    /// accumulated this many samples — but still fewer than the Eq. 5
+    /// requirement — the controller fits a Beta-mixture prior
+    /// (`coldstart::fit_mixture`, Eqs. 6-8) from those early samples
+    /// and installs it as the tenant's provisional T^Q, so no-history
+    /// tenants stop scoring through the identity map while the gate
+    /// fills. 0 disables cold-start fitting.
+    pub coldstart_min_samples: u64,
+    /// Positive-class prior `w` for the cold-start mixture (paper:
+    /// `w = P(y=1)`; labels aren't available at the feed, so this is
+    /// configured, not estimated).
+    pub coldstart_w: f64,
 }
 
 impl Default for LifecycleConfig {
@@ -301,6 +354,9 @@ impl Default for LifecycleConfig {
             hot_feed_samples: 256,
             cold_after_idle_ticks: 8,
             warm_feed_capacity: 128,
+            calibration_strategy: CalibrationStrategy::QuantileMap,
+            coldstart_min_samples: 0,
+            coldstart_w: 0.02,
         }
     }
 }
@@ -460,6 +516,19 @@ impl MuseConfig {
         ensure!(
             lc.warm_feed_capacity >= 1,
             "lifecycle.warmFeedCapacity must be >= 1"
+        );
+        ensure!(
+            lc.min_drift_samples >= 1,
+            "lifecycle.minDriftSamples must be >= 1 (drift on an empty window is not evaluable)"
+        );
+        ensure!(
+            (0.0..=1.0).contains(&lc.coldstart_w),
+            "lifecycle.coldstartW must be in [0,1] (it is the positive-class prior)"
+        );
+        ensure!(
+            lc.coldstart_min_samples == 0 || lc.coldstart_min_samples >= 100,
+            "lifecycle.coldstartMinSamples must be 0 (disabled) or >= 100 \
+             (coldstart::fit_mixture needs >= 100 scores)"
         );
         ensure!(
             self.server.tenant_shards >= 1 && self.server.tenant_shards <= 4096,
@@ -635,6 +704,15 @@ fn parse_lifecycle(v: &Json) -> Result<LifecycleConfig> {
             .and_then(Json::as_u64)
             .unwrap_or(d.cold_after_idle_ticks as u64) as u32,
         warm_feed_capacity: get_usize("warmFeedCapacity", d.warm_feed_capacity),
+        calibration_strategy: match v.get("calibrationStrategy").and_then(Json::as_str) {
+            Some(s) => CalibrationStrategy::parse(s)?,
+            None => d.calibration_strategy,
+        },
+        coldstart_min_samples: v
+            .get("coldstartMinSamples")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.coldstart_min_samples),
+        coldstart_w: get_f64("coldstartW", d.coldstart_w),
     })
 }
 

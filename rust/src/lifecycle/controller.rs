@@ -44,9 +44,10 @@
 
 use super::drift::DriftDetector;
 use super::sketch::{DrainStats, QuantileSketch, ScoreFeed, SketchSummary};
-use crate::config::{LifecycleConfig, RoutingConfig};
+use crate::config::{CalibrationStrategy, LifecycleConfig, RoutingConfig};
 use crate::coordinator::{ControlPlane, Engine, TenantHandle, TenantInterner};
-use crate::transforms::quantile_fit;
+use crate::transforms::quantile::QuantileMap;
+use crate::transforms::{full_range, quantile_fit, FullRangeConfig};
 use crate::util::slab::HandleSlab;
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -171,6 +172,10 @@ struct PairState {
     /// The pair's data-lake record count captured at eviction; growth
     /// beyond it re-promotes the pair to Warm.
     lake_count_at_cold: usize,
+    /// A provisional cold-start Beta-mixture T^Q is installed for this
+    /// pair (`lifecycle.coldstartMinSamples`); cleared when the first
+    /// real Eq. 5 fit replaces it.
+    coldstart_installed: bool,
 }
 
 impl PairState {
@@ -193,6 +198,7 @@ impl PairState {
             ring: None,
             idle_ticks: 0,
             lake_count_at_cold: 0,
+            coldstart_installed: false,
             state: LifecycleState::Observing,
             fit_acc: QuantileSketch::with_seed(cfg.sketch_k, seed),
             window: QuantileSketch::with_seed(cfg.sketch_k, seed ^ 0xFF),
@@ -229,6 +235,8 @@ pub struct PairStatus {
     pub fit_samples: u64,
     pub window_samples: u64,
     pub baseline_frozen: bool,
+    /// Serving through a provisional cold-start T^Q (no Eq. 5 fit yet).
+    pub coldstart: bool,
     pub shadow: Option<String>,
     pub psi: f64,
     pub ks: f64,
@@ -477,6 +485,20 @@ impl LifecycleHub {
                         engine.counters.inc("lifecycle_feed_repromotions");
                         pair.tier = FeedTier::Warm;
                         pair.idle_ticks = 0;
+                        // A detection window partially filled *before*
+                        // the pair went cold describes the pre-idle
+                        // distribution, and the cold gap's samples were
+                        // never sketched — evaluating drift across that
+                        // splice would compare the frozen baseline
+                        // against a stale composite. Discard it
+                        // un-evaluated (the fit accumulator is kept:
+                        // Eq. 5 counts samples, not windows).
+                        if pair.window.count() > 0 {
+                            engine
+                                .counters
+                                .inc("lifecycle_drift_skipped_thin_window");
+                            pair.window.reset();
+                        }
                     } else {
                         pair.lake_count_at_cold = now;
                     }
@@ -639,6 +661,7 @@ fn pair_status(p: &PairState) -> PairStatus {
         fit_samples: p.fit_acc.count(),
         window_samples: p.window.count(),
         baseline_frozen: p.frozen.is_some(),
+        coldstart: p.coldstart_installed,
         shadow: p.shadow.clone(),
         psi: p.last_psi,
         ks: p.last_ks,
@@ -656,6 +679,36 @@ fn pair_reference(engine: &Engine, predictor: &str) -> crate::transforms::Refere
     match engine.registry.config(predictor) {
         Some(cfg) => Engine::reference(&cfg.reference),
         None => Engine::reference("fraud-default"),
+    }
+}
+
+/// Number of equal-mass grid points handed to the full-range /
+/// cold-start mixture fitter as a pseudo-sample of the live
+/// distribution (`fit_mixture` needs >= 100; more buys moment
+/// accuracy at O(grid) cost).
+const FULL_RANGE_GRID_POINTS: usize = 257;
+
+/// Fit a tenant T^Q from a sketch summary through the configured
+/// calibration strategy — the `lifecycle.calibrationStrategy` seam.
+/// Both arms consume the same summary and reference grid and produce
+/// the same artifact, so every caller (initial fit, post-drift refit)
+/// drives the identical shadow→validate→promote path regardless of
+/// strategy.
+fn fit_strategy(
+    cfg: &LifecycleConfig,
+    summary: &SketchSummary,
+    refq: &[f64],
+) -> Result<QuantileMap> {
+    match cfg.calibration_strategy {
+        CalibrationStrategy::QuantileMap => summary.fit_quantile_map(refq),
+        CalibrationStrategy::FullRange => {
+            let fr = FullRangeConfig {
+                w: cfg.coldstart_w,
+                ..FullRangeConfig::default()
+            };
+            let grid = summary.quantile_grid(FULL_RANGE_GRID_POINTS);
+            full_range::fit_from_grid(&grid, summary.total_weight(), refq, &fr)
+        }
     }
 }
 
@@ -693,8 +746,7 @@ fn advance_pair(
                         let summary = pair.fit_acc.summary();
                         let refq = pair_reference(engine, &pair.predictor)
                             .quantile_grid(engine.quantile_points);
-                        let map = summary
-                            .fit_quantile_map(&refq)
+                        let map = fit_strategy(cfg, &summary, &refq)
                             .context("initial sketch fit")?;
                         engine
                             .predictor(&pair.predictor)?
@@ -702,14 +754,58 @@ fn advance_pair(
                         pair.frozen = Some(summary);
                         pair.fit_acc.reset();
                         pair.window.reset();
+                        pair.coldstart_installed = false;
                         pair.fits += 1;
                         pair.last_error = None;
                         engine.counters.inc("lifecycle_fits");
+                    } else if !pair.coldstart_installed
+                        && cfg.coldstart_min_samples > 0
+                        && pair.fit_acc.count()
+                            >= cfg.coldstart_min_samples.max(engine.quantile_points as u64)
+                    {
+                        // Cold-start prior (Section 2.4, Eqs. 6-8):
+                        // the Eq. 5 gate can take a low-traffic tenant
+                        // a long time to fill, and until now fresh
+                        // tenants scored through the *identity* map —
+                        // raw, uncalibrated scores. Fit the bimodal
+                        // Beta mixture to the early sample and install
+                        // it as a provisional T^Q. No baseline is
+                        // frozen and `fit_acc` keeps accumulating: the
+                        // real fit still happens at the gate and
+                        // replaces this.
+                        let summary = pair.fit_acc.summary();
+                        let refq = pair_reference(engine, &pair.predictor)
+                            .quantile_grid(engine.quantile_points);
+                        let fr = FullRangeConfig {
+                            w: cfg.coldstart_w,
+                            ..FullRangeConfig::default()
+                        };
+                        let grid = summary.quantile_grid(FULL_RANGE_GRID_POINTS);
+                        let map =
+                            full_range::fit_from_grid(&grid, summary.total_weight(), &refq, &fr)
+                                .context("cold-start mixture fit")?;
+                        engine
+                            .predictor(&pair.predictor)?
+                            .install_tenant_quantile(&pair.tenant, map.shared());
+                        pair.coldstart_installed = true;
+                        pair.last_error = None;
+                        engine.counters.inc("lifecycle_coldstart_fits");
                     }
                 }
                 Some(frozen) => {
                     if pair.window.count() >= cfg.min_drift_samples {
                         let report = detector.evaluate(frozen, &pair.window.summary());
+                        if !report.evaluated {
+                            // Either side was too thin to score — an
+                            // explicit non-verdict (satellite-1 fix:
+                            // this used to read as PSI=KS=0, i.e. "no
+                            // drift"). Keep collecting; don't touch
+                            // the last PSI/KS readings.
+                            engine
+                                .counters
+                                .inc("lifecycle_drift_skipped_thin_window");
+                            return Ok(());
+                        }
                         pair.last_psi = report.psi;
                         pair.last_ks = report.ks;
                         pair.window.reset();
@@ -729,8 +825,7 @@ fn advance_pair(
                 let summary = pair.fit_acc.summary();
                 let refq =
                     pair_reference(engine, &pair.predictor).quantile_grid(engine.quantile_points);
-                let map = summary
-                    .fit_quantile_map(&refq)
+                let map = fit_strategy(cfg, &summary, &refq)
                     .context("post-drift sketch refit")?
                     .shared();
                 let mut candidate = engine
@@ -1070,6 +1165,179 @@ lifecycle:
         assert!(hub.feed_for("p", bank1).is_some());
         assert_eq!(engine.counters.get("lifecycle_feed_repromotions"), 1);
         assert_eq!(engine.counters.get("lifecycle_cold_missed_samples"), 3);
+        engine.drain_shadows();
+    }
+
+    /// Scores `n` events whose features (and hence raw scores) are all
+    /// distinct — continuous enough that a quantile fit never trips
+    /// the satellite-2 knot-collapse gate.
+    fn score_spread(engine: &Engine, tenant: &str, n: usize) {
+        let d = engine.predictor("p").unwrap().feature_dim();
+        for i in 0..n {
+            engine
+                .score(&ScoreRequest {
+                    intent: Intent {
+                        tenant: tenant.into(),
+                        ..Intent::default()
+                    },
+                    entity: format!("e{i}"),
+                    features: vec![0.9 * (i as f32 + 0.5) / n as f32; d],
+                })
+                .unwrap();
+        }
+    }
+
+    /// Lax Eq. 5 (`required` = 1) so the initial fit freezes a
+    /// baseline as soon as the sketch can carry a grid; minDrift stays
+    /// high enough that a partial window never evaluates.
+    const SEAM_CFG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "p"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s1]
+  quantile: identity
+lifecycle:
+  enabled: true
+  alertRate: 0.5
+  delta: 1.0
+  z: 0.1
+  minDriftSamples: 64
+  coldAfterIdleTicks: 2
+  warmFeedCapacity: 256
+"#;
+
+    #[test]
+    fn repromoted_pair_discards_stale_window_unevaluated() {
+        // Regression (ISSUE 10 satellite 1): a detection window
+        // partially filled before a pair went Cold used to survive
+        // eviction and repromotion, so the next drift evaluation
+        // compared the frozen baseline against a stale pre-idle
+        // composite spliced with post-gap traffic. The exact sequence:
+        // fit baseline → partial window → idle to Cold → traffic
+        // while cold → repromote. The stale window must be discarded
+        // un-evaluated, and the skip accounted.
+        let (_fix, engine) = sim_engine(SEAM_CFG);
+        let hub = engine.lifecycle.as_ref().unwrap();
+
+        hub.tick(&engine).unwrap(); // discover + wire warm ring
+        score_spread(&engine, "bank1", 150);
+        hub.tick(&engine).unwrap(); // drains 150 >= required -> initial fit
+        let st = &hub.status()[0];
+        assert!(st.baseline_frozen, "initial fit must have frozen: {st:?}");
+        assert_eq!(st.fits, 1);
+
+        // Partial window: below minDriftSamples, so never evaluated.
+        score_spread(&engine, "bank1", 30);
+        hub.tick(&engine).unwrap();
+        assert_eq!(hub.status()[0].window_samples, 30);
+
+        // Idle to Cold (ring drained into the window, then evicted).
+        hub.tick(&engine).unwrap();
+        hub.tick(&engine).unwrap();
+        assert_eq!(hub.tier_counts(), (0, 0, 1));
+        assert_eq!(hub.status()[0].window_samples, 30, "eviction keeps the window");
+
+        // Traffic while cold reaches the lake only; repromotion must
+        // throw the stale window away rather than splice over the gap.
+        score_spread(&engine, "bank1", 5);
+        hub.tick(&engine).unwrap();
+        assert_eq!(hub.tier_counts(), (0, 1, 0));
+        assert_eq!(
+            hub.status()[0].window_samples,
+            0,
+            "stale pre-cold window must not survive repromotion"
+        );
+        assert_eq!(
+            engine.counters.get("lifecycle_drift_skipped_thin_window"),
+            1,
+            "the discarded window must be accounted as a skipped evaluation"
+        );
+        engine.drain_shadows();
+    }
+
+    const COLDSTART_CFG: &str = r#"
+routing:
+  scoringRules:
+  - description: "bank1 dedicated"
+    condition:
+      tenants: ["bank1"]
+    targetPredictorName: "p"
+  - description: "catch-all"
+    condition: {}
+    targetPredictorName: "p"
+predictors:
+- name: p
+  experts: [s1]
+  quantile: identity
+lifecycle:
+  enabled: true
+  alertRate: 0.01
+  coldstartMinSamples: 100
+  coldstartW: 0.02
+  warmFeedCapacity: 256
+"#;
+
+    #[test]
+    fn coldstart_installs_mixture_map_before_eq5_gate() {
+        // Tentpole part 3: a fresh tenant far from the Eq. 5 gate
+        // (a=0.01 needs ~9.5k samples) gets a provisional Beta-mixture
+        // T^Q from its first ~150 samples instead of serving raw
+        // identity scores until the gate fills.
+        let (_fix, engine) = sim_engine(COLDSTART_CFG);
+        let hub = engine.lifecycle.as_ref().unwrap();
+
+        hub.tick(&engine).unwrap();
+        assert!(!engine.predictor("p").unwrap().has_tenant_quantile("bank1"));
+        score_spread(&engine, "bank1", 150);
+        hub.tick(&engine).unwrap();
+
+        let st = &hub.status()[0];
+        assert!(st.coldstart, "cold-start map must be flagged: {st:?}");
+        assert!(!st.baseline_frozen, "cold-start must not freeze a baseline");
+        assert_eq!(st.fits, 0, "cold-start is not an Eq. 5 fit");
+        assert_eq!(st.last_error, None);
+        assert_eq!(engine.counters.get("lifecycle_coldstart_fits"), 1);
+        assert!(
+            engine.predictor("p").unwrap().has_tenant_quantile("bank1"),
+            "the tenant must now score through the mixture T^Q"
+        );
+
+        // More traffic below the gate: the provisional map is fitted
+        // once, not churned every tick.
+        score_spread(&engine, "bank1", 50);
+        hub.tick(&engine).unwrap();
+        assert_eq!(engine.counters.get("lifecycle_coldstart_fits"), 1);
+        engine.drain_shadows();
+    }
+
+    #[test]
+    fn full_range_strategy_drives_the_same_initial_fit_path() {
+        // The calibrationStrategy seam end-to-end: with fullRange
+        // configured, the Eq. 5 initial fit installs a mixture-backed
+        // T^Q through the exact same Observing arm.
+        let yaml = SEAM_CFG.replace("minDriftSamples: 64", "minDriftSamples: 64\n  calibrationStrategy: fullRange");
+        let (_fix, engine) = sim_engine(&yaml);
+        let hub = engine.lifecycle.as_ref().unwrap();
+        assert_eq!(
+            hub.config().calibration_strategy,
+            crate::config::CalibrationStrategy::FullRange
+        );
+        hub.tick(&engine).unwrap();
+        score_spread(&engine, "bank1", 150);
+        hub.tick(&engine).unwrap();
+        let st = &hub.status()[0];
+        assert_eq!(st.fits, 1, "{st:?}");
+        assert!(st.baseline_frozen);
+        assert_eq!(st.last_error, None);
+        assert!(engine.predictor("p").unwrap().has_tenant_quantile("bank1"));
         engine.drain_shadows();
     }
 }

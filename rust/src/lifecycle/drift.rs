@@ -30,10 +30,15 @@ const SHARE_FLOOR: f64 = 1e-4;
 /// ties, where equal-mass edges collapse — score distributions pile
 /// up near 0 in fraud workloads, and identical tie-heavy
 /// distributions must yield PSI ≈ 0, not a false alarm).
-pub fn psi(baseline: &SketchSummary, live: &SketchSummary, bins: usize) -> f64 {
+///
+/// `None` when either sketch is empty: an empty side means the
+/// comparison never happened, which is *not* the same thing as
+/// "no drift" (0.0). Callers deciding whether to alarm must treat
+/// `None` as not-evaluated, never as stability evidence.
+pub fn psi(baseline: &SketchSummary, live: &SketchSummary, bins: usize) -> Option<f64> {
     assert!(bins >= 2);
     if baseline.is_empty() || live.is_empty() {
-        return 0.0;
+        return None;
     }
     let mut total = 0.0;
     let mut prev_edge = f64::NEG_INFINITY;
@@ -57,15 +62,18 @@ pub fn psi(baseline: &SketchSummary, live: &SketchSummary, bins: usize) -> f64 {
         prev_base_cdf = base_cdf;
         prev_live_cdf = live_cdf;
     }
-    total
+    Some(total)
 }
 
 /// Two-sample Kolmogorov–Smirnov statistic between two sketches:
 /// max CDF gap evaluated over both sketches' quantile grids.
-pub fn ks(a: &SketchSummary, b: &SketchSummary, grid_points: usize) -> f64 {
+///
+/// `None` when either sketch is empty — same contract as [`psi`]:
+/// not-evaluated is a distinct outcome from "no drift".
+pub fn ks(a: &SketchSummary, b: &SketchSummary, grid_points: usize) -> Option<f64> {
     assert!(grid_points >= 2);
     if a.is_empty() || b.is_empty() {
-        return 0.0;
+        return None;
     }
     let mut d: f64 = 0.0;
     for src in [a, b] {
@@ -74,7 +82,7 @@ pub fn ks(a: &SketchSummary, b: &SketchSummary, grid_points: usize) -> f64 {
             d = d.max((a.cdf(x) - b.cdf(x)).abs());
         }
     }
-    d
+    Some(d)
 }
 
 /// Detector thresholds (from `lifecycle` config).
@@ -85,22 +93,45 @@ pub struct DriftDetector {
     pub bins: usize,
 }
 
-/// One drift evaluation.
+/// One drift evaluation. `evaluated: false` means at least one side
+/// of the comparison was empty, so `psi`/`ks` carry no information
+/// (they are reported as 0.0 but MUST NOT be read as "no drift") and
+/// `drifted` is `false` because nothing was established either way.
+/// The controller counts such outcomes in
+/// `lifecycle_drift_skipped_thin_window` instead of rotating state.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DriftReport {
     pub psi: f64,
     pub ks: f64,
     pub drifted: bool,
+    pub evaluated: bool,
+}
+
+impl DriftReport {
+    /// The not-evaluated outcome (empty baseline or live window).
+    pub fn skipped() -> DriftReport {
+        DriftReport {
+            psi: 0.0,
+            ks: 0.0,
+            drifted: false,
+            evaluated: false,
+        }
+    }
 }
 
 impl DriftDetector {
     pub fn evaluate(&self, baseline: &SketchSummary, live: &SketchSummary) -> DriftReport {
-        let psi_v = psi(baseline, live, self.bins);
-        let ks_v = ks(baseline, live, 4 * self.bins + 1);
+        let (Some(psi_v), Some(ks_v)) = (
+            psi(baseline, live, self.bins),
+            ks(baseline, live, 4 * self.bins + 1),
+        ) else {
+            return DriftReport::skipped();
+        };
         DriftReport {
             psi: psi_v,
             ks: ks_v,
             drifted: psi_v > self.psi_threshold || ks_v > self.ks_threshold,
+            evaluated: true,
         }
     }
 }
@@ -196,9 +227,10 @@ mod tests {
     fn psi_is_near_zero_for_small_noise_and_large_for_disjoint() {
         let a = sketch_of(|r| r.f64(), 10_000, 9).summary();
         let b = sketch_of(|r| r.f64(), 10_000, 10).summary();
-        assert!(psi(&a, &b, 10) < 0.05);
+        assert!(psi(&a, &b, 10).unwrap() < 0.05);
         let c = sketch_of(|r| 2.0 + r.f64(), 10_000, 11).summary();
-        assert!(psi(&a, &c, 10) > 2.0, "disjoint psi {}", psi(&a, &c, 10));
+        let v = psi(&a, &c, 10).unwrap();
+        assert!(v > 2.0, "disjoint psi {v}");
     }
 
     #[test]
@@ -206,7 +238,7 @@ mod tests {
         // U(0,1) vs U(0.25, 1.25): analytic KS = 0.25.
         let a = sketch_of(|r| r.f64(), 40_000, 12).summary();
         let b = sketch_of(|r| 0.25 + r.f64(), 40_000, 13).summary();
-        let d = ks(&a, &b, 101);
+        let d = ks(&a, &b, 101).unwrap();
         assert!((d - 0.25).abs() < 0.03, "ks {d} vs analytic 0.25");
     }
 
@@ -215,14 +247,32 @@ mod tests {
         // All-ties baseline collapses every equal-mass bin edge.
         let a = sketch_of(|_| 0.5, 5_000, 14).summary();
         let b = sketch_of(|r| r.f64(), 5_000, 15).summary();
-        let v = psi(&a, &b, 10);
+        let v = psi(&a, &b, 10).unwrap();
         assert!(v.is_finite() && v > 0.25, "point mass vs uniform: psi {v}");
         // Identical tie-heavy distributions must NOT false-alarm.
         let c = sketch_of(|_| 0.5, 5_000, 16).summary();
-        assert!(psi(&a, &c, 10) < 0.05, "identical point masses drifted");
+        assert!(psi(&a, &c, 10).unwrap() < 0.05, "identical point masses drifted");
+    }
+
+    #[test]
+    fn empty_sketches_are_not_evaluated_not_no_drift() {
+        // Regression (ISSUE 10 satellite 1): psi()/ks() used to return
+        // 0.0 — "no drift" — when either sketch was empty. A caller
+        // comparing a repromoted pair's empty window against its
+        // baseline would read perfect stability out of zero data.
+        let b = sketch_of(|r| r.f64(), 5_000, 15).summary();
         let empty = QuantileSketch::new(64).summary();
-        assert_eq!(psi(&empty, &b, 10), 0.0);
-        assert_eq!(ks(&empty, &b, 11), 0.0);
+        assert_eq!(psi(&empty, &b, 10), None);
+        assert_eq!(ks(&empty, &b, 11), None);
+        assert_eq!(psi(&b, &empty, 10), None);
+        assert_eq!(ks(&b, &empty, 11), None);
+        assert_eq!(psi(&empty, &empty, 10), None);
+        // The detector surfaces the same outcome as a typed report.
+        let rep = detector().evaluate(&empty, &b);
+        assert!(!rep.evaluated && !rep.drifted, "{rep:?}");
+        assert_eq!(rep, DriftReport::skipped());
+        let rep = detector().evaluate(&b, &b);
+        assert!(rep.evaluated, "{rep:?}");
     }
 
     #[test]

@@ -263,6 +263,7 @@ fn lifecycle_status_json(engine: &Engine, ticked: bool) -> String {
                 ("fitSamples", Json::Num(p.fit_samples as f64)),
                 ("windowSamples", Json::Num(p.window_samples as f64)),
                 ("baselineFrozen", Json::Bool(p.baseline_frozen)),
+                ("coldstart", Json::Bool(p.coldstart)),
                 ("fits", Json::Num(p.fits as f64)),
                 ("promotions", Json::Num(p.promotions as f64)),
                 ("validationFailures", Json::Num(p.validation_failures as f64)),

@@ -18,11 +18,16 @@
 //! 100k-tenant scale-out proof: an onboarding storm plus Zipf
 //! steady-state with a drifting head tenant, asserting bounded
 //! registry/feed RSS, zero lost appends and exact per-tenant
-//! accounting.
+//! accounting. `drift_matrix` is the adversarial-drift scenario
+//! matrix: seeded cells (coordinated fraud waves, exact-tie fast
+//! attacks, onboarding storms, label delay, class imbalance) A/B'ing
+//! the empirical quantile-map T^Q against full-range calibration
+//! through the same shadow→validate→promote path.
 
 pub mod cluster;
 pub mod cluster_storm;
 pub mod connection_storm;
+pub mod drift_matrix;
 pub mod drift_storm;
 pub mod multitenant;
 pub mod saturation;
@@ -36,6 +41,10 @@ pub use cluster::{
 pub use cluster_storm::{run_cluster_storm, ClusterStormConfig, ClusterStormReport};
 pub use connection_storm::{
     run_connection_storm, ConnectionStormConfig, ConnectionStormReport,
+};
+pub use drift_matrix::{
+    matrix_seed, run_drift_matrix, CellOutcome, DriftCell, DriftMatrixConfig, MatrixReport,
+    PhaseMetrics,
 };
 pub use drift_storm::{run_drift_storm, DriftStormConfig, DriftStormReport};
 pub use multitenant::{run_batch_mix, BatchMixConfig, BatchMixReport};

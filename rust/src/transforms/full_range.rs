@@ -1,0 +1,253 @@
+//! Full-range calibration: a second T^Q strategy (the
+//! `lifecycle.calibrationStrategy: fullRange` seam).
+//!
+//! "Full-range Binary Classifier Calibration for Stable Model Updates
+//! in Production" (arXiv:2607.05481) studies the regime where the
+//! malicious score mass drifts fast while benign traffic stays
+//! stable. A raw empirical quantile map (Eq. 4) re-fitted from live
+//! traffic *chases the attacker*: the adversarial mass moves the
+//! upper knots every refit, and tie-heavy attack templates collapse
+//! knots outright (see `quantile_fit::FitError`). Full-range
+//! calibration instead fits a *smooth, low-degree-of-freedom*
+//! parametric model — here the repo's Beta mixture (Eq. 6), searched
+//! with the same DE moment-matcher the cold-start module already
+//! implements — to the live distribution, and maps through its
+//! analytic quantiles. The map stays defined over the whole score
+//! range (hence "full-range"), is immune to knot collapse under ties,
+//! and moves only as fast as four moments can move.
+//!
+//! Both strategies consume the same inputs (a raw score sample or a
+//! `SketchSummary` quantile grid plus a reference grid) and produce
+//! the same artifact (a monotone [`QuantileMap`]), so the lifecycle
+//! controller drives either through the identical
+//! shadow→validate→promote path.
+
+use super::quantile::QuantileMap;
+use crate::coldstart::{fit_mixture, FitConfig, MixtureFit};
+use anyhow::{ensure, Context, Result};
+
+/// Knobs for the full-range fit. Deliberately cheaper than the
+/// offline cold-start defaults: this runs inside the lifecycle tick.
+#[derive(Debug, Clone, Copy)]
+pub struct FullRangeConfig {
+    /// Positive-class prior `w` of the mixture (configured, not
+    /// estimated — the feed is unlabeled).
+    pub w: f64,
+    /// DE search hyper-parameters (validated by `FitConfig::validate`
+    /// inside `fit_mixture`).
+    pub fit: FitConfig,
+}
+
+impl Default for FullRangeConfig {
+    fn default() -> Self {
+        FullRangeConfig {
+            w: 0.02,
+            fit: FitConfig {
+                n_trials: 3,
+                population: 24,
+                generations: 80,
+                hist_bins: 40,
+                seed: 0x4652_4E47, // "FRNG"; refits stay deterministic
+                ..FitConfig::default()
+            },
+        }
+    }
+}
+
+/// Fit the smooth source model from raw scores and pair its analytic
+/// quantiles with the reference grid.
+pub fn fit_from_scores(
+    scores: &[f64],
+    ref_quantiles: &[f64],
+    cfg: &FullRangeConfig,
+) -> Result<QuantileMap> {
+    ensure!(ref_quantiles.len() >= 2, "reference grid needs >= 2 points");
+    let fit = fit_mixture(scores, cfg.w, &cfg.fit)
+        .context("full-range calibration: mixture fit failed")?;
+    map_from_fit(&fit, ref_quantiles)
+}
+
+/// Fit from a **pre-estimated equal-mass quantile grid** (the
+/// `SketchSummary::quantile_grid` output) — the autopilot's streaming
+/// path. The grid's points are treated as an equal-mass pseudo-sample
+/// of the live distribution: by construction the i-th point is the
+/// i/(n-1) quantile, so the set carries the same first-four-moments
+/// information the DE matcher needs, at O(grid) cost independent of
+/// how many events produced the estimate. `n_samples` is the Eq. 5
+/// currency behind the grid, gated exactly like
+/// `quantile_fit::fit_from_grid`.
+pub fn fit_from_grid(
+    src_grid: &[f64],
+    n_samples: u64,
+    ref_quantiles: &[f64],
+    cfg: &FullRangeConfig,
+) -> Result<QuantileMap> {
+    ensure!(ref_quantiles.len() >= 2, "reference grid needs >= 2 points");
+    ensure!(
+        src_grid.len() >= 100,
+        "full-range fit needs a grid of >= 100 points, got {}",
+        src_grid.len()
+    );
+    ensure!(
+        n_samples >= ref_quantiles.len() as u64,
+        "grid estimated from {n_samples} samples for {} quantile points",
+        ref_quantiles.len()
+    );
+    // Scores live on [0,1]; sketch endpoints can sit exactly on the
+    // boundary, and f32→f64 round-trips can graze it. Clamp rather
+    // than reject — the mixture support is exactly [0,1].
+    let pseudo: Vec<f64> = src_grid.iter().map(|&x| x.clamp(0.0, 1.0)).collect();
+    let fit = fit_mixture(&pseudo, cfg.w, &cfg.fit)
+        .context("full-range calibration: mixture fit from sketch grid failed")?;
+    map_from_fit(&fit, ref_quantiles)
+}
+
+/// Pair the fitted mixture's analytic quantile grid with the
+/// reference grid. The mixture grid is strictly increasing wherever
+/// the pdf is positive (and `quantile_grid` ULP-dedups pathological
+/// flats), so this cannot hit the empirical path's knot-collapse
+/// refusal.
+fn map_from_fit(fit: &MixtureFit, ref_quantiles: &[f64]) -> Result<QuantileMap> {
+    let src = fit.mixture.quantile_grid(ref_quantiles.len());
+    QuantileMap::new(src, ref_quantiles.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::transforms::quantile_fit;
+    use crate::util::{prop, rng::Rng, stats};
+
+    fn beta_sample(alpha: f64, beta: f64, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.beta(alpha, beta)).collect()
+    }
+
+    #[test]
+    fn full_range_aligns_distribution() {
+        // Map Beta(2,8) samples to a uniform reference through the
+        // full-range map: mapped fresh samples must be ~U(0,1).
+        let sample = beta_sample(2.0, 8.0, 40_000, 11);
+        let refq = stats::prob_grid(257);
+        let m = fit_from_scores(&sample, &refq, &FullRangeConfig::default()).unwrap();
+        let fresh = beta_sample(2.0, 8.0, 20_000, 12);
+        let mapped: Vec<f64> = fresh.iter().map(|&s| m.apply(s)).collect();
+        let ks = stats::ks_distance(&mapped, |x| x.clamp(0.0, 1.0));
+        assert!(ks < 0.05, "KS = {ks}");
+    }
+
+    #[test]
+    fn survives_tie_heavy_grids_that_break_the_empirical_fit() {
+        // The fast-attack regime: 80% of traffic is one replayed
+        // template event with a single score. The empirical quantile
+        // fit refuses (knot collapse, satellite-2 gate); the smooth
+        // full-range fit still produces a usable monotone map.
+        let mut scores = vec![0.31; 8000];
+        scores.extend(beta_sample(2.0, 8.0, 2000, 13));
+        let refq = stats::prob_grid(129);
+        let emp = quantile_fit::fit_from_scores(&scores, &refq);
+        assert!(
+            emp.unwrap_err().to_string().contains("degenerate quantile grid"),
+            "empirical fit should refuse the tied mass"
+        );
+        let m = fit_from_scores(&scores, &refq, &FullRangeConfig::default()).unwrap();
+        for w in [0.0, 0.2, 0.31, 0.5, 0.9, 1.0].windows(2) {
+            assert!(m.apply(w[1]) >= m.apply(w[0]), "map must stay monotone");
+        }
+    }
+
+    #[test]
+    fn grid_path_matches_score_path() {
+        // Fitting from the equal-mass quantile grid of a sample must
+        // land close to fitting from the sample itself.
+        let sample = beta_sample(1.5, 12.0, 50_000, 17);
+        let refq = stats::prob_grid(129);
+        let from_scores = fit_from_scores(&sample, &refq, &FullRangeConfig::default()).unwrap();
+        let probs = stats::prob_grid(257);
+        let grid = stats::quantiles(&sample, &probs);
+        let from_grid =
+            fit_from_grid(&grid, sample.len() as u64, &refq, &FullRangeConfig::default()).unwrap();
+        for i in 0..=20 {
+            let x = i as f64 / 20.0;
+            let d = (from_scores.apply(x) - from_grid.apply(x)).abs();
+            assert!(d < 0.05, "x={x}: score-path {} vs grid-path {}", from_scores.apply(x), from_grid.apply(x));
+        }
+    }
+
+    #[test]
+    fn grid_path_enforces_arity_and_sample_gates() {
+        let refq = stats::prob_grid(129);
+        let cfg = FullRangeConfig::default();
+        // Too few grid points for a mixture fit.
+        let short: Vec<f64> = (0..50).map(|i| i as f64 / 50.0).collect();
+        assert!(fit_from_grid(&short, 10_000, &refq, &cfg).is_err());
+        // A grid "estimated" from fewer samples than reference points.
+        let grid: Vec<f64> = (0..257).map(|i| i as f64 / 256.0).collect();
+        assert!(fit_from_grid(&grid, 5, &refq, &cfg).is_err());
+        assert!(fit_from_grid(&grid, 10_000, &refq, &cfg).is_ok());
+        // Invalid DE config propagates as the satellite-3 typed error.
+        let bad = FullRangeConfig {
+            fit: FitConfig { population: 3, ..cfg.fit },
+            ..cfg
+        };
+        let err = fit_from_grid(&grid, 10_000, &refq, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("population"), "{err:#}");
+    }
+
+    #[test]
+    fn prop_strategies_agree_on_stable_distributions() {
+        // Strategy-equivalence (ISSUE 10 satellite 4): on a stable,
+        // continuous (non-drifting, non-adversarial) distribution the
+        // two calibration strategies must produce alert rates within
+        // the Eq. 5 delta band of each other — otherwise A/B'ing them
+        // through the same promote path would itself look like drift.
+        let a = 0.1; // target alert rate
+        let delta = 0.3; // Eq. 5 relative-error band
+        prop::check(6, |g| {
+            let alpha = g.f64(1.5..3.0);
+            let beta = g.f64(5.0..12.0);
+            let seed = g.usize(1..1_000_000) as u64;
+            let sample = beta_sample(alpha, beta, 20_000, seed);
+            let refq = stats::prob_grid(129); // uniform reference
+            let emp = quantile_fit::fit_from_scores(&sample, &refq)
+                .map_err(|e| e.to_string())?;
+            let full = fit_from_scores(&sample, &refq, &FullRangeConfig::default())
+                .map_err(|e| e.to_string())?;
+            // Uniform reference: the (1-a) quantile is 1-a.
+            let tau = 1.0 - a;
+            let fresh = beta_sample(alpha, beta, 20_000, seed + 1);
+            let rate = |m: &QuantileMap| {
+                fresh.iter().filter(|&&s| m.apply(s) >= tau).count() as f64
+                    / fresh.len() as f64
+            };
+            let (ra, rb) = (rate(&emp), rate(&full));
+            prop_assert!(
+                (ra - a).abs() <= delta * a,
+                "quantile-map alert rate {ra:.4} outside Eq.5 band of {a}"
+            );
+            prop_assert!(
+                (rb - a).abs() <= delta * a,
+                "full-range alert rate {rb:.4} outside Eq.5 band of {a}"
+            );
+            prop_assert!(
+                (ra - rb).abs() <= 2.0 * delta * a,
+                "strategies disagree: {ra:.4} vs {rb:.4}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_config() {
+        let sample = beta_sample(2.0, 9.0, 5_000, 23);
+        let refq = stats::prob_grid(65);
+        let cfg = FullRangeConfig::default();
+        let m1 = fit_from_scores(&sample, &refq, &cfg).unwrap();
+        let m2 = fit_from_scores(&sample, &refq, &cfg).unwrap();
+        for i in 0..=50 {
+            let x = i as f64 / 50.0;
+            assert_eq!(m1.apply(x), m2.apply(x));
+        }
+    }
+}

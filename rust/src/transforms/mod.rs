@@ -6,6 +6,7 @@
 //! `T^Q ∘ A ∘ T^C` chain into a branch-free kernel for the data plane.
 
 pub mod aggregation;
+pub mod full_range;
 pub mod pipeline;
 pub mod posterior;
 pub mod quantile;
@@ -13,6 +14,7 @@ pub mod quantile_fit;
 pub mod reference;
 
 pub use aggregation::Aggregation;
+pub use full_range::FullRangeConfig;
 pub use pipeline::{CompiledPipeline, CompiledStages, PipelineScratch, PipelineSpec};
 pub use posterior::PosteriorCorrection;
 pub use quantile::{QuantileError, QuantileMap};

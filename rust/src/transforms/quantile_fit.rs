@@ -15,6 +15,50 @@ use super::quantile::QuantileMap;
 use crate::util::stats;
 use anyhow::{ensure, Result};
 
+/// Default ceiling on the fraction of source-grid knots that may be
+/// ULP-collapsed ties before a fit is refused (see [`FitError`]).
+/// Sketch-derived grids of continuous score distributions sit far
+/// below this (KLL item weights stay under the grid spacing whenever
+/// `grid points <= sketch k`); crossing it means the live
+/// distribution is genuinely tie-dominated and an empirical quantile
+/// map would be mostly degenerate.
+pub const DEFAULT_MAX_COLLAPSED_FRACTION: f64 = 0.5;
+
+/// Typed fit failure: too many source knots collapsed onto ties.
+///
+/// `dedup_monotone` makes a tied grid strictly increasing by nudging
+/// each tied knot one ULP above its neighbor — numerically sound for
+/// the occasional tie, but under an adversarially tie-heavy live
+/// distribution (a fast-attack wave replaying one template event, a
+/// saturated model pinning scores) most of the grid becomes ULP-wide
+/// steps: the fitted `T^Q` then maps a *wide* raw-score interval onto
+/// a single reference point and the tenant's alert rate is whatever
+/// that one point decides. Refusing the fit (and keeping the previous
+/// `T^Q`) is strictly safer, so `fit_from_scores` / `fit_from_grid`
+/// return this error when more than `max_fraction` of the knots had
+/// to be nudged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitError {
+    pub collapsed: usize,
+    pub total: usize,
+    pub max_fraction: f64,
+}
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "degenerate quantile grid: {} of {} knots collapsed onto ties \
+             (> {:.0}% allowed) — refusing a mostly-degenerate T^Q fit",
+            self.collapsed,
+            self.total,
+            100.0 * self.max_fraction
+        )
+    }
+}
+
+impl std::error::Error for FitError {}
+
 /// Eq. 5: minimum number of samples to fit the quantile transformation
 /// such that the observed alert rate at target rate `a` stays within
 /// relative error `delta` with confidence `z`.
@@ -35,6 +79,18 @@ pub fn required_samples(alert_rate: f64, delta: f64, z: f64) -> Result<u64> {
 /// uniform probability grid; `scores` are the (unlabeled!) aggregated
 /// predictor outputs observed for this tenant.
 pub fn fit_from_scores(scores: &[f64], ref_quantiles: &[f64]) -> Result<QuantileMap> {
+    fit_from_scores_tol(scores, ref_quantiles, DEFAULT_MAX_COLLAPSED_FRACTION)
+}
+
+/// [`fit_from_scores`] with an explicit collapsed-knot tolerance
+/// (`max_collapsed_fraction` in [0, 1]; 1.0 restores the old
+/// always-fit behavior for callers that knowingly handle degenerate
+/// grids).
+pub fn fit_from_scores_tol(
+    scores: &[f64],
+    ref_quantiles: &[f64],
+    max_collapsed_fraction: f64,
+) -> Result<QuantileMap> {
     ensure!(
         scores.len() >= ref_quantiles.len(),
         "need at least one sample per quantile point ({} < {})",
@@ -54,8 +110,22 @@ pub fn fit_from_scores(scores: &[f64], ref_quantiles: &[f64]) -> Result<Quantile
     );
     let probs = stats::prob_grid(ref_quantiles.len());
     let mut src = stats::quantiles(scores, &probs);
-    dedup_monotone(&mut src);
+    let collapsed = dedup_monotone(&mut src);
+    check_collapsed(collapsed, src.len(), max_collapsed_fraction)?;
     QuantileMap::new(src, ref_quantiles.to_vec())
+}
+
+/// The degeneracy gate shared by the score and grid fit paths.
+fn check_collapsed(collapsed: usize, total: usize, max_fraction: f64) -> Result<()> {
+    if collapsed as f64 > max_fraction * total as f64 {
+        return Err(FitError {
+            collapsed,
+            total,
+            max_fraction,
+        }
+        .into());
+    }
+    Ok(())
 }
 
 /// Gate + fit: checks the Eq. 5 bound before fitting, returning the
@@ -90,9 +160,20 @@ pub fn fit_gated(
 /// data lake. [`fit_from_scores`] remains for offline fits over
 /// explicit sample vectors.
 pub fn fit_from_grid(
+    src_grid: Vec<f64>,
+    n_samples: u64,
+    ref_quantiles: &[f64],
+) -> Result<QuantileMap> {
+    fit_from_grid_tol(src_grid, n_samples, ref_quantiles, DEFAULT_MAX_COLLAPSED_FRACTION)
+}
+
+/// [`fit_from_grid`] with an explicit collapsed-knot tolerance (see
+/// [`fit_from_scores_tol`]).
+pub fn fit_from_grid_tol(
     mut src_grid: Vec<f64>,
     n_samples: u64,
     ref_quantiles: &[f64],
+    max_collapsed_fraction: f64,
 ) -> Result<QuantileMap> {
     ensure!(
         src_grid.len() == ref_quantiles.len(),
@@ -105,7 +186,8 @@ pub fn fit_from_grid(
         "grid estimated from {n_samples} samples for {} quantile points",
         ref_quantiles.len()
     );
-    dedup_monotone(&mut src_grid);
+    let collapsed = dedup_monotone(&mut src_grid);
+    check_collapsed(collapsed, src_grid.len(), max_collapsed_fraction)?;
     QuantileMap::new(src_grid, ref_quantiles.to_vec())
 }
 
@@ -132,12 +214,19 @@ pub fn fit_grid_gated(
 /// by one ULP. Empirical quantiles of heavily-concentrated score
 /// distributions (most fraud scores pile near 0) produce ties which
 /// the `QuantileMap` constructor rejects.
-pub fn dedup_monotone(grid: &mut [f64]) {
+///
+/// Returns the number of knots that had to be nudged — the fit paths
+/// turn an excessive count into a typed [`FitError`] instead of
+/// silently producing a mostly-degenerate map.
+pub fn dedup_monotone(grid: &mut [f64]) -> usize {
+    let mut collapsed = 0;
     for i in 1..grid.len() {
         if grid[i] <= grid[i - 1] {
             grid[i] = next_up(grid[i - 1]);
+            collapsed += 1;
         }
     }
+    collapsed
 }
 
 #[inline]
@@ -201,13 +290,79 @@ mod tests {
     }
 
     #[test]
-    fn fit_handles_concentrated_scores() {
-        // 99% of scores identical near zero: ties must be deduped.
+    fn fit_refuses_degenerate_tie_heavy_grids() {
+        // Regression (ISSUE 10 satellite 2): 99% of scores identical
+        // means ~99% of the knots are ULP-collapsed ties — pre-PR the
+        // fit silently succeeded and mapped the entire tied mass's
+        // score interval onto one reference point. Now it is a typed
+        // refusal at the default tolerance.
         let mut scores = vec![1e-6; 5000];
         scores.extend((0..50).map(|i| 0.1 + i as f64 / 100.0));
         let refq = stats::prob_grid(101);
-        let m = fit_from_scores(&scores, &refq).unwrap();
+        let err = fit_from_scores(&scores, &refq).unwrap_err();
+        assert!(
+            err.to_string().contains("degenerate quantile grid"),
+            "wrong error: {err}"
+        );
+        // A caller that knowingly tolerates degeneracy can opt out —
+        // and still gets a monotone (ULP-stepped) map.
+        let m = fit_from_scores_tol(&scores, &refq, 1.0).unwrap();
         assert!(m.apply(1e-6) <= m.apply(0.5));
+        // The grid path enforces the same gate.
+        let mut grid = vec![0.25; 101];
+        grid[100] = 0.9;
+        assert!(
+            fit_from_grid(grid.clone(), 5000, &refq)
+                .unwrap_err()
+                .to_string()
+                .contains("degenerate quantile grid")
+        );
+        assert!(fit_from_grid_tol(grid, 5000, &refq, 1.0).is_ok());
+    }
+
+    #[test]
+    fn prop_tie_fraction_decides_fit_refusal() {
+        // Quantifies the degeneracy: with tie mass `t` of the sample
+        // pinned to one value, ~t of the quantile knots collapse. Well
+        // above the default tolerance the fit must refuse; with no
+        // ties it must succeed; and the opt-out map concentrates the
+        // whole tied interval onto (numerically) one reference point —
+        // the failure mode the refusal exists to stop.
+        prop::check(40, |g| {
+            let t = g.f64(0.70..0.95);
+            let tie_at = g.f64(0.2..0.8);
+            let n = g.usize(1000..4000);
+            let n_tied = (t * n as f64) as usize;
+            let mut scores = vec![tie_at; n_tied];
+            for _ in 0..(n - n_tied) {
+                scores.push(g.f64(0.0..1.0));
+            }
+            let refq = stats::prob_grid(101);
+            let err = fit_from_scores(&scores, &refq)
+                .err()
+                .ok_or_else(|| format!("tie fraction {t:.2} fitted without refusal"))?;
+            prop_assert!(
+                err.to_string().contains("degenerate quantile grid"),
+                "wrong error: {err}"
+            );
+            // Opt-out: the degenerate map drops the entire tied mass
+            // (~t of all traffic) onto ONE reference value, with an
+            // ULP-wide cliff spanning ~t of the reference range just
+            // above it — the failure mode the refusal exists to stop.
+            let m = fit_from_scores_tol(&scores, &refq, 1.0).map_err(|e| e.to_string())?;
+            let cliff = m.apply(tie_at + 1e-9) - m.apply(tie_at);
+            prop_assert!(
+                cliff > 0.4 * t,
+                "expected an ULP cliff spanning ~{t:.2} of the reference, got {cliff:.3}"
+            );
+            // Continuous samples stay fittable at the default gate.
+            let clean: Vec<f64> = (0..n).map(|_| g.f64(0.0..1.0).powi(2)).collect();
+            prop_assert!(
+                fit_from_scores(&clean, &refq).is_ok(),
+                "continuous sample refused"
+            );
+            Ok(())
+        });
     }
 
     #[test]
